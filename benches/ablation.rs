@@ -1,0 +1,90 @@
+//! Ablations backing the paper's "Does AMG help?" discussion and the
+//! design choices DESIGN.md calls out:
+//!
+//! * A1 — AMG fractional aggregation (caliber ≥ 2) vs strict aggregation
+//!   (caliber 1, hard clustering — the [26]-style scheme the paper argues
+//!   against);
+//! * A2 — parameter inheritance ON (UD re-centered on the coarse winner)
+//!   vs OFF (full-box UD at every level) vs NONE (inherit blindly, never
+//!   re-tune);
+//! * A3 — AMG volumes as instance weights ON/OFF;
+//! * A4 — SV-neighborhood growth hops 0/1/2 (Algorithm-3 training-set
+//!   construction).
+//!
+//! ```bash
+//! cargo bench --bench ablation -- [--sets ring,hypo] [--seed 1]
+//! ```
+
+mod common;
+
+use common::{run_mlwsvm, split_and_scale, HarnessOpts};
+use mlsvm::coordinator::report::{fmt_secs, Table};
+use mlsvm::data::synth::uci::spec_by_name;
+use mlsvm::mlsvm::MlsvmParams;
+use mlsvm::util::rng::Pcg64;
+
+fn variants() -> Vec<(&'static str, MlsvmParams)> {
+    let base = MlsvmParams::default();
+    let mut v = Vec::new();
+    v.push(("AMG caliber=2 (default)", base.clone()));
+    v.push(("A1 strict aggregation (R=1)", base.clone().with_caliber(1)));
+    {
+        let mut p = base.clone();
+        p.ud.inherit_shrink = 1.0; // full box every level = no inheritance
+        v.push(("A2 no param inheritance", p));
+    }
+    {
+        let mut p = base.clone();
+        p.qdt = 0; // UD never re-runs after the coarsest level
+        v.push(("A2 inherit only (no re-tuning)", p));
+    }
+    {
+        let mut p = base.clone();
+        p.use_volumes = false;
+        v.push(("A3 no volume weights", p));
+    }
+    {
+        let mut p = base.clone();
+        p.grow_hops = 0;
+        v.push(("A4 no neighborhood growth", p));
+    }
+    {
+        let mut p = base.clone();
+        p.grow_hops = 2;
+        v.push(("A4 growth hops=2", p));
+    }
+    v
+}
+
+fn main() {
+    let opts = HarnessOpts::parse();
+    let set_names = opts
+        .only
+        .clone()
+        .unwrap_or_else(|| vec!["Hypothyroid".into(), "Ringnorm".into()]);
+    for name in set_names {
+        let Some(spec) = spec_by_name(&name) else {
+            eprintln!("unknown set '{name}'");
+            continue;
+        };
+        let scale = if opts.full { 1.0 } else { spec.default_scale };
+        println!("\n== Ablations on {} (scale {scale}) ==", spec.name);
+        let mut table = Table::new(&["Variant", "κ", "ACC", "SN", "SP", "Time"]);
+        for (label, params) in variants() {
+            let mut rng = Pcg64::seed_from(opts.seed);
+            let ds = spec.generate(scale, &mut rng);
+            let (train, test) = split_and_scale(&ds, &mut rng);
+            let res = run_mlwsvm(&train, &test, params.with_seed(opts.seed ^ 3), &mut rng);
+            table.row(vec![
+                label.to_string(),
+                format!("{:.3}", res.metrics.gmean()),
+                format!("{:.3}", res.metrics.accuracy()),
+                format!("{:.3}", res.metrics.sensitivity()),
+                format!("{:.3}", res.metrics.specificity()),
+                fmt_secs(res.seconds),
+            ]);
+            println!("{}", table.render().lines().last().unwrap());
+        }
+        println!("\n{}", table.render());
+    }
+}

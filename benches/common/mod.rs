@@ -1,0 +1,129 @@
+//! Shared harness code for the table regenerators.
+//!
+//! Baseline protocol (documented in DESIGN.md §4 and EXPERIMENTS.md): the
+//! full-WSVM baseline runs UD model selection on a subsample of at most
+//! `BASELINE_UD_CAP` training points (UD on the full set is O(evals·n²⁻³)
+//! and reaches days at paper sizes — the paper itself reports 353,210 s
+//! for Forest), then trains the final model on ALL training points with
+//! the winning parameters. This makes the baseline *faster* than the
+//! paper's true protocol, so reported MLWSVM speedups are conservative.
+
+use mlsvm::data::dataset::Dataset;
+use mlsvm::metrics::Metrics;
+use mlsvm::mlsvm::{MlsvmParams, MlsvmTrainer};
+use mlsvm::modelsel::search::{ud_search, UdSearchConfig};
+use mlsvm::svm::smo::train_weighted;
+use mlsvm::util::rng::{Pcg64, Rng};
+use mlsvm::util::timer::Timer;
+
+/// UD subsample cap for the full-WSVM baseline.
+pub const BASELINE_UD_CAP: usize = 3_000;
+
+/// Result of one method run.
+pub struct RunResult {
+    /// Held-out metrics.
+    pub metrics: Metrics,
+    /// Training wall-clock (including model selection).
+    pub seconds: f64,
+}
+
+/// Full-WSVM baseline: UD (subsampled when huge) + final train on all.
+pub fn run_wsvm_baseline(train: &Dataset, test: &Dataset, rng: &mut Pcg64) -> RunResult {
+    let t = Timer::start();
+    let ud_cfg = UdSearchConfig::default();
+    let ud_set = if train.len() > BASELINE_UD_CAP {
+        let mut idx = rng.permutation(train.len());
+        idx.truncate(BASELINE_UD_CAP);
+        train.select(&idx)
+    } else {
+        train.clone()
+    };
+    let outcome = ud_search(&ud_set, false, &ud_cfg, None, rng).expect("ud");
+    let model =
+        train_weighted(&train.points, &train.labels, &outcome.params, None).expect("train");
+    let seconds = t.secs();
+    RunResult {
+        metrics: mlsvm::metrics::evaluate(&model, test),
+        seconds,
+    }
+}
+
+/// MLWSVM with the given framework parameters.
+pub fn run_mlwsvm(
+    train: &Dataset,
+    test: &Dataset,
+    params: MlsvmParams,
+    rng: &mut Pcg64,
+) -> RunResult {
+    let t = Timer::start();
+    let model = MlsvmTrainer::new(params).train(train, rng).expect("mlsvm");
+    let seconds = t.secs();
+    RunResult {
+        metrics: mlsvm::metrics::evaluate(&model.model, test),
+        seconds,
+    }
+}
+
+/// Prepare a z-scored train/test split of a generated dataset.
+pub fn split_and_scale(ds: &Dataset, rng: &mut Pcg64) -> (Dataset, Dataset) {
+    let (mut tr, mut te) = mlsvm::data::split::train_test_split(ds, 0.2, rng);
+    mlsvm::data::scale::Scaler::fit_transform(&mut tr, Some(&mut te));
+    (tr, te)
+}
+
+/// Parse harness CLI flags shared by the tables:
+/// `--full` (paper sizes), `--sets a,b,c`, `--seed`, `--repeats`.
+pub struct HarnessOpts {
+    /// 1.0 scale everywhere.
+    pub full: bool,
+    /// Restrict to these (prefix-matched) set names.
+    pub only: Option<Vec<String>>,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Average over this many runs (paper: 20; default 1 for wall-clock).
+    pub repeats: usize,
+}
+
+impl HarnessOpts {
+    /// Parse from argv (ignores unknown args so `cargo bench -- ...` works).
+    pub fn parse() -> HarnessOpts {
+        let args: Vec<String> = std::env::args().collect();
+        let mut o = HarnessOpts {
+            full: false,
+            only: None,
+            seed: 42,
+            repeats: 1,
+        };
+        let mut i = 0;
+        while i < args.len() {
+            match args[i].as_str() {
+                "--full" => o.full = true,
+                "--sets" if i + 1 < args.len() => {
+                    o.only = Some(args[i + 1].split(',').map(|s| s.to_string()).collect());
+                    i += 1;
+                }
+                "--seed" if i + 1 < args.len() => {
+                    o.seed = args[i + 1].parse().unwrap_or(42);
+                    i += 1;
+                }
+                "--repeats" if i + 1 < args.len() => {
+                    o.repeats = args[i + 1].parse().unwrap_or(1).max(1);
+                    i += 1;
+                }
+                _ => {}
+            }
+            i += 1;
+        }
+        o
+    }
+
+    /// Whether `name` is selected.
+    pub fn selected(&self, name: &str) -> bool {
+        match &self.only {
+            None => true,
+            Some(list) => list
+                .iter()
+                .any(|p| name.to_ascii_lowercase().starts_with(&p.to_ascii_lowercase())),
+        }
+    }
+}

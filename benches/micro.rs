@@ -1,0 +1,144 @@
+//! Micro benchmarks of the substrates (criterion-lite harness from
+//! `util::timer::bench`): k-NN construction, one AMG coarsening level,
+//! SMO solve, PJRT kernel-tile and decision throughput, router batching.
+//!
+//! ```bash
+//! cargo bench --bench micro
+//! ```
+
+use mlsvm::data::matrix::Matrix;
+use mlsvm::data::synth::two_gaussians;
+use mlsvm::graph::affinity::affinity_graph;
+use mlsvm::knn::{build_knn, KnnBackend};
+use mlsvm::svm::kernel::{KernelKind, RowBackend, RustRowBackend};
+use mlsvm::svm::smo::{solve, SvmParams};
+use mlsvm::util::rng::{Pcg64, Rng};
+use mlsvm::util::timer::bench;
+
+fn random_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::seed_from(seed);
+    let mut m = Matrix::zeros(n, d);
+    for i in 0..n {
+        let c = (i % 10) as f64 * 3.0;
+        for j in 0..d {
+            m.set(i, j, (c + rng.normal()) as f32);
+        }
+    }
+    m
+}
+
+fn main() {
+    println!("== micro benches (median of N runs after warmup) ==\n");
+
+    // ---- kNN backends ----
+    for (n, d) in [(2_000usize, 16usize), (8_000, 32)] {
+        let m = random_matrix(n, d, 1);
+        let st = bench(1, 3, || build_knn(&m, 10, KnnBackend::RpForest, 7));
+        println!("knn/rpforest    n={n:<6} d={d:<3} {}", st.human());
+        if n <= 2_000 {
+            let st = bench(1, 3, || build_knn(&m, 10, KnnBackend::Brute, 7));
+            println!("knn/brute       n={n:<6} d={d:<3} {}", st.human());
+        }
+        if d <= 16 {
+            let st = bench(1, 3, || build_knn(&m, 10, KnnBackend::KdTree, 7));
+            println!("knn/kdtree      n={n:<6} d={d:<3} {}", st.human());
+        }
+    }
+
+    // ---- AMG coarsening level ----
+    for n in [2_000usize, 8_000] {
+        let m = random_matrix(n, 16, 2);
+        let g = affinity_graph(&m, 10, KnnBackend::RpForest, 3).unwrap();
+        let vols = vec![1.0; n];
+        let st = bench(1, 3, || {
+            mlsvm::amg::coarsen::coarsen_level(
+                &m,
+                &vols,
+                &g,
+                mlsvm::amg::coarsen::CoarsenParams::default(),
+            )
+            .unwrap()
+        });
+        println!("amg/coarsen1lvl n={n:<6}       {}", st.human());
+    }
+
+    // ---- SMO solve ----
+    for n in [500usize, 2_000] {
+        let mut rng = Pcg64::seed_from(4);
+        let ds = two_gaussians(n / 2, n / 2, 16, 3.0, &mut rng);
+        let params = SvmParams {
+            kernel: KernelKind::Rbf { gamma: 0.1 },
+            ..Default::default()
+        };
+        let st = bench(1, 3, || {
+            let backend = RustRowBackend::new(&ds.points, params.kernel);
+            solve(&backend, &ds.labels, &params, None).unwrap()
+        });
+        println!("smo/solve       n={n:<6}       {}", st.human());
+    }
+
+    // ---- kernel row throughput (rust) ----
+    {
+        let m = random_matrix(4_096, 64, 5);
+        let backend = RustRowBackend::new(&m, KernelKind::Rbf { gamma: 0.1 });
+        let mut row = vec![0.0f32; 4_096];
+        let mut i = 0usize;
+        let st = bench(8, 64, || {
+            i = (i + 97) % 4_096;
+            backend.fill_row(i, &mut row);
+        });
+        let gflops = (2.0 * 4_096.0 * 64.0) / st.median / 1e9;
+        println!("kernel/row      n=4096 d=64    {} ({gflops:.2} GFLOP/s)", st.human());
+    }
+
+    // ---- PJRT paths (needs artifacts) ----
+    let dir = mlsvm::runtime::Runtime::default_dir();
+    if dir.join("manifest.txt").exists() {
+        let mut rt = mlsvm::runtime::Runtime::new(dir).unwrap();
+        let m = random_matrix(1_024, 64, 6);
+        // Gram via rbf_tile artifact
+        let st = bench(1, 3, || {
+            mlsvm::runtime::rbf::PjrtRowBackend::new(&mut rt, &m, 0.1).unwrap()
+        });
+        let tiles = 1_024f64 / 256.0;
+        let flops = 2.0 * 1_024f64 * 1_024.0 * 128.0; // padded d=128
+        println!(
+            "pjrt/gram       n=1024 d->128  {} ({:.2} GFLOP/s, {}x{} tiles)",
+            st.human(),
+            flops / st.median / 1e9,
+            tiles,
+            tiles
+        );
+        // decision throughput
+        let mut rng = Pcg64::seed_from(7);
+        let ds = two_gaussians(512, 256, 32, 3.0, &mut rng);
+        let model = mlsvm::svm::smo::train(
+            &ds.points,
+            &ds.labels,
+            &SvmParams {
+                kernel: KernelKind::Rbf { gamma: 0.1 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let dec = mlsvm::runtime::rbf::PjrtDecision::new(&rt, &model).unwrap();
+        let queries = random_matrix(1_024, 32, 8);
+        let st = bench(1, 5, || dec.decision_batch(&mut rt, &queries).unwrap());
+        println!(
+            "pjrt/decision   q=1024 nsv={:<4} {} ({:.0} q/s)",
+            model.n_sv(),
+            st.human(),
+            1_024.0 / st.median
+        );
+        // rust decision for comparison
+        let st = bench(1, 5, || model.decision_batch(&queries));
+        println!(
+            "rust/decision   q=1024 nsv={:<4} {} ({:.0} q/s)",
+            model.n_sv(),
+            st.human(),
+            1_024.0 / st.median
+        );
+    } else {
+        println!("pjrt/*          skipped (run `make artifacts`)");
+    }
+}

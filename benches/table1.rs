@@ -1,0 +1,88 @@
+//! Table 1 regenerator: WSVM vs MLWSVM (ACC, SN, SP, κ, time) on the ten
+//! benchmark data sets (synthetic analogs; see DESIGN.md §4).
+//!
+//! ```bash
+//! cargo bench --bench table1                    # testbed scales
+//! cargo bench --bench table1 -- --full          # paper sizes (slow!)
+//! cargo bench --bench table1 -- --sets ring,two # subset
+//! ```
+
+mod common;
+
+use common::{run_mlwsvm, run_wsvm_baseline, split_and_scale, HarnessOpts};
+use mlsvm::coordinator::report::{fmt_secs, Table};
+use mlsvm::data::synth::uci::table1_specs;
+use mlsvm::mlsvm::MlsvmParams;
+use mlsvm::util::rng::Pcg64;
+
+fn main() {
+    let opts = HarnessOpts::parse();
+    println!("== Table 1: WSVM vs MLWSVM (paper: Sadrfaridpour et al. 2016) ==");
+    println!("(synthetic analogs; scale noted per row; baseline UD subsampled — see benches/common)");
+    let mut table = Table::new(&[
+        "Name", "r_imb", "n_f", "n(paper)", "n(gen)", // data columns
+        "ACC", "SN", "SP", "κ", "Time", // WSVM
+        "ACC'", "SN'", "SP'", "κ'", "Time'", // MLWSVM
+        "speedup",
+    ]);
+    for spec in table1_specs() {
+        if !opts.selected(spec.name) {
+            continue;
+        }
+        let scale = if opts.full { 1.0 } else { spec.default_scale };
+        let mut acc = [0.0f64; 10]; // aggregated over repeats
+        let mut n_gen = 0usize;
+        for rep in 0..opts.repeats {
+            let mut rng = Pcg64::seed_from(opts.seed ^ (rep as u64) << 8);
+            let ds = spec.generate(scale, &mut rng);
+            n_gen = ds.len();
+            let (train, test) = split_and_scale(&ds, &mut rng);
+            let base = run_wsvm_baseline(&train, &test, &mut rng);
+            let ml = run_mlwsvm(
+                &train,
+                &test,
+                MlsvmParams::default().with_seed(opts.seed ^ 77 ^ rep as u64),
+                &mut rng,
+            );
+            let bm = &base.metrics;
+            let mm = &ml.metrics;
+            for (slot, v) in acc.iter_mut().zip([
+                bm.accuracy(),
+                bm.sensitivity(),
+                bm.specificity(),
+                bm.gmean(),
+                base.seconds,
+                mm.accuracy(),
+                mm.sensitivity(),
+                mm.specificity(),
+                mm.gmean(),
+                ml.seconds,
+            ]) {
+                *slot += v;
+            }
+        }
+        let k = opts.repeats as f64;
+        let v: Vec<f64> = acc.iter().map(|x| x / k).collect();
+        table.row(vec![
+            spec.name.to_string(),
+            format!("{:.2}", spec.imbalance()),
+            spec.n_features.to_string(),
+            spec.n().to_string(),
+            n_gen.to_string(),
+            format!("{:.2}", v[0]),
+            format!("{:.2}", v[1]),
+            format!("{:.2}", v[2]),
+            format!("{:.2}", v[3]),
+            fmt_secs(v[4]),
+            format!("{:.2}", v[5]),
+            format!("{:.2}", v[6]),
+            format!("{:.2}", v[7]),
+            format!("{:.2}", v[8]),
+            fmt_secs(v[9]),
+            format!("{:.1}x", v[4] / v[9].max(1e-9)),
+        ]);
+        // stream progress
+        println!("{}", table.render().lines().last().unwrap());
+    }
+    println!("\n{}", table.render());
+}

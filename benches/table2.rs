@@ -1,0 +1,108 @@
+//! Table 2 regenerator: the industrial (BMW-style) 5-class survey
+//! pipeline — regular WSVM vs multilevel WSVM per class on DS1, and
+//! MLWSVM on the larger DS2 with per-class timing.
+//!
+//! ```bash
+//! cargo bench --bench table2 -- [--full]   # full uses paper class sizes
+//! ```
+
+mod common;
+
+use common::{run_wsvm_baseline, HarnessOpts};
+use mlsvm::coordinator::report::{fmt_secs, Table};
+use mlsvm::coordinator::OneVsRestTrainer;
+use mlsvm::data::dataset::Dataset;
+use mlsvm::data::synth::survey::{self, SurveyConfig};
+use mlsvm::mlsvm::MlsvmParams;
+use mlsvm::util::rng::{Pcg64, Rng};
+
+fn main() {
+    let opts = HarnessOpts::parse();
+    // default scales keep the harness in minutes on this testbed
+    let (s1, s2) = if opts.full { (1.0, 1.0) } else { (0.05, 0.01) };
+    println!("== Table 2: 5-class survey pipeline (DS1 scale {s1}, DS2 scale {s2}) ==");
+    let cfg = SurveyConfig::default();
+    let mut rng = Pcg64::seed_from(opts.seed);
+
+    // ---- DS1: WSVM vs MLWSVM quality per class ----
+    let ds1 = survey::generate_ds1(s1, &cfg, &mut rng);
+    println!(
+        "DS1: {} docs, {} raw features -> {} dims",
+        ds1.len(),
+        ds1.raw_features,
+        ds1.points.cols()
+    );
+    // split
+    let n = ds1.len();
+    let perm = rng.permutation(n);
+    let n_test = n / 5;
+    let (test_idx, train_idx) = perm.split_at(n_test);
+    let tr_points = ds1.points.select_rows(train_idx);
+    let tr_ids: Vec<u8> = train_idx.iter().map(|&i| ds1.class_ids[i]).collect();
+    let te_points = ds1.points.select_rows(test_idx);
+    let te_ids: Vec<u8> = test_idx.iter().map(|&i| ds1.class_ids[i]).collect();
+
+    let trainer = OneVsRestTrainer::new(MlsvmParams::default().with_seed(opts.seed ^ 5));
+    let ml = trainer
+        .train(&tr_points, &tr_ids, &[0, 1, 2, 3, 4], &mut rng)
+        .expect("ds1 multilevel");
+
+    let mut table = Table::new(&[
+        "Class", "DS1 size", "WSVM ACC", "WSVM κ", "ML ACC", "ML κ", "ML Time",
+    ]);
+    for c in 0..5u8 {
+        // per-class binary baseline on DS1
+        let labels: Vec<i8> = tr_ids.iter().map(|&k| if k == c { 1 } else { -1 }).collect();
+        let tr = Dataset::new(tr_points.clone(), labels).unwrap();
+        let te_labels: Vec<i8> = te_ids.iter().map(|&k| if k == c { 1 } else { -1 }).collect();
+        let te = Dataset::new(te_points.clone(), te_labels).unwrap();
+        let base = run_wsvm_baseline(&tr, &te, &mut rng);
+        let mlm = ml.evaluate_class(c, &te_points, &te_ids);
+        let job = &ml.jobs[c as usize];
+        table.row(vec![
+            format!("Class {}", c + 1),
+            survey::DS1_SIZES[c as usize].to_string(),
+            format!("{:.2}", base.metrics.accuracy()),
+            format!("{:.2}", base.metrics.gmean()),
+            format!("{:.2}", mlm.accuracy()),
+            format!("{:.2}", mlm.gmean()),
+            fmt_secs(job.seconds),
+        ]);
+        println!("{}", table.render().lines().last().unwrap());
+    }
+    println!("\nDS1 results:\n{}", table.render());
+
+    // ---- DS2: MLWSVM quality + time (baseline infeasible, as in paper) ----
+    let ds2 = survey::generate_ds2(s2, &cfg, &mut rng);
+    println!(
+        "DS2: {} docs, {} raw features -> {} dims",
+        ds2.len(),
+        ds2.raw_features,
+        ds2.points.cols()
+    );
+    let n = ds2.len();
+    let perm = rng.permutation(n);
+    let n_test = n / 5;
+    let (test_idx, train_idx) = perm.split_at(n_test);
+    let tr_points = ds2.points.select_rows(train_idx);
+    let tr_ids: Vec<u8> = train_idx.iter().map(|&i| ds2.class_ids[i]).collect();
+    let te_points = ds2.points.select_rows(test_idx);
+    let te_ids: Vec<u8> = test_idx.iter().map(|&i| ds2.class_ids[i]).collect();
+    let trainer = OneVsRestTrainer::new(MlsvmParams::default().with_seed(opts.seed ^ 9));
+    let ml2 = trainer
+        .train(&tr_points, &tr_ids, &[0, 1, 2, 3, 4], &mut rng)
+        .expect("ds2 multilevel");
+    let mut t2 = Table::new(&["Class", "DS2 size", "ML ACC", "ML κ", "Time (sec)"]);
+    for c in 0..5u8 {
+        let m = ml2.evaluate_class(c, &te_points, &te_ids);
+        t2.row(vec![
+            format!("Class {}", c + 1),
+            survey::DS2_SIZES[c as usize].to_string(),
+            format!("{:.2}", m.accuracy()),
+            format!("{:.2}", m.gmean()),
+            fmt_secs(ml2.jobs[c as usize].seconds),
+        ]);
+        println!("{}", t2.render().lines().last().unwrap());
+    }
+    println!("\nDS2 results:\n{}", t2.render());
+}

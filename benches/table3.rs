@@ -1,0 +1,60 @@
+//! Table 3 regenerator: classifier quality (κ) and time for interpolation
+//! orders R ∈ {1, 2, 4, 6, 8, 10} on the benchmark data sets.
+//!
+//! ```bash
+//! cargo bench --bench table3 -- [--sets forest,hypo] [--full]
+//! ```
+
+mod common;
+
+use common::{run_mlwsvm, split_and_scale, HarnessOpts};
+use mlsvm::coordinator::report::{fmt_secs, Table};
+use mlsvm::data::synth::uci::table1_specs;
+use mlsvm::mlsvm::MlsvmParams;
+use mlsvm::util::rng::Pcg64;
+
+const ORDERS: [usize; 6] = [1, 2, 4, 6, 8, 10];
+
+fn main() {
+    let mut opts = HarnessOpts::parse();
+    // Default to a representative subset (the full 10-set sweep is
+    // `-- --sets ''`-able but takes ~an hour on this single-CPU testbed).
+    if opts.only.is_none() {
+        opts.only = Some(vec![
+            "Hypothyroid".into(),
+            "Ringnorm".into(),
+            "Nursery".into(),
+        ]);
+        println!("(default subset; pass -- --sets <a,b,...> for other data sets)");
+    }
+    println!("== Table 3: κ and time vs interpolation order R ==");
+    let mut table = Table::new(&[
+        "Data set", "κ R=1", "R=2", "R=4", "R=6", "R=8", "R=10", "t R=1", "R=2", "R=4", "R=6",
+        "R=8", "R=10",
+    ]);
+    for spec in table1_specs() {
+        if !opts.selected(spec.name) {
+            continue;
+        }
+        let scale = if opts.full { 1.0 } else { spec.default_scale };
+        let mut kappas = Vec::new();
+        let mut times = Vec::new();
+        for (ri, r) in ORDERS.iter().enumerate() {
+            let mut rng = Pcg64::seed_from(opts.seed ^ (ri as u64) << 16);
+            let ds = spec.generate(scale, &mut rng);
+            let (train, test) = split_and_scale(&ds, &mut rng);
+            let params = MlsvmParams::default()
+                .with_caliber(*r)
+                .with_seed(opts.seed ^ 31 ^ ri as u64);
+            let res = run_mlwsvm(&train, &test, params, &mut rng);
+            kappas.push(format!("{:.2}", res.metrics.gmean()));
+            times.push(fmt_secs(res.seconds));
+        }
+        let mut row = vec![spec.name.to_string()];
+        row.extend(kappas);
+        row.extend(times);
+        table.row(row);
+        println!("{}", table.render().lines().last().unwrap());
+    }
+    println!("\n{}", table.render());
+}

@@ -1,0 +1,77 @@
+//! Quickstart: train a multilevel WSVM on a small nonlinear problem and
+//! serve predictions through the PJRT decision artifact.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use mlsvm::prelude::*;
+use mlsvm::util::timer::Timer;
+
+fn main() -> Result<()> {
+    let mut rng = Pcg64::seed_from(7);
+
+    // A minority ring around a majority core: linearly inseparable,
+    // needs the RBF kernel the framework tunes automatically.
+    let ds = mlsvm::data::synth::concentric_rings(4_000, 800, &mut rng);
+    let (mut train, mut test) = mlsvm::data::split::train_test_split(&ds, 0.2, &mut rng);
+    mlsvm::data::scale::Scaler::fit_transform(&mut train, Some(&mut test));
+    println!(
+        "data: n={} dim={} r_imb={:.2}",
+        train.len(),
+        train.dim(),
+        train.imbalance()
+    );
+
+    // Train with paper defaults (k=10 k-NN, Q=0.5, η=2, caliber 2,
+    // UD model selection with parameter inheritance).
+    let t = Timer::start();
+    let params = MlsvmParams::default().with_seed(7);
+    let model = MlsvmTrainer::new(params).train(&train, &mut rng)?;
+    println!("trained in {:.2}s through {} levels:", t.secs(), model.level_stats.len());
+    for s in &model.level_stats {
+        println!(
+            "  level {:?}: train={} SVs={} UD={}",
+            s.levels, s.train_size, s.n_sv, s.ud_used
+        );
+    }
+
+    // Evaluate on held-out data.
+    let m = mlsvm::metrics::evaluate(&model.model, &test);
+    println!("test: {}", m.report());
+
+    // Serve through the PJRT artifact router when artifacts are built.
+    let dir = mlsvm::runtime::Runtime::default_dir();
+    if dir.join("manifest.txt").exists() {
+        let mut rt = mlsvm::runtime::Runtime::new(dir)?;
+        let mut router = mlsvm::coordinator::Router::new_pjrt(
+            &rt,
+            &model.model,
+            std::time::Duration::from_millis(2),
+        )?;
+        let t = Timer::start();
+        let ids: Vec<u64> = (0..test.len())
+            .map(|i| router.submit(test.points.row(i)))
+            .collect();
+        router.flush(&mut rt)?;
+        let correct = ids
+            .iter()
+            .enumerate()
+            .filter(|(i, id)| {
+                let pred = if router.take(**id).unwrap() > 0.0 { 1 } else { -1 };
+                pred == test.labels[*i]
+            })
+            .count();
+        println!(
+            "PJRT router: {} predictions in {:.3}s ({} batches, {:.0}% slot utilization), acc={:.3}",
+            test.len(),
+            t.secs(),
+            router.stats.batches,
+            100.0 * router.stats.utilization(),
+            correct as f64 / test.len() as f64
+        );
+    } else {
+        println!("(artifacts not built; run `make artifacts` for the PJRT demo)");
+    }
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! The industrial pipeline (Table 2 setting): simulated customer-
+//! satisfaction surveys → uni/bi-gram tf-idf → randomized SVD to 100
+//! dimensions → one-vs-rest MLWSVM per class through the coordinator's
+//! job queue → per-class ACC/κ.
+//!
+//! ```bash
+//! cargo run --release --example survey_multiclass -- [--scale 0.02]
+//! ```
+
+use mlsvm::coordinator::report::{fmt_secs, Table};
+use mlsvm::coordinator::OneVsRestTrainer;
+use mlsvm::data::synth::survey::{self, SurveyConfig};
+use mlsvm::prelude::*;
+use mlsvm::util::cli::Args;
+use mlsvm::util::timer::Timer;
+
+fn main() -> Result<()> {
+    let args = Args::new("survey_multiclass", "BMW-style DS1 pipeline")
+        .opt("scale", "fraction of DS1 class sizes", Some("0.05"))
+        .opt("svd-dim", "SVD output dimensionality", Some("100"))
+        .opt("seed", "random seed", Some("5"))
+        .parse_from(std::env::args().skip(1).collect())?;
+    let mut rng = Pcg64::seed_from(args.get_u64("seed")?);
+
+    // 1) corpus + tf-idf + SVD (the paper's preprocessing, simulated).
+    let cfg = SurveyConfig {
+        svd_dim: args.get_usize("svd-dim")?,
+        ..Default::default()
+    };
+    let t = Timer::start();
+    let data = survey::generate_ds1(args.get_f64("scale")?, &cfg, &mut rng);
+    println!(
+        "corpus: {} docs, {} raw tf-idf features -> {} dims (SVD) in {:.1}s",
+        data.len(),
+        data.raw_features,
+        data.points.cols(),
+        t.secs()
+    );
+
+    // 2) split train/test by document.
+    let n = data.len();
+    let perm = {
+        use mlsvm::util::rng::Rng;
+        rng.permutation(n)
+    };
+    let n_test = n / 5;
+    let test_idx: Vec<usize> = perm[..n_test].to_vec();
+    let train_idx: Vec<usize> = perm[n_test..].to_vec();
+    let train_points = data.points.select_rows(&train_idx);
+    let train_ids: Vec<u8> = train_idx.iter().map(|&i| data.class_ids[i]).collect();
+    let test_points = data.points.select_rows(&test_idx);
+    let test_ids: Vec<u8> = test_idx.iter().map(|&i| data.class_ids[i]).collect();
+
+    // 3) one-vs-rest MLWSVM per class through the job queue.
+    let mut trainer = OneVsRestTrainer::new(MlsvmParams::default().with_seed(77));
+    trainer.verbose = true;
+    let t = Timer::start();
+    let model = trainer.train(&train_points, &train_ids, &[0, 1, 2, 3, 4], &mut rng)?;
+    let total = t.secs();
+
+    // 4) per-class report (Table-2 shape).
+    let mut table = Table::new(&["Class", "train n+", "ACC", "κ", "Time(s)"]);
+    for job in &model.jobs {
+        let m = model.evaluate_class(job.class_id, &test_points, &test_ids);
+        table.row(vec![
+            format!("Class {}", job.class_id + 1),
+            job.sizes.0.to_string(),
+            format!("{:.2}", m.accuracy()),
+            format!("{:.2}", m.gmean()),
+            fmt_secs(job.seconds),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // 5) multiclass argmax accuracy.
+    let preds = model.predict_batch(&test_points);
+    let correct = preds
+        .iter()
+        .zip(&test_ids)
+        .filter(|(p, t)| p.map(|c| c == **t).unwrap_or(false))
+        .count();
+    println!(
+        "multiclass argmax accuracy: {:.3} ({} classes, total {:.1}s)",
+        correct as f64 / test_ids.len() as f64,
+        model.jobs.len(),
+        total
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+"""AOT compile path: lower the L2 graphs (with the L1 Pallas kernel
+inlined, interpret mode) to **HLO text** artifacts the rust runtime loads
+via the `xla` crate.
+
+HLO *text* — not ``lowered.compile().serialize()`` and not a serialized
+``HloModuleProto`` — is the interchange format: jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published ``xla`` 0.1.6 crate binds) rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  Lowered with
+``return_tuple=True``; the rust side unwraps with ``to_tuple1()``.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Python is never on the training/serving path.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_artifacts():
+    """(name, lowered, meta) for every artifact."""
+    d = model.TILE_D
+    rbf_lowered = jax.jit(model.rbf_tile_fn).lower(
+        f32(model.TILE_M, d), f32(model.TILE_N, d), f32()
+    )
+    dec_lowered = jax.jit(model.decision_fn).lower(
+        f32(model.DEC_S, d), f32(model.DEC_S), f32(model.DEC_Q, d), f32(), f32()
+    )
+    return [
+        ("rbf_tile", rbf_lowered,
+         dict(m=model.TILE_M, n=model.TILE_N, d=d)),
+        ("decision", dec_lowered,
+         dict(s=model.DEC_S, q=model.DEC_Q, d=d)),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, lowered, meta in build_artifacts():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta_str = " ".join(f"{k}={v}" for k, v in sorted(meta.items()))
+        manifest_lines.append(f"{name} {name}.hlo.txt {meta_str}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Layer 1 — Pallas kernel for tiled Gaussian (RBF) kernel-matrix blocks.
+
+The compute hot-spot of (W)SVM training and prediction is dense Gram
+blocks K[i, j] = exp(-gamma * ||x_i - y_j||^2).  We expand the square:
+
+    ||x - y||^2 = ||x||^2 + ||y||^2 - 2 x.y
+
+so the dominant work is an (BM x D) @ (D x BN) matmul — exactly the MXU's
+shape — with the row/col norms and the exp fused in the same kernel (VPU
+work), one pass over VMEM-resident tiles.
+
+TPU-first design notes (DESIGN.md §Hardware-Adaptation):
+  * block sizes are multiples of 128 to align with MXU/VREG lanes;
+  * the grid walks output tiles; each X block is re-read once per grid
+    column and each Y block once per grid row (BlockSpec index maps);
+  * VMEM footprint per step = BM*D + BN*D + BM*BN floats
+    (128, 128 tiles at D=128: ~0.25 MB << 16 MB VMEM);
+  * gamma arrives as a (1,1) scalar operand so one compiled artifact
+    serves every model-selection candidate.
+
+This image's PJRT plugin is CPU-only, so the kernel must be lowered with
+``interpret=True`` (real TPU lowering emits a Mosaic custom-call the CPU
+client cannot execute); kernel *structure* is what we optimize here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (MXU-aligned).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _rbf_block_kernel(x_ref, y_ref, gamma_ref, o_ref):
+    """One (BM, BN) output tile: fused norms + matmul + exp."""
+    x = x_ref[...]  # (BM, D) in VMEM
+    y = y_ref[...]  # (BN, D) in VMEM
+    gamma = gamma_ref[0, 0]
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (BM, 1)   VPU
+    yn = jnp.sum(y * y, axis=1, keepdims=True).T  # (1, BN)  VPU
+    # MXU matmul; accumulate in f32 regardless of input dtype.
+    cross = jnp.dot(x, y.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(xn + yn - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-gamma * d2).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def rbf_kernel_matrix(x, y, gamma, *, block_m=BLOCK_M, block_n=BLOCK_N,
+                      interpret=True):
+    """K[i, j] = exp(-gamma * ||x_i - y_j||^2) for x: (M, D), y: (N, D).
+
+    M and N must be divisible by the block sizes (callers pad; zero-padding
+    extra FEATURE columns is exact for RBF because it adds 0 to every
+    squared distance — padded ROWS produce garbage rows the caller must
+    mask out).  ``gamma`` is a scalar (traced, not baked into the HLO).
+    """
+    m, d = x.shape
+    n, _ = y.shape
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    if m % block_m or n % block_n:
+        raise ValueError(f"shape ({m},{n}) not divisible by ({block_m},{block_n})")
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        _rbf_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, y, gamma_arr)

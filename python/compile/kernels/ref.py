@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the Pallas kernels (the pytest correctness
+reference — the core L1 correctness signal)."""
+
+import jax.numpy as jnp
+
+
+def rbf_kernel_matrix_ref(x, y, gamma):
+    """K[i, j] = exp(-gamma * ||x_i - y_j||^2), direct O(M*N*D) form."""
+    diff = x[:, None, :] - y[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.exp(-jnp.asarray(gamma, jnp.float32) * d2)
+
+
+def decision_ref(sv, coef, queries, gamma, rho):
+    """SVM decision values: f(q) = sum_i coef_i K(sv_i, q) - rho."""
+    k = rbf_kernel_matrix_ref(sv, queries, gamma)  # (S, Q)
+    return jnp.dot(coef, k) - rho

@@ -1,0 +1,42 @@
+"""Layer 2 — the JAX compute graphs that get AOT-lowered to HLO text.
+
+Two artifacts serve the rust hot path:
+
+* ``rbf_tile``  — one padded kernel-matrix tile K = rbf(X, Y, gamma),
+  used by the SMO kernel-row backend (`runtime::rbf::RbfTiles`);
+* ``decision``  — batched SVM decision values
+  f(Q) = coef @ rbf(SV, Q, gamma) - rho, used by the prediction router.
+
+Both call the Layer-1 Pallas kernel so it lowers into the same HLO.  All
+shapes are static (PJRT compiles one executable per shape); the rust side
+pads inputs to these shapes and masks padded outputs.  Zero-padding the
+feature dimension is exact for RBF; padded SV rows are neutralized by
+zero coefficients; padded query rows are sliced off by the caller.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.rbf_tile import rbf_kernel_matrix
+
+# Static artifact shapes (f32). Chosen MXU-aligned; see DESIGN.md §3.
+TILE_M = 256  # rbf_tile rows (SMO row-block)
+TILE_N = 256  # rbf_tile cols (training-set block)
+TILE_D = 128  # padded feature dim
+DEC_S = 512   # decision: max support vectors
+DEC_Q = 256   # decision: query batch
+BLOCK = 128   # pallas block size in both grid dims
+
+
+def rbf_tile_fn(x, y, gamma):
+    """K = rbf(X, Y, gamma) for X: (TILE_M, D), Y: (TILE_N, D)."""
+    return (rbf_kernel_matrix(x, y, gamma, block_m=BLOCK, block_n=BLOCK),)
+
+
+def decision_fn(sv, coef, queries, gamma, rho):
+    """f(Q) = coef @ rbf(SV, Q, gamma) - rho.
+
+    sv: (DEC_S, D) f32, coef: (DEC_S,) f32 (zero for padded rows),
+    queries: (DEC_Q, D) f32, gamma/rho: scalars.
+    """
+    k = rbf_kernel_matrix(sv, queries, gamma, block_m=BLOCK, block_n=BLOCK)
+    return (jnp.dot(coef, k) - rho,)

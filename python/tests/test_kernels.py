@@ -1,0 +1,112 @@
+"""L1 correctness: the Pallas RBF kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, gamma and data scales; assert_allclose against
+ref.py is THE correctness signal for the kernel that ends up inside the
+AOT artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import decision_ref, rbf_kernel_matrix_ref
+from compile.kernels.rbf_tile import rbf_kernel_matrix
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mb=st.integers(1, 4),
+    nb=st.integers(1, 4),
+    d=st.sampled_from([1, 3, 8, 17, 64]),
+    gamma=st.floats(1e-3, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_reference_across_shapes(mb, nb, d, gamma, seed):
+    """Grid shapes (mb*B, nb*B) with small blocks to exercise tiling."""
+    block = 8
+    m, n = mb * block, nb * block
+    x = rand((m, d), seed)
+    y = rand((n, d), seed + 1)
+    got = rbf_kernel_matrix(x, y, gamma, block_m=block, block_n=block)
+    want = rbf_kernel_matrix_ref(x, y, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(0.01, 100.0), seed=st.integers(0, 2**31 - 1))
+def test_numerically_stable_across_scales(scale, seed):
+    x = rand((16, 8), seed, scale)
+    got = rbf_kernel_matrix(x, x, 1e-2, block_m=8, block_n=8)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    assert bool(jnp.all(got <= 1.0 + 1e-4))
+    # diagonal is K(x,x)=1 up to f32 norm-trick cancellation
+    np.testing.assert_allclose(jnp.diag(got), 1.0, atol=1e-3)
+
+
+def test_feature_zero_padding_is_exact():
+    """Padding D with zero columns must not change K (the rust runtime
+    relies on this to serve any dataset dimensionality with one artifact)."""
+    x = rand((32, 7), 0)
+    y = rand((32, 7), 1)
+    xp = jnp.pad(x, ((0, 0), (0, 9)))
+    yp = jnp.pad(y, ((0, 0), (0, 9)))
+    a = rbf_kernel_matrix(x, y, 0.3, block_m=16, block_n=16)
+    b = rbf_kernel_matrix(xp, yp, 0.3, block_m=16, block_n=16)
+    # f32 reductions over different padded widths reassociate sums
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+
+def test_default_blocks_on_artifact_shape():
+    """The exact shape the AOT artifact uses."""
+    from compile import model
+
+    x = rand((model.TILE_M, model.TILE_D), 2)
+    y = rand((model.TILE_N, model.TILE_D), 3)
+    got = model.rbf_tile_fn(x, y, jnp.float32(0.05))[0]
+    want = rbf_kernel_matrix_ref(x, y, 0.05)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_indivisible_shapes_rejected():
+    x = rand((10, 4), 4)
+    with pytest.raises(ValueError):
+        rbf_kernel_matrix(x, x, 1.0, block_m=8, block_n=8)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([8, 24]),
+    q=st.sampled_from([8, 16]),
+    gamma=st.floats(1e-2, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decision_matches_reference(s, q, gamma, seed):
+    from compile.kernels.rbf_tile import rbf_kernel_matrix as k
+
+    sv = rand((s, 6), seed)
+    coef = rand((s,), seed + 1)
+    queries = rand((q, 6), seed + 2)
+    rho = 0.37
+    got = jnp.dot(coef, k(sv, queries, gamma, block_m=8, block_n=8)) - rho
+    want = decision_ref(sv, coef, queries, gamma, rho)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_padded_sv_rows_are_neutralized_by_zero_coef():
+    """The decision artifact is padded to DEC_S rows; zero coefficients
+    must make padded SV rows irrelevant."""
+    sv = rand((8, 5), 7)
+    coef = rand((8,), 8)
+    queries = rand((8, 5), 9)
+    svp = jnp.pad(sv, ((0, 8), (0, 0)), constant_values=3.14)  # garbage rows
+    coefp = jnp.pad(coef, (0, 8))  # zero coef for garbage
+    a = decision_ref(sv, coef, queries, 0.5, 0.1)
+    b = decision_ref(svp, coefp, queries, 0.5, 0.1)
+    np.testing.assert_allclose(a, b, rtol=1e-6)

@@ -1,0 +1,206 @@
+//! One coarsening step: fine level → coarse level.
+//!
+//! Given the fine graph, points and volumes, this module runs seed
+//! selection (Algorithm 1), builds the interpolation operator P (Eq. 4)
+//! and produces the coarse training set:
+//!
+//! * coarse volume  `v_c(q) = Σ_j v_j P_{jq}` — total volume is conserved;
+//! * coarse point   `x_c(q) = Σ_j v_j P_{jq} x_j / v_c(q)` — the
+//!   volume-weighted centroid of the (fractional) aggregate. (The paper
+//!   prints the unnormalized sum but describes the coarse points as
+//!   *centroids* of aggregates; the normalized form is the one that keeps
+//!   coarse points on the data manifold, and matches the reference
+//!   implementation.)
+//! * coarse edges   `W_c = PᵀWP` with the diagonal dropped (Galerkin).
+
+use crate::amg::interp::{interpolation, InterpParams, Interpolation};
+use crate::amg::seeds::{select_seeds, SeedParams};
+use crate::data::matrix::Matrix;
+use crate::error::Result;
+use crate::graph::csr::{CsrGraph, SparseRowMatrix};
+
+/// Output of one coarsening step.
+#[derive(Debug)]
+pub struct CoarseLevel {
+    /// Coarse data points (volume-weighted aggregate centroids).
+    pub points: Matrix,
+    /// Coarse volumes.
+    pub volumes: Vec<f64>,
+    /// Coarse affinity graph.
+    pub graph: CsrGraph,
+    /// Interpolation operator from the fine level (n_f × n_c).
+    pub p: SparseRowMatrix,
+    /// Fine seed index of each coarse node.
+    pub seed_of_coarse: Vec<u32>,
+    /// Aggregate membership: `aggregates[q]` lists fine nodes with
+    /// P[j,q] > 0 (the I⁻¹(q) of Algorithm 3).
+    pub aggregates: Vec<Vec<u32>>,
+}
+
+/// Parameters for one coarsening step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoarsenParams {
+    /// Algorithm-1 parameters (Q, η).
+    pub seed: SeedParams,
+    /// Interpolation caliber R.
+    pub interp: InterpParams,
+}
+
+/// Coarsen one level.
+pub fn coarsen_level(
+    points: &Matrix,
+    volumes: &[f64],
+    graph: &CsrGraph,
+    params: CoarsenParams,
+) -> Result<CoarseLevel> {
+    let is_seed = select_seeds(graph, volumes, params.seed);
+    let Interpolation {
+        p,
+        seed_of_coarse,
+        ..
+    } = interpolation(graph, &is_seed, params.interp);
+    let nc = seed_of_coarse.len();
+    let nf = points.rows();
+    let d = points.cols();
+
+    // Coarse volumes and volume-weighted centroid accumulation.
+    let mut cvol = vec![0.0f64; nc];
+    let mut acc = vec![0.0f64; nc * d];
+    for j in 0..nf {
+        let vj = volumes[j];
+        let row = points.row(j);
+        for &(q, pjq) in p.row(j) {
+            let wq = vj * pjq as f64;
+            cvol[q as usize] += wq;
+            let dst = &mut acc[q as usize * d..(q as usize + 1) * d];
+            for (a, &x) in dst.iter_mut().zip(row) {
+                *a += wq * x as f64;
+            }
+        }
+    }
+    let mut cpoints = Matrix::zeros(nc, d);
+    for q in 0..nc {
+        let v = cvol[q].max(1e-300);
+        let dst = cpoints.row_mut(q);
+        for (x, &a) in dst.iter_mut().zip(&acc[q * d..(q + 1) * d]) {
+            *x = (a / v) as f32;
+        }
+    }
+
+    // Aggregates (I⁻¹).
+    let mut aggregates: Vec<Vec<u32>> = vec![Vec::new(); nc];
+    for j in 0..nf {
+        for &(q, pjq) in p.row(j) {
+            if pjq > 0.0 {
+                aggregates[q as usize].push(j as u32);
+            }
+        }
+    }
+
+    let cgraph = graph.galerkin(&p)?;
+    Ok(CoarseLevel {
+        points: cpoints,
+        volumes: cvol,
+        graph: cgraph,
+        p,
+        seed_of_coarse,
+        aggregates,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::affinity::affinity_graph;
+    use crate::knn::KnnBackend;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn random_blob(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                // two clusters
+                let c = if i % 2 == 0 { 0.0 } else { 6.0 };
+                m.set(i, j, (c + rng.normal()) as f32);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn total_volume_is_conserved() {
+        let pts = random_blob(400, 4, 21);
+        let mut rng = Pcg64::seed_from(3);
+        let volumes: Vec<f64> = (0..400).map(|_| 0.5 + rng.f64()).collect();
+        let g = affinity_graph(&pts, 8, KnnBackend::Brute, 0).unwrap();
+        let cl = coarsen_level(&pts, &volumes, &g, CoarsenParams::default()).unwrap();
+        let fine: f64 = volumes.iter().sum();
+        let coarse: f64 = cl.volumes.iter().sum();
+        assert!(
+            (fine - coarse).abs() < 1e-9 * fine,
+            "volume {fine} -> {coarse}"
+        );
+    }
+
+    #[test]
+    fn coarse_level_is_smaller() {
+        let pts = random_blob(500, 4, 22);
+        let g = affinity_graph(&pts, 10, KnnBackend::Brute, 0).unwrap();
+        let cl = coarsen_level(&pts, &vec![1.0; 500], &g, CoarsenParams::default()).unwrap();
+        assert!(cl.points.rows() < 500, "no reduction");
+        assert!(cl.points.rows() > 10, "overcollapse");
+        cl.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn centroids_stay_inside_data_bounding_box() {
+        let pts = random_blob(300, 3, 23);
+        let g = affinity_graph(&pts, 6, KnnBackend::Brute, 0).unwrap();
+        let cl = coarsen_level(&pts, &vec![1.0; 300], &g, CoarsenParams::default()).unwrap();
+        for j in 0..3 {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for i in 0..300 {
+                lo = lo.min(pts.get(i, j));
+                hi = hi.max(pts.get(i, j));
+            }
+            for q in 0..cl.points.rows() {
+                let v = cl.points.get(q, j);
+                assert!(v >= lo - 1e-4 && v <= hi + 1e-4, "centroid escaped box");
+            }
+        }
+    }
+
+    #[test]
+    fn aggregates_cover_all_fine_points() {
+        let pts = random_blob(250, 4, 24);
+        let g = affinity_graph(&pts, 8, KnnBackend::Brute, 0).unwrap();
+        let cl = coarsen_level(&pts, &vec![1.0; 250], &g, CoarsenParams::default()).unwrap();
+        let mut covered = vec![false; 250];
+        for agg in &cl.aggregates {
+            for &j in agg {
+                covered[j as usize] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "a fine point is in no aggregate");
+    }
+
+    #[test]
+    fn seed_points_become_their_own_centroid_under_caliber_1() {
+        // With hard aggregation, each aggregate centroid is the mean of its
+        // members; the seed is a member of its own aggregate.
+        let pts = random_blob(200, 3, 25);
+        let g = affinity_graph(&pts, 6, KnnBackend::Brute, 0).unwrap();
+        let params = CoarsenParams {
+            interp: InterpParams { caliber: 1 },
+            ..Default::default()
+        };
+        let cl = coarsen_level(&pts, &vec![1.0; 200], &g, params).unwrap();
+        for (q, &s) in cl.seed_of_coarse.iter().enumerate() {
+            assert!(
+                cl.aggregates[q].contains(&s),
+                "seed {s} not in its own aggregate {q}"
+            );
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Future volumes (Eq. 3):
+//!
+//! ```text
+//! ϑ_i = v_i + Σ_{j ∈ F} v_j · w_ji / Σ_{k ∈ V} w_jk
+//! ```
+//!
+//! ϑ_i measures how much an aggregate seeded at `i` could grow: every
+//! still-free node `j` donates its volume to its neighbors proportionally
+//! to relative edge weight. Nodes with large ϑ are prime seed candidates.
+
+use crate::graph::csr::CsrGraph;
+
+/// Compute ϑ for every node. `free[j]` marks membership in F (donors);
+/// ϑ is *reported* for all nodes but only F-nodes donate volume.
+///
+/// An isolated free node contributes nothing and keeps ϑ_i = v_i.
+pub fn future_volumes(graph: &CsrGraph, volumes: &[f64], free: &[bool]) -> Vec<f64> {
+    let n = graph.n();
+    debug_assert_eq!(volumes.len(), n);
+    debug_assert_eq!(free.len(), n);
+    let mut theta: Vec<f64> = volumes.to_vec();
+    for j in 0..n {
+        if !free[j] {
+            continue;
+        }
+        let (idx, w) = graph.row(j);
+        let total: f64 = w.iter().sum();
+        if total <= 0.0 {
+            continue;
+        }
+        let scale = volumes[j] / total;
+        for (&i, &wji) in idx.iter().zip(w) {
+            theta[i as usize] += scale * wji;
+        }
+    }
+    theta
+}
+
+/// Mean of ϑ restricted to the free set (Algorithm 1 line 2 uses the
+/// average over the candidates).
+pub fn mean_over(theta: &[f64], free: &[bool]) -> f64 {
+    let mut sum = 0.0;
+    let mut cnt = 0usize;
+    for (t, &f) in theta.iter().zip(free) {
+        if f {
+            sum += t;
+            cnt += 1;
+        }
+    }
+    if cnt == 0 {
+        0.0
+    } else {
+        sum / cnt as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Star: center 0 connected to 1,2,3 with unit weights.
+    fn star() -> CsrGraph {
+        CsrGraph::from_edges(4, &[(0, 1, 1.0), (0, 2, 1.0), (0, 3, 1.0)]).unwrap()
+    }
+
+    #[test]
+    fn star_center_accumulates() {
+        let g = star();
+        let v = vec![1.0; 4];
+        let free = vec![true; 4];
+        let theta = future_volumes(&g, &v, &free);
+        // Each leaf donates all of its volume to the center: ϑ_0 = 1 + 3.
+        assert!((theta[0] - 4.0).abs() < 1e-12);
+        // Center donates 1/3 to each leaf: ϑ_leaf = 1 + 1/3.
+        for i in 1..4 {
+            assert!((theta[i] - (1.0 + 1.0 / 3.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn non_free_nodes_do_not_donate() {
+        let g = star();
+        let v = vec![1.0; 4];
+        let mut free = vec![true; 4];
+        free[1] = false; // node 1 no longer donates
+        let theta = future_volumes(&g, &v, &free);
+        assert!((theta[0] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn volume_donation_is_proportional_to_weight() {
+        // 0-1 weight 3, 0-2 weight 1: node 0 donates 3/4 to 1, 1/4 to 2.
+        let g = CsrGraph::from_edges(3, &[(0, 1, 3.0), (0, 2, 1.0)]).unwrap();
+        let theta = future_volumes(&g, &[1.0; 3], &[true; 3]);
+        assert!((theta[1] - (1.0 + 0.75 + 0.0)).abs() < 1e-12); // from 0 only
+        assert!((theta[2] - (1.0 + 0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn isolated_node_keeps_own_volume() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0)]).unwrap();
+        let theta = future_volumes(&g, &[1.0, 1.0, 7.0], &[true; 3]);
+        assert_eq!(theta[2], 7.0);
+    }
+
+    #[test]
+    fn mean_over_free_subset() {
+        let theta = [1.0, 100.0, 3.0];
+        assert!((mean_over(&theta, &[true, false, true]) - 2.0).abs() < 1e-12);
+        assert_eq!(mean_over(&theta, &[false, false, false]), 0.0);
+    }
+}

@@ -1,0 +1,280 @@
+//! The multilevel hierarchy of one class's data manifold.
+//!
+//! `{G_i = (V_i, E_i)}_{i=0..K}` with G_0 the affinity graph of the
+//! original class training set. Coarsening runs until the level size drops
+//! below the coarsest threshold (paper: ~500 points), the level budget is
+//! exhausted, or coarsening stagnates (tiny reduction factor — a safety
+//! valve the paper does not need on its well-behaved inputs).
+//!
+//! Coarsening is applied **separately per class** (C⁺ points are never
+//! aggregated with C⁻ points); the imbalanced-class "copy-through" of the
+//! paper's note is realized in [`crate::mlsvm::trainer`] by aligning two
+//! hierarchies of different depth from the coarsest level upward.
+
+use crate::amg::coarsen::{coarsen_level, CoarseLevel, CoarsenParams};
+use crate::amg::interp::InterpParams;
+use crate::amg::seeds::SeedParams;
+use crate::data::matrix::Matrix;
+use crate::error::Result;
+use crate::graph::affinity::affinity_graph;
+use crate::graph::csr::{CsrGraph, SparseRowMatrix};
+use crate::knn::KnnBackend;
+
+/// Hierarchy construction parameters (paper defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct HierarchyParams {
+    /// k of the k-NN affinity graph (paper: 10).
+    pub knn_k: usize,
+    /// k-NN backend (exact below ~1.5k points, rp-forest above by default).
+    pub knn_backend: KnnBackend,
+    /// Algorithm-1 coupling threshold Q (paper: 0.5).
+    pub q: f64,
+    /// Algorithm-1 future-volume outlier factor η (paper: 2).
+    pub eta: f64,
+    /// Interpolation order / caliber R (paper Table 3; default 2).
+    pub caliber: usize,
+    /// Stop when a level has at most this many points (paper: ~500).
+    pub coarsest_size: usize,
+    /// Hard cap on levels.
+    pub max_levels: usize,
+    /// Stop if a step shrinks the level by less than this factor.
+    pub min_reduction: f64,
+    /// RNG seed for the approximate k-NN backend.
+    pub seed: u64,
+}
+
+impl Default for HierarchyParams {
+    fn default() -> Self {
+        HierarchyParams {
+            knn_k: 10,
+            knn_backend: KnnBackend::Auto,
+            q: 0.5,
+            eta: 2.0,
+            caliber: 2,
+            coarsest_size: 500,
+            max_levels: 30,
+            min_reduction: 0.95,
+            seed: 0,
+        }
+    }
+}
+
+/// One level of the hierarchy. Level 0 is the finest (original points).
+#[derive(Debug)]
+pub struct Level {
+    /// Points at this level (aggregate centroids for l > 0).
+    pub points: Matrix,
+    /// Volumes (all 1.0 at level 0).
+    pub volumes: Vec<f64>,
+    /// Affinity graph at this level.
+    pub graph: CsrGraph,
+    /// Interpolation from the next-finer level (None at level 0).
+    pub p: Option<SparseRowMatrix>,
+    /// Aggregate membership I⁻¹ over next-finer indices (None at level 0).
+    pub aggregates: Option<Vec<Vec<u32>>>,
+    /// Fine seed index of each node here (None at level 0).
+    pub seed_of_coarse: Option<Vec<u32>>,
+}
+
+impl Level {
+    /// Number of points at this level.
+    pub fn len(&self) -> usize {
+        self.points.rows()
+    }
+
+    /// True when the level is empty.
+    pub fn is_empty(&self) -> bool {
+        self.points.rows() == 0
+    }
+}
+
+/// A per-class AMG hierarchy, finest level first.
+#[derive(Debug)]
+pub struct Hierarchy {
+    /// Levels, `levels[0]` = finest.
+    pub levels: Vec<Level>,
+}
+
+impl Hierarchy {
+    /// Build the hierarchy for one class's points.
+    pub fn build(points: Matrix, params: HierarchyParams) -> Result<Hierarchy> {
+        let n0 = points.rows();
+        let graph = affinity_graph(&points, params.knn_k, params.knn_backend, params.seed)?;
+        let volumes = vec![1.0; n0];
+        let mut levels = vec![Level {
+            points,
+            volumes,
+            graph,
+            p: None,
+            aggregates: None,
+            seed_of_coarse: None,
+        }];
+        let cparams = CoarsenParams {
+            seed: SeedParams {
+                q: params.q,
+                eta: params.eta,
+            },
+            interp: InterpParams {
+                caliber: params.caliber,
+            },
+        };
+        while levels.len() < params.max_levels {
+            let fine = levels.last().unwrap();
+            let nf = fine.len();
+            if nf <= params.coarsest_size {
+                break;
+            }
+            let CoarseLevel {
+                points,
+                volumes,
+                graph,
+                p,
+                seed_of_coarse,
+                aggregates,
+            } = coarsen_level(&fine.points, &fine.volumes, &fine.graph, cparams)?;
+            let nc = points.rows();
+            if nc as f64 > params.min_reduction * nf as f64 {
+                // stagnation: keep the previous level as coarsest
+                break;
+            }
+            levels.push(Level {
+                points,
+                volumes,
+                graph,
+                p: Some(p),
+                aggregates: Some(aggregates),
+                seed_of_coarse: Some(seed_of_coarse),
+            });
+        }
+        Ok(Hierarchy { levels })
+    }
+
+    /// Number of levels (≥ 1).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// The coarsest level.
+    pub fn coarsest(&self) -> &Level {
+        self.levels.last().unwrap()
+    }
+
+    /// Expand a set of node indices at `level` to the next-finer level
+    /// via aggregate membership (the I⁻¹ step of Algorithm 3). `level`
+    /// must be ≥ 1. The result is deduplicated and sorted.
+    pub fn expand_to_finer(&self, level: usize, nodes: &[u32]) -> Vec<u32> {
+        assert!(level >= 1 && level < self.depth());
+        let aggs = self.levels[level]
+            .aggregates
+            .as_ref()
+            .expect("level >= 1 has aggregates");
+        let mut out: Vec<u32> = nodes
+            .iter()
+            .flat_map(|&q| aggs[q as usize].iter().copied())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Total volume at each level (conserved across levels; used by tests
+    /// and the micro bench).
+    pub fn level_volumes(&self) -> Vec<f64> {
+        self.levels
+            .iter()
+            .map(|l| l.volumes.iter().sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn clustered(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            let c = (i % 8) as f64 * 5.0;
+            for j in 0..d {
+                m.set(i, j, (c + rng.normal()) as f32);
+            }
+        }
+        m
+    }
+
+    fn small_params() -> HierarchyParams {
+        HierarchyParams {
+            coarsest_size: 60,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builds_decreasing_levels_down_to_threshold() {
+        let pts = clustered(1000, 6, 31);
+        let h = Hierarchy::build(pts, small_params()).unwrap();
+        assert!(h.depth() >= 2, "expected multiple levels");
+        for w in h.levels.windows(2) {
+            assert!(w[1].len() < w[0].len());
+        }
+        assert!(h.coarsest().len() <= 160, "coarsest too big: {}", h.coarsest().len());
+    }
+
+    #[test]
+    fn volume_is_conserved_across_all_levels() {
+        let pts = clustered(800, 5, 32);
+        let h = Hierarchy::build(pts, small_params()).unwrap();
+        let vols = h.level_volumes();
+        for v in &vols {
+            assert!((v - 800.0).abs() < 1e-6 * 800.0, "volume drift: {vols:?}");
+        }
+    }
+
+    #[test]
+    fn small_input_yields_single_level() {
+        let pts = clustered(50, 4, 33);
+        let h = Hierarchy::build(pts, small_params()).unwrap();
+        assert_eq!(h.depth(), 1);
+        assert_eq!(h.coarsest().len(), 50);
+    }
+
+    #[test]
+    fn expand_to_finer_returns_union_of_aggregates() {
+        let pts = clustered(600, 5, 34);
+        let h = Hierarchy::build(pts, small_params()).unwrap();
+        if h.depth() < 2 {
+            return;
+        }
+        let l = h.depth() - 1;
+        let all: Vec<u32> = (0..h.levels[l].len() as u32).collect();
+        let fine = h.expand_to_finer(l, &all);
+        // expanding every coarse node covers every finer node
+        assert_eq!(fine.len(), h.levels[l - 1].len());
+        // expanding a single node gives a small non-empty set
+        let one = h.expand_to_finer(l, &[0]);
+        assert!(!one.is_empty());
+        assert!(one.len() < fine.len());
+    }
+
+    #[test]
+    fn caliber_increases_aggregate_overlap() {
+        let pts = clustered(700, 5, 35);
+        let mut p1 = small_params();
+        p1.caliber = 1;
+        let mut p4 = small_params();
+        p4.caliber = 4;
+        let h1 = Hierarchy::build(pts.clone(), p1).unwrap();
+        let h4 = Hierarchy::build(pts, p4).unwrap();
+        if h1.depth() < 2 || h4.depth() < 2 {
+            return;
+        }
+        let nnz1: usize = h1.levels[1].p.as_ref().unwrap().entries.len();
+        let nnz4: usize = h4.levels[1].p.as_ref().unwrap().entries.len();
+        assert!(
+            nnz4 > nnz1,
+            "caliber 4 should densify P: {nnz4} vs {nnz1}"
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Algebraic multigrid coarsening of affinity graphs — the heart of the
+//! paper (§3, Algorithm 1, Eq. 3–4).
+//!
+//! A hierarchy of coarse representations of one class's data manifold is
+//! built by repeatedly: (1) selecting a dominating set of *seed* nodes by
+//! future-volume ordering ([`seeds`], Algorithm 1); (2) forming the AMG
+//! interpolation operator P with bounded interpolation order / caliber R
+//! ([`interp`], Eq. 4); (3) aggregating data points, volumes and edges
+//! through P ([`coarsen`]) — coarse points are volume-weighted centroids
+//! of (fractional) aggregates, coarse edges come from the Galerkin triple
+//! product PᵀWP. [`hierarchy`] drives levels until the coarsest-size
+//! threshold.
+
+pub mod coarsen;
+pub mod future_volume;
+pub mod hierarchy;
+pub mod interp;
+pub mod seeds;
+
+pub use coarsen::{coarsen_level, CoarseLevel};
+pub use future_volume::future_volumes;
+pub use hierarchy::{Hierarchy, HierarchyParams, Level};
+pub use interp::{interpolation, InterpParams};
+pub use seeds::{select_seeds, SeedParams};

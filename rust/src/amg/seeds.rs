@@ -1,0 +1,192 @@
+//! Seed selection — Algorithm 1 of the paper.
+//!
+//! Seeds C ⊂ V_f become the centers of coarse aggregates. The algorithm:
+//!
+//! 1. C ← ∅, F ← V_f; compute future volumes ϑ (Eq. 3);
+//! 2. transfer nodes with ϑ_i > η·mean(ϑ) to C ("exceptionally large");
+//! 3. recompute ϑ over the remaining F;
+//! 4. visit F in decreasing ϑ order; move `i` to C when its coupling to
+//!    the current C is weak: Σ_{j∈C} w_ij / Σ_{j∈V} w_ij ≤ Q.
+//!
+//! Paper defaults: Q = 0.5, η = 2.
+
+use crate::amg::future_volume::{future_volumes, mean_over};
+use crate::graph::csr::CsrGraph;
+
+/// Parameters of Algorithm 1.
+#[derive(Clone, Copy, Debug)]
+pub struct SeedParams {
+    /// Coupling threshold Q: an F-node stays in F only if more than Q of
+    /// its total edge weight already points at seeds.
+    pub q: f64,
+    /// Future-volume outlier factor η.
+    pub eta: f64,
+}
+
+impl Default for SeedParams {
+    fn default() -> Self {
+        SeedParams { q: 0.5, eta: 2.0 }
+    }
+}
+
+/// Run Algorithm 1. Returns `is_seed` per node. Isolated nodes (no edges)
+/// always become seeds (their coupling ratio is 0 ≤ Q).
+pub fn select_seeds(graph: &CsrGraph, volumes: &[f64], params: SeedParams) -> Vec<bool> {
+    let n = graph.n();
+    let mut is_seed = vec![false; n];
+    if n == 0 {
+        return is_seed;
+    }
+    // Lines 1-2: all free, initial future volumes.
+    let mut free = vec![true; n];
+    let theta = future_volumes(graph, volumes, &free);
+    let mean = mean_over(&theta, &free);
+
+    // Line 3: exceptionally large future volumes seed immediately.
+    for i in 0..n {
+        if theta[i] > params.eta * mean {
+            is_seed[i] = true;
+            free[i] = false;
+        }
+    }
+
+    // Line 5: recompute ϑ over the remaining F.
+    let theta = future_volumes(graph, volumes, &free);
+
+    // Line 6: visit F in decreasing ϑ.
+    let mut order: Vec<usize> = (0..n).filter(|&i| free[i]).collect();
+    order.sort_by(|&a, &b| theta[b].partial_cmp(&theta[a]).unwrap());
+
+    // Lines 7-11.
+    for i in order {
+        let (idx, w) = graph.row(i);
+        let total: f64 = w.iter().sum();
+        let to_seeds: f64 = idx
+            .iter()
+            .zip(w)
+            .filter(|(&j, _)| is_seed[j as usize])
+            .map(|(_, &wij)| wij)
+            .sum();
+        let ratio = if total > 0.0 { to_seeds / total } else { 0.0 };
+        if ratio <= params.q {
+            is_seed[i] = true;
+            free[i] = false;
+        }
+    }
+    is_seed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng};
+
+    #[test]
+    fn star_center_becomes_seed_leaves_do_not() {
+        // Center of a big star has outlier future volume.
+        let mut edges = Vec::new();
+        for leaf in 1..=10u32 {
+            edges.push((0u32, leaf, 1.0));
+        }
+        let g = CsrGraph::from_edges(11, &edges).unwrap();
+        let seeds = select_seeds(&g, &vec![1.0; 11], SeedParams::default());
+        assert!(seeds[0], "hub must seed");
+        // All leaves are fully coupled to the hub (ratio 1 > Q): stay in F.
+        for leaf in 1..11 {
+            assert!(!seeds[leaf], "leaf {leaf} must not seed");
+        }
+    }
+
+    #[test]
+    fn every_f_node_is_coupled_to_seeds_above_q() {
+        // Invariant used by interpolation: any non-seed has > Q of its
+        // weight on seeds.
+        let mut rng = Pcg64::seed_from(8);
+        let n = 300;
+        let mut edges = Vec::new();
+        for i in 0..n as u32 {
+            for _ in 0..6 {
+                let j = rng.index(n) as u32;
+                if j != i {
+                    edges.push((i, j, 0.1 + rng.f64()));
+                }
+            }
+        }
+        let g = CsrGraph::from_edges(n, &edges).unwrap();
+        let params = SeedParams::default();
+        let seeds = select_seeds(&g, &vec![1.0; n], params);
+        for i in 0..n {
+            if seeds[i] {
+                continue;
+            }
+            let (idx, w) = g.row(i);
+            let total: f64 = w.iter().sum();
+            let to_seeds: f64 = idx
+                .iter()
+                .zip(w)
+                .filter(|(&j, _)| seeds[j as usize])
+                .map(|(_, &wij)| wij)
+                .sum();
+            assert!(
+                to_seeds / total > params.q,
+                "node {i} left in F but coupling {}",
+                to_seeds / total
+            );
+        }
+    }
+
+    #[test]
+    fn isolated_nodes_become_seeds() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 1.0)]).unwrap();
+        let seeds = select_seeds(&g, &[1.0; 3], SeedParams::default());
+        assert!(seeds[2], "isolated node must seed");
+    }
+
+    #[test]
+    fn seeds_shrink_the_set_but_not_to_zero() {
+        let mut rng = Pcg64::seed_from(9);
+        let n = 500;
+        let mut edges = Vec::new();
+        // ring + random chords: well-connected graph
+        for i in 0..n as u32 {
+            edges.push((i, (i + 1) % n as u32, 1.0));
+            let j = rng.index(n) as u32;
+            if j != i {
+                edges.push((i, j, 0.5));
+            }
+        }
+        let g = CsrGraph::from_edges(n, &edges).unwrap();
+        let seeds = select_seeds(&g, &vec![1.0; n], SeedParams::default());
+        let c = seeds.iter().filter(|&&s| s).count();
+        assert!(c > 0, "no seeds selected");
+        assert!(c < n, "everything became a seed");
+        // AMG-style coarsening should at least halve a well-connected graph
+        // ... loosely: require < 90%.
+        assert!(c < n * 9 / 10, "c={c}");
+    }
+
+    #[test]
+    fn higher_q_selects_more_seeds() {
+        let mut rng = Pcg64::seed_from(10);
+        let n = 400;
+        let mut edges = Vec::new();
+        for i in 0..n as u32 {
+            for _ in 0..5 {
+                let j = rng.index(n) as u32;
+                if j != i {
+                    edges.push((i, j, 0.1 + rng.f64()));
+                }
+            }
+        }
+        let g = CsrGraph::from_edges(n, &edges).unwrap();
+        let c_low = select_seeds(&g, &vec![1.0; n], SeedParams { q: 0.3, eta: 2.0 })
+            .iter()
+            .filter(|&&s| s)
+            .count();
+        let c_high = select_seeds(&g, &vec![1.0; n], SeedParams { q: 0.7, eta: 2.0 })
+            .iter()
+            .filter(|&&s| s)
+            .count();
+        assert!(c_high > c_low, "Q=0.7 gave {c_high} <= Q=0.3's {c_low}");
+    }
+}

@@ -1,0 +1,228 @@
+//! One-vs-rest multiclass orchestration (the paper's industrial setting:
+//! 5 survey classes, one MLWSVM per class, Table 2).
+//!
+//! Each class becomes a training job (that class = +1 minority, the rest
+//! = −1). Jobs run through a queue with per-job timing and error
+//! isolation: one degenerate class does not abort the others.
+
+use crate::data::dataset::Dataset;
+use crate::data::matrix::Matrix;
+use crate::error::{Error, Result};
+use crate::mlsvm::params::MlsvmParams;
+use crate::mlsvm::trainer::{MlsvmModel, MlsvmTrainer};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Timer;
+
+/// One finished class job.
+#[derive(Debug)]
+pub struct ClassJob {
+    /// The class id this model detects.
+    pub class_id: u8,
+    /// Trained multilevel model (None if the job failed).
+    pub model: Option<MlsvmModel>,
+    /// Failure message if the job failed.
+    pub error: Option<String>,
+    /// Wall-clock training seconds.
+    pub seconds: f64,
+    /// Training set class sizes (n_pos, n_neg).
+    pub sizes: (usize, usize),
+}
+
+/// A trained one-vs-rest ensemble.
+#[derive(Debug)]
+pub struct MulticlassModel {
+    /// Per-class jobs, in class-id order.
+    pub jobs: Vec<ClassJob>,
+}
+
+impl MulticlassModel {
+    /// Predict the class of one point: argmax of per-class decisions.
+    pub fn predict(&self, x: &[f32]) -> Option<u8> {
+        let mut best: Option<(u8, f64)> = None;
+        for job in &self.jobs {
+            let Some(model) = &job.model else { continue };
+            let d = model.model.decision(x);
+            if best.map(|(_, bd)| d > bd).unwrap_or(true) {
+                best = Some((job.class_id, d));
+            }
+        }
+        best.map(|(c, _)| c)
+    }
+
+    /// Batch prediction.
+    pub fn predict_batch(&self, xs: &Matrix) -> Vec<Option<u8>> {
+        (0..xs.rows()).map(|i| self.predict(xs.row(i))).collect()
+    }
+
+    /// Per-class one-vs-rest accuracy/κ against true class ids.
+    pub fn evaluate_class(&self, class_id: u8, xs: &Matrix, truth: &[u8]) -> crate::metrics::Metrics {
+        let job = self
+            .jobs
+            .iter()
+            .find(|j| j.class_id == class_id)
+            .expect("class id");
+        let model = job.model.as_ref().expect("trained model");
+        let mut m = crate::metrics::Metrics::default();
+        for i in 0..xs.rows() {
+            let t = if truth[i] == class_id { 1 } else { -1 };
+            let p = model.model.predict_label(xs.row(i));
+            m.push(t, p);
+        }
+        m
+    }
+}
+
+/// Trains one MLWSVM per class over a shared point set.
+pub struct OneVsRestTrainer {
+    /// Framework parameters applied to every class job.
+    pub params: MlsvmParams,
+    /// Log progress lines to stderr.
+    pub verbose: bool,
+}
+
+impl OneVsRestTrainer {
+    /// New trainer with the given per-job parameters.
+    pub fn new(params: MlsvmParams) -> Self {
+        OneVsRestTrainer {
+            params,
+            verbose: false,
+        }
+    }
+
+    /// Run all class jobs sequentially (the job queue; single-device
+    /// testbed) and return the ensemble.
+    pub fn train(
+        &self,
+        points: &Matrix,
+        class_ids: &[u8],
+        classes: &[u8],
+        rng: &mut Pcg64,
+    ) -> Result<MulticlassModel> {
+        if points.rows() != class_ids.len() {
+            return Err(Error::invalid("jobs: class id count mismatch"));
+        }
+        let mut jobs = Vec::with_capacity(classes.len());
+        for &c in classes {
+            let labels: Vec<i8> = class_ids
+                .iter()
+                .map(|&k| if k == c { 1 } else { -1 })
+                .collect();
+            let n_pos = labels.iter().filter(|&&l| l == 1).count();
+            let sizes = (n_pos, labels.len() - n_pos);
+            let t = Timer::start();
+            let result = Dataset::new(points.clone(), labels).and_then(|ds| {
+                MlsvmTrainer::new(self.params.clone().with_seed(self.params.seed ^ c as u64))
+                    .train(&ds, rng)
+            });
+            let seconds = t.secs();
+            let (model, error) = match result {
+                Ok(m) => (Some(m), None),
+                Err(e) => (None, Some(e.to_string())),
+            };
+            if self.verbose {
+                eprintln!(
+                    "[jobs] class {c}: n+={} n-={} {:.1}s {}",
+                    sizes.0,
+                    sizes.1,
+                    seconds,
+                    error.as_deref().unwrap_or("ok")
+                );
+            }
+            jobs.push(ClassJob {
+                class_id: c,
+                model,
+                error,
+                seconds,
+                sizes,
+            });
+        }
+        Ok(MulticlassModel { jobs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelsel::search::UdSearchConfig;
+    use crate::util::rng::Rng;
+
+    /// Three well-separated classes in 4-D.
+    fn three_classes(n_per: usize, seed: u64) -> (Matrix, Vec<u8>) {
+        let mut rng = Pcg64::seed_from(seed);
+        let n = 3 * n_per;
+        let mut m = Matrix::zeros(n, 4);
+        let mut ids = Vec::with_capacity(n);
+        for c in 0..3u8 {
+            for i in 0..n_per {
+                let row = m.row_mut(c as usize * n_per + i);
+                for (j, r) in row.iter_mut().enumerate() {
+                    let center = if j == c as usize { 6.0 } else { 0.0 };
+                    *r = (center + rng.normal()) as f32;
+                }
+                ids.push(c);
+            }
+        }
+        (m, ids)
+    }
+
+    fn quick_params() -> MlsvmParams {
+        MlsvmParams {
+            hierarchy: crate::amg::hierarchy::HierarchyParams {
+                coarsest_size: 50,
+                ..Default::default()
+            },
+            qdt: 300,
+            ud: UdSearchConfig {
+                stage1_points: 5,
+                stage2_points: 5,
+                folds: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn one_vs_rest_learns_all_classes() {
+        let (m, ids) = three_classes(120, 101);
+        let mut rng = Pcg64::seed_from(1);
+        let trainer = OneVsRestTrainer::new(quick_params());
+        let model = trainer.train(&m, &ids, &[0, 1, 2], &mut rng).unwrap();
+        assert_eq!(model.jobs.len(), 3);
+        assert!(model.jobs.iter().all(|j| j.model.is_some()));
+        let preds = model.predict_batch(&m);
+        let correct = preds
+            .iter()
+            .zip(&ids)
+            .filter(|(p, t)| p.map(|c| c == **t).unwrap_or(false))
+            .count();
+        let acc = correct as f64 / ids.len() as f64;
+        assert!(acc > 0.9, "multiclass acc={acc}");
+    }
+
+    #[test]
+    fn per_class_evaluation_reports_binary_metrics() {
+        let (m, ids) = three_classes(100, 102);
+        let mut rng = Pcg64::seed_from(2);
+        let model = OneVsRestTrainer::new(quick_params())
+            .train(&m, &ids, &[0, 1, 2], &mut rng)
+            .unwrap();
+        let met = model.evaluate_class(1, &m, &ids);
+        assert!(met.gmean() > 0.85, "class-1 κ = {}", met.gmean());
+    }
+
+    #[test]
+    fn failed_class_is_isolated() {
+        // class 3 never appears -> its job degenerates but others succeed
+        let (m, ids) = three_classes(80, 103);
+        let mut rng = Pcg64::seed_from(3);
+        let model = OneVsRestTrainer::new(quick_params())
+            .train(&m, &ids, &[0, 7], &mut rng)
+            .unwrap();
+        assert!(model.jobs[0].model.is_some());
+        assert!(model.jobs[1].model.is_none());
+        assert!(model.jobs[1].error.is_some());
+        // prediction still works from the surviving class
+        assert!(model.predict(m.row(0)).is_some());
+    }
+}

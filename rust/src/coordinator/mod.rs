@@ -1,0 +1,20 @@
+//! Layer-3 coordination: multiclass training orchestration, a dynamic
+//! batching prediction router over the PJRT decision artifact, and report
+//! formatting for the benchmark harness.
+//!
+//! * [`jobs`] — one-vs-rest multiclass training (the BMW Table-2 setting:
+//!   5 survey classes, one MLWSVM per class) with a job queue, per-job
+//!   timing and argmax-of-decision prediction;
+//! * [`router`] — a request router that accumulates prediction requests
+//!   and flushes them in artifact-sized batches (size- or deadline-
+//!   triggered), in the spirit of serving-system dynamic batchers;
+//! * [`report`] — column-aligned table rendering for the Table-1/2/3
+//!   harnesses.
+
+pub mod jobs;
+pub mod report;
+pub mod router;
+
+pub use jobs::{MulticlassModel, OneVsRestTrainer};
+pub use report::Table;
+pub use router::{Router, RouterStats};

@@ -1,0 +1,101 @@
+//! Column-aligned plain-text tables for the benchmark harness (the
+//! Table-1/2/3 regenerators print through this).
+
+/// A simple table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Start a table with the given column headers.
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header width).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with aligned columns and a separator under the header.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (j, c) in row.iter().enumerate() {
+                widths[j] = widths[j].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for j in 0..ncol {
+                if j > 0 {
+                    s.push_str("  ");
+                }
+                let c = &cells[j];
+                s.push_str(c);
+                for _ in c.chars().count()..widths[j] {
+                    s.push(' ');
+                }
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds like the paper's Time columns (integer seconds, or one
+/// decimal under 10s).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 10.0 {
+        format!("{:.0}", s)
+    } else {
+        format!("{:.1}", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_columns() {
+        let mut t = Table::new(&["Name", "κ", "Time"]);
+        t.row(vec!["Forest".into(), "0.90".into(), "479".into()]);
+        t.row(vec!["Hypothyroid-long".into(), "0.91".into(), "3".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all rows align on the κ column
+        let kpos = lines[0].find('κ').unwrap();
+        assert_eq!(&lines[2][kpos..kpos + 4], "0.90");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn seconds_formatting() {
+        assert_eq!(fmt_secs(479.4), "479");
+        assert_eq!(fmt_secs(2.34), "2.3");
+    }
+}

@@ -1,0 +1,282 @@
+//! Dynamic-batching prediction router.
+//!
+//! Serving-system pattern (vLLM-router flavored, scaled to this system):
+//! individual prediction requests accumulate in a queue and are flushed
+//! through the PJRT `decision` artifact in batches, triggered by either
+//! (a) the batch filling to the artifact's query capacity, or (b) a
+//! deadline expiring. Batching amortizes PJRT dispatch overhead and keeps
+//! the MXU-shaped kernel busy; the deadline bounds tail latency.
+//!
+//! Single-threaded by design (single-device testbed): `submit` enqueues,
+//! `poll`/`flush` drive execution, `take` collects results.
+
+use crate::data::matrix::Matrix;
+use crate::error::Result;
+use crate::runtime::client::Runtime;
+use crate::runtime::rbf::PjrtDecision;
+use crate::svm::model::SvmModel;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Router counters (perf instrumentation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouterStats {
+    /// Requests submitted.
+    pub requests: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Batches triggered by the deadline (vs size).
+    pub deadline_flushes: u64,
+    /// Total padded slots executed (utilization = requests / slots).
+    pub slots: u64,
+}
+
+impl RouterStats {
+    /// Fraction of executed batch slots that carried real requests.
+    pub fn utilization(&self) -> f64 {
+        if self.slots == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.slots as f64
+        }
+    }
+}
+
+/// Execution backend for a flush.
+enum Backend {
+    /// PJRT decision artifact.
+    Pjrt(PjrtDecision),
+    /// Pure-rust fallback (no artifacts available).
+    Rust(SvmModel),
+}
+
+/// A dynamic-batching decision-function router.
+pub struct Router {
+    backend: Backend,
+    max_batch: usize,
+    max_wait: Duration,
+    pending: Vec<(u64, Vec<f32>)>,
+    oldest: Option<Instant>,
+    results: HashMap<u64, f64>,
+    next_id: u64,
+    /// Counters.
+    pub stats: RouterStats,
+}
+
+impl Router {
+    /// Router over the PJRT artifact (batch = artifact query capacity).
+    pub fn new_pjrt(rt: &Runtime, model: &SvmModel, max_wait: Duration) -> Result<Router> {
+        let dec = PjrtDecision::new(rt, model)?;
+        let max_batch = dec.batch_size();
+        Ok(Router {
+            backend: Backend::Pjrt(dec),
+            max_batch,
+            max_wait,
+            pending: Vec::new(),
+            oldest: None,
+            results: HashMap::new(),
+            next_id: 0,
+            stats: RouterStats::default(),
+        })
+    }
+
+    /// Pure-rust fallback router (used when artifacts are absent).
+    pub fn new_rust(model: SvmModel, max_batch: usize, max_wait: Duration) -> Router {
+        Router {
+            backend: Backend::Rust(model),
+            max_batch: max_batch.max(1),
+            max_wait,
+            pending: Vec::new(),
+            oldest: None,
+            results: HashMap::new(),
+            next_id: 0,
+            stats: RouterStats::default(),
+        }
+    }
+
+    /// Enqueue a prediction request; returns its ticket.
+    pub fn submit(&mut self, x: &[f32]) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push((id, x.to_vec()));
+        self.stats.requests += 1;
+        id
+    }
+
+    /// Number of queued requests.
+    pub fn queued(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Execute pending batches that are due (full batch, or deadline hit).
+    /// Call this from the event loop; returns the number of batches run.
+    pub fn poll(&mut self, rt: &mut Runtime) -> Result<usize> {
+        let mut ran = 0usize;
+        while self.pending.len() >= self.max_batch {
+            self.run_batch(rt, false)?;
+            ran += 1;
+        }
+        if !self.pending.is_empty() {
+            if let Some(t0) = self.oldest {
+                if t0.elapsed() >= self.max_wait {
+                    self.run_batch(rt, true)?;
+                    ran += 1;
+                }
+            }
+        }
+        Ok(ran)
+    }
+
+    /// Force-execute everything queued.
+    pub fn flush(&mut self, rt: &mut Runtime) -> Result<()> {
+        while !self.pending.is_empty() {
+            self.run_batch(rt, false)?;
+        }
+        Ok(())
+    }
+
+    /// Collect a finished result.
+    pub fn take(&mut self, id: u64) -> Option<f64> {
+        self.results.remove(&id)
+    }
+
+    /// Force-execute everything queued on the rust fallback backend
+    /// (no runtime needed; errors if this router uses the PJRT backend).
+    pub fn flush_local(&mut self) -> Result<()> {
+        if matches!(self.backend, Backend::Pjrt(_)) {
+            return Err(crate::error::Error::Runtime(
+                "flush_local on a PJRT router; use flush(rt)".into(),
+            ));
+        }
+        while !self.pending.is_empty() {
+            self.run_batch_inner(None, false)?;
+        }
+        Ok(())
+    }
+
+    fn run_batch(&mut self, rt: &mut Runtime, deadline: bool) -> Result<()> {
+        self.run_batch_inner(Some(rt), deadline)
+    }
+
+    fn run_batch_inner(&mut self, rt: Option<&mut Runtime>, deadline: bool) -> Result<()> {
+        let take = self.pending.len().min(self.max_batch);
+        let batch: Vec<(u64, Vec<f32>)> = self.pending.drain(..take).collect();
+        self.oldest = if self.pending.is_empty() {
+            None
+        } else {
+            Some(Instant::now())
+        };
+        let dim = batch[0].1.len();
+        let mut m = Matrix::zeros(batch.len(), dim);
+        for (r, (_, x)) in batch.iter().enumerate() {
+            m.row_mut(r).copy_from_slice(x);
+        }
+        let vals = match (&self.backend, rt) {
+            (Backend::Pjrt(dec), Some(rt)) => dec.decision_batch(rt, &m)?,
+            (Backend::Pjrt(_), None) => {
+                return Err(crate::error::Error::Runtime(
+                    "PJRT router flushed without a runtime".into(),
+                ))
+            }
+            (Backend::Rust(model), _) => model.decision_batch(&m),
+        };
+        for ((id, _), v) in batch.iter().zip(vals) {
+            self.results.insert(*id, v);
+        }
+        self.stats.batches += 1;
+        self.stats.slots += self.max_batch as u64;
+        if deadline {
+            self.stats.deadline_flushes += 1;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+    use crate::svm::kernel::KernelKind;
+    use crate::svm::smo::{train, SvmParams};
+    use crate::util::rng::Pcg64;
+
+    fn fixture() -> (SvmModel, crate::data::dataset::Dataset) {
+        let mut rng = Pcg64::seed_from(111);
+        let ds = two_gaussians(120, 80, 5, 3.0, &mut rng);
+        let p = SvmParams {
+            kernel: KernelKind::Rbf { gamma: 0.2 },
+            ..Default::default()
+        };
+        (train(&ds.points, &ds.labels, &p).unwrap(), ds)
+    }
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(Runtime::new(dir).unwrap())
+        } else {
+            eprintln!("skipping: no artifacts");
+            None
+        }
+    }
+
+    #[test]
+    fn size_triggered_batching_matches_direct_decisions() {
+        let Some(mut rt) = runtime() else { return };
+        let (model, ds) = fixture();
+        let mut router = Router::new_pjrt(&rt, &model, Duration::from_secs(3600)).unwrap();
+        let mut tickets = Vec::new();
+        for i in 0..ds.len() {
+            tickets.push((i, router.submit(ds.points.row(i))));
+            router.poll(&mut rt).unwrap();
+        }
+        router.flush(&mut rt).unwrap();
+        for (i, t) in tickets {
+            let got = router.take(t).expect("result ready");
+            let want = model.decision(ds.points.row(i));
+            assert!((got - want).abs() < 1e-3 * want.abs().max(1.0));
+        }
+        assert!(router.stats.batches >= 1);
+        assert_eq!(router.stats.requests, ds.len() as u64);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batches() {
+        let Some(mut rt) = runtime() else { return };
+        let (model, ds) = fixture();
+        let mut router = Router::new_pjrt(&rt, &model, Duration::from_millis(0)).unwrap();
+        let t = router.submit(ds.points.row(0));
+        // deadline 0 → poll must flush immediately despite batch of 1
+        router.poll(&mut rt).unwrap();
+        assert!(router.take(t).is_some());
+        assert_eq!(router.stats.deadline_flushes, 1);
+        assert!(router.stats.utilization() < 0.05);
+    }
+
+    #[test]
+    fn rust_fallback_router_works_without_artifacts() {
+        let (model, ds) = fixture();
+        let mut router = Router::new_rust(model.clone(), 16, Duration::from_secs(1));
+        let ids: Vec<u64> = (0..40).map(|i| router.submit(ds.points.row(i))).collect();
+        router.flush_local().unwrap();
+        for (i, id) in ids.iter().enumerate() {
+            let got = router.take(*id).unwrap();
+            let want = model.decision(ds.points.row(i));
+            assert!((got - want).abs() < 1e-9);
+        }
+        assert_eq!(router.stats.batches, 3); // 40 requests / 16 per batch
+    }
+
+    #[test]
+    fn flush_local_rejected_on_pjrt_backend() {
+        let Some(rt) = runtime() else { return };
+        let (model, _) = fixture();
+        let mut router = Router::new_pjrt(&rt, &model, Duration::from_secs(1)).unwrap();
+        assert!(router.flush_local().is_err() == false || router.queued() == 0);
+        router.submit(&[0.0; 5]);
+        assert!(router.flush_local().is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal CSV loader for dense numeric data with the label in a chosen
+//! column. Handles comments (`#`), blank lines and an optional header row.
+
+use crate::data::dataset::Dataset;
+use crate::data::matrix::Matrix;
+use crate::error::{Error, Result};
+use std::io::BufRead;
+use std::path::Path;
+
+/// Options for [`parse`].
+#[derive(Clone, Copy, Debug)]
+pub struct CsvOptions {
+    /// Column index holding the label (after splitting by `sep`). Negative
+    /// values index from the end (-1 = last column).
+    pub label_col: isize,
+    /// Field separator.
+    pub sep: char,
+    /// Skip the first non-comment line.
+    pub has_header: bool,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        CsvOptions {
+            label_col: -1,
+            sep: ',',
+            has_header: false,
+        }
+    }
+}
+
+/// Parse CSV text into a dataset. Labels > 0 map to +1, the rest to -1.
+pub fn parse(reader: impl BufRead, opts: CsvOptions) -> Result<Dataset> {
+    let mut points = Matrix::zeros(0, 0);
+    let mut labels = Vec::new();
+    let mut header_skipped = !opts.has_header;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if !header_skipped {
+            header_skipped = true;
+            continue;
+        }
+        let fields: Vec<&str> = line.split(opts.sep).map(|f| f.trim()).collect();
+        let ncol = fields.len();
+        let label_idx = if opts.label_col < 0 {
+            let from_end = (-opts.label_col) as usize;
+            if from_end > ncol {
+                return Err(Error::Parse {
+                    line: lineno + 1,
+                    msg: format!("label column {} out of range", opts.label_col),
+                });
+            }
+            ncol - from_end
+        } else {
+            opts.label_col as usize
+        };
+        if label_idx >= ncol {
+            return Err(Error::Parse {
+                line: lineno + 1,
+                msg: format!("label column {label_idx} out of range ({ncol} fields)"),
+            });
+        }
+        let mut feats = Vec::with_capacity(ncol - 1);
+        let mut label = 0i8;
+        for (i, f) in fields.iter().enumerate() {
+            let v: f64 = f.parse().map_err(|_| Error::Parse {
+                line: lineno + 1,
+                msg: format!("bad number '{f}'"),
+            })?;
+            if i == label_idx {
+                label = if v > 0.0 { 1 } else { -1 };
+            } else {
+                feats.push(v as f32);
+            }
+        }
+        points.push_row(&feats).map_err(|e| Error::Parse {
+            line: lineno + 1,
+            msg: e.to_string(),
+        })?;
+        labels.push(label);
+    }
+    Dataset::new(points, labels)
+}
+
+/// Load a CSV file from disk.
+pub fn load(path: impl AsRef<Path>, opts: CsvOptions) -> Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    parse(std::io::BufReader::new(f), opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_label_last() {
+        let ds = parse(Cursor::new("1.0,2.0,1\n3.0,4.0,-1\n"), CsvOptions::default()).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.labels, vec![1, -1]);
+        assert_eq!(ds.points.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn parses_label_first_with_header() {
+        let opts = CsvOptions {
+            label_col: 0,
+            has_header: true,
+            ..Default::default()
+        };
+        let ds = parse(Cursor::new("y,x1\n1,5.0\n-1,6.0\n"), opts).unwrap();
+        assert_eq!(ds.labels, vec![1, -1]);
+        assert_eq!(ds.points.row(0), &[5.0]);
+    }
+
+    #[test]
+    fn ragged_rows_error() {
+        assert!(parse(Cursor::new("1,2,1\n1,1\n"), CsvOptions::default()).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors_with_line() {
+        match parse(Cursor::new("1,x,1\n"), CsvOptions::default()) {
+            Err(Error::Parse { line, .. }) => assert_eq!(line, 1),
+            other => panic!("expected parse error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! Labeled dataset: points + binary labels (+ per-point volumes at coarse
+//! levels of the AMG hierarchy).
+//!
+//! Labels follow the paper's convention: `+1` is the minority class C⁺,
+//! `-1` the majority class C⁻ (not enforced — [`Dataset::imbalance`]
+//! reports the actual ratio).
+
+use crate::data::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// A labeled (optionally volume-weighted) dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Data points, one per row.
+    pub points: Matrix,
+    /// Class labels in {-1, +1}.
+    pub labels: Vec<i8>,
+    /// AMG volumes (importance / capacity). All 1 at the finest level.
+    pub volumes: Vec<f64>,
+}
+
+impl Dataset {
+    /// Build a dataset with unit volumes.
+    pub fn new(points: Matrix, labels: Vec<i8>) -> Result<Self> {
+        if points.rows() != labels.len() {
+            return Err(Error::invalid(format!(
+                "dataset: {} points but {} labels",
+                points.rows(),
+                labels.len()
+            )));
+        }
+        if let Some(bad) = labels.iter().find(|&&l| l != 1 && l != -1) {
+            return Err(Error::invalid(format!("label {bad} not in {{-1,+1}}")));
+        }
+        let n = labels.len();
+        Ok(Dataset {
+            points,
+            labels,
+            volumes: vec![1.0; n],
+        })
+    }
+
+    /// Build with explicit volumes (coarse levels).
+    pub fn with_volumes(points: Matrix, labels: Vec<i8>, volumes: Vec<f64>) -> Result<Self> {
+        if points.rows() != volumes.len() {
+            return Err(Error::invalid("dataset: volume count mismatch"));
+        }
+        let mut ds = Dataset::new(points, labels)?;
+        ds.volumes = volumes;
+        Ok(ds)
+    }
+
+    /// Number of points.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when the dataset has no points.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Number of features.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.points.cols()
+    }
+
+    /// Indices of the minority (+1) class.
+    pub fn positives(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.labels[i] == 1).collect()
+    }
+
+    /// Indices of the majority (-1) class.
+    pub fn negatives(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.labels[i] == -1).collect()
+    }
+
+    /// Count of +1 labels.
+    pub fn n_pos(&self) -> usize {
+        self.labels.iter().filter(|&&l| l == 1).count()
+    }
+
+    /// Count of -1 labels.
+    pub fn n_neg(&self) -> usize {
+        self.len() - self.n_pos()
+    }
+
+    /// Imbalance factor r_imb = max(n+, n-) / n, as reported in Table 1.
+    pub fn imbalance(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let p = self.n_pos();
+        p.max(self.len() - p) as f64 / self.len() as f64
+    }
+
+    /// Subset by indices (points, labels and volumes).
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            points: self.points.select_rows(idx),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+            volumes: idx.iter().map(|&i| self.volumes[i]).collect(),
+        }
+    }
+
+    /// Split into (minority C⁺, majority C⁻) datasets, returning the
+    /// original indices of each side as well.
+    pub fn split_classes(&self) -> (Dataset, Vec<usize>, Dataset, Vec<usize>) {
+        let pos = self.positives();
+        let neg = self.negatives();
+        (self.select(&pos), pos, self.select(&neg), neg)
+    }
+
+    /// Concatenate two datasets (same dimensionality).
+    pub fn concat(&self, other: &Dataset) -> Result<Dataset> {
+        let points = self.points.vstack(&other.points)?;
+        let mut labels = self.labels.clone();
+        labels.extend_from_slice(&other.labels);
+        let mut volumes = self.volumes.clone();
+        volumes.extend_from_slice(&other.volumes);
+        Dataset::with_volumes(points, labels, volumes)
+    }
+
+    /// Sanity check used by integration tests: finite features, labels in
+    /// {-1,1}, positive volumes.
+    pub fn validate(&self) -> Result<()> {
+        if self.points.rows() != self.labels.len() || self.labels.len() != self.volumes.len() {
+            return Err(Error::invalid("dataset: length mismatch"));
+        }
+        if self.points.as_slice().iter().any(|v| !v.is_finite()) {
+            return Err(Error::invalid("dataset: non-finite feature"));
+        }
+        if self.volumes.iter().any(|&v| !(v > 0.0)) {
+            return Err(Error::invalid("dataset: non-positive volume"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let m = Matrix::from_vec(4, 2, vec![0., 0., 1., 0., 0., 1., 5., 5.]).unwrap();
+        Dataset::new(m, vec![1, -1, -1, -1]).unwrap()
+    }
+
+    #[test]
+    fn counts_and_imbalance() {
+        let ds = toy();
+        assert_eq!(ds.n_pos(), 1);
+        assert_eq!(ds.n_neg(), 3);
+        assert!((ds.imbalance() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_labels() {
+        let m = Matrix::zeros(1, 1);
+        assert!(Dataset::new(m, vec![0]).is_err());
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        let m = Matrix::zeros(2, 1);
+        assert!(Dataset::new(m, vec![1]).is_err());
+    }
+
+    #[test]
+    fn split_classes_partitions() {
+        let ds = toy();
+        let (pos, pi, neg, ni) = ds.split_classes();
+        assert_eq!(pos.len(), 1);
+        assert_eq!(neg.len(), 3);
+        assert_eq!(pi, vec![0]);
+        assert_eq!(ni, vec![1, 2, 3]);
+        assert!(pos.labels.iter().all(|&l| l == 1));
+        assert!(neg.labels.iter().all(|&l| l == -1));
+    }
+
+    #[test]
+    fn select_keeps_volumes() {
+        let mut ds = toy();
+        ds.volumes = vec![1.0, 2.0, 3.0, 4.0];
+        let s = ds.select(&[3, 1]);
+        assert_eq!(s.volumes, vec![4.0, 2.0]);
+        assert_eq!(s.labels, vec![-1, -1]);
+    }
+
+    #[test]
+    fn concat_roundtrips_split() {
+        let ds = toy();
+        let (pos, _, neg, _) = ds.split_classes();
+        let back = pos.concat(&neg).unwrap();
+        assert_eq!(back.len(), ds.len());
+        assert_eq!(back.n_pos(), ds.n_pos());
+    }
+
+    #[test]
+    fn validate_catches_nan() {
+        let mut ds = toy();
+        ds.points.set(0, 0, f32::NAN);
+        assert!(ds.validate().is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Reader/writer for the LibSVM sparse text format:
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//!
+//! Indices are 1-based; missing indices are zeros. Labels are mapped to
+//! {-1,+1}: any label > 0 becomes +1, the rest -1 (the paper's binary /
+//! one-vs-rest setting).
+
+use crate::data::dataset::Dataset;
+use crate::data::matrix::Matrix;
+use crate::error::{Error, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Parse LibSVM-format text into a dense [`Dataset`].
+pub fn parse(reader: impl BufRead) -> Result<Dataset> {
+    let mut rows: Vec<(i8, Vec<(usize, f32)>)> = Vec::new();
+    let mut max_index = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().ok_or(Error::Parse {
+            line: lineno + 1,
+            msg: "empty line".into(),
+        })?;
+        let label_val: f64 = label_tok.parse().map_err(|_| Error::Parse {
+            line: lineno + 1,
+            msg: format!("bad label '{label_tok}'"),
+        })?;
+        let label: i8 = if label_val > 0.0 { 1 } else { -1 };
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok.split_once(':').ok_or(Error::Parse {
+                line: lineno + 1,
+                msg: format!("expected index:value, got '{tok}'"),
+            })?;
+            let idx: usize = idx.parse().map_err(|_| Error::Parse {
+                line: lineno + 1,
+                msg: format!("bad index '{idx}'"),
+            })?;
+            if idx == 0 {
+                return Err(Error::Parse {
+                    line: lineno + 1,
+                    msg: "libsvm indices are 1-based".into(),
+                });
+            }
+            let val: f32 = val.parse().map_err(|_| Error::Parse {
+                line: lineno + 1,
+                msg: format!("bad value '{val}'"),
+            })?;
+            max_index = max_index.max(idx);
+            feats.push((idx - 1, val));
+        }
+        rows.push((label, feats));
+    }
+    let n = rows.len();
+    let d = max_index;
+    let mut points = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    for (i, (label, feats)) in rows.into_iter().enumerate() {
+        labels.push(label);
+        let row = points.row_mut(i);
+        for (j, v) in feats {
+            row[j] = v;
+        }
+    }
+    Dataset::new(points, labels)
+}
+
+/// Load a LibSVM file from disk.
+pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    parse(std::io::BufReader::new(f))
+}
+
+/// Write a dataset in LibSVM format (zeros omitted).
+pub fn save(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for i in 0..ds.len() {
+        write!(w, "{}", if ds.labels[i] == 1 { "+1" } else { "-1" })?;
+        for (j, &v) in ds.points.row(i).iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v)?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n# comment\n\n+1 1:1\n";
+        let ds = parse(Cursor::new(text)).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.labels, vec![1, -1, 1]);
+        assert_eq!(ds.points.row(0), &[0.5, 0.0, 1.5]);
+        assert_eq!(ds.points.row(1), &[0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn maps_multiclass_labels_to_binary() {
+        let ds = parse(Cursor::new("3 1:1\n0 1:2\n-2 1:3\n")).unwrap();
+        assert_eq!(ds.labels, vec![1, -1, -1]);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse(Cursor::new("+1 0:1.0\n")).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse(Cursor::new("+1 nocolon\n")).is_err());
+        assert!(parse(Cursor::new("notalabel 1:2\n")).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 0., 2., 0., 0.5, 0.]).unwrap();
+        let ds = Dataset::new(m, vec![1, -1]).unwrap();
+        let dir = std::env::temp_dir().join("mlsvm_libsvm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.svm");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.points, ds.points);
+    }
+}

@@ -1,0 +1,302 @@
+//! Dense row-major `f32` matrix.
+//!
+//! This is the in-memory format for data points throughout the library
+//! (rows = points, columns = features). `f32` matches the JAX/PJRT
+//! artifacts; accumulations that need precision use `f64` internally.
+
+use crate::error::{Error, Result};
+
+/// Dense row-major matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Build from a flat row-major buffer. `data.len()` must equal
+    /// `rows * cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::invalid(format!(
+                "matrix buffer has {} elements, expected {}x{}={}",
+                data.len(),
+                rows,
+                cols,
+                rows * cols
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from row slices (all must share one length).
+    pub fn from_rows(rows: &[&[f32]]) -> Result<Self> {
+        if rows.is_empty() {
+            return Ok(Matrix::zeros(0, 0));
+        }
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != cols {
+                return Err(Error::invalid(format!(
+                    "row {i} has {} columns, expected {cols}",
+                    r.len()
+                )));
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(Matrix {
+            rows: rows.len(),
+            cols,
+            data,
+        })
+    }
+
+    /// Number of rows (data points).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (features).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Flat row-major buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Flat mutable buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Gather the given rows into a new matrix (row order preserved).
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Append a row (must match `cols`, unless the matrix is empty).
+    pub fn push_row(&mut self, row: &[f32]) -> Result<()> {
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = row.len();
+        }
+        if row.len() != self.cols {
+            return Err(Error::invalid(format!(
+                "push_row: row has {} columns, expected {}",
+                row.len(),
+                self.cols
+            )));
+        }
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+        Ok(())
+    }
+
+    /// Squared Euclidean distance between rows `i` of `self` and `j` of `other`.
+    #[inline]
+    pub fn sqdist(&self, i: usize, other: &Matrix, j: usize) -> f64 {
+        sqdist(self.row(i), other.row(j))
+    }
+
+    /// Squared L2 norm of each row (f64 accumulation).
+    pub fn row_sqnorms(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum())
+            .collect()
+    }
+
+    /// Matrix–transpose product `self * other^T` into a dense `f32` buffer
+    /// (rows(self) x rows(other)), with f32 accumulation in blocked loops.
+    /// Used by the pure-rust kernel backend.
+    pub fn mul_transpose(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.cols {
+            return Err(Error::invalid(format!(
+                "mul_transpose: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let m = self.rows;
+        let n = other.rows;
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a = self.row(i);
+            let orow = out.row_mut(i);
+            for j in 0..n {
+                orow[j] = dot(a, other.row(j));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Vertically stack two matrices with equal column counts.
+    pub fn vstack(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.cols && self.rows != 0 && other.rows != 0 {
+            return Err(Error::invalid("vstack: column mismatch".to_string()));
+        }
+        let cols = if self.rows == 0 { other.cols } else { self.cols };
+        let mut data = Vec::with_capacity((self.rows + other.rows) * cols);
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Ok(Matrix {
+            rows: self.rows + other.rows,
+            cols,
+            data,
+        })
+    }
+}
+
+/// Dot product with f32 accumulation, 4-way unrolled.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Squared Euclidean distance between two feature vectors (f64 accumulation).
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        s += d * d;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.get(0, 2), 3.0);
+    }
+
+    #[test]
+    fn from_vec_rejects_bad_len() {
+        assert!(Matrix::from_vec(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn from_rows_rejects_ragged() {
+        let r1 = [1.0f32, 2.0];
+        let r2 = [3.0f32];
+        assert!(Matrix::from_rows(&[&r1, &r2]).is_err());
+    }
+
+    #[test]
+    fn select_rows_gathers() {
+        let m = Matrix::from_vec(3, 2, vec![0., 0., 1., 1., 2., 2.]).unwrap();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[2., 2.]);
+        assert_eq!(s.row(1), &[0., 0.]);
+    }
+
+    #[test]
+    fn push_row_grows_and_validates() {
+        let mut m = Matrix::zeros(0, 0);
+        m.push_row(&[1.0, 2.0]).unwrap();
+        m.push_row(&[3.0, 4.0]).unwrap();
+        assert!(m.push_row(&[5.0]).is_err());
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+    }
+
+    #[test]
+    fn sqdist_matches_manual() {
+        let a = [0.0f32, 3.0];
+        let b = [4.0f32, 0.0];
+        assert!((sqdist(&a, &b) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn mul_transpose_small() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1., 0., 0., 1.]).unwrap();
+        let c = a.mul_transpose(&b).unwrap();
+        // a * I^T = a
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn vstack_combines() {
+        let a = Matrix::from_vec(1, 2, vec![1., 2.]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![3., 4., 5., 6.]).unwrap();
+        let c = a.vstack(&b).unwrap();
+        assert_eq!(c.rows(), 3);
+        assert_eq!(c.row(2), &[5., 6.]);
+    }
+}

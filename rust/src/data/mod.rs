@@ -1,0 +1,15 @@
+//! Data substrate: dense matrices, labeled datasets, file IO, feature
+//! scaling, train/test splitting and k-fold CV, synthetic workload
+//! generators, and a randomized SVD for dimensionality reduction.
+//!
+//! The paper builds on PETSc containers + UCI/industrial files; this module
+//! is the from-scratch equivalent.
+
+pub mod csv;
+pub mod dataset;
+pub mod libsvm;
+pub mod matrix;
+pub mod scale;
+pub mod split;
+pub mod svd;
+pub mod synth;

@@ -1,0 +1,115 @@
+//! Feature scaling. (W)SVM with RBF kernels is scale-sensitive, so all
+//! pipelines z-score features on the training split and apply the same
+//! transform to test data (the paper follows standard LibSVM practice).
+
+use crate::data::dataset::Dataset;
+use crate::data::matrix::Matrix;
+
+/// Per-feature affine transform fitted on training data.
+#[derive(Clone, Debug)]
+pub struct Scaler {
+    /// Per-feature means.
+    pub mean: Vec<f64>,
+    /// Per-feature standard deviations (zero-variance features get 1.0 so
+    /// the transform is a no-op for them).
+    pub std: Vec<f64>,
+}
+
+impl Scaler {
+    /// Fit means/stds on the given matrix.
+    pub fn fit(points: &Matrix) -> Scaler {
+        let n = points.rows().max(1);
+        let d = points.cols();
+        let mut mean = vec![0.0f64; d];
+        for i in 0..points.rows() {
+            for (j, &v) in points.row(i).iter().enumerate() {
+                mean[j] += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        let mut var = vec![0.0f64; d];
+        for i in 0..points.rows() {
+            for (j, &v) in points.row(i).iter().enumerate() {
+                let dlt = v as f64 - mean[j];
+                var[j] += dlt * dlt;
+            }
+        }
+        let std = var
+            .into_iter()
+            .map(|v| {
+                let s = (v / n as f64).sqrt();
+                if s > 1e-12 {
+                    s
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Scaler { mean, std }
+    }
+
+    /// Apply the transform in place.
+    pub fn transform(&self, points: &mut Matrix) {
+        for i in 0..points.rows() {
+            let row = points.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = ((*v as f64 - self.mean[j]) / self.std[j]) as f32;
+            }
+        }
+    }
+
+    /// Fit on `train.points`, transform both datasets in place, return the
+    /// fitted scaler.
+    pub fn fit_transform(train: &mut Dataset, test: Option<&mut Dataset>) -> Scaler {
+        let s = Scaler::fit(&train.points);
+        s.transform(&mut train.points);
+        if let Some(t) = test {
+            s.transform(&mut t.points);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zscores_have_zero_mean_unit_var() {
+        let m = Matrix::from_vec(4, 2, vec![1., 10., 2., 20., 3., 30., 4., 40.]).unwrap();
+        let mut m2 = m.clone();
+        let s = Scaler::fit(&m);
+        s.transform(&mut m2);
+        for j in 0..2 {
+            let mean: f64 = (0..4).map(|i| m2.get(i, j) as f64).sum::<f64>() / 4.0;
+            let var: f64 = (0..4).map(|i| (m2.get(i, j) as f64 - mean).powi(2)).sum::<f64>() / 4.0;
+            assert!(mean.abs() < 1e-6);
+            assert!((var - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn constant_feature_is_noop_scaled() {
+        let m = Matrix::from_vec(3, 1, vec![5., 5., 5.]).unwrap();
+        let mut m2 = m.clone();
+        Scaler::fit(&m).transform(&mut m2);
+        for i in 0..3 {
+            assert_eq!(m2.get(i, 0), 0.0); // (5-5)/1
+        }
+    }
+
+    #[test]
+    fn same_transform_applied_to_test() {
+        let mut train = Dataset::new(
+            Matrix::from_vec(2, 1, vec![0., 2.]).unwrap(),
+            vec![1, -1],
+        )
+        .unwrap();
+        let mut test = Dataset::new(Matrix::from_vec(1, 1, vec![1.]).unwrap(), vec![1]).unwrap();
+        Scaler::fit_transform(&mut train, Some(&mut test));
+        // train mean=1, std=1 -> test point 1 maps to 0
+        assert!((test.points.get(0, 0)).abs() < 1e-6);
+    }
+}

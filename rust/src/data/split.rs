@@ -1,0 +1,138 @@
+//! Train/test splitting and stratified k-fold cross validation.
+//!
+//! The paper evaluates with an 80/20 split "reinforced with k-fold cross
+//! validation", averaging 20 runs with different seeds; these helpers
+//! implement both pieces with stratification so that minority points are
+//! proportionally present in every fold (critical for imbalanced data).
+
+use crate::data::dataset::Dataset;
+use crate::util::rng::{Pcg64, Rng};
+
+/// Random stratified train/test split; `test_frac` of each class goes to
+/// the test set (at least 1 point per non-empty class when possible).
+pub fn train_test_split(ds: &Dataset, test_frac: f64, rng: &mut Pcg64) -> (Dataset, Dataset) {
+    let mut train_idx = Vec::new();
+    let mut test_idx = Vec::new();
+    for class_idx in [ds.positives(), ds.negatives()] {
+        if class_idx.is_empty() {
+            continue;
+        }
+        let mut idx = class_idx;
+        rng.shuffle(&mut idx);
+        let mut n_test = ((idx.len() as f64) * test_frac).round() as usize;
+        if test_frac > 0.0 {
+            n_test = n_test.clamp(1, idx.len().saturating_sub(1).max(1));
+        }
+        test_idx.extend_from_slice(&idx[..n_test]);
+        train_idx.extend_from_slice(&idx[n_test..]);
+    }
+    // Restore a deterministic (but shuffled) order independent of class.
+    rng.shuffle(&mut train_idx);
+    rng.shuffle(&mut test_idx);
+    (ds.select(&train_idx), ds.select(&test_idx))
+}
+
+/// Stratified k-fold iterator: yields `(train, validation)` datasets.
+pub struct KFold {
+    folds: Vec<Vec<usize>>,
+}
+
+impl KFold {
+    /// Assign each point to one of `k` folds, stratified by class.
+    pub fn new(ds: &Dataset, k: usize, rng: &mut Pcg64) -> KFold {
+        let k = k.max(2);
+        let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for class_idx in [ds.positives(), ds.negatives()] {
+            let mut idx = class_idx;
+            rng.shuffle(&mut idx);
+            for (i, p) in idx.into_iter().enumerate() {
+                folds[i % k].push(p);
+            }
+        }
+        KFold { folds }
+    }
+
+    /// Number of folds.
+    pub fn k(&self) -> usize {
+        self.folds.len()
+    }
+
+    /// The `(train, validation)` pair for fold `f`.
+    pub fn fold(&self, ds: &Dataset, f: usize) -> (Dataset, Dataset) {
+        let val_idx = &self.folds[f];
+        let train_idx: Vec<usize> = self
+            .folds
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != f)
+            .flat_map(|(_, v)| v.iter().copied())
+            .collect();
+        (ds.select(&train_idx), ds.select(val_idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+
+    fn imbalanced(n_pos: usize, n_neg: usize) -> Dataset {
+        let n = n_pos + n_neg;
+        let mut data = Vec::with_capacity(n * 2);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            data.push(i as f32);
+            data.push((i * i) as f32);
+            labels.push(if i < n_pos { 1 } else { -1 });
+        }
+        Dataset::new(Matrix::from_vec(n, 2, data).unwrap(), labels).unwrap()
+    }
+
+    #[test]
+    fn split_is_partition_and_stratified() {
+        let ds = imbalanced(20, 80);
+        let mut rng = Pcg64::seed_from(1);
+        let (tr, te) = train_test_split(&ds, 0.2, &mut rng);
+        assert_eq!(tr.len() + te.len(), 100);
+        assert_eq!(te.n_pos(), 4);
+        assert_eq!(te.n_neg(), 16);
+        assert_eq!(tr.n_pos(), 16);
+    }
+
+    #[test]
+    fn split_keeps_at_least_one_minority_in_test() {
+        let ds = imbalanced(3, 97);
+        let mut rng = Pcg64::seed_from(2);
+        let (_, te) = train_test_split(&ds, 0.2, &mut rng);
+        assert!(te.n_pos() >= 1);
+    }
+
+    #[test]
+    fn kfold_partitions_all_points() {
+        let ds = imbalanced(10, 40);
+        let mut rng = Pcg64::seed_from(3);
+        let kf = KFold::new(&ds, 5, &mut rng);
+        let mut total_val = 0;
+        for f in 0..kf.k() {
+            let (tr, va) = kf.fold(&ds, f);
+            assert_eq!(tr.len() + va.len(), 50);
+            total_val += va.len();
+            // stratification: every fold sees both classes
+            assert!(va.n_pos() >= 1, "fold {f} lost the minority class");
+        }
+        assert_eq!(total_val, 50);
+    }
+
+    #[test]
+    fn kfold_validation_sets_are_disjoint() {
+        let ds = imbalanced(10, 30);
+        let mut rng = Pcg64::seed_from(4);
+        let kf = KFold::new(&ds, 4, &mut rng);
+        let mut seen = std::collections::HashSet::new();
+        for fold in &kf.folds {
+            for &i in fold {
+                assert!(seen.insert(i), "index {i} appears in two folds");
+            }
+        }
+    }
+}

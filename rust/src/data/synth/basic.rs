@@ -1,0 +1,132 @@
+//! Small didactic generators used by examples, tests and micro-benches.
+
+use crate::data::dataset::Dataset;
+use crate::data::matrix::Matrix;
+use crate::util::rng::{Pcg64, Rng};
+
+/// Two Gaussian blobs in `dim` dimensions separated by `sep` standard
+/// deviations along a random direction; `n_pos` minority and `n_neg`
+/// majority points.
+pub fn two_gaussians(
+    n_neg: usize,
+    n_pos: usize,
+    dim: usize,
+    sep: f64,
+    rng: &mut Pcg64,
+) -> Dataset {
+    let mut dir: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+    let norm = dir.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+    dir.iter_mut().for_each(|x| *x /= norm);
+    let n = n_pos + n_neg;
+    let mut points = Matrix::zeros(n, dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let (label, sign) = if i < n_pos { (1i8, 0.5) } else { (-1i8, -0.5) };
+        let row = points.row_mut(i);
+        for (j, r) in row.iter_mut().enumerate() {
+            *r = (rng.normal() + sign * sep * dir[j]) as f32;
+        }
+        labels.push(label);
+    }
+    Dataset::new(points, labels).expect("valid by construction")
+}
+
+/// A non-linearly-separable problem: the minority class is a ring of
+/// radius `r_inner`..`r_outer` around a Gaussian core of majority points
+/// (2-D, needs an RBF kernel — used by the quickstart).
+pub fn concentric_rings(n_neg: usize, n_pos: usize, rng: &mut Pcg64) -> Dataset {
+    let n = n_pos + n_neg;
+    let mut points = Matrix::zeros(n, 2);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let row_vals = if i < n_pos {
+            // ring
+            let theta = rng.f64() * std::f64::consts::TAU;
+            let r = 3.0 + rng.f64();
+            [
+                (r * theta.cos() + 0.1 * rng.normal()) as f32,
+                (r * theta.sin() + 0.1 * rng.normal()) as f32,
+            ]
+        } else {
+            [rng.normal() as f32, rng.normal() as f32]
+        };
+        points.row_mut(i).copy_from_slice(&row_vals);
+        labels.push(if i < n_pos { 1 } else { -1 });
+    }
+    Dataset::new(points, labels).expect("valid by construction")
+}
+
+/// XOR-style four-blob problem (two blobs per class on opposite corners):
+/// linearly inseparable, cluster structure that AMG aggregates well.
+pub fn xor_blobs(n_per_blob: usize, dim: usize, sep: f64, rng: &mut Pcg64) -> Dataset {
+    let n = 4 * n_per_blob;
+    let mut points = Matrix::zeros(n, dim.max(2));
+    let mut labels = Vec::with_capacity(n);
+    let corners = [(1.0, 1.0, 1i8), (-1.0, -1.0, 1i8), (1.0, -1.0, -1i8), (-1.0, 1.0, -1i8)];
+    for (b, &(cx, cy, lab)) in corners.iter().enumerate() {
+        for i in 0..n_per_blob {
+            let idx = b * n_per_blob + i;
+            let row = points.row_mut(idx);
+            row[0] = (cx * sep + rng.normal()) as f32;
+            row[1] = (cy * sep + rng.normal()) as f32;
+            for r in row.iter_mut().skip(2) {
+                *r = rng.normal() as f32;
+            }
+            labels.push(lab);
+        }
+    }
+    Dataset::new(points, labels).expect("valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_gaussians_sizes_and_labels() {
+        let mut rng = Pcg64::seed_from(1);
+        let ds = two_gaussians(300, 50, 4, 3.0, &mut rng);
+        assert_eq!(ds.len(), 350);
+        assert_eq!(ds.n_pos(), 50);
+        assert_eq!(ds.dim(), 4);
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn two_gaussians_classes_are_separated() {
+        let mut rng = Pcg64::seed_from(2);
+        let ds = two_gaussians(500, 500, 3, 6.0, &mut rng);
+        // Class means should differ by ~6 along some direction.
+        let (pos, _, neg, _) = ds.split_classes();
+        let mut gap = 0.0f64;
+        for j in 0..3 {
+            let mp: f64 = (0..pos.len()).map(|i| pos.points.get(i, j) as f64).sum::<f64>()
+                / pos.len() as f64;
+            let mn: f64 = (0..neg.len()).map(|i| neg.points.get(i, j) as f64).sum::<f64>()
+                / neg.len() as f64;
+            gap += (mp - mn).powi(2);
+        }
+        assert!(gap.sqrt() > 4.0, "gap={}", gap.sqrt());
+    }
+
+    #[test]
+    fn rings_radii() {
+        let mut rng = Pcg64::seed_from(3);
+        let ds = concentric_rings(200, 100, &mut rng);
+        for i in 0..ds.len() {
+            let r = (ds.points.get(i, 0).powi(2) + ds.points.get(i, 1).powi(2)).sqrt();
+            if ds.labels[i] == 1 {
+                assert!(r > 2.0, "ring point at radius {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_blobs_balanced() {
+        let mut rng = Pcg64::seed_from(4);
+        let ds = xor_blobs(50, 5, 4.0, &mut rng);
+        assert_eq!(ds.len(), 200);
+        assert_eq!(ds.n_pos(), 100);
+        assert_eq!(ds.dim(), 5);
+    }
+}

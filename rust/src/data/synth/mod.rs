@@ -1,0 +1,23 @@
+//! Synthetic workload generators.
+//!
+//! The evaluation data of the paper is gated (UCI downloads are unavailable
+//! in this offline image; the BMW survey sets are proprietary), so per the
+//! substitution policy in DESIGN.md §4 every benchmark data set is
+//! regenerated synthetically with matched statistics:
+//!
+//! * [`breiman`] — **exact** generators for Ringnorm and Twonorm (these
+//!   were synthetic in the original evaluation too).
+//! * [`uci`] — Gaussian multi-cluster analogs of the remaining Table-1
+//!   data sets, matched on (n, n_f, class sizes) with per-set difficulty.
+//! * [`survey`] — the BMW customer-satisfaction pipeline simulator:
+//!   topic-model text → uni/bi-gram tf-idf → randomized SVD to 100 dims.
+//! * [`basic`] — small didactic generators used by examples and tests.
+
+pub mod basic;
+pub mod breiman;
+pub mod survey;
+pub mod uci;
+
+pub use basic::{concentric_rings, two_gaussians, xor_blobs};
+pub use breiman::{ringnorm, twonorm};
+pub use uci::{table1_specs, UciSpec};

@@ -1,0 +1,305 @@
+//! BMW customer-satisfaction survey pipeline simulator (Table 2 analog).
+//!
+//! The paper's industrial sets DS1/DS2 are plain-text surveys in 5 labeled
+//! classes ("different major product problems"), converted to normalized
+//! tf-idf over uni- and bi-grams (~200k features from domain jargon) and
+//! reduced to 100 dimensions by SVD. The data is proprietary, so this
+//! module simulates the *entire* pipeline:
+//!
+//! 1. a topic-model corpus generator — a Zipf background vocabulary shared
+//!    by all classes plus per-class jargon topics;
+//! 2. uni+bi-gram counting with bi-grams hashed into a fixed bucket space
+//!    (mirroring the feature explosion the paper reports);
+//! 3. tf-idf weighting and L2 document normalization;
+//! 4. randomized SVD to `svd_dim` (=100) dimensions.
+//!
+//! Class sizes match Table 2 (scaled for this testbed by default).
+
+use crate::data::matrix::Matrix;
+use crate::data::svd::{self, SparseRows};
+use crate::util::rng::{Pcg64, Rng};
+
+/// Paper class sizes for DS1 (column "Size in DS1" of Table 2).
+pub const DS1_SIZES: [usize; 5] = [6_867, 373, 5_350, 278, 2_167];
+/// Paper class sizes for DS2 (column "Size in DS2" of Table 2).
+pub const DS2_SIZES: [usize; 5] = [204_497, 9_892, 91_952, 9_339, 57_478];
+
+/// Corpus/pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct SurveyConfig {
+    /// Unigram vocabulary size.
+    pub vocab: usize,
+    /// Hashed bi-gram bucket count (adds to the feature space).
+    pub bigram_buckets: usize,
+    /// Mean document length in tokens.
+    pub mean_len: usize,
+    /// Number of jargon terms that characterize each class topic.
+    pub jargon_per_class: usize,
+    /// Probability a token is drawn from the class topic (vs background).
+    pub topic_weight: f64,
+    /// Output dimensionality of the SVD reduction.
+    pub svd_dim: usize,
+}
+
+impl Default for SurveyConfig {
+    fn default() -> Self {
+        SurveyConfig {
+            vocab: 4_000,
+            bigram_buckets: 4_000,
+            mean_len: 40,
+            jargon_per_class: 60,
+            topic_weight: 0.35,
+            svd_dim: 100,
+        }
+    }
+}
+
+/// A generated multi-class corpus after the full pipeline.
+#[derive(Debug)]
+pub struct SurveyData {
+    /// Reduced document coordinates (n_docs x svd_dim).
+    pub points: Matrix,
+    /// Class id (0..5) per document.
+    pub class_ids: Vec<u8>,
+    /// Number of tf-idf features before reduction (vocab + bigram buckets).
+    pub raw_features: usize,
+}
+
+impl SurveyData {
+    /// One-vs-rest binary labels for `class_id` (+1 = that class).
+    pub fn one_vs_rest(&self, class_id: u8) -> Vec<i8> {
+        self.class_ids
+            .iter()
+            .map(|&c| if c == class_id { 1 } else { -1 })
+            .collect()
+    }
+
+    /// Dataset view for a one-vs-rest problem.
+    pub fn dataset_for(&self, class_id: u8) -> crate::data::dataset::Dataset {
+        crate::data::dataset::Dataset::new(self.points.clone(), self.one_vs_rest(class_id))
+            .expect("valid by construction")
+    }
+
+    /// Number of documents.
+    pub fn len(&self) -> usize {
+        self.class_ids.len()
+    }
+
+    /// True when the corpus is empty.
+    pub fn is_empty(&self) -> bool {
+        self.class_ids.is_empty()
+    }
+}
+
+/// Zipf sampler over `0..n` (P(k) ∝ 1/(k+1)^s) via inverse-CDF table.
+struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64) -> Zipf {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.f64();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// FNV-1a hash used to bucket bi-grams.
+fn fnv(a: u64, b: u64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for byte in a.to_le_bytes().iter().chain(b.to_le_bytes().iter()) {
+        h ^= *byte as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Generate a corpus with `sizes[c]` documents in class `c`, run the
+/// tf-idf + SVD pipeline, and return reduced coordinates.
+pub fn generate(sizes: &[usize], cfg: &SurveyConfig, rng: &mut Pcg64) -> SurveyData {
+    let n_classes = sizes.len();
+    let n_docs: usize = sizes.iter().sum();
+    let background = Zipf::new(cfg.vocab, 1.1);
+
+    // Per-class jargon: a contiguous-free random subset of the vocabulary,
+    // with its own Zipf weights (jargon is reused heavily once adopted).
+    let jargon: Vec<Vec<usize>> = (0..n_classes)
+        .map(|_| {
+            (0..cfg.jargon_per_class)
+                .map(|_| rng.index(cfg.vocab))
+                .collect()
+        })
+        .collect();
+    let jargon_dist = Zipf::new(cfg.jargon_per_class, 1.0);
+
+    let n_feat = cfg.vocab + cfg.bigram_buckets;
+    // term counts per doc (sparse) + document frequency per term
+    let mut doc_rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n_docs);
+    let mut df = vec![0u32; n_feat];
+    let mut class_ids = Vec::with_capacity(n_docs);
+
+    for (c, &sz) in sizes.iter().enumerate() {
+        for _ in 0..sz {
+            class_ids.push(c as u8);
+            // Document length ~ shifted Poisson-ish (sum of two geometrics
+            // is close enough and cheap): at least 5 tokens.
+            let len = 5 + rng.index(2 * cfg.mean_len.saturating_sub(5) + 1);
+            let mut counts: std::collections::HashMap<u32, f32> = std::collections::HashMap::new();
+            let mut prev_token: Option<usize> = None;
+            for _ in 0..len {
+                let tok = if rng.f64() < cfg.topic_weight {
+                    jargon[c][jargon_dist.sample(rng)]
+                } else {
+                    background.sample(rng)
+                };
+                *counts.entry(tok as u32).or_insert(0.0) += 1.0;
+                if let Some(p) = prev_token {
+                    let bucket =
+                        cfg.vocab + (fnv(p as u64, tok as u64) as usize % cfg.bigram_buckets);
+                    *counts.entry(bucket as u32).or_insert(0.0) += 1.0;
+                }
+                prev_token = Some(tok);
+            }
+            let mut row: Vec<(u32, f32)> = counts.into_iter().collect();
+            row.sort_unstable_by_key(|&(t, _)| t);
+            for &(t, _) in &row {
+                df[t as usize] += 1;
+            }
+            doc_rows.push(row);
+        }
+    }
+
+    // tf-idf: tf = 1 + ln(count), idf = ln((1+N)/(1+df)) + 1; then L2 norm.
+    let n_docs_f = n_docs as f64;
+    for row in doc_rows.iter_mut() {
+        let mut sq = 0.0f64;
+        for (t, v) in row.iter_mut() {
+            let idf = ((1.0 + n_docs_f) / (1.0 + df[*t as usize] as f64)).ln() + 1.0;
+            *v = ((1.0 + (*v as f64).ln()) * idf) as f32;
+            sq += (*v as f64) * (*v as f64);
+        }
+        let norm = sq.sqrt().max(1e-12) as f32;
+        for (_, v) in row.iter_mut() {
+            *v /= norm;
+        }
+    }
+
+    let sparse = SparseRows::from_rows(&doc_rows, n_feat);
+    let points = svd::reduce(&sparse, cfg.svd_dim, rng);
+    SurveyData {
+        points,
+        class_ids,
+        raw_features: n_feat,
+    }
+}
+
+/// DS1 at the given scale (1.0 = paper sizes; min 30 docs per class).
+pub fn generate_ds1(scale: f64, cfg: &SurveyConfig, rng: &mut Pcg64) -> SurveyData {
+    let sizes: Vec<usize> = DS1_SIZES
+        .iter()
+        .map(|&s| ((s as f64 * scale).round() as usize).max(30))
+        .collect();
+    generate(&sizes, cfg, rng)
+}
+
+/// DS2 at the given scale.
+pub fn generate_ds2(scale: f64, cfg: &SurveyConfig, rng: &mut Pcg64) -> SurveyData {
+    let sizes: Vec<usize> = DS2_SIZES
+        .iter()
+        .map(|&s| ((s as f64 * scale).round() as usize).max(30))
+        .collect();
+    generate(&sizes, cfg, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> SurveyConfig {
+        SurveyConfig {
+            vocab: 300,
+            bigram_buckets: 200,
+            mean_len: 25,
+            jargon_per_class: 20,
+            topic_weight: 0.4,
+            svd_dim: 16,
+        }
+    }
+
+    #[test]
+    fn sizes_and_classes() {
+        let mut rng = Pcg64::seed_from(1);
+        let data = generate(&[50, 30, 20], &tiny_cfg(), &mut rng);
+        assert_eq!(data.len(), 100);
+        assert_eq!(data.points.rows(), 100);
+        assert_eq!(data.points.cols(), 16);
+        assert_eq!(data.one_vs_rest(1).iter().filter(|&&l| l == 1).count(), 30);
+        assert_eq!(data.raw_features, 500);
+    }
+
+    #[test]
+    fn reduced_space_separates_classes_somewhat() {
+        // Same-class documents should be closer on average than cross-class.
+        let mut rng = Pcg64::seed_from(2);
+        let data = generate(&[60, 60], &tiny_cfg(), &mut rng);
+        let mut same = 0.0;
+        let mut cross = 0.0;
+        let mut ns = 0;
+        let mut nc = 0;
+        for i in 0..data.len() {
+            for j in (i + 1)..data.len() {
+                let d = crate::data::matrix::sqdist(data.points.row(i), data.points.row(j));
+                if data.class_ids[i] == data.class_ids[j] {
+                    same += d;
+                    ns += 1;
+                } else {
+                    cross += d;
+                    nc += 1;
+                }
+            }
+        }
+        let same = same / ns as f64;
+        let cross = cross / nc as f64;
+        assert!(
+            cross > same * 1.05,
+            "cross {cross} should exceed same {same}"
+        );
+    }
+
+    #[test]
+    fn ds1_scaling_keeps_minority_floor() {
+        let mut rng = Pcg64::seed_from(3);
+        let data = generate_ds1(0.01, &tiny_cfg(), &mut rng);
+        // class 3 would be 2.78 docs at 1% -> floored at 30
+        let c3 = data.class_ids.iter().filter(|&&c| c == 3).count();
+        assert_eq!(c3, 30);
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing_overall() {
+        let mut rng = Pcg64::seed_from(4);
+        let z = Zipf::new(50, 1.1);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[40]);
+    }
+}

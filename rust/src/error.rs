@@ -1,0 +1,45 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the mlsvm library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Input data violated a precondition (dimension mismatch, empty set, ...).
+    #[error("invalid input: {0}")]
+    InvalidInput(String),
+
+    /// A data file could not be parsed.
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+
+    /// I/O failure while reading or writing data/model/artifact files.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// The optimizer failed to make progress (degenerate problem).
+    #[error("solver failure: {0}")]
+    Solver(String),
+
+    /// A training set contained fewer than two classes.
+    #[error("degenerate training set: {0}")]
+    Degenerate(String),
+
+    /// The PJRT runtime failed (artifact missing, compile or execute error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// CLI usage error.
+    #[error("usage: {0}")]
+    Usage(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand for an [`Error::InvalidInput`].
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::InvalidInput(msg.into())
+    }
+}

@@ -1,0 +1,85 @@
+//! Affinity graph construction (framework initialization).
+//!
+//! Following the paper, the undirected affinity graph G = (V, E) is the
+//! (approximate) k-NN graph over one class's training points, with edge
+//! weights equal to the **inverse Euclidean distance** — the stronger the
+//! connection, the more two nodes interpolate to each other during
+//! uncoarsening.
+
+use crate::data::matrix::Matrix;
+use crate::error::Result;
+use crate::graph::csr::CsrGraph;
+use crate::knn::{build_knn, KnnBackend, NeighborLists};
+
+/// Weight for a squared distance: 1 / max(dist, eps).
+#[inline]
+pub fn inverse_distance_weight(sqdist: f64) -> f64 {
+    1.0 / sqdist.sqrt().max(1e-9)
+}
+
+/// Turn k-NN lists into a symmetric inverse-distance weighted graph.
+pub fn from_neighbor_lists(n: usize, lists: &NeighborLists) -> Result<CsrGraph> {
+    let mut edges = Vec::with_capacity(lists.iter().map(|l| l.len()).sum());
+    for (i, l) in lists.iter().enumerate() {
+        for nb in l {
+            edges.push((i as u32, nb.index, inverse_distance_weight(nb.sqdist)));
+        }
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Build the affinity graph for `points` with `k` neighbors (paper: k=10).
+pub fn affinity_graph(
+    points: &Matrix,
+    k: usize,
+    backend: KnnBackend,
+    seed: u64,
+) -> Result<CsrGraph> {
+    let lists = build_knn(points, k, backend, seed);
+    from_neighbor_lists(points.rows(), &lists)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng};
+
+    #[test]
+    fn line_points_get_chain_weights() {
+        // x = 0, 1, 3: w(0,1)=1, w(1,3)=1/2, w(0,3)=1/3
+        let m = Matrix::from_vec(3, 1, vec![0., 1., 3.]).unwrap();
+        let g = affinity_graph(&m, 2, KnnBackend::Brute, 0).unwrap();
+        g.validate().unwrap();
+        let (idx, w) = g.row(0);
+        assert_eq!(idx, &[1, 2]);
+        assert!((w[0] - 1.0).abs() < 1e-9);
+        assert!((w[1] - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn closer_pairs_weigh_more() {
+        let mut rng = Pcg64::seed_from(6);
+        let mut m = Matrix::zeros(100, 3);
+        for i in 0..100 {
+            for j in 0..3 {
+                m.set(i, j, rng.normal() as f32);
+            }
+        }
+        let g = affinity_graph(&m, 5, KnnBackend::Brute, 0).unwrap();
+        g.validate().unwrap();
+        for i in 0..g.n() {
+            let (idx, w) = g.row(i);
+            for (&j, &wij) in idx.iter().zip(w) {
+                let d = crate::data::matrix::sqdist(m.row(i), m.row(j as usize)).sqrt();
+                assert!((wij - 1.0 / d).abs() < 1e-9 * wij.max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn coincident_points_capped_weight() {
+        let m = Matrix::from_vec(2, 1, vec![1.0, 1.0]).unwrap();
+        let g = affinity_graph(&m, 1, KnnBackend::Brute, 0).unwrap();
+        assert!(g.row(0).1[0] <= 1.0000001e9);
+    }
+}

@@ -1,0 +1,362 @@
+//! Compressed-sparse-row structures:
+//!
+//! * [`CsrGraph`] — a symmetric weighted graph (the k-NN affinity graph and
+//!   its coarse versions);
+//! * [`SparseRowMatrix`] — a general rectangular sparse matrix (the AMG
+//!   interpolation operator P);
+//! * [`CsrGraph::galerkin`] — the triple product `PᵀWP` that produces the
+//!   coarse-level graph (PETSc's `MatPtAP` equivalent), with the diagonal
+//!   dropped (self-affinity is meaningless for coarsening).
+
+use crate::error::{Error, Result};
+
+/// Symmetric weighted graph in CSR form. Invariants: no self loops,
+/// `(i,j)` present iff `(j,i)` present with equal weight, weights > 0.
+#[derive(Clone, Debug, Default)]
+pub struct CsrGraph {
+    /// Row offsets (length n+1).
+    pub indptr: Vec<usize>,
+    /// Column indices.
+    pub indices: Vec<u32>,
+    /// Edge weights (parallel to `indices`).
+    pub weights: Vec<f64>,
+}
+
+impl CsrGraph {
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.indptr.len().saturating_sub(1)
+    }
+
+    /// Number of stored directed entries (2 × undirected edges).
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Neighbor slice of node `i`: (indices, weights).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let r = self.indptr[i]..self.indptr[i + 1];
+        (&self.indices[r.clone()], &self.weights[r])
+    }
+
+    /// Weighted degree Σ_j w_ij of node `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> f64 {
+        self.row(i).1.iter().sum()
+    }
+
+    /// Build a symmetric graph from a directed edge list; duplicate and
+    /// reciprocal entries are merged by **max** weight (union
+    /// symmetrization of a k-NN digraph). Self loops are dropped.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f64)]) -> Result<CsrGraph> {
+        // Count with symmetrization via sort-merge on normalized pairs.
+        let mut pairs: Vec<(u32, u32, f64)> = Vec::with_capacity(edges.len());
+        for &(a, b, w) in edges {
+            if a as usize >= n || b as usize >= n {
+                return Err(Error::invalid(format!("edge ({a},{b}) out of range n={n}")));
+            }
+            if a == b {
+                continue;
+            }
+            if !(w > 0.0) || !w.is_finite() {
+                return Err(Error::invalid(format!("edge ({a},{b}) bad weight {w}")));
+            }
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            pairs.push((lo, hi, w));
+        }
+        pairs.sort_unstable_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        pairs.dedup_by(|next, prev| {
+            if next.0 == prev.0 && next.1 == prev.1 {
+                prev.2 = prev.2.max(next.2);
+                true
+            } else {
+                false
+            }
+        });
+        // Degree count.
+        let mut counts = vec![0usize; n];
+        for &(a, b, _) in &pairs {
+            counts[a as usize] += 1;
+            counts[b as usize] += 1;
+        }
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0usize);
+        for c in &counts {
+            indptr.push(indptr.last().unwrap() + c);
+        }
+        let nnz = *indptr.last().unwrap();
+        let mut indices = vec![0u32; nnz];
+        let mut weights = vec![0f64; nnz];
+        let mut cursor = indptr[..n].to_vec();
+        for &(a, b, w) in &pairs {
+            let (ai, bi) = (a as usize, b as usize);
+            indices[cursor[ai]] = b;
+            weights[cursor[ai]] = w;
+            cursor[ai] += 1;
+            indices[cursor[bi]] = a;
+            weights[cursor[bi]] = w;
+            cursor[bi] += 1;
+        }
+        // Sort each row by column for deterministic iteration.
+        let g = CsrGraph {
+            indptr,
+            indices,
+            weights,
+        };
+        Ok(g.sorted_rows())
+    }
+
+    fn sorted_rows(mut self) -> CsrGraph {
+        let n = self.n();
+        for i in 0..n {
+            let r = self.indptr[i]..self.indptr[i + 1];
+            let mut pairs: Vec<(u32, f64)> = self.indices[r.clone()]
+                .iter()
+                .copied()
+                .zip(self.weights[r.clone()].iter().copied())
+                .collect();
+            pairs.sort_unstable_by_key(|p| p.0);
+            for (off, (c, w)) in pairs.into_iter().enumerate() {
+                self.indices[r.start + off] = c;
+                self.weights[r.start + off] = w;
+            }
+        }
+        self
+    }
+
+    /// Check structural invariants (tests / debug).
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n();
+        for i in 0..n {
+            let (idx, w) = self.row(i);
+            for (&j, &wij) in idx.iter().zip(w) {
+                if j as usize == i {
+                    return Err(Error::invalid(format!("self loop at {i}")));
+                }
+                if !(wij > 0.0) {
+                    return Err(Error::invalid(format!("non-positive weight at ({i},{j})")));
+                }
+                // symmetric counterpart
+                let (jidx, jw) = self.row(j as usize);
+                match jidx.binary_search(&(i as u32)) {
+                    Ok(pos) => {
+                        if (jw[pos] - wij).abs() > 1e-9 * wij.abs().max(1.0) {
+                            return Err(Error::invalid(format!(
+                                "asymmetric weight ({i},{j}): {wij} vs {}",
+                                jw[pos]
+                            )));
+                        }
+                    }
+                    Err(_) => {
+                        return Err(Error::invalid(format!("missing reciprocal of ({i},{j})")));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Galerkin coarse graph `PᵀWP` with the diagonal dropped.
+    ///
+    /// `p` is the interpolation operator (n_fine × n_coarse). The result
+    /// has `W_coarse[q,r] = Σ_{k≠l} P[k,q]·w[k,l]·P[l,r]` for q ≠ r,
+    /// exactly Eq. (4)'s coarse-edge definition.
+    pub fn galerkin(&self, p: &SparseRowMatrix) -> Result<CsrGraph> {
+        if p.nrows() != self.n() {
+            return Err(Error::invalid(format!(
+                "galerkin: P has {} rows, graph has {} nodes",
+                p.nrows(),
+                self.n()
+            )));
+        }
+        let nc = p.ncols;
+        // Accumulate row-by-row into hash maps per coarse row would be slow;
+        // instead accumulate triplets then merge via from_edges-style pass.
+        // For each fine edge (k,l,w) and each (q, pkq) in P[k], (r, plr) in
+        // P[l]: add w*pkq*plr to coarse (q,r). Stored once per unordered
+        // fine pair; contributions to both (q,r) and (r,q) are generated,
+        // so we keep q<r and sum.
+        let mut acc: std::collections::HashMap<(u32, u32), f64> = std::collections::HashMap::new();
+        for k in 0..self.n() {
+            let (idx, w) = self.row(k);
+            let pk = p.row(k);
+            for (&l, &wkl) in idx.iter().zip(w) {
+                let l = l as usize;
+                if l <= k {
+                    continue; // each undirected fine edge once
+                }
+                let pl = p.row(l);
+                for &(q, pkq) in pk {
+                    for &(r, plr) in pl {
+                        if q == r {
+                            continue; // diagonal (intra-aggregate) dropped
+                        }
+                        let (lo, hi) = if q < r { (q, r) } else { (r, q) };
+                        *acc.entry((lo, hi)).or_insert(0.0) += wkl * (pkq as f64) * (plr as f64);
+                    }
+                }
+            }
+        }
+        let edges: Vec<(u32, u32, f64)> = acc
+            .into_iter()
+            .filter(|&(_, w)| w > 1e-12)
+            .map(|((a, b), w)| (a, b, w))
+            .collect();
+        CsrGraph::from_edges(nc, &edges)
+    }
+}
+
+/// General rectangular sparse row matrix with f32 values (the AMG
+/// interpolation operator P: n_fine × n_coarse, ≤ caliber nnz per row).
+#[derive(Clone, Debug, Default)]
+pub struct SparseRowMatrix {
+    /// Row offsets (length nrows+1).
+    pub indptr: Vec<usize>,
+    /// (column, value) pairs flattened.
+    pub entries: Vec<(u32, f32)>,
+    /// Number of columns.
+    pub ncols: usize,
+}
+
+impl SparseRowMatrix {
+    /// Build from per-row entry lists.
+    pub fn from_rows(rows: Vec<Vec<(u32, f32)>>, ncols: usize) -> SparseRowMatrix {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        indptr.push(0);
+        let mut entries = Vec::new();
+        for mut r in rows {
+            r.sort_unstable_by_key(|e| e.0);
+            entries.extend_from_slice(&r);
+            indptr.push(entries.len());
+        }
+        SparseRowMatrix {
+            indptr,
+            entries,
+            ncols,
+        }
+    }
+
+    /// Number of rows.
+    pub fn nrows(&self) -> usize {
+        self.indptr.len().saturating_sub(1)
+    }
+
+    /// Row `i` as a slice of (column, value).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[(u32, f32)] {
+        &self.entries[self.indptr[i]..self.indptr[i + 1]]
+    }
+
+    /// Row sums (for stochasticity checks).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.nrows())
+            .map(|i| self.row(i).iter().map(|&(_, v)| v as f64).sum())
+            .collect()
+    }
+
+    /// Transpose as per-column lists: `cols[j]` = [(row, value)].
+    pub fn transpose_lists(&self) -> Vec<Vec<(u32, f32)>> {
+        let mut cols: Vec<Vec<(u32, f32)>> = vec![Vec::new(); self.ncols];
+        for i in 0..self.nrows() {
+            for &(j, v) in self.row(i) {
+                cols[j as usize].push((i as u32, v));
+            }
+        }
+        cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Path graph 0-1-2 with unit weights.
+    fn path3() -> CsrGraph {
+        CsrGraph::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]).unwrap()
+    }
+
+    #[test]
+    fn from_edges_symmetrizes_and_sorts() {
+        let g = path3();
+        g.validate().unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.nnz(), 4);
+        let (idx, _) = g.row(1);
+        assert_eq!(idx, &[0, 2]);
+    }
+
+    #[test]
+    fn duplicate_edges_merge_by_max() {
+        let g = CsrGraph::from_edges(2, &[(0, 1, 1.0), (1, 0, 3.0), (0, 1, 2.0)]).unwrap();
+        assert_eq!(g.nnz(), 2);
+        assert_eq!(g.row(0).1[0], 3.0);
+    }
+
+    #[test]
+    fn self_loops_dropped_bad_weights_rejected() {
+        let g = CsrGraph::from_edges(2, &[(0, 0, 1.0), (0, 1, 1.0)]).unwrap();
+        assert_eq!(g.nnz(), 2);
+        assert!(CsrGraph::from_edges(2, &[(0, 1, 0.0)]).is_err());
+        assert!(CsrGraph::from_edges(2, &[(0, 1, f64::NAN)]).is_err());
+        assert!(CsrGraph::from_edges(2, &[(0, 5, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn degree_sums_weights() {
+        let g = CsrGraph::from_edges(3, &[(0, 1, 2.0), (0, 2, 3.0)]).unwrap();
+        assert_eq!(g.degree(0), 5.0);
+        assert_eq!(g.degree(1), 2.0);
+    }
+
+    #[test]
+    fn galerkin_merges_aggregates() {
+        // 4-path 0-1-2-3; P aggregates {0,1}->A, {2,3}->B (hard).
+        let g = CsrGraph::from_edges(4, &[(0, 1, 1.0), (1, 2, 5.0), (2, 3, 1.0)]).unwrap();
+        let p = SparseRowMatrix::from_rows(
+            vec![
+                vec![(0, 1.0)],
+                vec![(0, 1.0)],
+                vec![(1, 1.0)],
+                vec![(1, 1.0)],
+            ],
+            2,
+        );
+        let gc = g.galerkin(&p).unwrap();
+        gc.validate().unwrap();
+        assert_eq!(gc.n(), 2);
+        // only the 1-2 edge crosses aggregates: weight 5
+        assert_eq!(gc.nnz(), 2);
+        assert!((gc.row(0).1[0] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn galerkin_with_fractional_interpolation() {
+        // Triangle 0-1-2, unit weights. Node 2 split 50/50 between
+        // aggregates of seeds 0 and 1.
+        let g =
+            CsrGraph::from_edges(3, &[(0, 1, 1.0), (0, 2, 1.0), (1, 2, 1.0)]).unwrap();
+        let p = SparseRowMatrix::from_rows(
+            vec![
+                vec![(0, 1.0)],
+                vec![(1, 1.0)],
+                vec![(0, 0.5), (1, 0.5)],
+            ],
+            2,
+        );
+        let gc = g.galerkin(&p).unwrap();
+        // Coarse edge (A,B): w(0,1)*1*1 + w(0,2)*1*0.5 + w(1,2)*1*0.5
+        //                  = 1 + 0.5 + 0.5 = 2   (2->2 diagonal dropped)
+        assert_eq!(gc.n(), 2);
+        assert!((gc.row(0).1[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_row_matrix_transpose() {
+        let p = SparseRowMatrix::from_rows(vec![vec![(1, 2.0)], vec![(0, 3.0), (1, 4.0)]], 2);
+        let t = p.transpose_lists();
+        assert_eq!(t[0], vec![(1, 3.0)]);
+        assert_eq!(t[1], vec![(0, 2.0), (1, 4.0)]);
+        assert_eq!(p.row_sums(), vec![2.0, 7.0]);
+    }
+}

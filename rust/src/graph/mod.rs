@@ -1,0 +1,10 @@
+//! Sparse graph substrate: CSR adjacency structures, the k-NN affinity
+//! graph construction the framework is initialized with, and the Galerkin
+//! triple product used by the AMG coarsening (the PETSc `MatPtAP`
+//! equivalent).
+
+pub mod affinity;
+pub mod csr;
+
+pub use affinity::affinity_graph;
+pub use csr::{CsrGraph, SparseRowMatrix};

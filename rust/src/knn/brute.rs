@@ -1,0 +1,87 @@
+//! Exact O(n²·d) k-NN. Reference implementation for correctness tests and
+//! the right choice for small inputs (coarse AMG levels are small, so this
+//! also serves the hierarchy once levels shrink below a few thousand).
+
+use crate::data::matrix::Matrix;
+use crate::knn::{KBest, NeighborLists};
+use crate::util::pool;
+
+/// Exact k-NN lists for every row of `points` (self excluded).
+pub fn knn(points: &Matrix, k: usize) -> NeighborLists {
+    let n = points.rows();
+    pool::parallel_map(n, 8, |i| {
+        let mut kb = KBest::new(k);
+        let a = points.row(i);
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let d = crate::data::matrix::sqdist(a, points.row(j));
+            if d < kb.worst() {
+                kb.push(d, j as u32);
+            }
+        }
+        kb.into_sorted()
+    })
+}
+
+/// Exact k-NN of `queries` rows against `data` rows (no self-exclusion).
+pub fn knn_queries(data: &Matrix, queries: &Matrix, k: usize) -> NeighborLists {
+    let nq = queries.rows();
+    pool::parallel_map(nq, 8, |q| {
+        let mut kb = KBest::new(k);
+        let a = queries.row(q);
+        for j in 0..data.rows() {
+            let d = crate::data::matrix::sqdist(a, data.row(j));
+            if d < kb.worst() {
+                kb.push(d, j as u32);
+            }
+        }
+        kb.into_sorted()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knn_on_line_graph() {
+        // points at x = 0, 1, 2, 3: neighbors of 1 are {0, 2} for k=2.
+        let m = Matrix::from_vec(4, 1, vec![0., 1., 2., 3.]).unwrap();
+        let lists = knn(&m, 2);
+        let idx: Vec<u32> = lists[1].iter().map(|n| n.index).collect();
+        assert!(idx.contains(&0) && idx.contains(&2));
+        // endpoint 0: neighbors {1, 2}
+        let idx0: Vec<u32> = lists[0].iter().map(|n| n.index).collect();
+        assert_eq!(idx0, vec![1, 2]);
+    }
+
+    #[test]
+    fn excludes_self_and_sorts() {
+        let m = Matrix::from_vec(3, 1, vec![0., 10., 11.]).unwrap();
+        let lists = knn(&m, 2);
+        for (i, l) in lists.iter().enumerate() {
+            assert!(l.iter().all(|n| n.index as usize != i));
+            for w in l.windows(2) {
+                assert!(w[0].sqdist <= w[1].sqdist);
+            }
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n_returns_all_others() {
+        let m = Matrix::from_vec(3, 1, vec![0., 1., 2.]).unwrap();
+        let lists = knn(&m, 10);
+        assert!(lists.iter().all(|l| l.len() == 2));
+    }
+
+    #[test]
+    fn queries_against_data() {
+        let data = Matrix::from_vec(3, 1, vec![0., 5., 10.]).unwrap();
+        let q = Matrix::from_vec(1, 1, vec![6.]).unwrap();
+        let lists = knn_queries(&data, &q, 2);
+        assert_eq!(lists[0][0].index, 1);
+        assert_eq!(lists[0][1].index, 2);
+    }
+}

@@ -1,0 +1,180 @@
+//! Exact KD-tree k-NN. Effective at low dimensionality (≲ 15), which
+//! covers several Table-1 data sets (Cod-RNA d=8, Nursery d=8, Letter
+//! d=16); higher-dimensional inputs go through the rp-forest instead.
+
+use crate::data::matrix::Matrix;
+use crate::knn::{KBest, Neighbor, NeighborLists};
+use crate::util::pool;
+
+/// Tree node: either a split or a leaf of point indices.
+enum Node {
+    Split {
+        dim: usize,
+        value: f32,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+    Leaf {
+        points: Vec<u32>,
+    },
+}
+
+/// An exact KD-tree over the rows of a matrix.
+pub struct KdTree<'a> {
+    points: &'a Matrix,
+    root: Node,
+}
+
+const LEAF_SIZE: usize = 24;
+
+impl<'a> KdTree<'a> {
+    /// Build a tree (median splits on the widest dimension).
+    pub fn build(points: &'a Matrix) -> KdTree<'a> {
+        let mut idx: Vec<u32> = (0..points.rows() as u32).collect();
+        let root = Self::build_node(points, &mut idx);
+        KdTree { points, root }
+    }
+
+    fn build_node(points: &Matrix, idx: &mut [u32]) -> Node {
+        if idx.len() <= LEAF_SIZE {
+            return Node::Leaf {
+                points: idx.to_vec(),
+            };
+        }
+        // Pick the dimension with the widest spread among a sample.
+        let d = points.cols();
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        let step = (idx.len() / 64).max(1);
+        for &i in idx.iter().step_by(step) {
+            for (j, &v) in points.row(i as usize).iter().enumerate() {
+                lo[j] = lo[j].min(v);
+                hi[j] = hi[j].max(v);
+            }
+        }
+        let dim = (0..d)
+            .max_by(|&a, &b| (hi[a] - lo[a]).partial_cmp(&(hi[b] - lo[b])).unwrap())
+            .unwrap_or(0);
+        // Median split via select_nth_unstable.
+        let mid = idx.len() / 2;
+        idx.select_nth_unstable_by(mid, |&a, &b| {
+            points
+                .get(a as usize, dim)
+                .partial_cmp(&points.get(b as usize, dim))
+                .unwrap()
+        });
+        let value = points.get(idx[mid] as usize, dim);
+        // Guard against degenerate splits (all equal along dim).
+        let first = points.get(idx[0] as usize, dim);
+        if value == first && points.get(*idx.last().unwrap() as usize, dim) == first {
+            return Node::Leaf {
+                points: idx.to_vec(),
+            };
+        }
+        let (l, r) = idx.split_at_mut(mid);
+        Node::Split {
+            dim,
+            value,
+            left: Box::new(Self::build_node(points, l)),
+            right: Box::new(Self::build_node(points, r)),
+        }
+    }
+
+    /// k nearest neighbors of an arbitrary query vector.
+    pub fn knn_query(&self, query: &[f32], k: usize, exclude: Option<u32>) -> Vec<Neighbor> {
+        let mut kb = KBest::new(k);
+        self.search(&self.root, query, exclude, &mut kb);
+        kb.into_sorted()
+    }
+
+    fn search(&self, node: &Node, query: &[f32], exclude: Option<u32>, kb: &mut KBest) {
+        match node {
+            Node::Leaf { points } => {
+                for &i in points {
+                    if Some(i) == exclude {
+                        continue;
+                    }
+                    let d = crate::data::matrix::sqdist(query, self.points.row(i as usize));
+                    if d < kb.worst() {
+                        kb.push(d, i);
+                    }
+                }
+            }
+            Node::Split {
+                dim,
+                value,
+                left,
+                right,
+            } => {
+                let delta = (query[*dim] - *value) as f64;
+                let (near, far) = if delta < 0.0 {
+                    (left, right)
+                } else {
+                    (right, left)
+                };
+                self.search(near, query, exclude, kb);
+                if delta * delta < kb.worst() {
+                    self.search(far, query, exclude, kb);
+                }
+            }
+        }
+    }
+
+    /// k-NN lists for every indexed point (self excluded).
+    pub fn knn_all(&self, k: usize) -> NeighborLists {
+        let n = self.points.rows();
+        pool::parallel_map(n, 8, |i| {
+            self.knn_query(self.points.row(i), k, Some(i as u32))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::{brute, recall};
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn random_matrix(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.set(i, j, rng.normal() as f32);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn matches_brute_force_exactly() {
+        let m = random_matrix(600, 6, 1);
+        let tree = KdTree::build(&m);
+        let exact = brute::knn(&m, 8);
+        let got = tree.knn_all(8);
+        assert!(recall(&got, &exact) > 0.9999, "kd-tree must be exact");
+    }
+
+    #[test]
+    fn handles_duplicate_points() {
+        // Many duplicates force degenerate splits.
+        let mut data = vec![0.0f32; 200];
+        data.extend((0..200).map(|i| (i % 7) as f32));
+        let m = Matrix::from_vec(200, 2, data).unwrap();
+        let tree = KdTree::build(&m);
+        let lists = tree.knn_all(3);
+        assert_eq!(lists.len(), 200);
+        assert!(lists.iter().all(|l| l.len() == 3));
+    }
+
+    #[test]
+    fn query_excludes_requested_index() {
+        let m = random_matrix(50, 3, 2);
+        let tree = KdTree::build(&m);
+        let res = tree.knn_query(m.row(7), 5, Some(7));
+        assert!(res.iter().all(|n| n.index != 7));
+        // nearest neighbor of the point itself without exclusion is itself
+        let res2 = tree.knn_query(m.row(7), 1, None);
+        assert_eq!(res2[0].index, 7);
+    }
+}

@@ -1,0 +1,235 @@
+//! k-nearest-neighbor search.
+//!
+//! The paper initializes the multilevel framework with an *approximate*
+//! k-NN graph built by FLANN (k = 10, Euclidean), noting that exact graphs
+//! change results very little while costing much more. This module is the
+//! from-scratch substitute:
+//!
+//! * [`brute`] — exact O(n²d) search (reference + small inputs);
+//! * [`kdtree`] — exact KD-tree search (fast at low dimensionality);
+//! * [`rpforest`] — FLANN-like randomized projection-tree forest,
+//!   approximate, near-linear build/query time (the default for large n).
+//!
+//! [`build_knn`] picks a backend automatically and returns per-point
+//! neighbor lists that [`crate::graph::affinity`] turns into the AMG
+//! affinity graph.
+
+pub mod brute;
+pub mod kdtree;
+pub mod rpforest;
+
+use crate::data::matrix::Matrix;
+
+/// One neighbor: index + squared Euclidean distance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    /// Index of the neighbor point.
+    pub index: u32,
+    /// Squared Euclidean distance to it.
+    pub sqdist: f64,
+}
+
+/// k-NN result: `lists[i]` holds up to `k` neighbors of point `i`
+/// (self excluded), ascending by distance.
+pub type NeighborLists = Vec<Vec<Neighbor>>;
+
+/// Strategy for [`build_knn`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KnnBackend {
+    /// Exact O(n²d).
+    Brute,
+    /// Exact KD-tree.
+    KdTree,
+    /// Approximate randomized projection forest (FLANN substitute).
+    RpForest,
+    /// Heuristic: brute for tiny inputs, kd-tree for low dims, rp-forest
+    /// otherwise.
+    Auto,
+}
+
+/// Build k-NN lists for all points with the chosen backend.
+///
+/// `seed` only matters for the randomized backend.
+pub fn build_knn(points: &Matrix, k: usize, backend: KnnBackend, seed: u64) -> NeighborLists {
+    let n = points.rows();
+    let d = points.cols();
+    let backend = match backend {
+        KnnBackend::Auto => {
+            if n <= 1_500 {
+                KnnBackend::Brute
+            } else if d <= 12 {
+                KnnBackend::KdTree
+            } else {
+                KnnBackend::RpForest
+            }
+        }
+        b => b,
+    };
+    match backend {
+        KnnBackend::Brute => brute::knn(points, k),
+        KnnBackend::KdTree => kdtree::KdTree::build(points).knn_all(k),
+        KnnBackend::RpForest => {
+            rpforest::RpForest::build(points, rpforest::RpForestParams::default(), seed)
+                .knn_all(k)
+        }
+        KnnBackend::Auto => unreachable!(),
+    }
+}
+
+/// A bounded max-heap that keeps the k smallest (distance, index) pairs.
+/// Shared by all backends.
+#[derive(Clone, Debug)]
+pub struct KBest {
+    k: usize,
+    // (sqdist, index), max at front via manual sift on Vec (k is small).
+    heap: Vec<(f64, u32)>,
+}
+
+impl KBest {
+    /// New collector for the k best.
+    pub fn new(k: usize) -> KBest {
+        KBest {
+            k,
+            heap: Vec::with_capacity(k + 1),
+        }
+    }
+
+    /// Current worst (largest) distance kept, or +inf while not full.
+    #[inline]
+    pub fn worst(&self) -> f64 {
+        if self.heap.len() < self.k {
+            f64::INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    /// Number collected so far.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if nothing collected.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Whether `index` is already collected (linear scan — k is small).
+    /// Callers that can produce the same candidate twice (e.g. the
+    /// rp-forest, where a pair may share a leaf in several trees) must
+    /// check this before pushing, or duplicates will crowd out real
+    /// neighbors.
+    #[inline]
+    pub fn contains(&self, index: u32) -> bool {
+        self.heap.iter().any(|&(_, i)| i == index)
+    }
+
+    /// Offer a candidate.
+    #[inline]
+    pub fn push(&mut self, sqdist: f64, index: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push((sqdist, index));
+            // sift up
+            let mut i = self.heap.len() - 1;
+            while i > 0 {
+                let parent = (i - 1) / 2;
+                if self.heap[parent].0 < self.heap[i].0 {
+                    self.heap.swap(parent, i);
+                    i = parent;
+                } else {
+                    break;
+                }
+            }
+        } else if sqdist < self.heap[0].0 {
+            self.heap[0] = (sqdist, index);
+            // sift down
+            let mut i = 0;
+            loop {
+                let (l, r) = (2 * i + 1, 2 * i + 2);
+                let mut big = i;
+                if l < self.heap.len() && self.heap[l].0 > self.heap[big].0 {
+                    big = l;
+                }
+                if r < self.heap.len() && self.heap[r].0 > self.heap[big].0 {
+                    big = r;
+                }
+                if big == i {
+                    break;
+                }
+                self.heap.swap(i, big);
+                i = big;
+            }
+        }
+    }
+
+    /// Extract neighbors sorted ascending by distance.
+    pub fn into_sorted(self) -> Vec<Neighbor> {
+        let mut v: Vec<Neighbor> = self
+            .heap
+            .into_iter()
+            .map(|(d, i)| Neighbor { index: i, sqdist: d })
+            .collect();
+        v.sort_by(|a, b| a.sqdist.partial_cmp(&b.sqdist).unwrap());
+        v
+    }
+}
+
+/// Recall of approximate lists vs exact lists: fraction of true k-NN
+/// recovered (used by tests and the micro bench).
+pub fn recall(approx: &NeighborLists, exact: &NeighborLists) -> f64 {
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (a, e) in approx.iter().zip(exact) {
+        let truth: std::collections::HashSet<u32> = e.iter().map(|n| n.index).collect();
+        total += truth.len();
+        hit += a.iter().filter(|n| truth.contains(&n.index)).count();
+    }
+    if total == 0 {
+        1.0
+    } else {
+        hit as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng};
+
+    #[test]
+    fn kbest_keeps_k_smallest() {
+        let mut kb = KBest::new(3);
+        for (i, d) in [5.0, 1.0, 4.0, 2.0, 3.0, 0.5].iter().enumerate() {
+            kb.push(*d, i as u32);
+        }
+        let out = kb.into_sorted();
+        let dists: Vec<f64> = out.iter().map(|n| n.sqdist).collect();
+        assert_eq!(dists, vec![0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn kbest_worst_tracks_heap_top() {
+        let mut kb = KBest::new(2);
+        assert_eq!(kb.worst(), f64::INFINITY);
+        kb.push(3.0, 0);
+        kb.push(1.0, 1);
+        assert_eq!(kb.worst(), 3.0);
+        kb.push(2.0, 2);
+        assert_eq!(kb.worst(), 2.0);
+    }
+
+    #[test]
+    fn auto_backend_agrees_with_brute_on_small_input() {
+        let mut rng = Pcg64::seed_from(5);
+        let n = 200;
+        let mut m = Matrix::zeros(n, 5);
+        for i in 0..n {
+            for j in 0..5 {
+                m.set(i, j, rng.normal() as f32);
+            }
+        }
+        let auto = build_knn(&m, 5, KnnBackend::Auto, 1);
+        let exact = brute::knn(&m, 5);
+        assert!(recall(&auto, &exact) > 0.999);
+    }
+}

@@ -1,0 +1,305 @@
+//! Approximate k-NN via a randomized projection-tree forest — the
+//! from-scratch substitute for FLANN [21] used by the paper.
+//!
+//! Each tree recursively splits the point set with a random hyperplane
+//! (Gaussian direction, median threshold with jitter) until leaves are
+//! small. Candidate pairs come from co-membership in leaves across all
+//! trees; an optional neighbor-of-neighbor refinement pass (NN-descent
+//! style) then repairs most remaining misses. Build and graph construction
+//! are near O(n log n · d) — versus O(n² d) exact — and the paper reports
+//! that graph approximation does not measurably change classifier quality
+//! (we verify ≥0.9 recall on Gaussian data in tests; the AMG coarsening is
+//! robust to the remainder).
+
+use crate::data::matrix::Matrix;
+use crate::knn::{KBest, Neighbor, NeighborLists};
+use crate::util::rng::{Pcg64, Rng};
+
+/// Forest parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RpForestParams {
+    /// Number of trees (more trees → higher recall, linear cost).
+    pub n_trees: usize,
+    /// Maximum leaf size (pairs within a leaf become candidates).
+    pub leaf_size: usize,
+    /// Neighbor-of-neighbor refinement sweeps after the forest pass.
+    pub refine_iters: usize,
+}
+
+impl Default for RpForestParams {
+    fn default() -> Self {
+        RpForestParams {
+            n_trees: 8,
+            leaf_size: 32,
+            refine_iters: 1,
+        }
+    }
+}
+
+enum Node {
+    Split {
+        dir: Vec<f32>,
+        thresh: f32,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+    Leaf {
+        points: Vec<u32>,
+    },
+}
+
+/// A built forest over the rows of a matrix.
+pub struct RpForest<'a> {
+    points: &'a Matrix,
+    trees: Vec<Node>,
+    params: RpForestParams,
+}
+
+fn project(dir: &[f32], row: &[f32]) -> f32 {
+    crate::data::matrix::dot(dir, row)
+}
+
+impl<'a> RpForest<'a> {
+    /// Build `params.n_trees` random projection trees.
+    pub fn build(points: &'a Matrix, params: RpForestParams, seed: u64) -> RpForest<'a> {
+        let mut rng = Pcg64::seed_from(seed ^ 0x9e37_79b9_7f4a_7c15);
+        let trees = (0..params.n_trees)
+            .map(|_| {
+                let mut idx: Vec<u32> = (0..points.rows() as u32).collect();
+                Self::build_node(points, &mut idx, params.leaf_size, &mut rng, 0)
+            })
+            .collect();
+        RpForest {
+            points,
+            trees,
+            params,
+        }
+    }
+
+    fn build_node(
+        points: &Matrix,
+        idx: &mut Vec<u32>,
+        leaf_size: usize,
+        rng: &mut Pcg64,
+        depth: usize,
+    ) -> Node {
+        if idx.len() <= leaf_size || depth > 40 {
+            return Node::Leaf {
+                points: std::mem::take(idx),
+            };
+        }
+        let d = points.cols();
+        let mut dir: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let norm = dir.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+        dir.iter_mut().for_each(|x| *x /= norm);
+        let mut projs: Vec<f32> = idx
+            .iter()
+            .map(|&i| project(&dir, points.row(i as usize)))
+            .collect();
+        // Median threshold with ±5% jitter for tree diversity.
+        let mid = projs.len() / 2;
+        let (_, &mut median, _) =
+            projs.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+        let spread = {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &p in projs.iter() {
+                lo = lo.min(p);
+                hi = hi.max(p);
+            }
+            hi - lo
+        };
+        let thresh = median + (rng.f32() - 0.5) * 0.1 * spread;
+        let mut left_idx = Vec::with_capacity(mid + 1);
+        let mut right_idx = Vec::with_capacity(mid + 1);
+        for &i in idx.iter() {
+            if project(&dir, points.row(i as usize)) < thresh {
+                left_idx.push(i);
+            } else {
+                right_idx.push(i);
+            }
+        }
+        // Degenerate split (identical projections): make a leaf.
+        if left_idx.is_empty() || right_idx.is_empty() {
+            return Node::Leaf {
+                points: std::mem::take(idx),
+            };
+        }
+        idx.clear();
+        idx.shrink_to_fit();
+        Node::Split {
+            dir,
+            thresh,
+            left: Box::new(Self::build_node(points, &mut left_idx, leaf_size, rng, depth + 1)),
+            right: Box::new(Self::build_node(points, &mut right_idx, leaf_size, rng, depth + 1)),
+        }
+    }
+
+    fn leaves<'n>(node: &'n Node, out: &mut Vec<&'n [u32]>) {
+        match node {
+            Node::Leaf { points } => out.push(points),
+            Node::Split { left, right, .. } => {
+                Self::leaves(left, out);
+                Self::leaves(right, out);
+            }
+        }
+    }
+
+    /// Approximate k-NN lists for all points.
+    pub fn knn_all(&self, k: usize) -> NeighborLists {
+        let n = self.points.rows();
+        let mut best: Vec<KBest> = (0..n).map(|_| KBest::new(k)).collect();
+
+        // Phase 1: all pairs within each leaf of each tree.
+        for tree in &self.trees {
+            let mut leaves = Vec::new();
+            Self::leaves(tree, &mut leaves);
+            for leaf in leaves {
+                for (a_pos, &a) in leaf.iter().enumerate() {
+                    let ra = self.points.row(a as usize);
+                    for &b in leaf.iter().skip(a_pos + 1) {
+                        let d = crate::data::matrix::sqdist(ra, self.points.row(b as usize));
+                        if d < best[a as usize].worst() && !best[a as usize].contains(b) {
+                            best[a as usize].push(d, b);
+                        }
+                        if d < best[b as usize].worst() && !best[b as usize].contains(a) {
+                            best[b as usize].push(d, a);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Phase 2: neighbor-of-neighbor refinement (NN-descent lite).
+        for _ in 0..self.params.refine_iters {
+            let snapshot: Vec<Vec<u32>> = best
+                .iter()
+                .map(|kb| kb.clone().into_sorted().iter().map(|n| n.index).collect())
+                .collect();
+            for i in 0..n {
+                let ri = self.points.row(i);
+                for &j in &snapshot[i] {
+                    for &l in &snapshot[j as usize] {
+                        if l as usize == i {
+                            continue;
+                        }
+                        let d = crate::data::matrix::sqdist(ri, self.points.row(l as usize));
+                        if d < best[i].worst() && !best[i].contains(l) {
+                            best[i].push(d, l);
+                        }
+                        if d < best[l as usize].worst() && !best[l as usize].contains(i as u32) {
+                            best[l as usize].push(d, i as u32);
+                        }
+                    }
+                }
+            }
+        }
+
+        best.into_iter()
+            .map(|kb| {
+                // Deduplicate (a pair can surface in several trees).
+                let mut v = kb.into_sorted();
+                v.dedup_by_key(|n| n.index);
+                v.truncate(k);
+                v
+            })
+            .collect()
+    }
+
+    /// Approximate k-NN of an arbitrary query: descend each tree, brute
+    /// force over the union of reached leaves.
+    pub fn knn_query(&self, query: &[f32], k: usize) -> Vec<Neighbor> {
+        let mut kb = KBest::new(k);
+        let mut seen = std::collections::HashSet::new();
+        for tree in &self.trees {
+            let mut node = tree;
+            loop {
+                match node {
+                    Node::Leaf { points } => {
+                        for &i in points {
+                            if seen.insert(i) {
+                                let d =
+                                    crate::data::matrix::sqdist(query, self.points.row(i as usize));
+                                if d < kb.worst() {
+                                    kb.push(d, i);
+                                }
+                            }
+                        }
+                        break;
+                    }
+                    Node::Split {
+                        dir,
+                        thresh,
+                        left,
+                        right,
+                    } => {
+                        node = if project(dir, query) < *thresh {
+                            left
+                        } else {
+                            right
+                        };
+                    }
+                }
+            }
+        }
+        kb.into_sorted()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::knn::{brute, recall};
+
+    fn gaussian_clusters(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            let c = (i % 5) as f64 * 4.0;
+            for j in 0..d {
+                m.set(i, j, (c + rng.normal()) as f32);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn recall_is_high_on_clustered_data() {
+        let m = gaussian_clusters(1200, 16, 3);
+        let forest = RpForest::build(&m, RpForestParams::default(), 7);
+        let approx = forest.knn_all(10);
+        let exact = brute::knn(&m, 10);
+        let r = recall(&approx, &exact);
+        assert!(r > 0.9, "recall={r}");
+    }
+
+    #[test]
+    fn lists_are_sorted_self_free_and_unique() {
+        let m = gaussian_clusters(400, 8, 4);
+        let forest = RpForest::build(&m, RpForestParams::default(), 1);
+        let lists = forest.knn_all(6);
+        for (i, l) in lists.iter().enumerate() {
+            assert!(l.iter().all(|n| n.index as usize != i), "self loop at {i}");
+            for w in l.windows(2) {
+                assert!(w[0].sqdist <= w[1].sqdist);
+                assert_ne!(w[0].index, w[1].index);
+            }
+        }
+    }
+
+    #[test]
+    fn query_returns_near_points() {
+        let m = gaussian_clusters(500, 8, 5);
+        let forest = RpForest::build(&m, RpForestParams::default(), 2);
+        let res = forest.knn_query(m.row(42), 3);
+        assert_eq!(res[0].index, 42, "nearest to a data point is itself");
+    }
+
+    #[test]
+    fn duplicate_points_terminate() {
+        let m = Matrix::from_vec(300, 2, vec![1.0; 600]).unwrap();
+        let forest = RpForest::build(&m, RpForestParams::default(), 3);
+        let lists = forest.knn_all(4);
+        assert_eq!(lists.len(), 300);
+    }
+}

@@ -1,0 +1,65 @@
+//! # mlsvm — Algebraic Multigrid Support Vector Machines
+//!
+//! A from-scratch reproduction of *"Algebraic multigrid support vector
+//! machines"* (Sadrfaridpour et al., 2016) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the multilevel (W)SVM framework: AMG
+//!   coarsening of k-NN affinity graphs ([`amg`]), coarsest-level learning
+//!   with uniform-design model selection ([`modelsel`]), support-vector
+//!   guided uncoarsening with parameter inheritance ([`mlsvm`]), an SMO
+//!   (W)SVM solver ([`svm`]), FLANN-like approximate k-NN ([`knn`]), and a
+//!   coordinator for one-vs-rest multiclass training and batched
+//!   prediction ([`coordinator`]).
+//! * **Layer 2 (JAX, build time)** — dense RBF kernel-matrix tiles and the
+//!   SVM decision function, AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 1 (Pallas, build time)** — the tiled Gaussian-kernel compute
+//!   hot-spot, lowered inside the L2 graph.
+//!
+//! At run time the [`runtime`] module loads the HLO artifacts through the
+//! PJRT CPU client (`xla` crate); Python is never on the training or
+//! serving path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mlsvm::prelude::*;
+//!
+//! // Generate a small imbalanced problem and train a multilevel WSVM.
+//! let mut rng = Pcg64::seed_from(7);
+//! let ds = mlsvm::data::synth::two_gaussians(2_000, 200, 6, 2.5, &mut rng);
+//! let (train, test) = mlsvm::data::split::train_test_split(&ds, 0.2, &mut rng);
+//! let params = MlsvmParams::default();
+//! let model = MlsvmTrainer::new(params).train(&train, &mut rng).unwrap();
+//! let m = mlsvm::metrics::evaluate(&model.model, &test);
+//! println!("G-mean = {:.3}", m.gmean());
+//! ```
+
+pub mod amg;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod graph;
+pub mod knn;
+pub mod metrics;
+pub mod mlsvm;
+pub mod modelsel;
+pub mod runtime;
+pub mod svm;
+pub mod util;
+
+/// Convenience re-exports of the most commonly used types.
+pub mod prelude {
+    // NOTE: entries are enabled as modules land during the build-out.
+    pub use crate::amg::hierarchy::{Hierarchy, HierarchyParams};
+    pub use crate::data::dataset::Dataset;
+    pub use crate::data::matrix::Matrix;
+    pub use crate::error::{Error, Result};
+    pub use crate::metrics::Metrics;
+    pub use crate::mlsvm::params::MlsvmParams;
+    pub use crate::mlsvm::trainer::{MlsvmModel, MlsvmTrainer};
+    pub use crate::svm::kernel::{Kernel, RbfKernel};
+    pub use crate::svm::model::SvmModel;
+    pub use crate::svm::smo::SvmParams;
+    pub use crate::util::rng::{Pcg64, Rng};
+}

@@ -1,0 +1,223 @@
+//! `mlsvm` — the command-line launcher for the multilevel (W)SVM
+//! framework.
+//!
+//! Subcommands:
+//!
+//! * `train`      — train MLWSVM on a LibSVM/CSV file, save the model;
+//! * `predict`    — load a model, predict a file, report metrics;
+//! * `bench`      — regenerate a paper table (`table1|table2|table3`)
+//!                  (thin wrapper; `cargo bench --bench tableN` runs the
+//!                  same harness);
+//! * `gen`        — emit a synthetic data set (Table-1 analog) to libsvm
+//!                  format for external tools;
+//! * `info`       — print artifact/runtime diagnostics.
+//!
+//! Run `mlsvm <subcommand> --help` for options.
+
+use mlsvm::coordinator::report::fmt_secs;
+use mlsvm::data::synth::uci;
+use mlsvm::error::{Error, Result};
+use mlsvm::prelude::*;
+use mlsvm::util::cli::Args;
+use mlsvm::util::timer::Timer;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() {
+        "help".to_string()
+    } else {
+        argv.remove(0)
+    };
+    let code = match run(&cmd, argv) {
+        Ok(()) => 0,
+        Err(Error::Usage(msg)) => {
+            eprintln!("{msg}");
+            2
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_any(path: &str) -> Result<Dataset> {
+    if path.ends_with(".csv") {
+        mlsvm::data::csv::load(path, mlsvm::data::csv::CsvOptions::default())
+    } else {
+        mlsvm::data::libsvm::load(path)
+    }
+}
+
+fn run(cmd: &str, argv: Vec<String>) -> Result<()> {
+    match cmd {
+        "train" => cmd_train(argv),
+        "predict" => cmd_predict(argv),
+        "gen" => cmd_gen(argv),
+        "info" => cmd_info(argv),
+        "bench" => {
+            Err(Error::Usage(
+                "run the harnesses directly: cargo bench --bench table1|table2|table3|ablation|micro".into(),
+            ))
+        }
+        "help" | "--help" | "-h" => {
+            println!(
+                "mlsvm — algebraic multigrid support vector machines\n\n\
+                 usage: mlsvm <train|predict|gen|info> [options]\n\
+                 try:   mlsvm train --help"
+            );
+            Ok(())
+        }
+        other => Err(Error::Usage(format!("unknown subcommand '{other}'"))),
+    }
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("mlsvm train", "train a multilevel WSVM")
+        .opt("data", "training file (.libsvm/.svm or .csv)", None)
+        .opt("model-out", "where to save the model", Some("model.mlsvm"))
+        .opt("test-frac", "held-out fraction for evaluation", Some("0.2"))
+        .opt("caliber", "AMG interpolation order R", Some("2"))
+        .opt("coarsest", "per-class coarsest level size", Some("250"))
+        .opt("qdt", "Q_dt: max |data_train| for UD refinement", Some("1200"))
+        .opt("knn", "k of the k-NN graph", Some("10"))
+        .opt("seed", "random seed", Some("0"))
+        .flag("no-volumes", "ignore AMG volumes as instance weights")
+        .flag("quiet", "suppress per-level log")
+        .parse_from(argv)?;
+    let data_path = args
+        .get("data")
+        .ok_or_else(|| Error::Usage("--data is required".into()))?
+        .to_string();
+    let seed = args.get_u64("seed")?;
+    let mut rng = Pcg64::seed_from(seed);
+
+    let mut ds = load_any(&data_path)?;
+    let mut params = MlsvmParams::default().with_seed(seed);
+    params.hierarchy.caliber = args.get_usize("caliber")?;
+    params.hierarchy.coarsest_size = args.get_usize("coarsest")?;
+    params.hierarchy.knn_k = args.get_usize("knn")?;
+    params.qdt = args.get_usize("qdt")?;
+    params.use_volumes = !args.get_flag("no-volumes");
+
+    let test_frac = args.get_f64("test-frac")?;
+    let (mut train, mut test) = mlsvm::data::split::train_test_split(&ds, test_frac, &mut rng);
+    mlsvm::data::scale::Scaler::fit_transform(&mut train, Some(&mut test));
+    ds.labels.clear(); // free
+
+    let t = Timer::start();
+    let model = MlsvmTrainer::new(params).train(&train, &mut rng)?;
+    let secs = t.secs();
+    if !args.get_flag("quiet") {
+        for s in &model.level_stats {
+            eprintln!(
+                "[level {:?}] n={} nsv={} ud={} t={}s",
+                s.levels,
+                s.train_size,
+                s.n_sv,
+                s.ud_used,
+                fmt_secs(s.seconds)
+            );
+        }
+    }
+    let m = mlsvm::metrics::evaluate(&model.model, &test);
+    println!(
+        "train {}s | test {} (n={}, r_imb={:.2})",
+        fmt_secs(secs),
+        m.report(),
+        test.len(),
+        test.imbalance()
+    );
+    let out = args.get("model-out").unwrap();
+    model.model.save(out)?;
+    eprintln!("model saved to {out}");
+    Ok(())
+}
+
+fn cmd_predict(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("mlsvm predict", "predict with a trained model")
+        .opt("model", "model file", Some("model.mlsvm"))
+        .opt("data", "file to predict (.svm/.csv; labels used for metrics)", None)
+        .flag("pjrt", "serve through the PJRT decision artifact router")
+        .parse_from(argv)?;
+    let data_path = args
+        .get("data")
+        .ok_or_else(|| Error::Usage("--data is required".into()))?;
+    let model = SvmModel::load(args.get("model").unwrap())?;
+    let ds = load_any(data_path)?;
+    let t = Timer::start();
+    let preds: Vec<i8> = if args.get_flag("pjrt") {
+        let mut rt = mlsvm::runtime::Runtime::new(mlsvm::runtime::Runtime::default_dir())?;
+        let mut router = mlsvm::coordinator::Router::new_pjrt(
+            &rt,
+            &model,
+            std::time::Duration::from_millis(5),
+        )?;
+        let ids: Vec<u64> = (0..ds.len()).map(|i| router.submit(ds.points.row(i))).collect();
+        router.flush(&mut rt)?;
+        eprintln!(
+            "router: {} batches, utilization {:.2}",
+            router.stats.batches,
+            router.stats.utilization()
+        );
+        ids.iter()
+            .map(|id| if router.take(*id).unwrap() > 0.0 { 1 } else { -1 })
+            .collect()
+    } else {
+        model.predict_batch(&ds.points)
+    };
+    let secs = t.secs();
+    let m = mlsvm::metrics::Metrics::from_labels(&ds.labels, &preds);
+    println!(
+        "predicted {} points in {}s ({:.0}/s) | {}",
+        ds.len(),
+        fmt_secs(secs),
+        ds.len() as f64 / secs.max(1e-9),
+        m.report()
+    );
+    Ok(())
+}
+
+fn cmd_gen(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("mlsvm gen", "generate a synthetic Table-1 analog data set")
+        .opt("name", "data set name (e.g. Forest, Ringnorm)", Some("Twonorm"))
+        .opt("scale", "size scale vs the paper (1.0 = paper n)", Some("1.0"))
+        .opt("out", "output libsvm file", Some("data.svm"))
+        .opt("seed", "random seed", Some("0"))
+        .parse_from(argv)?;
+    let name = args.get("name").unwrap();
+    let spec = uci::spec_by_name(name)
+        .ok_or_else(|| Error::Usage(format!("unknown data set '{name}'")))?;
+    let mut rng = Pcg64::seed_from(args.get_u64("seed")?);
+    let ds = spec.generate(args.get_f64("scale")?, &mut rng);
+    mlsvm::data::libsvm::save(&ds, args.get("out").unwrap())?;
+    println!(
+        "{}: n={} n_f={} r_imb={:.2} -> {}",
+        spec.name,
+        ds.len(),
+        ds.dim(),
+        ds.imbalance(),
+        args.get("out").unwrap()
+    );
+    Ok(())
+}
+
+fn cmd_info(argv: Vec<String>) -> Result<()> {
+    let _args = Args::new("mlsvm info", "runtime diagnostics").parse_from(argv)?;
+    let dir = mlsvm::runtime::Runtime::default_dir();
+    println!("artifact dir: {}", dir.display());
+    match mlsvm::runtime::Runtime::new(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            let mut names = rt.artifacts.names().into_iter().map(String::from).collect::<Vec<_>>();
+            names.sort();
+            for n in names {
+                println!("artifact: {n}");
+            }
+        }
+        Err(e) => println!("runtime unavailable: {e}"),
+    }
+    println!("threads: {}", mlsvm::util::pool::num_threads());
+    Ok(())
+}

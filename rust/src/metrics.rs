@@ -1,0 +1,153 @@
+//! Evaluation measures (Eq. 5–6 of the paper): sensitivity SN, specificity
+//! SP, G-mean κ = √(SN·SP) — the paper's primary imbalanced-classification
+//! measure — and accuracy ACC.
+
+use crate::data::dataset::Dataset;
+use crate::svm::model::SvmModel;
+
+/// Confusion counts for binary classification (+1 = positive/minority).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Metrics {
+    /// True positives.
+    pub tp: usize,
+    /// True negatives.
+    pub tn: usize,
+    /// False positives.
+    pub fp: usize,
+    /// False negatives.
+    pub fn_: usize,
+}
+
+impl Metrics {
+    /// Accumulate one (truth, prediction) pair.
+    pub fn push(&mut self, truth: i8, pred: i8) {
+        match (truth, pred) {
+            (1, 1) => self.tp += 1,
+            (-1, -1) => self.tn += 1,
+            (-1, 1) => self.fp += 1,
+            (1, -1) => self.fn_ += 1,
+            _ => panic!("labels must be ±1"),
+        }
+    }
+
+    /// Build from parallel label slices.
+    pub fn from_labels(truth: &[i8], pred: &[i8]) -> Metrics {
+        assert_eq!(truth.len(), pred.len());
+        let mut m = Metrics::default();
+        for (&t, &p) in truth.iter().zip(pred) {
+            m.push(t, p);
+        }
+        m
+    }
+
+    /// Total count.
+    pub fn total(&self) -> usize {
+        self.tp + self.tn + self.fp + self.fn_
+    }
+
+    /// Sensitivity TP/(TP+FN); 0 when no positives.
+    pub fn sensitivity(&self) -> f64 {
+        let d = self.tp + self.fn_;
+        if d == 0 {
+            0.0
+        } else {
+            self.tp as f64 / d as f64
+        }
+    }
+
+    /// Specificity TN/(TN+FP); 0 when no negatives.
+    pub fn specificity(&self) -> f64 {
+        let d = self.tn + self.fp;
+        if d == 0 {
+            0.0
+        } else {
+            self.tn as f64 / d as f64
+        }
+    }
+
+    /// G-mean κ = √(SN·SP) — the paper's main quality measure.
+    pub fn gmean(&self) -> f64 {
+        (self.sensitivity() * self.specificity()).sqrt()
+    }
+
+    /// Accuracy.
+    pub fn accuracy(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            (self.tp + self.tn) as f64 / t as f64
+        }
+    }
+
+    /// One-line report `ACC=… SN=… SP=… κ=…`.
+    pub fn report(&self) -> String {
+        format!(
+            "ACC={:.3} SN={:.3} SP={:.3} κ={:.3}",
+            self.accuracy(),
+            self.sensitivity(),
+            self.specificity(),
+            self.gmean()
+        )
+    }
+}
+
+/// Evaluate a trained model on a labeled dataset.
+pub fn evaluate(model: &SvmModel, ds: &Dataset) -> Metrics {
+    let pred = model.predict_batch(&ds.points);
+    Metrics::from_labels(&ds.labels, &pred)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        let t = vec![1, -1, 1, -1];
+        let m = Metrics::from_labels(&t, &t);
+        assert_eq!(m.accuracy(), 1.0);
+        assert_eq!(m.gmean(), 1.0);
+        assert_eq!(m.total(), 4);
+    }
+
+    #[test]
+    fn always_majority_has_zero_gmean() {
+        let truth = vec![1, -1, -1, -1];
+        let pred = vec![-1, -1, -1, -1];
+        let m = Metrics::from_labels(&truth, &pred);
+        assert_eq!(m.accuracy(), 0.75);
+        assert_eq!(m.sensitivity(), 0.0);
+        assert_eq!(m.specificity(), 1.0);
+        assert_eq!(m.gmean(), 0.0);
+    }
+
+    #[test]
+    fn paper_formulae() {
+        // TP=8, FN=2, TN=85, FP=5
+        let mut m = Metrics::default();
+        for _ in 0..8 {
+            m.push(1, 1);
+        }
+        for _ in 0..2 {
+            m.push(1, -1);
+        }
+        for _ in 0..85 {
+            m.push(-1, -1);
+        }
+        for _ in 0..5 {
+            m.push(-1, 1);
+        }
+        assert!((m.sensitivity() - 0.8).abs() < 1e-12);
+        assert!((m.specificity() - 85.0 / 90.0).abs() < 1e-12);
+        assert!((m.gmean() - (0.8f64 * 85.0 / 90.0).sqrt()).abs() < 1e-12);
+        assert!((m.accuracy() - 93.0 / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_pm1() {
+        let mut m = Metrics::default();
+        m.push(0, 1);
+    }
+}

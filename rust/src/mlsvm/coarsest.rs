@@ -1,0 +1,80 @@
+//! Coarsest-level learning (Algorithm 2): when both classes are small,
+//! train (W)SVM with full UD model selection and return the support
+//! vectors and the learned parameters for inheritance.
+
+use crate::data::dataset::Dataset;
+use crate::error::Result;
+use crate::modelsel::search::{ud_search_with_ratio, UdSearchConfig, UdSearchOutcome};
+use crate::svm::model::SvmModel;
+use crate::svm::smo::train_weighted;
+use crate::util::rng::Pcg64;
+
+/// Output of the coarsest-level learning.
+#[derive(Debug)]
+pub struct CoarsestResult {
+    /// Model trained with the winning parameters on the full coarsest set.
+    pub model: SvmModel,
+    /// The UD outcome (parameters + CV score + log₂ center for
+    /// inheritance).
+    pub outcome: UdSearchOutcome,
+}
+
+/// Algorithm 2: UD-tuned training on the coarsest training set.
+/// `ratio` is the finest-level n⁻/n⁺ used for the C⁺/C⁻ coupling.
+pub fn train_coarsest(
+    ds: &Dataset,
+    use_volumes: bool,
+    ud: &UdSearchConfig,
+    ratio: Option<f64>,
+    rng: &mut Pcg64,
+) -> Result<CoarsestResult> {
+    let outcome = ud_search_with_ratio(ds, use_volumes, ud, None, ratio, rng)?;
+    let weights = volume_weights(ds, use_volumes);
+    let model = train_weighted(&ds.points, &ds.labels, &outcome.params, weights.as_deref())?;
+    Ok(CoarsestResult { model, outcome })
+}
+
+/// Mean-normalized volumes as instance weights (or None).
+pub fn volume_weights(ds: &Dataset, use_volumes: bool) -> Option<Vec<f64>> {
+    if !use_volumes {
+        return None;
+    }
+    let mean: f64 = ds.volumes.iter().sum::<f64>() / ds.len().max(1) as f64;
+    if mean <= 0.0 {
+        return None;
+    }
+    Some(ds.volumes.iter().map(|v| v / mean).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+    use crate::modelsel::search::UdSearchConfig;
+
+    #[test]
+    fn coarsest_training_produces_model_and_center() {
+        let mut rng = Pcg64::seed_from(71);
+        let ds = two_gaussians(120, 60, 3, 4.0, &mut rng);
+        let cfg = UdSearchConfig {
+            stage1_points: 5,
+            stage2_points: 5,
+            folds: 2,
+            ..Default::default()
+        };
+        let res = train_coarsest(&ds, false, &cfg, None, &mut rng).unwrap();
+        assert!(res.model.n_sv() > 0);
+        assert!(res.outcome.gmean > 0.8);
+    }
+
+    #[test]
+    fn volume_weights_normalize_to_mean_one() {
+        let mut rng = Pcg64::seed_from(72);
+        let mut ds = two_gaussians(10, 10, 2, 3.0, &mut rng);
+        ds.volumes = (1..=20).map(|v| v as f64).collect();
+        let w = volume_weights(&ds, true).unwrap();
+        let mean: f64 = w.iter().sum::<f64>() / 20.0;
+        assert!((mean - 1.0).abs() < 1e-12);
+        assert!(volume_weights(&ds, false).is_none());
+    }
+}

@@ -1,0 +1,17 @@
+//! The multilevel (W)SVM framework — the paper's contribution.
+//!
+//! * [`params`] — all framework knobs with the paper's defaults;
+//! * [`coarsest`] — Algorithm 2: exact learning + UD tuning at the
+//!   coarsest level;
+//! * [`uncoarsen`] — Algorithm 3 helpers: support-vector aggregate
+//!   expansion (I⁻¹), training-set reconstruction, parameter inheritance;
+//! * [`trainer`] — the driver: per-class AMG hierarchies, coarsest
+//!   learning, level-by-level refinement to the finest model.
+
+pub mod coarsest;
+pub mod params;
+pub mod trainer;
+pub mod uncoarsen;
+
+pub use params::MlsvmParams;
+pub use trainer::{MlsvmModel, MlsvmTrainer};

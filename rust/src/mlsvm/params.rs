@@ -1,0 +1,90 @@
+//! Framework parameters with the paper's defaults.
+
+use crate::amg::hierarchy::HierarchyParams;
+use crate::modelsel::search::UdSearchConfig;
+
+/// All knobs of the multilevel (W)SVM framework.
+#[derive(Clone, Debug)]
+pub struct MlsvmParams {
+    /// Per-class AMG hierarchy parameters (k=10, Q=0.5, η=2, caliber R).
+    /// `coarsest_size` is per class; the paper's ~500-point coarsest level
+    /// corresponds to ~250 per class.
+    pub hierarchy: HierarchyParams,
+    /// Q_dt of Algorithm 3: UD model selection runs only while the level
+    /// training set is smaller than this.
+    pub qdt: usize,
+    /// UD search configuration (shared by Algorithm 2 and the refinement).
+    pub ud: UdSearchConfig,
+    /// Use AMG volumes as per-instance C multipliers at coarse levels
+    /// (aggregates representing more fine points resist misclassification
+    /// harder).
+    pub use_volumes: bool,
+    /// Number of k-NN-graph neighbor rings added around the expanded SV
+    /// aggregates at each refinement level (the paper's "add their
+    /// neighborhoods"). 0 disables growth.
+    pub grow_hops: usize,
+    /// UD refinement needs enough data for a stable CV signal; below this
+    /// size parameters are inherited unchanged instead of re-tuned.
+    pub min_ud_size: usize,
+    /// A class whose finest size is at most this many points always
+    /// participates with **all** its points during refinement (the paper's
+    /// imbalanced-data copy-through: a small class stops coarsening early
+    /// and is carried in full).
+    pub keep_small_class_full: usize,
+    /// RNG seed for splits/search (hierarchy has its own in `hierarchy`).
+    pub seed: u64,
+}
+
+impl Default for MlsvmParams {
+    fn default() -> Self {
+        MlsvmParams {
+            hierarchy: HierarchyParams {
+                coarsest_size: 250,
+                ..Default::default()
+            },
+            qdt: 1_200,
+            grow_hops: 1,
+            min_ud_size: 150,
+            ud: UdSearchConfig::default(),
+            use_volumes: true,
+            keep_small_class_full: 300,
+            seed: 0,
+        }
+    }
+}
+
+impl MlsvmParams {
+    /// Convenience: set the interpolation order R (Table 3 sweep).
+    pub fn with_caliber(mut self, r: usize) -> Self {
+        self.hierarchy.caliber = r;
+        self
+    }
+
+    /// Convenience: set the seed for all stochastic pieces.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self.hierarchy.seed = seed ^ 0xa5a5_5a5a;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = MlsvmParams::default();
+        assert_eq!(p.hierarchy.knn_k, 10);
+        assert_eq!(p.hierarchy.q, 0.5);
+        assert_eq!(p.hierarchy.eta, 2.0);
+        assert!(p.hierarchy.coarsest_size <= 500);
+    }
+
+    #[test]
+    fn builders_apply() {
+        let p = MlsvmParams::default().with_caliber(6).with_seed(9);
+        assert_eq!(p.hierarchy.caliber, 6);
+        assert_eq!(p.seed, 9);
+    }
+}

@@ -1,0 +1,265 @@
+//! The multilevel training driver.
+//!
+//! ```text
+//! train(D):
+//!   (D⁺, D⁻) ← split classes
+//!   H⁺ ← AMG hierarchy of D⁺;  H⁻ ← AMG hierarchy of D⁻      (coarsening)
+//!   coarsest: UD-tuned WSVM on stacked coarsest levels        (Algorithm 2)
+//!   for each finer level pair (aligned from the coarsest):
+//!     data_train ← aggregates I⁻¹ of the previous SVs         (Algorithm 3)
+//!     if |data_train| < Q_dt: UD around inherited (C,γ)
+//!     else: inherit parameters, single WSVM train
+//!   return finest model
+//! ```
+//!
+//! The two hierarchies may have different depths (the imbalanced-data
+//! copy-through: a small class coarsens in fewer levels and is then
+//! carried unchanged); levels are aligned from the coarsest end.
+
+use crate::amg::hierarchy::Hierarchy;
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::mlsvm::coarsest::{train_coarsest, volume_weights};
+use crate::mlsvm::params::MlsvmParams;
+use crate::mlsvm::uncoarsen::{advance_active, build_level_dataset, svs_to_class_nodes, ActiveSet};
+use crate::modelsel::search::ud_search_with_ratio;
+use crate::svm::model::SvmModel;
+use crate::svm::smo::{train_weighted, SvmParams};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Timer;
+
+/// Statistics recorded at each trained level (coarsest first).
+#[derive(Clone, Debug)]
+pub struct LevelStat {
+    /// (pos level, neg level) in the two hierarchies.
+    pub levels: (usize, usize),
+    /// Training set size at this step.
+    pub train_size: usize,
+    /// Support vectors of the model trained here.
+    pub n_sv: usize,
+    /// Whether UD model selection ran at this step.
+    pub ud_used: bool,
+    /// Wall-clock seconds spent at this step.
+    pub seconds: f64,
+    /// CV G-mean reported by UD (if it ran).
+    pub cv_gmean: Option<f64>,
+}
+
+/// Trained multilevel model.
+#[derive(Debug)]
+pub struct MlsvmModel {
+    /// The finest-level model (use for prediction).
+    pub model: SvmModel,
+    /// Final training parameters (after inheritance/refinement).
+    pub params: SvmParams,
+    /// Per-level statistics, coarsest first.
+    pub level_stats: Vec<LevelStat>,
+    /// Depths of the (minority, majority) hierarchies.
+    pub depths: (usize, usize),
+}
+
+/// The multilevel trainer.
+pub struct MlsvmTrainer {
+    /// Framework parameters.
+    pub params: MlsvmParams,
+}
+
+impl MlsvmTrainer {
+    /// Create a trainer.
+    pub fn new(params: MlsvmParams) -> Self {
+        MlsvmTrainer { params }
+    }
+
+    /// Train a multilevel (W)SVM on the given training set.
+    pub fn train(&self, train: &Dataset, rng: &mut Pcg64) -> Result<MlsvmModel> {
+        let p = &self.params;
+        if train.n_pos() == 0 || train.n_neg() == 0 {
+            return Err(Error::Degenerate(
+                "mlsvm: training set must contain both classes".into(),
+            ));
+        }
+        let (dpos, _, dneg, _) = train.split_classes();
+
+        // ---- Coarsening phase (per class) ----
+        let mut hp_params = p.hierarchy;
+        hp_params.seed = p.hierarchy.seed ^ 0x0b57;
+        let mut hn_params = p.hierarchy;
+        hn_params.seed = p.hierarchy.seed ^ 0x1c68;
+        let hpos = Hierarchy::build(dpos.points.clone(), hp_params)?;
+        let hneg = Hierarchy::build(dneg.points.clone(), hn_params)?;
+        let (dp, dn) = (hpos.depth(), hneg.depth());
+
+        let keep_pos_full = dpos.len() <= p.keep_small_class_full;
+        let keep_neg_full = dneg.len() <= p.keep_small_class_full;
+
+        // ---- Coarsest-level learning (Algorithm 2) ----
+        let mut active_pos = ActiveSet {
+            level: dp - 1,
+            nodes: (0..hpos.levels[dp - 1].len() as u32).collect(),
+        };
+        let mut active_neg = ActiveSet {
+            level: dn - 1,
+            nodes: (0..hneg.levels[dn - 1].len() as u32).collect(),
+        };
+        let mut stats = Vec::new();
+        // C⁺/C⁻ coupling ratio fixed at the finest-level class sizes and
+        // inherited by every level (see ud_search_with_ratio).
+        let global_ratio = dneg.len().max(1) as f64 / dpos.len().max(1) as f64;
+        let t0 = Timer::start();
+        let ds0 = build_level_dataset(&hpos, &hneg, &active_pos, &active_neg)?;
+        let coarsest = train_coarsest(&ds0, p.use_volumes, &p.ud, Some(global_ratio), rng)?;
+        let mut model = coarsest.model;
+        let mut params = coarsest.outcome.params;
+        let mut center = coarsest.outcome.center;
+        stats.push(LevelStat {
+            levels: (active_pos.level, active_neg.level),
+            train_size: ds0.len(),
+            n_sv: model.n_sv(),
+            ud_used: true,
+            seconds: t0.secs(),
+            cv_gmean: Some(coarsest.outcome.gmean),
+        });
+
+        // ---- Uncoarsening (Algorithm 3) ----
+        let steps = dp.max(dn).saturating_sub(1);
+        for _step in 0..steps {
+            let t = Timer::start();
+            let (sv_pos, sv_neg) = svs_to_class_nodes(&model, &active_pos, &active_neg);
+            active_pos = advance_active(&hpos, &active_pos, &sv_pos, keep_pos_full, p.grow_hops);
+            active_neg = advance_active(&hneg, &active_neg, &sv_neg, keep_neg_full, p.grow_hops);
+            let ds = build_level_dataset(&hpos, &hneg, &active_pos, &active_neg)?;
+            if ds.n_pos() == 0 || ds.n_neg() == 0 {
+                return Err(Error::Degenerate(format!(
+                    "mlsvm: class vanished at level pair ({}, {})",
+                    active_pos.level, active_neg.level
+                )));
+            }
+            let use_ud = ds.len() < p.qdt && ds.len() >= p.min_ud_size;
+            let cv_gmean = if use_ud {
+                // Lines 8–9: UD around the inherited parameters.
+                let out = ud_search_with_ratio(
+                    &ds,
+                    p.use_volumes,
+                    &p.ud,
+                    Some(center),
+                    Some(global_ratio),
+                    rng,
+                )?;
+                params = out.params;
+                center = out.center;
+                Some(out.gmean)
+            } else {
+                // Lines 11–14: inherit parameters unchanged.
+                None
+            };
+            let weights = volume_weights(&ds, p.use_volumes);
+            model = train_weighted(&ds.points, &ds.labels, &params, weights.as_deref())?;
+            stats.push(LevelStat {
+                levels: (active_pos.level, active_neg.level),
+                train_size: ds.len(),
+                n_sv: model.n_sv(),
+                ud_used: use_ud,
+                seconds: t.secs(),
+                cv_gmean,
+            });
+        }
+
+        Ok(MlsvmModel {
+            model,
+            params,
+            level_stats: stats,
+            depths: (dp, dn),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{two_gaussians, xor_blobs};
+    use crate::metrics::evaluate;
+    use crate::modelsel::search::UdSearchConfig;
+
+    fn quick_params(seed: u64) -> MlsvmParams {
+        MlsvmParams {
+            hierarchy: crate::amg::hierarchy::HierarchyParams {
+                coarsest_size: 60,
+                ..Default::default()
+            },
+            qdt: 400,
+            ud: UdSearchConfig {
+                stage1_points: 5,
+                stage2_points: 5,
+                folds: 2,
+                ..Default::default()
+            },
+            keep_small_class_full: 120,
+            ..Default::default()
+        }
+        .with_seed(seed)
+    }
+
+    #[test]
+    fn trains_through_multiple_levels_on_easy_data() {
+        let mut rng = Pcg64::seed_from(81);
+        let ds = two_gaussians(700, 150, 5, 4.0, &mut rng);
+        let (tr, te) = crate::data::split::train_test_split(&ds, 0.25, &mut rng);
+        let model = MlsvmTrainer::new(quick_params(1)).train(&tr, &mut rng).unwrap();
+        assert!(
+            model.level_stats.len() >= 2,
+            "expected multilevel refinement, got {:?}",
+            model.level_stats.len()
+        );
+        let m = evaluate(&model.model, &te);
+        assert!(m.gmean() > 0.9, "gmean={}", m.gmean());
+        // coarsest always uses UD
+        assert!(model.level_stats[0].ud_used);
+    }
+
+    #[test]
+    fn nonlinear_problem_needs_and_gets_rbf_refinement() {
+        let mut rng = Pcg64::seed_from(82);
+        let ds = xor_blobs(250, 2, 4.0, &mut rng);
+        let (tr, te) = crate::data::split::train_test_split(&ds, 0.25, &mut rng);
+        let model = MlsvmTrainer::new(quick_params(2)).train(&tr, &mut rng).unwrap();
+        let m = evaluate(&model.model, &te);
+        assert!(m.gmean() > 0.85, "xor gmean={}", m.gmean());
+    }
+
+    #[test]
+    fn degenerate_single_class_errors() {
+        let mut rng = Pcg64::seed_from(83);
+        let mut ds = two_gaussians(50, 10, 2, 3.0, &mut rng);
+        for l in ds.labels.iter_mut() {
+            *l = -1;
+        }
+        assert!(MlsvmTrainer::new(quick_params(3)).train(&ds, &mut rng).is_err());
+    }
+
+    #[test]
+    fn small_minority_is_kept_in_full() {
+        let mut rng = Pcg64::seed_from(84);
+        // 60 positives (< keep_small_class_full) vs 800 negatives
+        let ds = two_gaussians(800, 60, 4, 3.0, &mut rng);
+        let model = MlsvmTrainer::new(quick_params(4)).train(&ds, &mut rng).unwrap();
+        // the finest step must have trained on all 60 positives
+        let last = model.level_stats.last().unwrap();
+        assert!(last.train_size >= 60);
+        let m = evaluate(&model.model, &ds);
+        assert!(m.sensitivity() > 0.8, "SN={}", m.sensitivity());
+    }
+
+    #[test]
+    fn training_set_shrinks_relative_to_full_at_fine_levels() {
+        let mut rng = Pcg64::seed_from(85);
+        let ds = two_gaussians(1500, 400, 5, 5.0, &mut rng);
+        let model = MlsvmTrainer::new(quick_params(5)).train(&ds, &mut rng).unwrap();
+        let finest = model.level_stats.last().unwrap();
+        assert!(
+            finest.train_size < ds.len() / 2,
+            "refinement should train on SV neighborhoods only: {} of {}",
+            finest.train_size,
+            ds.len()
+        );
+    }
+}

@@ -1,0 +1,223 @@
+//! Algorithm-3 helpers: assembling per-level training sets from the two
+//! per-class hierarchies, mapping support vectors back to class node
+//! indices, and expanding them through aggregates (I⁻¹) to the next finer
+//! level.
+
+use crate::amg::hierarchy::Hierarchy;
+use crate::data::dataset::Dataset;
+use crate::error::Result;
+use crate::svm::model::SvmModel;
+
+/// The per-class state of one refinement step: which nodes of which level
+/// participate in training.
+#[derive(Clone, Debug)]
+pub struct ActiveSet {
+    /// Hierarchy level the nodes live at (0 = finest).
+    pub level: usize,
+    /// Node indices at that level, sorted ascending.
+    pub nodes: Vec<u32>,
+}
+
+/// Assemble the stacked training dataset for a (pos, neg) pair of active
+/// sets: minority block first, then majority (labels +1/−1, level volumes
+/// carried through).
+pub fn build_level_dataset(
+    hpos: &Hierarchy,
+    hneg: &Hierarchy,
+    pos: &ActiveSet,
+    neg: &ActiveSet,
+) -> Result<Dataset> {
+    let lp = &hpos.levels[pos.level];
+    let ln = &hneg.levels[neg.level];
+    let pos_idx: Vec<usize> = pos.nodes.iter().map(|&i| i as usize).collect();
+    let neg_idx: Vec<usize> = neg.nodes.iter().map(|&i| i as usize).collect();
+    let points = lp
+        .points
+        .select_rows(&pos_idx)
+        .vstack(&ln.points.select_rows(&neg_idx))?;
+    let mut labels = vec![1i8; pos_idx.len()];
+    labels.extend(std::iter::repeat(-1i8).take(neg_idx.len()));
+    let mut volumes: Vec<f64> = pos_idx.iter().map(|&i| lp.volumes[i]).collect();
+    volumes.extend(neg_idx.iter().map(|&i| ln.volumes[i]));
+    Dataset::with_volumes(points, labels, volumes)
+}
+
+/// Split a trained model's support vectors back into per-class node lists.
+///
+/// The stacked dataset has `n_pos` minority rows first; model
+/// `sv_indices` index into the stacked rows, so indices < n_pos map into
+/// `pos.nodes`, the rest into `neg.nodes`.
+pub fn svs_to_class_nodes(
+    model: &SvmModel,
+    pos: &ActiveSet,
+    neg: &ActiveSet,
+) -> (Vec<u32>, Vec<u32>) {
+    let n_pos = pos.nodes.len();
+    let mut sv_pos = Vec::new();
+    let mut sv_neg = Vec::new();
+    for &i in &model.sv_indices {
+        if i < n_pos {
+            sv_pos.push(pos.nodes[i]);
+        } else {
+            sv_neg.push(neg.nodes[i - n_pos]);
+        }
+    }
+    (sv_pos, sv_neg)
+}
+
+/// Advance one class's active set to the next finer level (Algorithm 3
+/// lines 2–6, plus the paper's "add their neighborhoods").
+///
+/// * If the class is already at level 0, the SVs themselves stay active
+///   (their aggregates are singletons) — unless the class is small enough
+///   to keep in full (`keep_full`), in which case all level-0 nodes stay.
+/// * Otherwise the new active set is the union of fine aggregates
+///   I⁻¹(p) of the class's support vectors p, grown by `grow_hops` rings
+///   of k-NN-graph neighbors at the finer level. §3 of the paper: "we
+///   inherit the support vectors from the coarse scales, **add their
+///   neighborhoods**, and refine" — without the growth, thin-margin
+///   problems (e.g. a minority ring) lose boundary coverage and quality
+///   collapses level over level.
+pub fn advance_active(
+    h: &Hierarchy,
+    current: &ActiveSet,
+    sv_nodes: &[u32],
+    keep_full: bool,
+    grow_hops: usize,
+) -> ActiveSet {
+    if keep_full {
+        let level = current.level.saturating_sub(1);
+        return ActiveSet {
+            level,
+            nodes: (0..h.levels[level].len() as u32).collect(),
+        };
+    }
+    let (level, mut nodes) = if current.level == 0 {
+        let mut nodes = sv_nodes.to_vec();
+        nodes.sort_unstable();
+        nodes.dedup();
+        (0, nodes)
+    } else {
+        (
+            current.level - 1,
+            h.expand_to_finer(current.level, sv_nodes),
+        )
+    };
+    // Neighborhood growth on the finer level's affinity graph.
+    let graph = &h.levels[level].graph;
+    for _ in 0..grow_hops {
+        let mut grown = nodes.clone();
+        for &i in &nodes {
+            let (idx, _) = graph.row(i as usize);
+            grown.extend_from_slice(idx);
+        }
+        grown.sort_unstable();
+        grown.dedup();
+        if grown.len() == nodes.len() {
+            break;
+        }
+        nodes = grown;
+    }
+    ActiveSet { level, nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amg::hierarchy::HierarchyParams;
+    use crate::data::matrix::Matrix;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn hier(n: usize, seed: u64) -> Hierarchy {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = Matrix::zeros(n, 3);
+        for i in 0..n {
+            let c = (i % 4) as f64 * 6.0;
+            for j in 0..3 {
+                m.set(i, j, (c + rng.normal()) as f32);
+            }
+        }
+        Hierarchy::build(
+            m,
+            HierarchyParams {
+                coarsest_size: 40,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    fn full_active(h: &Hierarchy, level: usize) -> ActiveSet {
+        ActiveSet {
+            level,
+            nodes: (0..h.levels[level].len() as u32).collect(),
+        }
+    }
+
+    #[test]
+    fn level_dataset_stacks_minority_first() {
+        let hp = hier(120, 1);
+        let hn = hier(300, 2);
+        let pos = full_active(&hp, hp.depth() - 1);
+        let neg = full_active(&hn, hn.depth() - 1);
+        let ds = build_level_dataset(&hp, &hn, &pos, &neg).unwrap();
+        assert_eq!(ds.n_pos(), pos.nodes.len());
+        assert_eq!(ds.n_neg(), neg.nodes.len());
+        assert_eq!(ds.labels[0], 1);
+        assert_eq!(*ds.labels.last().unwrap(), -1);
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn sv_mapping_respects_block_structure() {
+        let hp = hier(100, 3);
+        let hn = hier(100, 4);
+        let pos = full_active(&hp, 0);
+        let neg = full_active(&hn, 0);
+        let ds = build_level_dataset(&hp, &hn, &pos, &neg).unwrap();
+        let params = crate::svm::smo::SvmParams::default();
+        let model = crate::svm::smo::train(&ds.points, &ds.labels, &params).unwrap();
+        let (sp, sn) = svs_to_class_nodes(&model, &pos, &neg);
+        assert_eq!(sp.len() + sn.len(), model.n_sv());
+        // every pos SV node must be a valid pos index
+        assert!(sp.iter().all(|&i| (i as usize) < hp.levels[0].len()));
+        assert!(sn.iter().all(|&i| (i as usize) < hn.levels[0].len()));
+        assert!(!sp.is_empty() && !sn.is_empty());
+    }
+
+    #[test]
+    fn advance_expands_through_aggregates() {
+        let h = hier(400, 5);
+        if h.depth() < 2 {
+            return;
+        }
+        let lvl = h.depth() - 1;
+        let cur = full_active(&h, lvl);
+        let svs: Vec<u32> = (0..(h.levels[lvl].len() as u32 / 2).max(1)).collect();
+        let next = advance_active(&h, &cur, &svs, false, 0);
+        assert_eq!(next.level, lvl - 1);
+        assert!(!next.nodes.is_empty());
+        assert!(next.nodes.len() <= h.levels[lvl - 1].len());
+        // expansion is monotone: more SVs → at least as many fine nodes
+        let next_all = advance_active(&h, &cur, &cur.nodes, false, 0);
+        assert!(next_all.nodes.len() >= next.nodes.len());
+        assert_eq!(next_all.nodes.len(), h.levels[lvl - 1].len());
+    }
+
+    #[test]
+    fn advance_at_level0_keeps_svs_only() {
+        let h = hier(80, 6);
+        let cur = full_active(&h, 0);
+        let next = advance_active(&h, &cur, &[3, 1, 3], false, 0);
+        assert_eq!(next.level, 0);
+        assert_eq!(next.nodes, vec![1, 3]);
+    }
+
+    #[test]
+    fn keep_full_overrides_sv_restriction() {
+        let h = hier(80, 7);
+        let cur = full_active(&h, 0);
+        let next = advance_active(&h, &cur, &[1], true, 0);
+        assert_eq!(next.nodes.len(), 80);
+    }
+}

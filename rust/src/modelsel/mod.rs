@@ -1,0 +1,15 @@
+//! Model selection: uniform-design (UD) parameter search [12].
+//!
+//! The paper tunes (C⁺, C⁻, γ) with the UD methodology of Huang et al. —
+//! a low-discrepancy design over the (log C, log γ) plane evaluated by
+//! cross validation, followed by a second, contracted design around the
+//! first-stage winner. The multilevel framework's twist (§3, Algorithm 3)
+//! is **parameter inheritance**: at finer levels the search is re-centered
+//! on the parameters inherited from the coarser level, and skipped
+//! entirely once the level's training set exceeds `Q_dt`.
+
+pub mod search;
+pub mod ud;
+
+pub use search::{ud_search, UdSearchConfig, UdSearchOutcome, WeightScheme};
+pub use ud::ud_points;

@@ -1,0 +1,334 @@
+//! Two-stage UD parameter search with k-fold cross validation, maximizing
+//! G-mean (the paper's κ).
+//!
+//! Stage 1 scatters `stage1_points` UD points over the (log₂C, log₂γ)
+//! search box (or a contracted box around an inherited center — the
+//! multilevel parameter-inheritance of Algorithm 3); stage 2 re-centers a
+//! contracted design on the stage-1 winner. Each candidate is scored by
+//! stratified k-fold WSVM cross validation.
+//!
+//! WSVM class weights follow the standard cost-sensitive coupling
+//! `C⁺ = C · n⁻/n⁺`, `C⁻ = C` (the paper tunes (C⁺, C⁻, γ); coupling C⁺
+//! to the imbalance ratio reduces the search to the (C, γ) plane — the
+//! `weight_ratio_grid` option restores the third degree of freedom by
+//! additionally sweeping a multiplier on the coupled ratio).
+
+use crate::data::dataset::Dataset;
+use crate::data::split::KFold;
+use crate::error::Result;
+use crate::metrics::Metrics;
+use crate::modelsel::ud::{scale_to, ud_points};
+use crate::svm::kernel::KernelKind;
+use crate::svm::smo::{train_weighted, SvmParams};
+use crate::util::rng::Pcg64;
+
+/// How C⁺ relates to C⁻ during the search.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WeightScheme {
+    /// C⁺ = C · n⁻/n⁺ (cost-sensitive default).
+    Balanced,
+    /// C⁺ = C⁻ = C (plain SVM).
+    Equal,
+}
+
+/// Search configuration.
+#[derive(Clone, Debug)]
+pub struct UdSearchConfig {
+    /// Stage-1 design size (paper/Huang: 13 or 9).
+    pub stage1_points: usize,
+    /// Stage-2 design size.
+    pub stage2_points: usize,
+    /// Full log₂C search interval (used when no center is inherited).
+    pub log2c: (f64, f64),
+    /// Full log₂γ search interval.
+    pub log2g: (f64, f64),
+    /// CV folds.
+    pub folds: usize,
+    /// Class-weight coupling.
+    pub weights: WeightScheme,
+    /// Extra multipliers swept on the coupled weight ratio (≙ tuning C⁺
+    /// independently). `[1.0]` disables the third dimension.
+    pub weight_ratio_grid: Vec<f64>,
+    /// Box contraction around an inherited center (fraction of the full
+    /// half-range used at stage 1 when a center is given).
+    pub inherit_shrink: f64,
+    /// SMO tolerance/caching for the trial trainings.
+    pub base: SvmParams,
+}
+
+impl Default for UdSearchConfig {
+    fn default() -> Self {
+        UdSearchConfig {
+            stage1_points: 9,
+            stage2_points: 5,
+            log2c: (-4.0, 10.0),
+            log2g: (-10.0, 4.0),
+            folds: 3,
+            weights: WeightScheme::Balanced,
+            weight_ratio_grid: vec![1.0],
+            inherit_shrink: 0.35,
+            base: SvmParams::default(),
+        }
+    }
+}
+
+/// Search result.
+#[derive(Clone, Debug)]
+pub struct UdSearchOutcome {
+    /// Winning parameters (C⁺, C⁻ resolved, kernel γ set).
+    pub params: SvmParams,
+    /// Cross-validated G-mean of the winner.
+    pub gmean: f64,
+    /// log₂ coordinates of the winner (for inheritance by finer levels).
+    pub center: (f64, f64),
+    /// Number of (train, fold) evaluations executed.
+    pub evaluations: usize,
+}
+
+/// Evaluate one candidate by stratified k-fold CV.
+/// Returns (mean G-mean, mean SV fraction) — the SV fraction is the
+/// tie-breaker: among near-equal candidates the sparser model generalizes
+/// better and keeps the multilevel SV-neighborhood expansion small.
+fn cv_gmean(
+    ds: &Dataset,
+    weights: Option<&[f64]>,
+    params: &SvmParams,
+    folds: usize,
+    rng: &mut Pcg64,
+    evals: &mut usize,
+) -> (f64, f64) {
+    let kf = KFold::new(ds, folds, rng);
+    let mut total = 0.0;
+    let mut sv_frac = 0.0;
+    let mut used = 0usize;
+    for f in 0..kf.k() {
+        let (tr, va) = kf.fold(ds, f);
+        if tr.n_pos() == 0 || tr.n_neg() == 0 || va.is_empty() {
+            continue;
+        }
+        let w = weights.map(|_| tr.volumes.clone());
+        // Trial trainings are bounded: a pathological (C, γ) candidate
+        // must not stall the whole search — an early-stopped model scores
+        // poorly and is discarded by the design anyway.
+        let mut trial = *params;
+        trial.max_iter = (50 * tr.len()).clamp(10_000, 300_000);
+        let model = match train_weighted(&tr.points, &tr.labels, &trial, w.as_deref()) {
+            Ok(m) => m,
+            Err(_) => continue,
+        };
+        *evals += 1;
+        let m: Metrics = crate::metrics::evaluate(&model, &va);
+        total += m.gmean();
+        sv_frac += model.n_sv() as f64 / tr.len().max(1) as f64;
+        used += 1;
+    }
+    if used == 0 {
+        (0.0, 1.0)
+    } else {
+        (total / used as f64, sv_frac / used as f64)
+    }
+}
+
+/// Tolerance within which two CV G-means count as a tie (SV-sparsity
+/// breaks the tie).
+const GMEAN_TIE: f64 = 5e-3;
+
+fn resolve_params(
+    cfg: &UdSearchConfig,
+    log2c: f64,
+    log2g: f64,
+    ratio_mult: f64,
+    imbalance_ratio: f64,
+) -> SvmParams {
+    let c = log2c.exp2();
+    let (c_pos, c_neg) = match cfg.weights {
+        WeightScheme::Balanced => (c * imbalance_ratio * ratio_mult, c),
+        WeightScheme::Equal => (c, c),
+    };
+    SvmParams {
+        c_pos,
+        c_neg,
+        kernel: KernelKind::Rbf {
+            gamma: log2g.exp2(),
+        },
+        ..cfg.base
+    }
+}
+
+/// Run the two-stage UD search.
+///
+/// `volumes_as_weights` switches per-instance C scaling to the dataset's
+/// AMG volumes (used at coarse levels). `center` re-centers stage 1 on
+/// inherited (log₂C, log₂γ) with a contracted box.
+pub fn ud_search(
+    ds: &Dataset,
+    volumes_as_weights: bool,
+    cfg: &UdSearchConfig,
+    center: Option<(f64, f64)>,
+    rng: &mut Pcg64,
+) -> Result<UdSearchOutcome> {
+    ud_search_with_ratio(ds, volumes_as_weights, cfg, center, None, rng)
+}
+
+/// Like [`ud_search`] but with an explicit C⁺/C⁻ coupling ratio.
+///
+/// The multilevel trainer computes the imbalance ratio once from the
+/// *finest* class sizes and passes it to every level's search: refinement
+/// levels train on boundary-biased subsets whose local class ratio says
+/// nothing about the deployment distribution, so re-deriving the ratio
+/// locally would drift the boundary toward the majority (the paper
+/// inherits C⁺ and C⁻ through the hierarchy for the same reason).
+pub fn ud_search_with_ratio(
+    ds: &Dataset,
+    volumes_as_weights: bool,
+    cfg: &UdSearchConfig,
+    center: Option<(f64, f64)>,
+    ratio_override: Option<f64>,
+    rng: &mut Pcg64,
+) -> Result<UdSearchOutcome> {
+    // The C⁺/C⁻ coupling must reflect the *mass* each class carries: at
+    // coarse AMG levels a majority aggregate stands for many fine points
+    // (its volume), so counting points would erase the imbalance
+    // correction exactly where WSVM needs it.
+    let (mass_pos, mass_neg) = if volumes_as_weights {
+        let mut mp = 0.0;
+        let mut mn = 0.0;
+        for (i, &l) in ds.labels.iter().enumerate() {
+            if l == 1 {
+                mp += ds.volumes[i];
+            } else {
+                mn += ds.volumes[i];
+            }
+        }
+        (mp.max(1e-12), mn.max(1e-12))
+    } else {
+        (ds.n_pos().max(1) as f64, ds.n_neg().max(1) as f64)
+    };
+    let imbalance_ratio = ratio_override.unwrap_or(mass_neg / mass_pos);
+    let weights: Option<Vec<f64>> = if volumes_as_weights {
+        // normalize volumes to mean 1 so C keeps its usual scale
+        let mean: f64 = ds.volumes.iter().sum::<f64>() / ds.len() as f64;
+        Some(ds.volumes.iter().map(|v| v / mean).collect())
+    } else {
+        None
+    };
+
+    let full_center = (
+        0.5 * (cfg.log2c.0 + cfg.log2c.1),
+        0.5 * (cfg.log2g.0 + cfg.log2g.1),
+    );
+    let full_radius = (
+        0.5 * (cfg.log2c.1 - cfg.log2c.0),
+        0.5 * (cfg.log2g.1 - cfg.log2g.0),
+    );
+    let (c1, r1) = match center {
+        Some(c) => (
+            c,
+            (
+                full_radius.0 * cfg.inherit_shrink,
+                full_radius.1 * cfg.inherit_shrink,
+            ),
+        ),
+        None => (full_center, full_radius),
+    };
+
+    let mut evals = 0usize;
+    // (gmean, sv_frac, center, ratio)
+    let mut best = (f64::NEG_INFINITY, 1.0f64, c1, 1.0f64);
+    let stage = |pts: &[(f64, f64)],
+                     best: &mut (f64, f64, (f64, f64), f64),
+                     rng: &mut Pcg64,
+                     evals: &mut usize| {
+        for &(lc, lg) in pts {
+            for &rm in &cfg.weight_ratio_grid {
+                let params = resolve_params(cfg, lc, lg, rm, imbalance_ratio);
+                let (g, sv) = cv_gmean(ds, weights.as_deref(), &params, cfg.folds, rng, evals);
+                let better = g > best.0 + GMEAN_TIE
+                    || ((g - best.0).abs() <= GMEAN_TIE && sv < best.1);
+                if better {
+                    *best = (g.max(best.0), sv, (lc, lg), rm);
+                }
+            }
+        }
+    };
+
+    let s1 = scale_to(&ud_points(cfg.stage1_points), c1, r1);
+    stage(&s1, &mut best, rng, &mut evals);
+    // Stage 2: contract around the winner.
+    let r2 = (r1.0 * 0.35, r1.1 * 0.35);
+    let s2 = scale_to(&ud_points(cfg.stage2_points), best.2, r2);
+    stage(&s2, &mut best, rng, &mut evals);
+
+    let (gmean, _, centre, ratio) = best;
+    let params = resolve_params(cfg, centre.0, centre.1, ratio, imbalance_ratio);
+    Ok(UdSearchOutcome {
+        params,
+        gmean: gmean.max(0.0),
+        center: centre,
+        evaluations: evals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+
+    fn quick_cfg() -> UdSearchConfig {
+        UdSearchConfig {
+            stage1_points: 5,
+            stage2_points: 5,
+            folds: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn finds_good_parameters_on_easy_data() {
+        let mut rng = Pcg64::seed_from(61);
+        let ds = two_gaussians(150, 60, 4, 4.0, &mut rng);
+        let out = ud_search(&ds, false, &quick_cfg(), None, &mut rng).unwrap();
+        assert!(out.gmean > 0.9, "gmean={}", out.gmean);
+        assert!(out.evaluations > 0);
+        assert!(out.params.c_pos > out.params.c_neg, "balanced coupling");
+    }
+
+    #[test]
+    fn inherited_center_contracts_search() {
+        let mut rng = Pcg64::seed_from(62);
+        let ds = two_gaussians(120, 50, 3, 3.0, &mut rng);
+        let cfg = quick_cfg();
+        let out = ud_search(&ds, false, &cfg, Some((0.0, -2.0)), &mut rng).unwrap();
+        // All candidates lie inside the contracted box: winner within
+        // center ± shrink*full_radius ± stage-2 contraction (bounded).
+        let full_r_c = 0.5 * (cfg.log2c.1 - cfg.log2c.0);
+        assert!(
+            (out.center.0 - 0.0).abs() <= full_r_c * cfg.inherit_shrink * 1.35 + 1e-9,
+            "center {:?} escaped inherited box",
+            out.center
+        );
+    }
+
+    #[test]
+    fn equal_weights_scheme_sets_cpos_eq_cneg() {
+        let mut rng = Pcg64::seed_from(63);
+        let ds = two_gaussians(80, 40, 3, 3.0, &mut rng);
+        let cfg = UdSearchConfig {
+            weights: WeightScheme::Equal,
+            ..quick_cfg()
+        };
+        let out = ud_search(&ds, false, &cfg, None, &mut rng).unwrap();
+        assert!((out.params.c_pos - out.params.c_neg).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_ratio_grid_expands_evaluations() {
+        let mut rng = Pcg64::seed_from(64);
+        let ds = two_gaussians(80, 40, 3, 3.0, &mut rng);
+        let mut cfg = quick_cfg();
+        let base = ud_search(&ds, false, &cfg, None, &mut rng).unwrap();
+        cfg.weight_ratio_grid = vec![0.5, 1.0, 2.0];
+        let wide = ud_search(&ds, false, &cfg, None, &mut rng).unwrap();
+        assert!(wide.evaluations > base.evaluations);
+    }
+}

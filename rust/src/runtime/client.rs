@@ -1,0 +1,251 @@
+//! PJRT CPU client + artifact registry.
+//!
+//! Artifacts are HLO **text** (see `python/compile/aot.py` for why text,
+//! not serialized protos). `manifest.txt` lists one artifact per line:
+//!
+//! ```text
+//! <name> <file> k=v k=v ...
+//! ```
+//!
+//! Executables are compiled on first use and cached for the process
+//! lifetime (AOT at the artifact level, JIT-once at the PJRT level — the
+//! same model as serving systems that warm a compile cache at startup).
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    dir: PathBuf,
+    entries: HashMap<String, (PathBuf, HashMap<String, usize>)>,
+}
+
+impl Artifacts {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest.display()
+            ))
+        })?;
+        let mut entries = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let name = toks
+                .next()
+                .ok_or_else(|| Error::Runtime("manifest: empty line".into()))?
+                .to_string();
+            let file = toks
+                .next()
+                .ok_or_else(|| Error::Runtime(format!("manifest: {name} missing file")))?;
+            let mut meta = HashMap::new();
+            for kv in toks {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| Error::Runtime(format!("manifest: bad meta '{kv}'")))?;
+                let v: usize = v
+                    .parse()
+                    .map_err(|_| Error::Runtime(format!("manifest: bad meta value '{kv}'")))?;
+                meta.insert(k.to_string(), v);
+            }
+            entries.insert(name, (dir.join(file), meta));
+        }
+        Ok(Artifacts { dir, entries })
+    }
+
+    /// Artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Names available.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Metadata value `key` of artifact `name`.
+    pub fn meta(&self, name: &str, key: &str) -> Result<usize> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))?
+            .1
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Runtime(format!("artifact '{name}' has no meta '{key}'")))
+    }
+
+    fn path(&self, name: &str) -> Result<&Path> {
+        Ok(&self
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact '{name}'")))?
+            .0)
+    }
+}
+
+/// A PJRT CPU runtime with a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    /// Manifest.
+    pub artifacts: Artifacts,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create the CPU client and parse the manifest in `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let artifacts = Artifacts::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT cpu client: {e}")))?;
+        Ok(Runtime {
+            client,
+            artifacts,
+            executables: HashMap::new(),
+        })
+    }
+
+    /// Default artifact directory: `$MLSVM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MLSVM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// PJRT platform string (e.g. "cpu") — diagnostics.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts.path(name)?.to_path_buf();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {name}: {e}")))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` on f32 inputs given as (data, dims) pairs;
+    /// returns the flattened f32 output of the single tuple element.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        self.ensure_compiled(name)?;
+        let exe = self.executables.get(name).expect("just compiled");
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = if dims.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| Error::Runtime(format!("reshape {dims:?}: {e}")))?
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))?;
+        out.to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("to_vec {name}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = Runtime::default_dir();
+        if dir.join("manifest.txt").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses_and_lists_artifacts() {
+        let Some(dir) = artifacts_dir() else { return };
+        let arts = Artifacts::load(&dir).unwrap();
+        let mut names = arts.names();
+        names.sort_unstable();
+        assert_eq!(names, vec!["decision", "rbf_tile"]);
+        assert_eq!(arts.meta("rbf_tile", "d").unwrap(), 128);
+        assert!(arts.meta("rbf_tile", "nope").is_err());
+        assert!(arts.meta("nope", "d").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = Artifacts::load("/definitely/not/here").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn rbf_tile_executes_and_matches_rust_kernel() {
+        let Some(dir) = artifacts_dir() else { return };
+        let mut rt = Runtime::new(&dir).unwrap();
+        let m = rt.artifacts.meta("rbf_tile", "m").unwrap();
+        let n = rt.artifacts.meta("rbf_tile", "n").unwrap();
+        let d = rt.artifacts.meta("rbf_tile", "d").unwrap();
+        // x rows: simple patterns in the first 3 features, rest zero.
+        let mut x = vec![0.0f32; m * d];
+        let mut y = vec![0.0f32; n * d];
+        for i in 0..m {
+            x[i * d] = (i % 7) as f32 * 0.25;
+            x[i * d + 1] = (i % 3) as f32;
+        }
+        for j in 0..n {
+            y[j * d] = (j % 5) as f32 * 0.5;
+            y[j * d + 2] = 1.0;
+        }
+        let gamma = 0.3f32;
+        let out = rt
+            .execute_f32(
+                "rbf_tile",
+                &[
+                    (&x, &[m as i64, d as i64]),
+                    (&y, &[n as i64, d as i64]),
+                    (&[gamma], &[]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), m * n);
+        let kern = crate::svm::kernel::RbfKernel { gamma: gamma as f64 };
+        use crate::svm::kernel::Kernel;
+        for &(i, j) in &[(0usize, 0usize), (1, 3), (17, 101), (255, 254)] {
+            let want = kern.eval(&x[i * d..(i + 1) * d], &y[j * d..(j + 1) * d]) as f32;
+            let got = out[i * n + j];
+            assert!(
+                (got - want).abs() < 1e-5,
+                "K[{i}][{j}] = {got}, want {want}"
+            );
+        }
+    }
+}

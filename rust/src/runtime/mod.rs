@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path —
+//! Python is never invoked at run time.
+//!
+//! * [`client`] — the PJRT CPU client, artifact manifest parsing, and a
+//!   compile cache (one executable per artifact, compiled on first use);
+//! * [`rbf`] — the padded RBF kernel-tile executor (SMO row backend) and
+//!   the batched decision-function executor (prediction router), both
+//!   validated against the pure-rust kernels in tests.
+
+pub mod client;
+pub mod rbf;
+
+pub use client::{Artifacts, Runtime};
+pub use rbf::{PjrtDecision, PjrtRowBackend};

@@ -1,0 +1,164 @@
+//! LRU kernel-row cache — the LibSVM `Cache` equivalent.
+//!
+//! SMO touches the same kernel rows repeatedly (active working-set
+//! variables). The cache bounds memory to `capacity_bytes` and evicts the
+//! least-recently-used full row. Rows are f32 (as in LibSVM); misses are
+//! delegated to the [`RowBackend`].
+
+use crate::svm::kernel::RowBackend;
+use std::collections::HashMap;
+
+/// LRU cache of kernel rows.
+pub struct KernelCache<'a> {
+    backend: &'a dyn RowBackend,
+    n: usize,
+    capacity_rows: usize,
+    rows: HashMap<usize, Box<[f32]>>,
+    // LRU order: front = oldest. Small (≤ capacity_rows) so Vec is fine.
+    order: Vec<usize>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<'a> KernelCache<'a> {
+    /// Cache with the given byte budget (min 2 rows).
+    pub fn new(backend: &'a dyn RowBackend, capacity_bytes: usize) -> Self {
+        let n = backend.len();
+        let row_bytes = (n * std::mem::size_of::<f32>()).max(1);
+        let capacity_rows = (capacity_bytes / row_bytes).max(2);
+        KernelCache {
+            backend,
+            n,
+            capacity_rows,
+            rows: HashMap::new(),
+            order: Vec::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Number of points (row length).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// (hits, misses) counters — perf instrumentation.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    /// Get row `i`, computing and caching it if absent.
+    pub fn row(&mut self, i: usize) -> &[f32] {
+        if self.rows.contains_key(&i) {
+            self.hits += 1;
+            // refresh LRU position
+            if let Some(pos) = self.order.iter().position(|&x| x == i) {
+                self.order.remove(pos);
+            }
+            self.order.push(i);
+        } else {
+            self.misses += 1;
+            if self.rows.len() >= self.capacity_rows {
+                let evict = self.order.remove(0);
+                self.rows.remove(&evict);
+            }
+            let mut buf = vec![0.0f32; self.n].into_boxed_slice();
+            self.backend.fill_row(i, &mut buf);
+            self.rows.insert(i, buf);
+            self.order.push(i);
+        }
+        self.rows.get(&i).unwrap()
+    }
+
+    /// Get rows `i` and `j` simultaneously (the SMO update needs both).
+    pub fn row_pair(&mut self, i: usize, j: usize) -> (&[f32], &[f32]) {
+        assert_ne!(i, j);
+        // Ensure both are resident (order matters so neither evicts the other:
+        // capacity ≥ 2 guarantees the second fetch cannot evict the first
+        // because the first was just refreshed... unless capacity is 2 and
+        // both were absent; fetching j after i evicts the oldest, which is
+        // not i since i was appended last).
+        self.row(i);
+        self.row(j);
+        let ri = self.rows.get(&i).unwrap().as_ref() as *const [f32];
+        let rj = self.rows.get(&j).unwrap().as_ref();
+        // SAFETY: distinct keys -> distinct boxes; no mutation until the
+        // returned borrows end (we hold &mut self).
+        (unsafe { &*ri }, rj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+    use crate::svm::kernel::{KernelKind, RustRowBackend};
+
+    fn backend_fixture(n: usize) -> Matrix {
+        let mut data = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            data.push(i as f32);
+            data.push((i % 3) as f32);
+        }
+        Matrix::from_vec(n, 2, data).unwrap()
+    }
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let m = backend_fixture(8);
+        let b = RustRowBackend::new(&m, KernelKind::Rbf { gamma: 0.1 });
+        let mut cache = KernelCache::new(&b, 1 << 20);
+        cache.row(0);
+        cache.row(0);
+        cache.row(1);
+        let (h, mi) = cache.stats();
+        assert_eq!(h, 1);
+        assert_eq!(mi, 2);
+    }
+
+    #[test]
+    fn eviction_keeps_capacity() {
+        let m = backend_fixture(16);
+        let b = RustRowBackend::new(&m, KernelKind::Linear);
+        // capacity for exactly 2 rows
+        let bytes = 2 * 16 * 4;
+        let mut cache = KernelCache::new(&b, bytes);
+        cache.row(0);
+        cache.row(1);
+        cache.row(2); // evicts 0
+        assert!(cache.rows.len() <= 2);
+        let (_, misses0) = cache.stats();
+        cache.row(0); // miss again
+        let (_, misses1) = cache.stats();
+        assert_eq!(misses1, misses0 + 1);
+    }
+
+    #[test]
+    fn row_pair_returns_both_correctly() {
+        let m = backend_fixture(6);
+        let b = RustRowBackend::new(&m, KernelKind::Linear);
+        let mut cache = KernelCache::new(&b, 2 * 6 * 4);
+        let (ri, rj) = cache.row_pair(2, 5);
+        let mut want_i = vec![0.0f32; 6];
+        let mut want_j = vec![0.0f32; 6];
+        b.fill_row(2, &mut want_i);
+        b.fill_row(5, &mut want_j);
+        assert_eq!(ri, &want_i[..]);
+        assert_eq!(rj, &want_j[..]);
+    }
+
+    #[test]
+    fn values_match_backend_after_heavy_eviction() {
+        let m = backend_fixture(10);
+        let b = RustRowBackend::new(&m, KernelKind::Rbf { gamma: 0.5 });
+        let mut cache = KernelCache::new(&b, 2 * 10 * 4);
+        let mut want = vec![0.0f32; 10];
+        for pass in 0..3 {
+            for i in 0..10 {
+                let got = cache.row(i).to_vec();
+                b.fill_row(i, &mut want);
+                assert_eq!(got, want, "pass {pass} row {i}");
+            }
+        }
+    }
+}

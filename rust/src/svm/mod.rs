@@ -1,0 +1,22 @@
+//! The (weighted) support vector machine substrate — a from-scratch
+//! LibSVM-3.20 equivalent:
+//!
+//! * [`kernel`] — kernel functions (Gaussian/RBF as in the paper, plus
+//!   linear and polynomial) and a pluggable backend for batched kernel
+//!   row evaluation (pure rust, or the PJRT AOT artifact via
+//!   [`crate::runtime`]);
+//! * [`cache`] — an LRU kernel-row cache (LibSVM's `Cache`);
+//! * [`smo`] — C-SVC dual SMO solver with second-order working-set
+//!   selection (WSS2, Fan–Chen–Lin 2005), shrinking, and per-class
+//!   penalties C⁺ / C⁻ (the WSVM of Eq. 2);
+//! * [`model`] — the trained model (support vectors, coefficients, bias),
+//!   decision function and prediction.
+
+pub mod cache;
+pub mod kernel;
+pub mod model;
+pub mod smo;
+
+pub use kernel::{Kernel, KernelKind, LinearKernel, RbfKernel};
+pub use model::SvmModel;
+pub use smo::{train, train_weighted, SvmParams};

@@ -1,0 +1,257 @@
+//! Trained SVM model: support vectors, dual coefficients, bias, kernel —
+//! plus prediction, decision values, and a plain-text serialization
+//! (the vendor set has no serde; the format is a simple line protocol
+//! compatible in spirit with LibSVM model files).
+
+use crate::data::matrix::Matrix;
+use crate::error::{Error, Result};
+use crate::svm::kernel::KernelKind;
+use crate::svm::smo::SvmParams;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// A trained (weighted) SVM.
+#[derive(Clone, Debug)]
+pub struct SvmModel {
+    /// Support vectors (rows).
+    pub sv: Matrix,
+    /// Coefficients y_i·α_i per support vector.
+    pub sv_coef: Vec<f64>,
+    /// Bias ρ: decision(x) = Σ coef_i·K(sv_i, x) − ρ.
+    pub rho: f64,
+    /// Kernel used at training time.
+    pub kernel: KernelKind,
+    /// Indices of the support vectors in the training set the model was
+    /// fit on (needed by the multilevel uncoarsening).
+    pub sv_indices: Vec<usize>,
+    /// Labels of the support vectors.
+    pub sv_labels: Vec<i8>,
+}
+
+impl SvmModel {
+    /// Package a solver solution: keep points with α > threshold.
+    pub fn from_solution(
+        points: &Matrix,
+        labels: &[i8],
+        alpha: &[f64],
+        rho: f64,
+        params: &SvmParams,
+    ) -> SvmModel {
+        let thresh = 1e-9;
+        let sv_indices: Vec<usize> = (0..alpha.len()).filter(|&i| alpha[i] > thresh).collect();
+        let sv = points.select_rows(&sv_indices);
+        let sv_coef = sv_indices
+            .iter()
+            .map(|&i| alpha[i] * labels[i] as f64)
+            .collect();
+        let sv_labels = sv_indices.iter().map(|&i| labels[i]).collect();
+        SvmModel {
+            sv,
+            sv_coef,
+            rho,
+            kernel: params.kernel,
+            sv_indices,
+            sv_labels,
+        }
+    }
+
+    /// Number of support vectors.
+    pub fn n_sv(&self) -> usize {
+        self.sv_coef.len()
+    }
+
+    /// Decision value f(x) = Σ coef_i K(sv_i, x) − ρ.
+    pub fn decision(&self, x: &[f32]) -> f64 {
+        let k = self.kernel.build();
+        let mut s = -self.rho;
+        for i in 0..self.n_sv() {
+            s += self.sv_coef[i] * k.eval(self.sv.row(i), x);
+        }
+        s
+    }
+
+    /// Predicted label in {-1, +1} (ties → −1, the majority class).
+    pub fn predict_label(&self, x: &[f32]) -> i8 {
+        if self.decision(x) > 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Batch decision values (pure-rust path; the PJRT-artifact path lives
+    /// in [`crate::runtime::rbf`] and is validated against this).
+    pub fn decision_batch(&self, xs: &Matrix) -> Vec<f64> {
+        (0..xs.rows()).map(|i| self.decision(xs.row(i))).collect()
+    }
+
+    /// Batch labels.
+    pub fn predict_batch(&self, xs: &Matrix) -> Vec<i8> {
+        self.decision_batch(xs)
+            .into_iter()
+            .map(|d| if d > 0.0 { 1 } else { -1 })
+            .collect()
+    }
+
+    /// Save as plain text.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        match self.kernel {
+            KernelKind::Rbf { gamma } => writeln!(w, "kernel rbf {gamma}")?,
+            KernelKind::Linear => writeln!(w, "kernel linear")?,
+            KernelKind::Poly {
+                gamma,
+                coef0,
+                degree,
+            } => writeln!(w, "kernel poly {gamma} {coef0} {degree}")?,
+        }
+        writeln!(w, "rho {}", self.rho)?;
+        writeln!(w, "nsv {} dim {}", self.n_sv(), self.sv.cols())?;
+        for i in 0..self.n_sv() {
+            write!(w, "{} {}", self.sv_coef[i], self.sv_labels[i])?;
+            for &v in self.sv.row(i) {
+                write!(w, " {v}")?;
+            }
+            writeln!(w)?;
+        }
+        Ok(())
+    }
+
+    /// Load from the plain-text format written by [`SvmModel::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<SvmModel> {
+        let f = std::fs::File::open(path)?;
+        let mut lines = std::io::BufReader::new(f).lines();
+        let mut next_line = |what: &str| -> Result<String> {
+            lines
+                .next()
+                .transpose()?
+                .ok_or_else(|| Error::invalid(format!("model file truncated at {what}")))
+        };
+        let kline = next_line("kernel")?;
+        let ktok: Vec<&str> = kline.split_whitespace().collect();
+        let kernel = match ktok.as_slice() {
+            ["kernel", "rbf", g] => KernelKind::Rbf {
+                gamma: g.parse().map_err(|_| Error::invalid("bad gamma"))?,
+            },
+            ["kernel", "linear"] => KernelKind::Linear,
+            ["kernel", "poly", g, c, d] => KernelKind::Poly {
+                gamma: g.parse().map_err(|_| Error::invalid("bad gamma"))?,
+                coef0: c.parse().map_err(|_| Error::invalid("bad coef0"))?,
+                degree: d.parse().map_err(|_| Error::invalid("bad degree"))?,
+            },
+            _ => return Err(Error::invalid(format!("bad kernel line '{kline}'"))),
+        };
+        let rline = next_line("rho")?;
+        let rho: f64 = rline
+            .strip_prefix("rho ")
+            .ok_or_else(|| Error::invalid("missing rho"))?
+            .parse()
+            .map_err(|_| Error::invalid("bad rho"))?;
+        let nline = next_line("nsv")?;
+        let ntok: Vec<&str> = nline.split_whitespace().collect();
+        let (nsv, dim) = match ntok.as_slice() {
+            ["nsv", n, "dim", d] => (
+                n.parse::<usize>().map_err(|_| Error::invalid("bad nsv"))?,
+                d.parse::<usize>().map_err(|_| Error::invalid("bad dim"))?,
+            ),
+            _ => return Err(Error::invalid("bad nsv line")),
+        };
+        let mut sv = Matrix::zeros(nsv, dim);
+        let mut sv_coef = Vec::with_capacity(nsv);
+        let mut sv_labels = Vec::with_capacity(nsv);
+        for i in 0..nsv {
+            let line = next_line("sv")?;
+            let mut it = line.split_whitespace();
+            let coef: f64 = it
+                .next()
+                .ok_or_else(|| Error::invalid("sv line empty"))?
+                .parse()
+                .map_err(|_| Error::invalid("bad coef"))?;
+            let lab: i8 = it
+                .next()
+                .ok_or_else(|| Error::invalid("sv line missing label"))?
+                .parse()
+                .map_err(|_| Error::invalid("bad label"))?;
+            sv_coef.push(coef);
+            sv_labels.push(lab);
+            let row = sv.row_mut(i);
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = it
+                    .next()
+                    .ok_or_else(|| Error::invalid(format!("sv {i} missing feature {j}")))?
+                    .parse()
+                    .map_err(|_| Error::invalid("bad feature"))?;
+            }
+        }
+        Ok(SvmModel {
+            sv,
+            sv_coef,
+            rho,
+            kernel,
+            sv_indices: Vec::new(),
+            sv_labels,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+    use crate::svm::smo::{train, SvmParams};
+    use crate::util::rng::Pcg64;
+
+    fn fixture_model() -> (SvmModel, crate::data::dataset::Dataset) {
+        let mut rng = Pcg64::seed_from(51);
+        let ds = two_gaussians(60, 60, 3, 4.0, &mut rng);
+        let p = SvmParams {
+            kernel: KernelKind::Rbf { gamma: 0.4 },
+            ..Default::default()
+        };
+        (train(&ds.points, &ds.labels, &p).unwrap(), ds)
+    }
+
+    #[test]
+    fn sv_set_is_subset_of_training() {
+        let (m, ds) = fixture_model();
+        assert!(m.n_sv() > 0);
+        assert!(m.n_sv() < ds.len(), "not all points should be SVs");
+        for (r, &i) in m.sv_indices.iter().enumerate() {
+            assert_eq!(m.sv.row(r), ds.points.row(i));
+        }
+    }
+
+    #[test]
+    fn decision_batch_matches_single() {
+        let (m, ds) = fixture_model();
+        let batch = m.decision_batch(&ds.points);
+        for i in (0..ds.len()).step_by(13) {
+            assert!((batch[i] - m.decision(ds.points.row(i))).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_decisions() {
+        let (m, ds) = fixture_model();
+        let dir = std::env::temp_dir().join("mlsvm_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.txt");
+        m.save(&path).unwrap();
+        let back = SvmModel::load(&path).unwrap();
+        for i in (0..ds.len()).step_by(7) {
+            let a = m.decision(ds.points.row(i));
+            let b = back.decision(ds.points.row(i));
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("mlsvm_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.txt");
+        std::fs::write(&path, "not a model\n").unwrap();
+        assert!(SvmModel::load(&path).is_err());
+    }
+}

@@ -1,0 +1,598 @@
+//! SMO solver for the (weighted) C-SVC dual — the LibSVM-3.20 equivalent
+//! the paper uses for all small-scale trainings inside the refinement.
+//!
+//! Solves
+//!
+//! ```text
+//! min_α  ½ αᵀQα − eᵀα    s.t.  yᵀα = 0,  0 ≤ α_i ≤ C_i
+//! ```
+//!
+//! with `Q_ij = y_i y_j K(x_i, x_j)`, `C_i = C⁺` for minority points and
+//! `C⁻` for majority points (Eq. 2 of the paper — WSVM), optionally scaled
+//! by per-instance weights (used to honor AMG aggregate volumes at coarse
+//! levels). Working pairs are chosen by second-order selection (WSS2,
+//! Fan–Chen–Lin 2005), exactly LibSVM's default; shrinking bounds the
+//! active set with full-gradient reconstruction before the final
+//! convergence check.
+
+use crate::data::matrix::Matrix;
+use crate::error::{Error, Result};
+use crate::svm::cache::KernelCache;
+use crate::svm::kernel::{KernelKind, RowBackend, RustRowBackend};
+use crate::svm::model::SvmModel;
+
+/// Training parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SvmParams {
+    /// Penalty for the minority (+1) class.
+    pub c_pos: f64,
+    /// Penalty for the majority (−1) class.
+    pub c_neg: f64,
+    /// Kernel.
+    pub kernel: KernelKind,
+    /// KKT violation tolerance (LibSVM default 1e-3).
+    pub eps: f64,
+    /// Iteration cap (defense against degenerate problems).
+    pub max_iter: usize,
+    /// Kernel cache budget in bytes.
+    pub cache_bytes: usize,
+    /// Enable shrinking.
+    pub shrinking: bool,
+}
+
+impl Default for SvmParams {
+    fn default() -> Self {
+        SvmParams {
+            c_pos: 1.0,
+            c_neg: 1.0,
+            kernel: KernelKind::Rbf { gamma: 0.5 },
+            eps: 1e-3,
+            max_iter: 10_000_000,
+            cache_bytes: 128 << 20,
+            shrinking: true,
+        }
+    }
+}
+
+/// Raw solver output.
+#[derive(Debug)]
+pub struct SolveResult {
+    /// α per training point.
+    pub alpha: Vec<f64>,
+    /// Bias term ρ (decision = Σ y_iα_iK(x_i,·) − ρ).
+    pub rho: f64,
+    /// SMO iterations executed.
+    pub iterations: usize,
+    /// Final KKT gap.
+    pub gap: f64,
+}
+
+const TAU: f64 = 1e-12;
+
+struct Solver<'a> {
+    cache: KernelCache<'a>,
+    y: Vec<f64>,
+    c: Vec<f64>,
+    alpha: Vec<f64>,
+    grad: Vec<f64>,
+    kdiag: Vec<f64>,
+    active: Vec<usize>,
+    eps: f64,
+    shrinking: bool,
+    unshrunk: bool,
+}
+
+impl<'a> Solver<'a> {
+    fn new(
+        backend: &'a dyn RowBackend,
+        labels: &[i8],
+        params: &SvmParams,
+        weights: Option<&[f64]>,
+    ) -> Result<Solver<'a>> {
+        let n = backend.len();
+        if labels.len() != n {
+            return Err(Error::invalid("smo: label/point count mismatch"));
+        }
+        let y: Vec<f64> = labels.iter().map(|&l| l as f64).collect();
+        let mut c: Vec<f64> = labels
+            .iter()
+            .map(|&l| if l == 1 { params.c_pos } else { params.c_neg })
+            .collect();
+        if let Some(w) = weights {
+            if w.len() != n {
+                return Err(Error::invalid("smo: weight count mismatch"));
+            }
+            for (ci, &wi) in c.iter_mut().zip(w) {
+                *ci *= wi.max(1e-12);
+            }
+        }
+        let mut cache = KernelCache::new(backend, params.cache_bytes);
+        // K diagonal (O(n·d) via the backend's direct form).
+        let mut kdiag = vec![0.0f64; n];
+        backend.fill_diag(&mut kdiag);
+        // α = 0 → G = −e.
+        let grad = vec![-1.0f64; n];
+        let _ = &mut cache;
+        Ok(Solver {
+            cache,
+            y,
+            c,
+            alpha: vec![0.0; n],
+            grad,
+            kdiag,
+            active: (0..n).collect(),
+            eps: params.eps,
+            shrinking: params.shrinking,
+            unshrunk: false,
+        })
+    }
+
+    /// −y_t G_t, the WSS score.
+    #[inline]
+    fn score(&self, t: usize) -> f64 {
+        -self.y[t] * self.grad[t]
+    }
+
+    #[inline]
+    fn in_up(&self, t: usize) -> bool {
+        (self.y[t] > 0.0 && self.alpha[t] < self.c[t]) || (self.y[t] < 0.0 && self.alpha[t] > 0.0)
+    }
+
+    #[inline]
+    fn in_low(&self, t: usize) -> bool {
+        (self.y[t] < 0.0 && self.alpha[t] < self.c[t]) || (self.y[t] > 0.0 && self.alpha[t] > 0.0)
+    }
+
+    /// WSS2: returns (i, j) or None when converged on the active set.
+    fn select_working_pair(&mut self) -> Option<(usize, usize)> {
+        let mut i = usize::MAX;
+        let mut m = f64::NEG_INFINITY;
+        for &t in &self.active {
+            if self.in_up(t) {
+                let s = self.score(t);
+                if s > m {
+                    m = s;
+                    i = t;
+                }
+            }
+        }
+        if i == usize::MAX {
+            return None;
+        }
+        // Need row i for the second-order term.
+        let n_all = self.cache.n();
+        let mut row_i = vec![0.0f32; n_all];
+        row_i.copy_from_slice(self.cache.row(i));
+
+        let mut j = usize::MAX;
+        let mut best_obj = f64::INFINITY;
+        let mut m_low = f64::INFINITY;
+        for &t in &self.active {
+            if self.in_low(t) {
+                let s = self.score(t);
+                m_low = m_low.min(s);
+                let b = m - s;
+                if b > 0.0 {
+                    let a = self.kdiag[i] + self.kdiag[t]
+                        - 2.0 * self.y[i] * self.y[t] * row_i[t] as f64;
+                    let a = if a > 0.0 { a } else { TAU };
+                    let obj = -(b * b) / a;
+                    if obj < best_obj {
+                        best_obj = obj;
+                        j = t;
+                    }
+                }
+            }
+        }
+        if m - m_low <= self.eps || j == usize::MAX {
+            return None;
+        }
+        Some((i, j))
+    }
+
+    /// Two-variable analytic update (LibSVM's `Solver::solve` inner step).
+    fn update_pair(&mut self, i: usize, j: usize) {
+        let (row_i, _row_j) = self.cache.row_pair(i, j);
+        let yi = self.y[i];
+        let yj = self.y[j];
+        let ci = self.c[i];
+        let cj = self.c[j];
+        let kii = self.kdiag[i];
+        let kjj = self.kdiag[j];
+        let kij = row_i[j] as f64;
+        let old_ai = self.alpha[i];
+        let old_aj = self.alpha[j];
+
+        if yi != yj {
+            let quad = (kii + kjj + 2.0 * kij).max(TAU);
+            let delta = (-self.grad[i] - self.grad[j]) / quad;
+            let diff = old_ai - old_aj;
+            self.alpha[i] += delta;
+            self.alpha[j] += delta;
+            if diff > 0.0 {
+                if self.alpha[j] < 0.0 {
+                    self.alpha[j] = 0.0;
+                    self.alpha[i] = diff;
+                }
+            } else if self.alpha[i] < 0.0 {
+                self.alpha[i] = 0.0;
+                self.alpha[j] = -diff;
+            }
+            if diff > ci - cj {
+                if self.alpha[i] > ci {
+                    self.alpha[i] = ci;
+                    self.alpha[j] = ci - diff;
+                }
+            } else if self.alpha[j] > cj {
+                self.alpha[j] = cj;
+                self.alpha[i] = cj + diff;
+            }
+        } else {
+            let quad = (kii + kjj - 2.0 * kij).max(TAU);
+            let delta = (self.grad[i] - self.grad[j]) / quad;
+            let sum = old_ai + old_aj;
+            self.alpha[i] -= delta;
+            self.alpha[j] += delta;
+            if sum > ci {
+                if self.alpha[i] > ci {
+                    self.alpha[i] = ci;
+                    self.alpha[j] = sum - ci;
+                }
+            } else if self.alpha[j] < 0.0 {
+                self.alpha[j] = 0.0;
+                self.alpha[i] = sum;
+            }
+            if sum > cj {
+                if self.alpha[j] > cj {
+                    self.alpha[j] = cj;
+                    self.alpha[i] = sum - cj;
+                }
+            } else if self.alpha[i] < 0.0 {
+                self.alpha[i] = 0.0;
+                self.alpha[j] = sum;
+            }
+        }
+
+        // Gradient update over the active set: G_t += Q_ti Δα_i + Q_tj Δα_j.
+        let dai = self.alpha[i] - old_ai;
+        let daj = self.alpha[j] - old_aj;
+        if dai == 0.0 && daj == 0.0 {
+            return;
+        }
+        // Re-borrow rows (NLL: previous borrows ended).
+        let n = self.cache.n();
+        let mut qi = vec![0.0f64; n];
+        let mut qj = vec![0.0f64; n];
+        {
+            let (row_i, row_j) = self.cache.row_pair(i, j);
+            for t in 0..n {
+                qi[t] = row_i[t] as f64;
+                qj[t] = row_j[t] as f64;
+            }
+        }
+        for &t in &self.active {
+            self.grad[t] +=
+                self.y[t] * (yi * qi[t] * dai + yj * qj[t] * daj);
+        }
+    }
+
+    /// Reconstruct the full gradient from scratch (after shrinking, before
+    /// the final convergence check). O(#SV · n) kernel work.
+    fn reconstruct_gradient(&mut self) {
+        let n = self.cache.n();
+        self.grad = vec![-1.0; n];
+        let sv: Vec<usize> = (0..n).filter(|&t| self.alpha[t] > 0.0).collect();
+        for &s in &sv {
+            let a = self.alpha[s] * self.y[s];
+            let row = self.cache.row(s).to_vec();
+            for t in 0..n {
+                self.grad[t] += self.y[t] * a * row[t] as f64;
+            }
+        }
+        self.active = (0..n).collect();
+    }
+
+    /// KKT gap on the active set.
+    fn gap(&self) -> f64 {
+        let mut m_up = f64::NEG_INFINITY;
+        let mut m_low = f64::INFINITY;
+        for &t in &self.active {
+            if self.in_up(t) {
+                m_up = m_up.max(self.score(t));
+            }
+            if self.in_low(t) {
+                m_low = m_low.min(self.score(t));
+            }
+        }
+        m_up - m_low
+    }
+
+    /// ρ from free SVs (LibSVM `calculate_rho`).
+    fn rho(&self) -> f64 {
+        let n = self.cache.n();
+        let mut n_free = 0usize;
+        let mut sum_free = 0.0;
+        let mut ub = f64::INFINITY;
+        let mut lb = f64::NEG_INFINITY;
+        for t in 0..n {
+            let ygt = self.y[t] * self.grad[t];
+            if self.alpha[t] >= self.c[t] {
+                if self.y[t] < 0.0 {
+                    ub = ub.min(ygt);
+                } else {
+                    lb = lb.max(ygt);
+                }
+            } else if self.alpha[t] <= 0.0 {
+                if self.y[t] > 0.0 {
+                    ub = ub.min(ygt);
+                } else {
+                    lb = lb.max(ygt);
+                }
+            } else {
+                n_free += 1;
+                sum_free += ygt;
+            }
+        }
+        if n_free > 0 {
+            sum_free / n_free as f64
+        } else {
+            (ub + lb) / 2.0
+        }
+    }
+
+    fn solve(&mut self, max_iter: usize) -> (usize, f64) {
+        let n = self.cache.n();
+        let shrink_every = n.min(1000).max(1);
+        let mut iter = 0usize;
+        let mut counter = shrink_every;
+        loop {
+            if iter >= max_iter {
+                break;
+            }
+            counter -= 1;
+            if counter == 0 {
+                counter = shrink_every;
+                if self.shrinking && !self.unshrunk {
+                    self.shrink_simple();
+                }
+            }
+            match self.select_working_pair() {
+                Some((i, j)) => {
+                    self.update_pair(i, j);
+                    iter += 1;
+                }
+                None => {
+                    // Converged on the active set: if shrunk, reconstruct
+                    // and re-check on the full problem.
+                    if self.active.len() < n {
+                        self.reconstruct_gradient();
+                        self.unshrunk = true;
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+        (iter, self.gap())
+    }
+
+    /// Simple, conservative shrinking rule: drop variables that are at a
+    /// bound and whose score is strictly inside the current (m_up, m_low)
+    /// bracket by a margin (they cannot be selected while the bracket
+    /// holds). Correctness is preserved by the final full-gradient
+    /// reconstruction + re-check in `solve`.
+    fn shrink_simple(&mut self) {
+        let mut m_up = f64::NEG_INFINITY;
+        let mut m_low = f64::INFINITY;
+        for &t in &self.active {
+            if self.in_up(t) {
+                m_up = m_up.max(self.score(t));
+            }
+            if self.in_low(t) {
+                m_low = m_low.min(self.score(t));
+            }
+        }
+        if !(m_up.is_finite() && m_low.is_finite()) {
+            return;
+        }
+        let keep: Vec<usize> = self
+            .active
+            .iter()
+            .copied()
+            .filter(|&t| {
+                let at_lower = self.alpha[t] <= 0.0;
+                let at_upper = self.alpha[t] >= self.c[t];
+                if !(at_lower || at_upper) {
+                    return true; // free variables stay
+                }
+                let s = self.score(t);
+                // Candidate for selection only while s > m_low (as an up
+                // member) or s < m_up (as a low member). Keep if it could
+                // still participate.
+                let could_up = self.in_up(t) && s > m_low;
+                let could_low = self.in_low(t) && s < m_up;
+                could_up || could_low
+            })
+            .collect();
+        if keep.len() >= 2 {
+            self.active = keep;
+        }
+    }
+}
+
+/// Solve the dual on an arbitrary row backend. `weights` optionally scales
+/// each point's C (AMG volumes).
+pub fn solve(
+    backend: &dyn RowBackend,
+    labels: &[i8],
+    params: &SvmParams,
+    weights: Option<&[f64]>,
+) -> Result<SolveResult> {
+    if backend.len() == 0 {
+        return Err(Error::Degenerate("empty training set".into()));
+    }
+    if !labels.contains(&1) || !labels.contains(&-1) {
+        return Err(Error::Degenerate("training set has a single class".into()));
+    }
+    let mut solver = Solver::new(backend, labels, params, weights)?;
+    let (iterations, gap) = solver.solve(params.max_iter);
+    let rho = solver.rho();
+    Ok(SolveResult {
+        alpha: solver.alpha,
+        rho,
+        iterations,
+        gap,
+    })
+}
+
+/// Train a (weighted) SVM on dense points with the pure-rust backend and
+/// package the result as a model.
+pub fn train_weighted(
+    points: &Matrix,
+    labels: &[i8],
+    params: &SvmParams,
+    weights: Option<&[f64]>,
+) -> Result<SvmModel> {
+    let backend = RustRowBackend::new(points, params.kernel);
+    let res = solve(&backend, labels, params, weights)?;
+    Ok(SvmModel::from_solution(
+        points, labels, &res.alpha, res.rho, params,
+    ))
+}
+
+/// Train an unweighted SVM (C⁺ = C⁻ = params.c_pos = params.c_neg).
+pub fn train(points: &Matrix, labels: &[i8], params: &SvmParams) -> Result<SvmModel> {
+    train_weighted(points, labels, params, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+    use crate::util::rng::Pcg64;
+
+    fn params_rbf(gamma: f64, c: f64) -> SvmParams {
+        SvmParams {
+            c_pos: c,
+            c_neg: c,
+            kernel: KernelKind::Rbf { gamma },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn separable_problem_trains_perfectly() {
+        let mut rng = Pcg64::seed_from(41);
+        let ds = two_gaussians(80, 80, 2, 8.0, &mut rng);
+        let model = train(&ds.points, &ds.labels, &params_rbf(0.5, 10.0)).unwrap();
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            if model.predict_label(ds.points.row(i)) == ds.labels[i] {
+                correct += 1;
+            }
+        }
+        assert_eq!(correct, ds.len(), "separable data must be fit exactly");
+    }
+
+    #[test]
+    fn alphas_respect_box_constraints() {
+        let mut rng = Pcg64::seed_from(42);
+        let ds = two_gaussians(60, 60, 3, 1.0, &mut rng); // overlapping
+        let p = params_rbf(0.3, 2.0);
+        let backend = RustRowBackend::new(&ds.points, p.kernel);
+        let res = solve(&backend, &ds.labels, &p, None).unwrap();
+        for (i, &a) in res.alpha.iter().enumerate() {
+            assert!(a >= -1e-12 && a <= 2.0 + 1e-9, "alpha[{i}]={a}");
+        }
+        // equality constraint
+        let sum: f64 = res
+            .alpha
+            .iter()
+            .zip(&ds.labels)
+            .map(|(&a, &y)| a * y as f64)
+            .sum();
+        assert!(sum.abs() < 1e-6, "yᵀα = {sum}");
+    }
+
+    #[test]
+    fn kkt_gap_below_eps() {
+        let mut rng = Pcg64::seed_from(43);
+        let ds = two_gaussians(100, 40, 4, 2.0, &mut rng);
+        let p = params_rbf(0.25, 1.0);
+        let backend = RustRowBackend::new(&ds.points, p.kernel);
+        let res = solve(&backend, &ds.labels, &p, None).unwrap();
+        assert!(res.gap <= p.eps + 1e-9, "gap {} > eps", res.gap);
+    }
+
+    #[test]
+    fn weighted_classes_shift_the_boundary() {
+        // Heavily imbalanced overlapping data: with C+ ≫ C- the minority
+        // recall (sensitivity) must improve vs equal weights.
+        let mut rng = Pcg64::seed_from(44);
+        let ds = two_gaussians(400, 40, 2, 2.0, &mut rng);
+        let eq = train(&ds.points, &ds.labels, &params_rbf(0.5, 1.0)).unwrap();
+        let mut wp = params_rbf(0.5, 1.0);
+        wp.c_pos = 10.0;
+        let weighted = train_weighted(&ds.points, &ds.labels, &wp, None).unwrap();
+        let recall = |m: &SvmModel| {
+            let mut tp = 0;
+            let mut p = 0;
+            for i in 0..ds.len() {
+                if ds.labels[i] == 1 {
+                    p += 1;
+                    if m.predict_label(ds.points.row(i)) == 1 {
+                        tp += 1;
+                    }
+                }
+            }
+            tp as f64 / p as f64
+        };
+        assert!(
+            recall(&weighted) >= recall(&eq),
+            "weighting must not hurt minority recall"
+        );
+        assert!(recall(&weighted) > 0.6);
+    }
+
+    #[test]
+    fn instance_weights_scale_box() {
+        let mut rng = Pcg64::seed_from(45);
+        let ds = two_gaussians(50, 50, 2, 1.5, &mut rng);
+        let p = params_rbf(0.5, 1.0);
+        let w: Vec<f64> = (0..100).map(|i| if i < 50 { 3.0 } else { 1.0 }).collect();
+        let backend = RustRowBackend::new(&ds.points, p.kernel);
+        let res = solve(&backend, &ds.labels, &p, Some(&w)).unwrap();
+        for i in 0..100 {
+            let cap = if i < 50 { 3.0 } else { 1.0 };
+            assert!(res.alpha[i] <= cap + 1e-9);
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_error() {
+        let m = Matrix::from_vec(2, 1, vec![0.0, 1.0]).unwrap();
+        assert!(train(&m, &[1, 1], &SvmParams::default()).is_err());
+    }
+
+    #[test]
+    fn shrinking_matches_non_shrinking() {
+        let mut rng = Pcg64::seed_from(46);
+        let ds = two_gaussians(150, 60, 3, 2.0, &mut rng);
+        let mut p = params_rbf(0.3, 1.5);
+        p.shrinking = true;
+        let a = train_weighted(&ds.points, &ds.labels, &p, None).unwrap();
+        p.shrinking = false;
+        let b = train_weighted(&ds.points, &ds.labels, &p, None).unwrap();
+        // Decision values should agree closely on a probe set.
+        let mut rng2 = Pcg64::seed_from(47);
+        let probe = two_gaussians(20, 20, 3, 2.0, &mut rng2);
+        for i in 0..probe.len() {
+            let da = a.decision(probe.points.row(i));
+            let db = b.decision(probe.points.row(i));
+            assert!(
+                (da - db).abs() < 5e-2 * da.abs().max(1.0),
+                "shrink mismatch {da} vs {db}"
+            );
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! A tiny declarative CLI argument parser (the vendor set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, and auto-generated `--help` text.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative command-line parser.
+///
+/// ```
+/// use mlsvm::util::cli::Args;
+/// let args = Args::new("demo", "demo tool")
+///     .opt("seed", "random seed", Some("42"))
+///     .flag("verbose", "print more")
+///     .parse_from(vec!["--seed".into(), "7".into(), "--verbose".into()])
+///     .unwrap();
+/// assert_eq!(args.get_u64("seed").unwrap(), 7);
+/// assert!(args.get_flag("verbose"));
+/// ```
+#[derive(Debug)]
+pub struct Args {
+    program: &'static str,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    /// Positional arguments in order of appearance.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Create a parser for `program` with a one-line description.
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Args {
+            program,
+            about,
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare a `--name <value>` option with an optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&str>) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Generated help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let head = if spec.takes_value {
+                format!("  --{} <value>", spec.name)
+            } else {
+                format!("  --{}", spec.name)
+            };
+            let def = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:<28}{}{def}\n", spec.help));
+        }
+        s
+    }
+
+    /// Parse from an explicit token list (testable entry point).
+    pub fn parse_from(mut self, tokens: Vec<String>) -> Result<Self> {
+        // Seed defaults.
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                self.values.insert(spec.name.to_string(), d.clone());
+            }
+        }
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(Error::Usage(self.help_text()));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| Error::Usage(format!("unknown option --{name}\n\n{}", self.help_text())))?
+                    .clone();
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| {
+                            Error::Usage(format!("option --{name} expects a value"))
+                        })?,
+                    };
+                    self.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(Error::Usage(format!("flag --{name} takes no value")));
+                    }
+                    self.flags.insert(name, true);
+                }
+            } else {
+                self.positional.push(tok);
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from the process environment (skipping argv[0] and, if present,
+    /// a subcommand name that was consumed by the caller).
+    pub fn parse(self, skip: usize) -> Result<Self> {
+        self.parse_from(std::env::args().skip(skip).collect())
+    }
+
+    /// Raw string value of `--name`, if set or defaulted.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Whether flag `--name` was passed.
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Parse `--name` as `u64`.
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.parse_val(name)
+    }
+
+    /// Parse `--name` as `usize`.
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.parse_val(name)
+    }
+
+    /// Parse `--name` as `f64`.
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.parse_val(name)
+    }
+
+    fn parse_val<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| Error::Usage(format!("missing required option --{name}")))?;
+        raw.parse::<T>()
+            .map_err(|_| Error::Usage(format!("option --{name}: cannot parse '{raw}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parser() -> Args {
+        Args::new("t", "test")
+            .opt("alpha", "alpha value", Some("1.5"))
+            .opt("name", "a name", None)
+            .flag("fast", "go fast")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parser().parse_from(vec![]).unwrap();
+        assert_eq!(a.get_f64("alpha").unwrap(), 1.5);
+        let a = parser()
+            .parse_from(vec!["--alpha".into(), "2.0".into()])
+            .unwrap();
+        assert_eq!(a.get_f64("alpha").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = parser()
+            .parse_from(vec!["--alpha=3".into(), "--fast".into(), "pos1".into()])
+            .unwrap();
+        assert_eq!(a.get_f64("alpha").unwrap(), 3.0);
+        assert!(a.get_flag("fast"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parser().parse_from(vec!["--nope".into()]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parser().parse_from(vec!["--name".into()]).is_err());
+        assert!(parser().parse_from(vec![]).unwrap().get_u64("name").is_err());
+    }
+
+    #[test]
+    fn help_is_usage_error() {
+        match parser().parse_from(vec!["--help".into()]) {
+            Err(Error::Usage(h)) => assert!(h.contains("--alpha")),
+            other => panic!("expected usage error, got {other:?}"),
+        }
+    }
+}

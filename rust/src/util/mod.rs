@@ -1,0 +1,15 @@
+//! Utility substrate built in-crate because the offline vendor set has no
+//! `rand`, `rayon`, `clap`, `proptest` or `criterion`:
+//!
+//! * [`rng`] — PCG-family PRNG plus the distributions the library needs.
+//! * [`pool`] — a scoped thread pool for data-parallel loops.
+//! * [`cli`] — a tiny declarative CLI argument parser.
+//! * [`timer`] — wall-clock timing helpers and a median-of-N bench runner.
+//! * [`quick`] — lightweight property-based testing (randomized inputs +
+//!   greedy shrinking), used by the test suites.
+
+pub mod cli;
+pub mod pool;
+pub mod quick;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,114 @@
+//! A small scoped thread pool for data-parallel loops.
+//!
+//! The vendor set has no `rayon`; this provides the two primitives the
+//! library needs: `parallel_for` over an index range with a chunked
+//! work-stealing-free static schedule, and `scope`d task spawning. On a
+//! single-core machine it degrades gracefully to sequential execution.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Number of worker threads to use for parallel sections.
+///
+/// Respects `MLSVM_THREADS` if set, otherwise `std::thread::available_parallelism`.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("MLSVM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(i)` for every `i` in `0..n`, potentially in parallel.
+///
+/// `f` must be `Sync` (it is shared by reference across workers). Work is
+/// distributed dynamically with an atomic chunk counter so uneven
+/// iterations (e.g. per-row kNN searches) balance well.
+pub fn parallel_for<F>(n: usize, chunk: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= chunk {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = chunk.max(1);
+    let counter = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let counter = Arc::clone(&counter);
+            let f = &f;
+            s.spawn(move || loop {
+                let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                for i in start..end {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map `0..n` in parallel into a `Vec<T>` preserving order.
+pub fn parallel_map<T, F>(n: usize, chunk: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        // Each index is written exactly once by exactly one worker, so the
+        // disjoint raw-pointer writes are safe.
+        struct SyncPtr<T>(*mut T);
+        unsafe impl<T: Send> Sync for SyncPtr<T> {}
+        let ptr = SyncPtr(out.as_mut_ptr());
+        // Reference the wrapper (not the raw field) so the closure capture
+        // is the Sync wrapper rather than the bare `*mut T`.
+        let ptr = &ptr;
+        parallel_for(n, chunk, |i| {
+            let v = f(i);
+            unsafe { ptr.0.add(i).write(v) };
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, 16, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(500, 8, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn zero_items_is_fine() {
+        parallel_for(0, 4, |_| panic!("must not be called"));
+        let v: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+}

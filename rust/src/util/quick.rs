@@ -1,0 +1,148 @@
+//! Lightweight property-based testing (the vendor set has no `proptest`).
+//!
+//! [`check`] runs a property over many randomized inputs drawn from a
+//! generator; on failure it greedily shrinks the input via a user-provided
+//! shrinker before panicking with the minimal counterexample. Used by the
+//! test suites for AMG, SMO and coordinator invariants.
+
+use crate::util::rng::{Pcg64, Rng};
+
+/// Configuration for [`check`].
+#[derive(Clone, Copy)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// RNG seed (deterministic test runs).
+    pub seed: u64,
+    /// Maximum shrink attempts after the first failure.
+    pub max_shrinks: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            seed: 0x5eed,
+            max_shrinks: 200,
+        }
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn from `gen`; on failure, shrink with
+/// `shrink` (which proposes a list of smaller candidates) and panic with
+/// the minimal failing input (via `Debug`).
+pub fn check<T, G, S, P>(cfg: Config, mut gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Pcg64::seed_from(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink: repeatedly take the first failing smaller candidate.
+        let mut minimal = input.clone();
+        let mut budget = cfg.max_shrinks;
+        'outer: while budget > 0 {
+            for cand in shrink(&minimal) {
+                budget -= 1;
+                if !prop(&cand) {
+                    minimal = cand;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property failed at case {case}/{}:\n  original: {input:?}\n  shrunk:   {minimal:?}",
+            cfg.cases
+        );
+    }
+}
+
+/// Convenience: shrinker for `Vec<T>` that tries removing halves and single
+/// elements (classic quickcheck list shrinking).
+pub fn shrink_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(v[..n / 2].to_vec());
+    out.push(v[n / 2..].to_vec());
+    if n <= 16 {
+        for i in 0..n {
+            let mut w = v.clone();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+/// Convenience: generate a vector with length in `[lo, hi]` using `f`.
+pub fn vec_of<T>(
+    rng: &mut Pcg64,
+    lo: usize,
+    hi: usize,
+    mut f: impl FnMut(&mut Pcg64) -> T,
+) -> Vec<T> {
+    let len = lo + rng.index(hi - lo + 1);
+    (0..len).map(|_| f(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check(
+            Config::default(),
+            |rng| rng.index(100),
+            |_| vec![],
+            |&x| x < 100,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(
+            Config::default(),
+            |rng| rng.index(100),
+            |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+            |&x| x < 50,
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property: sum < 100. Generator may produce big vectors; shrinking
+        // should cut them down. We verify by catching the panic message.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                Config {
+                    cases: 50,
+                    seed: 1,
+                    max_shrinks: 500,
+                },
+                |rng| vec_of(rng, 0, 20, |r| r.index(50)),
+                shrink_vec,
+                |v| v.iter().sum::<usize>() < 100,
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => return, // generator happened not to hit a failure: fine
+        };
+        assert!(msg.contains("shrunk"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Wall-clock timing helpers and the in-crate bench runner
+//! (the vendor set has no `criterion`).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Elapsed seconds since construction.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed time.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.secs())
+}
+
+/// Statistics from [`bench`].
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    /// Number of measured iterations.
+    pub iters: usize,
+    /// Median iteration time in seconds.
+    pub median: f64,
+    /// Mean iteration time in seconds.
+    pub mean: f64,
+    /// Minimum iteration time in seconds.
+    pub min: f64,
+    /// Maximum iteration time in seconds.
+    pub max: f64,
+}
+
+impl BenchStats {
+    /// Render as `median 1.234ms (min 1.1ms, max 2.0ms, n=10)`.
+    pub fn human(&self) -> String {
+        fn fmt(s: f64) -> String {
+            if s >= 1.0 {
+                format!("{s:.3}s")
+            } else if s >= 1e-3 {
+                format!("{:.3}ms", s * 1e3)
+            } else {
+                format!("{:.1}us", s * 1e6)
+            }
+        }
+        format!(
+            "median {} (min {}, max {}, n={})",
+            fmt(self.median),
+            fmt(self.min),
+            fmt(self.max),
+            self.iters
+        )
+    }
+}
+
+/// Criterion-lite: run `f` with `warmup` unmeasured iterations followed by
+/// `iters` measured ones; report median/mean/min/max.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        times.push(t.secs());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    BenchStats {
+        iters: n,
+        median: times[n / 2],
+        mean: times.iter().sum::<f64>() / n as f64,
+        min: times[0],
+        max: times[n - 1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_result_and_positive_time() {
+        let (v, secs) = timed(|| (0..1000).sum::<usize>());
+        assert_eq!(v, 499_500);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_stats_are_ordered() {
+        let st = bench(1, 5, || (0..10_000).map(|x| x as f64).sum::<f64>());
+        assert!(st.min <= st.median && st.median <= st.max);
+        assert_eq!(st.iters, 5);
+        assert!(!st.human().is_empty());
+    }
+}

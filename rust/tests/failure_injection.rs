@@ -1,0 +1,144 @@
+//! Failure-injection tests: malformed files, corrupted artifacts,
+//! degenerate datasets, and resource-edge conditions must produce clean
+//! errors — never panics or silent wrong answers.
+
+use mlsvm::data::matrix::Matrix;
+use mlsvm::mlsvm::{MlsvmParams, MlsvmTrainer};
+use mlsvm::prelude::*;
+use std::io::Write;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("mlsvm_failures").join(name);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn malformed_libsvm_lines_report_line_numbers() {
+    let cases = [
+        ("+1 2:abc\n", "bad value"),
+        ("+1 0:1\n", "1-based"),
+        ("zzz 1:2\n", "bad label"),
+        ("+1 5\n", "index:value"),
+    ];
+    for (text, needle) in cases {
+        let err = mlsvm::data::libsvm::parse(std::io::Cursor::new(text)).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("line 1") && msg.contains(needle),
+            "for {text:?} got: {msg}"
+        );
+    }
+}
+
+#[test]
+fn corrupted_artifact_manifest_fails_cleanly() {
+    let dir = tmpdir("bad_manifest");
+    std::fs::write(dir.join("manifest.txt"), "rbf_tile rbf.hlo.txt m=notanum\n").unwrap();
+    let err = mlsvm::runtime::Artifacts::load(&dir).unwrap_err();
+    assert!(err.to_string().contains("bad meta"));
+}
+
+#[test]
+fn corrupted_hlo_text_fails_at_compile_not_panic() {
+    let dir = tmpdir("bad_hlo");
+    std::fs::write(dir.join("manifest.txt"), "rbf_tile rbf.hlo.txt m=256 n=256 d=128\n").unwrap();
+    let mut f = std::fs::File::create(dir.join("rbf.hlo.txt")).unwrap();
+    writeln!(f, "HloModule garbage").unwrap();
+    writeln!(f, "this is not valid HLO").unwrap();
+    drop(f);
+    let mut rt = match mlsvm::runtime::Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(_) => return, // acceptable: client creation may fail first
+    };
+    let x = vec![0.0f32; 4];
+    let err = rt.execute_f32("rbf_tile", &[(&x, &[2, 2])]);
+    assert!(err.is_err(), "corrupted HLO must not execute");
+}
+
+#[test]
+fn single_class_and_empty_datasets_are_rejected_everywhere() {
+    let mut rng = Pcg64::seed_from(1);
+    // SMO
+    let m = Matrix::from_vec(3, 1, vec![0., 1., 2.]).unwrap();
+    assert!(mlsvm::svm::smo::train(&m, &[1, 1, 1], &Default::default()).is_err());
+    // trainer
+    let ds = Dataset::new(m.clone(), vec![-1, -1, -1]).unwrap();
+    assert!(MlsvmTrainer::new(MlsvmParams::default()).train(&ds, &mut rng).is_err());
+    // empty backend
+    let empty = Matrix::zeros(0, 0);
+    assert!(mlsvm::svm::smo::train(&empty, &[], &Default::default()).is_err());
+}
+
+#[test]
+fn duplicate_points_and_zero_variance_features_survive_training() {
+    // Degenerate geometry: many identical points + a constant feature.
+    let mut rng = Pcg64::seed_from(2);
+    let n = 400;
+    let mut m = Matrix::zeros(n, 3);
+    let mut labels = Vec::new();
+    for i in 0..n {
+        let (x, lab) = if i % 4 == 0 { (0.0, 1) } else { (3.0, -1) };
+        m.set(i, 0, x); // only informative feature, heavily duplicated
+        m.set(i, 1, 7.0); // constant
+        m.set(i, 2, (i % 2) as f32 * 1e-3); // near-constant
+        labels.push(lab);
+    }
+    let ds = Dataset::new(m, labels).unwrap();
+    let params = MlsvmParams {
+        hierarchy: mlsvm::amg::hierarchy::HierarchyParams {
+            coarsest_size: 50,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let model = MlsvmTrainer::new(params).train(&ds, &mut rng).unwrap();
+    let metrics = mlsvm::metrics::evaluate(&model.model, &ds);
+    assert!(metrics.gmean() > 0.99, "trivially separable: {}", metrics.report());
+}
+
+#[test]
+fn oversized_inputs_to_pjrt_are_rejected_not_truncated() {
+    let dir = mlsvm::runtime::Runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        return;
+    }
+    let rt = mlsvm::runtime::Runtime::new(&dir).unwrap();
+    // model with dim > artifact d must be rejected
+    let mut rng = Pcg64::seed_from(3);
+    let ds = mlsvm::data::synth::two_gaussians(40, 40, 200, 4.0, &mut rng); // d=200 > 128
+    let model = mlsvm::svm::smo::train(
+        &ds.points,
+        &ds.labels,
+        &mlsvm::svm::smo::SvmParams::default(),
+    )
+    .unwrap();
+    match mlsvm::runtime::rbf::PjrtDecision::new(&rt, &model) {
+        Ok(_) => panic!("dim 200 > 128 must be rejected"),
+        Err(e) => assert!(e.to_string().contains("exceeds artifact")),
+    }
+}
+
+#[test]
+fn model_file_truncation_detected() {
+    let mut rng = Pcg64::seed_from(4);
+    let ds = mlsvm::data::synth::two_gaussians(60, 60, 3, 4.0, &mut rng);
+    let model =
+        mlsvm::svm::smo::train(&ds.points, &ds.labels, &Default::default()).unwrap();
+    let dir = tmpdir("truncated_model");
+    let path = dir.join("m.txt");
+    model.save(&path).unwrap();
+    let full = std::fs::read_to_string(&path).unwrap();
+    // chop the file at 60%
+    let cut = full.len() * 6 / 10;
+    std::fs::write(&path, &full[..cut]).unwrap();
+    assert!(SvmModel::load(&path).is_err());
+}
+
+#[test]
+fn nan_features_rejected_by_validate_before_training() {
+    let mut m = Matrix::zeros(4, 2);
+    m.set(0, 0, f32::INFINITY);
+    let ds = Dataset::new(m, vec![1, -1, 1, -1]).unwrap();
+    assert!(ds.validate().is_err());
+}

@@ -1,0 +1,270 @@
+//! Property-based tests (via the in-crate `util::quick` harness) on the
+//! core invariants:
+//!
+//! * AMG: volume conservation, P row-stochasticity, caliber bound,
+//!   aggregate coverage — on random clustered point sets;
+//! * SMO: box constraints, equality constraint, KKT gap — on random
+//!   problems with random (C⁺, C⁻, γ);
+//! * coordinator/router: every submitted request gets exactly one result,
+//!   equal to the direct decision value — for random request streams;
+//! * k-NN: rp-forest lists are valid (sorted, self-free, within k).
+
+use mlsvm::amg::coarsen::{coarsen_level, CoarsenParams};
+use mlsvm::amg::interp::InterpParams;
+use mlsvm::data::matrix::Matrix;
+use mlsvm::graph::affinity::affinity_graph;
+use mlsvm::knn::KnnBackend;
+use mlsvm::svm::kernel::{KernelKind, RustRowBackend};
+use mlsvm::svm::smo;
+use mlsvm::util::quick::{check, Config};
+use mlsvm::util::rng::{Pcg64, Rng};
+
+/// Random clustered points: (n, dim, n_clusters) drawn per case.
+fn gen_points(rng: &mut Pcg64) -> (Matrix, Vec<f64>) {
+    let n = 60 + rng.index(240);
+    let dim = 2 + rng.index(6);
+    let clusters = 1 + rng.index(6);
+    let mut m = Matrix::zeros(n, dim);
+    for i in 0..n {
+        let c = (i % clusters) as f64 * 4.0;
+        for j in 0..dim {
+            m.set(i, j, (c + rng.normal()) as f32);
+        }
+    }
+    let volumes: Vec<f64> = (0..n).map(|_| 0.25 + rng.f64() * 3.0).collect();
+    (m, volumes)
+}
+
+#[test]
+fn amg_invariants_hold_on_random_inputs() {
+    check(
+        Config {
+            cases: 20,
+            seed: 0xA3,
+            max_shrinks: 0,
+        },
+        |rng| {
+            let caliber = 1 + rng.index(5);
+            let (m, v) = gen_points(rng);
+            (m, v, caliber)
+        },
+        |_| vec![],
+        |(m, volumes, caliber)| {
+            let g = match affinity_graph(m, 6, KnnBackend::Brute, 0) {
+                Ok(g) => g,
+                Err(_) => return false,
+            };
+            let params = CoarsenParams {
+                interp: InterpParams { caliber: *caliber },
+                ..Default::default()
+            };
+            let cl = match coarsen_level(m, volumes, &g, params) {
+                Ok(c) => c,
+                Err(_) => return false,
+            };
+            // volume conservation
+            let vf: f64 = volumes.iter().sum();
+            let vc: f64 = cl.volumes.iter().sum();
+            if (vf - vc).abs() > 1e-6 * vf {
+                return false;
+            }
+            // P rows sum to 1, nnz ≤ caliber
+            for (i, s) in cl.p.row_sums().iter().enumerate() {
+                if (s - 1.0).abs() > 1e-5 {
+                    return false;
+                }
+                if cl.p.row(i).len() > *caliber {
+                    return false;
+                }
+            }
+            // every fine point is in ≥ 1 aggregate
+            let mut covered = vec![false; m.rows()];
+            for agg in &cl.aggregates {
+                for &j in agg {
+                    covered[j as usize] = true;
+                }
+            }
+            covered.iter().all(|&c| c)
+        },
+    );
+}
+
+#[test]
+fn smo_invariants_hold_for_random_problems() {
+    check(
+        Config {
+            cases: 15,
+            seed: 0xB4,
+            max_shrinks: 0,
+        },
+        |rng| {
+            let n_pos = 20 + rng.index(60);
+            let n_neg = 20 + rng.index(120);
+            let sep = 0.5 + rng.f64() * 4.0;
+            let seed = rng.next_u64();
+            let c_pos = (0.1f64).max(rng.f64() * 50.0);
+            let c_neg = (0.1f64).max(rng.f64() * 10.0);
+            let gamma = 0.01 + rng.f64() * 2.0;
+            (n_pos, n_neg, sep, seed, c_pos, c_neg, gamma)
+        },
+        |_| vec![],
+        |&(n_pos, n_neg, sep, seed, c_pos, c_neg, gamma)| {
+            let mut rng = Pcg64::seed_from(seed);
+            let ds = mlsvm::data::synth::two_gaussians(n_neg, n_pos, 4, sep, &mut rng);
+            let params = smo::SvmParams {
+                c_pos,
+                c_neg,
+                kernel: KernelKind::Rbf { gamma },
+                ..Default::default()
+            };
+            let backend = RustRowBackend::new(&ds.points, params.kernel);
+            let res = match smo::solve(&backend, &ds.labels, &params, None) {
+                Ok(r) => r,
+                Err(_) => return false,
+            };
+            // box constraints
+            for (i, &a) in res.alpha.iter().enumerate() {
+                let cap = if ds.labels[i] == 1 { c_pos } else { c_neg };
+                if !(-1e-9..=cap + 1e-9).contains(&a) {
+                    return false;
+                }
+            }
+            // equality constraint
+            let sum: f64 = res
+                .alpha
+                .iter()
+                .zip(&ds.labels)
+                .map(|(&a, &y)| a * y as f64)
+                .sum();
+            if sum.abs() > 1e-6 * (1.0 + c_pos.max(c_neg)) {
+                return false;
+            }
+            // converged
+            res.gap <= params.eps + 1e-9
+        },
+    );
+}
+
+#[test]
+fn router_delivers_every_request_exactly_once() {
+    let dir = mlsvm::runtime::Runtime::default_dir();
+    let have_artifacts = dir.join("manifest.txt").exists();
+    check(
+        Config {
+            cases: 8,
+            seed: 0xC5,
+            max_shrinks: 0,
+        },
+        |rng| (rng.next_u64(), 1 + rng.index(300)),
+        |_| vec![],
+        |&(seed, n_requests)| {
+            let mut rng = Pcg64::seed_from(seed);
+            let ds = mlsvm::data::synth::two_gaussians(80, 60, 4, 3.0, &mut rng);
+            let params = smo::SvmParams {
+                kernel: KernelKind::Rbf { gamma: 0.3 },
+                ..Default::default()
+            };
+            let model = smo::train(&ds.points, &ds.labels, &params).unwrap();
+            let mut router = mlsvm::coordinator::Router::new_rust(
+                model.clone(),
+                16,
+                std::time::Duration::from_secs(3600),
+            );
+            let mut tickets = Vec::new();
+            for i in 0..n_requests {
+                let row = ds.points.row(i % ds.len());
+                tickets.push((i % ds.len(), router.submit(row)));
+            }
+            router.flush_local().unwrap();
+            for (i, t) in &tickets {
+                let Some(v) = router.take(*t) else { return false };
+                if (v - model.decision(ds.points.row(*i))).abs() > 1e-9 {
+                    return false;
+                }
+                // exactly once: second take fails
+                if router.take(*t).is_some() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+    let _ = have_artifacts;
+}
+
+#[test]
+fn rpforest_lists_are_structurally_valid() {
+    check(
+        Config {
+            cases: 12,
+            seed: 0xD6,
+            max_shrinks: 0,
+        },
+        |rng| (rng.next_u64(), 50 + rng.index(500), 2 + rng.index(20), 1 + rng.index(12)),
+        |_| vec![],
+        |&(seed, n, d, k)| {
+            let mut rng = Pcg64::seed_from(seed);
+            let mut m = Matrix::zeros(n, d);
+            for i in 0..n {
+                for j in 0..d {
+                    m.set(i, j, rng.normal() as f32);
+                }
+            }
+            let lists = mlsvm::knn::build_knn(&m, k, KnnBackend::RpForest, seed);
+            if lists.len() != n {
+                return false;
+            }
+            for (i, l) in lists.iter().enumerate() {
+                if l.len() > k {
+                    return false;
+                }
+                for w in l.windows(2) {
+                    if w[0].sqdist > w[1].sqdist || w[0].index == w[1].index {
+                        return false;
+                    }
+                }
+                if l.iter().any(|nb| nb.index as usize == i) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn kfold_is_always_a_partition() {
+    check(
+        Config {
+            cases: 30,
+            seed: 0xE7,
+            max_shrinks: 0,
+        },
+        |rng| (rng.next_u64(), 10 + rng.index(200), 2 + rng.index(8)),
+        |_| vec![],
+        |&(seed, n, k)| {
+            let mut rng = Pcg64::seed_from(seed);
+            let n_pos = 1 + rng.index(n / 2);
+            let ds = mlsvm::data::synth::two_gaussians(n - n_pos, n_pos, 3, 2.0, &mut rng);
+            let kf = mlsvm::data::split::KFold::new(&ds, k, &mut rng);
+            let mut seen = vec![false; ds.len()];
+            for f in 0..kf.k() {
+                let (tr, va) = kf.fold(&ds, f);
+                if tr.len() + va.len() != ds.len() {
+                    return false;
+                }
+                let _ = (tr, va);
+            }
+            // folds partition indices
+            let mut count = 0;
+            for f in 0..kf.k() {
+                let (_, va) = kf.fold(&ds, f);
+                count += va.len();
+            }
+            for s in seen.iter_mut() {
+                *s = true;
+            }
+            count == ds.len()
+        },
+    );
+}
