@@ -77,24 +77,102 @@ fn main() {
         println!("smo/solve       n={n:<6}       {}", st.human());
     }
 
-    // ---- kernel row throughput (rust) ----
-    {
-        let m = random_matrix(4_096, 64, 5);
+    // ---- kernel row throughput: scalar vs tiled vs tiled+parallel ----
+    // Emitted to BENCH_kernel.json so the perf trajectory is tracked.
+    let kernel_json = {
+        let n = 4_096usize;
+        let d = 64usize;
+        let m = random_matrix(n, d, 5);
         let backend = RustRowBackend::new(&m, KernelKind::Rbf { gamma: 0.1 });
-        let mut row = vec![0.0f32; 4_096];
-        let mut i = 0usize;
-        let st = bench(8, 64, || {
-            i = (i + 97) % 4_096;
-            backend.fill_row(i, &mut row);
+        let batch = 64usize;
+        let idxs: Vec<usize> = (0..batch).map(|k| (k * 97) % n).collect();
+
+        // scalar reference: one fill_row per requested row
+        let mut row = vec![0.0f32; n];
+        let st_scalar = bench(2, 8, || {
+            for &i in &idxs {
+                backend.fill_row(i, &mut row);
+            }
         });
-        let gflops = (2.0 * 4_096.0 * 64.0) / st.median / 1e9;
-        println!("kernel/row      n=4096 d=64    {} ({gflops:.2} GFLOP/s)", st.human());
+        // tiled single-thread micro-kernel
+        let st_tiled = bench(2, 8, || {
+            for &i in &idxs {
+                backend.fill_row_tiled(i, &mut row);
+            }
+        });
+        // tiled + parallel batch path
+        let mut out = vec![0.0f32; batch * n];
+        let st_batch = bench(2, 8, || {
+            backend.fill_rows_batch(&idxs, &mut out);
+        });
+
+        let rps = |median: f64| batch as f64 / median;
+        let (r_scalar, r_tiled, r_batch) =
+            (rps(st_scalar.median), rps(st_tiled.median), rps(st_batch.median));
+        println!(
+            "kernel/rows     scalar          {} ({:.0} rows/s)",
+            st_scalar.human(),
+            r_scalar
+        );
+        println!(
+            "kernel/rows     tiled           {} ({:.0} rows/s, {:.2}x)",
+            st_tiled.human(),
+            r_tiled,
+            r_tiled / r_scalar
+        );
+        println!(
+            "kernel/rows     tiled+parallel  {} ({:.0} rows/s, {:.2}x, {} threads)",
+            st_batch.human(),
+            r_batch,
+            r_batch / r_scalar,
+            mlsvm::util::pool::num_threads()
+        );
+
+        // ---- cache hit rate under a constrained budget ----
+        let mut rng = Pcg64::seed_from(9);
+        let ds = two_gaussians(1_000, 1_000, 16, 2.0, &mut rng);
+        let params = SvmParams {
+            kernel: KernelKind::Rbf { gamma: 0.1 },
+            cache_bytes: 500 * 2_000 * 4, // room for 25% of the rows
+            ..Default::default()
+        };
+        let cache_backend = RustRowBackend::new(&ds.points, params.kernel);
+        let res = solve(&cache_backend, &ds.labels, &params, None).unwrap();
+        let hit_rate = res.cache_hits as f64 / (res.cache_hits + res.cache_misses).max(1) as f64;
+        println!(
+            "cache/smo       n=2000 cap=25%  hits={} misses={} ({:.1}% hit rate, {} iters)",
+            res.cache_hits,
+            res.cache_misses,
+            100.0 * hit_rate,
+            res.iterations
+        );
+
+        format!(
+            "{{\n  \"bench\": \"kernel_rows\",\n  \"n\": {n},\n  \"d\": {d},\n  \"batch\": {batch},\n  \"threads\": {},\n  \"scalar_rows_per_s\": {r_scalar:.1},\n  \"tiled_rows_per_s\": {r_tiled:.1},\n  \"batch_rows_per_s\": {r_batch:.1},\n  \"speedup_tiled\": {:.3},\n  \"speedup_batch\": {:.3},\n  \"cache\": {{\n    \"n\": 2000,\n    \"capacity_rows_frac\": 0.25,\n    \"hits\": {},\n    \"misses\": {},\n    \"hit_rate\": {hit_rate:.4},\n    \"smo_iterations\": {}\n  }}\n}}\n",
+            mlsvm::util::pool::num_threads(),
+            r_tiled / r_scalar,
+            r_batch / r_scalar,
+            res.cache_hits,
+            res.cache_misses,
+            res.iterations
+        )
+    };
+    if let Err(e) = std::fs::write("BENCH_kernel.json", &kernel_json) {
+        eprintln!("could not write BENCH_kernel.json: {e}");
+    } else {
+        println!("wrote BENCH_kernel.json");
     }
 
     // ---- PJRT paths (needs artifacts) ----
     let dir = mlsvm::runtime::Runtime::default_dir();
     if dir.join("manifest.txt").exists() {
-        let mut rt = mlsvm::runtime::Runtime::new(dir).unwrap();
+        let mut rt = match mlsvm::runtime::Runtime::new(dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("pjrt/*          skipped ({e})");
+                return;
+            }
+        };
         let m = random_matrix(1_024, 64, 6);
         // Gram via rbf_tile artifact
         let st = bench(1, 3, || {

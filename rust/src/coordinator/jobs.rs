@@ -120,8 +120,25 @@ impl OneVsRestTrainer {
                 Err(e) => (None, Some(e.to_string())),
             };
             if self.verbose {
+                let (iters, hits, misses) = model
+                    .as_ref()
+                    .map(|m| {
+                        m.level_stats.iter().fold((0usize, 0u64, 0u64), |acc, s| {
+                            (
+                                acc.0 + s.solver.iterations,
+                                acc.1 + s.solver.cache_hits,
+                                acc.2 + s.solver.cache_misses,
+                            )
+                        })
+                    })
+                    .unwrap_or((0, 0, 0));
+                let hit_pct = if hits + misses > 0 {
+                    100.0 * hits as f64 / (hits + misses) as f64
+                } else {
+                    0.0
+                };
                 eprintln!(
-                    "[jobs] class {c}: n+={} n-={} {:.1}s {}",
+                    "[jobs] class {c}: n+={} n-={} {:.1}s iters={iters} cache={hit_pct:.1}% {}",
                     sizes.0,
                     sizes.1,
                     seconds,

@@ -16,5 +16,5 @@ pub mod report;
 pub mod router;
 
 pub use jobs::{MulticlassModel, OneVsRestTrainer};
-pub use report::Table;
+pub use report::{level_stats_table, Table};
 pub use router::{Router, RouterStats};

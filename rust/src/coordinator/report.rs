@@ -1,5 +1,9 @@
 //! Column-aligned plain-text tables for the benchmark harness (the
-//! Table-1/2/3 regenerators print through this).
+//! Table-1/2/3 regenerators print through this), plus the per-level
+//! training report (solver iterations, kernel-cache efficiency) so cache
+//! regressions are visible without a profiler.
+
+use crate::mlsvm::trainer::LevelStat;
 
 /// A simple table builder.
 #[derive(Debug, Default)]
@@ -59,6 +63,31 @@ impl Table {
     }
 }
 
+/// Per-level training report: one row per trained level with SMO
+/// iterations and kernel-cache hit rate alongside the quality columns.
+pub fn level_stats_table(stats: &[LevelStat]) -> Table {
+    let mut t = Table::new(&[
+        "lvl(+,-)", "n", "nSV", "iters", "cache h/m", "hit%", "warm", "ud", "secs", "cv-gmean",
+    ]);
+    for s in stats {
+        t.row(vec![
+            format!("({},{})", s.levels.0, s.levels.1),
+            s.train_size.to_string(),
+            s.n_sv.to_string(),
+            s.solver.iterations.to_string(),
+            format!("{}/{}", s.solver.cache_hits, s.solver.cache_misses),
+            format!("{:.1}", 100.0 * s.solver.hit_rate()),
+            if s.solver.warm_started { "y" } else { "-" }.to_string(),
+            if s.ud_used { "y" } else { "-" }.to_string(),
+            fmt_secs(s.seconds),
+            s.cv_gmean
+                .map(|g| format!("{g:.3}"))
+                .unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    t
+}
+
 /// Format seconds like the paper's Time columns (integer seconds, or one
 /// decimal under 10s).
 pub fn fmt_secs(s: f64) -> String {
@@ -97,5 +126,29 @@ mod tests {
     fn seconds_formatting() {
         assert_eq!(fmt_secs(479.4), "479");
         assert_eq!(fmt_secs(2.34), "2.3");
+    }
+
+    #[test]
+    fn level_report_surfaces_solver_and_cache_counters() {
+        let stat = LevelStat {
+            levels: (2, 3),
+            train_size: 500,
+            n_sv: 40,
+            ud_used: true,
+            seconds: 1.25,
+            cv_gmean: Some(0.9123),
+            solver: crate::svm::smo::TrainStats {
+                iterations: 1234,
+                gap: 1e-4,
+                cache_hits: 750,
+                cache_misses: 250,
+                warm_started: true,
+            },
+        };
+        let s = level_stats_table(&[stat]).render();
+        assert!(s.contains("1234"), "iterations missing: {s}");
+        assert!(s.contains("750/250"), "cache counters missing: {s}");
+        assert!(s.contains("75.0"), "hit rate missing: {s}");
+        assert!(s.contains("0.912"), "cv gmean missing: {s}");
     }
 }

@@ -1,37 +1,65 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the crate
+//! is dependency-free, so no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the mlsvm library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Input data violated a precondition (dimension mismatch, empty set, ...).
-    #[error("invalid input: {0}")]
     InvalidInput(String),
 
     /// A data file could not be parsed.
-    #[error("parse error at line {line}: {msg}")]
-    Parse { line: usize, msg: String },
+    Parse {
+        /// 1-based line number of the offending line.
+        line: usize,
+        /// What was wrong with it.
+        msg: String,
+    },
 
     /// I/O failure while reading or writing data/model/artifact files.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// The optimizer failed to make progress (degenerate problem).
-    #[error("solver failure: {0}")]
     Solver(String),
 
     /// A training set contained fewer than two classes.
-    #[error("degenerate training set: {0}")]
     Degenerate(String),
 
     /// The PJRT runtime failed (artifact missing, compile or execute error).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// CLI usage error.
-    #[error("usage: {0}")]
     Usage(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidInput(msg) => write!(f, "invalid input: {msg}"),
+            Error::Parse { line, msg } => write!(f, "parse error at line {line}: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Solver(msg) => write!(f, "solver failure: {msg}"),
+            Error::Degenerate(msg) => write!(f, "degenerate training set: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Usage(msg) => write!(f, "usage: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -41,5 +69,34 @@ impl Error {
     /// Shorthand for an [`Error::InvalidInput`].
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::InvalidInput(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_stable() {
+        assert_eq!(Error::invalid("x").to_string(), "invalid input: x");
+        assert_eq!(
+            Error::Parse {
+                line: 3,
+                msg: "bad value".into()
+            }
+            .to_string(),
+            "parse error at line 3: bad value"
+        );
+        assert_eq!(Error::Runtime("no".into()).to_string(), "runtime error: no");
+        assert_eq!(Error::Usage("u".into()).to_string(), "usage: u");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().starts_with("io error:"));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
     }
 }

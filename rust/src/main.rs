@@ -110,16 +110,10 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let model = MlsvmTrainer::new(params).train(&train, &mut rng)?;
     let secs = t.secs();
     if !args.get_flag("quiet") {
-        for s in &model.level_stats {
-            eprintln!(
-                "[level {:?}] n={} nsv={} ud={} t={}s",
-                s.levels,
-                s.train_size,
-                s.n_sv,
-                s.ud_used,
-                fmt_secs(s.seconds)
-            );
-        }
+        eprint!(
+            "{}",
+            mlsvm::coordinator::report::level_stats_table(&model.level_stats).render()
+        );
     }
     let m = mlsvm::metrics::evaluate(&model.model, &test);
     println!(

@@ -6,7 +6,7 @@ use crate::data::dataset::Dataset;
 use crate::error::Result;
 use crate::modelsel::search::{ud_search_with_ratio, UdSearchConfig, UdSearchOutcome};
 use crate::svm::model::SvmModel;
-use crate::svm::smo::train_weighted;
+use crate::svm::smo::{train_weighted_warm, TrainStats};
 use crate::util::rng::Pcg64;
 
 /// Output of the coarsest-level learning.
@@ -17,6 +17,8 @@ pub struct CoarsestResult {
     /// The UD outcome (parameters + CV score + log₂ center for
     /// inheritance).
     pub outcome: UdSearchOutcome,
+    /// Solver statistics of the final (full coarsest set) training.
+    pub stats: TrainStats,
 }
 
 /// Algorithm 2: UD-tuned training on the coarsest training set.
@@ -30,8 +32,18 @@ pub fn train_coarsest(
 ) -> Result<CoarsestResult> {
     let outcome = ud_search_with_ratio(ds, use_volumes, ud, None, ratio, rng)?;
     let weights = volume_weights(ds, use_volumes);
-    let model = train_weighted(&ds.points, &ds.labels, &outcome.params, weights.as_deref())?;
-    Ok(CoarsestResult { model, outcome })
+    let (model, stats) = train_weighted_warm(
+        &ds.points,
+        &ds.labels,
+        &outcome.params,
+        weights.as_deref(),
+        None,
+    )?;
+    Ok(CoarsestResult {
+        model,
+        outcome,
+        stats,
+    })
 }
 
 /// Mean-normalized volumes as instance weights (or None).

@@ -31,6 +31,10 @@ pub struct MlsvmParams {
     /// imbalanced-data copy-through: a small class stops coarsening early
     /// and is carried in full).
     pub keep_small_class_full: usize,
+    /// Warm-start each refinement level's SMO solve from the previous
+    /// level's support-vector α mapped through the aggregate expansion
+    /// (the fixed point is unchanged; only iteration counts drop).
+    pub warm_start: bool,
     /// RNG seed for splits/search (hierarchy has its own in `hierarchy`).
     pub seed: u64,
 }
@@ -48,6 +52,7 @@ impl Default for MlsvmParams {
             ud: UdSearchConfig::default(),
             use_volumes: true,
             keep_small_class_full: 300,
+            warm_start: true,
             seed: 0,
         }
     }

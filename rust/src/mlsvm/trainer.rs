@@ -21,10 +21,12 @@ use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
 use crate::mlsvm::coarsest::{train_coarsest, volume_weights};
 use crate::mlsvm::params::MlsvmParams;
-use crate::mlsvm::uncoarsen::{advance_active, build_level_dataset, svs_to_class_nodes, ActiveSet};
+use crate::mlsvm::uncoarsen::{
+    advance_active, build_level_dataset, svs_to_class_nodes, warm_start_alpha, ActiveSet,
+};
 use crate::modelsel::search::ud_search_with_ratio;
 use crate::svm::model::SvmModel;
-use crate::svm::smo::{train_weighted, SvmParams};
+use crate::svm::smo::{train_weighted_warm, SvmParams, TrainStats};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Timer;
 
@@ -43,6 +45,9 @@ pub struct LevelStat {
     pub seconds: f64,
     /// CV G-mean reported by UD (if it ran).
     pub cv_gmean: Option<f64>,
+    /// Solver statistics of the final training at this step (SMO
+    /// iterations, kernel-cache hits/misses, warm-start flag).
+    pub solver: TrainStats,
 }
 
 /// Trained multilevel model.
@@ -118,6 +123,7 @@ impl MlsvmTrainer {
             ud_used: true,
             seconds: t0.secs(),
             cv_gmean: Some(coarsest.outcome.gmean),
+            solver: coarsest.stats,
         });
 
         // ---- Uncoarsening (Algorithm 3) ----
@@ -125,6 +131,8 @@ impl MlsvmTrainer {
         for _step in 0..steps {
             let t = Timer::start();
             let (sv_pos, sv_neg) = svs_to_class_nodes(&model, &active_pos, &active_neg);
+            let prev_pos = active_pos.clone();
+            let prev_neg = active_neg.clone();
             active_pos = advance_active(&hpos, &active_pos, &sv_pos, keep_pos_full, p.grow_hops);
             active_neg = advance_active(&hneg, &active_neg, &sv_neg, keep_neg_full, p.grow_hops);
             let ds = build_level_dataset(&hpos, &hneg, &active_pos, &active_neg)?;
@@ -153,7 +161,24 @@ impl MlsvmTrainer {
                 None
             };
             let weights = volume_weights(&ds, p.use_volumes);
-            model = train_weighted(&ds.points, &ds.labels, &params, weights.as_deref())?;
+            // Warm-start: seed this level's SMO from the parent model's α
+            // mapped through the aggregate expansion (same fixed point,
+            // fewer iterations — the refinement loop's hot path).
+            let alpha0 = if p.warm_start {
+                Some(warm_start_alpha(
+                    &model, &hpos, &hneg, &prev_pos, &prev_neg, &active_pos, &active_neg,
+                ))
+            } else {
+                None
+            };
+            let (new_model, solver) = train_weighted_warm(
+                &ds.points,
+                &ds.labels,
+                &params,
+                weights.as_deref(),
+                alpha0.as_deref(),
+            )?;
+            model = new_model;
             stats.push(LevelStat {
                 levels: (active_pos.level, active_neg.level),
                 train_size: ds.len(),
@@ -161,6 +186,7 @@ impl MlsvmTrainer {
                 ud_used: use_ud,
                 seconds: t.secs(),
                 cv_gmean,
+                solver,
             });
         }
 
@@ -247,6 +273,33 @@ mod tests {
         assert!(last.train_size >= 60);
         let m = evaluate(&model.model, &ds);
         assert!(m.sensitivity() > 0.8, "SN={}", m.sensitivity());
+    }
+
+    #[test]
+    fn warm_start_tracks_cold_start_quality() {
+        let mut rng = Pcg64::seed_from(86);
+        let ds = two_gaussians(900, 250, 4, 3.5, &mut rng);
+        let (tr, te) = crate::data::split::train_test_split(&ds, 0.25, &mut rng);
+        let mut rng_w = Pcg64::seed_from(10);
+        let warm = MlsvmTrainer::new(quick_params(6)).train(&tr, &mut rng_w).unwrap();
+        let mut rng_c = Pcg64::seed_from(10);
+        let mut pc = quick_params(6);
+        pc.warm_start = false;
+        let cold = MlsvmTrainer::new(pc).train(&tr, &mut rng_c).unwrap();
+        // refinement levels actually warm-started
+        assert!(
+            warm.level_stats[1..].iter().any(|s| s.solver.warm_started),
+            "no refinement level warm-started"
+        );
+        assert!(cold.level_stats.iter().all(|s| !s.solver.warm_started));
+        // same fixed points -> same quality (within CV noise)
+        let gw = evaluate(&warm.model, &te).gmean();
+        let gc = evaluate(&cold.model, &te).gmean();
+        assert!((gw - gc).abs() < 0.05, "warm {gw} vs cold {gc}");
+        // stats are populated
+        assert!(warm.level_stats.iter().all(|s| {
+            s.solver.cache_hits + s.solver.cache_misses > 0
+        }));
     }
 
     #[test]

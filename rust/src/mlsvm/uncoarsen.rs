@@ -65,6 +65,83 @@ pub fn svs_to_class_nodes(
     (sv_pos, sv_neg)
 }
 
+/// Map a trained level model's dual variables through the aggregate→fine
+/// expansion (I⁻¹) onto the next level's stacked training set, producing a
+/// warm-start α for [`crate::svm::smo::solve_warm`].
+///
+/// Each support vector's α (recovered as `sv_coef · y`, which is ≥ 0) is
+/// split equally among its fine-level children that survived into the new
+/// active set; non-SV fine nodes start at 0. Mass is conserved per parent,
+/// so the seed stays close to equality-feasible; the solver clips to the
+/// new box constraints and repairs the residual. `prev_*`/`next_*` are the
+/// active sets the model was trained on and the ones produced by
+/// [`advance_active`] (node lists sorted ascending in both).
+pub fn warm_start_alpha(
+    model: &SvmModel,
+    hpos: &Hierarchy,
+    hneg: &Hierarchy,
+    prev_pos: &ActiveSet,
+    prev_neg: &ActiveSet,
+    next_pos: &ActiveSet,
+    next_neg: &ActiveSet,
+) -> Vec<f64> {
+    let n_pos_prev = prev_pos.nodes.len();
+    let n_pos_next = next_pos.nodes.len();
+    let mut alpha = vec![0.0f64; n_pos_next + next_neg.nodes.len()];
+    let (pos_part, neg_part) = alpha.split_at_mut(n_pos_next);
+    for (k, &stacked) in model.sv_indices.iter().enumerate() {
+        let a = model.sv_coef[k] * model.sv_labels[k] as f64;
+        if a <= 0.0 {
+            continue;
+        }
+        if stacked < n_pos_prev {
+            spread_alpha(hpos, prev_pos, next_pos, prev_pos.nodes[stacked], a, pos_part);
+        } else {
+            spread_alpha(
+                hneg,
+                prev_neg,
+                next_neg,
+                prev_neg.nodes[stacked - n_pos_prev],
+                a,
+                neg_part,
+            );
+        }
+    }
+    alpha
+}
+
+/// Distribute one coarse node's α over its children present in the next
+/// active set (equal shares; nothing if no child survived).
+fn spread_alpha(
+    h: &Hierarchy,
+    prev: &ActiveSet,
+    next: &ActiveSet,
+    node: u32,
+    a: f64,
+    out: &mut [f64],
+) {
+    let same_level = next.level == prev.level;
+    let singleton = [node];
+    let expanded;
+    let children: &[u32] = if same_level {
+        &singleton
+    } else {
+        expanded = h.expand_to_finer(prev.level, &singleton);
+        &expanded
+    };
+    let slots: Vec<usize> = children
+        .iter()
+        .filter_map(|c| next.nodes.binary_search(c).ok())
+        .collect();
+    if slots.is_empty() {
+        return;
+    }
+    let share = a / slots.len() as f64;
+    for s in slots {
+        out[s] += share;
+    }
+}
+
 /// Advance one class's active set to the next finer level (Algorithm 3
 /// lines 2–6, plus the paper's "add their neighborhoods").
 ///
@@ -211,6 +288,44 @@ mod tests {
         let next = advance_active(&h, &cur, &[3, 1, 3], false, 0);
         assert_eq!(next.level, 0);
         assert_eq!(next.nodes, vec![1, 3]);
+    }
+
+    #[test]
+    fn warm_start_alpha_conserves_mass_through_expansion() {
+        let hp = hier(300, 8);
+        let hn = hier(300, 9);
+        if hp.depth() < 2 || hn.depth() < 2 {
+            return;
+        }
+        let lp = hp.depth() - 1;
+        let ln = hn.depth() - 1;
+        let prev_pos = full_active(&hp, lp);
+        let prev_neg = full_active(&hn, ln);
+        let ds = build_level_dataset(&hp, &hn, &prev_pos, &prev_neg).unwrap();
+        let params = crate::svm::smo::SvmParams::default();
+        let model = crate::svm::smo::train(&ds.points, &ds.labels, &params).unwrap();
+        let (sv_pos, sv_neg) = svs_to_class_nodes(&model, &prev_pos, &prev_neg);
+        let next_pos = advance_active(&hp, &prev_pos, &sv_pos, false, 0);
+        let next_neg = advance_active(&hn, &prev_neg, &sv_neg, false, 0);
+        let a0 = warm_start_alpha(
+            &model, &hp, &hn, &prev_pos, &prev_neg, &next_pos, &next_neg,
+        );
+        assert_eq!(a0.len(), next_pos.nodes.len() + next_neg.nodes.len());
+        assert!(a0.iter().all(|&a| a >= 0.0));
+        // every SV expanded into the new active set -> total α conserved
+        let total_parent: f64 = model
+            .sv_coef
+            .iter()
+            .zip(&model.sv_labels)
+            .map(|(&c, &y)| c * y as f64)
+            .sum();
+        let total_child: f64 = a0.iter().sum();
+        assert!(
+            (total_parent - total_child).abs() < 1e-9 * total_parent.max(1.0),
+            "α mass {total_parent} -> {total_child}"
+        );
+        // and the seed is nonzero exactly where children of SVs live
+        assert!(total_child > 0.0);
     }
 
     #[test]

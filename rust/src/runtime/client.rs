@@ -15,6 +15,13 @@ use crate::error::{Error, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+/// Default artifact directory: `$MLSVM_ARTIFACTS` or `./artifacts`.
+fn default_artifact_dir() -> PathBuf {
+    std::env::var("MLSVM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
 /// Parsed artifact manifest.
 #[derive(Debug, Clone)]
 pub struct Artifacts {
@@ -83,6 +90,7 @@ impl Artifacts {
             .ok_or_else(|| Error::Runtime(format!("artifact '{name}' has no meta '{key}'")))
     }
 
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     fn path(&self, name: &str) -> Result<&Path> {
         Ok(&self
             .entries
@@ -93,6 +101,7 @@ impl Artifacts {
 }
 
 /// A PJRT CPU runtime with a compile cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     /// Manifest.
@@ -100,6 +109,7 @@ pub struct Runtime {
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create the CPU client and parse the manifest in `dir`.
     pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
@@ -115,9 +125,7 @@ impl Runtime {
 
     /// Default artifact directory: `$MLSVM_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
-        std::env::var("MLSVM_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+        default_artifact_dir()
     }
 
     /// PJRT platform string (e.g. "cpu") — diagnostics.
@@ -175,6 +183,49 @@ impl Runtime {
     }
 }
 
+/// Stub runtime for builds without the `pjrt` feature: same surface as the
+/// real [`Runtime`], but construction always fails with a clear message so
+/// every artifact-gated call site (tests, CLI, router) degrades to the
+/// pure-rust path. This keeps the default build free of the unvendored
+/// `xla` crate.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    /// Manifest (never populated — the stub constructor always errors).
+    pub artifacts: Artifacts,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Parse the manifest, then report the missing feature. Manifest
+    /// errors (missing/corrupt) take precedence so diagnostics stay
+    /// faithful to the artifact state.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let _ = Artifacts::load(dir)?;
+        Err(Error::Runtime(
+            "built without the `pjrt` feature: vendor the `xla` crate and rebuild with \
+             `--features pjrt` to execute AOT artifacts"
+                .into(),
+        ))
+    }
+
+    /// Default artifact directory: `$MLSVM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        default_artifact_dir()
+    }
+
+    /// PJRT platform string — diagnostics.
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature disabled)".to_string()
+    }
+
+    /// Always fails: artifact execution needs the `pjrt` feature.
+    pub fn execute_f32(&mut self, name: &str, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        Err(Error::Runtime(format!(
+            "execute {name}: built without the `pjrt` feature"
+        )))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +258,7 @@ mod tests {
         assert!(err.to_string().contains("make artifacts"));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn rbf_tile_executes_and_matches_rust_kernel() {
         let Some(dir) = artifacts_dir() else { return };

@@ -1,23 +1,56 @@
-//! LRU kernel-row cache — the LibSVM `Cache` equivalent.
+//! O(1) LRU kernel-row cache — the LibSVM `Cache` equivalent.
 //!
 //! SMO touches the same kernel rows repeatedly (active working-set
 //! variables). The cache bounds memory to `capacity_bytes` and evicts the
 //! least-recently-used full row. Rows are f32 (as in LibSVM); misses are
 //! delegated to the [`RowBackend`].
+//!
+//! Every operation is O(1) in the number of cached rows: residency is a
+//! direct-indexed `key -> slot` table and recency is an intrusive
+//! prev/next list threaded through a slab of row slots. Evicted rows hand
+//! their buffer to the incoming row instead of reallocating, so a solver
+//! at steady state performs no allocation at all. [`KernelCache::row_pair`]
+//! pins the first row while the second is fetched, which makes the
+//! capacity-2 case correct by construction rather than by argument.
+//! [`KernelCache::rows_batch`] groups misses and delegates them to the
+//! backend's batched (parallel, tiled) path in capacity-bounded segments.
 
 use crate::svm::kernel::RowBackend;
-use std::collections::HashMap;
 
-/// LRU cache of kernel rows.
+/// Sentinel for "no slot" in the intrusive list and the index table.
+const NIL: u32 = u32::MAX;
+
+/// One slab entry: a cached kernel row plus its intrusive LRU links.
+struct Slot {
+    /// Row index this slot currently holds.
+    key: u32,
+    /// Next slot toward the LRU end (NIL at the tail).
+    next: u32,
+    /// Previous slot toward the MRU end (NIL at the head).
+    prev: u32,
+    /// Pinned slots are skipped by eviction (held by `row_pair`).
+    pinned: bool,
+    /// The row values (length = number of points).
+    buf: Box<[f32]>,
+}
+
+/// O(1) LRU cache of kernel rows.
 pub struct KernelCache<'a> {
     backend: &'a dyn RowBackend,
     n: usize,
     capacity_rows: usize,
-    rows: HashMap<usize, Box<[f32]>>,
-    // LRU order: front = oldest. Small (≤ capacity_rows) so Vec is fine.
-    order: Vec<usize>,
+    /// key -> slot index, NIL when not resident. O(1) lookup without
+    /// hashing (keys are dense row indices).
+    index: Vec<u32>,
+    slots: Vec<Slot>,
+    /// Most-recently-used slot (NIL when empty).
+    head: u32,
+    /// Least-recently-used slot (NIL when empty).
+    tail: u32,
     hits: u64,
     misses: u64,
+    /// Staging buffer for `rows_batch` misses, recycled between calls.
+    scratch: Vec<f32>,
 }
 
 impl<'a> KernelCache<'a> {
@@ -30,10 +63,13 @@ impl<'a> KernelCache<'a> {
             backend,
             n,
             capacity_rows,
-            rows: HashMap::new(),
-            order: Vec::new(),
+            index: vec![NIL; n],
+            slots: Vec::new(),
+            head: NIL,
+            tail: NIL,
             hits: 0,
             misses: 0,
+            scratch: Vec::new(),
         }
     }
 
@@ -42,49 +78,190 @@ impl<'a> KernelCache<'a> {
         self.n
     }
 
+    /// Maximum number of rows the cache will hold.
+    pub fn capacity_rows(&self) -> usize {
+        self.capacity_rows
+    }
+
     /// (hits, misses) counters — perf instrumentation.
     pub fn stats(&self) -> (u64, u64) {
         (self.hits, self.misses)
     }
 
-    /// Get row `i`, computing and caching it if absent.
-    pub fn row(&mut self, i: usize) -> &[f32] {
-        if self.rows.contains_key(&i) {
-            self.hits += 1;
-            // refresh LRU position
-            if let Some(pos) = self.order.iter().position(|&x| x == i) {
-                self.order.remove(pos);
-            }
-            self.order.push(i);
-        } else {
-            self.misses += 1;
-            if self.rows.len() >= self.capacity_rows {
-                let evict = self.order.remove(0);
-                self.rows.remove(&evict);
-            }
-            let mut buf = vec![0.0f32; self.n].into_boxed_slice();
-            self.backend.fill_row(i, &mut buf);
-            self.rows.insert(i, buf);
-            self.order.push(i);
+    /// Resident row keys from least- to most-recently used (test/debug
+    /// introspection of the LRU order).
+    pub fn lru_keys(&self) -> Vec<usize> {
+        let mut keys = Vec::with_capacity(self.slots.len());
+        let mut s = self.tail;
+        while s != NIL {
+            let slot = &self.slots[s as usize];
+            keys.push(slot.key as usize);
+            s = slot.prev;
         }
-        self.rows.get(&i).unwrap()
+        keys
+    }
+
+    fn unlink(&mut self, s: u32) {
+        let (prev, next) = {
+            let slot = &self.slots[s as usize];
+            (slot.prev, slot.next)
+        };
+        if prev != NIL {
+            self.slots[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, s: u32) {
+        let old_head = self.head;
+        {
+            let slot = &mut self.slots[s as usize];
+            slot.prev = NIL;
+            slot.next = old_head;
+        }
+        if old_head != NIL {
+            self.slots[old_head as usize].prev = s;
+        }
+        self.head = s;
+        if self.tail == NIL {
+            self.tail = s;
+        }
+    }
+
+    /// Move a resident slot to the MRU position.
+    fn touch(&mut self, s: u32) {
+        if self.head != s {
+            self.unlink(s);
+            self.push_front(s);
+        }
+    }
+
+    /// Claim a slot for `key` (grow the slab below capacity, otherwise
+    /// recycle the least-recently-used unpinned slot, buffer included) and
+    /// link it at the MRU position. The buffer contents are stale — the
+    /// caller fills them.
+    fn alloc_slot(&mut self, key: usize) -> usize {
+        debug_assert_eq!(self.index[key], NIL);
+        let s = if self.slots.len() < self.capacity_rows {
+            let s = self.slots.len() as u32;
+            self.slots.push(Slot {
+                key: key as u32,
+                next: NIL,
+                prev: NIL,
+                pinned: false,
+                buf: vec![0.0f32; self.n].into_boxed_slice(),
+            });
+            s
+        } else {
+            // Walk from the true LRU end past any pinned slots.
+            let mut s = self.tail;
+            while s != NIL && self.slots[s as usize].pinned {
+                s = self.slots[s as usize].prev;
+            }
+            if s == NIL {
+                // Every slot pinned (cannot happen with capacity >= 2 and
+                // the single pin of row_pair); grow past capacity rather
+                // than deadlock.
+                let s = self.slots.len() as u32;
+                self.slots.push(Slot {
+                    key: key as u32,
+                    next: NIL,
+                    prev: NIL,
+                    pinned: false,
+                    buf: vec![0.0f32; self.n].into_boxed_slice(),
+                });
+                s
+            } else {
+                self.unlink(s);
+                let slot = &mut self.slots[s as usize];
+                self.index[slot.key as usize] = NIL;
+                slot.key = key as u32;
+                s
+            }
+        };
+        self.index[key] = s;
+        self.push_front(s);
+        s as usize
+    }
+
+    /// Get row `i`, computing and caching it if absent. O(1) bookkeeping.
+    pub fn row(&mut self, i: usize) -> &[f32] {
+        let s = self.index[i];
+        if s != NIL {
+            self.hits += 1;
+            self.touch(s);
+            return &self.slots[s as usize].buf;
+        }
+        self.misses += 1;
+        let s = self.alloc_slot(i);
+        let backend = self.backend;
+        backend.fill_row(i, &mut self.slots[s].buf);
+        &self.slots[s].buf
     }
 
     /// Get rows `i` and `j` simultaneously (the SMO update needs both).
+    /// Row `i` is pinned while `j` is fetched, so neither can evict the
+    /// other at any capacity.
     pub fn row_pair(&mut self, i: usize, j: usize) -> (&[f32], &[f32]) {
         assert_ne!(i, j);
-        // Ensure both are resident (order matters so neither evicts the other:
-        // capacity ≥ 2 guarantees the second fetch cannot evict the first
-        // because the first was just refreshed... unless capacity is 2 and
-        // both were absent; fetching j after i evicts the oldest, which is
-        // not i since i was appended last).
         self.row(i);
+        let si = self.index[i] as usize;
+        self.slots[si].pinned = true;
         self.row(j);
-        let ri = self.rows.get(&i).unwrap().as_ref() as *const [f32];
-        let rj = self.rows.get(&j).unwrap().as_ref();
-        // SAFETY: distinct keys -> distinct boxes; no mutation until the
-        // returned borrows end (we hold &mut self).
-        (unsafe { &*ri }, rj)
+        self.slots[si].pinned = false;
+        let sj = self.index[j] as usize;
+        debug_assert_ne!(si, sj);
+        // Disjoint slots -> disjoint borrows via split_at.
+        if si < sj {
+            let (a, b) = self.slots.split_at(sj);
+            (&a[si].buf, &b[0].buf)
+        } else {
+            let (a, b) = self.slots.split_at(si);
+            (&b[0].buf, &a[sj].buf)
+        }
+    }
+
+    /// Make the given rows resident (up to capacity): hits are refreshed,
+    /// misses are grouped and computed by batched backend calls
+    /// ([`RowBackend::fill_rows_batch`] — tiled and parallel on the rust
+    /// backend) and then inserted. Duplicate indices are counted once.
+    /// The staging buffer is bounded by one capacity's worth of rows, so
+    /// the cache's byte budget holds; when more rows than the capacity
+    /// are requested, later rows win the slots — values are always
+    /// correct, residency is best-effort.
+    pub fn rows_batch(&mut self, idxs: &[usize]) {
+        let mut miss: Vec<usize> = Vec::new();
+        for &i in idxs {
+            let s = self.index[i];
+            if s != NIL {
+                self.hits += 1;
+                self.touch(s);
+            } else {
+                miss.push(i);
+            }
+        }
+        miss.sort_unstable();
+        miss.dedup();
+        if miss.is_empty() {
+            return;
+        }
+        self.misses += miss.len() as u64;
+        for seg in miss.chunks(self.capacity_rows) {
+            self.scratch.resize(seg.len() * self.n, 0.0);
+            self.backend.fill_rows_batch(seg, &mut self.scratch);
+            for (k, &i) in seg.iter().enumerate() {
+                let s = self.alloc_slot(i);
+                self.slots[s]
+                    .buf
+                    .copy_from_slice(&self.scratch[k * self.n..(k + 1) * self.n]);
+            }
+        }
     }
 }
 
@@ -117,7 +294,7 @@ mod tests {
     }
 
     #[test]
-    fn eviction_keeps_capacity() {
+    fn eviction_keeps_capacity_and_true_lru_order() {
         let m = backend_fixture(16);
         let b = RustRowBackend::new(&m, KernelKind::Linear);
         // capacity for exactly 2 rows
@@ -126,11 +303,12 @@ mod tests {
         cache.row(0);
         cache.row(1);
         cache.row(2); // evicts 0
-        assert!(cache.rows.len() <= 2);
+        assert_eq!(cache.lru_keys(), vec![1, 2]);
         let (_, misses0) = cache.stats();
-        cache.row(0); // miss again
+        cache.row(0); // miss again, evicts 1
         let (_, misses1) = cache.stats();
         assert_eq!(misses1, misses0 + 1);
+        assert_eq!(cache.lru_keys(), vec![2, 0]);
     }
 
     #[test]
@@ -148,6 +326,26 @@ mod tests {
     }
 
     #[test]
+    fn row_pair_at_capacity_two_never_evicts_its_own_rows() {
+        let m = backend_fixture(12);
+        let b = RustRowBackend::new(&m, KernelKind::Linear);
+        let mut cache = KernelCache::new(&b, 2 * 12 * 4);
+        assert_eq!(cache.capacity_rows(), 2);
+        // Both rows absent, cache already full with other rows: the pin
+        // must protect the first fetch while the second evicts.
+        cache.row(0);
+        cache.row(1);
+        let (ri, rj) = cache.row_pair(7, 9);
+        let mut want_i = vec![0.0f32; 12];
+        let mut want_j = vec![0.0f32; 12];
+        b.fill_row(7, &mut want_i);
+        b.fill_row(9, &mut want_j);
+        assert_eq!(ri, &want_i[..]);
+        assert_eq!(rj, &want_j[..]);
+        assert_eq!(cache.lru_keys(), vec![7, 9]);
+    }
+
+    #[test]
     fn values_match_backend_after_heavy_eviction() {
         let m = backend_fixture(10);
         let b = RustRowBackend::new(&m, KernelKind::Rbf { gamma: 0.5 });
@@ -159,6 +357,42 @@ mod tests {
                 b.fill_row(i, &mut want);
                 assert_eq!(got, want, "pass {pass} row {i}");
             }
+        }
+    }
+
+    #[test]
+    fn rows_batch_groups_misses_and_counts_duplicates_once() {
+        let m = backend_fixture(20);
+        let b = RustRowBackend::new(&m, KernelKind::Rbf { gamma: 0.3 });
+        let mut cache = KernelCache::new(&b, 8 * 20 * 4);
+        cache.row(3);
+        cache.rows_batch(&[3, 5, 7, 5, 9]);
+        let (h, mi) = cache.stats();
+        assert_eq!(h, 1, "3 was resident");
+        assert_eq!(mi, 1 + 3, "first row(3) plus misses {{5,7,9}}");
+        // all requested rows resident with correct values
+        let mut want = vec![0.0f32; 20];
+        for i in [3usize, 5, 7, 9] {
+            b.fill_row(i, &mut want);
+            assert_eq!(cache.row(i), &want[..], "row {i}");
+        }
+        let (h2, mi2) = cache.stats();
+        assert_eq!(h2, 1 + 4);
+        assert_eq!(mi2, 4);
+    }
+
+    #[test]
+    fn rows_batch_larger_than_capacity_stays_correct() {
+        let m = backend_fixture(10);
+        let b = RustRowBackend::new(&m, KernelKind::Linear);
+        let mut cache = KernelCache::new(&b, 3 * 10 * 4);
+        let all: Vec<usize> = (0..10).collect();
+        cache.rows_batch(&all);
+        assert_eq!(cache.lru_keys().len(), cache.capacity_rows());
+        let mut want = vec![0.0f32; 10];
+        for i in 0..10 {
+            b.fill_row(i, &mut want);
+            assert_eq!(cache.row(i), &want[..], "row {i}");
         }
     }
 }

@@ -11,6 +11,17 @@
 //! [`crate::runtime::rbf`] (L1/L2 of the three-layer stack).
 
 use crate::data::matrix::{dot, sqdist, Matrix};
+use crate::util::pool;
+
+/// Column-tile width of the blocked kernel micro-kernel: kernel rows are
+/// produced `KERNEL_TILE` points at a time so the tile of the point matrix
+/// stays cache-resident while the (cheap) transcendental pass runs over it.
+pub const KERNEL_TILE: usize = 256;
+
+/// Number of requested rows each parallel task computes together. Rows in
+/// one block share every point tile they stream through, so the point
+/// matrix is read once per block instead of once per row.
+const QUERY_BLOCK: usize = 4;
 
 /// Kernel function over feature vectors.
 pub trait Kernel: Send + Sync {
@@ -151,6 +162,29 @@ pub trait RowBackend: Send + Sync {
     /// `len()`), `out[j] = K(x_i, x_j)` as f32 (LibSVM precision).
     fn fill_row(&self, i: usize, out: &mut [f32]);
 
+    /// Compute many kernel rows at once: `out` must hold
+    /// `idxs.len() * len()` values and receives the full row of `idxs[k]`
+    /// at `out[k*len()..(k+1)*len()]`. Backends override this with
+    /// batched/parallel paths; the default is a sequential [`fill_row`]
+    /// loop (exactly equivalent, used by backends that already hold a
+    /// precomputed Gram matrix).
+    ///
+    /// [`fill_row`]: RowBackend::fill_row
+    fn fill_rows_batch(&self, idxs: &[usize], out: &mut [f32]) {
+        let n = self.len();
+        assert_eq!(
+            out.len(),
+            idxs.len() * n,
+            "fill_rows_batch: out holds {} values, need {} rows x {} points",
+            out.len(),
+            idxs.len(),
+            n
+        );
+        for (k, &i) in idxs.iter().enumerate() {
+            self.fill_row(i, &mut out[k * n..(k + 1) * n]);
+        }
+    }
+
     /// Kernel diagonal K(x_i, x_i) for all i. Default falls back to full
     /// rows (O(n²·d)); backends override with the O(n·d) direct form —
     /// SMO needs the diagonal at startup and the fallback dominates
@@ -181,6 +215,66 @@ impl<'a> RustRowBackend<'a> {
             norms: points.row_sqnorms(),
         }
     }
+
+    /// Tiled single-row micro-kernel: identical output to
+    /// [`RowBackend::fill_row`], but blocked in [`KERNEL_TILE`]-point
+    /// column tiles with the transcendental (`exp`/`powi`) hoisted into a
+    /// separate pass over each tile. Exposed for the benchmark harness.
+    pub fn fill_row_tiled(&self, i: usize, out: &mut [f32]) {
+        self.fill_rows_block(&[i], out);
+    }
+
+    /// Blocked micro-kernel over a small set of requested rows: streams
+    /// the point matrix tile by tile, reusing each tile across every row
+    /// in the block, with precomputed norms and a separate
+    /// transcendental pass per tile.
+    fn fill_rows_block(&self, idxs: &[usize], out: &mut [f32]) {
+        let n = self.points.rows();
+        debug_assert_eq!(out.len(), idxs.len() * n);
+        let mut t0 = 0usize;
+        while t0 < n {
+            let t1 = (t0 + KERNEL_TILE).min(n);
+            for (k, &i) in idxs.iter().enumerate() {
+                let a = self.points.row(i);
+                let orow = &mut out[k * n..(k + 1) * n];
+                match self.kind {
+                    KernelKind::Rbf { gamma } => {
+                        let na = self.norms[i];
+                        // pass 1: squared distances via the norm identity
+                        for j in t0..t1 {
+                            let d2 = (na + self.norms[j]
+                                - 2.0 * dot(a, self.points.row(j)) as f64)
+                                .max(0.0);
+                            orow[j] = d2 as f32;
+                        }
+                        // pass 2: hoisted exp over the tile
+                        for v in &mut orow[t0..t1] {
+                            *v = (-gamma * *v as f64).exp() as f32;
+                        }
+                    }
+                    KernelKind::Linear => {
+                        for j in t0..t1 {
+                            orow[j] = dot(a, self.points.row(j));
+                        }
+                    }
+                    KernelKind::Poly {
+                        gamma,
+                        coef0,
+                        degree,
+                    } => {
+                        for j in t0..t1 {
+                            orow[j] = dot(a, self.points.row(j));
+                        }
+                        // pass 2: hoisted powi over the tile
+                        for v in &mut orow[t0..t1] {
+                            *v = (gamma * *v as f64 + coef0).powi(degree as i32) as f32;
+                        }
+                    }
+                }
+            }
+            t0 = t1;
+        }
+    }
 }
 
 impl RowBackend for RustRowBackend<'_> {
@@ -203,6 +297,46 @@ impl RowBackend for RustRowBackend<'_> {
                 }
             }
         }
+    }
+
+    /// Tiled + parallel batch path: requested rows are split into
+    /// [`QUERY_BLOCK`]-sized blocks, blocks are distributed over the
+    /// [`crate::util::pool`] workers, and each block runs the tiled
+    /// micro-kernel over its disjoint window of `out`.
+    fn fill_rows_batch(&self, idxs: &[usize], out: &mut [f32]) {
+        let n = self.points.rows();
+        assert_eq!(
+            out.len(),
+            idxs.len() * n,
+            "fill_rows_batch: out holds {} values, need {} rows x {} points",
+            out.len(),
+            idxs.len(),
+            n
+        );
+        if idxs.is_empty() {
+            return;
+        }
+        let nblocks = idxs.len().div_ceil(QUERY_BLOCK);
+        if pool::num_threads() <= 1 || nblocks <= 1 {
+            self.fill_rows_block(idxs, out);
+            return;
+        }
+        // Each block writes a disjoint window of `out`; disjoint
+        // raw-pointer windows are handed out per task (the same idiom as
+        // `util::pool::parallel_map`).
+        struct SyncPtr(*mut f32);
+        unsafe impl Sync for SyncPtr {}
+        let ptr = SyncPtr(out.as_mut_ptr());
+        let ptr = &ptr;
+        pool::parallel_for(nblocks, 1, |b| {
+            let k0 = b * QUERY_BLOCK;
+            let k1 = (k0 + QUERY_BLOCK).min(idxs.len());
+            // SAFETY: blocks partition 0..idxs.len(), so the windows
+            // [k0*n, k1*n) are pairwise disjoint and in-bounds.
+            let window =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(k0 * n), (k1 - k0) * n) };
+            self.fill_rows_block(&idxs[k0..k1], window);
+        });
     }
 
     fn fill_row(&self, i: usize, out: &mut [f32]) {
@@ -287,6 +421,98 @@ mod tests {
                 assert!((row[j] - want).abs() < 1e-6, "K[{i}][{j}]");
             }
         }
+    }
+
+    fn random_points(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = crate::util::rng::Pcg64::seed_from(seed);
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                use crate::util::rng::Rng;
+                m.set(i, j, rng.normal() as f32);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn tiled_row_matches_scalar_row_across_tile_boundaries() {
+        for kind in [
+            KernelKind::Rbf { gamma: 0.4 },
+            KernelKind::Linear,
+            KernelKind::Poly {
+                gamma: 0.5,
+                coef0: 1.0,
+                degree: 3,
+            },
+        ] {
+            for n in [1usize, KERNEL_TILE - 1, KERNEL_TILE, KERNEL_TILE + 1] {
+                let m = random_points(n, 7, 11 + n as u64);
+                let backend = RustRowBackend::new(&m, kind);
+                let mut scalar = vec![0.0f32; n];
+                let mut tiled = vec![0.0f32; n];
+                for i in [0usize, n / 2, n - 1] {
+                    backend.fill_row(i, &mut scalar);
+                    backend.fill_row_tiled(i, &mut tiled);
+                    for j in 0..n {
+                        assert!(
+                            (scalar[j] - tiled[j]).abs() < 1e-6,
+                            "{kind:?} n={n} K[{i}][{j}]: {} vs {}",
+                            scalar[j],
+                            tiled[j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_rows_match_scalar_rows() {
+        let n = 2 * KERNEL_TILE + 3;
+        let m = random_points(n, 9, 23);
+        let backend = RustRowBackend::new(&m, KernelKind::Rbf { gamma: 0.2 });
+        let idxs: Vec<usize> = (0..n).step_by(17).collect();
+        let mut batch = vec![0.0f32; idxs.len() * n];
+        backend.fill_rows_batch(&idxs, &mut batch);
+        let mut want = vec![0.0f32; n];
+        for (k, &i) in idxs.iter().enumerate() {
+            backend.fill_row(i, &mut want);
+            assert_eq!(&batch[k * n..(k + 1) * n], &want[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn default_trait_batch_matches_override() {
+        // A backend that does NOT override fill_rows_batch must agree with
+        // the tiled override through the trait default.
+        struct Wrap<'a>(&'a RustRowBackend<'a>);
+        impl RowBackend for Wrap<'_> {
+            fn len(&self) -> usize {
+                self.0.len()
+            }
+            fn fill_row(&self, i: usize, out: &mut [f32]) {
+                self.0.fill_row(i, out);
+            }
+        }
+        let m = random_points(100, 5, 31);
+        let backend = RustRowBackend::new(&m, KernelKind::Linear);
+        let wrap = Wrap(&backend);
+        let idxs = [3usize, 0, 99, 41];
+        let mut a = vec![0.0f32; idxs.len() * 100];
+        let mut b = vec![0.0f32; idxs.len() * 100];
+        backend.fill_rows_batch(&idxs, &mut a);
+        wrap.fill_rows_batch(&idxs, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "fill_rows_batch")]
+    fn batch_rejects_wrong_out_length() {
+        let m = random_points(8, 3, 41);
+        let backend = RustRowBackend::new(&m, KernelKind::Linear);
+        let mut out = vec![0.0f32; 7]; // needs 2*8
+        backend.fill_rows_batch(&[0, 1], &mut out);
     }
 
     #[test]

@@ -17,6 +17,6 @@ pub mod kernel;
 pub mod model;
 pub mod smo;
 
-pub use kernel::{Kernel, KernelKind, LinearKernel, RbfKernel};
+pub use kernel::{Kernel, KernelKind, LinearKernel, RbfKernel, RowBackend, KERNEL_TILE};
 pub use model::SvmModel;
-pub use smo::{train, train_weighted, SvmParams};
+pub use smo::{train, train_weighted, train_weighted_warm, SvmParams, TrainStats};

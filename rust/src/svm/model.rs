@@ -80,9 +80,20 @@ impl SvmModel {
     }
 
     /// Batch decision values (pure-rust path; the PJRT-artifact path lives
-    /// in [`crate::runtime::rbf`] and is validated against this).
+    /// in [`crate::runtime::rbf`] and is validated against this). The
+    /// kernel object is built once and queries are distributed over the
+    /// [`crate::util::pool`] workers.
     pub fn decision_batch(&self, xs: &Matrix) -> Vec<f64> {
-        (0..xs.rows()).map(|i| self.decision(xs.row(i))).collect()
+        let k = self.kernel.build();
+        let k = k.as_ref();
+        crate::util::pool::parallel_map(xs.rows(), 8, |i| {
+            let x = xs.row(i);
+            let mut s = -self.rho;
+            for v in 0..self.n_sv() {
+                s += self.sv_coef[v] * k.eval(self.sv.row(v), x);
+            }
+            s
+        })
     }
 
     /// Batch labels.

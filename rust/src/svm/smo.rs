@@ -65,11 +65,22 @@ pub struct SolveResult {
     pub iterations: usize,
     /// Final KKT gap.
     pub gap: f64,
+    /// Kernel-cache hits during the solve.
+    pub cache_hits: u64,
+    /// Kernel-cache misses during the solve.
+    pub cache_misses: u64,
+    /// Whether the solve was seeded from a caller-provided α.
+    pub warm_started: bool,
 }
 
 const TAU: f64 = 1e-12;
 
+/// Kernel rows per chunk when (re)building gradients from a batched
+/// backend call (bounds the staging buffer to `GRAD_CHUNK * n` floats).
+const GRAD_CHUNK: usize = 32;
+
 struct Solver<'a> {
+    backend: &'a dyn RowBackend,
     cache: KernelCache<'a>,
     y: Vec<f64>,
     c: Vec<f64>,
@@ -88,6 +99,7 @@ impl<'a> Solver<'a> {
         labels: &[i8],
         params: &SvmParams,
         weights: Option<&[f64]>,
+        alpha0: Option<&[f64]>,
     ) -> Result<Solver<'a>> {
         let n = backend.len();
         if labels.len() != n {
@@ -106,25 +118,99 @@ impl<'a> Solver<'a> {
                 *ci *= wi.max(1e-12);
             }
         }
-        let mut cache = KernelCache::new(backend, params.cache_bytes);
+        let cache = KernelCache::new(backend, params.cache_bytes);
         // K diagonal (O(n·d) via the backend's direct form).
         let mut kdiag = vec![0.0f64; n];
         backend.fill_diag(&mut kdiag);
-        // α = 0 → G = −e.
-        let grad = vec![-1.0f64; n];
-        let _ = &mut cache;
-        Ok(Solver {
+        let mut solver = Solver {
+            backend,
             cache,
             y,
             c,
+            // α = 0 → G = −e.
             alpha: vec![0.0; n],
-            grad,
+            grad: vec![-1.0f64; n],
             kdiag,
             active: (0..n).collect(),
             eps: params.eps,
             shrinking: params.shrinking,
             unshrunk: false,
-        })
+        };
+        if let Some(a0) = alpha0 {
+            if a0.len() != n {
+                return Err(Error::invalid("smo: warm-start alpha count mismatch"));
+            }
+            solver.seed_alpha(a0);
+        }
+        Ok(solver)
+    }
+
+    /// Seed α from a caller-provided vector: clip to the box constraints,
+    /// repair the equality constraint yᵀα = 0 (SMO pair updates preserve
+    /// it, so a violated start would never converge to a feasible point),
+    /// and rebuild the gradient from the nonzero entries with batched
+    /// kernel rows.
+    fn seed_alpha(&mut self, a0: &[f64]) {
+        let n = a0.len();
+        for t in 0..n {
+            self.alpha[t] = a0[t].clamp(0.0, self.c[t]);
+        }
+        // Repair yᵀα = 0 by draining mass from the surplus side (the
+        // side's total is at least |s|, so this always terminates at 0).
+        let mut s: f64 = self.alpha.iter().zip(&self.y).map(|(a, y)| a * y).sum();
+        for t in 0..n {
+            if s.abs() <= 1e-12 {
+                break;
+            }
+            if self.y[t] * s > 0.0 && self.alpha[t] > 0.0 {
+                let take = self.alpha[t].min(s.abs());
+                self.alpha[t] -= take;
+                s -= self.y[t] * take;
+            }
+        }
+        self.rebuild_gradient_from_alpha();
+    }
+
+    /// G_t = −1 + Σ_j y_t y_j α_j K_tj, accumulated from batched kernel
+    /// rows of the nonzero-α points only (O(#SV · n) kernel work, done
+    /// tile-parallel by the backend instead of row-at-a-time).
+    ///
+    /// When the SV set fits in the kernel cache the rows go through
+    /// [`KernelCache::rows_batch`], so resident rows are reused, misses
+    /// are grouped into parallel batches, and the hit/miss counters see
+    /// the traffic; larger sets stream straight from the backend in
+    /// bounded chunks (caching them would just thrash).
+    fn rebuild_gradient_from_alpha(&mut self) {
+        let n = self.alpha.len();
+        self.grad.clear();
+        self.grad.resize(n, -1.0);
+        let sv: Vec<usize> = (0..n).filter(|&j| self.alpha[j] > 0.0).collect();
+        if sv.is_empty() {
+            return;
+        }
+        if sv.len() <= self.cache.capacity_rows() {
+            self.cache.rows_batch(&sv);
+            for &j in &sv {
+                let aj = self.alpha[j] * self.y[j];
+                let row = self.cache.row(j);
+                for t in 0..n {
+                    self.grad[t] += self.y[t] * aj * row[t] as f64;
+                }
+            }
+        } else {
+            let mut buf = vec![0.0f32; GRAD_CHUNK.min(sv.len()) * n];
+            for chunk in sv.chunks(GRAD_CHUNK) {
+                let out = &mut buf[..chunk.len() * n];
+                self.backend.fill_rows_batch(chunk, out);
+                for (k, &j) in chunk.iter().enumerate() {
+                    let aj = self.alpha[j] * self.y[j];
+                    let row = &out[k * n..(k + 1) * n];
+                    for t in 0..n {
+                        self.grad[t] += self.y[t] * aj * row[t] as f64;
+                    }
+                }
+            }
+        }
     }
 
     /// −y_t G_t, the WSS score.
@@ -159,17 +245,18 @@ impl<'a> Solver<'a> {
         if i == usize::MAX {
             return None;
         }
-        // Need row i for the second-order term.
-        let n_all = self.cache.n();
-        let mut row_i = vec![0.0f32; n_all];
-        row_i.copy_from_slice(self.cache.row(i));
+        // Row i for the second-order term — borrowed from the cache, no
+        // copy (the loop below touches only disjoint fields).
+        let row_i = self.cache.row(i);
 
         let mut j = usize::MAX;
         let mut best_obj = f64::INFINITY;
         let mut m_low = f64::INFINITY;
         for &t in &self.active {
-            if self.in_low(t) {
-                let s = self.score(t);
+            let in_low = (self.y[t] < 0.0 && self.alpha[t] < self.c[t])
+                || (self.y[t] > 0.0 && self.alpha[t] > 0.0);
+            if in_low {
+                let s = -self.y[t] * self.grad[t];
                 m_low = m_low.min(s);
                 let b = m - s;
                 if b > 0.0 {
@@ -191,8 +278,11 @@ impl<'a> Solver<'a> {
     }
 
     /// Two-variable analytic update (LibSVM's `Solver::solve` inner step).
+    /// One `row_pair` fetch serves both the k_ij read and the gradient
+    /// pass — the alpha/grad mutations touch fields disjoint from the
+    /// cache, so the row borrows stay live across the whole update.
     fn update_pair(&mut self, i: usize, j: usize) {
-        let (row_i, _row_j) = self.cache.row_pair(i, j);
+        let (row_i, row_j) = self.cache.row_pair(i, j);
         let yi = self.y[i];
         let yj = self.y[j];
         let ci = self.c[i];
@@ -259,36 +349,18 @@ impl<'a> Solver<'a> {
         if dai == 0.0 && daj == 0.0 {
             return;
         }
-        // Re-borrow rows (NLL: previous borrows ended).
-        let n = self.cache.n();
-        let mut qi = vec![0.0f64; n];
-        let mut qj = vec![0.0f64; n];
-        {
-            let (row_i, row_j) = self.cache.row_pair(i, j);
-            for t in 0..n {
-                qi[t] = row_i[t] as f64;
-                qj[t] = row_j[t] as f64;
-            }
-        }
         for &t in &self.active {
             self.grad[t] +=
-                self.y[t] * (yi * qi[t] * dai + yj * qj[t] * daj);
+                self.y[t] * (yi * row_i[t] as f64 * dai + yj * row_j[t] as f64 * daj);
         }
     }
 
     /// Reconstruct the full gradient from scratch (after shrinking, before
-    /// the final convergence check). O(#SV · n) kernel work.
+    /// the final convergence check). O(#SV · n) kernel work, batched
+    /// through the backend's tiled parallel path.
     fn reconstruct_gradient(&mut self) {
         let n = self.cache.n();
-        self.grad = vec![-1.0; n];
-        let sv: Vec<usize> = (0..n).filter(|&t| self.alpha[t] > 0.0).collect();
-        for &s in &sv {
-            let a = self.alpha[s] * self.y[s];
-            let row = self.cache.row(s).to_vec();
-            for t in 0..n {
-                self.grad[t] += self.y[t] * a * row[t] as f64;
-            }
-        }
+        self.rebuild_gradient_from_alpha();
         self.active = (0..n).collect();
     }
 
@@ -428,21 +500,69 @@ pub fn solve(
     params: &SvmParams,
     weights: Option<&[f64]>,
 ) -> Result<SolveResult> {
+    solve_warm(backend, labels, params, weights, None)
+}
+
+/// Like [`solve`], but optionally warm-started: `alpha0` seeds the dual
+/// variables (clipped to the box constraints, equality-constraint
+/// repaired, gradient reconstructed from batched kernel rows of the
+/// nonzero entries). The fixed point is the same as a cold start — only
+/// the iteration count changes.
+pub fn solve_warm(
+    backend: &dyn RowBackend,
+    labels: &[i8],
+    params: &SvmParams,
+    weights: Option<&[f64]>,
+    alpha0: Option<&[f64]>,
+) -> Result<SolveResult> {
     if backend.len() == 0 {
         return Err(Error::Degenerate("empty training set".into()));
     }
     if !labels.contains(&1) || !labels.contains(&-1) {
         return Err(Error::Degenerate("training set has a single class".into()));
     }
-    let mut solver = Solver::new(backend, labels, params, weights)?;
+    let warm_started = alpha0.map(|a| a.iter().any(|&v| v > 0.0)).unwrap_or(false);
+    let mut solver = Solver::new(backend, labels, params, weights, alpha0)?;
     let (iterations, gap) = solver.solve(params.max_iter);
     let rho = solver.rho();
+    let (cache_hits, cache_misses) = solver.cache.stats();
     Ok(SolveResult {
         alpha: solver.alpha,
         rho,
         iterations,
         gap,
+        cache_hits,
+        cache_misses,
+        warm_started,
     })
+}
+
+/// Solver-side statistics of one training run (surfaced per level by the
+/// multilevel trainer and the coordinator report).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainStats {
+    /// SMO iterations executed.
+    pub iterations: usize,
+    /// Final KKT gap.
+    pub gap: f64,
+    /// Kernel-cache hits.
+    pub cache_hits: u64,
+    /// Kernel-cache misses.
+    pub cache_misses: u64,
+    /// Whether the solve was seeded from an inherited α.
+    pub warm_started: bool,
+}
+
+impl TrainStats {
+    /// Cache hit fraction in [0, 1] (0 when no accesses happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
 }
 
 /// Train a (weighted) SVM on dense points with the pure-rust backend and
@@ -453,11 +573,30 @@ pub fn train_weighted(
     params: &SvmParams,
     weights: Option<&[f64]>,
 ) -> Result<SvmModel> {
+    train_weighted_warm(points, labels, params, weights, None).map(|(m, _)| m)
+}
+
+/// Like [`train_weighted`], but optionally warm-started from `alpha0`
+/// (see [`solve_warm`]) and returning solver statistics alongside the
+/// model.
+pub fn train_weighted_warm(
+    points: &Matrix,
+    labels: &[i8],
+    params: &SvmParams,
+    weights: Option<&[f64]>,
+    alpha0: Option<&[f64]>,
+) -> Result<(SvmModel, TrainStats)> {
     let backend = RustRowBackend::new(points, params.kernel);
-    let res = solve(&backend, labels, params, weights)?;
-    Ok(SvmModel::from_solution(
-        points, labels, &res.alpha, res.rho, params,
-    ))
+    let res = solve_warm(&backend, labels, params, weights, alpha0)?;
+    let stats = TrainStats {
+        iterations: res.iterations,
+        gap: res.gap,
+        cache_hits: res.cache_hits,
+        cache_misses: res.cache_misses,
+        warm_started: res.warm_started,
+    };
+    let model = SvmModel::from_solution(points, labels, &res.alpha, res.rho, params);
+    Ok((model, stats))
 }
 
 /// Train an unweighted SVM (C⁺ = C⁻ = params.c_pos = params.c_neg).
@@ -572,6 +711,69 @@ mod tests {
     fn degenerate_inputs_error() {
         let m = Matrix::from_vec(2, 1, vec![0.0, 1.0]).unwrap();
         assert!(train(&m, &[1, 1], &SvmParams::default()).is_err());
+    }
+
+    #[test]
+    fn warm_start_from_solution_converges_immediately_to_same_answer() {
+        let mut rng = Pcg64::seed_from(48);
+        let ds = two_gaussians(120, 60, 3, 2.0, &mut rng);
+        let p = params_rbf(0.3, 1.5);
+        let backend = RustRowBackend::new(&ds.points, p.kernel);
+        let cold = solve(&backend, &ds.labels, &p, None).unwrap();
+        let warm = solve_warm(&backend, &ds.labels, &p, None, Some(&cold.alpha)).unwrap();
+        assert!(warm.warm_started);
+        assert!(
+            warm.iterations <= cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        assert!((warm.rho - cold.rho).abs() < 5e-3, "{} vs {}", warm.rho, cold.rho);
+        let diff: f64 = warm
+            .alpha
+            .iter()
+            .zip(&cold.alpha)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / cold.alpha.len() as f64;
+        assert!(diff < 1e-3, "mean |Δα| = {diff}");
+        assert!(warm.gap <= p.eps + 1e-9);
+    }
+
+    #[test]
+    fn warm_start_from_garbage_is_repaired_and_converges() {
+        let mut rng = Pcg64::seed_from(49);
+        let ds = two_gaussians(80, 50, 3, 2.0, &mut rng);
+        let p = params_rbf(0.4, 2.0);
+        let backend = RustRowBackend::new(&ds.points, p.kernel);
+        // out-of-box, equality-violating seed: must be clipped + repaired
+        let bad: Vec<f64> = (0..ds.len()).map(|i| (i as f64 * 0.37) % 5.0 - 1.0).collect();
+        let warm = solve_warm(&backend, &ds.labels, &p, None, Some(&bad)).unwrap();
+        let cold = solve(&backend, &ds.labels, &p, None).unwrap();
+        for (i, &a) in warm.alpha.iter().enumerate() {
+            assert!(a >= -1e-12 && a <= 2.0 + 1e-9, "alpha[{i}]={a}");
+        }
+        let sum: f64 = warm
+            .alpha
+            .iter()
+            .zip(&ds.labels)
+            .map(|(&a, &y)| a * y as f64)
+            .sum();
+        assert!(sum.abs() < 1e-6, "yᵀα = {sum}");
+        assert!(warm.gap <= p.eps + 1e-9);
+        assert!((warm.rho - cold.rho).abs() < 5e-2, "{} vs {}", warm.rho, cold.rho);
+    }
+
+    #[test]
+    fn solve_reports_cache_traffic() {
+        let mut rng = Pcg64::seed_from(50);
+        let ds = two_gaussians(60, 60, 3, 1.5, &mut rng);
+        let p = params_rbf(0.5, 1.0);
+        let backend = RustRowBackend::new(&ds.points, p.kernel);
+        let res = solve(&backend, &ds.labels, &p, None).unwrap();
+        assert!(res.cache_misses > 0, "a cold solve must miss");
+        assert!(res.cache_hits > 0, "SMO revisits working-set rows");
+        assert!(!res.warm_started);
     }
 
     #[test]

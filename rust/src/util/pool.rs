@@ -10,16 +10,22 @@ use std::sync::Arc;
 
 /// Number of worker threads to use for parallel sections.
 ///
-/// Respects `MLSVM_THREADS` if set, otherwise `std::thread::available_parallelism`.
+/// Respects `MLSVM_THREADS` if set, otherwise
+/// `std::thread::available_parallelism`. Resolved once per process (the
+/// batched kernel-row path queries this on every batch, so the env/sysfs
+/// lookup is memoized).
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("MLSVM_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("MLSVM_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
 }
 
 /// Run `f(i)` for every `i` in `0..n`, potentially in parallel.

@@ -14,7 +14,8 @@ use mlsvm::amg::interp::InterpParams;
 use mlsvm::data::matrix::Matrix;
 use mlsvm::graph::affinity::affinity_graph;
 use mlsvm::knn::KnnBackend;
-use mlsvm::svm::kernel::{KernelKind, RustRowBackend};
+use mlsvm::svm::cache::KernelCache;
+use mlsvm::svm::kernel::{Kernel, KernelKind, RowBackend, RustRowBackend, KERNEL_TILE};
 use mlsvm::svm::smo;
 use mlsvm::util::quick::{check, Config};
 use mlsvm::util::rng::{Pcg64, Rng};
@@ -141,6 +142,209 @@ fn smo_invariants_hold_for_random_problems() {
             }
             // converged
             res.gap <= params.eps + 1e-9
+        },
+    );
+}
+
+#[test]
+fn batched_kernel_rows_match_pointwise_eval_for_all_kinds() {
+    // Tile-boundary sizes are the dangerous ones: n = 1, tile−1, tile,
+    // tile+1, plus a random size, for each kernel kind.
+    check(
+        Config {
+            cases: 24,
+            seed: 0xF8,
+            max_shrinks: 0,
+        },
+        |rng| {
+            let kind = match rng.index(3) {
+                0 => KernelKind::Rbf {
+                    gamma: 0.05 + rng.f64() * 1.5,
+                },
+                1 => KernelKind::Linear,
+                _ => KernelKind::Poly {
+                    gamma: 0.1 + rng.f64(),
+                    coef0: rng.f64(),
+                    degree: 2 + rng.index(3) as u32,
+                },
+            };
+            let n = match rng.index(5) {
+                0 => 1,
+                1 => KERNEL_TILE - 1,
+                2 => KERNEL_TILE,
+                3 => KERNEL_TILE + 1,
+                _ => 2 + rng.index(2 * KERNEL_TILE),
+            };
+            let d = 1 + rng.index(12);
+            (kind, n, d, rng.next_u64())
+        },
+        |_| vec![],
+        |&(kind, n, d, seed)| {
+            let mut rng = Pcg64::seed_from(seed);
+            let mut m = Matrix::zeros(n, d);
+            for i in 0..n {
+                for j in 0..d {
+                    // modest scale keeps the f32-dot rounding of both
+                    // paths inside the 1e-6 contract
+                    m.set(i, j, (rng.normal() * 0.25) as f32);
+                }
+            }
+            let backend = RustRowBackend::new(&m, kind);
+            let k = kind.build();
+            let n_rows = n.min(8);
+            let idxs: Vec<usize> = (0..n_rows).map(|r| r * n / n_rows.max(1)).collect();
+            let mut out = vec![0.0f32; idxs.len() * n];
+            backend.fill_rows_batch(&idxs, &mut out);
+            for (r, &i) in idxs.iter().enumerate() {
+                for j in 0..n {
+                    let want = k.eval(m.row(i), m.row(j)) as f32;
+                    let got = out[r * n + j];
+                    if (got - want).abs() > 1e-6 * want.abs().max(1.0) {
+                        eprintln!("{kind:?} n={n} d={d} K[{i}][{j}]: {got} vs {want}");
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn lru_cache_matches_reference_model_on_random_traces() {
+    // Reference model: a Vec-based LRU (the pre-O(1) semantics). The slab
+    // cache must evict in exactly the same order on any access trace.
+    check(
+        Config {
+            cases: 30,
+            seed: 0x1A,
+            max_shrinks: 0,
+        },
+        |rng| {
+            let n = 4 + rng.index(30);
+            let cap = 2 + rng.index(6);
+            let trace: Vec<usize> = (0..(20 + rng.index(200))).map(|_| rng.index(n)).collect();
+            (n, cap, trace)
+        },
+        |_| vec![],
+        |(n, cap, trace)| {
+            let (n, cap) = (*n, *cap);
+            let mut data = Vec::with_capacity(n * 2);
+            for i in 0..n {
+                data.push(i as f32);
+                data.push((i % 5) as f32);
+            }
+            let m = Matrix::from_vec(n, 2, data).unwrap();
+            let b = RustRowBackend::new(&m, KernelKind::Linear);
+            let mut cache = KernelCache::new(&b, cap * n * 4);
+            if cache.capacity_rows() != cap {
+                return false;
+            }
+            // reference LRU: front = oldest
+            let mut reference: Vec<usize> = Vec::new();
+            let mut want_row = vec![0.0f32; n];
+            for &i in trace {
+                if let Some(pos) = reference.iter().position(|&x| x == i) {
+                    reference.remove(pos);
+                } else if reference.len() >= cap {
+                    reference.remove(0);
+                }
+                reference.push(i);
+                let got = cache.row(i).to_vec();
+                b.fill_row(i, &mut want_row);
+                if got != want_row {
+                    return false;
+                }
+                if cache.lru_keys() != reference {
+                    eprintln!(
+                        "n={n} cap={cap}: cache {:?} vs reference {:?}",
+                        cache.lru_keys(),
+                        reference
+                    );
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn warm_started_smo_reaches_the_cold_start_fixed_point() {
+    // Fixed synthetic set per case; warm-start from the cold solution,
+    // from a truncated solution, and from noise — all must land on the
+    // same (α, ρ) within tolerance and satisfy the constraints.
+    check(
+        Config {
+            cases: 10,
+            seed: 0x2B,
+            max_shrinks: 0,
+        },
+        |rng| {
+            (
+                rng.next_u64(),
+                30 + rng.index(60),
+                30 + rng.index(90),
+                0.05 + rng.f64() * 0.8,
+                0.5 + rng.f64() * 4.0,
+            )
+        },
+        |_| vec![],
+        |&(seed, n_pos, n_neg, gamma, c)| {
+            let mut rng = Pcg64::seed_from(seed);
+            let ds = mlsvm::data::synth::two_gaussians(n_neg, n_pos, 4, 2.0, &mut rng);
+            let params = smo::SvmParams {
+                c_pos: c,
+                c_neg: c,
+                kernel: KernelKind::Rbf { gamma },
+                ..Default::default()
+            };
+            let backend = RustRowBackend::new(&ds.points, params.kernel);
+            let cold = smo::solve(&backend, &ds.labels, &params, None).unwrap();
+            let mut seeds: Vec<Vec<f64>> = vec![cold.alpha.clone()];
+            // truncated: keep the larger half of the αs
+            let mut trunc = cold.alpha.clone();
+            for a in trunc.iter_mut() {
+                if *a < c * 0.5 {
+                    *a = 0.0;
+                }
+            }
+            seeds.push(trunc);
+            // noise
+            seeds.push((0..ds.len()).map(|_| rng.f64() * 2.0 * c - c).collect());
+            for a0 in &seeds {
+                let warm =
+                    smo::solve_warm(&backend, &ds.labels, &params, None, Some(a0.as_slice()))
+                        .unwrap();
+                if warm.gap > params.eps + 1e-9 {
+                    return false;
+                }
+                if (warm.rho - cold.rho).abs() > 5e-2 * cold.rho.abs().max(1.0) {
+                    eprintln!("rho {} vs {}", warm.rho, cold.rho);
+                    return false;
+                }
+                let diff: f64 = warm
+                    .alpha
+                    .iter()
+                    .zip(&cold.alpha)
+                    .map(|(a, b)| (a - b).abs())
+                    .sum::<f64>()
+                    / ds.len() as f64;
+                if diff > 1e-2 * c {
+                    eprintln!("mean |Δα| = {diff}");
+                    return false;
+                }
+                let sum: f64 = warm
+                    .alpha
+                    .iter()
+                    .zip(&ds.labels)
+                    .map(|(&a, &y)| a * y as f64)
+                    .sum();
+                if sum.abs() > 1e-6 * (1.0 + c) {
+                    return false;
+                }
+            }
+            true
         },
     );
 }
