@@ -1,0 +1,246 @@
+//! Closed-loop serving loadgen: trains a small model, publishes it to a
+//! registry, starts the engine + HTTP server on an ephemeral localhost
+//! port, and drives concurrent clients against it — measuring p50/p95/p99
+//! latency, throughput, and batch utilization as the batch size sweeps.
+//!
+//! ```bash
+//! cargo bench --bench serve            # writes BENCH_serve.json
+//! cargo bench --bench serve -- --clients 16 --requests 300
+//! ```
+//!
+//! Each client is closed-loop: connect → POST /predict → read → repeat,
+//! one outstanding request at a time, so offered load scales with the
+//! client count and the engine's deadline flush bounds tail latency.
+
+use mlsvm::data::synth::two_gaussians;
+use mlsvm::serve::{
+    http_request, Engine, EngineConfig, ModelArtifact, Registry, ServeState, Server,
+};
+use mlsvm::svm::kernel::KernelKind;
+use mlsvm::svm::smo::{train, SvmParams};
+use mlsvm::util::rng::Pcg64;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+struct LoadResult {
+    max_batch: usize,
+    clients: usize,
+    requests: usize,
+    seconds: f64,
+    rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    utilization: f64,
+    batches: u64,
+    deadline_flushes: u64,
+}
+
+fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx] * 1e3
+}
+
+/// Run one closed-loop load test against a fresh engine + server.
+fn run_load(
+    artifact: &ModelArtifact,
+    queries: &[Vec<f32>],
+    max_batch: usize,
+    clients: usize,
+    requests_per_client: usize,
+) -> LoadResult {
+    let engine = Engine::new(
+        artifact,
+        EngineConfig {
+            max_batch,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            queue_cap: 4096,
+        },
+    )
+    .expect("engine");
+    let state = Arc::new(ServeState {
+        engine,
+        registry: None,
+        model_name: Mutex::new("bench".into()),
+    });
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).expect("server");
+    let addr = server.addr();
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut lats = Vec::with_capacity(requests_per_client);
+                    for r in 0..requests_per_client {
+                        let q = &queries[(c * 131 + r * 17) % queries.len()];
+                        let body: Vec<String> = q.iter().map(|v| v.to_string()).collect();
+                        let body = body.join(",");
+                        let t = Instant::now();
+                        let (code, resp) =
+                            http_request(&addr, "POST", "/predict", &body).expect("request");
+                        assert_eq!(code, 200, "{resp}");
+                        lats.push(t.elapsed().as_secs_f64());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    let seconds = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let st = state.engine.stats();
+    let total = clients * requests_per_client;
+    LoadResult {
+        max_batch,
+        clients,
+        requests: total,
+        seconds,
+        rps: total as f64 / seconds.max(1e-9),
+        p50_ms: percentile_ms(&latencies, 0.50),
+        p95_ms: percentile_ms(&latencies, 0.95),
+        p99_ms: percentile_ms(&latencies, 0.99),
+        utilization: st.utilization,
+        batches: st.batches,
+        deadline_flushes: st.deadline_flushes,
+    }
+}
+
+fn json_entry(r: &LoadResult) -> String {
+    format!(
+        "    {{\"max_batch\": {}, \"clients\": {}, \"requests\": {}, \"seconds\": {:.3}, \
+         \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \
+         \"utilization\": {:.4}, \"batches\": {}, \"deadline_flushes\": {}}}",
+        r.max_batch,
+        r.clients,
+        r.requests,
+        r.seconds,
+        r.rps,
+        r.p50_ms,
+        r.p95_ms,
+        r.p99_ms,
+        r.utilization,
+        r.batches,
+        r.deadline_flushes
+    )
+}
+
+fn main() {
+    // Light CLI: --clients N, --requests N (per client, headline config).
+    let argv: Vec<String> = std::env::args().collect();
+    let mut clients = 16usize;
+    let mut requests = 200usize;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--clients" if i + 1 < argv.len() => clients = argv[i + 1].parse().unwrap_or(16),
+            "--requests" if i + 1 < argv.len() => requests = argv[i + 1].parse().unwrap_or(200),
+            _ => {}
+        }
+        i += 1;
+    }
+    let clients = clients.max(4);
+
+    println!("== serve loadgen (closed-loop clients over localhost HTTP) ==\n");
+
+    // Train a small binary model and publish it through the registry
+    // (exercising the save → load → serve path end to end).
+    let mut rng = Pcg64::seed_from(11);
+    let ds = two_gaussians(600, 400, 16, 3.0, &mut rng);
+    let model = train(
+        &ds.points,
+        &ds.labels,
+        &SvmParams {
+            kernel: KernelKind::Rbf { gamma: 0.1 },
+            ..Default::default()
+        },
+    )
+    .expect("train");
+    let dir = std::env::temp_dir().join("mlsvm_bench_serve_registry");
+    let reg = Registry::open(&dir).expect("registry");
+    reg.save("bench", &ModelArtifact::Svm(model)).expect("save");
+    let artifact = reg.load("bench").expect("load");
+    println!("model: {} (registry {})\n", artifact.describe(), dir.display());
+
+    let queries: Vec<Vec<f32>> = (0..ds.points.rows())
+        .map(|i| ds.points.row(i).to_vec())
+        .collect();
+
+    // Sweep batch size under the headline client count, plus a trickle
+    // config that shows the deadline flush path.
+    let mut results = Vec::new();
+    println!(
+        "{:<10} {:>8} {:>9} {:>9} {:>9} {:>9} {:>11} {:>9}",
+        "max_batch", "clients", "rps", "p50 ms", "p95 ms", "p99 ms", "utilization", "batches"
+    );
+    for max_batch in [1usize, 4, 8, 16] {
+        let r = run_load(&artifact, &queries, max_batch, clients, requests);
+        println!(
+            "{:<10} {:>8} {:>9.0} {:>9.3} {:>9.3} {:>9.3} {:>11.3} {:>9}",
+            r.max_batch, r.clients, r.rps, r.p50_ms, r.p95_ms, r.p99_ms, r.utilization, r.batches
+        );
+        results.push(r);
+    }
+    let trickle = run_load(&artifact, &queries, 32, 1, requests.min(50));
+    println!(
+        "{:<10} {:>8} {:>9.0} {:>9.3} {:>9.3} {:>9.3} {:>11.3} {:>9}  (trickle: deadline path)",
+        trickle.max_batch,
+        trickle.clients,
+        trickle.rps,
+        trickle.p50_ms,
+        trickle.p95_ms,
+        trickle.p99_ms,
+        trickle.utilization,
+        trickle.batches
+    );
+
+    // Headline = best-throughput swept config (the acceptance gate:
+    // >= 4 concurrent clients and batch utilization > 0.5 under load).
+    let headline = results
+        .iter()
+        .max_by(|a, b| a.rps.partial_cmp(&b.rps).unwrap())
+        .expect("headline");
+    println!(
+        "\nheadline: batch={} clients={} {:.0} req/s p99={:.3}ms utilization={:.2}",
+        headline.max_batch, headline.clients, headline.rps, headline.p99_ms, headline.utilization
+    );
+    if headline.utilization <= 0.5 {
+        eprintln!(
+            "WARNING: headline utilization {:.3} <= 0.5 — raise --clients or shrink batch",
+            headline.utilization
+        );
+    }
+
+    let entries: Vec<String> = results
+        .iter()
+        .chain(std::iter::once(&trickle))
+        .map(json_entry)
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"threads\": {},\n  \"clients\": {clients},\n  \
+         \"requests_per_client\": {requests},\n  \"configs\": [\n{}\n  ],\n  \"headline\": \
+         {{\"max_batch\": {}, \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
+         \"p99_ms\": {:.3}, \"utilization\": {:.4}}}\n}}\n",
+        mlsvm::util::pool::num_threads(),
+        entries.join(",\n"),
+        headline.max_batch,
+        headline.rps,
+        headline.p50_ms,
+        headline.p95_ms,
+        headline.p99_ms,
+        headline.utilization
+    );
+    if let Err(e) = std::fs::write("BENCH_serve.json", &json) {
+        eprintln!("could not write BENCH_serve.json: {e}");
+    } else {
+        println!("wrote BENCH_serve.json");
+    }
+}

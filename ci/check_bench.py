@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Bench-trajectory threshold check.
+
+Compares the freshly produced BENCH_kernel.json against the cached
+baseline and fails (exit 1) when kernel-row throughput regressed by more
+than the threshold. A missing or unreadable baseline passes with a note
+(first run, cache eviction).
+
+The baseline is a decaying high-water mark: with --write-baseline the
+script writes the current JSON with each throughput key replaced by
+max(current, baseline * (1 - DECAY)). The max keeps a sequence of small
+regressions (each under the threshold) from silently ratcheting the
+reference down, while the per-run decay lets a baseline poisoned by one
+unusually fast shared runner heal itself over a handful of runs instead
+of pinning CI red forever. The baseline is written on failing runs too —
+that is what makes the healing possible; a genuine regression still stays
+red for many runs (0.95^n must fall 30%), which is ample signal.
+
+Usage:
+  check_bench.py <baseline.json> <current.json>
+                 [--threshold 0.30] [--write-baseline <out.json>]
+"""
+
+import json
+import sys
+
+KEYS = ["batch_rows_per_s", "tiled_rows_per_s", "scalar_rows_per_s"]
+DECAY = 0.05
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    baseline_path, current_path = sys.argv[1], sys.argv[2]
+    threshold = 0.30
+    if "--threshold" in sys.argv:
+        threshold = float(sys.argv[sys.argv.index("--threshold") + 1])
+    write_path = None
+    if "--write-baseline" in sys.argv:
+        write_path = sys.argv[sys.argv.index("--write-baseline") + 1]
+
+    with open(current_path) as f:
+        current = json.load(f)
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"no usable baseline at {baseline_path} ({e}); passing")
+        baseline = {}
+
+    failed = False
+    merged = dict(current)
+    for key in KEYS:
+        old, new = baseline.get(key), current.get(key)
+        if old and new:
+            merged[key] = max(new, old * (1.0 - DECAY))
+        if not old or not new:
+            print(f"{key}: missing in baseline or current; skipping")
+            continue
+        ratio = new / old
+        verdict = "OK"
+        # Only the batch path (the serving/SMO hot path) is gating; the
+        # scalar/tiled single-thread numbers are informational.
+        if key == "batch_rows_per_s" and ratio < 1.0 - threshold:
+            verdict = f"REGRESSION (>{threshold:.0%} drop vs high-water mark)"
+            failed = True
+        print(f"{key}: {old:.0f} -> {new:.0f} rows/s ({ratio:.2f}x) {verdict}")
+
+    if write_path:
+        with open(write_path, "w") as f:
+            json.dump(merged, f, indent=2)
+        print(f"wrote decayed high-water baseline to {write_path}")
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -86,8 +86,8 @@ fn main() -> Result<()> {
             test.len(),
             serve_secs,
             test.len() as f64 / serve_secs.max(1e-9),
-            router.stats.batches,
-            100.0 * router.stats.utilization()
+            router.stats().batches,
+            100.0 * router.stats().utilization()
         );
         mlsvm::metrics::Metrics::from_labels(&test.labels, &preds)
     } else {

@@ -66,8 +66,8 @@ fn main() -> Result<()> {
             "PJRT router: {} predictions in {:.3}s ({} batches, {:.0}% slot utilization), acc={:.3}",
             test.len(),
             t.secs(),
-            router.stats.batches,
-            100.0 * router.stats.utilization(),
+            router.stats().batches,
+            100.0 * router.stats().utilization(),
             correct as f64 / test.len() as f64
         );
     } else {

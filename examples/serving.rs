@@ -1,0 +1,103 @@
+//! Serving walkthrough: train → save to the registry → serve over HTTP →
+//! query → hot-reload — the full path from the paper's training framework
+//! to an online decision service.
+//!
+//! ```bash
+//! cargo run --release --example serving
+//! ```
+
+use mlsvm::prelude::*;
+use mlsvm::serve::{http_request, ServeState, Server};
+use mlsvm::util::timer::Timer;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn main() -> Result<()> {
+    let mut rng = Pcg64::seed_from(21);
+
+    // 1. Train a small multilevel WSVM.
+    let ds = mlsvm::data::synth::two_gaussians(1_500, 350, 8, 3.5, &mut rng);
+    let (mut train, mut test) = mlsvm::data::split::train_test_split(&ds, 0.25, &mut rng);
+    mlsvm::data::scale::Scaler::fit_transform(&mut train, Some(&mut test));
+    let t = Timer::start();
+    let params = MlsvmParams {
+        hierarchy: mlsvm::amg::hierarchy::HierarchyParams {
+            coarsest_size: 100,
+            ..Default::default()
+        },
+        qdt: 500,
+        ..Default::default()
+    }
+    .with_seed(21);
+    let model = MlsvmTrainer::new(params).train(&train, &mut rng)?;
+    let m = mlsvm::metrics::evaluate(&model.model, &test);
+    println!(
+        "trained in {:.2}s through {} levels | test {}",
+        t.secs(),
+        model.level_stats.len(),
+        m.report()
+    );
+
+    // 2. Publish the FULL multilevel model (params + level metadata, not
+    //    just the finest line file) into a named registry.
+    let dir = std::env::temp_dir().join("mlsvm_example_registry");
+    let reg = Registry::open(&dir)?;
+    let artifact = ModelArtifact::Mlsvm(model);
+    reg.save("rings-v1", &artifact)?;
+    println!(
+        "registry {}: {:?}",
+        dir.display(),
+        reg.list()?
+    );
+
+    // 3. Load it back and start the serving stack: batching engine +
+    //    HTTP front end on an ephemeral port.
+    let served = reg.load("rings-v1")?;
+    println!("serving: {}", served.describe());
+    let engine = Engine::new(
+        &served,
+        EngineConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    )?;
+    let state = Arc::new(ServeState {
+        engine,
+        registry: Some(Registry::open(&dir)?),
+        model_name: Mutex::new("rings-v1".into()),
+    });
+    let mut server = Server::start("127.0.0.1:0", Arc::clone(&state))?;
+    let addr = server.addr();
+    println!("listening on http://{addr}");
+
+    // 4. Query it like any HTTP client would.
+    let body: Vec<String> = test.points.row(0).iter().map(|v| v.to_string()).collect();
+    let (code, resp) = http_request(&addr, "POST", "/predict", &body.join(","))?;
+    println!("POST /predict -> {code}: {resp}");
+
+    let mut batch = String::new();
+    for i in 0..5 {
+        let row: Vec<String> = test.points.row(i).iter().map(|v| v.to_string()).collect();
+        batch.push_str(&row.join(","));
+        batch.push('\n');
+    }
+    let (code, resp) = http_request(&addr, "POST", "/predict-batch", &batch)?;
+    println!("POST /predict-batch (5 rows) -> {code}: {} bytes", resp.len());
+
+    let (_, resp) = http_request(&addr, "GET", "/models", "")?;
+    println!("GET /models -> {resp}");
+
+    // 5. Hot-reload: publish a second version and swap it in while the
+    //    server keeps answering.
+    reg.save("rings-v2", &served)?;
+    let (code, resp) = http_request(&addr, "POST", "/reload?model=rings-v2", "")?;
+    println!("POST /reload -> {code}: {resp}");
+
+    let (_, resp) = http_request(&addr, "GET", "/stats", "")?;
+    println!("GET /stats -> {resp}");
+
+    server.shutdown();
+    println!("done");
+    Ok(())
+}

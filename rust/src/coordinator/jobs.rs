@@ -14,7 +14,7 @@ use crate::util::rng::Pcg64;
 use crate::util::timer::Timer;
 
 /// One finished class job.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct ClassJob {
     /// The class id this model detects.
     pub class_id: u8,
@@ -29,7 +29,12 @@ pub struct ClassJob {
 }
 
 /// A trained one-vs-rest ensemble.
-#[derive(Debug)]
+///
+/// Persistable through [`crate::serve::registry`] (per-class sections,
+/// failed jobs included) and servable through
+/// [`crate::serve::engine::Engine`], which evaluates the per-class argmax
+/// with batched kernel evaluation.
+#[derive(Clone, Debug)]
 pub struct MulticlassModel {
     /// Per-class jobs, in class-id order.
     pub jobs: Vec<ClassJob>,

@@ -7,7 +7,10 @@
 //!   timing and argmax-of-decision prediction;
 //! * [`router`] — a request router that accumulates prediction requests
 //!   and flushes them in artifact-sized batches (size- or deadline-
-//!   triggered), in the spirit of serving-system dynamic batchers;
+//!   triggered), in the spirit of serving-system dynamic batchers. It is
+//!   a thin single-threaded wrapper over the serving layer's
+//!   [`crate::serve::engine::BatchQueue`]; the threaded engine and HTTP
+//!   front end live in [`crate::serve`];
 //! * [`report`] — column-aligned table rendering for the Table-1/2/3
 //!   harnesses.
 

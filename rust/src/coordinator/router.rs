@@ -7,40 +7,24 @@
 //! deadline expiring. Batching amortizes PJRT dispatch overhead and keeps
 //! the MXU-shaped kernel busy; the deadline bounds tail latency.
 //!
-//! Single-threaded by design (single-device testbed): `submit` enqueues,
-//! `poll`/`flush` drive execution, `take` collects results.
+//! Single-threaded by design (the PJRT runtime needs `&mut Runtime`, so
+//! execution stays on the caller's thread): `submit` enqueues,
+//! `poll`/`flush` drive execution, `take` collects results. The queue,
+//! flush policy and stats all live in [`BatchQueue`] — the single-threaded
+//! core of the serving layer; the thread-safe generalization (worker
+//! threads, backpressure, HTTP front end) is
+//! [`crate::serve::engine::Engine`].
 
-use crate::data::matrix::Matrix;
 use crate::error::Result;
 use crate::runtime::client::Runtime;
 use crate::runtime::rbf::PjrtDecision;
+use crate::serve::engine::{BatchQueue, FlushReason};
 use crate::svm::model::SvmModel;
-use std::collections::HashMap;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// Router counters (perf instrumentation).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct RouterStats {
-    /// Requests submitted.
-    pub requests: u64,
-    /// Batches executed.
-    pub batches: u64,
-    /// Batches triggered by the deadline (vs size).
-    pub deadline_flushes: u64,
-    /// Total padded slots executed (utilization = requests / slots).
-    pub slots: u64,
-}
-
-impl RouterStats {
-    /// Fraction of executed batch slots that carried real requests.
-    pub fn utilization(&self) -> f64 {
-        if self.slots == 0 {
-            0.0
-        } else {
-            self.requests as f64 / self.slots as f64
-        }
-    }
-}
+/// Router counters (perf instrumentation) — the shared serving-layer
+/// batching counters.
+pub use crate::serve::stats::BatchStats as RouterStats;
 
 /// Execution backend for a flush.
 enum Backend {
@@ -50,17 +34,11 @@ enum Backend {
     Rust(SvmModel),
 }
 
-/// A dynamic-batching decision-function router.
+/// A dynamic-batching decision-function router: a [`BatchQueue`] plus an
+/// execution backend driven from the caller's event loop.
 pub struct Router {
     backend: Backend,
-    max_batch: usize,
-    max_wait: Duration,
-    pending: Vec<(u64, Vec<f32>)>,
-    oldest: Option<Instant>,
-    results: HashMap<u64, f64>,
-    next_id: u64,
-    /// Counters.
-    pub stats: RouterStats,
+    queue: BatchQueue,
 }
 
 impl Router {
@@ -70,13 +48,7 @@ impl Router {
         let max_batch = dec.batch_size();
         Ok(Router {
             backend: Backend::Pjrt(dec),
-            max_batch,
-            max_wait,
-            pending: Vec::new(),
-            oldest: None,
-            results: HashMap::new(),
-            next_id: 0,
-            stats: RouterStats::default(),
+            queue: BatchQueue::new(max_batch, max_wait),
         })
     }
 
@@ -84,55 +56,43 @@ impl Router {
     pub fn new_rust(model: SvmModel, max_batch: usize, max_wait: Duration) -> Router {
         Router {
             backend: Backend::Rust(model),
-            max_batch: max_batch.max(1),
-            max_wait,
-            pending: Vec::new(),
-            oldest: None,
-            results: HashMap::new(),
-            next_id: 0,
-            stats: RouterStats::default(),
+            queue: BatchQueue::new(max_batch, max_wait),
         }
     }
 
     /// Enqueue a prediction request; returns its ticket.
     pub fn submit(&mut self, x: &[f32]) -> u64 {
-        let id = self.next_id;
-        self.next_id += 1;
-        if self.pending.is_empty() {
-            self.oldest = Some(Instant::now());
-        }
-        self.pending.push((id, x.to_vec()));
-        self.stats.requests += 1;
-        id
+        self.queue.submit(x)
     }
 
     /// Number of queued requests.
     pub fn queued(&self) -> usize {
-        self.pending.len()
+        self.queue.queued()
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> &RouterStats {
+        self.queue.stats()
     }
 
     /// Execute pending batches that are due (full batch, or deadline hit).
     /// Call this from the event loop; returns the number of batches run.
     pub fn poll(&mut self, rt: &mut Runtime) -> Result<usize> {
         let mut ran = 0usize;
-        while self.pending.len() >= self.max_batch {
+        while self.queue.due() == Some(FlushReason::Size) {
             self.run_batch(rt, false)?;
             ran += 1;
         }
-        if !self.pending.is_empty() {
-            if let Some(t0) = self.oldest {
-                if t0.elapsed() >= self.max_wait {
-                    self.run_batch(rt, true)?;
-                    ran += 1;
-                }
-            }
+        if self.queue.due() == Some(FlushReason::Deadline) {
+            self.run_batch(rt, true)?;
+            ran += 1;
         }
         Ok(ran)
     }
 
     /// Force-execute everything queued.
     pub fn flush(&mut self, rt: &mut Runtime) -> Result<()> {
-        while !self.pending.is_empty() {
+        while self.queue.queued() > 0 {
             self.run_batch(rt, false)?;
         }
         Ok(())
@@ -140,7 +100,7 @@ impl Router {
 
     /// Collect a finished result.
     pub fn take(&mut self, id: u64) -> Option<f64> {
-        self.results.remove(&id)
+        self.queue.take(id)
     }
 
     /// Force-execute everything queued on the rust fallback backend
@@ -151,7 +111,7 @@ impl Router {
                 "flush_local on a PJRT router; use flush(rt)".into(),
             ));
         }
-        while !self.pending.is_empty() {
+        while self.queue.queued() > 0 {
             self.run_batch_inner(None, false)?;
         }
         Ok(())
@@ -162,18 +122,9 @@ impl Router {
     }
 
     fn run_batch_inner(&mut self, rt: Option<&mut Runtime>, deadline: bool) -> Result<()> {
-        let take = self.pending.len().min(self.max_batch);
-        let batch: Vec<(u64, Vec<f32>)> = self.pending.drain(..take).collect();
-        self.oldest = if self.pending.is_empty() {
-            None
-        } else {
-            Some(Instant::now())
+        let Some((ids, m)) = self.queue.next_batch(deadline) else {
+            return Ok(());
         };
-        let dim = batch[0].1.len();
-        let mut m = Matrix::zeros(batch.len(), dim);
-        for (r, (_, x)) in batch.iter().enumerate() {
-            m.row_mut(r).copy_from_slice(x);
-        }
         let vals = match (&self.backend, rt) {
             (Backend::Pjrt(dec), Some(rt)) => dec.decision_batch(rt, &m)?,
             (Backend::Pjrt(_), None) => {
@@ -183,14 +134,7 @@ impl Router {
             }
             (Backend::Rust(model), _) => model.decision_batch(&m),
         };
-        for ((id, _), v) in batch.iter().zip(vals) {
-            self.results.insert(*id, v);
-        }
-        self.stats.batches += 1;
-        self.stats.slots += self.max_batch as u64;
-        if deadline {
-            self.stats.deadline_flushes += 1;
-        }
+        self.queue.complete(&ids, vals);
         Ok(())
     }
 }
@@ -244,8 +188,8 @@ mod tests {
             let want = model.decision(ds.points.row(i));
             assert!((got - want).abs() < 1e-3 * want.abs().max(1.0));
         }
-        assert!(router.stats.batches >= 1);
-        assert_eq!(router.stats.requests, ds.len() as u64);
+        assert!(router.stats().batches >= 1);
+        assert_eq!(router.stats().requests, ds.len() as u64);
     }
 
     #[test]
@@ -257,8 +201,8 @@ mod tests {
         // deadline 0 → poll must flush immediately despite batch of 1
         router.poll(&mut rt).unwrap();
         assert!(router.take(t).is_some());
-        assert_eq!(router.stats.deadline_flushes, 1);
-        assert!(router.stats.utilization() < 0.05);
+        assert_eq!(router.stats().deadline_flushes, 1);
+        assert!(router.stats().utilization() < 0.05);
     }
 
     #[test]
@@ -272,7 +216,7 @@ mod tests {
             let want = model.decision(ds.points.row(i));
             assert!((got - want).abs() < 1e-9);
         }
-        assert_eq!(router.stats.batches, 3); // 40 requests / 16 per batch
+        assert_eq!(router.stats().batches, 3); // 40 requests / 16 per batch
     }
 
     #[test]

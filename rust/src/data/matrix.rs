@@ -191,25 +191,41 @@ impl Matrix {
     }
 }
 
-/// Dot product with f32 accumulation, 4-way unrolled.
+/// Dot product with f32 accumulation in 8 independent lanes — the shape
+/// LLVM's autovectorizer lifts to packed SIMD (one AVX/NEON FMA lane per
+/// accumulator) without intrinsics. The fixed-size sub-slices hoist the
+/// bounds checks out of the inner loop. Association order differs from
+/// [`dot_scalar`], so results may differ by f32 rounding (bounded by the
+/// usual n·ε·Σ|aᵢbᵢ|); everything downstream of kernel evaluation
+/// (`fill_rows_batch`, the serve engine's scorers) inherits this path.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
+    const LANES: usize = 8;
     let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
     for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
+        let av: &[f32; LANES] = a[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        let bv: &[f32; LANES] = b[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        for l in 0..LANES {
+            acc[l] += av[l] * bv[l];
+        }
     }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
+    // Pairwise reduction keeps the lane sums balanced.
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for i in chunks * LANES..n {
         s += a[i] * b[i];
     }
     s
+}
+
+/// Order-literal scalar dot product: the reference the SIMD-friendly
+/// [`dot`] is tested against.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
 /// Squared Euclidean distance between two feature vectors (f64 accumulation).
@@ -280,6 +296,36 @@ mod tests {
         let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32).collect();
         let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
         assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dot_lanes_track_scalar_within_rounding() {
+        // The 8-lane accumulation is NOT bit-identical to the scalar
+        // order (f32 addition is not associative); it must stay within
+        // the rounding bound n·ε·Σ|aᵢbᵢ| across lengths that cover every
+        // remainder class of the lane width.
+        let mut state = 0x853c_49e6_748f_ea9bu64;
+        let mut next = move || {
+            // splitmix-style scramble, keeps the test self-contained
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 64, 65, 1000] {
+            let a: Vec<f32> = (0..n).map(|_| next() * 4.0).collect();
+            let b: Vec<f32> = (0..n).map(|_| next() * 4.0).collect();
+            let fast = dot(&a, &b);
+            let slow = dot_scalar(&a, &b);
+            let mag: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            let bound = (n.max(1) as f32) * f32::EPSILON * mag.max(1.0);
+            assert!(
+                (fast - slow).abs() <= bound,
+                "n={n}: {fast} vs {slow} (bound {bound})"
+            );
+        }
+        // Exactly representable values ARE bit-identical in any order.
+        let a = vec![1.0f32; 24];
+        let b = vec![2.0f32; 24];
+        assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits());
     }
 
     #[test]

@@ -29,6 +29,10 @@ pub enum Error {
     /// The PJRT runtime failed (artifact missing, compile or execute error).
     Runtime(String),
 
+    /// The serving layer failed (engine shut down, bind error, protocol
+    /// violation).
+    Serve(String),
+
     /// CLI usage error.
     Usage(String),
 }
@@ -42,6 +46,7 @@ impl fmt::Display for Error {
             Error::Solver(msg) => write!(f, "solver failure: {msg}"),
             Error::Degenerate(msg) => write!(f, "degenerate training set: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Serve(msg) => write!(f, "serve error: {msg}"),
             Error::Usage(msg) => write!(f, "usage: {msg}"),
         }
     }
@@ -88,6 +93,7 @@ mod tests {
             "parse error at line 3: bad value"
         );
         assert_eq!(Error::Runtime("no".into()).to_string(), "runtime error: no");
+        assert_eq!(Error::Serve("s".into()).to_string(), "serve error: s");
         assert_eq!(Error::Usage("u".into()).to_string(), "usage: u");
     }
 

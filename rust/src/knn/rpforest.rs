@@ -10,10 +10,24 @@
 //! that graph approximation does not measurably change classifier quality
 //! (we verify ≥0.9 recall on Gaussian data in tests; the AMG coarsening is
 //! robust to the remainder).
+//!
+//! Both phases run over [`crate::util::pool`]: trees grow independently
+//! from per-tree seeded RNGs (the forest itself is schedule-independent),
+//! and candidate generation distributes leaves (then refinement points)
+//! across the workers, updating per-point best-lists behind fine-grained
+//! mutexes. Graph build dominates coarsening wall-clock on large sets,
+//! and both phases are embarrassingly parallel up to those list updates.
+//! Caveat: when several candidates are exactly equidistant (e.g.
+//! duplicate points), which of them survives a full best-list depends on
+//! worker arrival order, so `knn_all` is deterministic only up to
+//! distance ties — the same approximation the paper already accepts from
+//! FLANN, and the AMG coarsening is robust to it.
 
 use crate::data::matrix::Matrix;
 use crate::knn::{KBest, Neighbor, NeighborLists};
+use crate::util::pool;
 use crate::util::rng::{Pcg64, Rng};
+use std::sync::Mutex;
 
 /// Forest parameters.
 #[derive(Clone, Copy, Debug)]
@@ -60,15 +74,18 @@ fn project(dir: &[f32], row: &[f32]) -> f32 {
 }
 
 impl<'a> RpForest<'a> {
-    /// Build `params.n_trees` random projection trees.
+    /// Build `params.n_trees` random projection trees, in parallel over
+    /// the [`crate::util::pool`] workers. Each tree draws from its own
+    /// deterministically-seeded RNG, so the forest does not depend on how
+    /// trees were scheduled.
     pub fn build(points: &'a Matrix, params: RpForestParams, seed: u64) -> RpForest<'a> {
-        let mut rng = Pcg64::seed_from(seed ^ 0x9e37_79b9_7f4a_7c15);
-        let trees = (0..params.n_trees)
-            .map(|_| {
-                let mut idx: Vec<u32> = (0..points.rows() as u32).collect();
-                Self::build_node(points, &mut idx, params.leaf_size, &mut rng, 0)
-            })
-            .collect();
+        let base = seed ^ 0x9e37_79b9_7f4a_7c15;
+        let trees = pool::parallel_gen(params.n_trees, |t| {
+            let mut rng =
+                Pcg64::seed_from(base.wrapping_add((t as u64).wrapping_mul(0x2545_f491_4f6c_dd1d)));
+            let mut idx: Vec<u32> = (0..points.rows() as u32).collect();
+            Self::build_node(points, &mut idx, params.leaf_size, &mut rng, 0)
+        });
         RpForest {
             points,
             trees,
@@ -145,38 +162,51 @@ impl<'a> RpForest<'a> {
         }
     }
 
-    /// Approximate k-NN lists for all points.
+    /// Approximate k-NN lists for all points. Candidate generation is
+    /// parallel: leaves (phase 1) and points (phase 2) are distributed
+    /// over the pool workers, and the two sides of each candidate pair
+    /// are offered under their own per-point locks (never held together,
+    /// so no lock-order deadlock is possible). Racing offers of the same
+    /// pair are harmless: the final sort+dedup pass removes duplicates.
     pub fn knn_all(&self, k: usize) -> NeighborLists {
         let n = self.points.rows();
-        let mut best: Vec<KBest> = (0..n).map(|_| KBest::new(k)).collect();
+        let best: Vec<Mutex<KBest>> = (0..n).map(|_| Mutex::new(KBest::new(k))).collect();
+        let offer = |target: usize, d: f64, idx: u32| {
+            let mut kb = best[target].lock().unwrap();
+            if d < kb.worst() && !kb.contains(idx) {
+                kb.push(d, idx);
+            }
+        };
 
-        // Phase 1: all pairs within each leaf of each tree.
+        // Phase 1: all pairs within each leaf of each tree, parallel over
+        // the leaves of the whole forest.
+        let mut leaves: Vec<&[u32]> = Vec::new();
         for tree in &self.trees {
-            let mut leaves = Vec::new();
             Self::leaves(tree, &mut leaves);
-            for leaf in leaves {
-                for (a_pos, &a) in leaf.iter().enumerate() {
-                    let ra = self.points.row(a as usize);
-                    for &b in leaf.iter().skip(a_pos + 1) {
-                        let d = crate::data::matrix::sqdist(ra, self.points.row(b as usize));
-                        if d < best[a as usize].worst() && !best[a as usize].contains(b) {
-                            best[a as usize].push(d, b);
-                        }
-                        if d < best[b as usize].worst() && !best[b as usize].contains(a) {
-                            best[b as usize].push(d, a);
-                        }
-                    }
+        }
+        pool::parallel_for(leaves.len(), 4, |li| {
+            let leaf = leaves[li];
+            for (a_pos, &a) in leaf.iter().enumerate() {
+                let ra = self.points.row(a as usize);
+                for &b in leaf.iter().skip(a_pos + 1) {
+                    let d = crate::data::matrix::sqdist(ra, self.points.row(b as usize));
+                    offer(a as usize, d, b);
+                    offer(b as usize, d, a);
                 }
             }
-        }
+        });
 
-        // Phase 2: neighbor-of-neighbor refinement (NN-descent lite).
+        // Phase 2: neighbor-of-neighbor refinement (NN-descent lite),
+        // parallel over points against a frozen snapshot of the lists.
         for _ in 0..self.params.refine_iters {
             let snapshot: Vec<Vec<u32>> = best
                 .iter()
-                .map(|kb| kb.clone().into_sorted().iter().map(|n| n.index).collect())
+                .map(|kb| {
+                    let kb = kb.lock().unwrap().clone();
+                    kb.into_sorted().iter().map(|n| n.index).collect()
+                })
                 .collect();
-            for i in 0..n {
+            pool::parallel_for(n, 8, |i| {
                 let ri = self.points.row(i);
                 for &j in &snapshot[i] {
                     for &l in &snapshot[j as usize] {
@@ -184,21 +214,18 @@ impl<'a> RpForest<'a> {
                             continue;
                         }
                         let d = crate::data::matrix::sqdist(ri, self.points.row(l as usize));
-                        if d < best[i].worst() && !best[i].contains(l) {
-                            best[i].push(d, l);
-                        }
-                        if d < best[l as usize].worst() && !best[l as usize].contains(i as u32) {
-                            best[l as usize].push(d, i as u32);
-                        }
+                        offer(i, d, l);
+                        offer(l as usize, d, i as u32);
                     }
                 }
-            }
+            });
         }
 
         best.into_iter()
             .map(|kb| {
-                // Deduplicate (a pair can surface in several trees).
-                let mut v = kb.into_sorted();
+                // Deduplicate (a pair can surface in several trees, or be
+                // offered twice by racing workers).
+                let mut v = kb.into_inner().unwrap().into_sorted();
                 v.dedup_by_key(|n| n.index);
                 v.truncate(k);
                 v

@@ -8,9 +8,11 @@
 //!   coarsening of k-NN affinity graphs ([`amg`]), coarsest-level learning
 //!   with uniform-design model selection ([`modelsel`]), support-vector
 //!   guided uncoarsening with parameter inheritance ([`mlsvm`]), an SMO
-//!   (W)SVM solver ([`svm`]), FLANN-like approximate k-NN ([`knn`]), and a
+//!   (W)SVM solver ([`svm`]), FLANN-like approximate k-NN ([`knn`]), a
 //!   coordinator for one-vs-rest multiclass training and batched
-//!   prediction ([`coordinator`]).
+//!   prediction ([`coordinator`]), and a serving layer ([`serve`]) with a
+//!   model registry, a concurrent dynamic-batching decision engine, and
+//!   an HTTP/1.1-over-TCP front end (`mlsvm serve`).
 //! * **Layer 2 (JAX, build time)** — dense RBF kernel-matrix tiles and the
 //!   SVM decision function, AOT-lowered to HLO text in `artifacts/`.
 //! * **Layer 1 (Pallas, build time)** — the tiled Gaussian-kernel compute
@@ -45,6 +47,7 @@ pub mod metrics;
 pub mod mlsvm;
 pub mod modelsel;
 pub mod runtime;
+pub mod serve;
 pub mod svm;
 pub mod util;
 
@@ -58,6 +61,7 @@ pub mod prelude {
     pub use crate::metrics::Metrics;
     pub use crate::mlsvm::params::MlsvmParams;
     pub use crate::mlsvm::trainer::{MlsvmModel, MlsvmTrainer};
+    pub use crate::serve::{Engine, EngineConfig, ModelArtifact, Registry};
     pub use crate::svm::kernel::{Kernel, RbfKernel};
     pub use crate::svm::model::SvmModel;
     pub use crate::svm::smo::SvmParams;

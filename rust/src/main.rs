@@ -3,8 +3,11 @@
 //!
 //! Subcommands:
 //!
-//! * `train`      — train MLWSVM on a LibSVM/CSV file, save the model;
+//! * `train`      — train MLWSVM on a LibSVM/CSV file, save the model
+//!                  (optionally into a serving registry);
 //! * `predict`    — load a model, predict a file, report metrics;
+//! * `serve`      — load a registry model and answer HTTP predictions
+//!                  through the concurrent batching engine;
 //! * `bench`      — regenerate a paper table (`table1|table2|table3`)
 //!                  (thin wrapper; `cargo bench --bench tableN` runs the
 //!                  same harness);
@@ -54,6 +57,7 @@ fn run(cmd: &str, argv: Vec<String>) -> Result<()> {
     match cmd {
         "train" => cmd_train(argv),
         "predict" => cmd_predict(argv),
+        "serve" => cmd_serve(argv),
         "gen" => cmd_gen(argv),
         "info" => cmd_info(argv),
         "bench" => {
@@ -64,7 +68,7 @@ fn run(cmd: &str, argv: Vec<String>) -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "mlsvm — algebraic multigrid support vector machines\n\n\
-                 usage: mlsvm <train|predict|gen|info> [options]\n\
+                 usage: mlsvm <train|predict|serve|gen|info> [options]\n\
                  try:   mlsvm train --help"
             );
             Ok(())
@@ -77,6 +81,8 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let args = Args::new("mlsvm train", "train a multilevel WSVM")
         .opt("data", "training file (.libsvm/.svm or .csv)", None)
         .opt("model-out", "where to save the model", Some("model.mlsvm"))
+        .opt("registry", "also save the full model into this registry dir", None)
+        .opt("name", "registry model name", Some("default"))
         .opt("test-frac", "held-out fraction for evaluation", Some("0.2"))
         .opt("caliber", "AMG interpolation order R", Some("2"))
         .opt("coarsest", "per-class coarsest level size", Some("250"))
@@ -126,37 +132,72 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     let out = args.get("model-out").unwrap();
     model.model.save(out)?;
     eprintln!("model saved to {out}");
+    if let Some(reg_dir) = args.get("registry") {
+        let name = args.get("name").unwrap().to_string();
+        let reg = mlsvm::serve::Registry::open(reg_dir)?;
+        let artifact = mlsvm::serve::ModelArtifact::Mlsvm(model);
+        let path = reg.save(&name, &artifact)?;
+        eprintln!("registry: {} -> {}", artifact.describe(), path.display());
+    }
     Ok(())
 }
 
 fn cmd_predict(argv: Vec<String>) -> Result<()> {
     let args = Args::new("mlsvm predict", "predict with a trained model")
-        .opt("model", "model file", Some("model.mlsvm"))
+        .opt("model", "model file (legacy line file or registry format)", Some("model.mlsvm"))
         .opt("data", "file to predict (.svm/.csv; labels used for metrics)", None)
         .flag("pjrt", "serve through the PJRT decision artifact router")
+        .flag("engine", "serve through the concurrent batching engine")
         .parse_from(argv)?;
     let data_path = args
         .get("data")
         .ok_or_else(|| Error::Usage("--data is required".into()))?;
-    let model = SvmModel::load(args.get("model").unwrap())?;
+    let artifact = mlsvm::serve::load_artifact(args.get("model").unwrap())?;
+    let model = match &artifact {
+        mlsvm::serve::ModelArtifact::Svm(m) => m,
+        mlsvm::serve::ModelArtifact::Mlsvm(m) => &m.model,
+        mlsvm::serve::ModelArtifact::Multiclass(_) => {
+            return Err(Error::Usage(
+                "multiclass models are served with `mlsvm serve`, not `predict`".into(),
+            ))
+        }
+    };
     let ds = load_any(data_path)?;
     let t = Timer::start();
     let preds: Vec<i8> = if args.get_flag("pjrt") {
         let mut rt = mlsvm::runtime::Runtime::new(mlsvm::runtime::Runtime::default_dir())?;
         let mut router = mlsvm::coordinator::Router::new_pjrt(
             &rt,
-            &model,
+            model,
             std::time::Duration::from_millis(5),
         )?;
         let ids: Vec<u64> = (0..ds.len()).map(|i| router.submit(ds.points.row(i))).collect();
         router.flush(&mut rt)?;
         eprintln!(
             "router: {} batches, utilization {:.2}",
-            router.stats.batches,
-            router.stats.utilization()
+            router.stats().batches,
+            router.stats().utilization()
         );
         ids.iter()
             .map(|id| if router.take(*id).unwrap() > 0.0 { 1 } else { -1 })
+            .collect()
+    } else if args.get_flag("engine") {
+        let engine =
+            mlsvm::serve::Engine::new(&artifact, mlsvm::serve::EngineConfig::default())?;
+        let decisions = engine.predict_many(&ds.points)?;
+        let st = engine.stats();
+        eprintln!(
+            "engine: {} batches, utilization {:.2}, p99 {:.3}ms",
+            st.batches,
+            st.utilization,
+            st.p99 * 1e3
+        );
+        decisions
+            .into_iter()
+            .map(|d| match d {
+                mlsvm::serve::Decision::Binary { label, .. } => label,
+                mlsvm::serve::Decision::Multiclass { .. } => -1,
+            })
             .collect()
     } else {
         model.predict_batch(&ds.points)
@@ -170,6 +211,63 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
         ds.len() as f64 / secs.max(1e-9),
         m.report()
     );
+    Ok(())
+}
+
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let args = Args::new("mlsvm serve", "serve a registry model over HTTP")
+        .opt("registry", "registry directory", Some("models"))
+        .opt("model", "model name to serve", Some("default"))
+        .opt("addr", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7878"))
+        .opt("batch", "flush a batch at this size", Some("32"))
+        .opt("wait-ms", "deadline flush after this wait (ms)", Some("2"))
+        .opt("workers", "engine worker threads (0 = auto)", Some("0"))
+        .opt("queue-cap", "bounded queue capacity (backpressure)", Some("1024"))
+        .opt("max-seconds", "exit after this long (0 = run forever)", Some("0"))
+        .parse_from(argv)?;
+    let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
+    let name = args.get("model").unwrap().to_string();
+    let artifact = reg.load(&name).map_err(|e| {
+        Error::Usage(format!(
+            "cannot load model '{name}': {e}\n(available: {:?})",
+            reg.list().unwrap_or_default()
+        ))
+    })?;
+    let workers = args.get_usize("workers")?;
+    let cfg = mlsvm::serve::EngineConfig {
+        max_batch: args.get_usize("batch")?,
+        max_wait: std::time::Duration::from_millis(args.get_u64("wait-ms")?),
+        workers: if workers == 0 {
+            mlsvm::serve::EngineConfig::default().workers
+        } else {
+            workers
+        },
+        queue_cap: args.get_usize("queue-cap")?,
+    };
+    let desc = artifact.describe();
+    let engine = mlsvm::serve::Engine::new(&artifact, cfg)?;
+    let state = std::sync::Arc::new(mlsvm::serve::ServeState {
+        engine,
+        registry: Some(reg),
+        model_name: std::sync::Mutex::new(name.clone()),
+    });
+    let mut server =
+        mlsvm::serve::Server::start(args.get("addr").unwrap(), std::sync::Arc::clone(&state))?;
+    println!(
+        "serving '{name}' ({desc}) listening on http://{}",
+        server.addr()
+    );
+    use std::io::Write as _;
+    std::io::stdout().flush()?; // spawners poll stdout for the address
+    let max_secs = args.get_u64("max-seconds")?;
+    if max_secs == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(max_secs));
+    server.shutdown();
+    println!("stats: {}", state.engine.stats().to_json());
     Ok(())
 }
 

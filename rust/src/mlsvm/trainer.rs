@@ -51,7 +51,11 @@ pub struct LevelStat {
 }
 
 /// Trained multilevel model.
-#[derive(Debug)]
+///
+/// Persistable through [`crate::serve::registry`] (the full model — finest
+/// [`SvmModel`], final [`SvmParams`] and per-level metadata — round-trips,
+/// not just the finest line file).
+#[derive(Clone, Debug)]
 pub struct MlsvmModel {
     /// The finest-level model (use for prediction).
     pub model: SvmModel,

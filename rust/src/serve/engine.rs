@@ -1,0 +1,1007 @@
+//! The concurrent dynamic-batching decision engine.
+//!
+//! This generalizes the single-threaded [`crate::coordinator::Router`]
+//! into a serving-grade component (the vLLM-style continuous batcher,
+//! scaled to SVM decision functions):
+//!
+//! * [`FlushPolicy`] — when a queue is worth flushing: the batch filled to
+//!   `max_batch` (size trigger) or the oldest request has waited
+//!   `max_wait` (deadline trigger, bounds tail latency);
+//! * [`BatchQueue`] — the single-threaded batching core (pending queue,
+//!   deadline clock, ticket → result bookkeeping, [`BatchStats`]). The
+//!   `Router` is a thin wrapper over this plus an execution backend;
+//! * [`Engine`] — the threaded generalization: a `Mutex`+`Condvar`
+//!   bounded request queue (backpressure: `submit` blocks while the queue
+//!   is at capacity), worker threads that flush due batches through a
+//!   tiled batched kernel evaluation (the `fill_rows_batch` style: norms
+//!   identity + hoisted transcendental pass), per-class argmax for
+//!   one-vs-rest ensembles, and hot model reload behind an `RwLock`.
+//!
+//! Every request is answered through a one-shot [`std::sync::mpsc`]
+//! channel, so callers can block (`Ticket::wait`), poll with a timeout,
+//! or fan out thousands of tickets and collect later.
+
+use crate::coordinator::jobs::MulticlassModel;
+use crate::data::matrix::{dot, Matrix};
+use crate::error::{Error, Result};
+use crate::serve::registry::ModelArtifact;
+use crate::serve::stats::{BatchStats, EngineStats, StatsSnapshot};
+use crate::svm::kernel::{KernelKind, KERNEL_TILE};
+use crate::svm::model::SvmModel;
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Flush policy (shared by BatchQueue and the threaded Engine)
+// ---------------------------------------------------------------------------
+
+/// Why a batch is due.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The queue reached `max_batch`.
+    Size,
+    /// The oldest pending request waited `max_wait`.
+    Deadline,
+}
+
+/// Size/deadline flush triggers.
+#[derive(Clone, Copy, Debug)]
+pub struct FlushPolicy {
+    /// Flush when this many requests are pending.
+    pub max_batch: usize,
+    /// Flush a partial batch once the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl FlushPolicy {
+    /// New policy (`max_batch` is clamped to ≥ 1).
+    pub fn new(max_batch: usize, max_wait: Duration) -> FlushPolicy {
+        FlushPolicy {
+            max_batch: max_batch.max(1),
+            max_wait,
+        }
+    }
+
+    /// Whether a queue of `queued` requests whose oldest entry arrived at
+    /// `oldest` should flush now, and why.
+    pub fn due(&self, queued: usize, oldest: Option<Instant>) -> Option<FlushReason> {
+        if queued == 0 {
+            return None;
+        }
+        if queued >= self.max_batch {
+            return Some(FlushReason::Size);
+        }
+        match oldest {
+            Some(t0) if t0.elapsed() >= self.max_wait => Some(FlushReason::Deadline),
+            _ => None,
+        }
+    }
+
+    /// Time until the deadline trigger fires (None when nothing pends).
+    pub fn time_left(&self, oldest: Option<Instant>) -> Option<Duration> {
+        oldest.map(|t0| self.max_wait.saturating_sub(t0.elapsed()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BatchQueue: the single-threaded batching core
+// ---------------------------------------------------------------------------
+
+/// Single-threaded batching core: accumulates submitted feature vectors,
+/// tracks the deadline clock, assembles due batches into a [`Matrix`],
+/// and maps tickets to completed decision values.
+///
+/// [`crate::coordinator::Router`] drives this from its event loop; the
+/// threaded [`Engine`] implements the same policy with its own
+/// channel-based bookkeeping.
+pub struct BatchQueue {
+    policy: FlushPolicy,
+    pending: Vec<(u64, Vec<f32>)>,
+    oldest: Option<Instant>,
+    results: HashMap<u64, f64>,
+    next_id: u64,
+    stats: BatchStats,
+}
+
+impl BatchQueue {
+    /// Empty queue under the given flush policy.
+    pub fn new(max_batch: usize, max_wait: Duration) -> BatchQueue {
+        BatchQueue {
+            policy: FlushPolicy::new(max_batch, max_wait),
+            pending: Vec::new(),
+            oldest: None,
+            results: HashMap::new(),
+            next_id: 0,
+            stats: BatchStats::default(),
+        }
+    }
+
+    /// Enqueue a request; returns its ticket.
+    pub fn submit(&mut self, x: &[f32]) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push((id, x.to_vec()));
+        self.stats.requests += 1;
+        id
+    }
+
+    /// Number of queued requests.
+    pub fn queued(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The flush policy in force.
+    pub fn policy(&self) -> FlushPolicy {
+        self.policy
+    }
+
+    /// Whether (and why) a flush is due now.
+    pub fn due(&self) -> Option<FlushReason> {
+        self.policy.due(self.pending.len(), self.oldest)
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> &BatchStats {
+        &self.stats
+    }
+
+    /// Pop up to `max_batch` requests as `(tickets, query matrix)`,
+    /// recording the batch in the stats (`deadline` marks why it ran).
+    /// Returns `None` when nothing is pending.
+    pub fn next_batch(&mut self, deadline: bool) -> Option<(Vec<u64>, Matrix)> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let take = self.pending.len().min(self.policy.max_batch);
+        let batch: Vec<(u64, Vec<f32>)> = self.pending.drain(..take).collect();
+        self.oldest = if self.pending.is_empty() {
+            None
+        } else {
+            Some(Instant::now())
+        };
+        let dim = batch[0].1.len();
+        let mut m = Matrix::zeros(batch.len(), dim);
+        let mut ids = Vec::with_capacity(batch.len());
+        for (r, (id, x)) in batch.iter().enumerate() {
+            m.row_mut(r).copy_from_slice(x);
+            ids.push(*id);
+        }
+        self.stats.batches += 1;
+        self.stats.slots += self.policy.max_batch as u64;
+        if deadline {
+            self.stats.deadline_flushes += 1;
+        }
+        Some((ids, m))
+    }
+
+    /// Record the decision values of a completed batch.
+    pub fn complete(&mut self, ids: &[u64], vals: Vec<f64>) {
+        for (id, v) in ids.iter().zip(vals) {
+            self.results.insert(*id, v);
+        }
+    }
+
+    /// Collect a finished result.
+    pub fn take(&mut self, id: u64) -> Option<f64> {
+        self.results.remove(&id)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decision scorers (batched kernel evaluation against the SV set)
+// ---------------------------------------------------------------------------
+
+/// One answered prediction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Decision {
+    /// Binary model: decision value and its sign label.
+    Binary {
+        /// f(x) = Σ coef·K(sv, x) − ρ.
+        value: f64,
+        /// sign(f(x)) with ties → −1.
+        label: i8,
+    },
+    /// One-vs-rest ensemble: winning class (argmax of decisions) and the
+    /// per-class decision values.
+    Multiclass {
+        /// Winning class id (None when no class model is available).
+        class: Option<u8>,
+        /// (class id, decision value) per available class model.
+        scores: Vec<(u8, f64)>,
+    },
+}
+
+/// Decision-function evaluator over one binary [`SvmModel`], with
+/// precomputed support-vector norms so each query costs one pass of dot
+/// products plus a hoisted transcendental tile — the same structure as
+/// [`crate::svm::kernel::RustRowBackend::fill_rows_batch`], applied to
+/// query-vs-SV rows instead of train-vs-train rows.
+pub struct BinaryScorer {
+    model: SvmModel,
+    sv_norms: Vec<f64>,
+}
+
+impl BinaryScorer {
+    /// Wrap a model (precomputes ‖sv‖²).
+    pub fn new(model: SvmModel) -> BinaryScorer {
+        let sv_norms = model.sv.row_sqnorms();
+        BinaryScorer { model, sv_norms }
+    }
+
+    /// Feature dimensionality the model expects.
+    pub fn dim(&self) -> usize {
+        self.model.sv.cols()
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &SvmModel {
+        &self.model
+    }
+
+    /// Decision value for one query (tiled batched-kernel path; agrees
+    /// with [`SvmModel::decision`] up to f32-dot rounding).
+    pub fn decide(&self, x: &[f32]) -> f64 {
+        let m = &self.model;
+        let nsv = m.n_sv();
+        let mut s = -m.rho;
+        match m.kernel {
+            KernelKind::Rbf { gamma } => {
+                let nq: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+                let mut d2 = [0.0f64; KERNEL_TILE];
+                let mut t0 = 0usize;
+                while t0 < nsv {
+                    let t1 = (t0 + KERNEL_TILE).min(nsv);
+                    // pass 1: squared distances via the norm identity
+                    for j in t0..t1 {
+                        d2[j - t0] =
+                            (nq + self.sv_norms[j] - 2.0 * dot(m.sv.row(j), x) as f64).max(0.0);
+                    }
+                    // pass 2: hoisted exp + accumulate
+                    for j in t0..t1 {
+                        s += m.sv_coef[j] * (-gamma * d2[j - t0]).exp();
+                    }
+                    t0 = t1;
+                }
+            }
+            KernelKind::Linear => {
+                for j in 0..nsv {
+                    s += m.sv_coef[j] * dot(m.sv.row(j), x) as f64;
+                }
+            }
+            KernelKind::Poly {
+                gamma,
+                coef0,
+                degree,
+            } => {
+                for j in 0..nsv {
+                    s += m.sv_coef[j]
+                        * (gamma * dot(m.sv.row(j), x) as f64 + coef0).powi(degree as i32);
+                }
+            }
+        }
+        s
+    }
+}
+
+enum ScorerKind {
+    Binary(BinaryScorer),
+    /// (class id, scorer) per class that has a trained model.
+    Multi(Vec<(u8, BinaryScorer)>),
+}
+
+/// Prepared evaluator for any [`ModelArtifact`] kind.
+pub struct ArtifactScorer {
+    kind: ScorerKind,
+    dim: usize,
+}
+
+impl ArtifactScorer {
+    /// Prepare an artifact for serving (clones the finest models out of
+    /// it; multilevel metadata stays behind).
+    pub fn new(artifact: &ModelArtifact) -> Result<ArtifactScorer> {
+        let kind = match artifact {
+            ModelArtifact::Svm(m) => ScorerKind::Binary(BinaryScorer::new(m.clone())),
+            ModelArtifact::Mlsvm(m) => ScorerKind::Binary(BinaryScorer::new(m.model.clone())),
+            ModelArtifact::Multiclass(mc) => {
+                let scorers = multiclass_scorers(mc);
+                if scorers.is_empty() {
+                    return Err(Error::Serve(
+                        "multiclass artifact has no trained class models".into(),
+                    ));
+                }
+                ScorerKind::Multi(scorers)
+            }
+        };
+        let dim = match &kind {
+            ScorerKind::Binary(b) => b.dim(),
+            ScorerKind::Multi(list) => {
+                let d = list[0].1.dim();
+                if list.iter().any(|(_, s)| s.dim() != d) {
+                    return Err(Error::Serve(
+                        "multiclass artifact mixes feature dimensionalities".into(),
+                    ));
+                }
+                d
+            }
+        };
+        Ok(ArtifactScorer { kind, dim })
+    }
+
+    /// Feature dimensionality queries must have.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// "binary" or "multiclass".
+    pub fn kind_name(&self) -> &'static str {
+        match self.kind {
+            ScorerKind::Binary(_) => "binary",
+            ScorerKind::Multi(_) => "multiclass",
+        }
+    }
+
+    /// Evaluate one query.
+    pub fn decide(&self, x: &[f32]) -> Decision {
+        match &self.kind {
+            ScorerKind::Binary(b) => {
+                let value = b.decide(x);
+                Decision::Binary {
+                    value,
+                    label: if value > 0.0 { 1 } else { -1 },
+                }
+            }
+            ScorerKind::Multi(list) => {
+                let scores: Vec<(u8, f64)> =
+                    list.iter().map(|(c, s)| (*c, s.decide(x))).collect();
+                // Argmax with first-best-wins ties, matching
+                // MulticlassModel::predict.
+                let mut best: Option<(u8, f64)> = None;
+                for &(c, d) in &scores {
+                    if best.map(|(_, bd)| d > bd).unwrap_or(true) {
+                        best = Some((c, d));
+                    }
+                }
+                Decision::Multiclass {
+                    class: best.map(|(c, _)| c),
+                    scores,
+                }
+            }
+        }
+    }
+
+    /// Evaluate every row of a query matrix.
+    pub fn decide_batch(&self, xs: &Matrix) -> Vec<Decision> {
+        (0..xs.rows()).map(|i| self.decide(xs.row(i))).collect()
+    }
+}
+
+fn multiclass_scorers(mc: &MulticlassModel) -> Vec<(u8, BinaryScorer)> {
+    mc.jobs
+        .iter()
+        .filter_map(|j| {
+            j.model
+                .as_ref()
+                .map(|m| (j.class_id, BinaryScorer::new(m.model.clone())))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// The threaded engine
+// ---------------------------------------------------------------------------
+
+/// Engine tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Flush a batch at this size.
+    pub max_batch: usize,
+    /// Flush a partial batch after this wait (tail-latency bound).
+    pub max_wait: Duration,
+    /// Worker threads evaluating batches.
+    pub workers: usize,
+    /// Bounded queue capacity; `submit` blocks (backpressure) at the cap.
+    pub queue_cap: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            workers: crate::util::pool::num_threads().clamp(1, 4),
+            queue_cap: 1024,
+        }
+    }
+}
+
+struct Request {
+    x: Vec<f32>,
+    enqueued: Instant,
+    tx: mpsc::Sender<std::result::Result<Decision, String>>,
+}
+
+struct QueueInner {
+    pending: VecDeque<Request>,
+    /// False once shutdown begins: submits are rejected, workers drain
+    /// what is left and exit.
+    open: bool,
+}
+
+struct Shared {
+    cfg: EngineConfig,
+    q: Mutex<QueueInner>,
+    /// Signaled when work arrives or shutdown begins.
+    work: Condvar,
+    /// Signaled when a batch is drained (queue has space again).
+    space: Condvar,
+    scorer: RwLock<Arc<ArtifactScorer>>,
+    stats: EngineStats,
+}
+
+/// A pending prediction: wait on it to get the [`Decision`].
+pub struct Ticket {
+    rx: mpsc::Receiver<std::result::Result<Decision, String>>,
+}
+
+impl Ticket {
+    /// Block until the decision is ready.
+    pub fn wait(self) -> Result<Decision> {
+        match self.rx.recv() {
+            Ok(Ok(d)) => Ok(d),
+            Ok(Err(msg)) => Err(Error::Serve(msg)),
+            Err(_) => Err(Error::Serve("engine dropped the request".into())),
+        }
+    }
+
+    /// Block up to `timeout` (used by tests to turn a lost wakeup into a
+    /// failure instead of a hang).
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Decision> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(d)) => Ok(d),
+            Ok(Err(msg)) => Err(Error::Serve(msg)),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(Error::Serve("timed out waiting for a decision".into()))
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Serve("engine dropped the request".into()))
+            }
+        }
+    }
+}
+
+/// The concurrent dynamic-batching decision engine.
+pub struct Engine {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Start an engine serving `artifact` under `cfg` (spawns the worker
+    /// threads immediately).
+    pub fn new(artifact: &ModelArtifact, cfg: EngineConfig) -> Result<Engine> {
+        let scorer = ArtifactScorer::new(artifact)?;
+        let cfg = EngineConfig {
+            max_batch: cfg.max_batch.max(1),
+            workers: cfg.workers.max(1),
+            queue_cap: cfg.queue_cap.max(cfg.max_batch.max(1)),
+            ..cfg
+        };
+        let shared = Arc::new(Shared {
+            cfg,
+            q: Mutex::new(QueueInner {
+                pending: VecDeque::new(),
+                open: true,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            scorer: RwLock::new(Arc::new(scorer)),
+            stats: EngineStats::new(),
+        });
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-engine-{w}"))
+                .spawn(move || worker_loop(&sh))
+                .map_err(|e| Error::Serve(format!("spawning engine worker: {e}")))?;
+            workers.push(handle);
+        }
+        Ok(Engine { shared, workers })
+    }
+
+    /// Feature dimensionality the current model expects.
+    pub fn dim(&self) -> usize {
+        self.shared.scorer.read().unwrap().dim()
+    }
+
+    /// "binary" or "multiclass" for the current model.
+    pub fn model_kind(&self) -> &'static str {
+        self.shared.scorer.read().unwrap().kind_name()
+    }
+
+    /// The engine configuration in force.
+    pub fn config(&self) -> EngineConfig {
+        self.shared.cfg
+    }
+
+    /// Enqueue one query. Blocks while the bounded queue is full
+    /// (backpressure); errors if the dimension is wrong or the engine is
+    /// shut down.
+    pub fn submit(&self, x: &[f32]) -> Result<Ticket> {
+        let dim = self.dim();
+        if x.len() != dim {
+            return Err(Error::invalid(format!(
+                "query has {} features, model expects {dim}",
+                x.len()
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            x: x.to_vec(),
+            enqueued: Instant::now(),
+            tx,
+        };
+        let mut q = self.shared.q.lock().unwrap();
+        let mut counted_wait = false;
+        while q.open && q.pending.len() >= self.shared.cfg.queue_cap {
+            // Count submits that experienced backpressure, not condvar
+            // wakeups (notify_all wakes every blocked submitter per
+            // drained batch).
+            if !counted_wait {
+                counted_wait = true;
+                self.shared
+                    .stats
+                    .backpressure_waits
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            q = self.shared.space.wait(q).unwrap();
+        }
+        if !q.open {
+            return Err(Error::Serve("engine is shut down".into()));
+        }
+        q.pending.push_back(req);
+        self.shared
+            .stats
+            .requests
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        drop(q);
+        self.shared.work.notify_one();
+        Ok(Ticket { rx })
+    }
+
+    /// Submit one query and wait for its decision.
+    pub fn predict(&self, x: &[f32]) -> Result<Decision> {
+        self.submit(x)?.wait()
+    }
+
+    /// Submit every row of `xs` and collect the decisions in row order
+    /// (fills batches; this is the high-throughput path).
+    pub fn predict_many(&self, xs: &Matrix) -> Result<Vec<Decision>> {
+        let mut tickets = Vec::with_capacity(xs.rows());
+        for i in 0..xs.rows() {
+            tickets.push(self.submit(xs.row(i))?);
+        }
+        tickets.into_iter().map(|t| t.wait()).collect()
+    }
+
+    /// Swap the served model in place. Batches a worker has already
+    /// popped finish on the scorer they started with; everything still
+    /// queued — and every later submit — is answered by the new model.
+    pub fn reload(&self, artifact: &ModelArtifact) -> Result<()> {
+        let scorer = ArtifactScorer::new(artifact)?;
+        *self.shared.scorer.write().unwrap() = Arc::new(scorer);
+        self.shared
+            .stats
+            .reloads
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Point-in-time counters.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    /// Requests currently queued (not yet evaluated).
+    pub fn queued(&self) -> usize {
+        self.shared.q.lock().unwrap().pending.len()
+    }
+
+    fn begin_shutdown(&self) {
+        let mut q = self.shared.q.lock().unwrap();
+        q.open = false;
+        drop(q);
+        self.shared.work.notify_all();
+        self.shared.space.notify_all();
+    }
+
+    /// Stop accepting requests, drain the queue, and join the workers.
+    pub fn shutdown(mut self) {
+        self.begin_shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.begin_shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Why a worker popped a batch (drives the stats attribution).
+enum TakeKind {
+    /// The queue reached `max_batch`; slots are fully used.
+    Size,
+    /// The deadline fired on a partial batch; padding is real.
+    Deadline,
+    /// Shutdown drain: no deadline fired and nothing was waiting to fill
+    /// the batch, so it neither counts as a deadline flush nor as padded
+    /// slots.
+    Drain,
+}
+
+/// Pop the next due batch, blocking on the condvar until one is due or
+/// shutdown drains the queue. Returns `None` when the engine is closed
+/// and empty.
+fn next_batch(shared: &Shared) -> Option<(Vec<Request>, TakeKind)> {
+    let cfg = &shared.cfg;
+    let policy = FlushPolicy::new(cfg.max_batch, cfg.max_wait);
+    let mut q = shared.q.lock().unwrap();
+    let kind = loop {
+        if q.pending.is_empty() {
+            if !q.open {
+                return None;
+            }
+            // Park until work arrives; bounded so a shutdown missed by a
+            // race still gets observed promptly.
+            let (nq, _) = shared
+                .work
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap();
+            q = nq;
+            continue;
+        }
+        if !q.open {
+            break TakeKind::Drain;
+        }
+        let oldest = q.pending.front().map(|r| r.enqueued);
+        match policy.due(q.pending.len(), oldest) {
+            Some(FlushReason::Size) => break TakeKind::Size,
+            Some(FlushReason::Deadline) => break TakeKind::Deadline,
+            None => {
+                let wait = policy
+                    .time_left(oldest)
+                    .unwrap_or(Duration::from_millis(50))
+                    .max(Duration::from_micros(50));
+                let (nq, _) = shared.work.wait_timeout(q, wait).unwrap();
+                q = nq;
+            }
+        }
+    };
+    let take = q.pending.len().min(cfg.max_batch);
+    let batch: Vec<Request> = q.pending.drain(..take).collect();
+    drop(q);
+    shared.space.notify_all();
+    Some((batch, kind))
+}
+
+fn worker_loop(shared: &Shared) {
+    use std::sync::atomic::Ordering::Relaxed;
+    while let Some((batch, kind)) = next_batch(shared) {
+        let batch_len = batch.len() as u64;
+        let scorer = Arc::clone(&shared.scorer.read().unwrap());
+        let dim = scorer.dim();
+        // A reload between submit and evaluation can change the expected
+        // dimensionality; answer mismatched requests with an error rather
+        // than poisoning the batch.
+        let (ok, bad): (Vec<Request>, Vec<Request>) =
+            batch.into_iter().partition(|r| r.x.len() == dim);
+        for r in bad {
+            let _ = r.tx.send(Err(format!(
+                "query has {} features, model expects {dim} (model reloaded?)",
+                r.x.len()
+            )));
+        }
+        if ok.is_empty() {
+            continue;
+        }
+        let mut m = Matrix::zeros(ok.len(), dim);
+        for (r, req) in ok.iter().enumerate() {
+            m.row_mut(r).copy_from_slice(&req.x);
+        }
+        let decisions = scorer.decide_batch(&m);
+        shared.stats.batches.fetch_add(1, Relaxed);
+        let slots = match kind {
+            TakeKind::Size | TakeKind::Deadline => shared.cfg.max_batch as u64,
+            TakeKind::Drain => batch_len,
+        };
+        shared.stats.slots.fetch_add(slots, Relaxed);
+        if matches!(kind, TakeKind::Deadline) {
+            shared.stats.deadline_flushes.fetch_add(1, Relaxed);
+        }
+        for (req, d) in ok.into_iter().zip(decisions) {
+            shared.stats.latency.record_duration(req.enqueued.elapsed());
+            shared.stats.completed.fetch_add(1, Relaxed);
+            let _ = req.tx.send(Ok(d));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::two_gaussians;
+    use crate::svm::smo::{train, SvmParams};
+    use crate::util::rng::Pcg64;
+
+    fn fixture() -> (SvmModel, crate::data::dataset::Dataset) {
+        let mut rng = Pcg64::seed_from(77);
+        let ds = two_gaussians(120, 80, 6, 3.0, &mut rng);
+        let p = SvmParams {
+            kernel: KernelKind::Rbf { gamma: 0.2 },
+            ..Default::default()
+        };
+        (train(&ds.points, &ds.labels, &p).unwrap(), ds)
+    }
+
+    #[test]
+    fn flush_policy_triggers() {
+        let p = FlushPolicy::new(4, Duration::from_millis(100));
+        assert_eq!(p.due(0, None), None);
+        assert_eq!(p.due(4, Some(Instant::now())), Some(FlushReason::Size));
+        assert_eq!(p.due(1, Some(Instant::now())), None);
+        let past = Instant::now() - Duration::from_millis(200);
+        assert_eq!(p.due(1, Some(past)), Some(FlushReason::Deadline));
+        // max_batch clamps to 1
+        assert_eq!(FlushPolicy::new(0, Duration::ZERO).max_batch, 1);
+    }
+
+    #[test]
+    fn batch_queue_round_trips_tickets() {
+        let (model, ds) = fixture();
+        let scorer = BinaryScorer::new(model);
+        let mut q = BatchQueue::new(16, Duration::from_secs(1));
+        let ids: Vec<u64> = (0..40).map(|i| q.submit(ds.points.row(i))).collect();
+        assert_eq!(q.due(), Some(FlushReason::Size));
+        while let Some((bids, m)) = q.next_batch(false) {
+            let vals: Vec<f64> = (0..m.rows()).map(|r| scorer.decide(m.row(r))).collect();
+            q.complete(&bids, vals);
+        }
+        assert_eq!(q.stats().batches, 3);
+        assert_eq!(q.stats().requests, 40);
+        for (i, id) in ids.iter().enumerate() {
+            let got = q.take(*id).unwrap();
+            assert_eq!(got, scorer.decide(ds.points.row(i)));
+        }
+        assert!(q.take(ids[0]).is_none(), "results are taken once");
+    }
+
+    #[test]
+    fn scorer_matches_model_decision() {
+        let (model, ds) = fixture();
+        let scorer = BinaryScorer::new(model.clone());
+        for i in (0..ds.len()).step_by(11) {
+            let want = model.decision(ds.points.row(i));
+            let got = scorer.decide(ds.points.row(i));
+            assert!(
+                (got - want).abs() <= 1e-6 * want.abs().max(1.0),
+                "row {i}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_answers_and_batches() {
+        let (model, ds) = fixture();
+        let art = ModelArtifact::Svm(model.clone());
+        let engine = Engine::new(
+            &art,
+            EngineConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                workers: 2,
+                queue_cap: 64,
+            },
+        )
+        .unwrap();
+        let decisions = engine.predict_many(&ds.points).unwrap();
+        assert_eq!(decisions.len(), ds.len());
+        let scorer = BinaryScorer::new(model.clone());
+        for (i, d) in decisions.iter().enumerate() {
+            let Decision::Binary { value, label } = d else {
+                panic!("binary model must give binary decisions")
+            };
+            assert_eq!(*value, scorer.decide(ds.points.row(i)), "row {i}");
+            assert_eq!(*label, if *value > 0.0 { 1 } else { -1 });
+        }
+        let st = engine.stats();
+        assert_eq!(st.completed, ds.len() as u64);
+        assert!(st.batches >= (ds.len() / 8) as u64 / 2, "batching happened");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submitters_get_sequential_answers() {
+        let (model, ds) = fixture();
+        let art = ModelArtifact::Svm(model.clone());
+        let engine = Engine::new(
+            &art,
+            EngineConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(200),
+                workers: 3,
+                queue_cap: 32,
+            },
+        )
+        .unwrap();
+        let scorer = BinaryScorer::new(model.clone());
+        let n_threads = 6;
+        let per_thread = 50;
+        std::thread::scope(|s| {
+            let engine = &engine;
+            let scorer = &scorer;
+            let ds = &ds;
+            for t in 0..n_threads {
+                s.spawn(move || {
+                    for r in 0..per_thread {
+                        let i = (t * 31 + r * 7) % ds.len();
+                        let d = engine
+                            .submit(ds.points.row(i))
+                            .unwrap()
+                            .wait_timeout(Duration::from_secs(20))
+                            .unwrap();
+                        let Decision::Binary { value, .. } = d else {
+                            panic!("binary decision expected")
+                        };
+                        // Bit-identical to the sequential scorer: batching
+                        // and thread interleaving must not change values.
+                        assert_eq!(value, scorer.decide(ds.points.row(i)), "row {i}");
+                        // And within f32-dot rounding of the pointwise model.
+                        let want = model.decision(ds.points.row(i));
+                        assert!((value - want).abs() <= 1e-6 * want.abs().max(1.0));
+                    }
+                });
+            }
+        });
+        let st = engine.stats();
+        assert_eq!(st.completed, (n_threads * per_thread) as u64);
+    }
+
+    #[test]
+    fn deadline_trickle_never_stalls() {
+        let (model, ds) = fixture();
+        let art = ModelArtifact::Svm(model);
+        let engine = Engine::new(
+            &art,
+            EngineConfig {
+                max_batch: 64, // never filled by a trickle
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                queue_cap: 64,
+            },
+        )
+        .unwrap();
+        for i in 0..25 {
+            let t = engine.submit(ds.points.row(i)).unwrap();
+            t.wait_timeout(Duration::from_secs(10))
+                .expect("trickle request must flush by deadline");
+        }
+        let st = engine.stats();
+        assert_eq!(st.completed, 25);
+        assert!(st.deadline_flushes > 0, "deadline must have triggered");
+        assert!(st.utilization < 0.5, "trickle batches are padded");
+    }
+
+    #[test]
+    fn backpressure_blocks_but_completes() {
+        let (model, ds) = fixture();
+        let art = ModelArtifact::Svm(model);
+        let engine = Engine::new(
+            &art,
+            EngineConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                workers: 1,
+                queue_cap: 4, // tiny: submitters must wait
+            },
+        )
+        .unwrap();
+        let n_threads = 4;
+        let per_thread = 30;
+        std::thread::scope(|s| {
+            let engine = &engine;
+            let ds = &ds;
+            for t in 0..n_threads {
+                s.spawn(move || {
+                    for r in 0..per_thread {
+                        let i = (t + r * 13) % ds.len();
+                        engine
+                            .submit(ds.points.row(i))
+                            .unwrap()
+                            .wait_timeout(Duration::from_secs(20))
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        let st = engine.stats();
+        assert_eq!(st.completed, (n_threads * per_thread) as u64);
+    }
+
+    #[test]
+    fn shutdown_drains_outstanding_tickets() {
+        let (model, ds) = fixture();
+        let art = ModelArtifact::Svm(model);
+        let engine = Engine::new(
+            &art,
+            EngineConfig {
+                max_batch: 128,
+                max_wait: Duration::from_secs(3600), // only shutdown flushes
+                workers: 1,
+                queue_cap: 128,
+            },
+        )
+        .unwrap();
+        let tickets: Vec<Ticket> = (0..10)
+            .map(|i| engine.submit(ds.points.row(i)).unwrap())
+            .collect();
+        engine.shutdown();
+        for t in tickets {
+            t.wait_timeout(Duration::from_secs(10))
+                .expect("shutdown must drain queued requests");
+        }
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let (model, ds) = fixture();
+        let art = ModelArtifact::Svm(model);
+        let engine = Engine::new(&art, EngineConfig::default()).unwrap();
+        engine.begin_shutdown();
+        assert!(engine.submit(ds.points.row(0)).is_err());
+    }
+
+    #[test]
+    fn dimension_mismatch_is_rejected_at_submit() {
+        let (model, _) = fixture();
+        let art = ModelArtifact::Svm(model);
+        let engine = Engine::new(&art, EngineConfig::default()).unwrap();
+        assert!(engine.submit(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn reload_swaps_decisions() {
+        let (model, ds) = fixture();
+        // A second model trained with a different gamma gives different
+        // decision values.
+        let p2 = SvmParams {
+            kernel: KernelKind::Rbf { gamma: 2.0 },
+            ..Default::default()
+        };
+        let model2 = train(&ds.points, &ds.labels, &p2).unwrap();
+        let engine = Engine::new(&ModelArtifact::Svm(model.clone()), EngineConfig::default())
+            .unwrap();
+        let before = engine.predict(ds.points.row(0)).unwrap();
+        engine.reload(&ModelArtifact::Svm(model2.clone())).unwrap();
+        let after = engine.predict(ds.points.row(0)).unwrap();
+        let (Decision::Binary { value: b, .. }, Decision::Binary { value: a, .. }) =
+            (&before, &after)
+        else {
+            panic!("binary decisions expected")
+        };
+        let s2 = BinaryScorer::new(model2);
+        assert_eq!(*a, s2.decide(ds.points.row(0)));
+        assert_ne!(*a, *b, "reload must change the served model");
+        assert_eq!(engine.stats().reloads, 1);
+    }
+}

@@ -1,0 +1,33 @@
+//! The serving layer: model registry, concurrent batching engine, HTTP
+//! front end, and serving statistics.
+//!
+//! This is the path from a trained model to the ROADMAP's "heavy traffic"
+//! north star. The pieces compose bottom-up:
+//!
+//! * [`registry`] — versioned multi-section persistence for
+//!   [`crate::svm::model::SvmModel`], [`crate::mlsvm::trainer::MlsvmModel`]
+//!   and [`crate::coordinator::jobs::MulticlassModel`], plus a named-model
+//!   registry directory (save / load / list, legacy files included);
+//! * [`engine`] — a thread-safe dynamic-batching decision engine
+//!   (Mutex+Condvar bounded queue, size- and deadline-triggered flushes,
+//!   worker threads, tiled batched kernel evaluation, per-class argmax,
+//!   hot reload). Its single-threaded core, [`engine::BatchQueue`], is
+//!   what [`crate::coordinator::Router`] wraps;
+//! * [`server`] — a hand-rolled HTTP/1.1-over-TCP front end exposing
+//!   predict / predict-batch / models / reload / stats endpoints;
+//! * [`stats`] — batching counters and log-spaced latency histograms,
+//!   snapshotted as JSON for `/stats` and `BENCH_serve.json`.
+//!
+//! End to end: `mlsvm train --registry models --name m` → `mlsvm serve
+//! --registry models --model m` → HTTP predictions; `cargo bench --bench
+//! serve` drives the closed-loop loadgen against it.
+
+pub mod engine;
+pub mod registry;
+pub mod server;
+pub mod stats;
+
+pub use engine::{BatchQueue, Decision, Engine, EngineConfig, FlushPolicy, FlushReason, Ticket};
+pub use registry::{load_artifact, save_artifact, ModelArtifact, Registry};
+pub use server::{http_request, ServeState, Server};
+pub use stats::{BatchStats, EngineStats, LatencyHistogram, StatsSnapshot};

@@ -1,0 +1,679 @@
+//! Model persistence and the named-model registry.
+//!
+//! The seed repo could only persist a single finest-level [`SvmModel`]
+//! as a LibSVM-style line file. Serving the multilevel framework needs
+//! more: the AML-SVM line of work keeps per-level / per-class ensembles
+//! around at prediction time, so this module extends the line protocol
+//! into a versioned multi-section format that round-trips
+//!
+//! * a bare [`SvmModel`] (`kind = svm`),
+//! * a full [`MlsvmModel`] — finest model + final [`SvmParams`] + the
+//!   per-level metadata (`kind = mlsvm`),
+//! * a one-vs-rest [`MulticlassModel`] with per-class sections, including
+//!   failed class jobs (`kind = multiclass`).
+//!
+//! The header line is `mlsvm-model v1 <kind>`; files without it are
+//! parsed as legacy single-`SvmModel` line files, so every model saved by
+//! earlier versions of this repo still loads. All numbers are written
+//! with Rust's shortest-round-trip float formatting, so decisions are
+//! preserved **bit for bit** across save → load.
+//!
+//! [`Registry`] is a directory of named `<name>.model` files with
+//! save / load / list operations — the unit the serving engine hot-reloads
+//! from.
+
+use crate::coordinator::jobs::{ClassJob, MulticlassModel};
+use crate::error::{Error, Result};
+use crate::mlsvm::trainer::{LevelStat, MlsvmModel};
+use crate::svm::model::SvmModel;
+use crate::svm::smo::{SvmParams, TrainStats};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// Magic token opening every versioned model file.
+pub const MAGIC: &str = "mlsvm-model";
+/// Current format version.
+pub const VERSION: u32 = 1;
+/// Registry file extension.
+pub const EXTENSION: &str = "model";
+
+/// Any persistable trained model.
+#[derive(Clone, Debug)]
+pub enum ModelArtifact {
+    /// A bare binary SVM (also what legacy files load as).
+    Svm(SvmModel),
+    /// A full multilevel model with params and level metadata.
+    Mlsvm(MlsvmModel),
+    /// A one-vs-rest ensemble.
+    Multiclass(MulticlassModel),
+}
+
+impl ModelArtifact {
+    /// Format kind token.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ModelArtifact::Svm(_) => "svm",
+            ModelArtifact::Mlsvm(_) => "mlsvm",
+            ModelArtifact::Multiclass(_) => "multiclass",
+        }
+    }
+
+    /// One-line human description (server banner, `mlsvm serve` log).
+    pub fn describe(&self) -> String {
+        match self {
+            ModelArtifact::Svm(m) => {
+                format!("svm: {} SVs, dim {}", m.n_sv(), m.sv.cols())
+            }
+            ModelArtifact::Mlsvm(m) => format!(
+                "mlsvm: {} SVs, dim {}, {} levels",
+                m.model.n_sv(),
+                m.model.sv.cols(),
+                m.level_stats.len()
+            ),
+            ModelArtifact::Multiclass(mc) => {
+                let ok = mc.jobs.iter().filter(|j| j.model.is_some()).count();
+                format!("multiclass: {}/{} trained class models", ok, mc.jobs.len())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writers
+// ---------------------------------------------------------------------------
+
+fn write_mlsvm_body<W: Write>(w: &mut W, m: &MlsvmModel) -> Result<()> {
+    let p = &m.params;
+    writeln!(
+        w,
+        "params c_pos {} c_neg {} eps {} max_iter {} cache_bytes {} shrinking {}",
+        p.c_pos,
+        p.c_neg,
+        p.eps,
+        p.max_iter,
+        p.cache_bytes,
+        p.shrinking as u8
+    )?;
+    writeln!(w, "depths {} {}", m.depths.0, m.depths.1)?;
+    writeln!(w, "levels {}", m.level_stats.len())?;
+    for s in &m.level_stats {
+        let cv = s
+            .cv_gmean
+            .map(|g| g.to_string())
+            .unwrap_or_else(|| "-".to_string());
+        writeln!(
+            w,
+            "level {} {} train {} sv {} ud {} secs {} cv {cv} iters {} gap {} hits {} misses {} warm {}",
+            s.levels.0,
+            s.levels.1,
+            s.train_size,
+            s.n_sv,
+            s.ud_used as u8,
+            s.seconds,
+            s.solver.iterations,
+            s.solver.gap,
+            s.solver.cache_hits,
+            s.solver.cache_misses,
+            s.solver.warm_started as u8
+        )?;
+    }
+    writeln!(w, "model")?;
+    m.model.write_text(w)
+}
+
+fn write_multiclass_body<W: Write>(w: &mut W, mc: &MulticlassModel) -> Result<()> {
+    writeln!(w, "classes {}", mc.jobs.len())?;
+    for job in &mc.jobs {
+        match (&job.model, &job.error) {
+            (Some(m), _) => {
+                writeln!(
+                    w,
+                    "class {} secs {} pos {} neg {} status ok",
+                    job.class_id, job.seconds, job.sizes.0, job.sizes.1
+                )?;
+                write_mlsvm_body(w, m)?;
+            }
+            (None, err) => {
+                // Newlines would corrupt the line protocol, and an empty
+                // message would leave the line unparseable (the reader
+                // expects a token after `err`).
+                let msg = err
+                    .as_deref()
+                    .unwrap_or("unknown failure")
+                    .replace(['\n', '\r'], " ");
+                let msg = msg.trim();
+                let msg = if msg.is_empty() { "unknown failure" } else { msg };
+                writeln!(
+                    w,
+                    "class {} secs {} pos {} neg {} status err {msg}",
+                    job.class_id, job.seconds, job.sizes.0, job.sizes.1
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Write `artifact` to `path` in the versioned format.
+pub fn save_artifact(path: impl AsRef<Path>, artifact: &ModelArtifact) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{MAGIC} v{VERSION} {}", artifact.kind())?;
+    match artifact {
+        ModelArtifact::Svm(m) => m.write_text(&mut w)?,
+        ModelArtifact::Mlsvm(m) => write_mlsvm_body(&mut w, m)?,
+        ModelArtifact::Multiclass(mc) => write_multiclass_body(&mut w, mc)?,
+    }
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Readers
+// ---------------------------------------------------------------------------
+
+fn next<'b>(lines: &mut impl Iterator<Item = &'b str>, what: &str) -> Result<&'b str> {
+    lines
+        .next()
+        .ok_or_else(|| Error::invalid(format!("model file truncated at {what}")))
+}
+
+fn num<T: std::str::FromStr>(tok: &str, what: &str) -> Result<T> {
+    tok.parse()
+        .map_err(|_| Error::invalid(format!("bad {what} '{tok}'")))
+}
+
+fn flag(tok: &str, what: &str) -> Result<bool> {
+    match tok {
+        "0" => Ok(false),
+        "1" => Ok(true),
+        _ => Err(Error::invalid(format!("bad {what} '{tok}'"))),
+    }
+}
+
+fn read_mlsvm_body<'b>(lines: &mut impl Iterator<Item = &'b str>) -> Result<MlsvmModel> {
+    let pline = next(lines, "params")?;
+    let pt: Vec<&str> = pline.split_whitespace().collect();
+    let mut params = match pt.as_slice() {
+        ["params", "c_pos", cp, "c_neg", cn, "eps", e, "max_iter", mi, "cache_bytes", cb, "shrinking", sh] => {
+            SvmParams {
+                c_pos: num(cp, "c_pos")?,
+                c_neg: num(cn, "c_neg")?,
+                eps: num(e, "eps")?,
+                max_iter: num(mi, "max_iter")?,
+                cache_bytes: num(cb, "cache_bytes")?,
+                shrinking: flag(sh, "shrinking")?,
+                ..Default::default()
+            }
+        }
+        _ => return Err(Error::invalid(format!("bad params line '{pline}'"))),
+    };
+    let dline = next(lines, "depths")?;
+    let dt: Vec<&str> = dline.split_whitespace().collect();
+    let depths = match dt.as_slice() {
+        ["depths", dp, dn] => (num(dp, "depth")?, num(dn, "depth")?),
+        _ => return Err(Error::invalid(format!("bad depths line '{dline}'"))),
+    };
+    let lline = next(lines, "levels")?;
+    let nlevels: usize = match lline.split_whitespace().collect::<Vec<_>>().as_slice() {
+        ["levels", n] => num(n, "level count")?,
+        _ => return Err(Error::invalid(format!("bad levels line '{lline}'"))),
+    };
+    let mut level_stats = Vec::with_capacity(nlevels);
+    for k in 0..nlevels {
+        let line = next(lines, "level")?;
+        let t: Vec<&str> = line.split_whitespace().collect();
+        let stat = match t.as_slice() {
+            ["level", lp, ln, "train", n, "sv", sv, "ud", ud, "secs", secs, "cv", cv, "iters", it, "gap", gap, "hits", h, "misses", mi, "warm", wa] => {
+                LevelStat {
+                    levels: (num(lp, "level")?, num(ln, "level")?),
+                    train_size: num(n, "train size")?,
+                    n_sv: num(sv, "sv count")?,
+                    ud_used: flag(ud, "ud flag")?,
+                    seconds: num(secs, "seconds")?,
+                    cv_gmean: if *cv == "-" {
+                        None
+                    } else {
+                        Some(num(cv, "cv gmean")?)
+                    },
+                    solver: TrainStats {
+                        iterations: num(it, "iterations")?,
+                        gap: num(gap, "gap")?,
+                        cache_hits: num(h, "cache hits")?,
+                        cache_misses: num(mi, "cache misses")?,
+                        warm_started: flag(wa, "warm flag")?,
+                    },
+                }
+            }
+            _ => return Err(Error::invalid(format!("bad level line {k}: '{line}'"))),
+        };
+        level_stats.push(stat);
+    }
+    let mline = next(lines, "model")?;
+    if mline.trim() != "model" {
+        return Err(Error::invalid(format!("expected 'model', got '{mline}'")));
+    }
+    let model = SvmModel::parse_lines(lines)?;
+    params.kernel = model.kernel;
+    Ok(MlsvmModel {
+        model,
+        params,
+        level_stats,
+        depths,
+    })
+}
+
+fn read_multiclass_body<'b>(lines: &mut impl Iterator<Item = &'b str>) -> Result<MulticlassModel> {
+    let cline = next(lines, "classes")?;
+    let nclasses: usize = match cline.split_whitespace().collect::<Vec<_>>().as_slice() {
+        ["classes", n] => num(n, "class count")?,
+        _ => return Err(Error::invalid(format!("bad classes line '{cline}'"))),
+    };
+    let mut jobs = Vec::with_capacity(nclasses);
+    for _ in 0..nclasses {
+        let line = next(lines, "class")?;
+        let t: Vec<&str> = line.splitn(11, ' ').collect();
+        let job = match t.as_slice() {
+            ["class", id, "secs", secs, "pos", p, "neg", n, "status", "ok"] => {
+                let model = read_mlsvm_body(lines)?;
+                ClassJob {
+                    class_id: num(id, "class id")?,
+                    model: Some(model),
+                    error: None,
+                    seconds: num(secs, "seconds")?,
+                    sizes: (num(p, "pos size")?, num(n, "neg size")?),
+                }
+            }
+            ["class", id, "secs", secs, "pos", p, "neg", n, "status", "err", msg] => ClassJob {
+                class_id: num(id, "class id")?,
+                model: None,
+                error: Some(msg.to_string()),
+                seconds: num(secs, "seconds")?,
+                sizes: (num(p, "pos size")?, num(n, "neg size")?),
+            },
+            _ => return Err(Error::invalid(format!("bad class line '{line}'"))),
+        };
+        jobs.push(job);
+    }
+    Ok(MulticlassModel { jobs })
+}
+
+/// Load any model file: versioned (`mlsvm-model v1 ...`) or legacy
+/// single-`SvmModel` line files.
+pub fn load_artifact(path: impl AsRef<Path>) -> Result<ModelArtifact> {
+    let text = std::fs::read_to_string(&path)?;
+    let mut lines = text.lines();
+    let Some(first) = lines.clone().next() else {
+        return Err(Error::invalid("empty model file"));
+    };
+    if !first.starts_with(MAGIC) {
+        // Legacy format: a bare SvmModel line file.
+        return SvmModel::parse_lines(&mut text.lines()).map(ModelArtifact::Svm);
+    }
+    let header = next(&mut lines, "header")?;
+    let ht: Vec<&str> = header.split_whitespace().collect();
+    let (version, kind) = match ht.as_slice() {
+        [m, v, k] if *m == MAGIC => (*v, *k),
+        _ => return Err(Error::invalid(format!("bad header '{header}'"))),
+    };
+    if version != format!("v{VERSION}") {
+        return Err(Error::invalid(format!(
+            "unsupported model format version '{version}' (this build reads v{VERSION})"
+        )));
+    }
+    match kind {
+        "svm" => SvmModel::parse_lines(&mut lines).map(ModelArtifact::Svm),
+        "mlsvm" => read_mlsvm_body(&mut lines).map(ModelArtifact::Mlsvm),
+        "multiclass" => read_multiclass_body(&mut lines).map(ModelArtifact::Multiclass),
+        other => Err(Error::invalid(format!("unknown model kind '{other}'"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// A directory of named model files (`<name>.model`), the unit the
+/// serving layer loads, lists and hot-reloads from.
+pub struct Registry {
+    dir: PathBuf,
+}
+
+fn validate_name(name: &str) -> Result<()> {
+    let ok = !name.is_empty()
+        && !name.starts_with('.')
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+    if ok {
+        Ok(())
+    } else {
+        Err(Error::invalid(format!(
+            "bad model name '{name}' (use letters, digits, '-', '_', '.')"
+        )))
+    }
+}
+
+impl Registry {
+    /// Open (creating if needed) a registry directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        Ok(Registry { dir })
+    }
+
+    /// The backing directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// File path a model name maps to.
+    pub fn path_of(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.{EXTENSION}"))
+    }
+
+    /// Save under `name` (written to a uniquely-named temp file, then
+    /// renamed, so neither a concurrent `load`/reload nor a racing save
+    /// of the same name ever sees a half-written or interleaved model).
+    pub fn save(&self, name: &str, artifact: &ModelArtifact) -> Result<PathBuf> {
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        validate_name(name)?;
+        let path = self.path_of(name);
+        let unique = format!(
+            "{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        );
+        let tmp = self.dir.join(format!(".{name}.{unique}.{EXTENSION}.tmp"));
+        let written = save_artifact(&tmp, artifact);
+        if let Err(e) = written {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+
+    /// Load the named model (versioned or legacy format).
+    pub fn load(&self, name: &str) -> Result<ModelArtifact> {
+        validate_name(name)?;
+        let path = self.path_of(name);
+        if !path.exists() {
+            return Err(Error::invalid(format!(
+                "model '{name}' not found in {}",
+                self.dir.display()
+            )));
+        }
+        load_artifact(path)
+    }
+
+    /// Sorted names of every model in the registry.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some(EXTENSION) {
+                continue;
+            }
+            if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                if !stem.starts_with('.') {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+    use crate::svm::kernel::KernelKind;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mlsvm_registry_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A tiny hand-built model with awkward float values (exercises the
+    /// shortest-round-trip formatting).
+    fn tiny_svm(gamma: f64) -> SvmModel {
+        SvmModel {
+            sv: Matrix::from_vec(2, 3, vec![0.1, -2.5, 3.75, 1.0 / 3.0, 0.0, -7.25]).unwrap(),
+            sv_coef: vec![0.123456789012345, -2.0 / 3.0],
+            rho: -0.037,
+            kernel: KernelKind::Rbf { gamma },
+            sv_indices: Vec::new(),
+            sv_labels: vec![1, -1],
+        }
+    }
+
+    fn tiny_mlsvm(gamma: f64) -> MlsvmModel {
+        MlsvmModel {
+            model: tiny_svm(gamma),
+            params: SvmParams {
+                c_pos: 4.2,
+                c_neg: 0.7,
+                kernel: KernelKind::Rbf { gamma },
+                eps: 1e-3,
+                max_iter: 12345,
+                cache_bytes: 1 << 20,
+                shrinking: true,
+            },
+            level_stats: vec![
+                LevelStat {
+                    levels: (2, 3),
+                    train_size: 100,
+                    n_sv: 17,
+                    ud_used: true,
+                    seconds: 0.125,
+                    cv_gmean: Some(0.913),
+                    solver: TrainStats {
+                        iterations: 321,
+                        gap: 9.5e-4,
+                        cache_hits: 10,
+                        cache_misses: 3,
+                        warm_started: false,
+                    },
+                },
+                LevelStat {
+                    levels: (1, 2),
+                    train_size: 250,
+                    n_sv: 31,
+                    ud_used: false,
+                    seconds: 0.5,
+                    cv_gmean: None,
+                    solver: TrainStats {
+                        iterations: 77,
+                        gap: 1e-4,
+                        cache_hits: 40,
+                        cache_misses: 2,
+                        warm_started: true,
+                    },
+                },
+            ],
+            depths: (3, 4),
+        }
+    }
+
+    fn probes() -> Vec<Vec<f32>> {
+        vec![
+            vec![0.0, 0.0, 0.0],
+            vec![1.5, -0.25, 0.875],
+            vec![-3.0, 2.0, 0.1],
+        ]
+    }
+
+    #[test]
+    fn svm_round_trip_is_bit_exact() {
+        let dir = tmp_dir("svm_rt");
+        let m = tiny_svm(0.3);
+        let path = dir.join("m.model");
+        save_artifact(&path, &ModelArtifact::Svm(m.clone())).unwrap();
+        let ModelArtifact::Svm(back) = load_artifact(&path).unwrap() else {
+            panic!("kind must round-trip")
+        };
+        for x in probes() {
+            assert_eq!(m.decision(&x), back.decision(&x), "bit-for-bit decisions");
+        }
+        assert_eq!(m.sv_labels, back.sv_labels);
+    }
+
+    #[test]
+    fn mlsvm_round_trip_preserves_model_and_metadata() {
+        let dir = tmp_dir("mlsvm_rt");
+        let m = tiny_mlsvm(0.45);
+        let path = dir.join("m.model");
+        save_artifact(&path, &ModelArtifact::Mlsvm(m.clone())).unwrap();
+        let ModelArtifact::Mlsvm(back) = load_artifact(&path).unwrap() else {
+            panic!("kind must round-trip")
+        };
+        for x in probes() {
+            assert_eq!(m.model.decision(&x), back.model.decision(&x));
+        }
+        assert_eq!(back.depths, (3, 4));
+        assert_eq!(back.level_stats.len(), 2);
+        assert_eq!(back.level_stats[0].levels, (2, 3));
+        assert_eq!(back.level_stats[0].cv_gmean, Some(0.913));
+        assert_eq!(back.level_stats[1].cv_gmean, None);
+        assert!(back.level_stats[1].solver.warm_started);
+        assert_eq!(back.level_stats[1].solver.cache_hits, 40);
+        assert_eq!(back.params.c_pos, 4.2);
+        assert_eq!(back.params.max_iter, 12345);
+        assert_eq!(back.params.kernel, m.model.kernel);
+    }
+
+    #[test]
+    fn multiclass_round_trip_keeps_failed_jobs() {
+        let dir = tmp_dir("mc_rt");
+        let mc = MulticlassModel {
+            jobs: vec![
+                ClassJob {
+                    class_id: 0,
+                    model: Some(tiny_mlsvm(0.2)),
+                    error: None,
+                    seconds: 1.5,
+                    sizes: (40, 60),
+                },
+                ClassJob {
+                    class_id: 7,
+                    model: None,
+                    error: Some("degenerate training set: class vanished\nat level 2".into()),
+                    seconds: 0.01,
+                    sizes: (0, 100),
+                },
+                ClassJob {
+                    class_id: 2,
+                    model: Some(tiny_mlsvm(1.7)),
+                    error: None,
+                    seconds: 2.25,
+                    sizes: (55, 45),
+                },
+            ],
+        };
+        let path = dir.join("mc.model");
+        save_artifact(&path, &ModelArtifact::Multiclass(mc.clone())).unwrap();
+        let ModelArtifact::Multiclass(back) = load_artifact(&path).unwrap() else {
+            panic!("kind must round-trip")
+        };
+        assert_eq!(back.jobs.len(), 3);
+        for x in probes() {
+            assert_eq!(mc.predict(&x), back.predict(&x), "argmax preserved");
+        }
+        assert!(back.jobs[1].model.is_none());
+        let msg = back.jobs[1].error.as_deref().unwrap();
+        assert!(msg.contains("class vanished"), "{msg}");
+        assert!(!msg.contains('\n'), "newlines must be flattened");
+        assert_eq!(back.jobs[2].sizes, (55, 45));
+    }
+
+    #[test]
+    fn empty_failure_messages_stay_loadable() {
+        // A job that failed with an empty/whitespace message must still
+        // produce a file the reader accepts.
+        let dir = tmp_dir("empty_err");
+        let mc = MulticlassModel {
+            jobs: vec![ClassJob {
+                class_id: 3,
+                model: None,
+                error: Some("\n ".into()),
+                seconds: 0.0,
+                sizes: (0, 10),
+            }],
+        };
+        let path = dir.join("e.model");
+        save_artifact(&path, &ModelArtifact::Multiclass(mc)).unwrap();
+        let ModelArtifact::Multiclass(back) = load_artifact(&path).unwrap() else {
+            panic!("kind must round-trip")
+        };
+        assert_eq!(back.jobs[0].error.as_deref(), Some("unknown failure"));
+    }
+
+    #[test]
+    fn legacy_line_files_still_load() {
+        let dir = tmp_dir("legacy");
+        let m = tiny_svm(0.9);
+        let path = dir.join("old.model");
+        m.save(&path).unwrap(); // the pre-registry line protocol
+        let ModelArtifact::Svm(back) = load_artifact(&path).unwrap() else {
+            panic!("legacy files load as bare SVMs")
+        };
+        for x in probes() {
+            assert_eq!(m.decision(&x), back.decision(&x));
+        }
+    }
+
+    #[test]
+    fn garbage_truncation_and_bad_versions_are_rejected() {
+        let dir = tmp_dir("reject");
+        let garbage = dir.join("g.model");
+        std::fs::write(&garbage, "not a model at all\n").unwrap();
+        assert!(load_artifact(&garbage).is_err());
+
+        let empty = dir.join("e.model");
+        std::fs::write(&empty, "").unwrap();
+        assert!(load_artifact(&empty).is_err());
+
+        // Truncate a valid mlsvm file in the middle of the SV block.
+        let full = dir.join("full.model");
+        save_artifact(&full, &ModelArtifact::Mlsvm(tiny_mlsvm(0.5))).unwrap();
+        let text = std::fs::read_to_string(&full).unwrap();
+        let cut: Vec<&str> = text.lines().collect();
+        let truncated = cut[..cut.len() - 1].join("\n");
+        let tpath = dir.join("t.model");
+        std::fs::write(&tpath, truncated).unwrap();
+        assert!(load_artifact(&tpath).is_err(), "truncated file must fail");
+
+        let future = dir.join("v9.model");
+        std::fs::write(&future, "mlsvm-model v9 svm\nkernel linear\n").unwrap();
+        let err = load_artifact(&future).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn registry_save_load_list() {
+        let dir = tmp_dir("reg");
+        let reg = Registry::open(dir.join("models")).unwrap();
+        assert!(reg.list().unwrap().is_empty());
+        reg.save("alpha", &ModelArtifact::Svm(tiny_svm(0.1))).unwrap();
+        reg.save("beta-v2", &ModelArtifact::Mlsvm(tiny_mlsvm(0.2)))
+            .unwrap();
+        assert_eq!(reg.list().unwrap(), vec!["alpha", "beta-v2"]);
+        assert!(matches!(
+            reg.load("alpha").unwrap(),
+            ModelArtifact::Svm(_)
+        ));
+        assert!(matches!(
+            reg.load("beta-v2").unwrap(),
+            ModelArtifact::Mlsvm(_)
+        ));
+        assert!(reg.load("missing").is_err());
+        assert!(reg.save("../evil", &ModelArtifact::Svm(tiny_svm(0.1))).is_err());
+        assert!(reg.save("", &ModelArtifact::Svm(tiny_svm(0.1))).is_err());
+    }
+}

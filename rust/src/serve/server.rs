@@ -1,0 +1,638 @@
+//! A minimal hand-rolled HTTP/1.1-over-TCP front end for the serving
+//! engine (std `TcpListener`; the crate is dependency-free, so no hyper).
+//!
+//! One accept-loop thread; each connection is handled on its own thread
+//! (parse one request, answer, close — keep-alive is a ROADMAP item).
+//! Endpoints:
+//!
+//! | method | path             | body                     | answer |
+//! |--------|------------------|--------------------------|--------|
+//! | POST   | `/predict`       | one feature vector       | decision JSON |
+//! | POST   | `/predict-batch` | one vector per line      | JSON array |
+//! | POST   | `/reload?model=` | —                        | reload from the registry |
+//! | GET    | `/models`        | —                        | registry listing |
+//! | GET    | `/stats`         | —                        | engine counters |
+//! | GET    | `/healthz`       | —                        | `ok` |
+//!
+//! Feature vectors are whitespace/comma separated floats; `[1, 2, 3]`
+//! JSON arrays parse too (brackets are treated as separators).
+
+use crate::error::{Error, Result};
+use crate::serve::engine::{Decision, Engine};
+use crate::serve::registry::Registry;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Largest accepted request body (a predict-batch of ~100k small rows).
+const MAX_BODY: usize = 64 << 20;
+
+/// Largest accepted request line + headers. Every pre-body read goes
+/// through a [`Read::take`] of this size, so a client streaming an
+/// endless header (or a newline-free request line) hits a hard cap
+/// instead of growing a `String` until OOM.
+const MAX_HEAD: u64 = 64 * 1024;
+
+/// Maximum concurrent connection threads; excess connections are
+/// answered 503 by the accept loop (load shedding).
+const MAX_CONNS: usize = 256;
+
+/// Everything a connection handler needs: the engine, the registry to
+/// reload from (optional), and the name of the currently served model.
+pub struct ServeState {
+    /// The batching engine answering predictions.
+    pub engine: Engine,
+    /// Registry backing `/models` and `/reload` (None → those endpoints
+    /// report an error).
+    pub registry: Option<Registry>,
+    /// Name of the model currently loaded into the engine.
+    pub model_name: Mutex<String>,
+}
+
+impl ServeState {
+    /// Reload `name` from the registry into the engine. The name lock is
+    /// held across the engine swap so concurrent reloads serialize and
+    /// `model_name` always matches the scorer actually loaded.
+    pub fn reload(&self, name: &str) -> Result<String> {
+        let reg = self
+            .registry
+            .as_ref()
+            .ok_or_else(|| Error::Serve("no registry attached to this server".into()))?;
+        let artifact = reg.load(name)?;
+        let desc = artifact.describe();
+        let mut current = self.model_name.lock().unwrap();
+        self.engine.reload(&artifact)?;
+        *current = name.to_string();
+        Ok(desc)
+    }
+}
+
+/// A running HTTP server (shuts down on drop).
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `bind_addr` (e.g. `127.0.0.1:7878`, or port 0 for an
+    /// ephemeral port) and start serving `state`.
+    pub fn start(bind_addr: &str, state: Arc<ServeState>) -> Result<Server> {
+        let listener = TcpListener::bind(bind_addr)
+            .map_err(|e| Error::Serve(format!("bind {bind_addr}: {e}")))?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
+        let accept_thread = std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || {
+                let active = Arc::new(AtomicUsize::new(0));
+                for conn in listener.incoming() {
+                    if sd.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    // Shed load instead of spawning unboundedly: each
+                    // connection is a thread plus an in-flight body.
+                    if active.load(Ordering::Relaxed) >= MAX_CONNS {
+                        shed_connection(&stream);
+                        continue;
+                    }
+                    active.fetch_add(1, Ordering::Relaxed);
+                    // Drop guard: the permit returns even if the handler
+                    // panics (or the spawn itself fails and the closure
+                    // is dropped unrun).
+                    struct Permit(Arc<AtomicUsize>);
+                    impl Drop for Permit {
+                        fn drop(&mut self) {
+                            self.0.fetch_sub(1, Ordering::Relaxed);
+                        }
+                    }
+                    let permit = Permit(Arc::clone(&active));
+                    let st = Arc::clone(&state);
+                    let _ = std::thread::Builder::new()
+                        .name("serve-conn".into())
+                        .spawn(move || {
+                            let _permit = permit;
+                            handle_connection(stream, &st);
+                        });
+                }
+            })
+            .map_err(|e| Error::Serve(format!("spawning accept loop: {e}")))?;
+        Ok(Server {
+            addr,
+            shutdown,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and join the accept loop.
+    pub fn shutdown(&mut self) {
+        if self.shutdown.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        // Unblock the accept loop with a wake-up connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request handling
+// ---------------------------------------------------------------------------
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    query: String,
+    body: String,
+}
+
+fn read_request(stream: &TcpStream) -> std::result::Result<HttpRequest, &'static str> {
+    let mut reader = BufReader::new(Read::take(stream, MAX_HEAD));
+    let mut line = String::new();
+    if reader.read_line(&mut line).is_err() || line.is_empty() {
+        return Err("empty request");
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or("bad request line")?.to_string();
+    let target = parts.next().ok_or("bad request line")?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    let mut content_len = 0usize;
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        let n = reader.read_line(&mut h).map_err(|_| "bad headers")?;
+        if n == 0 {
+            // EOF or the MAX_HEAD cap ran out before the blank separator
+            // line — reject rather than misreading leftovers as a body.
+            return Err("headers too large or truncated");
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().map_err(|_| "bad content-length")?;
+            } else if k.eq_ignore_ascii_case("transfer-encoding") {
+                chunked = !v.trim().eq_ignore_ascii_case("identity");
+            }
+        }
+    }
+    if chunked {
+        // Reject explicitly rather than misparsing a chunked body as
+        // empty.
+        return Err("chunked transfer encoding unsupported; send Content-Length");
+    }
+    if content_len > MAX_BODY {
+        return Err("body too large");
+    }
+    // Admit exactly the declared body: bytes already buffered past the
+    // headers count toward it, the limit covers the rest, and the buffer
+    // grows with what actually arrives (a declared-but-never-sent
+    // Content-Length must not pre-allocate MAX_BODY per connection).
+    let buffered = reader.buffer().len().min(content_len);
+    reader.get_mut().set_limit((content_len - buffered) as u64);
+    let mut body = Vec::with_capacity(content_len.min(64 * 1024));
+    reader.read_to_end(&mut body).map_err(|_| "short body")?;
+    body.truncate(content_len);
+    if body.len() < content_len {
+        return Err("short body");
+    }
+    let body = String::from_utf8(body).map_err(|_| "body is not UTF-8")?;
+    Ok(HttpRequest {
+        method,
+        path,
+        query,
+        body,
+    })
+}
+
+fn write_response(stream: &TcpStream, status: &str, content_type: &str, payload: &str) {
+    let mut w = stream;
+    let _ = write!(
+        w,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        payload.len()
+    );
+    let _ = w.flush();
+}
+
+fn handle_connection(stream: TcpStream, state: &ServeState) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_nodelay(true);
+    match read_request(&stream) {
+        Ok(req) => {
+            let (status, content_type, payload) = route(state, &req);
+            write_response(&stream, status, content_type, &payload);
+        }
+        Err(msg) => {
+            if msg != "empty request" {
+                write_response(
+                    &stream,
+                    "400 Bad Request",
+                    "application/json",
+                    &error_json(msg),
+                );
+            }
+        }
+    }
+}
+
+fn error_json(msg: &str) -> String {
+    format!("{{\"error\":\"{}\"}}", json_escape(msg))
+}
+
+/// Answer a connection 503 without handling it. Closing a socket with
+/// unread received bytes RSTs the queued response on Linux, so after
+/// writing we half-close and briefly drain what the client already sent
+/// (bounded: small sink, short timeout, so the accept loop self-throttles
+/// rather than stalls under a flood).
+fn shed_connection(stream: &TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    write_response(
+        stream,
+        "503 Service Unavailable",
+        "application/json",
+        &error_json("server at connection capacity"),
+    );
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut sink = [0u8; 4096];
+    let mut r = stream;
+    for _ in 0..4 {
+        match Read::read(&mut r, &mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+/// Escape a string for embedding in JSON.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a finite f64 as a JSON number (non-finite values → null).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn decision_json(d: &Decision) -> String {
+    match d {
+        Decision::Binary { value, label } => format!(
+            "{{\"kind\":\"binary\",\"decision\":{},\"label\":{label}}}",
+            json_num(*value)
+        ),
+        Decision::Multiclass { class, scores } => {
+            let cls = class
+                .map(|c| c.to_string())
+                .unwrap_or_else(|| "null".to_string());
+            let scores: Vec<String> = scores
+                .iter()
+                .map(|(c, v)| format!("{{\"class\":{c},\"decision\":{}}}", json_num(*v)))
+                .collect();
+            format!(
+                "{{\"kind\":\"multiclass\",\"class\":{cls},\"scores\":[{}]}}",
+                scores.join(",")
+            )
+        }
+    }
+}
+
+/// Parse one feature vector from text (commas, whitespace and JSON
+/// brackets all act as separators).
+pub fn parse_vector(s: &str) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for tok in s.split(|c: char| c.is_whitespace() || matches!(c, ',' | '[' | ']')) {
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(
+            tok.parse::<f32>()
+                .map_err(|_| Error::invalid(format!("bad feature value '{tok}'")))?,
+        );
+    }
+    if out.is_empty() {
+        return Err(Error::invalid("empty feature vector"));
+    }
+    Ok(out)
+}
+
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query
+        .split('&')
+        .filter_map(|kv| kv.split_once('='))
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| v)
+}
+
+fn route(state: &ServeState, req: &HttpRequest) -> (&'static str, &'static str, String) {
+    const JSON: &str = "application/json";
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => ("200 OK", "text/plain", "ok\n".to_string()),
+        ("GET", "/stats") => {
+            let mut j = state.engine.stats().to_json();
+            // Splice serving context into the snapshot object.
+            let extra = format!(
+                ",\"model\":\"{}\",\"model_kind\":\"{}\",\"dim\":{},\"queued\":{}}}",
+                json_escape(&state.model_name.lock().unwrap()),
+                state.engine.model_kind(),
+                state.engine.dim(),
+                state.engine.queued()
+            );
+            j.truncate(j.len() - 1);
+            j.push_str(&extra);
+            ("200 OK", JSON, j)
+        }
+        ("GET", "/models") => match &state.registry {
+            Some(reg) => match reg.list() {
+                Ok(names) => {
+                    let list: Vec<String> =
+                        names.iter().map(|n| format!("\"{}\"", json_escape(n))).collect();
+                    let current = state.model_name.lock().unwrap().clone();
+                    (
+                        "200 OK",
+                        JSON,
+                        format!(
+                            "{{\"models\":[{}],\"serving\":\"{}\"}}",
+                            list.join(","),
+                            json_escape(&current)
+                        ),
+                    )
+                }
+                Err(e) => ("500 Internal Server Error", JSON, error_json(&e.to_string())),
+            },
+            None => (
+                "503 Service Unavailable",
+                JSON,
+                error_json("no registry attached"),
+            ),
+        },
+        ("POST", "/reload") => {
+            let name = query_param(&req.query, "model")
+                .map(str::to_string)
+                .unwrap_or_else(|| state.model_name.lock().unwrap().clone());
+            match state.reload(&name) {
+                Ok(desc) => (
+                    "200 OK",
+                    JSON,
+                    format!(
+                        "{{\"reloaded\":\"{}\",\"model\":\"{}\"}}",
+                        json_escape(&name),
+                        json_escape(&desc)
+                    ),
+                ),
+                Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
+            }
+        }
+        ("POST", "/predict") => match parse_vector(&req.body) {
+            Ok(x) => match state.engine.predict(&x) {
+                Ok(d) => ("200 OK", JSON, decision_json(&d)),
+                Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
+            },
+            Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
+        },
+        ("POST", "/predict-batch") => {
+            let mut rows = Vec::new();
+            for line in req.body.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match parse_vector(line) {
+                    Ok(x) => rows.push(x),
+                    Err(e) => return ("400 Bad Request", JSON, error_json(&e.to_string())),
+                }
+            }
+            if rows.is_empty() {
+                return ("400 Bad Request", JSON, error_json("empty batch"));
+            }
+            // Submit everything, then collect: lets the engine batch.
+            let tickets: std::result::Result<Vec<_>, _> =
+                rows.iter().map(|x| state.engine.submit(x)).collect();
+            match tickets {
+                Ok(ts) => {
+                    let mut out = Vec::with_capacity(ts.len());
+                    for t in ts {
+                        match t.wait() {
+                            Ok(d) => out.push(decision_json(&d)),
+                            Err(e) => {
+                                return (
+                                    "500 Internal Server Error",
+                                    JSON,
+                                    error_json(&e.to_string()),
+                                )
+                            }
+                        }
+                    }
+                    (
+                        "200 OK",
+                        JSON,
+                        format!("{{\"decisions\":[{}]}}", out.join(",")),
+                    )
+                }
+                Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
+            }
+        }
+        ("GET", _) | ("POST", _) => ("404 Not Found", JSON, error_json("no such endpoint")),
+        _ => (
+            "405 Method Not Allowed",
+            JSON,
+            error_json("use GET or POST"),
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A tiny blocking HTTP client (loadgen, examples, tests — std-only).
+// ---------------------------------------------------------------------------
+
+/// Issue one HTTP/1.1 request against `addr` and return
+/// `(status_code, body)`. Opens a fresh connection per call.
+pub fn http_request(
+    addr: &SocketAddr,
+    method: &str,
+    target: &str,
+    body: &str,
+) -> Result<(u16, String)> {
+    let stream = TcpStream::connect_timeout(addr, Duration::from_secs(5))
+        .map_err(|e| Error::Serve(format!("connect {addr}: {e}")))?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .ok();
+    {
+        let mut w = &stream;
+        write!(
+            w,
+            "{method} {target} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )?;
+        w.flush()?;
+    }
+    let mut reader = BufReader::new(&stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let code: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Serve(format!("bad status line '{}'", status_line.trim())))?;
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    Ok((code, String::from_utf8_lossy(&body).into_owned()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+    use crate::serve::engine::EngineConfig;
+    use crate::serve::registry::ModelArtifact;
+    use crate::svm::kernel::KernelKind;
+    use crate::svm::model::SvmModel;
+
+    fn tiny_model() -> SvmModel {
+        SvmModel {
+            sv: Matrix::from_vec(2, 2, vec![1.0, 0.0, -1.0, 0.0]).unwrap(),
+            sv_coef: vec![1.0, -1.0],
+            rho: 0.0,
+            kernel: KernelKind::Rbf { gamma: 0.5 },
+            sv_indices: Vec::new(),
+            sv_labels: vec![1, -1],
+        }
+    }
+
+    fn start_server() -> (Server, Arc<ServeState>) {
+        let engine = Engine::new(
+            &ModelArtifact::Svm(tiny_model()),
+            EngineConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                queue_cap: 64,
+            },
+        )
+        .unwrap();
+        let state = Arc::new(ServeState {
+            engine,
+            registry: None,
+            model_name: Mutex::new("tiny".into()),
+        });
+        let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+        (server, state)
+    }
+
+    #[test]
+    fn predict_and_health_endpoints_answer() {
+        let (server, _state) = start_server();
+        let addr = server.addr();
+        let (code, body) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "ok\n");
+        // Near the +1 SV: decision > 0.
+        let (code, body) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+        assert_eq!(code, 200, "{body}");
+        assert!(body.contains("\"label\":1"), "{body}");
+        // JSON-array style body parses too.
+        let (code, body) = http_request(&addr, "POST", "/predict", "[-0.9, 0.1]").unwrap();
+        assert_eq!(code, 200, "{body}");
+        assert!(body.contains("\"label\":-1"), "{body}");
+    }
+
+    #[test]
+    fn batch_stats_and_errors() {
+        let (server, _state) = start_server();
+        let addr = server.addr();
+        let batch = "1.0 0.0\n-1.0 0.0\n0.5 0.5\n";
+        let (code, body) = http_request(&addr, "POST", "/predict-batch", batch).unwrap();
+        assert_eq!(code, 200, "{body}");
+        assert_eq!(body.matches("\"kind\":\"binary\"").count(), 3, "{body}");
+        let (code, body) = http_request(&addr, "GET", "/stats", "").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("\"model\":\"tiny\""), "{body}");
+        assert!(body.contains("\"completed\":"), "{body}");
+        // Bad inputs are 400s, unknown paths are 404s.
+        let (code, _) = http_request(&addr, "POST", "/predict", "not numbers").unwrap();
+        assert_eq!(code, 400);
+        let (code, _) = http_request(&addr, "POST", "/predict", "1.0").unwrap();
+        assert_eq!(code, 400, "dimension mismatch is a client error");
+        let (code, _) = http_request(&addr, "GET", "/nope", "").unwrap();
+        assert_eq!(code, 404);
+        // No registry attached: /models is unavailable, /reload fails.
+        let (code, _) = http_request(&addr, "GET", "/models", "").unwrap();
+        assert_eq!(code, 503);
+        let (code, _) = http_request(&addr, "POST", "/reload?model=x", "").unwrap();
+        assert_eq!(code, 400);
+    }
+
+    #[test]
+    fn vector_parsing_accepts_common_shapes() {
+        assert_eq!(parse_vector("1, 2, 3").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(parse_vector("[1.5,-2]").unwrap(), vec![1.5, -2.0]);
+        assert_eq!(parse_vector(" 4 ").unwrap(), vec![4.0]);
+        assert!(parse_vector("").is_err());
+        assert!(parse_vector("a b").is_err());
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("plain"), "plain");
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let (mut server, _state) = start_server();
+        server.shutdown();
+        server.shutdown();
+    }
+}

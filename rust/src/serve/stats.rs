@@ -1,0 +1,363 @@
+//! Serving-side instrumentation: batching counters, a lock-free
+//! log-spaced latency histogram, and JSON snapshots for the `/stats`
+//! endpoint and the `BENCH_serve.json` emitter.
+//!
+//! Two stat holders exist because two execution styles exist:
+//!
+//! * [`BatchStats`] — plain counters for the single-threaded
+//!   [`crate::serve::engine::BatchQueue`] (and therefore the
+//!   [`crate::coordinator::Router`] that wraps it);
+//! * [`EngineStats`] — atomic counters plus a latency histogram, shared by
+//!   the worker threads of [`crate::serve::engine::Engine`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Counters of a single-threaded dynamic batcher (the router path).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    /// Requests submitted.
+    pub requests: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Batches triggered by the deadline (vs size).
+    pub deadline_flushes: u64,
+    /// Total padded slots executed (utilization = requests / slots).
+    pub slots: u64,
+}
+
+impl BatchStats {
+    /// Fraction of executed batch slots that carried real requests.
+    pub fn utilization(&self) -> f64 {
+        if self.slots == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.slots as f64
+        }
+    }
+}
+
+/// Number of histogram buckets: bucket 0 is `< 1µs`, bucket `i` covers
+/// `[1µs·√2^(i−1), 1µs·√2^i)`, so 48 buckets reach ≈ 11 s before the
+/// overflow bucket absorbs the tail.
+const NBUCKETS: usize = 48;
+/// Lower edge of bucket 1 in seconds.
+const BASE: f64 = 1e-6;
+/// Geometric growth factor between bucket edges.
+const GROWTH: f64 = std::f64::consts::SQRT_2;
+
+/// A fixed log-spaced latency histogram with atomic buckets (recording
+/// from many worker threads needs no lock; percentile reads are
+/// approximate under concurrent writes, which is fine for monitoring).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<AtomicU64>,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        if !(secs > BASE) {
+            return 0;
+        }
+        let i = 1 + (2.0 * (secs / BASE).log2()).floor() as usize;
+        i.min(NBUCKETS - 1)
+    }
+
+    /// Lower bound of bucket `i` in seconds.
+    fn lower(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            BASE * GROWTH.powi(i as i32 - 1)
+        }
+    }
+
+    /// Upper bound of bucket `i` in seconds.
+    fn upper(i: usize) -> f64 {
+        BASE * GROWTH.powi(i as i32)
+    }
+
+    /// Record one observation (seconds).
+    pub fn record(&self, secs: f64) {
+        self.counts[Self::bucket_of(secs)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add((secs.max(0.0) * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    /// Record one observation from a [`Duration`].
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_secs_f64());
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Mean latency in seconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
+        }
+    }
+
+    /// Approximate percentile (`p` in [0, 1]) in seconds, linearly
+    /// interpolated inside the hit bucket. Returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let c = c.load(Ordering::Relaxed);
+            if cum + c >= target {
+                let frac = if c == 0 {
+                    0.0
+                } else {
+                    (target - cum) as f64 / c as f64
+                };
+                let (lo, hi) = (Self::lower(i), Self::upper(i));
+                return lo + frac * (hi - lo);
+            }
+            cum += c;
+        }
+        Self::upper(NBUCKETS - 1)
+    }
+}
+
+/// Shared (atomic) counters of the threaded serving engine.
+#[derive(Debug)]
+pub struct EngineStats {
+    /// Requests accepted by `submit`.
+    pub requests: AtomicU64,
+    /// Requests answered (a result was produced).
+    pub completed: AtomicU64,
+    /// Batches evaluated by the workers.
+    pub batches: AtomicU64,
+    /// Batches flushed by deadline (partial) rather than size.
+    pub deadline_flushes: AtomicU64,
+    /// Padded slots executed (`batches * max_batch`).
+    pub slots: AtomicU64,
+    /// Times a submitter had to wait on the bounded queue.
+    pub backpressure_waits: AtomicU64,
+    /// Model hot-reloads served.
+    pub reloads: AtomicU64,
+    /// End-to-end request latency (enqueue → result ready).
+    pub latency: LatencyHistogram,
+    started: Instant,
+}
+
+impl Default for EngineStats {
+    fn default() -> Self {
+        EngineStats::new()
+    }
+}
+
+impl EngineStats {
+    /// Fresh counters; the uptime clock starts now.
+    pub fn new() -> EngineStats {
+        EngineStats {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            deadline_flushes: AtomicU64::new(0),
+            slots: AtomicU64::new(0),
+            backpressure_waits: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Point-in-time copy of every counter plus derived rates.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let completed = self.completed.load(Ordering::Relaxed);
+        let slots = self.slots.load(Ordering::Relaxed);
+        let uptime = self.started.elapsed().as_secs_f64();
+        StatsSnapshot {
+            uptime_secs: uptime,
+            requests,
+            completed,
+            batches: self.batches.load(Ordering::Relaxed),
+            deadline_flushes: self.deadline_flushes.load(Ordering::Relaxed),
+            slots,
+            backpressure_waits: self.backpressure_waits.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            utilization: if slots == 0 {
+                0.0
+            } else {
+                completed as f64 / slots as f64
+            },
+            throughput_rps: if uptime > 0.0 {
+                completed as f64 / uptime
+            } else {
+                0.0
+            },
+            p50: self.latency.percentile(0.50),
+            p95: self.latency.percentile(0.95),
+            p99: self.latency.percentile(0.99),
+            mean: self.latency.mean(),
+        }
+    }
+}
+
+/// Plain-data view of [`EngineStats`] (latencies in seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct StatsSnapshot {
+    /// Seconds since the engine started.
+    pub uptime_secs: f64,
+    /// Requests accepted.
+    pub requests: u64,
+    /// Requests answered.
+    pub completed: u64,
+    /// Batches evaluated.
+    pub batches: u64,
+    /// Deadline-triggered batches.
+    pub deadline_flushes: u64,
+    /// Padded slots executed.
+    pub slots: u64,
+    /// Bounded-queue waits.
+    pub backpressure_waits: u64,
+    /// Model reloads.
+    pub reloads: u64,
+    /// completed / slots.
+    pub utilization: f64,
+    /// completed / uptime.
+    pub throughput_rps: f64,
+    /// Median latency (s).
+    pub p50: f64,
+    /// 95th-percentile latency (s).
+    pub p95: f64,
+    /// 99th-percentile latency (s).
+    pub p99: f64,
+    /// Mean latency (s).
+    pub mean: f64,
+}
+
+impl StatsSnapshot {
+    /// Render as a JSON object (hand-rolled; the crate has no serde).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"uptime_secs\":{:.3},\"requests\":{},\"completed\":{},\"batches\":{},\
+             \"deadline_flushes\":{},\"slots\":{},\"backpressure_waits\":{},\"reloads\":{},\
+             \"utilization\":{:.4},\"throughput_rps\":{:.1},\
+             \"latency_ms\":{{\"p50\":{:.4},\"p95\":{:.4},\"p99\":{:.4},\"mean\":{:.4}}}}}",
+            self.uptime_secs,
+            self.requests,
+            self.completed,
+            self.batches,
+            self.deadline_flushes,
+            self.slots,
+            self.backpressure_waits,
+            self.reloads,
+            self.utilization,
+            self.throughput_rps,
+            self.p50 * 1e3,
+            self.p95 * 1e3,
+            self.p99 * 1e3,
+            self.mean * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_stats_utilization() {
+        let mut s = BatchStats::default();
+        assert_eq!(s.utilization(), 0.0);
+        s.requests = 30;
+        s.slots = 40;
+        assert!((s.utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_are_monotone() {
+        for i in 1..NBUCKETS {
+            assert!(LatencyHistogram::lower(i) < LatencyHistogram::upper(i));
+            assert!(
+                (LatencyHistogram::upper(i - 1) - LatencyHistogram::lower(i)).abs()
+                    < 1e-12 * LatencyHistogram::lower(i).max(1e-12)
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_observations() {
+        let h = LatencyHistogram::new();
+        // 100 observations at ~1ms, 10 at ~100ms
+        for _ in 0..100 {
+            h.record(1e-3);
+        }
+        for _ in 0..10 {
+            h.record(0.1);
+        }
+        assert_eq!(h.count(), 110);
+        let p50 = h.percentile(0.5);
+        assert!(p50 > 2e-4 && p50 < 5e-3, "p50={p50}");
+        let p99 = h.percentile(0.99);
+        assert!(p99 > 0.03 && p99 < 0.3, "p99={p99}");
+        assert!(h.percentile(0.5) <= h.percentile(0.95));
+        assert!(h.percentile(0.95) <= h.percentile(0.99));
+        let mean = h.mean();
+        assert!(mean > 5e-3 && mean < 2e-2, "mean={mean}");
+    }
+
+    #[test]
+    fn histogram_extremes_are_clamped() {
+        let h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(-1.0); // defensive: negative goes to bucket 0
+        h.record(1e9); // overflow bucket
+        assert_eq!(h.count(), 3);
+        assert!(h.percentile(1.0) > 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_and_json() {
+        let s = EngineStats::new();
+        s.requests.fetch_add(10, Ordering::Relaxed);
+        s.completed.fetch_add(10, Ordering::Relaxed);
+        s.batches.fetch_add(2, Ordering::Relaxed);
+        s.slots.fetch_add(16, Ordering::Relaxed);
+        s.latency.record(1e-3);
+        let snap = s.snapshot();
+        assert_eq!(snap.requests, 10);
+        assert!((snap.utilization - 10.0 / 16.0).abs() < 1e-12);
+        let j = snap.to_json();
+        assert!(j.contains("\"requests\":10"), "{j}");
+        assert!(j.contains("\"latency_ms\""), "{j}");
+        assert!(j.starts_with('{') && j.ends_with('}'));
+    }
+}

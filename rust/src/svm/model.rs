@@ -7,7 +7,7 @@ use crate::data::matrix::Matrix;
 use crate::error::{Error, Result};
 use crate::svm::kernel::KernelKind;
 use crate::svm::smo::SvmParams;
-use std::io::{BufRead, BufWriter, Write};
+use std::io::{BufWriter, Write};
 use std::path::Path;
 
 /// A trained (weighted) SVM.
@@ -108,6 +108,14 @@ impl SvmModel {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let f = std::fs::File::create(path)?;
         let mut w = BufWriter::new(f);
+        self.write_text(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Write the line protocol into any writer (also embedded as a
+    /// section of the [`crate::serve::registry`] multi-model format).
+    pub fn write_text<W: Write>(&self, w: &mut W) -> Result<()> {
         match self.kernel {
             KernelKind::Rbf { gamma } => writeln!(w, "kernel rbf {gamma}")?,
             KernelKind::Linear => writeln!(w, "kernel linear")?,
@@ -131,12 +139,17 @@ impl SvmModel {
 
     /// Load from the plain-text format written by [`SvmModel::save`].
     pub fn load(path: impl AsRef<Path>) -> Result<SvmModel> {
-        let f = std::fs::File::open(path)?;
-        let mut lines = std::io::BufReader::new(f).lines();
-        let mut next_line = |what: &str| -> Result<String> {
+        let text = std::fs::read_to_string(path)?;
+        SvmModel::parse_lines(&mut text.lines())
+    }
+
+    /// Parse the line protocol from an iterator of lines, consuming
+    /// exactly the lines the model occupies (the registry reads several
+    /// models out of one file this way).
+    pub fn parse_lines<'b>(lines: &mut impl Iterator<Item = &'b str>) -> Result<SvmModel> {
+        let mut next_line = |what: &str| -> Result<&'b str> {
             lines
                 .next()
-                .transpose()?
                 .ok_or_else(|| Error::invalid(format!("model file truncated at {what}")))
         };
         let kline = next_line("kernel")?;

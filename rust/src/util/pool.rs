@@ -88,6 +88,30 @@ where
     out
 }
 
+/// Produce `0..n` values in parallel without the `Default + Clone` bound
+/// of [`parallel_map`]: each slot is filled exactly once through its own
+/// mutex (used e.g. to grow rp-forest trees concurrently, where the item
+/// type is a tree and has no cheap default).
+pub fn parallel_gen<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let slots: Vec<std::sync::Mutex<Option<T>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    parallel_for(n, 1, |i| {
+        *slots[i].lock().unwrap() = Some(f(i));
+    });
+    slots
+        .into_iter()
+        .map(|s| {
+            s.into_inner()
+                .expect("parallel_gen: worker panicked")
+                .expect("parallel_gen: slot filled exactly once")
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +140,18 @@ mod tests {
         parallel_for(0, 4, |_| panic!("must not be called"));
         let v: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(v.is_empty());
+    }
+
+    #[test]
+    fn parallel_gen_builds_non_default_values_in_order() {
+        // String has a Default, but Vec<String> of boxed closures etc.
+        // would not; the point is the bound — only Send is required.
+        struct NoDefault(usize);
+        let out = parallel_gen(100, NoDefault);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v.0, i);
+        }
+        let empty: Vec<NoDefault> = parallel_gen(0, NoDefault);
+        assert!(empty.is_empty());
     }
 }

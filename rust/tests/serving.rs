@@ -1,0 +1,320 @@
+//! End-to-end tests of the serving subsystem: registry persistence of
+//! real trained models, engine-vs-sequential decision parity under
+//! concurrency, the HTTP front end over localhost, and the `mlsvm serve`
+//! CLI binary answering requests from a registry model.
+
+use mlsvm::coordinator::jobs::OneVsRestTrainer;
+use mlsvm::data::matrix::Matrix;
+use mlsvm::data::synth::two_gaussians;
+use mlsvm::mlsvm::params::MlsvmParams;
+use mlsvm::mlsvm::trainer::MlsvmTrainer;
+use mlsvm::modelsel::search::UdSearchConfig;
+use mlsvm::serve::{
+    http_request, load_artifact, save_artifact, Decision, Engine, EngineConfig, ModelArtifact,
+    Registry, ServeState, Server,
+};
+use mlsvm::svm::kernel::KernelKind;
+use mlsvm::svm::model::SvmModel;
+use mlsvm::svm::smo::{train, SvmParams};
+use mlsvm::util::rng::Pcg64;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlsvm_serving_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn quick_params(seed: u64) -> MlsvmParams {
+    MlsvmParams {
+        hierarchy: mlsvm::amg::hierarchy::HierarchyParams {
+            coarsest_size: 50,
+            ..Default::default()
+        },
+        qdt: 300,
+        ud: UdSearchConfig {
+            stage1_points: 5,
+            stage2_points: 5,
+            folds: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+    .with_seed(seed)
+}
+
+fn binary_fixture(seed: u64) -> (SvmModel, mlsvm::data::dataset::Dataset) {
+    let mut rng = Pcg64::seed_from(seed);
+    let ds = two_gaussians(150, 100, 6, 3.0, &mut rng);
+    let p = SvmParams {
+        kernel: KernelKind::Rbf { gamma: 0.15 },
+        ..Default::default()
+    };
+    (train(&ds.points, &ds.labels, &p).unwrap(), ds)
+}
+
+/// Three separated classes in 4-D (the jobs.rs fixture, re-rolled).
+fn three_classes(n_per: usize, seed: u64) -> (Matrix, Vec<u8>) {
+    use mlsvm::util::rng::Rng;
+    let mut rng = Pcg64::seed_from(seed);
+    let n = 3 * n_per;
+    let mut m = Matrix::zeros(n, 4);
+    let mut ids = Vec::with_capacity(n);
+    for c in 0..3u8 {
+        for i in 0..n_per {
+            let row = m.row_mut(c as usize * n_per + i);
+            for (j, r) in row.iter_mut().enumerate() {
+                let center = if j == c as usize { 6.0 } else { 0.0 };
+                *r = (center + rng.normal()) as f32;
+            }
+            ids.push(c);
+        }
+    }
+    (m, ids)
+}
+
+#[test]
+fn trained_mlsvm_round_trips_bit_for_bit() {
+    let mut rng = Pcg64::seed_from(5);
+    let ds = two_gaussians(500, 150, 5, 3.5, &mut rng);
+    let model = MlsvmTrainer::new(quick_params(5)).train(&ds, &mut rng).unwrap();
+    let dir = tmp_dir("mlsvm_bits");
+    let path = dir.join("m.model");
+    save_artifact(&path, &ModelArtifact::Mlsvm(model.clone())).unwrap();
+    let ModelArtifact::Mlsvm(back) = load_artifact(&path).unwrap() else {
+        panic!("kind must round-trip");
+    };
+    for i in 0..ds.len() {
+        let a = model.model.decision(ds.points.row(i));
+        let b = back.model.decision(ds.points.row(i));
+        assert!(a == b, "row {i}: {a} vs {b} (must be bit-for-bit)");
+    }
+    assert_eq!(back.level_stats.len(), model.level_stats.len());
+    assert_eq!(back.depths, model.depths);
+    for (s, t) in model.level_stats.iter().zip(&back.level_stats) {
+        assert_eq!(s.levels, t.levels);
+        assert_eq!(s.train_size, t.train_size);
+        assert_eq!(s.solver.iterations, t.solver.iterations);
+        assert_eq!(s.cv_gmean, t.cv_gmean);
+    }
+}
+
+#[test]
+fn trained_multiclass_round_trips_and_serves() {
+    let (m, ids) = three_classes(100, 42);
+    let mut rng = Pcg64::seed_from(2);
+    let trainer = OneVsRestTrainer::new(quick_params(7));
+    let mc = trainer.train(&m, &ids, &[0, 1, 2], &mut rng).unwrap();
+    let dir = tmp_dir("mc_serve");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("survey", &ModelArtifact::Multiclass(mc.clone())).unwrap();
+    let back = reg.load("survey").unwrap();
+    let ModelArtifact::Multiclass(back_mc) = &back else {
+        panic!("kind must round-trip");
+    };
+    // Bit-for-bit argmax agreement on every training point.
+    for i in 0..m.rows() {
+        assert_eq!(mc.predict(m.row(i)), back_mc.predict(m.row(i)), "row {i}");
+    }
+    // And the engine's per-class argmax agrees with sequential predict.
+    let engine = Engine::new(
+        &back,
+        EngineConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            queue_cap: 256,
+        },
+    )
+    .unwrap();
+    let decisions = engine.predict_many(&m).unwrap();
+    let mut correct = 0usize;
+    for (i, d) in decisions.iter().enumerate() {
+        let Decision::Multiclass { class, scores } = d else {
+            panic!("multiclass decisions expected");
+        };
+        assert_eq!(*class, mc.predict(m.row(i)), "row {i}");
+        assert_eq!(scores.len(), 3);
+        if *class == Some(ids[i]) {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / ids.len() as f64;
+    assert!(acc > 0.9, "served multiclass acc={acc}");
+}
+
+#[test]
+fn concurrent_engine_matches_sequential_decisions() {
+    let (model, ds) = binary_fixture(31);
+    let engine = Engine::new(
+        &ModelArtifact::Svm(model.clone()),
+        EngineConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(500),
+            workers: 3,
+            queue_cap: 64,
+        },
+    )
+    .unwrap();
+    std::thread::scope(|s| {
+        let engine = &engine;
+        let model = &model;
+        let ds = &ds;
+        for t in 0..8 {
+            s.spawn(move || {
+                for r in 0..40 {
+                    let i = (t * 37 + r * 11) % ds.len();
+                    let d = engine
+                        .submit(ds.points.row(i))
+                        .unwrap()
+                        .wait_timeout(Duration::from_secs(20))
+                        .unwrap();
+                    let Decision::Binary { value, label } = d else {
+                        panic!("binary expected");
+                    };
+                    let want = model.decision(ds.points.row(i));
+                    assert!(
+                        (value - want).abs() <= 1e-6 * want.abs().max(1.0),
+                        "row {i}: {value} vs {want}"
+                    );
+                    assert_eq!(label, if value > 0.0 { 1 } else { -1 });
+                }
+            });
+        }
+    });
+    let st = engine.stats();
+    assert_eq!(st.completed, 8 * 40);
+    assert!(st.batches > 0);
+}
+
+#[test]
+fn http_server_serves_registry_model_end_to_end() {
+    let (model, ds) = binary_fixture(47);
+    let dir = tmp_dir("http_e2e");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("m1", &ModelArtifact::Svm(model.clone())).unwrap();
+    // Second model under a different gamma for the reload check.
+    let p2 = SvmParams {
+        kernel: KernelKind::Rbf { gamma: 1.5 },
+        ..Default::default()
+    };
+    let model2 = train(&ds.points, &ds.labels, &p2).unwrap();
+    reg.save("m2", &ModelArtifact::Svm(model2)).unwrap();
+
+    let engine = Engine::new(
+        &reg.load("m1").unwrap(),
+        EngineConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            queue_cap: 128,
+        },
+    )
+    .unwrap();
+    let state = Arc::new(ServeState {
+        engine,
+        registry: Some(Registry::open(&dir).unwrap()),
+        model_name: Mutex::new("m1".into()),
+    });
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+    let addr = server.addr();
+
+    // Predictions agree in sign with the in-process model.
+    for i in (0..ds.len()).step_by(29) {
+        let body: Vec<String> = ds.points.row(i).iter().map(|v| v.to_string()).collect();
+        let (code, resp) = http_request(&addr, "POST", "/predict", &body.join(",")).unwrap();
+        assert_eq!(code, 200, "{resp}");
+        let want = if model.decision(ds.points.row(i)) > 0.0 { 1 } else { -1 };
+        assert!(
+            resp.contains(&format!("\"label\":{want}")),
+            "row {i}: {resp}"
+        );
+    }
+    // Registry listing and stats.
+    let (code, resp) = http_request(&addr, "GET", "/models", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(resp.contains("\"m1\"") && resp.contains("\"m2\""), "{resp}");
+    let (code, resp) = http_request(&addr, "GET", "/stats", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(resp.contains("\"utilization\""), "{resp}");
+    // Hot reload to m2 (different decisions on at least one probe).
+    let (code, resp) = http_request(&addr, "POST", "/reload?model=m2", "").unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let (_, resp2) = http_request(&addr, "GET", "/models", "").unwrap();
+    assert!(resp2.contains("\"serving\":\"m2\""), "{resp2}");
+    // Unknown model reloads fail and leave the server answering.
+    let (code, _) = http_request(&addr, "POST", "/reload?model=missing", "").unwrap();
+    assert_eq!(code, 400);
+    let body: Vec<String> = ds.points.row(0).iter().map(|v| v.to_string()).collect();
+    let (code, _) = http_request(&addr, "POST", "/predict", &body.join(",")).unwrap();
+    assert_eq!(code, 200);
+}
+
+#[test]
+fn serve_cli_answers_http_from_a_registry_model() {
+    use std::io::BufRead;
+    let (model, ds) = binary_fixture(53);
+    let dir = tmp_dir("cli");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("cli-model", &ModelArtifact::Svm(model.clone())).unwrap();
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+        .args([
+            "serve",
+            "--registry",
+            dir.to_str().unwrap(),
+            "--model",
+            "cli-model",
+            "--addr",
+            "127.0.0.1:0",
+            "--max-seconds",
+            "120",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn mlsvm serve");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut banner = String::new();
+    reader.read_line(&mut banner).unwrap();
+    let addr_str = banner
+        .split("http://")
+        .nth(1)
+        .unwrap_or_else(|| panic!("no address in banner '{banner}'"))
+        .trim();
+    let addr: std::net::SocketAddr = addr_str.parse().expect("server address");
+
+    let (code, resp) = http_request(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let body: Vec<String> = ds.points.row(3).iter().map(|v| v.to_string()).collect();
+    let (code, resp) = http_request(&addr, "POST", "/predict", &body.join(",")).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let want = if model.decision(ds.points.row(3)) > 0.0 { 1 } else { -1 };
+    assert!(resp.contains(&format!("\"label\":{want}")), "{resp}");
+
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+#[test]
+fn legacy_train_output_loads_into_the_engine() {
+    // `mlsvm train` historically wrote bare SvmModel line files; the
+    // serving layer must accept them unchanged.
+    let (model, ds) = binary_fixture(61);
+    let dir = tmp_dir("legacy_engine");
+    let path = dir.join("old-format.model");
+    model.save(&path).unwrap();
+    let artifact = load_artifact(&path).unwrap();
+    assert!(matches!(artifact, ModelArtifact::Svm(_)));
+    let engine = Engine::new(&artifact, EngineConfig::default()).unwrap();
+    let d = engine.predict(ds.points.row(0)).unwrap();
+    let Decision::Binary { value, .. } = d else {
+        panic!("binary expected");
+    };
+    let want = model.decision(ds.points.row(0));
+    assert!((value - want).abs() <= 1e-6 * want.abs().max(1.0));
+}
