@@ -72,7 +72,8 @@ pub fn split_and_scale(ds: &Dataset, rng: &mut Pcg64) -> (Dataset, Dataset) {
 }
 
 /// Parse harness CLI flags shared by the tables:
-/// `--full` (paper sizes), `--sets a,b,c`, `--seed`, `--repeats`.
+/// `--full` (paper sizes), `--sets a,b,c`, `--seed`, `--repeats`,
+/// `--scale` (explicit size scale), `--threads 1,2,4` (pool sweep).
 pub struct HarnessOpts {
     /// 1.0 scale everywhere.
     pub full: bool,
@@ -82,6 +83,13 @@ pub struct HarnessOpts {
     pub seed: u64,
     /// Average over this many runs (paper: 20; default 1 for wall-clock).
     pub repeats: usize,
+    /// Explicit size scale (overrides per-set defaults where a harness
+    /// supports it).
+    #[allow(dead_code)] // only the thread-scaling harness reads these
+    pub scale: Option<f64>,
+    /// Pool thread counts to sweep (thread-scaling harnesses).
+    #[allow(dead_code)]
+    pub threads: Option<Vec<usize>>,
 }
 
 impl HarnessOpts {
@@ -93,6 +101,8 @@ impl HarnessOpts {
             only: None,
             seed: 42,
             repeats: 1,
+            scale: None,
+            threads: None,
         };
         let mut i = 0;
         while i < args.len() {
@@ -108,6 +118,21 @@ impl HarnessOpts {
                 }
                 "--repeats" if i + 1 < args.len() => {
                     o.repeats = args[i + 1].parse().unwrap_or(1).max(1);
+                    i += 1;
+                }
+                "--scale" if i + 1 < args.len() => {
+                    o.scale = args[i + 1].parse().ok();
+                    i += 1;
+                }
+                "--threads" if i + 1 < args.len() => {
+                    let list: Vec<usize> = args[i + 1]
+                        .split(',')
+                        .filter_map(|s| s.parse().ok())
+                        .filter(|&t| t >= 1)
+                        .collect();
+                    if !list.is_empty() {
+                        o.threads = Some(list);
+                    }
                     i += 1;
                 }
                 _ => {}

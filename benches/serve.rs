@@ -14,11 +14,13 @@
 
 use mlsvm::data::synth::two_gaussians;
 use mlsvm::serve::{
-    http_request, Engine, EngineConfig, ModelArtifact, Registry, ServeState, Server,
+    http_request, http_request_on, Engine, EngineConfig, ModelArtifact, Registry, ServeState,
+    Server,
 };
 use mlsvm::svm::kernel::KernelKind;
 use mlsvm::svm::smo::{train, SvmParams};
 use mlsvm::util::rng::Pcg64;
+use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -26,6 +28,7 @@ struct LoadResult {
     max_batch: usize,
     clients: usize,
     requests: usize,
+    keepalive: bool,
     seconds: f64,
     rps: f64,
     p50_ms: f64,
@@ -45,12 +48,15 @@ fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
 }
 
 /// Run one closed-loop load test against a fresh engine + server.
+/// `keepalive` keeps one connection per client for its whole run
+/// (HTTP/1.1 reuse); otherwise every request pays a fresh connect.
 fn run_load(
     artifact: &ModelArtifact,
     queries: &[Vec<f32>],
     max_batch: usize,
     clients: usize,
     requests_per_client: usize,
+    keepalive: bool,
 ) -> LoadResult {
     let engine = Engine::new(
         artifact,
@@ -75,14 +81,24 @@ fn run_load(
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 s.spawn(move || {
+                    let conn = keepalive.then(|| {
+                        let s = TcpStream::connect_timeout(&addr, Duration::from_secs(5))
+                            .expect("connect");
+                        s.set_nodelay(true).ok();
+                        s.set_read_timeout(Some(Duration::from_secs(30))).ok();
+                        s
+                    });
                     let mut lats = Vec::with_capacity(requests_per_client);
                     for r in 0..requests_per_client {
                         let q = &queries[(c * 131 + r * 17) % queries.len()];
                         let body: Vec<String> = q.iter().map(|v| v.to_string()).collect();
                         let body = body.join(",");
                         let t = Instant::now();
-                        let (code, resp) =
-                            http_request(&addr, "POST", "/predict", &body).expect("request");
+                        let (code, resp) = match &conn {
+                            Some(stream) => http_request_on(stream, "POST", "/predict", &body),
+                            None => http_request(&addr, "POST", "/predict", &body),
+                        }
+                        .expect("request");
                         assert_eq!(code, 200, "{resp}");
                         lats.push(t.elapsed().as_secs_f64());
                     }
@@ -103,6 +119,7 @@ fn run_load(
         max_batch,
         clients,
         requests: total,
+        keepalive,
         seconds,
         rps: total as f64 / seconds.max(1e-9),
         p50_ms: percentile_ms(&latencies, 0.50),
@@ -116,12 +133,14 @@ fn run_load(
 
 fn json_entry(r: &LoadResult) -> String {
     format!(
-        "    {{\"max_batch\": {}, \"clients\": {}, \"requests\": {}, \"seconds\": {:.3}, \
+        "    {{\"max_batch\": {}, \"clients\": {}, \"requests\": {}, \"keepalive\": {}, \
+         \"seconds\": {:.3}, \
          \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \
          \"utilization\": {:.4}, \"batches\": {}, \"deadline_flushes\": {}}}",
         r.max_batch,
         r.clients,
         r.requests,
+        r.keepalive,
         r.seconds,
         r.rps,
         r.p50_ms,
@@ -178,22 +197,36 @@ fn main() {
     // config that shows the deadline flush path.
     let mut results = Vec::new();
     println!(
-        "{:<10} {:>8} {:>9} {:>9} {:>9} {:>9} {:>11} {:>9}",
-        "max_batch", "clients", "rps", "p50 ms", "p95 ms", "p99 ms", "utilization", "batches"
+        "{:<10} {:>8} {:>6} {:>9} {:>9} {:>9} {:>9} {:>11} {:>9}",
+        "max_batch", "clients", "conn", "rps", "p50 ms", "p95 ms", "p99 ms", "utilization",
+        "batches"
     );
-    for max_batch in [1usize, 4, 8, 16] {
-        let r = run_load(&artifact, &queries, max_batch, clients, requests);
+    // Keep-alive sweep (the serving configuration), plus one
+    // connect-per-request row that shows what connection reuse buys.
+    for (max_batch, keepalive) in
+        [(1usize, true), (4, true), (8, true), (16, true), (8, false)]
+    {
+        let r = run_load(&artifact, &queries, max_batch, clients, requests, keepalive);
         println!(
-            "{:<10} {:>8} {:>9.0} {:>9.3} {:>9.3} {:>9.3} {:>11.3} {:>9}",
-            r.max_batch, r.clients, r.rps, r.p50_ms, r.p95_ms, r.p99_ms, r.utilization, r.batches
+            "{:<10} {:>8} {:>6} {:>9.0} {:>9.3} {:>9.3} {:>9.3} {:>11.3} {:>9}",
+            r.max_batch,
+            r.clients,
+            if r.keepalive { "reuse" } else { "fresh" },
+            r.rps,
+            r.p50_ms,
+            r.p95_ms,
+            r.p99_ms,
+            r.utilization,
+            r.batches
         );
         results.push(r);
     }
-    let trickle = run_load(&artifact, &queries, 32, 1, requests.min(50));
+    let trickle = run_load(&artifact, &queries, 32, 1, requests.min(50), true);
     println!(
-        "{:<10} {:>8} {:>9.0} {:>9.3} {:>9.3} {:>9.3} {:>11.3} {:>9}  (trickle: deadline path)",
+        "{:<10} {:>8} {:>6} {:>9.0} {:>9.3} {:>9.3} {:>9.3} {:>11.3} {:>9}  (trickle: deadline path)",
         trickle.max_batch,
         trickle.clients,
+        "reuse",
         trickle.rps,
         trickle.p50_ms,
         trickle.p95_ms,

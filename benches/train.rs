@@ -1,0 +1,254 @@
+//! End-to-end training pipeline bench with thread scaling.
+//!
+//! Trains MLWSVM on table-1 synthetic sets at 1, 2 and 4 pool threads,
+//! reporting total train wall-clock, the model-selection (UD) share, the
+//! 4-vs-1-thread speedup, and — the determinism gate — whether the
+//! selected `(C⁺, C⁻, γ)` and the reported G-means are **bit-identical**
+//! across thread counts for the fixed seed. Writes `BENCH_train.json`
+//! (checked in CI by `ci/check_bench.py --train`).
+//!
+//! ```bash
+//! cargo bench --bench train                       # testbed scale
+//! cargo bench --bench train -- --sets two --scale 1.0
+//! cargo bench --bench train -- --threads 1,2,4,8
+//! ```
+
+#[allow(dead_code)] // the shared harness exports more than this bench uses
+mod common;
+
+use common::{split_and_scale, HarnessOpts};
+use mlsvm::data::dataset::Dataset;
+use mlsvm::data::synth::uci::table1_specs;
+use mlsvm::mlsvm::{MlsvmParams, MlsvmTrainer};
+use mlsvm::util::pool;
+use mlsvm::util::rng::Pcg64;
+use mlsvm::util::timer::Timer;
+
+/// One training run at a fixed thread count.
+struct Run {
+    threads: usize,
+    seconds: f64,
+    modelsel_seconds: f64,
+    /// Winner parameters + quality, for the cross-thread-count identity
+    /// check (f64 bit patterns — "close" is not good enough here).
+    c_pos: f64,
+    c_neg: f64,
+    gamma: f64,
+    cv_gmeans: Vec<u64>,
+    test_gmean: f64,
+}
+
+fn train_once(train: &Dataset, test: &Dataset, seed: u64, threads: usize) -> Run {
+    pool::set_num_threads(threads);
+    let mut rng = Pcg64::seed_from(seed);
+    let t = Timer::start();
+    let model = MlsvmTrainer::new(MlsvmParams::default().with_seed(seed))
+        .train(train, &mut rng)
+        .expect("mlsvm train");
+    let seconds = t.secs();
+    let gamma = model.params.kernel.gamma().unwrap_or(f64::NAN);
+    Run {
+        threads,
+        seconds,
+        modelsel_seconds: model.modelsel_seconds(),
+        c_pos: model.params.c_pos,
+        c_neg: model.params.c_neg,
+        gamma,
+        cv_gmeans: model
+            .level_stats
+            .iter()
+            .filter_map(|s| s.cv_gmean.map(f64::to_bits))
+            .collect(),
+        test_gmean: mlsvm::metrics::evaluate(&model.model, test).gmean(),
+    }
+}
+
+/// Bit-level equality of everything model selection decided.
+fn identical(a: &Run, b: &Run) -> bool {
+    a.c_pos.to_bits() == b.c_pos.to_bits()
+        && a.c_neg.to_bits() == b.c_neg.to_bits()
+        && a.gamma.to_bits() == b.gamma.to_bits()
+        && a.cv_gmeans == b.cv_gmeans
+        && a.test_gmean.to_bits() == b.test_gmean.to_bits()
+}
+
+/// Render a finite f64 as a JSON number; non-finite values become `null`
+/// so the emitted file always parses (`NaN` is not JSON).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() {
+    let opts = HarnessOpts::parse();
+    let scale = opts.scale.unwrap_or(0.5);
+    let threads = opts.threads.unwrap_or_else(|| vec![1, 2, 4]);
+    let seed = opts.seed;
+    // Without --sets, a fast representative trio (balanced, nonlinear,
+    // imbalanced) rather than all ten table-1 sets.
+    let selected = |name: &str| match &opts.only {
+        None => matches!(name, "Twonorm" | "Ringnorm" | "Hypothyroid"),
+        Some(_) => opts.selected(name),
+    };
+    if threads.len() < 2 {
+        eprintln!(
+            "note: only one thread count requested — the cross-thread determinism \
+             check needs at least two and will be reported as null"
+        );
+    }
+
+    println!("== train pipeline bench: MLWSVM wall-clock vs pool threads ==\n");
+    println!(
+        "{:<14} {:>8} {:>8} {:>9} {:>9} {:>7} {:>7}",
+        "set", "n_train", "threads", "train s", "UD s", "UD%", "gmean"
+    );
+
+    let mut set_jsons: Vec<String> = Vec::new();
+    // None until at least one cross-thread comparison actually happened —
+    // a single-thread-count run must not report a vacuous "deterministic".
+    let mut all_identical: Option<bool> = None;
+    let (mut total_t1, mut total_tmax) = (0.0f64, 0.0f64);
+    let max_threads = *threads.iter().max().unwrap();
+
+    for spec in table1_specs() {
+        if !selected(spec.name) {
+            continue;
+        }
+        let mut rng = Pcg64::seed_from(seed);
+        let ds = spec.generate(scale, &mut rng);
+        let (train, test) = split_and_scale(&ds, &mut rng);
+
+        let runs: Vec<Run> = threads
+            .iter()
+            .map(|&t| train_once(&train, &test, seed ^ 0x7a11, t))
+            .collect();
+        pool::set_num_threads(0); // back to the default
+
+        let det: Option<bool> = if runs.len() >= 2 {
+            Some(runs.windows(2).all(|w| identical(&w[0], &w[1])))
+        } else {
+            None
+        };
+        if let Some(d) = det {
+            all_identical = Some(all_identical.unwrap_or(true) && d);
+        }
+        for r in &runs {
+            println!(
+                "{:<14} {:>8} {:>8} {:>9.2} {:>9.2} {:>6.1}% {:>7.3}",
+                spec.name,
+                train.len(),
+                r.threads,
+                r.seconds,
+                r.modelsel_seconds,
+                100.0 * r.modelsel_seconds / r.seconds.max(1e-9),
+                r.test_gmean
+            );
+        }
+        // Baseline = the smallest requested thread count (1 in the
+        // default sweep); speedup is null when the sweep has no contrast.
+        let min_threads = *threads.iter().min().unwrap();
+        let t1 = runs
+            .iter()
+            .find(|r| r.threads == min_threads)
+            .map(|r| r.seconds);
+        let tm = runs
+            .iter()
+            .find(|r| r.threads == max_threads)
+            .map(|r| r.seconds);
+        let speedup: Option<f64> = match (t1, tm) {
+            (Some(a), Some(b)) if min_threads != max_threads => Some(a / b.max(1e-9)),
+            _ => None,
+        };
+        if let (Some(a), Some(b)) = (t1, tm) {
+            total_t1 += a;
+            total_tmax += b;
+        }
+        println!(
+            "{:<14} speedup {}t vs {}t: {} | selection bit-identical: {}\n",
+            spec.name,
+            max_threads,
+            min_threads,
+            speedup
+                .map(|s| format!("{s:.2}x"))
+                .unwrap_or_else(|| "n/a".to_string()),
+            match det {
+                Some(true) => "yes",
+                Some(false) => "NO",
+                None => "n/a (single thread count)",
+            }
+        );
+
+        let run_entries: Vec<String> = runs
+            .iter()
+            .map(|r| {
+                format!(
+                    "      {{\"threads\": {}, \"seconds\": {:.4}, \"modelsel_seconds\": {:.4}, \
+                     \"modelsel_share\": {:.4}}}",
+                    r.threads,
+                    r.seconds,
+                    r.modelsel_seconds,
+                    r.modelsel_seconds / r.seconds.max(1e-9)
+                )
+            })
+            .collect();
+        let w = &runs[0];
+        let det_json = match det {
+            Some(d) => d.to_string(),
+            None => "null".to_string(),
+        };
+        set_jsons.push(format!(
+            "    {{\"name\": \"{}\", \"n_train\": {}, \"deterministic\": {det_json}, \
+             \"speedup\": {}, \"c_pos\": {}, \"c_neg\": {}, \"gamma\": {}, \
+             \"test_gmean\": {},\n      \"runs\": [\n{}\n      ]}}",
+            spec.name,
+            train.len(),
+            speedup.map(json_num).unwrap_or_else(|| "null".to_string()),
+            json_num(w.c_pos),
+            json_num(w.c_neg),
+            json_num(w.gamma),
+            json_num(w.test_gmean),
+            run_entries.join(",\n")
+        ));
+    }
+
+    let overall: Option<f64> = if threads.len() >= 2 && total_tmax > 0.0 {
+        Some(total_t1 / total_tmax)
+    } else {
+        None
+    };
+    println!(
+        "overall: {} end-to-end speedup at {} threads vs {} (sum over sets), \
+         selection bit-identical: {}",
+        overall
+            .map(|s| format!("{s:.2}x"))
+            .unwrap_or_else(|| "n/a".to_string()),
+        max_threads,
+        threads.iter().min().unwrap(),
+        match all_identical {
+            Some(true) => "yes",
+            Some(false) => "NO",
+            None => "n/a (single thread count)",
+        }
+    );
+
+    let overall_json = overall.map(json_num).unwrap_or_else(|| "null".to_string());
+    let det_json = match all_identical {
+        Some(d) => d.to_string(),
+        None => "null".to_string(),
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"train_pipeline\",\n  \"scale\": {}, \n  \"seed\": {seed},\n  \
+         \"max_threads\": {max_threads},\n  \"speedup\": {overall_json},\n  \
+         \"deterministic\": {det_json},\n  \"sets\": [\n{}\n  ]\n}}\n",
+        json_num(scale),
+        set_jsons.join(",\n")
+    );
+    if let Err(e) = std::fs::write("BENCH_train.json", &json) {
+        eprintln!("could not write BENCH_train.json: {e}");
+    } else {
+        println!("wrote BENCH_train.json");
+    }
+}

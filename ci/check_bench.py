@@ -16,9 +16,21 @@ of pinning CI red forever. The baseline is written on failing runs too —
 that is what makes the healing possible; a genuine regression still stays
 red for many runs (0.95^n must fall 30%), which is ample signal.
 
+A second mode checks the training-pipeline bench:
+
+  check_bench.py --train BENCH_train.json [--min-speedup 0]
+
+fails (exit 1) when any set's model selection was NOT bit-identical
+across thread counts (the hard determinism gate of the parallel
+training pipeline), and optionally when the end-to-end speedup at the
+highest thread count falls below --min-speedup (0 disables; shared CI
+runners make wall-clock gates flaky, so the speedup is reported rather
+than gated by default).
+
 Usage:
   check_bench.py <baseline.json> <current.json>
                  [--threshold 0.30] [--write-baseline <out.json>]
+  check_bench.py --train <BENCH_train.json> [--min-speedup 0]
 """
 
 import json
@@ -28,14 +40,66 @@ KEYS = ["batch_rows_per_s", "tiled_rows_per_s", "scalar_rows_per_s"]
 DECAY = 0.05
 
 
+def check_train(path: str, min_speedup: float) -> int:
+    with open(path) as f:
+        data = json.load(f)
+    failed = False
+    for entry in data.get("sets", []):
+        det = entry.get("deterministic")
+        if det is True:
+            verdict = "OK"
+        elif det is False:
+            verdict = "NON-DETERMINISTIC (thread count changed the winner)"
+            failed = True
+        else:
+            # null: the bench swept a single thread count — nothing was
+            # compared, so the gate cannot pass on this artifact.
+            verdict = "NOT COMPARED (single thread count)"
+            failed = True
+        sp = entry.get("speedup")
+        sp_txt = f"{sp:.2f}x" if isinstance(sp, (int, float)) else "n/a"
+        print(
+            f"{entry.get('name')}: speedup {sp_txt} "
+            f"(C+={entry.get('c_pos')} gamma={entry.get('gamma')}) {verdict}"
+        )
+    speedup = data.get("speedup")
+    threads = data.get("max_threads")
+    if isinstance(speedup, (int, float)):
+        note = ""
+        if min_speedup > 0 and speedup < min_speedup:
+            note = f" BELOW --min-speedup {min_speedup}"
+            failed = True
+        print(f"overall: {speedup:.2f}x at {threads} threads vs 1{note}")
+    if data.get("deterministic") is True:
+        print("determinism gate: ok (selection bit-identical across thread counts)")
+    else:
+        print("determinism gate: FAILED (diverged, or no cross-thread comparison ran)")
+        failed = True
+    return 1 if failed else 0
+
+
+def parse_flag_value(flag: str, default: float) -> float:
+    if flag not in sys.argv:
+        return default
+    idx = sys.argv.index(flag)
+    if idx + 1 >= len(sys.argv):
+        print(f"{flag} needs a numeric argument")
+        raise SystemExit(2)
+    try:
+        return float(sys.argv[idx + 1])
+    except ValueError:
+        print(f"{flag} needs a numeric argument, got '{sys.argv[idx + 1]}'")
+        raise SystemExit(2) from None
+
+
 def main() -> int:
+    if len(sys.argv) >= 3 and sys.argv[1] == "--train":
+        return check_train(sys.argv[2], parse_flag_value("--min-speedup", 0.0))
     if len(sys.argv) < 3:
         print(__doc__)
         return 2
     baseline_path, current_path = sys.argv[1], sys.argv[2]
-    threshold = 0.30
-    if "--threshold" in sys.argv:
-        threshold = float(sys.argv[sys.argv.index("--threshold") + 1])
+    threshold = parse_flag_value("--threshold", 0.30)
     write_path = None
     if "--write-baseline" in sys.argv:
         write_path = sys.argv[sys.argv.index("--write-baseline") + 1]

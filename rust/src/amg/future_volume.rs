@@ -9,31 +9,53 @@
 //! to relative edge weight. Nodes with large ϑ are prime seed candidates.
 
 use crate::graph::csr::CsrGraph;
+use crate::util::pool;
+
+/// Nodes per parallel task in the two passes below (each node is O(degree)
+/// work — k-NN graphs have small, even degrees, so large chunks amortize
+/// the scheduling).
+const CHUNK: usize = 512;
 
 /// Compute ϑ for every node. `free[j]` marks membership in F (donors);
 /// ϑ is *reported* for all nodes but only F-nodes donate volume.
 ///
 /// An isolated free node contributes nothing and keeps ϑ_i = v_i.
+///
+/// Runs as two data-parallel gather passes over [`crate::util::pool`]
+/// instead of the textbook donor *scatter*: pass 1 precomputes each free
+/// donor's per-unit-weight donation `v_j / Σ_k w_jk`, pass 2 gathers each
+/// node's ϑ from its own neighbor list. Because the graph is symmetric
+/// (`w_ij = w_ji`) and CSR rows are sorted by column, pass 2 accumulates
+/// exactly the same terms in exactly the same (ascending-j) order as the
+/// scatter loop did — the result is bit-identical to the sequential
+/// version at any thread count.
 pub fn future_volumes(graph: &CsrGraph, volumes: &[f64], free: &[bool]) -> Vec<f64> {
     let n = graph.n();
     debug_assert_eq!(volumes.len(), n);
     debug_assert_eq!(free.len(), n);
-    let mut theta: Vec<f64> = volumes.to_vec();
-    for j in 0..n {
+    // Pass 1: donation per unit of edge weight for every free donor
+    // (0 for held nodes and isolated donors — adding 0·w leaves ϑ's bits
+    // unchanged, volumes are non-negative).
+    let scale = pool::parallel_map(n, CHUNK, |j| {
         if !free[j] {
-            continue;
+            return 0.0;
         }
-        let (idx, w) = graph.row(j);
-        let total: f64 = w.iter().sum();
+        let total: f64 = graph.row(j).1.iter().sum();
         if total <= 0.0 {
-            continue;
+            0.0
+        } else {
+            volumes[j] / total
         }
-        let scale = volumes[j] / total;
-        for (&i, &wji) in idx.iter().zip(w) {
-            theta[i as usize] += scale * wji;
+    });
+    // Pass 2: gather ϑ_i = v_i + Σ_{j ∈ N(i)} scale_j · w_ij.
+    pool::parallel_map(n, CHUNK, |i| {
+        let (idx, w) = graph.row(i);
+        let mut theta = volumes[i];
+        for (&j, &wij) in idx.iter().zip(w) {
+            theta += scale[j as usize] * wij;
         }
-    }
-    theta
+        theta
+    })
 }
 
 /// Mean of ϑ restricted to the free set (Algorithm 1 line 2 uses the
@@ -101,6 +123,47 @@ mod tests {
         let g = CsrGraph::from_edges(3, &[(0, 1, 1.0)]).unwrap();
         let theta = future_volumes(&g, &[1.0, 1.0, 7.0], &[true; 3]);
         assert_eq!(theta[2], 7.0);
+    }
+
+    #[test]
+    fn gather_matches_reference_scatter_bitwise() {
+        // The textbook donor-scatter loop the parallel gather replaced.
+        fn scatter(graph: &CsrGraph, volumes: &[f64], free: &[bool]) -> Vec<f64> {
+            let mut theta: Vec<f64> = volumes.to_vec();
+            for j in 0..graph.n() {
+                if !free[j] {
+                    continue;
+                }
+                let (idx, w) = graph.row(j);
+                let total: f64 = w.iter().sum();
+                if total <= 0.0 {
+                    continue;
+                }
+                let scale = volumes[j] / total;
+                for (&i, &wji) in idx.iter().zip(w) {
+                    theta[i as usize] += scale * wji;
+                }
+            }
+            theta
+        }
+        use crate::util::rng::{Pcg64, Rng};
+        let mut rng = Pcg64::seed_from(21);
+        let n = 400;
+        let mut edges = Vec::new();
+        for i in 0..n as u32 {
+            for _ in 0..5 {
+                let j = rng.index(n) as u32;
+                if j != i {
+                    edges.push((i, j, 0.05 + rng.f64()));
+                }
+            }
+        }
+        let g = CsrGraph::from_edges(n, &edges).unwrap();
+        let volumes: Vec<f64> = (0..n).map(|_| 0.5 + rng.f64()).collect();
+        let free: Vec<bool> = (0..n).map(|i| i % 7 != 0).collect();
+        let want = scatter(&g, &volumes, &free);
+        let got = future_volumes(&g, &volumes, &free);
+        assert_eq!(want, got, "gather must be bit-identical to scatter");
     }
 
     #[test]

@@ -149,6 +149,38 @@ impl Hierarchy {
         Ok(Hierarchy { levels })
     }
 
+    /// Build two independent hierarchies concurrently (the C⁺ and C⁻
+    /// coarsening phases of the multilevel trainer: separate point sets,
+    /// seeds and kNN graphs — nothing is shared). One build runs on a
+    /// spawned thread, the other on the caller's thread; with a single
+    /// worker configured the builds run back-to-back instead. Each build
+    /// is fully deterministic given its params, so the result is identical
+    /// either way.
+    ///
+    /// Error precedence matches the sequential order: `a`'s error is
+    /// reported first when both fail.
+    ///
+    /// Both builds keep their internal pool parallelism (neither runs on
+    /// a pool worker), so the coarsening phase may briefly run up to
+    /// 2 × `num_threads()` busy threads. That bounded oversubscription is
+    /// deliberate: the two builds rarely finish together (class sizes
+    /// differ), and serializing each build's interior would idle most
+    /// cores for the tail of the longer one.
+    pub fn build_pair(
+        a: (Matrix, HierarchyParams),
+        b: (Matrix, HierarchyParams),
+    ) -> Result<(Hierarchy, Hierarchy)> {
+        if crate::util::pool::num_threads() <= 1 {
+            return Ok((Hierarchy::build(a.0, a.1)?, Hierarchy::build(b.0, b.1)?));
+        }
+        std::thread::scope(|s| {
+            let ha = s.spawn(move || Hierarchy::build(a.0, a.1));
+            let hb = Hierarchy::build(b.0, b.1);
+            let ha = ha.join().expect("hierarchy build thread panicked");
+            Ok((ha?, hb?))
+        })
+    }
+
     /// Number of levels (≥ 1).
     pub fn depth(&self) -> usize {
         self.levels.len()
@@ -256,6 +288,28 @@ mod tests {
         let one = h.expand_to_finer(l, &[0]);
         assert!(!one.is_empty());
         assert!(one.len() < fine.len());
+    }
+
+    #[test]
+    fn pair_build_matches_sequential_builds() {
+        let pa = clustered(500, 5, 36);
+        let pb = clustered(420, 5, 37);
+        let mut params_b = small_params();
+        params_b.seed = 99;
+        let (ha, hb) =
+            Hierarchy::build_pair((pa.clone(), small_params()), (pb.clone(), params_b)).unwrap();
+        let sa = Hierarchy::build(pa, small_params()).unwrap();
+        let sb = Hierarchy::build(pb, params_b).unwrap();
+        assert_eq!(ha.depth(), sa.depth());
+        assert_eq!(hb.depth(), sb.depth());
+        for (l, m) in ha.levels.iter().zip(&sa.levels) {
+            assert_eq!(l.len(), m.len());
+            assert_eq!(l.volumes, m.volumes);
+        }
+        for (l, m) in hb.levels.iter().zip(&sb.levels) {
+            assert_eq!(l.len(), m.len());
+            assert_eq!(l.volumes, m.volumes);
+        }
     }
 
     #[test]

@@ -67,7 +67,8 @@ impl Table {
 /// iterations and kernel-cache hit rate alongside the quality columns.
 pub fn level_stats_table(stats: &[LevelStat]) -> Table {
     let mut t = Table::new(&[
-        "lvl(+,-)", "n", "nSV", "iters", "cache h/m", "hit%", "warm", "ud", "secs", "cv-gmean",
+        "lvl(+,-)", "n", "nSV", "iters", "cache h/m", "hit%", "warm", "ud", "secs", "ud-secs",
+        "cv-gmean",
     ]);
     for s in stats {
         t.row(vec![
@@ -80,6 +81,11 @@ pub fn level_stats_table(stats: &[LevelStat]) -> Table {
             if s.solver.warm_started { "y" } else { "-" }.to_string(),
             if s.ud_used { "y" } else { "-" }.to_string(),
             fmt_secs(s.seconds),
+            if s.ud_used {
+                fmt_secs(s.ud_seconds)
+            } else {
+                "-".to_string()
+            },
             s.cv_gmean
                 .map(|g| format!("{g:.3}"))
                 .unwrap_or_else(|| "-".to_string()),
@@ -136,6 +142,7 @@ mod tests {
             n_sv: 40,
             ud_used: true,
             seconds: 1.25,
+            ud_seconds: 0.75,
             cv_gmean: Some(0.9123),
             solver: crate::svm::smo::TrainStats {
                 iterations: 1234,

@@ -10,6 +10,11 @@ use crate::data::matrix::Matrix;
 use crate::error::Result;
 use crate::graph::csr::CsrGraph;
 use crate::knn::{build_knn, KnnBackend, NeighborLists};
+use crate::util::pool;
+
+/// Nodes per parallel task when weighting edges (one `sqrt` + division per
+/// edge; k-NN lists are short, so chunks stay large).
+const WEIGHT_CHUNK: usize = 1024;
 
 /// Weight for a squared distance: 1 / max(dist, eps).
 #[inline]
@@ -18,12 +23,35 @@ pub fn inverse_distance_weight(sqdist: f64) -> f64 {
 }
 
 /// Turn k-NN lists into a symmetric inverse-distance weighted graph.
+///
+/// Edge weighting is data-parallel over [`crate::util::pool`]: each node's
+/// slice of the flat edge array is written by exactly one worker at the
+/// offset prefix-summed from the list lengths, so the edge order — and
+/// hence the graph — is identical to the sequential loop at any thread
+/// count.
 pub fn from_neighbor_lists(n: usize, lists: &NeighborLists) -> Result<CsrGraph> {
-    let mut edges = Vec::with_capacity(lists.iter().map(|l| l.len()).sum());
-    for (i, l) in lists.iter().enumerate() {
-        for nb in l {
-            edges.push((i as u32, nb.index, inverse_distance_weight(nb.sqdist)));
-        }
+    let mut offsets = Vec::with_capacity(lists.len() + 1);
+    offsets.push(0usize);
+    for l in lists.iter() {
+        offsets.push(offsets.last().unwrap() + l.len());
+    }
+    let total = *offsets.last().unwrap();
+    let mut edges = vec![(0u32, 0u32, 0f64); total];
+    {
+        // Disjoint per-node windows (the `pool::parallel_map` idiom).
+        struct SyncPtr(*mut (u32, u32, f64));
+        unsafe impl Sync for SyncPtr {}
+        let ptr = SyncPtr(edges.as_mut_ptr());
+        let ptr = &ptr;
+        pool::parallel_for(lists.len(), WEIGHT_CHUNK, |i| {
+            let l = &lists[i];
+            // SAFETY: windows [offsets[i], offsets[i+1]) partition
+            // 0..total; node i's window is written only by this task.
+            let out = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(offsets[i]), l.len()) };
+            for (o, nb) in out.iter_mut().zip(l) {
+                *o = (i as u32, nb.index, inverse_distance_weight(nb.sqdist));
+            }
+        });
     }
     CsrGraph::from_edges(n, &edges)
 }

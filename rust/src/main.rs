@@ -45,6 +45,15 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Apply the `--threads` flag (0 keeps the `MLSVM_THREADS`/auto default).
+fn apply_threads(args: &Args) -> Result<()> {
+    let t = args.get_usize("threads")?;
+    if t > 0 {
+        mlsvm::util::pool::set_num_threads(t);
+    }
+    Ok(())
+}
+
 fn load_any(path: &str) -> Result<Dataset> {
     if path.ends_with(".csv") {
         mlsvm::data::csv::load(path, mlsvm::data::csv::CsvOptions::default())
@@ -89,9 +98,11 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         .opt("qdt", "Q_dt: max |data_train| for UD refinement", Some("1200"))
         .opt("knn", "k of the k-NN graph", Some("10"))
         .opt("seed", "random seed", Some("0"))
+        .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
         .flag("no-volumes", "ignore AMG volumes as instance weights")
         .flag("quiet", "suppress per-level log")
         .parse_from(argv)?;
+    apply_threads(&args)?;
     let data_path = args
         .get("data")
         .ok_or_else(|| Error::Usage("--data is required".into()))?
@@ -146,9 +157,11 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
     let args = Args::new("mlsvm predict", "predict with a trained model")
         .opt("model", "model file (legacy line file or registry format)", Some("model.mlsvm"))
         .opt("data", "file to predict (.svm/.csv; labels used for metrics)", None)
+        .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
         .flag("pjrt", "serve through the PJRT decision artifact router")
         .flag("engine", "serve through the concurrent batching engine")
         .parse_from(argv)?;
+    apply_threads(&args)?;
     let data_path = args
         .get("data")
         .ok_or_else(|| Error::Usage("--data is required".into()))?;
@@ -224,7 +237,9 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .opt("workers", "engine worker threads (0 = auto)", Some("0"))
         .opt("queue-cap", "bounded queue capacity (backpressure)", Some("1024"))
         .opt("max-seconds", "exit after this long (0 = run forever)", Some("0"))
+        .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
         .parse_from(argv)?;
+    apply_threads(&args)?;
     let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
     let name = args.get("model").unwrap().to_string();
     let artifact = reg.load(&name).map_err(|e| {

@@ -8,6 +8,7 @@ use crate::modelsel::search::{ud_search_with_ratio, UdSearchConfig, UdSearchOutc
 use crate::svm::model::SvmModel;
 use crate::svm::smo::{train_weighted_warm, TrainStats};
 use crate::util::rng::Pcg64;
+use crate::util::timer::Timer;
 
 /// Output of the coarsest-level learning.
 #[derive(Debug)]
@@ -19,6 +20,9 @@ pub struct CoarsestResult {
     pub outcome: UdSearchOutcome,
     /// Solver statistics of the final (full coarsest set) training.
     pub stats: TrainStats,
+    /// Wall-clock seconds of the UD search (the model-selection share of
+    /// this step).
+    pub ud_seconds: f64,
 }
 
 /// Algorithm 2: UD-tuned training on the coarsest training set.
@@ -30,7 +34,9 @@ pub fn train_coarsest(
     ratio: Option<f64>,
     rng: &mut Pcg64,
 ) -> Result<CoarsestResult> {
+    let t_ud = Timer::start();
     let outcome = ud_search_with_ratio(ds, use_volumes, ud, None, ratio, rng)?;
+    let ud_seconds = t_ud.secs();
     let weights = volume_weights(ds, use_volumes);
     let (model, stats) = train_weighted_warm(
         &ds.points,
@@ -43,6 +49,7 @@ pub fn train_coarsest(
         model,
         outcome,
         stats,
+        ud_seconds,
     })
 }
 

@@ -43,6 +43,10 @@ pub struct LevelStat {
     pub ud_used: bool,
     /// Wall-clock seconds spent at this step.
     pub seconds: f64,
+    /// Wall-clock seconds of UD model selection within this step (0 when
+    /// parameters were inherited) — the model-selection share the
+    /// thread-scaling bench reports comes from summing these.
+    pub ud_seconds: f64,
     /// CV G-mean reported by UD (if it ran).
     pub cv_gmean: Option<f64>,
     /// Solver statistics of the final training at this step (SMO
@@ -67,6 +71,15 @@ pub struct MlsvmModel {
     pub depths: (usize, usize),
 }
 
+impl MlsvmModel {
+    /// Total wall-clock spent in UD model selection across all levels
+    /// (the thread-scaling bench reports this as the model-selection
+    /// share of training).
+    pub fn modelsel_seconds(&self) -> f64 {
+        self.level_stats.iter().map(|s| s.ud_seconds).sum()
+    }
+}
+
 /// The multilevel trainer.
 pub struct MlsvmTrainer {
     /// Framework parameters.
@@ -89,13 +102,19 @@ impl MlsvmTrainer {
         }
         let (dpos, _, dneg, _) = train.split_classes();
 
-        // ---- Coarsening phase (per class) ----
+        // ---- Coarsening phase (per class, concurrent) ----
+        // The two hierarchies share nothing (separate kNN graphs, seeds,
+        // coarsening), so they build in parallel; each build is
+        // deterministic given its seed, so results match the sequential
+        // path exactly.
         let mut hp_params = p.hierarchy;
         hp_params.seed = p.hierarchy.seed ^ 0x0b57;
         let mut hn_params = p.hierarchy;
         hn_params.seed = p.hierarchy.seed ^ 0x1c68;
-        let hpos = Hierarchy::build(dpos.points.clone(), hp_params)?;
-        let hneg = Hierarchy::build(dneg.points.clone(), hn_params)?;
+        let (hpos, hneg) = Hierarchy::build_pair(
+            (dpos.points.clone(), hp_params),
+            (dneg.points.clone(), hn_params),
+        )?;
         let (dp, dn) = (hpos.depth(), hneg.depth());
 
         let keep_pos_full = dpos.len() <= p.keep_small_class_full;
@@ -126,6 +145,7 @@ impl MlsvmTrainer {
             n_sv: model.n_sv(),
             ud_used: true,
             seconds: t0.secs(),
+            ud_seconds: coarsest.ud_seconds,
             cv_gmean: Some(coarsest.outcome.gmean),
             solver: coarsest.stats,
         });
@@ -147,6 +167,7 @@ impl MlsvmTrainer {
                 )));
             }
             let use_ud = ds.len() < p.qdt && ds.len() >= p.min_ud_size;
+            let t_ud = Timer::start();
             let cv_gmean = if use_ud {
                 // Lines 8–9: UD around the inherited parameters.
                 let out = ud_search_with_ratio(
@@ -164,6 +185,7 @@ impl MlsvmTrainer {
                 // Lines 11–14: inherit parameters unchanged.
                 None
             };
+            let ud_seconds = if use_ud { t_ud.secs() } else { 0.0 };
             let weights = volume_weights(&ds, p.use_volumes);
             // Warm-start: seed this level's SMO from the parent model's α
             // mapped through the aggregate expansion (same fixed point,
@@ -189,6 +211,7 @@ impl MlsvmTrainer {
                 n_sv: model.n_sv(),
                 ud_used: use_ud,
                 seconds: t.secs(),
+                ud_seconds,
                 cv_gmean,
                 solver,
             });

@@ -7,6 +7,10 @@
 //! is **parameter inheritance**: at finer levels the search is re-centered
 //! on the parameters inherited from the coarser level, and skipped
 //! entirely once the level's training set exceeds `Q_dt`.
+//!
+//! The candidate grid is evaluated in parallel over [`crate::util::pool`]
+//! with a deterministic reduction and per-fold shared distance caches —
+//! see [`search`] for the determinism contract.
 
 pub mod search;
 pub mod ud;

@@ -8,18 +8,37 @@
 //! stratified k-fold WSVM cross validation.
 //!
 //! WSVM class weights follow the standard cost-sensitive coupling
-//! `C⁺ = C · n⁻/n⁺`, `C⁻ = C` (the paper tunes (C⁺, C⁻, γ); coupling C⁺
+//! `C⁺ = C · n⁻/n⁺` , `C⁻ = C` (the paper tunes (C⁺, C⁻, γ); coupling C⁺
 //! to the imbalance ratio reduces the search to the (C, γ) plane — the
 //! `weight_ratio_grid` option restores the third degree of freedom by
 //! additionally sweeping a multiplier on the coupled ratio).
+//!
+//! ## Parallel execution, deterministic result
+//!
+//! The candidate × ratio grid of each stage is dispatched over
+//! [`crate::util::pool`] — every trial training is independent. Results
+//! are **bit-identical at any thread count**: the stratified fold split is
+//! drawn from the caller's RNG once per search (before any trial runs, so
+//! the RNG stream does not depend on scheduling), each trial is a pure
+//! function of its `(C, γ, ratio)` triple over those shared folds, and the
+//! winner is reduced from the per-trial scores in ascending trial order
+//! (best by G-mean with the SV-sparsity tie-break; the lowest trial index
+//! wins exact ties).
+//!
+//! Sharing the folds also unlocks the biggest single saving: all RBF
+//! candidates on one fold share the same pairwise squared distances, so a
+//! per-fold [`DistanceCache`] is computed once and every trial's kernel
+//! rows reduce to the cheap `exp(-γ·d²)` pass.
 
 use crate::data::dataset::Dataset;
 use crate::data::split::KFold;
 use crate::error::Result;
 use crate::metrics::Metrics;
 use crate::modelsel::ud::{scale_to, ud_points};
+use crate::svm::dist::DistanceCache;
 use crate::svm::kernel::KernelKind;
-use crate::svm::smo::{train_weighted, SvmParams};
+use crate::svm::smo::{train_weighted, train_weighted_cached, SvmParams};
+use crate::util::pool;
 use crate::util::rng::Pcg64;
 
 /// How C⁺ relates to C⁻ during the search.
@@ -83,49 +102,84 @@ pub struct UdSearchOutcome {
     pub center: (f64, f64),
     /// Number of (train, fold) evaluations executed.
     pub evaluations: usize,
+    /// CV G-mean of every trial in design order (stage 1 then stage 2,
+    /// candidates × ratio grid). Bit-identical at any thread count — the
+    /// determinism tests compare these directly.
+    pub trial_gmeans: Vec<f64>,
 }
 
-/// Evaluate one candidate by stratified k-fold CV.
-/// Returns (mean G-mean, mean SV fraction) — the SV fraction is the
-/// tie-breaker: among near-equal candidates the sparser model generalizes
-/// better and keeps the multilevel SV-neighborhood expansion small.
-fn cv_gmean(
+/// One fold's immutable evaluation context, shared by every trial of a
+/// search: the stratified (train, validation) pair, the fold's instance
+/// weights, and the precomputed squared-distance geometry all RBF
+/// candidates reuse.
+struct FoldEval {
+    tr: Dataset,
+    va: Dataset,
+    w: Option<Vec<f64>>,
+    dists: Option<DistanceCache>,
+}
+
+/// Draw the stratified fold split once (the only RNG consumer of the
+/// search — hoisting it is what makes parallel trials deterministic) and
+/// precompute each fold's shared context. Degenerate folds (a class
+/// missing from the training side, empty validation) are dropped here,
+/// exactly as the sequential CV loop skipped them.
+fn build_folds(
     ds: &Dataset,
-    weights: Option<&[f64]>,
-    params: &SvmParams,
+    volumes_as_weights: bool,
     folds: usize,
     rng: &mut Pcg64,
-    evals: &mut usize,
-) -> (f64, f64) {
+) -> Vec<FoldEval> {
     let kf = KFold::new(ds, folds, rng);
-    let mut total = 0.0;
-    let mut sv_frac = 0.0;
-    let mut used = 0usize;
+    let mut out = Vec::with_capacity(kf.k());
     for f in 0..kf.k() {
         let (tr, va) = kf.fold(ds, f);
         if tr.n_pos() == 0 || tr.n_neg() == 0 || va.is_empty() {
             continue;
         }
-        let w = weights.map(|_| tr.volumes.clone());
+        let w = volumes_as_weights.then(|| tr.volumes.clone());
+        let dists = DistanceCache::fits(tr.len()).then(|| DistanceCache::new(&tr.points));
+        out.push(FoldEval { tr, va, w, dists });
+    }
+    out
+}
+
+/// Evaluate one candidate over the shared folds.
+/// Returns (mean G-mean, mean SV fraction, successful trainings) — the SV
+/// fraction is the tie-breaker: among near-equal candidates the sparser
+/// model generalizes better and keeps the multilevel SV-neighborhood
+/// expansion small.
+fn cv_gmean(folds: &[FoldEval], params: &SvmParams) -> (f64, f64, usize) {
+    let mut total = 0.0;
+    let mut sv_frac = 0.0;
+    let mut used = 0usize;
+    let mut evals = 0usize;
+    for fe in folds {
         // Trial trainings are bounded: a pathological (C, γ) candidate
         // must not stall the whole search — an early-stopped model scores
         // poorly and is discarded by the design anyway.
         let mut trial = *params;
-        trial.max_iter = (50 * tr.len()).clamp(10_000, 300_000);
-        let model = match train_weighted(&tr.points, &tr.labels, &trial, w.as_deref()) {
+        trial.max_iter = (50 * fe.tr.len()).clamp(10_000, 300_000);
+        let trained = match &fe.dists {
+            Some(d) => {
+                train_weighted_cached(&fe.tr.points, &fe.tr.labels, &trial, fe.w.as_deref(), d)
+            }
+            None => train_weighted(&fe.tr.points, &fe.tr.labels, &trial, fe.w.as_deref()),
+        };
+        let model = match trained {
             Ok(m) => m,
             Err(_) => continue,
         };
-        *evals += 1;
-        let m: Metrics = crate::metrics::evaluate(&model, &va);
+        evals += 1;
+        let m: Metrics = crate::metrics::evaluate(&model, &fe.va);
         total += m.gmean();
-        sv_frac += model.n_sv() as f64 / tr.len().max(1) as f64;
+        sv_frac += model.n_sv() as f64 / fe.tr.len().max(1) as f64;
         used += 1;
     }
     if used == 0 {
-        (0.0, 1.0)
+        (0.0, 1.0, evals)
     } else {
-        (total / used as f64, sv_frac / used as f64)
+        (total / used as f64, sv_frac / used as f64, evals)
     }
 }
 
@@ -205,13 +259,9 @@ pub fn ud_search_with_ratio(
         (ds.n_pos().max(1) as f64, ds.n_neg().max(1) as f64)
     };
     let imbalance_ratio = ratio_override.unwrap_or(mass_neg / mass_pos);
-    let weights: Option<Vec<f64>> = if volumes_as_weights {
-        // normalize volumes to mean 1 so C keeps its usual scale
-        let mean: f64 = ds.volumes.iter().sum::<f64>() / ds.len() as f64;
-        Some(ds.volumes.iter().map(|v| v / mean).collect())
-    } else {
-        None
-    };
+    // Fold split + per-fold shared context (distance caches) — drawn once,
+    // before any trial, so the RNG stream is schedule-independent.
+    let folds = build_folds(ds, volumes_as_weights, cfg.folds, rng);
 
     let full_center = (
         0.5 * (cfg.log2c.0 + cfg.log2c.1),
@@ -235,29 +285,51 @@ pub fn ud_search_with_ratio(
     let mut evals = 0usize;
     // (gmean, sv_frac, center, ratio)
     let mut best = (f64::NEG_INFINITY, 1.0f64, c1, 1.0f64);
+    // One stage: flatten the candidate × ratio grid into an ordered trial
+    // list, score every trial on the pool (each is an independent pure
+    // function of its triple over the shared folds), then reduce the
+    // winner sequentially in ascending trial order — the same argmax the
+    // sequential loop computed, so the result cannot depend on how the
+    // trials were scheduled.
     let stage = |pts: &[(f64, f64)],
-                     best: &mut (f64, f64, (f64, f64), f64),
-                     rng: &mut Pcg64,
-                     evals: &mut usize| {
-        for &(lc, lg) in pts {
-            for &rm in &cfg.weight_ratio_grid {
-                let params = resolve_params(cfg, lc, lg, rm, imbalance_ratio);
-                let (g, sv) = cv_gmean(ds, weights.as_deref(), &params, cfg.folds, rng, evals);
-                let better = g > best.0 + GMEAN_TIE
-                    || ((g - best.0).abs() <= GMEAN_TIE && sv < best.1);
-                if better {
-                    *best = (g.max(best.0), sv, (lc, lg), rm);
-                }
+                 best: &mut (f64, f64, (f64, f64), f64),
+                 evals: &mut usize,
+                 trace: &mut Vec<f64>| {
+        let trials: Vec<(f64, f64, f64)> = pts
+            .iter()
+            .flat_map(|&(lc, lg)| cfg.weight_ratio_grid.iter().map(move |&rm| (lc, lg, rm)))
+            .collect();
+        #[derive(Clone, Default)]
+        struct TrialScore {
+            gmean: f64,
+            sv_frac: f64,
+            evals: usize,
+        }
+        let scores = pool::parallel_map(trials.len(), 1, |t| {
+            let (lc, lg, rm) = trials[t];
+            let params = resolve_params(cfg, lc, lg, rm, imbalance_ratio);
+            let (gmean, sv_frac, evals) = cv_gmean(&folds, &params);
+            TrialScore { gmean, sv_frac, evals }
+        });
+        for (t, s) in scores.iter().enumerate() {
+            *evals += s.evals;
+            trace.push(s.gmean);
+            let better = s.gmean > best.0 + GMEAN_TIE
+                || ((s.gmean - best.0).abs() <= GMEAN_TIE && s.sv_frac < best.1);
+            if better {
+                let (lc, lg, rm) = trials[t];
+                *best = (s.gmean.max(best.0), s.sv_frac, (lc, lg), rm);
             }
         }
     };
 
+    let mut trial_gmeans = Vec::new();
     let s1 = scale_to(&ud_points(cfg.stage1_points), c1, r1);
-    stage(&s1, &mut best, rng, &mut evals);
+    stage(&s1, &mut best, &mut evals, &mut trial_gmeans);
     // Stage 2: contract around the winner.
     let r2 = (r1.0 * 0.35, r1.1 * 0.35);
     let s2 = scale_to(&ud_points(cfg.stage2_points), best.2, r2);
-    stage(&s2, &mut best, rng, &mut evals);
+    stage(&s2, &mut best, &mut evals, &mut trial_gmeans);
 
     let (gmean, _, centre, ratio) = best;
     let params = resolve_params(cfg, centre.0, centre.1, ratio, imbalance_ratio);
@@ -266,6 +338,7 @@ pub fn ud_search_with_ratio(
         gmean: gmean.max(0.0),
         center: centre,
         evaluations: evals,
+        trial_gmeans,
     })
 }
 
@@ -291,6 +364,8 @@ mod tests {
         assert!(out.gmean > 0.9, "gmean={}", out.gmean);
         assert!(out.evaluations > 0);
         assert!(out.params.c_pos > out.params.c_neg, "balanced coupling");
+        // one recorded G-mean per trial: (stage1 + stage2) × ratio grid
+        assert_eq!(out.trial_gmeans.len(), 5 + 5);
     }
 
     #[test]

@@ -29,5 +29,5 @@ pub mod stats;
 
 pub use engine::{BatchQueue, Decision, Engine, EngineConfig, FlushPolicy, FlushReason, Ticket};
 pub use registry::{load_artifact, save_artifact, ModelArtifact, Registry};
-pub use server::{http_request, ServeState, Server};
+pub use server::{http_request, http_request_on, ServeState, Server};
 pub use stats::{BatchStats, EngineStats, LatencyHistogram, StatsSnapshot};

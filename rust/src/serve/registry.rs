@@ -103,7 +103,7 @@ fn write_mlsvm_body<W: Write>(w: &mut W, m: &MlsvmModel) -> Result<()> {
             .unwrap_or_else(|| "-".to_string());
         writeln!(
             w,
-            "level {} {} train {} sv {} ud {} secs {} cv {cv} iters {} gap {} hits {} misses {} warm {}",
+            "level {} {} train {} sv {} ud {} secs {} cv {cv} iters {} gap {} hits {} misses {} warm {} udsecs {}",
             s.levels.0,
             s.levels.1,
             s.train_size,
@@ -114,7 +114,8 @@ fn write_mlsvm_body<W: Write>(w: &mut W, m: &MlsvmModel) -> Result<()> {
             s.solver.gap,
             s.solver.cache_hits,
             s.solver.cache_misses,
-            s.solver.warm_started as u8
+            s.solver.warm_started as u8,
+            s.ud_seconds
         )?;
     }
     writeln!(w, "model")?;
@@ -223,14 +224,22 @@ fn read_mlsvm_body<'b>(lines: &mut impl Iterator<Item = &'b str>) -> Result<Mlsv
     for k in 0..nlevels {
         let line = next(lines, "level")?;
         let t: Vec<&str> = line.split_whitespace().collect();
+        // `udsecs` was appended after the v1 release: lines without it
+        // (legacy files) still load, with the field defaulting to 0.
         let stat = match t.as_slice() {
-            ["level", lp, ln, "train", n, "sv", sv, "ud", ud, "secs", secs, "cv", cv, "iters", it, "gap", gap, "hits", h, "misses", mi, "warm", wa] => {
+            ["level", lp, ln, "train", n, "sv", sv, "ud", ud, "secs", secs, "cv", cv, "iters", it, "gap", gap, "hits", h, "misses", mi, "warm", wa, rest @ ..] => {
+                let ud_seconds = match rest {
+                    [] => 0.0,
+                    ["udsecs", us] => num(us, "ud seconds")?,
+                    _ => return Err(Error::invalid(format!("bad level line {k}: '{line}'"))),
+                };
                 LevelStat {
                     levels: (num(lp, "level")?, num(ln, "level")?),
                     train_size: num(n, "train size")?,
                     n_sv: num(sv, "sv count")?,
                     ud_used: flag(ud, "ud flag")?,
                     seconds: num(secs, "seconds")?,
+                    ud_seconds,
                     cv_gmean: if *cv == "-" {
                         None
                     } else {
@@ -472,6 +481,7 @@ mod tests {
                     n_sv: 17,
                     ud_used: true,
                     seconds: 0.125,
+                    ud_seconds: 0.0625,
                     cv_gmean: Some(0.913),
                     solver: TrainStats {
                         iterations: 321,
@@ -487,6 +497,7 @@ mod tests {
                     n_sv: 31,
                     ud_used: false,
                     seconds: 0.5,
+                    ud_seconds: 0.0,
                     cv_gmean: None,
                     solver: TrainStats {
                         iterations: 77,
@@ -540,7 +551,9 @@ mod tests {
         assert_eq!(back.level_stats.len(), 2);
         assert_eq!(back.level_stats[0].levels, (2, 3));
         assert_eq!(back.level_stats[0].cv_gmean, Some(0.913));
+        assert_eq!(back.level_stats[0].ud_seconds, 0.0625);
         assert_eq!(back.level_stats[1].cv_gmean, None);
+        assert_eq!(back.level_stats[1].ud_seconds, 0.0);
         assert!(back.level_stats[1].solver.warm_started);
         assert_eq!(back.level_stats[1].solver.cache_hits, 40);
         assert_eq!(back.params.c_pos, 4.2);
@@ -612,6 +625,36 @@ mod tests {
             panic!("kind must round-trip")
         };
         assert_eq!(back.jobs[0].error.as_deref(), Some("unknown failure"));
+    }
+
+    #[test]
+    fn level_lines_without_udsecs_still_load() {
+        // Files written before the `udsecs` field existed must keep
+        // loading, with the new field defaulting to 0.
+        let dir = tmp_dir("pre_udsecs");
+        let m = tiny_mlsvm(0.45);
+        let path = dir.join("m.model");
+        save_artifact(&path, &ModelArtifact::Mlsvm(m.clone())).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stripped: String = text
+            .lines()
+            .map(|l| {
+                let l = match l.find(" udsecs ") {
+                    Some(cut) if l.starts_with("level ") => &l[..cut],
+                    _ => l,
+                };
+                format!("{l}\n")
+            })
+            .collect();
+        std::fs::write(&path, stripped).unwrap();
+        let ModelArtifact::Mlsvm(back) = load_artifact(&path).unwrap() else {
+            panic!("kind must round-trip")
+        };
+        assert_eq!(back.level_stats.len(), 2);
+        assert!(back.level_stats.iter().all(|s| s.ud_seconds == 0.0));
+        for x in probes() {
+            assert_eq!(m.model.decision(&x), back.model.decision(&x));
+        }
     }
 
     #[test]

@@ -1,8 +1,16 @@
 //! A minimal hand-rolled HTTP/1.1-over-TCP front end for the serving
 //! engine (std `TcpListener`; the crate is dependency-free, so no hyper).
 //!
-//! One accept-loop thread; each connection is handled on its own thread
-//! (parse one request, answer, close — keep-alive is a ROADMAP item).
+//! One accept-loop thread; each connection is handled on its own thread.
+//! Connections are **keep-alive by default** (HTTP/1.1 semantics): the
+//! handler loops request → response on one socket until the client sends
+//! `Connection: close`, speaks HTTP/1.0 without `keep-alive`, goes idle
+//! past [`KEEPALIVE_IDLE`], or exhausts [`MAX_REQUESTS_PER_CONN`]. The
+//! PR 2 loadgen showed connect cost dominating p50 at small batches —
+//! reusing the connection removes it. Pipelining (sending the next
+//! request before the previous response) is not supported; requests must
+//! be sequential on a connection.
+//!
 //! Endpoints:
 //!
 //! | method | path             | body                     | answer |
@@ -38,6 +46,15 @@ const MAX_HEAD: u64 = 64 * 1024;
 /// Maximum concurrent connection threads; excess connections are
 /// answered 503 by the accept loop (load shedding).
 const MAX_CONNS: usize = 256;
+
+/// How long a kept-alive connection may sit idle between requests before
+/// the server closes it (frees the connection thread for the next
+/// client).
+const KEEPALIVE_IDLE: Duration = Duration::from_secs(10);
+
+/// Requests served on one connection before the server closes it anyway
+/// (bounds how long a single client can pin a connection permit).
+const MAX_REQUESTS_PER_CONN: usize = 10_000;
 
 /// Everything a connection handler needs: the engine, the registry to
 /// reload from (optional), and the name of the currently served model.
@@ -161,6 +178,10 @@ struct HttpRequest {
     path: String,
     query: String,
     body: String,
+    /// Whether the connection should stay open after this exchange
+    /// (HTTP/1.1 default, overridden by a `Connection` header; HTTP/1.0
+    /// defaults to close).
+    keep_alive: bool,
 }
 
 fn read_request(stream: &TcpStream) -> std::result::Result<HttpRequest, &'static str> {
@@ -176,6 +197,8 @@ fn read_request(stream: &TcpStream) -> std::result::Result<HttpRequest, &'static
         Some((p, q)) => (p.to_string(), q.to_string()),
         None => (target.to_string(), String::new()),
     };
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    let mut keep_alive = !version.eq_ignore_ascii_case("HTTP/1.0");
     let mut content_len = 0usize;
     let mut chunked = false;
     loop {
@@ -195,6 +218,13 @@ fn read_request(stream: &TcpStream) -> std::result::Result<HttpRequest, &'static
                 content_len = v.trim().parse().map_err(|_| "bad content-length")?;
             } else if k.eq_ignore_ascii_case("transfer-encoding") {
                 chunked = !v.trim().eq_ignore_ascii_case("identity");
+            } else if k.eq_ignore_ascii_case("connection") {
+                let v = v.trim();
+                if v.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if v.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
             }
         }
     }
@@ -224,14 +254,22 @@ fn read_request(stream: &TcpStream) -> std::result::Result<HttpRequest, &'static
         path,
         query,
         body,
+        keep_alive,
     })
 }
 
-fn write_response(stream: &TcpStream, status: &str, content_type: &str, payload: &str) {
+fn write_response(
+    stream: &TcpStream,
+    status: &str,
+    content_type: &str,
+    payload: &str,
+    keep_alive: bool,
+) {
     let mut w = stream;
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     let _ = write!(
         w,
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n{payload}",
         payload.len()
     );
     let _ = w.flush();
@@ -240,19 +278,37 @@ fn write_response(stream: &TcpStream, status: &str, content_type: &str, payload:
 fn handle_connection(stream: TcpStream, state: &ServeState) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
     let _ = stream.set_nodelay(true);
-    match read_request(&stream) {
-        Ok(req) => {
-            let (status, content_type, payload) = route(state, &req);
-            write_response(&stream, status, content_type, &payload);
+    for served in 0..MAX_REQUESTS_PER_CONN {
+        if served == 1 {
+            // Between keep-alive requests the client may idle; close the
+            // connection (and release its permit) after a shorter wait
+            // than the in-request read timeout.
+            let _ = stream.set_read_timeout(Some(KEEPALIVE_IDLE));
         }
-        Err(msg) => {
-            if msg != "empty request" {
-                write_response(
-                    &stream,
-                    "400 Bad Request",
-                    "application/json",
-                    &error_json(msg),
-                );
+        match read_request(&stream) {
+            Ok(req) => {
+                let keep = req.keep_alive && served + 1 < MAX_REQUESTS_PER_CONN;
+                let (status, content_type, payload) = route(state, &req);
+                write_response(&stream, status, content_type, &payload, keep);
+                if !keep {
+                    break;
+                }
+            }
+            Err(msg) => {
+                // Timeouts/EOF between requests surface as "empty
+                // request": close quietly. A malformed request gets a 400
+                // and also closes — after a parse failure the stream
+                // position is unreliable, so resyncing is unsafe.
+                if msg != "empty request" {
+                    write_response(
+                        &stream,
+                        "400 Bad Request",
+                        "application/json",
+                        &error_json(msg),
+                        false,
+                    );
+                }
+                break;
             }
         }
     }
@@ -274,6 +330,7 @@ fn shed_connection(stream: &TcpStream) {
         "503 Service Unavailable",
         "application/json",
         &error_json("server at connection capacity"),
+        false,
     );
     let _ = stream.shutdown(std::net::Shutdown::Write);
     let mut sink = [0u8; 4096];
@@ -482,7 +539,8 @@ fn route(state: &ServeState, req: &HttpRequest) -> (&'static str, &'static str, 
 // ---------------------------------------------------------------------------
 
 /// Issue one HTTP/1.1 request against `addr` and return
-/// `(status_code, body)`. Opens a fresh connection per call.
+/// `(status_code, body)`. Opens a fresh connection per call (and asks the
+/// server to close it) — see [`http_request_on`] for connection reuse.
 pub fn http_request(
     addr: &SocketAddr,
     method: &str,
@@ -504,7 +562,34 @@ pub fn http_request(
         )?;
         w.flush()?;
     }
-    let mut reader = BufReader::new(&stream);
+    read_response(&stream)
+}
+
+/// Issue one HTTP/1.1 request on an already-open connection and read one
+/// response (keep-alive client: the server leaves the socket open, so the
+/// next call reuses it and skips the connect cost). Requests must be
+/// sequential — write the next one only after this returns.
+pub fn http_request_on(
+    stream: &TcpStream,
+    method: &str,
+    target: &str,
+    body: &str,
+) -> Result<(u16, String)> {
+    {
+        let mut w = stream;
+        write!(
+            w,
+            "{method} {target} HTTP/1.1\r\nHost: keepalive\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )?;
+        w.flush()?;
+    }
+    read_response(stream)
+}
+
+/// Read one `Content-Length`-framed response off `stream`.
+fn read_response(stream: &TcpStream) -> Result<(u16, String)> {
+    let mut reader = BufReader::new(stream);
     let mut status_line = String::new();
     reader.read_line(&mut status_line)?;
     let code: u16 = status_line
@@ -612,6 +697,75 @@ mod tests {
         assert_eq!(code, 503);
         let (code, _) = http_request(&addr, "POST", "/reload?model=x", "").unwrap();
         assert_eq!(code, 400);
+    }
+
+    #[test]
+    fn keep_alive_serves_many_requests_on_one_connection() {
+        let (server, _state) = start_server();
+        let addr = server.addr();
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        // Several exchanges on the same socket: predicts and a stats read.
+        for i in 0..5 {
+            let (code, body) = http_request_on(&stream, "POST", "/predict", "0.9, 0.1").unwrap();
+            assert_eq!(code, 200, "request {i}: {body}");
+            assert!(body.contains("\"label\":1"), "request {i}: {body}");
+        }
+        let (code, body) = http_request_on(&stream, "GET", "/stats", "").unwrap();
+        assert_eq!(code, 200, "{body}");
+        assert!(body.contains("\"completed\":"), "{body}");
+    }
+
+    #[test]
+    fn connection_close_is_honored() {
+        let (server, _state) = start_server();
+        let addr = server.addr();
+        // The one-shot client sends `Connection: close`; after the
+        // response the server must close (EOF on the next read).
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        {
+            let mut w = &stream;
+            let body = "0.9 0.1";
+            write!(
+                w,
+                "POST /predict HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                body.len()
+            )
+            .unwrap();
+            w.flush().unwrap();
+        }
+        let (code, _) = read_response(&stream).unwrap();
+        assert_eq!(code, 200);
+        let mut buf = [0u8; 16];
+        let n = Read::read(&mut (&stream), &mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "server must close after Connection: close");
+    }
+
+    #[test]
+    fn http10_without_keepalive_closes() {
+        let (server, _state) = start_server();
+        let addr = server.addr();
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        {
+            let mut w = &stream;
+            write!(w, "GET /healthz HTTP/1.0\r\nHost: t\r\n\r\n").unwrap();
+            w.flush().unwrap();
+        }
+        let (code, body) = read_response(&stream).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "ok\n");
+        let mut buf = [0u8; 16];
+        let n = Read::read(&mut (&stream), &mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "HTTP/1.0 without keep-alive must close");
     }
 
     #[test]

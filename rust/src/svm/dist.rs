@@ -1,0 +1,147 @@
+//! Shared pairwise squared-distance cache for RBF model selection.
+//!
+//! Every RBF candidate evaluated on one CV fold needs the same Gram
+//! *geometry*: the pairwise squared Euclidean distances of the fold's
+//! training points. Only the bandwidth γ differs between candidates, and
+//! γ enters through the cheap `exp(-γ·d²)` pass. The UD search therefore
+//! computes `d²` once per fold with [`DistanceCache::new`] and layers it
+//! under [`KernelKind::Rbf`] via
+//! [`RustRowBackend::with_distances`](crate::svm::kernel::RustRowBackend::with_distances),
+//! turning every subsequent `(C, γ, ratio)` trial's kernel-row fill into a
+//! transcendental-only pass.
+//!
+//! Entries are stored exactly as the tiled kernel micro-kernel's pass 1
+//! produces them (`f32` of the norm-identity `‖a‖² + ‖b‖² − 2a·b`, clamped
+//! at 0), so cache-backed rows match the tiled direct path bit-for-bit.
+//! The fill parallelizes over rows through [`crate::util::pool`]; each row
+//! is written by exactly one worker, so the result is identical at any
+//! thread count.
+
+use crate::data::matrix::{dot, Matrix};
+use crate::util::pool;
+
+/// Dense row-major `n × n` matrix of pairwise squared distances.
+pub struct DistanceCache {
+    n: usize,
+    d2: Vec<f32>,
+}
+
+/// Rows per parallel task when filling the cache (rows are O(n·d) each, so
+/// small chunks balance fine).
+const FILL_CHUNK: usize = 8;
+
+impl DistanceCache {
+    /// Largest point count the cache will materialize (`MAX_POINTS² × 4`
+    /// bytes ≈ 16 MiB). Model selection runs on level training sets
+    /// bounded by `Q_dt` (~1200 in the paper), far below this; callers on
+    /// bigger sets should check [`DistanceCache::fits`] and fall back to
+    /// direct evaluation.
+    pub const MAX_POINTS: usize = 2048;
+
+    /// Whether a set of `n` points is small enough to cache.
+    pub fn fits(n: usize) -> bool {
+        n <= Self::MAX_POINTS
+    }
+
+    /// Compute all pairwise squared distances of `points` (parallel over
+    /// rows, deterministic at any thread count).
+    pub fn new(points: &Matrix) -> DistanceCache {
+        let n = points.rows();
+        let norms = points.row_sqnorms();
+        let mut d2 = vec![0.0f32; n * n];
+        {
+            // Disjoint per-row windows (the same idiom as
+            // `pool::parallel_map`): row i is written only by the worker
+            // that drew index i.
+            struct SyncPtr(*mut f32);
+            unsafe impl Sync for SyncPtr {}
+            let ptr = SyncPtr(d2.as_mut_ptr());
+            let ptr = &ptr;
+            pool::parallel_for(n, FILL_CHUNK, |i| {
+                let a = points.row(i);
+                let na = norms[i];
+                // SAFETY: rows partition 0..n*n; window i is in-bounds and
+                // touched by exactly one task.
+                let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * n), n) };
+                for (j, out) in row.iter_mut().enumerate() {
+                    let v = (na + norms[j] - 2.0 * dot(a, points.row(j)) as f64).max(0.0);
+                    *out = v as f32;
+                }
+            });
+        }
+        DistanceCache { n, d2 }
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when built over zero points.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Squared distances of point `i` to every point (length `len()`).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.d2[i * self.n..(i + 1) * self.n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::sqdist;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn random_points(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.set(i, j, rng.normal() as f32);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn entries_match_direct_sqdist() {
+        let m = random_points(60, 7, 3);
+        let c = DistanceCache::new(&m);
+        assert_eq!(c.len(), 60);
+        for i in 0..60 {
+            let row = c.row(i);
+            for j in 0..60 {
+                let want = sqdist(m.row(i), m.row(j));
+                assert!(
+                    (row[j] as f64 - want).abs() <= 1e-4 * want.max(1.0),
+                    "d2[{i}][{j}] = {} vs {want}",
+                    row[j]
+                );
+            }
+            assert!(row[i].abs() < 1e-5, "diagonal must be ~0, got {}", row[i]);
+        }
+    }
+
+    #[test]
+    fn fill_is_thread_count_invariant() {
+        let _guard = pool::TEST_OVERRIDE_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let m = random_points(97, 5, 9);
+        pool::set_num_threads(1);
+        let serial = DistanceCache::new(&m);
+        pool::set_num_threads(4);
+        let parallel = DistanceCache::new(&m);
+        pool::set_num_threads(0);
+        assert_eq!(serial.d2, parallel.d2, "cache fill must be bit-identical");
+    }
+
+    #[test]
+    fn fits_respects_cap() {
+        assert!(DistanceCache::fits(DistanceCache::MAX_POINTS));
+        assert!(!DistanceCache::fits(DistanceCache::MAX_POINTS + 1));
+    }
+}

@@ -11,6 +11,7 @@
 //! [`crate::runtime::rbf`] (L1/L2 of the three-layer stack).
 
 use crate::data::matrix::{dot, sqdist, Matrix};
+use crate::svm::dist::DistanceCache;
 use crate::util::pool;
 
 /// Column-tile width of the blocked kernel micro-kernel: kernel rows are
@@ -204,6 +205,10 @@ pub struct RustRowBackend<'a> {
     points: &'a Matrix,
     kind: KernelKind,
     norms: Vec<f64>,
+    /// Optional shared squared-distance cache: when present, RBF rows skip
+    /// the O(n·d) geometry pass and run only the `exp` pass over cached
+    /// `d²` (model selection layers one cache under every candidate γ).
+    dists: Option<&'a DistanceCache>,
 }
 
 impl<'a> RustRowBackend<'a> {
@@ -213,6 +218,28 @@ impl<'a> RustRowBackend<'a> {
             points,
             kind,
             norms: points.row_sqnorms(),
+            dists: None,
+        }
+    }
+
+    /// Like [`RustRowBackend::new`], but layered over a precomputed
+    /// [`DistanceCache`] of the same points. Only [`KernelKind::Rbf`]
+    /// consults the cache (γ is a pure transform of `d²`); other kernels
+    /// evaluate directly. Panics if the cache size disagrees with the
+    /// point count.
+    pub fn with_distances(points: &'a Matrix, kind: KernelKind, dists: &'a DistanceCache) -> Self {
+        assert_eq!(
+            dists.len(),
+            points.rows(),
+            "with_distances: cache over {} points, matrix has {} rows",
+            dists.len(),
+            points.rows()
+        );
+        RustRowBackend {
+            points,
+            kind,
+            norms: points.row_sqnorms(),
+            dists: Some(dists),
         }
     }
 
@@ -239,13 +266,20 @@ impl<'a> RustRowBackend<'a> {
                 let orow = &mut out[k * n..(k + 1) * n];
                 match self.kind {
                     KernelKind::Rbf { gamma } => {
-                        let na = self.norms[i];
-                        // pass 1: squared distances via the norm identity
-                        for j in t0..t1 {
-                            let d2 = (na + self.norms[j]
-                                - 2.0 * dot(a, self.points.row(j)) as f64)
-                                .max(0.0);
-                            orow[j] = d2 as f32;
+                        // pass 1: squared distances — copied from the
+                        // shared cache when present (identical values: the
+                        // cache stores exactly this pass's output), else
+                        // via the norm identity
+                        if let Some(c) = self.dists {
+                            orow[t0..t1].copy_from_slice(&c.row(i)[t0..t1]);
+                        } else {
+                            let na = self.norms[i];
+                            for j in t0..t1 {
+                                let d2 = (na + self.norms[j]
+                                    - 2.0 * dot(a, self.points.row(j)) as f64)
+                                    .max(0.0);
+                                orow[j] = d2 as f32;
+                            }
                         }
                         // pass 2: hoisted exp over the tile
                         for v in &mut orow[t0..t1] {
@@ -343,6 +377,12 @@ impl RowBackend for RustRowBackend<'_> {
         let a = self.points.row(i);
         match self.kind {
             KernelKind::Rbf { gamma } => {
+                if let Some(c) = self.dists {
+                    for (o, &d2) in out.iter_mut().zip(c.row(i)) {
+                        *o = (-gamma * d2 as f64).exp() as f32;
+                    }
+                    return;
+                }
                 let na = self.norms[i];
                 for j in 0..self.points.rows() {
                     let d2 = (na + self.norms[j] - 2.0 * dot(a, self.points.row(j)) as f64)
@@ -464,6 +504,34 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn distance_cached_rows_match_direct_rows() {
+        let n = KERNEL_TILE + 37;
+        let m = random_points(n, 6, 77);
+        let kind = KernelKind::Rbf { gamma: 0.6 };
+        let cache = crate::svm::dist::DistanceCache::new(&m);
+        let direct = RustRowBackend::new(&m, kind);
+        let cached = RustRowBackend::with_distances(&m, kind, &cache);
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        for i in [0usize, n / 3, n - 1] {
+            direct.fill_row(i, &mut a);
+            cached.fill_row(i, &mut b);
+            for j in 0..n {
+                assert!(
+                    (a[j] - b[j]).abs() < 1e-5,
+                    "K[{i}][{j}]: direct {} vs cached {}",
+                    a[j],
+                    b[j]
+                );
+            }
+            // The tiled batch path goes through the same cache pass.
+            cached.fill_rows_batch(&[i], &mut b);
+            direct.fill_row_tiled(i, &mut a);
+            assert_eq!(a, b, "cached tile pass must equal tiled pass 1 output");
         }
     }
 

@@ -6,6 +6,8 @@
 //!   row evaluation (pure rust, or the PJRT AOT artifact via
 //!   [`crate::runtime`]);
 //! * [`cache`] — an LRU kernel-row cache (LibSVM's `Cache`);
+//! * [`dist`] — a shared pairwise squared-distance cache that model
+//!   selection layers under the RBF kernel (γ trials reuse the geometry);
 //! * [`smo`] — C-SVC dual SMO solver with second-order working-set
 //!   selection (WSS2, Fan–Chen–Lin 2005), shrinking, and per-class
 //!   penalties C⁺ / C⁻ (the WSVM of Eq. 2);
@@ -13,10 +15,12 @@
 //!   decision function and prediction.
 
 pub mod cache;
+pub mod dist;
 pub mod kernel;
 pub mod model;
 pub mod smo;
 
+pub use dist::DistanceCache;
 pub use kernel::{Kernel, KernelKind, LinearKernel, RbfKernel, RowBackend, KERNEL_TILE};
 pub use model::SvmModel;
 pub use smo::{train, train_weighted, train_weighted_warm, SvmParams, TrainStats};

@@ -599,6 +599,24 @@ pub fn train_weighted_warm(
     Ok((model, stats))
 }
 
+/// Like [`train_weighted`], but with the kernel geometry served from a
+/// shared [`DistanceCache`](crate::svm::dist::DistanceCache) (model
+/// selection computes `d²` once per CV fold; every `(C, γ)` trial then
+/// pays only the `exp` pass). The cache must cover exactly `points`.
+pub fn train_weighted_cached(
+    points: &Matrix,
+    labels: &[i8],
+    params: &SvmParams,
+    weights: Option<&[f64]>,
+    dists: &crate::svm::dist::DistanceCache,
+) -> Result<SvmModel> {
+    let backend = RustRowBackend::with_distances(points, params.kernel, dists);
+    let res = solve_warm(&backend, labels, params, weights, None)?;
+    Ok(SvmModel::from_solution(
+        points, labels, &res.alpha, res.rho, params,
+    ))
+}
+
 /// Train an unweighted SVM (C⁺ = C⁻ = params.c_pos = params.c_neg).
 pub fn train(points: &Matrix, labels: &[i8], params: &SvmParams) -> Result<SvmModel> {
     train_weighted(points, labels, params, None)

@@ -8,13 +8,23 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
+/// Runtime override of the worker count; 0 means "no override" (use the
+/// memoized default). Set through [`set_num_threads`] (the CLI `--threads`
+/// flag and the thread-scaling benches).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
 /// Number of worker threads to use for parallel sections.
 ///
-/// Respects `MLSVM_THREADS` if set, otherwise
-/// `std::thread::available_parallelism`. Resolved once per process (the
-/// batched kernel-row path queries this on every batch, so the env/sysfs
-/// lookup is memoized).
+/// Resolution order: a [`set_num_threads`] override if one is active,
+/// else `MLSVM_THREADS` if set, else
+/// `std::thread::available_parallelism`. The env/sysfs lookup is memoized
+/// once per process (the batched kernel-row path queries this on every
+/// batch); the override is a cheap atomic load.
 pub fn num_threads() -> usize {
+    let forced = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if forced > 0 {
+        return forced;
+    }
     static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
     *N.get_or_init(|| {
         if let Ok(v) = std::env::var("MLSVM_THREADS") {
@@ -28,17 +38,44 @@ pub fn num_threads() -> usize {
     })
 }
 
+/// Override the worker count at runtime (`0` clears the override and
+/// returns to the `MLSVM_THREADS`/`available_parallelism` default).
+///
+/// Every parallel section in the crate is deterministic with respect to
+/// the thread count (disjoint per-index writes, deterministic
+/// reductions), so changing this affects wall-clock only — never results.
+/// Used by `mlsvm --threads` and the thread-scaling benches.
+pub fn set_num_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Serializes unit tests that mutate the global thread override (readers
+/// are unaffected — results are thread-count invariant — but two mutating
+/// tests interleaving would trip each other's assertions).
+#[cfg(test)]
+pub(crate) static TEST_OVERRIDE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+thread_local! {
+    /// True on pool worker threads. Nested `parallel_for` calls (e.g. the
+    /// batched kernel-row fill inside a parallel UD trial) degrade to
+    /// sequential execution instead of spawning `threads²` workers — the
+    /// outer loop already saturates the cores. Results are unaffected:
+    /// every parallel section is thread-count invariant.
+    static IN_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
 /// Run `f(i)` for every `i` in `0..n`, potentially in parallel.
 ///
 /// `f` must be `Sync` (it is shared by reference across workers). Work is
 /// distributed dynamically with an atomic chunk counter so uneven
-/// iterations (e.g. per-row kNN searches) balance well.
+/// iterations (e.g. per-row kNN searches) balance well. When called from
+/// inside another pool section, runs sequentially (no nested spawning).
 pub fn parallel_for<F>(n: usize, chunk: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
     let workers = num_threads().min(n.max(1));
-    if workers <= 1 || n <= chunk {
+    if workers <= 1 || n <= chunk || IN_WORKER.with(|c| c.get()) {
         for i in 0..n {
             f(i);
         }
@@ -50,14 +87,17 @@ where
         for _ in 0..workers {
             let counter = Arc::clone(&counter);
             let f = &f;
-            s.spawn(move || loop {
-                let start = counter.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + chunk).min(n);
-                for i in start..end {
-                    f(i);
+            s.spawn(move || {
+                IN_WORKER.with(|c| c.set(true));
+                loop {
+                    let start = counter.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        f(i);
+                    }
                 }
             });
         }
@@ -140,6 +180,21 @@ mod tests {
         parallel_for(0, 4, |_| panic!("must not be called"));
         let v: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(v.is_empty());
+    }
+
+    #[test]
+    fn thread_override_wins_and_clears() {
+        let _guard = TEST_OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_num_threads(0);
+        let default = num_threads();
+        assert!(default >= 1);
+        set_num_threads(3);
+        assert_eq!(num_threads(), 3);
+        // overridden counts still compute correct results
+        let out = parallel_map(100, 4, |i| i + 1);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i + 1));
+        set_num_threads(0);
+        assert_eq!(num_threads(), default);
     }
 
     #[test]

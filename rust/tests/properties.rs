@@ -472,3 +472,169 @@ fn kfold_is_always_a_partition() {
         },
     );
 }
+
+#[test]
+fn distance_cached_rbf_rows_match_direct_eval() {
+    // DistanceCache-backed RBF rows must agree with pointwise
+    // KernelKind::Rbf evaluation for random point sets and bandwidths
+    // (the cache stores f32 squared distances, hence the slightly wider
+    // tolerance than the direct-path contract).
+    check(
+        Config {
+            cases: 24,
+            seed: 0xD1,
+            max_shrinks: 0,
+        },
+        |rng| {
+            let n = 2 + rng.index(2 * KERNEL_TILE);
+            let d = 1 + rng.index(10);
+            let gamma = 0.05 + rng.f64() * 1.5;
+            (n, d, gamma, rng.next_u64())
+        },
+        |_| vec![],
+        |&(n, d, gamma, seed)| {
+            let mut rng = Pcg64::seed_from(seed);
+            let mut m = Matrix::zeros(n, d);
+            for i in 0..n {
+                for j in 0..d {
+                    // modest scale keeps the f32-dot rounding of both
+                    // paths inside the tolerance contract
+                    m.set(i, j, (rng.normal() * 0.25) as f32);
+                }
+            }
+            let kind = KernelKind::Rbf { gamma };
+            let cache = mlsvm::svm::dist::DistanceCache::new(&m);
+            let backend = RustRowBackend::with_distances(&m, kind, &cache);
+            let k = kind.build();
+            let n_rows = n.min(6);
+            let idxs: Vec<usize> = (0..n_rows).map(|r| r * n / n_rows.max(1)).collect();
+            let mut out = vec![0.0f32; idxs.len() * n];
+            backend.fill_rows_batch(&idxs, &mut out);
+            let mut row = vec![0.0f32; n];
+            for (r, &i) in idxs.iter().enumerate() {
+                backend.fill_row(i, &mut row);
+                for j in 0..n {
+                    let want = k.eval(m.row(i), m.row(j)) as f32;
+                    let batched = out[r * n + j];
+                    if (batched - want).abs() > 1e-5 * want.abs().max(1.0) {
+                        eprintln!("n={n} d={d} gamma={gamma} K[{i}][{j}]: {batched} vs {want}");
+                        return false;
+                    }
+                    if (row[j] - want).abs() > 1e-5 * want.abs().max(1.0) {
+                        eprintln!("fill_row n={n} d={d} K[{i}][{j}]: {} vs {want}", row[j]);
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn parallel_search_and_training_are_thread_count_invariant() {
+    // The tentpole determinism gate: the UD search and the whole
+    // multilevel training pipeline must produce bit-identical results at
+    // any pool thread count for a fixed seed. This test is the only
+    // thread-override mutator in this binary (readers are unaffected).
+    use mlsvm::amg::hierarchy::HierarchyParams;
+    use mlsvm::mlsvm::{MlsvmParams, MlsvmTrainer};
+    use mlsvm::modelsel::search::{ud_search, UdSearchConfig, UdSearchOutcome};
+    use mlsvm::util::pool;
+
+    let mut rng = Pcg64::seed_from(0xbeef);
+    let ds = mlsvm::data::synth::two_gaussians(260, 120, 4, 3.0, &mut rng);
+
+    let cfg = UdSearchConfig {
+        stage1_points: 9,
+        stage2_points: 5,
+        folds: 3,
+        weight_ratio_grid: vec![0.5, 1.0, 2.0],
+        ..Default::default()
+    };
+    let run_search = |threads: usize| -> UdSearchOutcome {
+        pool::set_num_threads(threads);
+        let mut r = Pcg64::seed_from(7);
+        let out = ud_search(&ds, false, &cfg, None, &mut r).unwrap();
+        pool::set_num_threads(0);
+        out
+    };
+    let serial = run_search(1);
+    let parallel = run_search(4);
+    // Identical winner: parameters, score, center, work accounting.
+    assert_eq!(
+        serial.params.c_pos.to_bits(),
+        parallel.params.c_pos.to_bits(),
+        "C+ must be bit-identical: {} vs {}",
+        serial.params.c_pos,
+        parallel.params.c_pos
+    );
+    assert_eq!(serial.params.c_neg.to_bits(), parallel.params.c_neg.to_bits());
+    assert_eq!(
+        serial.params.kernel.gamma().map(f64::to_bits),
+        parallel.params.kernel.gamma().map(f64::to_bits)
+    );
+    assert_eq!(serial.gmean.to_bits(), parallel.gmean.to_bits());
+    assert_eq!(serial.center, parallel.center);
+    assert_eq!(serial.evaluations, parallel.evaluations);
+    // Identical per-trial G-means, in design order.
+    assert_eq!(serial.trial_gmeans.len(), (9 + 5) * 3);
+    let bits = |o: &UdSearchOutcome| -> Vec<u64> {
+        o.trial_gmeans.iter().map(|g| g.to_bits()).collect()
+    };
+    assert_eq!(bits(&serial), bits(&parallel), "per-trial G-means diverged");
+
+    // Whole pipeline: concurrent hierarchy builds, parallel UD at every
+    // eligible level, parallel kernel fills in refinement.
+    let params = MlsvmParams {
+        hierarchy: HierarchyParams {
+            coarsest_size: 60,
+            ..Default::default()
+        },
+        qdt: 400,
+        ud: UdSearchConfig {
+            stage1_points: 5,
+            stage2_points: 5,
+            folds: 2,
+            ..Default::default()
+        },
+        keep_small_class_full: 120,
+        ..Default::default()
+    }
+    .with_seed(5);
+    let train_at = |threads: usize| {
+        pool::set_num_threads(threads);
+        let mut r = Pcg64::seed_from(11);
+        let m = MlsvmTrainer::new(params.clone()).train(&ds, &mut r).unwrap();
+        pool::set_num_threads(0);
+        m
+    };
+    let m1 = train_at(1);
+    let m4 = train_at(4);
+    assert_eq!(m1.depths, m4.depths);
+    assert_eq!(m1.params.c_pos.to_bits(), m4.params.c_pos.to_bits());
+    assert_eq!(m1.params.c_neg.to_bits(), m4.params.c_neg.to_bits());
+    assert_eq!(
+        m1.params.kernel.gamma().map(f64::to_bits),
+        m4.params.kernel.gamma().map(f64::to_bits)
+    );
+    assert_eq!(m1.level_stats.len(), m4.level_stats.len());
+    for (a, b) in m1.level_stats.iter().zip(&m4.level_stats) {
+        assert_eq!(a.levels, b.levels);
+        assert_eq!(a.train_size, b.train_size);
+        assert_eq!(a.n_sv, b.n_sv);
+        assert_eq!(
+            a.cv_gmean.map(f64::to_bits),
+            b.cv_gmean.map(f64::to_bits),
+            "level {:?} G-mean diverged",
+            a.levels
+        );
+        assert_eq!(a.solver.iterations, b.solver.iterations);
+    }
+    assert_eq!(m1.model.rho.to_bits(), m4.model.rho.to_bits());
+    assert_eq!(m1.model.sv_labels, m4.model.sv_labels);
+    let coef_bits = |m: &mlsvm::mlsvm::MlsvmModel| -> Vec<u64> {
+        m.model.sv_coef.iter().map(|c| c.to_bits()).collect()
+    };
+    assert_eq!(coef_bits(&m1), coef_bits(&m4), "final model α diverged");
+}
