@@ -9,6 +9,7 @@
 use mlsvm::data::matrix::Matrix;
 use mlsvm::data::synth::two_gaussians;
 use mlsvm::graph::affinity::affinity_graph;
+use mlsvm::graph::csr::SparseRowMatrix;
 use mlsvm::knn::{build_knn, KnnBackend};
 use mlsvm::svm::kernel::{KernelKind, RowBackend, RustRowBackend};
 use mlsvm::svm::smo::{solve, SvmParams};
@@ -60,6 +61,34 @@ fn main() {
             .unwrap()
         });
         println!("amg/coarsen1lvl n={n:<6}       {}", st.human());
+    }
+
+    // ---- Galerkin triple product (coarse-graph construction) ----
+    // Paper-scale affinity graphs with caliber-2 fractional interpolation;
+    // the expansion parallelizes over the pool (ROADMAP profiling item).
+    for n in [8_000usize, 25_000] {
+        let m = random_matrix(n, 16, 3);
+        let g = affinity_graph(&m, 10, KnnBackend::RpForest, 5).unwrap();
+        let nc = (n / 3).max(2);
+        let rows: Vec<Vec<(u32, f32)>> = (0..n)
+            .map(|k| {
+                let a = (k % nc) as u32;
+                let b = ((k * 7 + 1) % nc) as u32;
+                if a == b {
+                    vec![(a, 1.0f32)]
+                } else {
+                    vec![(a, 0.6f32), (b, 0.4f32)]
+                }
+            })
+            .collect();
+        let p = SparseRowMatrix::from_rows(rows, nc);
+        let st = bench(1, 3, || g.galerkin(&p).unwrap());
+        println!(
+            "graph/galerkin  n={n:<6} nnz={:<7} {} ({} threads)",
+            g.nnz(),
+            st.human(),
+            mlsvm::util::pool::num_threads()
+        );
     }
 
     // ---- SMO solve ----

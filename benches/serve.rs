@@ -1,27 +1,34 @@
-//! Closed-loop serving loadgen: trains a small model, publishes it to a
-//! registry, starts the engine + HTTP server on an ephemeral localhost
-//! port, and drives concurrent clients against it — measuring p50/p95/p99
-//! latency, throughput, and batch utilization as the batch size sweeps.
+//! Closed-loop serving loadgen: trains small models, publishes them to a
+//! registry, starts per-model engines + the routed HTTP server on an
+//! ephemeral localhost port, and drives concurrent clients against it —
+//! measuring p50/p95/p99 latency, throughput, and batch utilization as
+//! the batch size sweeps, plus a **mixed multi-model workload** (clients
+//! alternating between two `/v1/models/{name}/predict` routes) and a
+//! **v1-text-vs-v2-binary model load-time** measurement on a large
+//! synthetic SV set (the registry-v2 payoff), all emitted into
+//! `BENCH_serve.json`.
 //!
 //! ```bash
 //! cargo bench --bench serve            # writes BENCH_serve.json
-//! cargo bench --bench serve -- --clients 16 --requests 300
+//! cargo bench --bench serve -- --clients 16 --requests 300 --io-svs 50000
 //! ```
 //!
 //! Each client is closed-loop: connect → POST /predict → read → repeat,
 //! one outstanding request at a time, so offered load scales with the
 //! client count and the engine's deadline flush bounds tail latency.
 
+use mlsvm::data::matrix::Matrix;
 use mlsvm::data::synth::two_gaussians;
 use mlsvm::serve::{
-    http_request, http_request_on, Engine, EngineConfig, ModelArtifact, Registry, ServeState,
-    Server,
+    http_request, http_request_on, load_artifact, save_artifact, save_artifact_v1, EngineConfig,
+    EngineManager, ModelArtifact, Registry, ServeState, Server,
 };
 use mlsvm::svm::kernel::KernelKind;
+use mlsvm::svm::model::SvmModel;
 use mlsvm::svm::smo::{train, SvmParams};
-use mlsvm::util::rng::Pcg64;
+use mlsvm::util::rng::{Pcg64, Rng};
 use std::net::TcpStream;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 struct LoadResult {
@@ -47,32 +54,35 @@ fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
     sorted[idx] * 1e3
 }
 
-/// Run one closed-loop load test against a fresh engine + server.
-/// `keepalive` keeps one connection per client for its whole run
-/// (HTTP/1.1 reuse); otherwise every request pays a fresh connect.
+fn engine_cfg(max_batch: usize) -> EngineConfig {
+    EngineConfig {
+        max_batch,
+        max_wait: Duration::from_millis(2),
+        workers: 2,
+        queue_cap: 4096,
+    }
+}
+
+/// Run one closed-loop load test against a fresh manager + server, the
+/// default model behind the legacy `/predict` route. `keepalive` keeps
+/// one connection per client for its whole run (HTTP/1.1 reuse);
+/// otherwise every request pays a fresh connect.
 fn run_load(
-    artifact: &ModelArtifact,
+    registry_dir: &std::path::Path,
     queries: &[Vec<f32>],
     max_batch: usize,
     clients: usize,
     requests_per_client: usize,
     keepalive: bool,
 ) -> LoadResult {
-    let engine = Engine::new(
-        artifact,
-        EngineConfig {
-            max_batch,
-            max_wait: Duration::from_millis(2),
-            workers: 2,
-            queue_cap: 4096,
-        },
-    )
-    .expect("engine");
-    let state = Arc::new(ServeState {
-        engine,
-        registry: None,
-        model_name: Mutex::new("bench".into()),
-    });
+    let manager = EngineManager::open(
+        Registry::open(registry_dir).expect("registry"),
+        engine_cfg(max_batch),
+    );
+    let state = Arc::new(ServeState::new(manager, "bench"));
+    // Warm the engine before the timer: lazy spawn (model load + worker
+    // threads) must not land in the measured latency distribution.
+    state.manager.engine("bench").expect("warm engine");
     let server = Server::start("127.0.0.1:0", Arc::clone(&state)).expect("server");
     let addr = server.addr();
 
@@ -113,7 +123,11 @@ fn run_load(
     });
     let seconds = t0.elapsed().as_secs_f64();
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let st = state.engine.stats();
+    let st = state
+        .manager
+        .engine("bench")
+        .expect("bench engine")
+        .stats();
     let total = clients * requests_per_client;
     LoadResult {
         max_batch,
@@ -129,6 +143,185 @@ fn run_load(
         batches: st.batches,
         deadline_flushes: st.deadline_flushes,
     }
+}
+
+/// Mixed multi-model workload: every client alternates between the two
+/// routed predict endpoints on one connection, so both engines batch
+/// concurrently behind one server. Returns the combined numbers plus a
+/// JSON fragment with per-model stats.
+fn run_multi_model(
+    registry_dir: &std::path::Path,
+    queries: &[Vec<f32>],
+    clients: usize,
+    requests_per_client: usize,
+) -> String {
+    let manager = EngineManager::open(
+        Registry::open(registry_dir).expect("registry"),
+        engine_cfg(8),
+    );
+    let state = Arc::new(ServeState::new(manager, "bench"));
+    // Warm both engines before the timer (see run_load).
+    state.manager.engine("bench").expect("warm bench");
+    state.manager.engine("bench-wide").expect("warm bench-wide");
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).expect("server");
+    let addr = server.addr();
+    let targets = ["/v1/models/bench/predict", "/v1/models/bench-wide/predict"];
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let targets = &targets;
+                s.spawn(move || {
+                    let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5))
+                        .expect("connect");
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+                    let mut lats = Vec::with_capacity(requests_per_client);
+                    for r in 0..requests_per_client {
+                        let q = &queries[(c * 131 + r * 17) % queries.len()];
+                        let body: Vec<String> = q.iter().map(|v| v.to_string()).collect();
+                        let body = body.join(",");
+                        let target = targets[(c + r) % targets.len()];
+                        let t = Instant::now();
+                        let (code, resp) =
+                            http_request_on(&stream, "POST", target, &body).expect("request");
+                        assert_eq!(code, 200, "{target}: {resp}");
+                        lats.push(t.elapsed().as_secs_f64());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    let seconds = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total = clients * requests_per_client;
+    let rps = total as f64 / seconds.max(1e-9);
+    let mut per_model = Vec::new();
+    for me in state.manager.loaded() {
+        let st = me.stats();
+        per_model.push(format!(
+            "{{\"model\": \"{}\", \"completed\": {}, \"batches\": {}, \"utilization\": {:.4}}}",
+            me.name(),
+            st.completed,
+            st.batches,
+            st.utilization
+        ));
+        println!(
+            "  multi-model   {:<12} completed={:<6} batches={:<5} utilization={:.3}",
+            me.name(),
+            st.completed,
+            st.batches,
+            st.utilization
+        );
+    }
+    println!(
+        "  multi-model   combined     {rps:.0} req/s p50={:.3}ms p99={:.3}ms ({clients} clients x {requests_per_client} reqs, 2 models)",
+        percentile_ms(&latencies, 0.50),
+        percentile_ms(&latencies, 0.99),
+    );
+    format!(
+        "{{\n    \"clients\": {clients}, \"requests\": {total}, \"models\": 2, \
+         \"rps\": {rps:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \
+         \"per_model\": [{}]\n  }}",
+        percentile_ms(&latencies, 0.50),
+        percentile_ms(&latencies, 0.95),
+        percentile_ms(&latencies, 0.99),
+        per_model.join(", ")
+    )
+}
+
+/// A large synthetic model (random SVs/alphas) for the load-time
+/// measurement — training a real ≥50k-SV model would dominate bench
+/// time without changing what is measured (parse speed).
+fn synth_big_model(n_sv: usize, dim: usize) -> SvmModel {
+    let mut rng = Pcg64::seed_from(99);
+    let mut sv = Matrix::zeros(n_sv, dim);
+    for i in 0..n_sv {
+        for j in 0..dim {
+            sv.set(i, j, rng.normal() as f32);
+        }
+    }
+    let sv_coef: Vec<f64> = (0..n_sv).map(|_| rng.normal()).collect();
+    let sv_labels: Vec<i8> = sv_coef.iter().map(|&c| if c >= 0.0 { 1 } else { -1 }).collect();
+    SvmModel {
+        sv,
+        sv_coef,
+        rho: 0.123456789012345,
+        kernel: KernelKind::Rbf { gamma: 0.05 },
+        sv_indices: Vec::new(),
+        sv_labels,
+    }
+}
+
+/// Measure v1-text vs v2-binary load time on a big model (best of 3
+/// each) and verify bit-exact decision parity. Returns the `model_io`
+/// JSON fragment.
+fn measure_model_io(dir: &std::path::Path, n_sv: usize, dim: usize) -> String {
+    let model = synth_big_model(n_sv, dim);
+    let artifact = ModelArtifact::Svm(model);
+    let v1_path = dir.join("io-v1.model");
+    let v2_path = dir.join("io-v2.model");
+    save_artifact_v1(&v1_path, &artifact).expect("save v1");
+    save_artifact(&v2_path, &artifact).expect("save v2");
+    let v1_bytes = std::fs::metadata(&v1_path).expect("v1 meta").len();
+    let v2_bytes = std::fs::metadata(&v2_path).expect("v2 meta").len();
+
+    let time_load = |path: &std::path::Path| -> (f64, ModelArtifact) {
+        let mut best = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..3 {
+            let t = Instant::now();
+            let a = load_artifact(path).expect("load");
+            best = best.min(t.elapsed().as_secs_f64());
+            last = Some(a);
+        }
+        (best, last.expect("loaded"))
+    };
+    let (v1_s, from_v1) = time_load(&v1_path);
+    let (v2_s, from_v2) = time_load(&v2_path);
+
+    // Bit-exact decision parity v1 vs v2 on random probes.
+    let (ModelArtifact::Svm(m1), ModelArtifact::Svm(m2)) = (&from_v1, &from_v2) else {
+        panic!("kind must round-trip");
+    };
+    let mut rng = Pcg64::seed_from(7);
+    let mut bit_exact = true;
+    for _ in 0..5 {
+        let x: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let (d1, d2) = (m1.decision(&x), m2.decision(&x));
+        if d1.to_bits() != d2.to_bits() {
+            bit_exact = false;
+            eprintln!("PARITY MISMATCH: v1 {d1} vs v2 {d2}");
+        }
+    }
+    let speedup = v1_s / v2_s.max(1e-12);
+    let (v1_mb, v2_mb) = (v1_bytes as f64 / 1e6, v2_bytes as f64 / 1e6);
+    println!(
+        "\nmodel i/o: n_sv={n_sv} dim={dim} | v1 text {v1_mb:.1} MB in {:.1} ms ({:.0} MB/s) | \
+         v2 binary {v2_mb:.1} MB in {:.1} ms ({:.0} MB/s) | {speedup:.1}x faster, bit_exact={bit_exact}",
+        v1_s * 1e3,
+        v1_mb / v1_s.max(1e-12),
+        v2_s * 1e3,
+        v2_mb / v2_s.max(1e-12),
+    );
+    if speedup < 10.0 {
+        eprintln!("WARNING: v2 load speedup {speedup:.1}x is below the 10x target");
+    }
+    format!(
+        "{{\n    \"n_sv\": {n_sv}, \"dim\": {dim}, \
+         \"v1_mb\": {v1_mb:.2}, \"v2_mb\": {v2_mb:.2}, \
+         \"v1_load_s\": {v1_s:.4}, \"v2_load_s\": {v2_s:.4}, \
+         \"v1_mb_per_s\": {:.1}, \"v2_mb_per_s\": {:.1}, \
+         \"speedup\": {speedup:.2}, \"bit_exact\": {bit_exact}\n  }}",
+        v1_mb / v1_s.max(1e-12),
+        v2_mb / v2_s.max(1e-12),
+    )
 }
 
 fn json_entry(r: &LoadResult) -> String {
@@ -153,15 +346,18 @@ fn json_entry(r: &LoadResult) -> String {
 }
 
 fn main() {
-    // Light CLI: --clients N, --requests N (per client, headline config).
+    // Light CLI: --clients N, --requests N (per client), --io-svs N
+    // (model size for the load-time measurement).
     let argv: Vec<String> = std::env::args().collect();
     let mut clients = 16usize;
     let mut requests = 200usize;
+    let mut io_svs = 50_000usize;
     let mut i = 0;
     while i < argv.len() {
         match argv[i].as_str() {
             "--clients" if i + 1 < argv.len() => clients = argv[i + 1].parse().unwrap_or(16),
             "--requests" if i + 1 < argv.len() => requests = argv[i + 1].parse().unwrap_or(200),
+            "--io-svs" if i + 1 < argv.len() => io_svs = argv[i + 1].parse().unwrap_or(50_000),
             _ => {}
         }
         i += 1;
@@ -170,24 +366,32 @@ fn main() {
 
     println!("== serve loadgen (closed-loop clients over localhost HTTP) ==\n");
 
-    // Train a small binary model and publish it through the registry
-    // (exercising the save → load → serve path end to end).
+    // Train two small binary models (different gammas) and publish them
+    // through the registry — exercising save → load → serve end to end,
+    // with two distinct engines behind the multi-model routes.
     let mut rng = Pcg64::seed_from(11);
     let ds = two_gaussians(600, 400, 16, 3.0, &mut rng);
-    let model = train(
-        &ds.points,
-        &ds.labels,
-        &SvmParams {
-            kernel: KernelKind::Rbf { gamma: 0.1 },
-            ..Default::default()
-        },
-    )
-    .expect("train");
     let dir = std::env::temp_dir().join("mlsvm_bench_serve_registry");
+    let _ = std::fs::remove_dir_all(&dir);
     let reg = Registry::open(&dir).expect("registry");
-    reg.save("bench", &ModelArtifact::Svm(model)).expect("save");
-    let artifact = reg.load("bench").expect("load");
-    println!("model: {} (registry {})\n", artifact.describe(), dir.display());
+    for (name, gamma) in [("bench", 0.1), ("bench-wide", 1.0)] {
+        let model = train(
+            &ds.points,
+            &ds.labels,
+            &SvmParams {
+                kernel: KernelKind::Rbf { gamma },
+                ..Default::default()
+            },
+        )
+        .expect("train");
+        let path = reg.save(name, &ModelArtifact::Svm(model)).expect("save");
+        println!(
+            "model '{name}': {} ({})",
+            load_artifact(&path).expect("load").describe(),
+            path.display()
+        );
+    }
+    println!();
 
     let queries: Vec<Vec<f32>> = (0..ds.points.rows())
         .map(|i| ds.points.row(i).to_vec())
@@ -206,7 +410,7 @@ fn main() {
     for (max_batch, keepalive) in
         [(1usize, true), (4, true), (8, true), (16, true), (8, false)]
     {
-        let r = run_load(&artifact, &queries, max_batch, clients, requests, keepalive);
+        let r = run_load(&dir, &queries, max_batch, clients, requests, keepalive);
         println!(
             "{:<10} {:>8} {:>6} {:>9.0} {:>9.3} {:>9.3} {:>9.3} {:>11.3} {:>9}",
             r.max_batch,
@@ -221,7 +425,7 @@ fn main() {
         );
         results.push(r);
     }
-    let trickle = run_load(&artifact, &queries, 32, 1, requests.min(50), true);
+    let trickle = run_load(&dir, &queries, 32, 1, requests.min(50), true);
     println!(
         "{:<10} {:>8} {:>6} {:>9.0} {:>9.3} {:>9.3} {:>9.3} {:>11.3} {:>9}  (trickle: deadline path)",
         trickle.max_batch,
@@ -234,6 +438,13 @@ fn main() {
         trickle.utilization,
         trickle.batches
     );
+
+    // Mixed multi-model workload over the routed endpoints.
+    println!("\nmulti-model workload (clients alternate between 2 routed models):");
+    let multi_json = run_multi_model(&dir, &queries, clients, requests);
+
+    // Registry v2 payoff: load-time v1 text vs v2 binary on a big model.
+    let io_json = measure_model_io(&dir, io_svs, 32);
 
     // Headline = best-throughput swept config (the acceptance gate:
     // >= 4 concurrent clients and batch utilization > 0.5 under load).
@@ -259,7 +470,8 @@ fn main() {
         .collect();
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"threads\": {},\n  \"clients\": {clients},\n  \
-         \"requests_per_client\": {requests},\n  \"configs\": [\n{}\n  ],\n  \"headline\": \
+         \"requests_per_client\": {requests},\n  \"configs\": [\n{}\n  ],\n  \"multi_model\": \
+         {multi_json},\n  \"model_io\": {io_json},\n  \"headline\": \
          {{\"max_batch\": {}, \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
          \"p99_ms\": {:.3}, \"utilization\": {:.4}}}\n}}\n",
         mlsvm::util::pool::num_threads(),

@@ -27,10 +27,20 @@ highest thread count falls below --min-speedup (0 disables; shared CI
 runners make wall-clock gates flaky, so the speedup is reported rather
 than gated by default).
 
+A third mode gates the serving bench's model-I/O measurement:
+
+  check_bench.py --serve BENCH_serve.json [--min-load-speedup 5]
+
+fails (exit 1) when the v2 binary model load is not bit-exact against
+the v1 text load, or when its load-time speedup over v1 falls below the
+threshold (default 5; the bench itself typically shows well over 10x on
+a >=50k-SV model, but shared runners get a margin).
+
 Usage:
   check_bench.py <baseline.json> <current.json>
                  [--threshold 0.30] [--write-baseline <out.json>]
   check_bench.py --train <BENCH_train.json> [--min-speedup 0]
+  check_bench.py --serve <BENCH_serve.json> [--min-load-speedup 5]
 """
 
 import json
@@ -78,6 +88,41 @@ def check_train(path: str, min_speedup: float) -> int:
     return 1 if failed else 0
 
 
+def check_serve(path: str, min_load_speedup: float) -> int:
+    with open(path) as f:
+        data = json.load(f)
+    io = data.get("model_io")
+    if not isinstance(io, dict):
+        print(f"{path} has no model_io section (serve bench too old?)")
+        return 1
+    failed = False
+    n_sv = io.get("n_sv", 0)
+    v1_s = io.get("v1_load_s")
+    v2_s = io.get("v2_load_s")
+    speedup = io.get("speedup")
+    bit_exact = io.get("bit_exact")
+    print(
+        f"model load (n_sv={n_sv}, dim={io.get('dim')}): "
+        f"v1 text {v1_s}s ({io.get('v1_mb')} MB) -> "
+        f"v2 binary {v2_s}s ({io.get('v2_mb')} MB)"
+    )
+    if bit_exact is not True:
+        print("PARITY FAILED: v2 decisions are not bit-exact vs v1")
+        failed = True
+    if not isinstance(speedup, (int, float)):
+        print("missing load speedup")
+        failed = True
+    elif speedup < min_load_speedup:
+        print(
+            f"LOAD REGRESSION: v2 is only {speedup:.1f}x faster than v1 "
+            f"(gate: >= {min_load_speedup}x)"
+        )
+        failed = True
+    else:
+        print(f"v2 load speedup: {speedup:.1f}x (gate: >= {min_load_speedup}x) OK")
+    return 1 if failed else 0
+
+
 def parse_flag_value(flag: str, default: float) -> float:
     if flag not in sys.argv:
         return default
@@ -95,6 +140,8 @@ def parse_flag_value(flag: str, default: float) -> float:
 def main() -> int:
     if len(sys.argv) >= 3 and sys.argv[1] == "--train":
         return check_train(sys.argv[2], parse_flag_value("--min-speedup", 0.0))
+    if len(sys.argv) >= 3 and sys.argv[1] == "--serve":
+        return check_serve(sys.argv[2], parse_flag_value("--min-load-speedup", 5.0))
     if len(sys.argv) < 3:
         print(__doc__)
         return 2

@@ -1,15 +1,16 @@
-//! Serving walkthrough: train → save to the registry → serve over HTTP →
-//! query → hot-reload — the full path from the paper's training framework
-//! to an online decision service.
+//! Serving walkthrough: train → publish to the registry (v2 binary) →
+//! serve **two models** behind one routed HTTP server → query both →
+//! hot-reload — the full path from the paper's training framework to a
+//! multi-tenant online decision service.
 //!
 //! ```bash
 //! cargo run --release --example serving
 //! ```
 
 use mlsvm::prelude::*;
-use mlsvm::serve::{http_request, ServeState, Server};
+use mlsvm::serve::{http_request, EngineManager, ServeState, Server};
 use mlsvm::util::timer::Timer;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() -> Result<()> {
@@ -38,43 +39,48 @@ fn main() -> Result<()> {
         m.report()
     );
 
-    // 2. Publish the FULL multilevel model (params + level metadata, not
-    //    just the finest line file) into a named registry.
+    // 2. Publish the FULL multilevel model (params + level metadata) into
+    //    a named registry — written in the v2 binary format — plus a
+    //    plain finest-level SVM as a second serveable model.
     let dir = std::env::temp_dir().join("mlsvm_example_registry");
     let reg = Registry::open(&dir)?;
-    let artifact = ModelArtifact::Mlsvm(model);
-    reg.save("rings-v1", &artifact)?;
+    reg.save("rings-v1", &ModelArtifact::Mlsvm(model.clone()))?;
+    reg.save("rings-flat", &ModelArtifact::Svm(model.model.clone()))?;
+    println!("registry {}: {:?}", dir.display(), reg.list()?);
     println!(
-        "registry {}: {:?}",
-        dir.display(),
-        reg.list()?
+        "on disk: {} ({})",
+        reg.path_of("rings-v1").display(),
+        mlsvm::serve::detect_format(reg.path_of("rings-v1"))?
     );
 
-    // 3. Load it back and start the serving stack: batching engine +
-    //    HTTP front end on an ephemeral port.
-    let served = reg.load("rings-v1")?;
-    println!("serving: {}", served.describe());
-    let engine = Engine::new(
-        &served,
+    // 3. Start the serving stack: an engine manager that lazily spawns
+    //    one batching engine per model, behind the routed HTTP front end
+    //    on an ephemeral port. "rings-v1" is the default model (legacy
+    //    unprefixed routes resolve to it).
+    let manager = EngineManager::open(
+        Registry::open(&dir)?,
         EngineConfig {
             max_batch: 16,
             max_wait: Duration::from_millis(1),
             ..Default::default()
         },
-    )?;
-    let state = Arc::new(ServeState {
-        engine,
-        registry: Some(Registry::open(&dir)?),
-        model_name: Mutex::new("rings-v1".into()),
-    });
+    );
+    let state = Arc::new(ServeState::new(manager, "rings-v1"));
     let mut server = Server::start("127.0.0.1:0", Arc::clone(&state))?;
     let addr = server.addr();
     println!("listening on http://{addr}");
 
-    // 4. Query it like any HTTP client would.
+    // 4. Query both models by name — one server, one engine per model.
     let body: Vec<String> = test.points.row(0).iter().map(|v| v.to_string()).collect();
-    let (code, resp) = http_request(&addr, "POST", "/predict", &body.join(","))?;
-    println!("POST /predict -> {code}: {resp}");
+    let body = body.join(",");
+    let (code, resp) = http_request(&addr, "POST", "/v1/models/rings-v1/predict", &body)?;
+    println!("POST /v1/models/rings-v1/predict -> {code}: {resp}");
+    let (code, resp) = http_request(&addr, "POST", "/v1/models/rings-flat/predict", &body)?;
+    println!("POST /v1/models/rings-flat/predict -> {code}: {resp}");
+
+    // Legacy unprefixed routes keep working, mapped to the default.
+    let (code, resp) = http_request(&addr, "POST", "/predict", &body)?;
+    println!("POST /predict (legacy -> default) -> {code}: {resp}");
 
     let mut batch = String::new();
     for i in 0..5 {
@@ -82,20 +88,25 @@ fn main() -> Result<()> {
         batch.push_str(&row.join(","));
         batch.push('\n');
     }
-    let (code, resp) = http_request(&addr, "POST", "/predict-batch", &batch)?;
-    println!("POST /predict-batch (5 rows) -> {code}: {} bytes", resp.len());
+    let (code, resp) =
+        http_request(&addr, "POST", "/v1/models/rings-v1/predict-batch", &batch)?;
+    println!(
+        "POST /v1/models/rings-v1/predict-batch (5 rows) -> {code}: {} bytes",
+        resp.len()
+    );
 
-    let (_, resp) = http_request(&addr, "GET", "/models", "")?;
-    println!("GET /models -> {resp}");
+    // 5. Per-model stats and the fleet listing.
+    let (_, resp) = http_request(&addr, "GET", "/v1/models/rings-flat/stats", "")?;
+    println!("GET /v1/models/rings-flat/stats -> {resp}");
+    let (_, resp) = http_request(&addr, "GET", "/v1/models", "")?;
+    println!("GET /v1/models -> {resp}");
 
-    // 5. Hot-reload: publish a second version and swap it in while the
-    //    server keeps answering.
-    reg.save("rings-v2", &served)?;
-    let (code, resp) = http_request(&addr, "POST", "/reload?model=rings-v2", "")?;
-    println!("POST /reload -> {code}: {resp}");
-
-    let (_, resp) = http_request(&addr, "GET", "/stats", "")?;
-    println!("GET /stats -> {resp}");
+    // 6. Hot-reload: publish a new version under a name and swap it in
+    //    while the server keeps answering (routed reload; the default
+    //    model is untouched).
+    reg.save("rings-flat", &ModelArtifact::Svm(model.model.clone()))?;
+    let (code, resp) = http_request(&addr, "POST", "/v1/models/rings-flat/reload", "")?;
+    println!("POST /v1/models/rings-flat/reload -> {code}: {resp}");
 
     server.shutdown();
     println!("done");

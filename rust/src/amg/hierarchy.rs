@@ -170,7 +170,12 @@ impl Hierarchy {
         a: (Matrix, HierarchyParams),
         b: (Matrix, HierarchyParams),
     ) -> Result<(Hierarchy, Hierarchy)> {
-        if crate::util::pool::num_threads() <= 1 {
+        // Inside a pool section (e.g. a parallel one-vs-rest class job)
+        // stay fully sequential: the caller-side build is already
+        // suppressed by the nested-parallelism guard, but a scoped thread
+        // would start with a clean thread-local and fan out a full worker
+        // set — threads² across classes.
+        if crate::util::pool::num_threads() <= 1 || crate::util::pool::in_worker() {
             return Ok((Hierarchy::build(a.0, a.1)?, Hierarchy::build(b.0, b.1)?));
         }
         std::thread::scope(|s| {

@@ -2,8 +2,14 @@
 //! 5 survey classes, one MLWSVM per class, Table 2).
 //!
 //! Each class becomes a training job (that class = +1 minority, the rest
-//! = −1). Jobs run through a queue with per-job timing and error
-//! isolation: one degenerate class does not abort the others.
+//! = −1). The jobs are fully independent, so the queue dispatches them
+//! **concurrently over [`crate::util::pool`]** with per-job timing and
+//! error isolation: one degenerate class does not abort the others.
+//! Results keep deterministic class-index order, and each job draws its
+//! RNG from a stream split off the caller's generator *before* dispatch,
+//! so the ensemble is identical at any thread count. Parallel sections
+//! inside one job (hierarchy builds, kernel fills) degrade to sequential
+//! on pool workers — classes in parallel, not threads².
 
 use crate::data::dataset::Dataset;
 use crate::data::matrix::Matrix;
@@ -94,8 +100,14 @@ impl OneVsRestTrainer {
         }
     }
 
-    /// Run all class jobs sequentially (the job queue; single-device
-    /// testbed) and return the ensemble.
+    /// Run all class jobs — concurrently over the pool, since per-class
+    /// trainings are independent — and return the ensemble.
+    ///
+    /// Determinism: each job's RNG stream is split off `rng` sequentially
+    /// before any job runs, and `parallel_gen` keeps class-index order,
+    /// so the result is bit-identical at any thread count (and depends
+    /// only on the caller's RNG state, exactly as the sequential queue
+    /// did).
     pub fn train(
         &self,
         points: &Matrix,
@@ -106,8 +118,10 @@ impl OneVsRestTrainer {
         if points.rows() != class_ids.len() {
             return Err(Error::invalid("jobs: class id count mismatch"));
         }
-        let mut jobs = Vec::with_capacity(classes.len());
-        for &c in classes {
+        let streams: Vec<Pcg64> = classes.iter().map(|_| rng.split()).collect();
+        let jobs = crate::util::pool::parallel_gen(classes.len(), |ci| {
+            let c = classes[ci];
+            let mut rng = streams[ci].clone();
             let labels: Vec<i8> = class_ids
                 .iter()
                 .map(|&k| if k == c { 1 } else { -1 })
@@ -117,7 +131,7 @@ impl OneVsRestTrainer {
             let t = Timer::start();
             let result = Dataset::new(points.clone(), labels).and_then(|ds| {
                 MlsvmTrainer::new(self.params.clone().with_seed(self.params.seed ^ c as u64))
-                    .train(&ds, rng)
+                    .train(&ds, &mut rng)
             });
             let seconds = t.secs();
             let (model, error) = match result {
@@ -150,14 +164,14 @@ impl OneVsRestTrainer {
                     error.as_deref().unwrap_or("ok")
                 );
             }
-            jobs.push(ClassJob {
+            ClassJob {
                 class_id: c,
                 model,
                 error,
                 seconds,
                 sizes,
-            });
-        }
+            }
+        });
         Ok(MulticlassModel { jobs })
     }
 }
@@ -231,6 +245,40 @@ mod tests {
             .unwrap();
         let met = model.evaluate_class(1, &m, &ids);
         assert!(met.gmean() > 0.85, "class-1 κ = {}", met.gmean());
+    }
+
+    #[test]
+    fn parallel_queue_is_deterministic_across_thread_counts() {
+        let _guard = crate::util::pool::TEST_OVERRIDE_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let (m, ids) = three_classes(80, 104);
+        let run = |threads: usize| {
+            crate::util::pool::set_num_threads(threads);
+            let mut rng = Pcg64::seed_from(9);
+            OneVsRestTrainer::new(quick_params())
+                .train(&m, &ids, &[0, 1, 2], &mut rng)
+                .unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        crate::util::pool::set_num_threads(0);
+        for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(ja.class_id, jb.class_id, "class order must be kept");
+            assert_eq!(ja.sizes, jb.sizes);
+            let (Some(ma), Some(mb)) = (&ja.model, &jb.model) else {
+                panic!("both runs must train every class");
+            };
+            // Bit-identical models: thread count must not change results.
+            for i in (0..m.rows()).step_by(13) {
+                assert_eq!(
+                    ma.model.decision(m.row(i)),
+                    mb.model.decision(m.row(i)),
+                    "class {} row {i}",
+                    ja.class_id
+                );
+            }
+        }
     }
 
     #[test]

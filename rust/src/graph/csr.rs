@@ -162,6 +162,17 @@ impl CsrGraph {
     /// `p` is the interpolation operator (n_fine × n_coarse). The result
     /// has `W_coarse[q,r] = Σ_{k≠l} P[k,q]·w[k,l]·P[l,r]` for q ≠ r,
     /// exactly Eq. (4)'s coarse-edge definition.
+    ///
+    /// The expansion of fine edges into coarse triplets (nnz × caliber²
+    /// multiply-adds — the hot part at paper sizes) runs over
+    /// [`crate::util::pool`], one fine row per task. The merge then sums
+    /// each coarse pair's contributions in flattened row order: because
+    /// every row's triplets are produced in a deterministic order,
+    /// concatenated in row order, and combined with a **stable** sort,
+    /// the per-pair addition order — and therefore every bit of the
+    /// result — is independent of the thread count (and identical to the
+    /// historical serial hash-map accumulation, which also summed in
+    /// k-ascending encounter order).
     pub fn galerkin(&self, p: &SparseRowMatrix) -> Result<CsrGraph> {
         if p.nrows() != self.n() {
             return Err(Error::invalid(format!(
@@ -171,38 +182,45 @@ impl CsrGraph {
             )));
         }
         let nc = p.ncols;
-        // Accumulate row-by-row into hash maps per coarse row would be slow;
-        // instead accumulate triplets then merge via from_edges-style pass.
-        // For each fine edge (k,l,w) and each (q, pkq) in P[k], (r, plr) in
-        // P[l]: add w*pkq*plr to coarse (q,r). Stored once per unordered
-        // fine pair; contributions to both (q,r) and (r,q) are generated,
-        // so we keep q<r and sum.
-        let mut acc: std::collections::HashMap<(u32, u32), f64> = std::collections::HashMap::new();
-        for k in 0..self.n() {
-            let (idx, w) = self.row(k);
-            let pk = p.row(k);
-            for (&l, &wkl) in idx.iter().zip(w) {
-                let l = l as usize;
-                if l <= k {
-                    continue; // each undirected fine edge once
-                }
-                let pl = p.row(l);
-                for &(q, pkq) in pk {
-                    for &(r, plr) in pl {
-                        if q == r {
-                            continue; // diagonal (intra-aggregate) dropped
+        let n = self.n();
+        // For each fine edge (k,l,w), k < l, and each (q, pkq) in P[k],
+        // (r, plr) in P[l]: contribute w·pkq·plr to coarse pair {q,r},
+        // stored once per unordered pair as (min, max).
+        let per_row: Vec<Vec<(u32, u32, f64)>> =
+            crate::util::pool::parallel_map(n, 32, |k| {
+                let (idx, w) = self.row(k);
+                let pk = p.row(k);
+                let mut tri = Vec::new();
+                for (&l, &wkl) in idx.iter().zip(w) {
+                    let l = l as usize;
+                    if l <= k {
+                        continue; // each undirected fine edge once
+                    }
+                    let pl = p.row(l);
+                    for &(q, pkq) in pk {
+                        for &(r, plr) in pl {
+                            if q == r {
+                                continue; // diagonal (intra-aggregate) dropped
+                            }
+                            let (lo, hi) = if q < r { (q, r) } else { (r, q) };
+                            tri.push((lo, hi, wkl * (pkq as f64) * (plr as f64)));
                         }
-                        let (lo, hi) = if q < r { (q, r) } else { (r, q) };
-                        *acc.entry((lo, hi)).or_insert(0.0) += wkl * (pkq as f64) * (plr as f64);
                     }
                 }
+                tri
+            });
+        let mut triplets: Vec<(u32, u32, f64)> = per_row.into_iter().flatten().collect();
+        // Stable sort: equal keys keep their k-ascending order, fixing
+        // the floating-point summation order below.
+        triplets.sort_by_key(|t| (t.0, t.1));
+        let mut edges: Vec<(u32, u32, f64)> = Vec::new();
+        for (a, b, w) in triplets {
+            match edges.last_mut() {
+                Some(e) if e.0 == a && e.1 == b => e.2 += w,
+                _ => edges.push((a, b, w)),
             }
         }
-        let edges: Vec<(u32, u32, f64)> = acc
-            .into_iter()
-            .filter(|&(_, w)| w > 1e-12)
-            .map(|((a, b), w)| (a, b, w))
-            .collect();
+        edges.retain(|&(_, _, w)| w > 1e-12);
         CsrGraph::from_edges(nc, &edges)
     }
 }
@@ -349,6 +367,54 @@ mod tests {
         //                  = 1 + 0.5 + 0.5 = 2   (2->2 diagonal dropped)
         assert_eq!(gc.n(), 2);
         assert!((gc.row(0).1[0] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn galerkin_is_thread_count_invariant() {
+        use crate::util::rng::{Pcg64, Rng};
+        let _guard = crate::util::pool::TEST_OVERRIDE_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        // A mid-size random graph with caliber-2 fractional interpolation
+        // so many fine edges hit the same coarse pair (the summation
+        // whose order must not depend on threads).
+        let n = 600usize;
+        let nc = 80usize;
+        let mut rng = Pcg64::seed_from(42);
+        let mut edges = Vec::new();
+        for i in 0..n as u32 {
+            for _ in 0..6 {
+                let j = rng.index(n) as u32;
+                if i != j {
+                    edges.push((i, j, 0.1 + rng.f64()));
+                }
+            }
+        }
+        let g = CsrGraph::from_edges(n, &edges).unwrap();
+        let rows: Vec<Vec<(u32, f32)>> = (0..n)
+            .map(|_| {
+                let a = rng.index(nc) as u32;
+                let mut b = rng.index(nc) as u32;
+                if b == a {
+                    b = (a + 1) % nc as u32;
+                }
+                let w = 0.25 + 0.5 * rng.f32();
+                vec![(a, w), (b, 1.0 - w)]
+            })
+            .collect();
+        let p = SparseRowMatrix::from_rows(rows, nc);
+        crate::util::pool::set_num_threads(1);
+        let a = g.galerkin(&p).unwrap();
+        crate::util::pool::set_num_threads(4);
+        let b = g.galerkin(&p).unwrap();
+        crate::util::pool::set_num_threads(0);
+        assert_eq!(a.indptr, b.indptr);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.weights.len(), b.weights.len());
+        for (x, y) in a.weights.iter().zip(&b.weights) {
+            assert_eq!(x.to_bits(), y.to_bits(), "weights must be bit-identical");
+        }
+        assert!(a.nnz() > 0, "fixture must produce coarse edges");
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //!   (W)SVM solver ([`svm`]), FLANN-like approximate k-NN ([`knn`]), a
 //!   coordinator for one-vs-rest multiclass training and batched
 //!   prediction ([`coordinator`]), and a serving layer ([`serve`]) with a
-//!   model registry, a concurrent dynamic-batching decision engine, and
-//!   an HTTP/1.1-over-TCP front end (`mlsvm serve`).
+//!   binary model registry, per-model concurrent dynamic-batching
+//!   decision engines behind an engine manager, and a routed
+//!   HTTP/1.1-over-TCP front end (`mlsvm serve --models a,b`).
 //! * **Layer 2 (JAX, build time)** — dense RBF kernel-matrix tiles and the
 //!   SVM decision function, AOT-lowered to HLO text in `artifacts/`.
 //! * **Layer 1 (Pallas, build time)** — the tiled Gaussian-kernel compute
@@ -61,7 +62,7 @@ pub mod prelude {
     pub use crate::metrics::Metrics;
     pub use crate::mlsvm::params::MlsvmParams;
     pub use crate::mlsvm::trainer::{MlsvmModel, MlsvmTrainer};
-    pub use crate::serve::{Engine, EngineConfig, ModelArtifact, Registry};
+    pub use crate::serve::{Engine, EngineConfig, EngineManager, ModelArtifact, Registry};
     pub use crate::svm::kernel::{Kernel, RbfKernel};
     pub use crate::svm::model::SvmModel;
     pub use crate::svm::smo::SvmParams;

@@ -6,8 +6,13 @@
 //! * `train`      — train MLWSVM on a LibSVM/CSV file, save the model
 //!                  (optionally into a serving registry);
 //! * `predict`    — load a model, predict a file, report metrics;
-//! * `serve`      — load a registry model and answer HTTP predictions
-//!                  through the concurrent batching engine;
+//! * `serve`      — serve one or more registry models over HTTP through
+//!                  per-model concurrent batching engines
+//!                  (`--models a,b,c`; first name is the default model
+//!                  behind the legacy unprefixed routes);
+//! * `registry`   — registry maintenance: `migrate` rewrites v1-text /
+//!                  legacy model files in the v2 binary format, `list`
+//!                  shows names, formats and descriptions;
 //! * `bench`      — regenerate a paper table (`table1|table2|table3`)
 //!                  (thin wrapper; `cargo bench --bench tableN` runs the
 //!                  same harness);
@@ -67,6 +72,7 @@ fn run(cmd: &str, argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(argv),
         "predict" => cmd_predict(argv),
         "serve" => cmd_serve(argv),
+        "registry" => cmd_registry(argv),
         "gen" => cmd_gen(argv),
         "info" => cmd_info(argv),
         "bench" => {
@@ -77,7 +83,7 @@ fn run(cmd: &str, argv: Vec<String>) -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "mlsvm — algebraic multigrid support vector machines\n\n\
-                 usage: mlsvm <train|predict|serve|gen|info> [options]\n\
+                 usage: mlsvm <train|predict|serve|registry|gen|info> [options]\n\
                  try:   mlsvm train --help"
             );
             Ok(())
@@ -228,26 +234,35 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
 }
 
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
-    let args = Args::new("mlsvm serve", "serve a registry model over HTTP")
+    let args = Args::new("mlsvm serve", "serve registry models over HTTP")
         .opt("registry", "registry directory", Some("models"))
-        .opt("model", "model name to serve", Some("default"))
+        .opt("model", "default model name (used when --models is absent)", Some("default"))
+        .opt(
+            "models",
+            "comma-separated model names to preload; first is the default",
+            None,
+        )
         .opt("addr", "bind address (port 0 = ephemeral)", Some("127.0.0.1:7878"))
         .opt("batch", "flush a batch at this size", Some("32"))
         .opt("wait-ms", "deadline flush after this wait (ms)", Some("2"))
-        .opt("workers", "engine worker threads (0 = auto)", Some("0"))
+        .opt("workers", "per-engine worker threads (0 = auto)", Some("0"))
         .opt("queue-cap", "bounded queue capacity (backpressure)", Some("1024"))
         .opt("max-seconds", "exit after this long (0 = run forever)", Some("0"))
         .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
         .parse_from(argv)?;
     apply_threads(&args)?;
     let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
-    let name = args.get("model").unwrap().to_string();
-    let artifact = reg.load(&name).map_err(|e| {
-        Error::Usage(format!(
-            "cannot load model '{name}': {e}\n(available: {:?})",
-            reg.list().unwrap_or_default()
-        ))
-    })?;
+    let names: Vec<String> = match args.get("models") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => vec![args.get("model").unwrap().to_string()],
+    };
+    if names.is_empty() {
+        return Err(Error::Usage("--models needs at least one model name".into()));
+    }
     let workers = args.get_usize("workers")?;
     let cfg = mlsvm::serve::EngineConfig {
         max_batch: args.get_usize("batch")?,
@@ -259,17 +274,25 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         },
         queue_cap: args.get_usize("queue-cap")?,
     };
-    let desc = artifact.describe();
-    let engine = mlsvm::serve::Engine::new(&artifact, cfg)?;
-    let state = std::sync::Arc::new(mlsvm::serve::ServeState {
-        engine,
-        registry: Some(reg),
-        model_name: std::sync::Mutex::new(name.clone()),
-    });
+    let manager = mlsvm::serve::EngineManager::open(reg, cfg);
+    for name in &names {
+        let me = manager.engine(name).map_err(|e| {
+            Error::Usage(format!(
+                "cannot load model '{name}': {e}\n(available: {:?})",
+                manager.registry().list().unwrap_or_default()
+            ))
+        })?;
+        // Stderr: the banner line below must stay the first stdout line
+        // (spawners poll stdout for the address).
+        eprintln!("loaded '{name}' ({})", me.describe());
+    }
+    let default = names[0].clone();
+    let state = std::sync::Arc::new(mlsvm::serve::ServeState::new(manager, default.clone()));
     let mut server =
         mlsvm::serve::Server::start(args.get("addr").unwrap(), std::sync::Arc::clone(&state))?;
     println!(
-        "serving '{name}' ({desc}) listening on http://{}",
+        "serving {} model(s), default '{default}', listening on http://{}",
+        names.len(),
         server.addr()
     );
     use std::io::Write as _;
@@ -282,8 +305,88 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     }
     std::thread::sleep(std::time::Duration::from_secs(max_secs));
     server.shutdown();
-    println!("stats: {}", state.engine.stats().to_json());
+    for me in state.manager.loaded() {
+        println!("stats[{}]: {}", me.name(), me.stats().to_json());
+    }
     Ok(())
+}
+
+fn cmd_registry(mut argv: Vec<String>) -> Result<()> {
+    let sub = if argv.is_empty() {
+        String::new()
+    } else {
+        argv.remove(0)
+    };
+    match sub.as_str() {
+        "migrate" => {
+            let args = Args::new(
+                "mlsvm registry migrate",
+                "rewrite v1-text/legacy registry models in the v2 binary format",
+            )
+            .opt("registry", "registry directory", Some("models"))
+            .flag("dry-run", "report formats without rewriting")
+            .parse_from(argv)?;
+            let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
+            if args.get_flag("dry-run") {
+                for name in reg.list()? {
+                    let fmt = mlsvm::serve::detect_format(reg.path_of(&name))?;
+                    println!("{name}: {fmt}");
+                }
+                return Ok(());
+            }
+            let reports = reg.migrate()?;
+            if reports.is_empty() {
+                println!("nothing to migrate (all models already v2-binary)");
+                return Ok(());
+            }
+            for r in &reports {
+                match &r.error {
+                    None => println!(
+                        "{}: {} -> v2-binary ({} -> {} bytes)",
+                        r.name, r.from, r.bytes_before, r.bytes_after
+                    ),
+                    Some(e) => println!("{}: {} NOT migrated ({e})", r.name, r.from),
+                }
+            }
+            let migrated = reports.iter().filter(|r| r.error.is_none()).count();
+            let failed = reports.len() - migrated;
+            if failed > 0 {
+                println!("migrated {migrated} model(s), {failed} failed");
+            } else {
+                println!("migrated {migrated} model(s)");
+            }
+            Ok(())
+        }
+        "list" => {
+            let args = Args::new("mlsvm registry list", "list registry models with formats")
+                .opt("registry", "registry directory", Some("models"))
+                .flag("describe", "also load each model and print its description (slow)")
+                .parse_from(argv)?;
+            let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
+            // Metadata only by default: fully decoding every model makes a
+            // listing take model-load time × N on big registries.
+            let describe = args.get_flag("describe");
+            for name in reg.list()? {
+                let path = reg.path_of(&name);
+                let fmt = mlsvm::serve::detect_format(&path)?;
+                let bytes = std::fs::metadata(&path)?.len();
+                if describe {
+                    match reg.load(&name) {
+                        Ok(artifact) => {
+                            println!("{name} [{fmt}, {bytes} bytes]: {}", artifact.describe())
+                        }
+                        Err(e) => println!("{name} [{fmt}, {bytes} bytes]: UNREADABLE ({e})"),
+                    }
+                } else {
+                    println!("{name} [{fmt}, {bytes} bytes]");
+                }
+            }
+            Ok(())
+        }
+        _ => Err(Error::Usage(
+            "usage: mlsvm registry <migrate|list> [--registry DIR]".into(),
+        )),
+    }
 }
 
 fn cmd_gen(argv: Vec<String>) -> Result<()> {

@@ -1,0 +1,701 @@
+//! Registry format v2: length-prefixed little-endian binary sections.
+//!
+//! The v1 text format round-trips bit for bit but parses at tens of
+//! MB/s — the float formatter/parser dominates load time once a model
+//! carries tens of thousands of support vectors. v2 stores the same
+//! artifacts as raw little-endian binary:
+//!
+//! ```text
+//! magic "MLSVMBIN" (8 bytes) | version u32 | kind u32
+//! section*            section = tag u32 | payload_len u64 | payload
+//! ```
+//!
+//! Every integer and float is little-endian; `f64`/`f32` values are the
+//! raw IEEE-754 bits, so decisions are preserved **bit for bit** across
+//! save → load (including non-finite and negative-zero values, which a
+//! text round-trip can only promise with care). Sections appear in a
+//! fixed order per kind; the reader bounds-checks every length against
+//! the remaining buffer and answers corruption or truncation with
+//! [`Error::Serve`] instead of panicking.
+//!
+//! Version negotiation: trailing extra bytes inside a section are
+//! ignored, which is the forward-compatibility seam — a later writer may
+//! append fields to an existing section without breaking this reader.
+//! Layout-incompatible changes bump [`BIN_VERSION`], which this reader
+//! rejects with a message naming both versions. Older formats (the v1
+//! text header and legacy `SvmModel` line files) are still accepted
+//! transparently by [`crate::serve::registry::load_artifact`], which
+//! sniffs [`BIN_MAGIC`] before falling back to the text readers.
+//!
+//! Kind codes: 1 = `svm`, 2 = `mlsvm`, 3 = `multiclass` — the same
+//! artifact taxonomy as [`ModelArtifact`].
+
+use crate::coordinator::jobs::{ClassJob, MulticlassModel};
+use crate::data::matrix::Matrix;
+use crate::error::{Error, Result};
+use crate::mlsvm::trainer::{LevelStat, MlsvmModel};
+use crate::serve::registry::ModelArtifact;
+use crate::svm::kernel::KernelKind;
+use crate::svm::model::SvmModel;
+use crate::svm::smo::{SvmParams, TrainStats};
+
+/// Magic bytes opening every v2 binary model file.
+pub const BIN_MAGIC: &[u8; 8] = b"MLSVMBIN";
+/// Current binary format version.
+pub const BIN_VERSION: u32 = 2;
+
+// Section tags (fixed order per kind; u32 so a corrupted offset lands on
+// an implausible tag instead of a plausible one-byte value).
+const SEC_KERNEL: u32 = 0x01;
+const SEC_SVM_META: u32 = 0x02;
+const SEC_COEFS: u32 = 0x03;
+const SEC_LABELS: u32 = 0x04;
+const SEC_SV: u32 = 0x05;
+const SEC_SV_INDICES: u32 = 0x06;
+const SEC_PARAMS: u32 = 0x10;
+const SEC_DEPTHS: u32 = 0x11;
+const SEC_LEVELS: u32 = 0x12;
+const SEC_CLASSES: u32 = 0x20;
+const SEC_CLASS: u32 = 0x21;
+
+/// Whether `bytes` start with the v2 binary magic (any version).
+pub fn is_binary(bytes: &[u8]) -> bool {
+    bytes.len() >= BIN_MAGIC.len() && bytes[..BIN_MAGIC.len()] == BIN_MAGIC[..]
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_section(out: &mut Vec<u8>, tag: u32, payload: &[u8]) {
+    put_u32(out, tag);
+    put_u64(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+}
+
+fn write_svm(out: &mut Vec<u8>, m: &SvmModel) {
+    // Kernel: fixed 21-byte record (kind, gamma, coef0, degree); unused
+    // fields are zero for linear/rbf.
+    let mut p = Vec::with_capacity(21);
+    let (kind, gamma, coef0, degree) = match m.kernel {
+        KernelKind::Linear => (0u8, 0.0, 0.0, 0u32),
+        KernelKind::Rbf { gamma } => (1, gamma, 0.0, 0),
+        KernelKind::Poly {
+            gamma,
+            coef0,
+            degree,
+        } => (2, gamma, coef0, degree),
+    };
+    put_u8(&mut p, kind);
+    put_f64(&mut p, gamma);
+    put_f64(&mut p, coef0);
+    put_u32(&mut p, degree);
+    put_section(out, SEC_KERNEL, &p);
+
+    let mut p = Vec::with_capacity(24);
+    put_f64(&mut p, m.rho);
+    put_u64(&mut p, m.n_sv() as u64);
+    put_u64(&mut p, m.sv.cols() as u64);
+    put_section(out, SEC_SVM_META, &p);
+
+    // The alphas (y_i·α_i), raw f64 bits.
+    let mut p = Vec::with_capacity(m.sv_coef.len() * 8);
+    for &c in &m.sv_coef {
+        put_f64(&mut p, c);
+    }
+    put_section(out, SEC_COEFS, &p);
+
+    let p: Vec<u8> = m.sv_labels.iter().map(|&l| l as u8).collect();
+    put_section(out, SEC_LABELS, &p);
+
+    // The support-vector matrix, row-major f32 bits.
+    let mut p = Vec::with_capacity(m.sv.as_slice().len() * 4);
+    for &v in m.sv.as_slice() {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    put_section(out, SEC_SV, &p);
+
+    // Count-prefixed (the list is legitimately empty for file-loaded
+    // models), so trailing bytes stay appendable like every section.
+    let mut p = Vec::with_capacity(8 + m.sv_indices.len() * 8);
+    put_u64(&mut p, m.sv_indices.len() as u64);
+    for &i in &m.sv_indices {
+        put_u64(&mut p, i as u64);
+    }
+    put_section(out, SEC_SV_INDICES, &p);
+}
+
+fn write_mlsvm(out: &mut Vec<u8>, m: &MlsvmModel) {
+    let pr = &m.params;
+    let mut p = Vec::with_capacity(41);
+    put_f64(&mut p, pr.c_pos);
+    put_f64(&mut p, pr.c_neg);
+    put_f64(&mut p, pr.eps);
+    put_u64(&mut p, pr.max_iter as u64);
+    put_u64(&mut p, pr.cache_bytes as u64);
+    put_u8(&mut p, pr.shrinking as u8);
+    put_section(out, SEC_PARAMS, &p);
+
+    let mut p = Vec::with_capacity(16);
+    put_u64(&mut p, m.depths.0 as u64);
+    put_u64(&mut p, m.depths.1 as u64);
+    put_section(out, SEC_DEPTHS, &p);
+
+    let mut p = Vec::new();
+    put_u64(&mut p, m.level_stats.len() as u64);
+    for s in &m.level_stats {
+        put_u64(&mut p, s.levels.0 as u64);
+        put_u64(&mut p, s.levels.1 as u64);
+        put_u64(&mut p, s.train_size as u64);
+        put_u64(&mut p, s.n_sv as u64);
+        put_u8(&mut p, s.ud_used as u8);
+        put_f64(&mut p, s.seconds);
+        put_f64(&mut p, s.ud_seconds);
+        put_u8(&mut p, s.cv_gmean.is_some() as u8);
+        put_f64(&mut p, s.cv_gmean.unwrap_or(0.0));
+        put_u64(&mut p, s.solver.iterations as u64);
+        put_f64(&mut p, s.solver.gap);
+        put_u64(&mut p, s.solver.cache_hits);
+        put_u64(&mut p, s.solver.cache_misses);
+        put_u8(&mut p, s.solver.warm_started as u8);
+    }
+    put_section(out, SEC_LEVELS, &p);
+
+    write_svm(out, &m.model);
+}
+
+fn write_multiclass(out: &mut Vec<u8>, mc: &MulticlassModel) {
+    let mut p = Vec::with_capacity(8);
+    put_u64(&mut p, mc.jobs.len() as u64);
+    put_section(out, SEC_CLASSES, &p);
+    for job in &mc.jobs {
+        let mut p = Vec::new();
+        put_u8(&mut p, job.class_id);
+        put_f64(&mut p, job.seconds);
+        put_u64(&mut p, job.sizes.0 as u64);
+        put_u64(&mut p, job.sizes.1 as u64);
+        put_u8(&mut p, job.model.is_some() as u8);
+        if job.model.is_none() {
+            // Binary strings need no newline flattening (the text format
+            // does): the error message round-trips byte for byte.
+            put_u8(&mut p, job.error.is_some() as u8);
+            put_str(&mut p, job.error.as_deref().unwrap_or(""));
+        }
+        put_section(out, SEC_CLASS, &p);
+        if let Some(m) = &job.model {
+            write_mlsvm(out, m);
+        }
+    }
+}
+
+/// Encode `artifact` as a v2 binary model file.
+pub fn write_artifact(artifact: &ModelArtifact) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(BIN_MAGIC);
+    put_u32(&mut out, BIN_VERSION);
+    let kind = match artifact {
+        ModelArtifact::Svm(_) => 1u32,
+        ModelArtifact::Mlsvm(_) => 2,
+        ModelArtifact::Multiclass(_) => 3,
+    };
+    put_u32(&mut out, kind);
+    match artifact {
+        ModelArtifact::Svm(m) => write_svm(&mut out, m),
+        ModelArtifact::Mlsvm(m) => write_mlsvm(&mut out, m),
+        ModelArtifact::Multiclass(mc) => write_multiclass(&mut out, mc),
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+fn truncated(what: &str) -> Error {
+    Error::Serve(format!("binary model truncated at {what}"))
+}
+
+/// Bounds-checked cursor over the raw bytes (and over each section's
+/// payload — sections nest as sub-cursors so a corrupted length can never
+/// read past its section, let alone the file).
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Rd<'a> {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| truncated(what))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// A u64 count that must fit in usize.
+    fn count(&mut self, what: &str) -> Result<usize> {
+        let v = self.u64(what)?;
+        usize::try_from(v).map_err(|_| Error::Serve(format!("{what} {v} does not fit in memory")))
+    }
+
+    fn flag(&mut self, what: &str) -> Result<bool> {
+        match self.u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(Error::Serve(format!("bad {what} flag {v}"))),
+        }
+    }
+
+    fn str_field(&mut self, what: &str) -> Result<String> {
+        let n = self.count(what)?;
+        let b = self.take(n, what)?;
+        std::str::from_utf8(b)
+            .map(str::to_string)
+            .map_err(|_| Error::Serve(format!("{what} is not UTF-8")))
+    }
+
+    /// Open the next section, checking its tag, and return a sub-cursor
+    /// over exactly its payload.
+    fn section(&mut self, tag: u32, what: &str) -> Result<Rd<'a>> {
+        let got = self.u32(what)?;
+        if got != tag {
+            return Err(Error::Serve(format!(
+                "bad section tag {got:#06x} for {what} (expected {tag:#06x}) — corrupted model file"
+            )));
+        }
+        let len = self.count(what)?;
+        Ok(Rd::new(self.take(len, what)?))
+    }
+}
+
+fn checked_bytes(n: usize, per: usize, what: &str) -> Result<usize> {
+    n.checked_mul(per)
+        .ok_or_else(|| Error::Serve(format!("{what} count {n} overflows")))
+}
+
+fn read_svm(rd: &mut Rd) -> Result<SvmModel> {
+    let mut k = rd.section(SEC_KERNEL, "kernel")?;
+    let kind = k.u8("kernel kind")?;
+    let gamma = k.f64("gamma")?;
+    let coef0 = k.f64("coef0")?;
+    let degree = k.u32("degree")?;
+    let kernel = match kind {
+        0 => KernelKind::Linear,
+        1 => KernelKind::Rbf { gamma },
+        2 => KernelKind::Poly {
+            gamma,
+            coef0,
+            degree,
+        },
+        other => return Err(Error::Serve(format!("unknown kernel kind {other}"))),
+    };
+
+    let mut meta = rd.section(SEC_SVM_META, "svm meta")?;
+    let rho = meta.f64("rho")?;
+    let nsv = meta.count("sv count")?;
+    let dim = meta.count("dim")?;
+
+    let coefs = rd.section(SEC_COEFS, "coefficients")?;
+    if coefs.buf.len() < checked_bytes(nsv, 8, "sv")? {
+        return Err(truncated("coefficients"));
+    }
+    let mut sv_coef = Vec::with_capacity(nsv);
+    for ch in coefs.buf[..nsv * 8].chunks_exact(8) {
+        sv_coef.push(f64::from_bits(u64::from_le_bytes([
+            ch[0], ch[1], ch[2], ch[3], ch[4], ch[5], ch[6], ch[7],
+        ])));
+    }
+
+    let labels = rd.section(SEC_LABELS, "labels")?;
+    if labels.buf.len() < nsv {
+        return Err(truncated("labels"));
+    }
+    let sv_labels: Vec<i8> = labels.buf[..nsv].iter().map(|&b| b as i8).collect();
+
+    let sv_sec = rd.section(SEC_SV, "support vectors")?;
+    let cells = checked_bytes(nsv, dim, "sv matrix")?;
+    let want = checked_bytes(cells, 4, "sv matrix")?;
+    if sv_sec.buf.len() < want {
+        return Err(truncated("support vectors"));
+    }
+    let mut data = Vec::with_capacity(cells);
+    for ch in sv_sec.buf[..want].chunks_exact(4) {
+        data.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+    }
+    let sv = Matrix::from_vec(nsv, dim, data)
+        .map_err(|e| Error::Serve(format!("support-vector matrix: {e}")))?;
+
+    let mut idx = rd.section(SEC_SV_INDICES, "sv indices")?;
+    let n_idx = idx.count("sv index count")?;
+    let mut sv_indices = Vec::with_capacity(n_idx.min(1 << 24));
+    for _ in 0..n_idx {
+        let v = idx.u64("sv index")?;
+        sv_indices.push(usize::try_from(v).map_err(|_| {
+            Error::Serve(format!("sv index {v} does not fit in memory"))
+        })?);
+    }
+
+    Ok(SvmModel {
+        sv,
+        sv_coef,
+        rho,
+        kernel,
+        sv_indices,
+        sv_labels,
+    })
+}
+
+fn read_mlsvm(rd: &mut Rd) -> Result<MlsvmModel> {
+    let mut p = rd.section(SEC_PARAMS, "params")?;
+    let mut params = SvmParams {
+        c_pos: p.f64("c_pos")?,
+        c_neg: p.f64("c_neg")?,
+        eps: p.f64("eps")?,
+        max_iter: p.count("max_iter")?,
+        cache_bytes: p.count("cache_bytes")?,
+        shrinking: p.flag("shrinking")?,
+        ..Default::default()
+    };
+
+    let mut d = rd.section(SEC_DEPTHS, "depths")?;
+    let depths = (d.count("depth")?, d.count("depth")?);
+
+    let mut lv = rd.section(SEC_LEVELS, "levels")?;
+    let nlevels = lv.count("level count")?;
+    let mut level_stats = Vec::with_capacity(nlevels.min(1 << 20));
+    for _ in 0..nlevels {
+        let levels = (lv.count("level")?, lv.count("level")?);
+        let train_size = lv.count("train size")?;
+        let n_sv = lv.count("sv count")?;
+        let ud_used = lv.flag("ud flag")?;
+        let seconds = lv.f64("seconds")?;
+        let ud_seconds = lv.f64("ud seconds")?;
+        let cv_present = lv.flag("cv flag")?;
+        let cv = lv.f64("cv gmean")?;
+        let iterations = lv.count("iterations")?;
+        let gap = lv.f64("gap")?;
+        let cache_hits = lv.u64("cache hits")?;
+        let cache_misses = lv.u64("cache misses")?;
+        let warm_started = lv.flag("warm flag")?;
+        level_stats.push(LevelStat {
+            levels,
+            train_size,
+            n_sv,
+            ud_used,
+            seconds,
+            ud_seconds,
+            cv_gmean: if cv_present { Some(cv) } else { None },
+            solver: TrainStats {
+                iterations,
+                gap,
+                cache_hits,
+                cache_misses,
+                warm_started,
+            },
+        });
+    }
+
+    let model = read_svm(rd)?;
+    params.kernel = model.kernel;
+    Ok(MlsvmModel {
+        model,
+        params,
+        level_stats,
+        depths,
+    })
+}
+
+fn read_multiclass(rd: &mut Rd) -> Result<MulticlassModel> {
+    let mut c = rd.section(SEC_CLASSES, "classes")?;
+    let nclasses = c.count("class count")?;
+    let mut jobs = Vec::with_capacity(nclasses.min(1 << 16));
+    for _ in 0..nclasses {
+        let mut h = rd.section(SEC_CLASS, "class")?;
+        let class_id = h.u8("class id")?;
+        let seconds = h.f64("seconds")?;
+        let sizes = (h.count("pos size")?, h.count("neg size")?);
+        let has_model = h.flag("status")?;
+        let (model, error) = if has_model {
+            (Some(read_mlsvm(rd)?), None)
+        } else {
+            let has_err = h.flag("error flag")?;
+            let msg = h.str_field("error message")?;
+            (None, if has_err { Some(msg) } else { None })
+        };
+        jobs.push(ClassJob {
+            class_id,
+            model,
+            error,
+            seconds,
+            sizes,
+        });
+    }
+    Ok(MulticlassModel { jobs })
+}
+
+/// Decode a v2 binary model file. Corruption and truncation come back as
+/// [`Error::Serve`]; unknown versions are rejected with a message naming
+/// both versions.
+pub fn read_artifact(bytes: &[u8]) -> Result<ModelArtifact> {
+    let mut rd = Rd::new(bytes);
+    let magic = rd.take(BIN_MAGIC.len(), "magic")?;
+    if magic != BIN_MAGIC {
+        return Err(Error::Serve("not a v2 binary model file".into()));
+    }
+    let version = rd.u32("version")?;
+    if version != BIN_VERSION {
+        return Err(Error::Serve(format!(
+            "unsupported binary model version v{version} (this build reads v{BIN_VERSION})"
+        )));
+    }
+    match rd.u32("kind")? {
+        1 => read_svm(&mut rd).map(ModelArtifact::Svm),
+        2 => read_mlsvm(&mut rd).map(ModelArtifact::Mlsvm),
+        3 => read_multiclass(&mut rd).map(ModelArtifact::Multiclass),
+        other => Err(Error::Serve(format!("unknown model kind code {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Awkward bit patterns the text formatter struggles with: negative
+    /// zero, subnormals, and long mantissas must all survive untouched.
+    fn tricky_svm() -> SvmModel {
+        SvmModel {
+            sv: Matrix::from_vec(
+                3,
+                2,
+                vec![0.1, -0.0f32, f32::MIN_POSITIVE, 3.75, -7.25, 1.0 / 3.0],
+            )
+            .unwrap(),
+            sv_coef: vec![0.123456789012345, -0.0f64, f64::MIN_POSITIVE],
+            rho: -0.037,
+            kernel: KernelKind::Rbf { gamma: 1.0 / 3.0 },
+            sv_indices: vec![5, 9, 1_000_000],
+            sv_labels: vec![1, -1, 1],
+        }
+    }
+
+    fn tricky_mlsvm() -> MlsvmModel {
+        MlsvmModel {
+            model: tricky_svm(),
+            params: SvmParams {
+                c_pos: 4.2,
+                c_neg: 0.7,
+                kernel: KernelKind::Rbf { gamma: 1.0 / 3.0 },
+                eps: 1e-3,
+                max_iter: 12345,
+                cache_bytes: 1 << 20,
+                shrinking: true,
+            },
+            level_stats: vec![LevelStat {
+                levels: (2, 3),
+                train_size: 100,
+                n_sv: 17,
+                ud_used: true,
+                seconds: 0.125,
+                ud_seconds: 0.0625,
+                cv_gmean: Some(0.913),
+                solver: TrainStats {
+                    iterations: 321,
+                    gap: 9.5e-4,
+                    cache_hits: 10,
+                    cache_misses: 3,
+                    warm_started: false,
+                },
+            }],
+            depths: (3, 4),
+        }
+    }
+
+    #[test]
+    fn svm_bits_round_trip_exactly() {
+        let m = tricky_svm();
+        let bytes = write_artifact(&ModelArtifact::Svm(m.clone()));
+        assert!(is_binary(&bytes));
+        let ModelArtifact::Svm(back) = read_artifact(&bytes).unwrap() else {
+            panic!("kind must round-trip");
+        };
+        assert_eq!(back.rho.to_bits(), m.rho.to_bits());
+        for (a, b) in m.sv_coef.iter().zip(&back.sv_coef) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f64 bits must survive");
+        }
+        for (a, b) in m.sv.as_slice().iter().zip(back.sv.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 bits must survive");
+        }
+        assert_eq!(back.sv_labels, m.sv_labels);
+        assert_eq!(back.sv_indices, m.sv_indices);
+        assert_eq!(back.kernel, m.kernel);
+        let x = vec![0.3f32, -1.25];
+        assert_eq!(m.decision(&x), back.decision(&x));
+    }
+
+    #[test]
+    fn mlsvm_metadata_round_trips() {
+        let m = tricky_mlsvm();
+        let bytes = write_artifact(&ModelArtifact::Mlsvm(m.clone()));
+        let ModelArtifact::Mlsvm(back) = read_artifact(&bytes).unwrap() else {
+            panic!("kind must round-trip");
+        };
+        assert_eq!(back.depths, m.depths);
+        assert_eq!(back.level_stats.len(), 1);
+        assert_eq!(back.level_stats[0].cv_gmean, Some(0.913));
+        assert_eq!(back.level_stats[0].solver.iterations, 321);
+        assert_eq!(back.params.c_pos, 4.2);
+        assert_eq!(back.params.max_iter, 12345);
+        assert_eq!(back.params.kernel, m.model.kernel);
+        let x = vec![0.5f32, 0.5];
+        assert_eq!(m.model.decision(&x), back.model.decision(&x));
+    }
+
+    #[test]
+    fn multiclass_jobs_and_errors_round_trip() {
+        let mc = MulticlassModel {
+            jobs: vec![
+                ClassJob {
+                    class_id: 0,
+                    model: Some(tricky_mlsvm()),
+                    error: None,
+                    seconds: 1.5,
+                    sizes: (40, 60),
+                },
+                ClassJob {
+                    class_id: 7,
+                    model: None,
+                    error: Some("degenerate training set:\nclass vanished".into()),
+                    seconds: 0.01,
+                    sizes: (0, 100),
+                },
+                ClassJob {
+                    class_id: 2,
+                    model: None,
+                    error: None,
+                    seconds: 0.0,
+                    sizes: (1, 2),
+                },
+            ],
+        };
+        let bytes = write_artifact(&ModelArtifact::Multiclass(mc.clone()));
+        let ModelArtifact::Multiclass(back) = read_artifact(&bytes).unwrap() else {
+            panic!("kind must round-trip");
+        };
+        assert_eq!(back.jobs.len(), 3);
+        assert!(back.jobs[0].model.is_some());
+        // Binary strings round-trip exactly — newlines included.
+        assert_eq!(
+            back.jobs[1].error.as_deref(),
+            Some("degenerate training set:\nclass vanished")
+        );
+        assert_eq!(back.jobs[2].error, None);
+        assert_eq!(back.jobs[2].sizes, (1, 2));
+        let x = vec![0.1f32, 0.2];
+        assert_eq!(mc.predict(&x), back.predict(&x));
+    }
+
+    #[test]
+    fn truncation_and_corruption_become_serve_errors() {
+        let bytes = write_artifact(&ModelArtifact::Mlsvm(tricky_mlsvm()));
+        // Truncation at every prefix length must error (never panic).
+        for cut in [0, 4, 8, 12, 20, bytes.len() / 2, bytes.len() - 1] {
+            let err = read_artifact(&bytes[..cut]).unwrap_err();
+            assert!(matches!(err, Error::Serve(_)), "cut {cut}: {err}");
+        }
+        // Corrupt the first section's tag (header is magic 8 + version 4
+        // + kind 4 = 16 bytes; the tag follows).
+        let mut bad = bytes.clone();
+        bad[16] ^= 0xff;
+        assert!(matches!(
+            read_artifact(&bad).unwrap_err(),
+            Error::Serve(_)
+        ));
+        // A section length pointing past the end of the file.
+        let mut bad = bytes.clone();
+        let len_at = 16 + 4; // header + first section tag
+        bad[len_at..len_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            read_artifact(&bad).unwrap_err(),
+            Error::Serve(_)
+        ));
+        // Future versions are rejected with a clear message.
+        let mut future = bytes;
+        future[BIN_MAGIC.len()..BIN_MAGIC.len() + 4].copy_from_slice(&9u32.to_le_bytes());
+        let err = read_artifact(&future).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn trailing_section_bytes_are_tolerated() {
+        // Forward compatibility: a later writer may append fields to a
+        // section; this reader must ignore them.
+        let m = tricky_svm();
+        let mut out = Vec::new();
+        out.extend_from_slice(BIN_MAGIC);
+        put_u32(&mut out, BIN_VERSION);
+        put_u32(&mut out, 1);
+        // Re-encode by hand with an extended kernel section.
+        let mut body = Vec::new();
+        write_svm(&mut body, &m);
+        // Patch: rebuild with extra bytes appended to the kernel payload.
+        let mut rd = Rd::new(&body);
+        let ker = rd.section(SEC_KERNEL, "kernel").unwrap();
+        let rest = &body[rd.pos..];
+        let mut extended = ker.buf.to_vec();
+        extended.extend_from_slice(&[0xAB, 0xCD]);
+        put_section(&mut out, SEC_KERNEL, &extended);
+        out.extend_from_slice(rest);
+        let ModelArtifact::Svm(back) = read_artifact(&out).unwrap() else {
+            panic!("kind must round-trip");
+        };
+        assert_eq!(back.kernel, m.kernel);
+    }
+}

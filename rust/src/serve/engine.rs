@@ -10,12 +10,18 @@
 //! * [`BatchQueue`] — the single-threaded batching core (pending queue,
 //!   deadline clock, ticket → result bookkeeping, [`BatchStats`]). The
 //!   `Router` is a thin wrapper over this plus an execution backend;
+//! * [`ModelSlot`] — the hot-swappable model handle: an `Arc` swap behind
+//!   an `RwLock`. The engine holds one `Arc<ModelSlot>` and the
+//!   [`crate::serve::manager::EngineManager`] that spawned it holds
+//!   another, so either side can reload the model without the engine
+//!   knowing where models come from (the engine carries no embedded
+//!   single-model assumption — it evaluates whatever the slot holds);
 //! * [`Engine`] — the threaded generalization: a `Mutex`+`Condvar`
 //!   bounded request queue (backpressure: `submit` blocks while the queue
 //!   is at capacity), worker threads that flush due batches through a
 //!   tiled batched kernel evaluation (the `fill_rows_batch` style: norms
-//!   identity + hoisted transcendental pass), per-class argmax for
-//!   one-vs-rest ensembles, and hot model reload behind an `RwLock`.
+//!   identity + hoisted transcendental pass), and per-class argmax for
+//!   one-vs-rest ensembles.
 //!
 //! Every request is answered through a one-shot [`std::sync::mpsc`]
 //! channel, so callers can block (`Ticket::wait`), poll with a timeout,
@@ -392,6 +398,44 @@ fn multiclass_scorers(mc: &MulticlassModel) -> Vec<(u8, BinaryScorer)> {
 }
 
 // ---------------------------------------------------------------------------
+// The shared model handle
+// ---------------------------------------------------------------------------
+
+/// Hot-swappable model handle: an `Arc<ArtifactScorer>` behind an
+/// `RwLock`. Workers `get()` the current scorer at the start of each
+/// batch (batches already popped finish on the scorer they started
+/// with); `swap()` installs a new model for everything after. The slot is
+/// shared by `Arc` between an [`Engine`] and whoever manages its models
+/// (the [`crate::serve::manager::EngineManager`]), so reloads need no
+/// engine-specific plumbing.
+pub struct ModelSlot {
+    scorer: RwLock<Arc<ArtifactScorer>>,
+}
+
+impl ModelSlot {
+    /// Prepare `artifact` for serving and wrap it in a slot.
+    pub fn new(artifact: &ModelArtifact) -> Result<ModelSlot> {
+        Ok(ModelSlot {
+            scorer: RwLock::new(Arc::new(ArtifactScorer::new(artifact)?)),
+        })
+    }
+
+    /// The scorer currently installed (cheap: one `Arc` clone under a
+    /// read lock).
+    pub fn get(&self) -> Arc<ArtifactScorer> {
+        Arc::clone(&self.scorer.read().unwrap())
+    }
+
+    /// Install a new model. Fails (leaving the old model in place) if the
+    /// artifact cannot be prepared for serving.
+    pub fn swap(&self, artifact: &ModelArtifact) -> Result<()> {
+        let scorer = ArtifactScorer::new(artifact)?;
+        *self.scorer.write().unwrap() = Arc::new(scorer);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // The threaded engine
 // ---------------------------------------------------------------------------
 
@@ -439,7 +483,7 @@ struct Shared {
     work: Condvar,
     /// Signaled when a batch is drained (queue has space again).
     space: Condvar,
-    scorer: RwLock<Arc<ArtifactScorer>>,
+    slot: Arc<ModelSlot>,
     stats: EngineStats,
 }
 
@@ -482,9 +526,17 @@ pub struct Engine {
 
 impl Engine {
     /// Start an engine serving `artifact` under `cfg` (spawns the worker
-    /// threads immediately).
+    /// threads immediately). The engine owns its slot; use
+    /// [`Engine::with_slot`] to share one with a manager.
     pub fn new(artifact: &ModelArtifact, cfg: EngineConfig) -> Result<Engine> {
-        let scorer = ArtifactScorer::new(artifact)?;
+        Engine::with_slot(Arc::new(ModelSlot::new(artifact)?), cfg)
+    }
+
+    /// Start an engine evaluating whatever `slot` holds. The caller keeps
+    /// its own `Arc` to the slot and may swap models through it at any
+    /// time — this is how the manager hot-reloads without reaching into
+    /// the engine.
+    pub fn with_slot(slot: Arc<ModelSlot>, cfg: EngineConfig) -> Result<Engine> {
         let cfg = EngineConfig {
             max_batch: cfg.max_batch.max(1),
             workers: cfg.workers.max(1),
@@ -499,7 +551,7 @@ impl Engine {
             }),
             work: Condvar::new(),
             space: Condvar::new(),
-            scorer: RwLock::new(Arc::new(scorer)),
+            slot,
             stats: EngineStats::new(),
         });
         let mut workers = Vec::with_capacity(cfg.workers);
@@ -516,12 +568,19 @@ impl Engine {
 
     /// Feature dimensionality the current model expects.
     pub fn dim(&self) -> usize {
-        self.shared.scorer.read().unwrap().dim()
+        self.shared.slot.get().dim()
     }
 
     /// "binary" or "multiclass" for the current model.
     pub fn model_kind(&self) -> &'static str {
-        self.shared.scorer.read().unwrap().kind_name()
+        self.shared.slot.get().kind_name()
+    }
+
+    /// The shared model slot (swap models through it to hot-reload; the
+    /// engine's own [`Engine::reload`] goes through the same slot and
+    /// additionally counts the reload in the stats).
+    pub fn slot(&self) -> Arc<ModelSlot> {
+        Arc::clone(&self.shared.slot)
     }
 
     /// The engine configuration in force.
@@ -593,8 +652,7 @@ impl Engine {
     /// popped finish on the scorer they started with; everything still
     /// queued — and every later submit — is answered by the new model.
     pub fn reload(&self, artifact: &ModelArtifact) -> Result<()> {
-        let scorer = ArtifactScorer::new(artifact)?;
-        *self.shared.scorer.write().unwrap() = Arc::new(scorer);
+        self.shared.slot.swap(artifact)?;
         self.shared
             .stats
             .reloads
@@ -699,7 +757,7 @@ fn worker_loop(shared: &Shared) {
     use std::sync::atomic::Ordering::Relaxed;
     while let Some((batch, kind)) = next_batch(shared) {
         let batch_len = batch.len() as u64;
-        let scorer = Arc::clone(&shared.scorer.read().unwrap());
+        let scorer = shared.slot.get();
         let dim = scorer.dim();
         // A reload between submit and evaluation can change the expected
         // dimensionality; answer mismatched requests with an error rather
@@ -1003,5 +1061,30 @@ mod tests {
         assert_eq!(*a, s2.decide(ds.points.row(0)));
         assert_ne!(*a, *b, "reload must change the served model");
         assert_eq!(engine.stats().reloads, 1);
+    }
+
+    #[test]
+    fn shared_slot_swaps_models_from_outside_the_engine() {
+        // The manager-style reload: whoever holds the other Arc to the
+        // slot swaps the model; the engine's workers pick it up without
+        // any engine API involved.
+        let (model, ds) = fixture();
+        let slot = Arc::new(ModelSlot::new(&ModelArtifact::Svm(model.clone())).unwrap());
+        let engine = Engine::with_slot(Arc::clone(&slot), EngineConfig::default()).unwrap();
+        let before = engine.predict(ds.points.row(0)).unwrap();
+        let p2 = SvmParams {
+            kernel: KernelKind::Rbf { gamma: 3.0 },
+            ..Default::default()
+        };
+        let model2 = train(&ds.points, &ds.labels, &p2).unwrap();
+        slot.swap(&ModelArtifact::Svm(model2.clone())).unwrap();
+        let after = engine.predict(ds.points.row(0)).unwrap();
+        let (Decision::Binary { value: b, .. }, Decision::Binary { value: a, .. }) =
+            (&before, &after)
+        else {
+            panic!("binary decisions expected")
+        };
+        assert_eq!(*a, BinaryScorer::new(model2).decide(ds.points.row(0)));
+        assert_ne!(*a, *b, "slot swap must change the served model");
     }
 }

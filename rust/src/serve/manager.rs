@@ -1,0 +1,353 @@
+//! Multi-model serving: one [`Engine`] per registry model name.
+//!
+//! The [`EngineManager`] is the piece that turns the single-model engine
+//! into a multi-tenant serving layer:
+//!
+//! * **lazy spawn** — the first request for a name loads the model from
+//!   the [`Registry`] and starts an engine for it; nothing is paid for
+//!   models nobody queries. Loading happens outside the manager lock, so
+//!   a multi-second model load never blocks lookups of already-running
+//!   engines (a racing spawn of the same name keeps the first engine);
+//! * **per-model flush policy** — [`EngineManager::set_model_config`]
+//!   overrides the default [`EngineConfig`] (batch size, deadline,
+//!   workers, queue cap) for one name; the override applies at the next
+//!   spawn, so evict + touch applies it to a running model;
+//! * **hot reload / evict** — reloads swap the model through the shared
+//!   [`ModelSlot`] (in-flight batches finish on the old model, everything
+//!   after answers with the new one); evict drops the engine, which
+//!   drains its queue and joins its workers on the last `Arc` drop;
+//! * **per-model stats** — every [`ManagedEngine`] exposes its own
+//!   [`StatsSnapshot`]; [`crate::serve::stats::aggregate`] folds them
+//!   into a fleet view for the HTTP listing.
+
+use crate::error::Result;
+use crate::serve::engine::{Engine, EngineConfig, ModelSlot};
+use crate::serve::registry::{ModelArtifact, Registry};
+use crate::serve::stats::StatsSnapshot;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// One running engine under the manager: the engine plus its serving
+/// identity (name, human description of the loaded artifact).
+pub struct ManagedEngine {
+    name: String,
+    engine: Engine,
+    description: Mutex<String>,
+}
+
+impl ManagedEngine {
+    fn spawn(name: &str, artifact: &ModelArtifact, cfg: EngineConfig) -> Result<ManagedEngine> {
+        let slot = Arc::new(ModelSlot::new(artifact)?);
+        let engine = Engine::with_slot(Arc::clone(&slot), cfg)?;
+        Ok(ManagedEngine {
+            name: name.to_string(),
+            engine,
+            description: Mutex::new(artifact.describe()),
+        })
+    }
+
+    /// Registry name this engine serves.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The batching engine itself (submit/predict through this).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Human description of the loaded artifact.
+    pub fn describe(&self) -> String {
+        self.description.lock().unwrap().clone()
+    }
+
+    /// Point-in-time counters for this model.
+    pub fn stats(&self) -> StatsSnapshot {
+        self.engine.stats()
+    }
+
+    fn reload_from(&self, artifact: &ModelArtifact) -> Result<()> {
+        // The description lock is held across the swap so concurrent
+        // reloads serialize and the stored description always matches the
+        // model actually installed (the invariant the pre-manager
+        // ServeState::reload kept with its name lock). The swap goes
+        // through the engine so it is counted in the reload stat.
+        let mut desc = self.description.lock().unwrap();
+        self.engine.reload(artifact)?;
+        *desc = artifact.describe();
+        Ok(())
+    }
+}
+
+/// Registry-backed manager of one engine per model name.
+pub struct EngineManager {
+    registry: Registry,
+    default_cfg: EngineConfig,
+    engines: Mutex<HashMap<String, Arc<ManagedEngine>>>,
+    overrides: Mutex<HashMap<String, EngineConfig>>,
+}
+
+impl EngineManager {
+    /// New manager over `registry`; engines spawn with `default_cfg`
+    /// unless a per-model override is set.
+    pub fn open(registry: Registry, default_cfg: EngineConfig) -> EngineManager {
+        EngineManager {
+            registry,
+            default_cfg,
+            engines: Mutex::new(HashMap::new()),
+            overrides: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The backing registry.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Engine config a spawn of `name` would use.
+    pub fn config_for(&self, name: &str) -> EngineConfig {
+        self.overrides
+            .lock()
+            .unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or(self.default_cfg)
+    }
+
+    /// Override the engine config (flush policy, workers, queue cap) for
+    /// one model name. Takes effect at the next spawn of that name;
+    /// evict + touch applies it to an already-running model.
+    pub fn set_model_config(&self, name: &str, cfg: EngineConfig) {
+        self.overrides.lock().unwrap().insert(name.to_string(), cfg);
+    }
+
+    /// The engine for `name` if (and only if) it is already running —
+    /// never spawns. Read-only surfaces (stats endpoints, listings) use
+    /// this so that monitoring a cold model name cannot pull it into
+    /// memory.
+    pub fn get(&self, name: &str) -> Option<Arc<ManagedEngine>> {
+        self.engines.lock().unwrap().get(name).cloned()
+    }
+
+    /// The engine serving `name`, spawning it from the registry on first
+    /// use. The registry load runs outside the manager lock; if two
+    /// threads race to spawn one name, the first insert wins and the
+    /// loser's engine is dropped (it has served nothing).
+    pub fn engine(&self, name: &str) -> Result<Arc<ManagedEngine>> {
+        if let Some(e) = self.engines.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let artifact = self.registry.load(name)?;
+        let spawned = Arc::new(ManagedEngine::spawn(name, &artifact, self.config_for(name))?);
+        let mut map = self.engines.lock().unwrap();
+        Ok(Arc::clone(map.entry(name.to_string()).or_insert(spawned)))
+    }
+
+    /// Spawn (or replace) the engine for `name` directly from an
+    /// in-memory artifact, bypassing the registry — useful for tests and
+    /// for serving a model that is not persisted yet.
+    pub fn insert(&self, name: &str, artifact: &ModelArtifact) -> Result<Arc<ManagedEngine>> {
+        let spawned = Arc::new(ManagedEngine::spawn(name, artifact, self.config_for(name))?);
+        self.engines
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&spawned));
+        Ok(spawned)
+    }
+
+    /// Reload `name` from the registry: swap the model on a running
+    /// engine (through the shared slot — queued and later requests get
+    /// the new model), or spawn it if it is not running. Returns the
+    /// artifact description.
+    pub fn reload(&self, name: &str) -> Result<String> {
+        let artifact = self.registry.load(name)?;
+        let desc = artifact.describe();
+        let existing = self.engines.lock().unwrap().get(name).cloned();
+        match existing {
+            Some(me) => me.reload_from(&artifact)?,
+            None => {
+                let spawned =
+                    Arc::new(ManagedEngine::spawn(name, &artifact, self.config_for(name))?);
+                // A racing lazy spawn may have inserted an engine while we
+                // were loading — possibly built from the pre-reload file.
+                // Swap the fresh artifact into it (outside the map lock)
+                // instead of silently losing the reload.
+                let racer = {
+                    let mut map = self.engines.lock().unwrap();
+                    match map.entry(name.to_string()) {
+                        std::collections::hash_map::Entry::Occupied(e) => {
+                            Some(Arc::clone(e.get()))
+                        }
+                        std::collections::hash_map::Entry::Vacant(v) => {
+                            v.insert(spawned);
+                            None
+                        }
+                    }
+                };
+                if let Some(racer) = racer {
+                    racer.reload_from(&artifact)?;
+                }
+            }
+        }
+        Ok(desc)
+    }
+
+    /// Drop the engine for `name` (outstanding `Arc`s keep answering
+    /// until released; the engine drains and joins its workers on the
+    /// last drop). Returns whether an engine was running.
+    pub fn evict(&self, name: &str) -> bool {
+        self.engines.lock().unwrap().remove(name).is_some()
+    }
+
+    /// Every running engine, in name order.
+    pub fn loaded(&self) -> Vec<Arc<ManagedEngine>> {
+        let mut v: Vec<Arc<ManagedEngine>> =
+            self.engines.lock().unwrap().values().cloned().collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Names of every running engine, in order.
+    pub fn loaded_names(&self) -> Vec<String> {
+        self.loaded().iter().map(|m| m.name.clone()).collect()
+    }
+
+    /// Whether the name could be served: running already, or present in
+    /// the registry.
+    pub fn knows(&self, name: &str) -> bool {
+        if self.engines.lock().unwrap().contains_key(name) {
+            return true;
+        }
+        self.registry.path_of(name).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+    use crate::serve::engine::Decision;
+    use crate::svm::kernel::KernelKind;
+    use crate::svm::model::SvmModel;
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn tmp_registry(tag: &str) -> Registry {
+        let dir: PathBuf = std::env::temp_dir().join(format!("mlsvm_manager_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        Registry::open(dir).unwrap()
+    }
+
+    /// ±x-axis model: decision sign follows the first feature.
+    fn axis_model(gamma: f64) -> SvmModel {
+        SvmModel {
+            sv: Matrix::from_vec(2, 2, vec![1.0, 0.0, -1.0, 0.0]).unwrap(),
+            sv_coef: vec![1.0, -1.0],
+            rho: 0.0,
+            kernel: KernelKind::Rbf { gamma },
+            sv_indices: Vec::new(),
+            sv_labels: vec![1, -1],
+        }
+    }
+
+    fn quick_cfg() -> EngineConfig {
+        EngineConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            queue_cap: 64,
+        }
+    }
+
+    #[test]
+    fn lazy_spawn_serves_and_caches_engines() {
+        let reg = tmp_registry("lazy");
+        reg.save("a", &ModelArtifact::Svm(axis_model(0.5))).unwrap();
+        let mgr = EngineManager::open(reg, quick_cfg());
+        assert!(mgr.loaded().is_empty());
+        let e1 = mgr.engine("a").unwrap();
+        let e2 = mgr.engine("a").unwrap();
+        assert!(Arc::ptr_eq(&e1, &e2), "second lookup reuses the engine");
+        assert_eq!(mgr.loaded_names(), vec!["a"]);
+        let d = e1.engine().predict(&[0.9, 0.0]).unwrap();
+        assert!(matches!(d, Decision::Binary { label: 1, .. }));
+        assert!(mgr.engine("missing").is_err());
+    }
+
+    #[test]
+    fn per_model_config_overrides_apply_at_spawn() {
+        let reg = tmp_registry("cfg");
+        reg.save("a", &ModelArtifact::Svm(axis_model(0.5))).unwrap();
+        let mgr = EngineManager::open(reg, quick_cfg());
+        let special = EngineConfig {
+            max_batch: 17,
+            ..quick_cfg()
+        };
+        mgr.set_model_config("a", special);
+        assert_eq!(mgr.config_for("a").max_batch, 17);
+        assert_eq!(mgr.config_for("other").max_batch, 4);
+        let e = mgr.engine("a").unwrap();
+        assert_eq!(e.engine().config().max_batch, 17);
+    }
+
+    #[test]
+    fn reload_swaps_and_evict_drops() {
+        let reg = tmp_registry("reload");
+        reg.save("m", &ModelArtifact::Svm(axis_model(0.5))).unwrap();
+        let mgr = EngineManager::open(reg, quick_cfg());
+        let e = mgr.engine("m").unwrap();
+        let Decision::Binary { value: before, .. } = e.engine().predict(&[0.9, 0.3]).unwrap()
+        else {
+            panic!("binary expected")
+        };
+        // Publish a new version under the same name and reload.
+        mgr.registry()
+            .save("m", &ModelArtifact::Svm(axis_model(2.0)))
+            .unwrap();
+        mgr.reload("m").unwrap();
+        let Decision::Binary { value: after, .. } = e.engine().predict(&[0.9, 0.3]).unwrap()
+        else {
+            panic!("binary expected")
+        };
+        assert_ne!(before, after, "reload must change decisions");
+        assert_eq!(e.stats().reloads, 1);
+        assert!(mgr.evict("m"));
+        assert!(!mgr.evict("m"), "second evict is a no-op");
+        assert!(mgr.loaded().is_empty());
+        // The held Arc still answers until released.
+        assert!(e.engine().predict(&[0.9, 0.3]).is_ok());
+    }
+
+    #[test]
+    fn insert_serves_unpersisted_models() {
+        let reg = tmp_registry("insert");
+        let mgr = EngineManager::open(reg, quick_cfg());
+        let e = mgr.insert("ephemeral", &ModelArtifact::Svm(axis_model(0.5))).unwrap();
+        assert!(mgr.knows("ephemeral"));
+        assert!(!mgr.knows("nope"));
+        let d = e.engine().predict(&[-0.9, 0.0]).unwrap();
+        assert!(matches!(d, Decision::Binary { label: -1, .. }));
+        assert_eq!(mgr.loaded_names(), vec!["ephemeral"]);
+    }
+
+    #[test]
+    fn two_engines_answer_with_their_own_models() {
+        let reg = tmp_registry("two");
+        reg.save("narrow", &ModelArtifact::Svm(axis_model(4.0))).unwrap();
+        reg.save("wide", &ModelArtifact::Svm(axis_model(0.1))).unwrap();
+        let mgr = EngineManager::open(reg, quick_cfg());
+        let narrow = mgr.engine("narrow").unwrap();
+        let wide = mgr.engine("wide").unwrap();
+        let x = [0.9f32, 0.2];
+        let Decision::Binary { value: vn, .. } = narrow.engine().predict(&x).unwrap() else {
+            panic!("binary expected")
+        };
+        let Decision::Binary { value: vw, .. } = wide.engine().predict(&x).unwrap() else {
+            panic!("binary expected")
+        };
+        assert_ne!(vn, vw, "different gammas must give different decisions");
+        assert_eq!(narrow.stats().completed, 1);
+        assert_eq!(wide.stats().completed, 1);
+        assert_eq!(mgr.loaded_names(), vec!["narrow", "wide"]);
+    }
+}

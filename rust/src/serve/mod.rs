@@ -1,33 +1,52 @@
-//! The serving layer: model registry, concurrent batching engine, HTTP
-//! front end, and serving statistics.
+//! The serving layer: model registry (text + binary formats), per-model
+//! batching engines behind a manager, a routed HTTP front end, and
+//! serving statistics.
 //!
 //! This is the path from a trained model to the ROADMAP's "heavy traffic"
 //! north star. The pieces compose bottom-up:
 //!
-//! * [`registry`] — versioned multi-section persistence for
-//!   [`crate::svm::model::SvmModel`], [`crate::mlsvm::trainer::MlsvmModel`]
-//!   and [`crate::coordinator::jobs::MulticlassModel`], plus a named-model
-//!   registry directory (save / load / list, legacy files included);
+//! * [`registry`] — named-model persistence. The current write format is
+//!   **v2 binary** ([`binary`]: length-prefixed little-endian sections,
+//!   bit-exact f64/f32 round-trip, loads at I/O speed); v1 text and
+//!   legacy `SvmModel` line files still load transparently, and
+//!   [`Registry::migrate`] (or `mlsvm registry migrate`) rewrites a
+//!   directory in place;
 //! * [`engine`] — a thread-safe dynamic-batching decision engine
 //!   (Mutex+Condvar bounded queue, size- and deadline-triggered flushes,
-//!   worker threads, tiled batched kernel evaluation, per-class argmax,
-//!   hot reload). Its single-threaded core, [`engine::BatchQueue`], is
-//!   what [`crate::coordinator::Router`] wraps;
-//! * [`server`] — a hand-rolled HTTP/1.1-over-TCP front end exposing
-//!   predict / predict-batch / models / reload / stats endpoints;
+//!   worker threads, tiled batched kernel evaluation, per-class argmax).
+//!   The model it evaluates lives in a hot-swappable [`ModelSlot`] shared
+//!   with whoever manages it. Its single-threaded core,
+//!   [`engine::BatchQueue`], is what [`crate::coordinator::Router`]
+//!   wraps;
+//! * [`manager`] — multi-model serving: an [`EngineManager`] lazily
+//!   spawns one engine per registry name, with per-model flush policies,
+//!   hot reload/evict, and per-model stats snapshots;
+//! * [`server`] — a hand-rolled HTTP/1.1-over-TCP front end routing
+//!   `/v1/models/{name}/predict|predict-batch|stats|reload|evict` plus a
+//!   `/v1/models` listing; the legacy unprefixed routes map to a default
+//!   model;
 //! * [`stats`] — batching counters and log-spaced latency histograms,
-//!   snapshotted as JSON for `/stats` and `BENCH_serve.json`.
+//!   snapshotted as JSON per model and aggregated fleet-wide.
 //!
 //! End to end: `mlsvm train --registry models --name m` → `mlsvm serve
-//! --registry models --model m` → HTTP predictions; `cargo bench --bench
-//! serve` drives the closed-loop loadgen against it.
+//! --registry models --models m,n` → routed HTTP predictions; `cargo
+//! bench --bench serve` drives the closed-loop loadgen (single- and
+//! multi-model) against it and measures v1-vs-v2 model load time.
 
+pub mod binary;
 pub mod engine;
+pub mod manager;
 pub mod registry;
 pub mod server;
 pub mod stats;
 
-pub use engine::{BatchQueue, Decision, Engine, EngineConfig, FlushPolicy, FlushReason, Ticket};
-pub use registry::{load_artifact, save_artifact, ModelArtifact, Registry};
+pub use engine::{
+    BatchQueue, Decision, Engine, EngineConfig, FlushPolicy, FlushReason, ModelSlot, Ticket,
+};
+pub use manager::{EngineManager, ManagedEngine};
+pub use registry::{
+    detect_format, load_artifact, save_artifact, save_artifact_v1, MigrationReport, ModelArtifact,
+    ModelFormat, Registry,
+};
 pub use server::{http_request, http_request_on, ServeState, Server};
-pub use stats::{BatchStats, EngineStats, LatencyHistogram, StatsSnapshot};
+pub use stats::{aggregate, BatchStats, EngineStats, LatencyHistogram, StatsSnapshot};

@@ -12,30 +12,86 @@
 //! * a one-vs-rest [`MulticlassModel`] with per-class sections, including
 //!   failed class jobs (`kind = multiclass`).
 //!
-//! The header line is `mlsvm-model v1 <kind>`; files without it are
-//! parsed as legacy single-`SvmModel` line files, so every model saved by
-//! earlier versions of this repo still loads. All numbers are written
-//! with Rust's shortest-round-trip float formatting, so decisions are
-//! preserved **bit for bit** across save → load.
+//! Three on-disk formats coexist:
+//!
+//! * **v2 binary** (the current write format, [`crate::serve::binary`]):
+//!   length-prefixed little-endian sections; raw IEEE-754 bits, so
+//!   decisions round-trip bit for bit and large SV sets load at I/O
+//!   speed instead of float-parse speed;
+//! * **v1 text** — header line `mlsvm-model v1 <kind>`, shortest-
+//!   round-trip float formatting (also bit-exact, but slow to parse);
+//! * **legacy** — bare single-`SvmModel` line files from before the
+//!   registry existed.
+//!
+//! [`load_artifact`] sniffs the format (binary magic, then text header,
+//! then legacy) so every model file ever saved by this repo still loads.
+//! [`save_artifact`] writes v2; [`save_artifact_v1`] keeps the text
+//! writer alive for migration tests and the v1-vs-v2 load benchmark.
 //!
 //! [`Registry`] is a directory of named `<name>.model` files with
-//! save / load / list operations — the unit the serving engine hot-reloads
-//! from.
+//! save / load / list / migrate operations — the unit the serving layer
+//! loads and hot-reloads from.
 
 use crate::coordinator::jobs::{ClassJob, MulticlassModel};
 use crate::error::{Error, Result};
 use crate::mlsvm::trainer::{LevelStat, MlsvmModel};
+use crate::serve::binary;
 use crate::svm::model::SvmModel;
 use crate::svm::smo::{SvmParams, TrainStats};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 
-/// Magic token opening every versioned model file.
+/// Magic token opening every versioned **text** model file.
 pub const MAGIC: &str = "mlsvm-model";
-/// Current format version.
+/// Text format version (the binary format's version lives in
+/// [`crate::serve::binary::BIN_VERSION`]).
 pub const VERSION: u32 = 1;
 /// Registry file extension.
 pub const EXTENSION: &str = "model";
+
+/// On-disk format of a model file, as sniffed by [`detect_format`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelFormat {
+    /// v2 length-prefixed binary sections.
+    V2Binary,
+    /// v1 `mlsvm-model` text format.
+    V1Text,
+    /// Pre-registry bare `SvmModel` line file.
+    LegacyLines,
+}
+
+impl std::fmt::Display for ModelFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelFormat::V2Binary => write!(f, "v2-binary"),
+            ModelFormat::V1Text => write!(f, "v1-text"),
+            ModelFormat::LegacyLines => write!(f, "legacy-lines"),
+        }
+    }
+}
+
+/// Sniff the on-disk format of a model file from its first bytes.
+pub fn detect_format(path: impl AsRef<Path>) -> Result<ModelFormat> {
+    use std::io::Read as _;
+    let mut f = std::fs::File::open(path)?;
+    let mut head = [0u8; 16];
+    let mut n = 0usize;
+    while n < head.len() {
+        let got = f.read(&mut head[n..])?;
+        if got == 0 {
+            break;
+        }
+        n += got;
+    }
+    let head = &head[..n];
+    if binary::is_binary(head) {
+        return Ok(ModelFormat::V2Binary);
+    }
+    if head.starts_with(MAGIC.as_bytes()) {
+        return Ok(ModelFormat::V1Text);
+    }
+    Ok(ModelFormat::LegacyLines)
+}
 
 /// Any persistable trained model.
 #[derive(Clone, Debug)]
@@ -155,8 +211,16 @@ fn write_multiclass_body<W: Write>(w: &mut W, mc: &MulticlassModel) -> Result<()
     Ok(())
 }
 
-/// Write `artifact` to `path` in the versioned format.
+/// Write `artifact` to `path` in the current (v2 binary) format.
 pub fn save_artifact(path: impl AsRef<Path>, artifact: &ModelArtifact) -> Result<()> {
+    std::fs::write(path, binary::write_artifact(artifact))?;
+    Ok(())
+}
+
+/// Write `artifact` to `path` in the v1 text format (kept for the
+/// migration path and the v1-vs-v2 load benchmark; new code should use
+/// [`save_artifact`]).
+pub fn save_artifact_v1(path: impl AsRef<Path>, artifact: &ModelArtifact) -> Result<()> {
     let f = std::fs::File::create(path)?;
     let mut w = BufWriter::new(f);
     writeln!(w, "{MAGIC} v{VERSION} {}", artifact.kind())?;
@@ -307,10 +371,16 @@ fn read_multiclass_body<'b>(lines: &mut impl Iterator<Item = &'b str>) -> Result
     Ok(MulticlassModel { jobs })
 }
 
-/// Load any model file: versioned (`mlsvm-model v1 ...`) or legacy
-/// single-`SvmModel` line files.
+/// Load any model file: v2 binary, v1 text (`mlsvm-model v1 ...`), or
+/// legacy single-`SvmModel` line files — the format is sniffed from the
+/// first bytes.
 pub fn load_artifact(path: impl AsRef<Path>) -> Result<ModelArtifact> {
-    let text = std::fs::read_to_string(&path)?;
+    let bytes = std::fs::read(&path)?;
+    if binary::is_binary(&bytes) {
+        return binary::read_artifact(&bytes);
+    }
+    let text = String::from_utf8(bytes)
+        .map_err(|_| Error::invalid("model file is neither v2 binary nor UTF-8 text"))?;
     let mut lines = text.lines();
     let Some(first) = lines.clone().next() else {
         return Err(Error::invalid("empty model file"));
@@ -434,6 +504,52 @@ impl Registry {
         names.sort();
         Ok(names)
     }
+
+    /// Rewrite every v1-text / legacy model in the registry as v2 binary
+    /// (atomic per model, via [`Registry::save`]); already-binary models
+    /// are left untouched. An unreadable model does **not** abort the
+    /// run — it is reported with its error and the remaining models are
+    /// still migrated, so a half-converted registry can never hide what
+    /// happened. Returns one report per non-v2 model, in name order.
+    pub fn migrate(&self) -> Result<Vec<MigrationReport>> {
+        let mut out = Vec::new();
+        for name in self.list()? {
+            let path = self.path_of(&name);
+            let from = detect_format(&path)?;
+            if from == ModelFormat::V2Binary {
+                continue;
+            }
+            let bytes_before = std::fs::metadata(&path)?.len();
+            let result = load_artifact(&path).and_then(|artifact| self.save(&name, &artifact));
+            let (bytes_after, error) = match result {
+                Ok(_) => (std::fs::metadata(self.path_of(&name))?.len(), None),
+                Err(e) => (bytes_before, Some(e.to_string())),
+            };
+            out.push(MigrationReport {
+                name,
+                from,
+                bytes_before,
+                bytes_after,
+                error,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// One non-v2 model visited by [`Registry::migrate`].
+#[derive(Clone, Debug)]
+pub struct MigrationReport {
+    /// Registry model name.
+    pub name: String,
+    /// Format the file was in before migration.
+    pub from: ModelFormat,
+    /// File size before (bytes).
+    pub bytes_before: u64,
+    /// File size after (bytes; unchanged when the migration failed).
+    pub bytes_after: u64,
+    /// Why this model could not be migrated (None = rewritten as v2).
+    pub error: Option<String>,
 }
 
 #[cfg(test)]
@@ -590,7 +706,7 @@ mod tests {
             ],
         };
         let path = dir.join("mc.model");
-        save_artifact(&path, &ModelArtifact::Multiclass(mc.clone())).unwrap();
+        save_artifact_v1(&path, &ModelArtifact::Multiclass(mc.clone())).unwrap();
         let ModelArtifact::Multiclass(back) = load_artifact(&path).unwrap() else {
             panic!("kind must round-trip")
         };
@@ -620,7 +736,7 @@ mod tests {
             }],
         };
         let path = dir.join("e.model");
-        save_artifact(&path, &ModelArtifact::Multiclass(mc)).unwrap();
+        save_artifact_v1(&path, &ModelArtifact::Multiclass(mc)).unwrap();
         let ModelArtifact::Multiclass(back) = load_artifact(&path).unwrap() else {
             panic!("kind must round-trip")
         };
@@ -634,7 +750,7 @@ mod tests {
         let dir = tmp_dir("pre_udsecs");
         let m = tiny_mlsvm(0.45);
         let path = dir.join("m.model");
-        save_artifact(&path, &ModelArtifact::Mlsvm(m.clone())).unwrap();
+        save_artifact_v1(&path, &ModelArtifact::Mlsvm(m.clone())).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let stripped: String = text
             .lines()
@@ -682,9 +798,10 @@ mod tests {
         std::fs::write(&empty, "").unwrap();
         assert!(load_artifact(&empty).is_err());
 
-        // Truncate a valid mlsvm file in the middle of the SV block.
+        // Truncate a valid v1-text mlsvm file in the middle of the SV
+        // block (binary truncation is covered in `serve::binary` tests).
         let full = dir.join("full.model");
-        save_artifact(&full, &ModelArtifact::Mlsvm(tiny_mlsvm(0.5))).unwrap();
+        save_artifact_v1(&full, &ModelArtifact::Mlsvm(tiny_mlsvm(0.5))).unwrap();
         let text = std::fs::read_to_string(&full).unwrap();
         let cut: Vec<&str> = text.lines().collect();
         let truncated = cut[..cut.len() - 1].join("\n");
@@ -718,5 +835,100 @@ mod tests {
         assert!(reg.load("missing").is_err());
         assert!(reg.save("../evil", &ModelArtifact::Svm(tiny_svm(0.1))).is_err());
         assert!(reg.save("", &ModelArtifact::Svm(tiny_svm(0.1))).is_err());
+    }
+
+    #[test]
+    fn registry_saves_are_v2_binary() {
+        let dir = tmp_dir("reg_v2");
+        let reg = Registry::open(dir.join("models")).unwrap();
+        let path = reg.save("m", &ModelArtifact::Mlsvm(tiny_mlsvm(0.3))).unwrap();
+        assert_eq!(detect_format(&path).unwrap(), ModelFormat::V2Binary);
+    }
+
+    #[test]
+    fn v1_text_loads_bit_exactly_through_the_sniffing_reader() {
+        let dir = tmp_dir("v1_compat");
+        let m = tiny_mlsvm(0.45);
+        let v1 = dir.join("v1.model");
+        let v2 = dir.join("v2.model");
+        save_artifact_v1(&v1, &ModelArtifact::Mlsvm(m.clone())).unwrap();
+        save_artifact(&v2, &ModelArtifact::Mlsvm(m.clone())).unwrap();
+        assert_eq!(detect_format(&v1).unwrap(), ModelFormat::V1Text);
+        assert_eq!(detect_format(&v2).unwrap(), ModelFormat::V2Binary);
+        let ModelArtifact::Mlsvm(from_v1) = load_artifact(&v1).unwrap() else {
+            panic!("kind must round-trip");
+        };
+        let ModelArtifact::Mlsvm(from_v2) = load_artifact(&v2).unwrap() else {
+            panic!("kind must round-trip");
+        };
+        // Both paths must agree with the original bit for bit.
+        for x in probes() {
+            let want = m.model.decision(&x);
+            assert_eq!(from_v1.model.decision(&x), want, "v1 path");
+            assert_eq!(from_v2.model.decision(&x), want, "v2 path");
+        }
+        assert_eq!(from_v1.depths, from_v2.depths);
+        assert_eq!(from_v1.level_stats.len(), from_v2.level_stats.len());
+    }
+
+    #[test]
+    fn migrate_rewrites_text_and_legacy_models_to_binary() {
+        let dir = tmp_dir("migrate");
+        let reg = Registry::open(dir.join("models")).unwrap();
+        // One of each format: v1 text, legacy line file, already-v2.
+        save_artifact_v1(&reg.path_of("old-text"), &ModelArtifact::Mlsvm(tiny_mlsvm(0.2)))
+            .unwrap();
+        tiny_svm(0.9).save(reg.path_of("old-lines")).unwrap();
+        reg.save("already-v2", &ModelArtifact::Svm(tiny_svm(0.4))).unwrap();
+        let text_decisions: Vec<f64> = probes()
+            .iter()
+            .map(|x| tiny_mlsvm(0.2).model.decision(x))
+            .collect();
+
+        let reports = reg.migrate().unwrap();
+        assert_eq!(reports.len(), 2, "already-v2 must be skipped");
+        let names: Vec<&str> = reports.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, vec!["old-lines", "old-text"]);
+        assert_eq!(reports[0].from, ModelFormat::LegacyLines);
+        assert_eq!(reports[1].from, ModelFormat::V1Text);
+        assert!(reports.iter().all(|r| r.error.is_none()));
+        for name in ["old-text", "old-lines", "already-v2"] {
+            assert_eq!(
+                detect_format(reg.path_of(name)).unwrap(),
+                ModelFormat::V2Binary,
+                "{name}"
+            );
+        }
+        // Decisions survive the migration bit for bit.
+        let ModelArtifact::Mlsvm(back) = reg.load("old-text").unwrap() else {
+            panic!("kind preserved");
+        };
+        for (x, want) in probes().iter().zip(text_decisions) {
+            assert_eq!(back.model.decision(x), want);
+        }
+        // Migrating again is a no-op.
+        assert!(reg.migrate().unwrap().is_empty());
+    }
+
+    #[test]
+    fn migrate_survives_an_unreadable_model() {
+        // One corrupt file must not abort the run or hide the models that
+        // did convert.
+        let dir = tmp_dir("migrate_bad");
+        let reg = Registry::open(dir.join("models")).unwrap();
+        save_artifact_v1(reg.path_of("good"), &ModelArtifact::Svm(tiny_svm(0.3))).unwrap();
+        std::fs::write(reg.path_of("broken"), "kernel rbf not-a-number\n").unwrap();
+        let reports = reg.migrate().unwrap();
+        assert_eq!(reports.len(), 2);
+        let good = reports.iter().find(|r| r.name == "good").unwrap();
+        assert!(good.error.is_none());
+        assert_eq!(detect_format(reg.path_of("good")).unwrap(), ModelFormat::V2Binary);
+        let broken = reports.iter().find(|r| r.name == "broken").unwrap();
+        assert!(broken.error.is_some(), "corrupt model must be reported");
+        // The corrupt file is left untouched for inspection.
+        assert_eq!(
+            detect_format(reg.path_of("broken")).unwrap(),
+            ModelFormat::LegacyLines
+        );
     }
 }

@@ -11,23 +11,38 @@
 //! request before the previous response) is not supported; requests must
 //! be sequential on a connection.
 //!
-//! Endpoints:
+//! The front end is **multi-model**: an [`EngineManager`] lazily spawns
+//! one batching engine per registry model, and requests are routed to a
+//! model by name. Endpoints:
 //!
-//! | method | path             | body                     | answer |
-//! |--------|------------------|--------------------------|--------|
-//! | POST   | `/predict`       | one feature vector       | decision JSON |
-//! | POST   | `/predict-batch` | one vector per line      | JSON array |
-//! | POST   | `/reload?model=` | —                        | reload from the registry |
-//! | GET    | `/models`        | —                        | registry listing |
-//! | GET    | `/stats`         | —                        | engine counters |
-//! | GET    | `/healthz`       | —                        | `ok` |
+//! | method | path                              | body                | answer |
+//! |--------|-----------------------------------|---------------------|--------|
+//! | POST   | `/v1/models/{name}/predict`       | one feature vector  | decision JSON |
+//! | POST   | `/v1/models/{name}/predict-batch` | one vector per line | JSON array |
+//! | GET    | `/v1/models/{name}/stats`         | —                   | that model's counters |
+//! | POST   | `/v1/models/{name}/reload`        | —                   | re-read from the registry |
+//! | POST   | `/v1/models/{name}/evict`         | —                   | drop the engine |
+//! | GET    | `/v1/models`                      | —                   | per-model stats + fleet aggregate |
+//! | GET    | `/healthz`                        | —                   | `ok` |
+//!
+//! The legacy unprefixed routes (`/predict`, `/predict-batch`, `/stats`,
+//! `/models`, `/reload?model=`) are kept and map to the **default
+//! model**, so pre-multi-model clients keep working; the legacy
+//! `/reload` additionally switches the default to the reloaded name (its
+//! historical meaning: "serve this model now"). One deliberate
+//! difference: stats routes — legacy `/stats` included — are read-only
+//! and never spawn an engine, so `/stats` answers 503 until the default
+//! model's engine is running (`mlsvm serve` preloads it; embedders that
+//! construct [`ServeState`] directly should touch
+//! `manager.engine(default)` once at startup if their monitors poll
+//! stats before the first prediction).
 //!
 //! Feature vectors are whitespace/comma separated floats; `[1, 2, 3]`
 //! JSON arrays parse too (brackets are treated as separators).
 
 use crate::error::{Error, Result};
-use crate::serve::engine::{Decision, Engine};
-use crate::serve::registry::Registry;
+use crate::serve::engine::Decision;
+use crate::serve::manager::{EngineManager, ManagedEngine};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -56,33 +71,41 @@ const KEEPALIVE_IDLE: Duration = Duration::from_secs(10);
 /// (bounds how long a single client can pin a connection permit).
 const MAX_REQUESTS_PER_CONN: usize = 10_000;
 
-/// Everything a connection handler needs: the engine, the registry to
-/// reload from (optional), and the name of the currently served model.
+/// Everything a connection handler needs: the engine manager and the
+/// name the legacy unprefixed routes resolve to.
 pub struct ServeState {
-    /// The batching engine answering predictions.
-    pub engine: Engine,
-    /// Registry backing `/models` and `/reload` (None → those endpoints
-    /// report an error).
-    pub registry: Option<Registry>,
-    /// Name of the model currently loaded into the engine.
-    pub model_name: Mutex<String>,
+    /// One engine per model name, lazily spawned from the registry.
+    pub manager: EngineManager,
+    /// Model the legacy (unprefixed) routes are served by.
+    pub default_model: Mutex<String>,
 }
 
 impl ServeState {
-    /// Reload `name` from the registry into the engine. The name lock is
-    /// held across the engine swap so concurrent reloads serialize and
-    /// `model_name` always matches the scorer actually loaded.
+    /// New state serving `default_model` on the legacy routes.
+    pub fn new(manager: EngineManager, default_model: impl Into<String>) -> ServeState {
+        ServeState {
+            manager,
+            default_model: Mutex::new(default_model.into()),
+        }
+    }
+
+    /// Name the legacy routes currently resolve to.
+    pub fn default_model(&self) -> String {
+        self.default_model.lock().unwrap().clone()
+    }
+
+    /// Legacy reload: reload `name` from the registry (spawning its
+    /// engine if needed) and make it the default served model.
     pub fn reload(&self, name: &str) -> Result<String> {
-        let reg = self
-            .registry
-            .as_ref()
-            .ok_or_else(|| Error::Serve("no registry attached to this server".into()))?;
-        let artifact = reg.load(name)?;
-        let desc = artifact.describe();
-        let mut current = self.model_name.lock().unwrap();
-        self.engine.reload(&artifact)?;
-        *current = name.to_string();
+        let desc = self.manager.reload(name)?;
+        *self.default_model.lock().unwrap() = name.to_string();
         Ok(desc)
+    }
+
+    /// The engine behind the legacy routes.
+    fn default_engine(&self) -> Result<Arc<ManagedEngine>> {
+        let name = self.default_model();
+        self.manager.engine(&name)
     }
 }
 
@@ -418,52 +441,258 @@ fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
         .map(|(_, v)| v)
 }
 
-fn route(state: &ServeState, req: &HttpRequest) -> (&'static str, &'static str, String) {
-    const JSON: &str = "application/json";
+const JSON: &str = "application/json";
+
+type Response = (&'static str, &'static str, String);
+
+/// One model's counters, spliced with its serving identity.
+fn model_stats_json(me: &ManagedEngine) -> String {
+    let mut j = me.stats().to_json();
+    let extra = format!(
+        ",\"model\":\"{}\",\"model_kind\":\"{}\",\"dim\":{},\"queued\":{}}}",
+        json_escape(me.name()),
+        me.engine().model_kind(),
+        me.engine().dim(),
+        me.engine().queued()
+    );
+    j.truncate(j.len() - 1);
+    j.push_str(&extra);
+    j
+}
+
+fn predict_response(me: &ManagedEngine, body: &str) -> Response {
+    match parse_vector(body) {
+        Ok(x) => match me.engine().predict(&x) {
+            Ok(d) => ("200 OK", JSON, decision_json(&d)),
+            Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
+        },
+        Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
+    }
+}
+
+fn predict_batch_response(me: &ManagedEngine, body: &str) -> Response {
+    let mut rows = Vec::new();
+    for line in body.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_vector(line) {
+            Ok(x) => rows.push(x),
+            Err(e) => return ("400 Bad Request", JSON, error_json(&e.to_string())),
+        }
+    }
+    if rows.is_empty() {
+        return ("400 Bad Request", JSON, error_json("empty batch"));
+    }
+    // Submit everything, then collect: lets the engine batch.
+    let tickets: std::result::Result<Vec<_>, _> =
+        rows.iter().map(|x| me.engine().submit(x)).collect();
+    match tickets {
+        Ok(ts) => {
+            let mut out = Vec::with_capacity(ts.len());
+            for t in ts {
+                match t.wait() {
+                    Ok(d) => out.push(decision_json(&d)),
+                    Err(e) => {
+                        return ("500 Internal Server Error", JSON, error_json(&e.to_string()))
+                    }
+                }
+            }
+            ("200 OK", JSON, format!("{{\"decisions\":[{}]}}", out.join(",")))
+        }
+        Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
+    }
+}
+
+/// `/v1/models` listing: every registry and/or running model, per-model
+/// stats for the running ones, and the fleet aggregate.
+fn models_listing_json(state: &ServeState) -> Result<String> {
+    let mut names = state.manager.registry().list()?;
+    let loaded = state.manager.loaded();
+    for me in &loaded {
+        if !names.iter().any(|n| n == me.name()) {
+            names.push(me.name().to_string());
+        }
+    }
+    names.sort();
+    let mut parts = Vec::with_capacity(names.len());
+    let mut snaps = Vec::with_capacity(loaded.len());
+    for name in &names {
+        match loaded.iter().find(|m| m.name() == name) {
+            Some(me) => {
+                // One snapshot per model, reused for both the per-model
+                // JSON and the aggregate, so the listing is internally
+                // consistent (the aggregate equals the sum of the parts).
+                let snap = me.stats();
+                snaps.push(snap);
+                parts.push(format!(
+                    "{{\"name\":\"{}\",\"loaded\":true,\"kind\":\"{}\",\"dim\":{},\
+                     \"queued\":{},\"description\":\"{}\",\"stats\":{}}}",
+                    json_escape(name),
+                    me.engine().model_kind(),
+                    me.engine().dim(),
+                    me.engine().queued(),
+                    json_escape(&me.describe()),
+                    snap.to_json()
+                ));
+            }
+            None => parts.push(format!(
+                "{{\"name\":\"{}\",\"loaded\":false}}",
+                json_escape(name)
+            )),
+        }
+    }
+    let agg = crate::serve::stats::aggregate(&snaps);
+    Ok(format!(
+        "{{\"default\":\"{}\",\"models\":[{}],\"aggregate\":{}}}",
+        json_escape(&state.default_model()),
+        parts.join(","),
+        agg.to_json()
+    ))
+}
+
+/// A model-load failure answered with the right status: 404 when the
+/// name exists nowhere, 500 when the model exists but could not be
+/// loaded (corrupt file, I/O error) — a monitor must be able to tell a
+/// typo'd name from a broken artifact.
+fn load_failure(state: &ServeState, name: &str, e: &Error) -> Response {
+    if state.manager.knows(name) {
+        ("500 Internal Server Error", JSON, error_json(&e.to_string()))
+    } else {
+        ("404 Not Found", JSON, error_json(&e.to_string()))
+    }
+}
+
+/// Routed endpoints under `/v1/models`. `rest` is the path after the
+/// prefix (empty, or `/{name}/{action}`).
+fn route_v1_models(state: &ServeState, req: &HttpRequest, rest: &str) -> Response {
+    if rest.is_empty() || rest == "/" {
+        if req.method != "GET" {
+            return ("405 Method Not Allowed", JSON, error_json("use GET"));
+        }
+        return match models_listing_json(state) {
+            Ok(j) => ("200 OK", JSON, j),
+            Err(e) => ("500 Internal Server Error", JSON, error_json(&e.to_string())),
+        };
+    }
+    let rest = rest.trim_start_matches('/');
+    let (name, action) = match rest.split_once('/') {
+        Some((n, a)) => (n, a),
+        None => (rest, "stats"), // GET /v1/models/{name} ≡ its stats
+    };
+    if name.is_empty() {
+        return ("404 Not Found", JSON, error_json("missing model name"));
+    }
+    // Read-only stats must not spawn an engine as a side effect: a
+    // monitoring poll over cold model names would otherwise pull every
+    // registry model into memory.
+    if action == "stats" {
+        return if req.method != "GET" {
+            ("405 Method Not Allowed", JSON, error_json("use GET"))
+        } else {
+            match state.manager.get(name) {
+                Some(me) => ("200 OK", JSON, model_stats_json(&me)),
+                None => ("404 Not Found", JSON, error_json("model is not loaded")),
+            }
+        };
+    }
+    // Evict must not spawn the engine it is about to drop.
+    if action == "evict" {
+        return if req.method != "POST" {
+            ("405 Method Not Allowed", JSON, error_json("use POST"))
+        } else if state.manager.evict(name) {
+            (
+                "200 OK",
+                JSON,
+                format!("{{\"evicted\":\"{}\"}}", json_escape(name)),
+            )
+        } else {
+            ("404 Not Found", JSON, error_json("model is not loaded"))
+        };
+    }
+    if action == "reload" {
+        return if req.method != "POST" {
+            ("405 Method Not Allowed", JSON, error_json("use POST"))
+        } else {
+            match state.manager.reload(name) {
+                Ok(desc) => (
+                    "200 OK",
+                    JSON,
+                    format!(
+                        "{{\"reloaded\":\"{}\",\"model\":\"{}\"}}",
+                        json_escape(name),
+                        json_escape(&desc)
+                    ),
+                ),
+                Err(e) => load_failure(state, name, &e),
+            }
+        };
+    }
+    // Only the two predict actions may lazily spawn an engine; everything
+    // else answers without loading anything (an unknown action or wrong
+    // method on a cold model name must not pull it into memory).
+    match (req.method.as_str(), action) {
+        ("POST", "predict") | ("POST", "predict-batch") => {
+            let me = match state.manager.engine(name) {
+                Ok(me) => me,
+                Err(e) => return load_failure(state, name, &e),
+            };
+            if action == "predict" {
+                predict_response(&me, &req.body)
+            } else {
+                predict_batch_response(&me, &req.body)
+            }
+        }
+        ("GET", "predict") | ("GET", "predict-batch") => {
+            ("405 Method Not Allowed", JSON, error_json("use POST"))
+        }
+        _ => ("404 Not Found", JSON, error_json("no such endpoint")),
+    }
+}
+
+fn route(state: &ServeState, req: &HttpRequest) -> Response {
+    if let Some(rest) = req.path.strip_prefix("/v1/models") {
+        // Require a path-segment boundary: "/v1/modelstiny" is not a
+        // models route (it falls through to the 404 below).
+        if rest.is_empty() || rest.starts_with('/') {
+            return route_v1_models(state, req, rest);
+        }
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => ("200 OK", "text/plain", "ok\n".to_string()),
-        ("GET", "/stats") => {
-            let mut j = state.engine.stats().to_json();
-            // Splice serving context into the snapshot object.
-            let extra = format!(
-                ",\"model\":\"{}\",\"model_kind\":\"{}\",\"dim\":{},\"queued\":{}}}",
-                json_escape(&state.model_name.lock().unwrap()),
-                state.engine.model_kind(),
-                state.engine.dim(),
-                state.engine.queued()
-            );
-            j.truncate(j.len() - 1);
-            j.push_str(&extra);
-            ("200 OK", JSON, j)
-        }
-        ("GET", "/models") => match &state.registry {
-            Some(reg) => match reg.list() {
-                Ok(names) => {
-                    let list: Vec<String> =
-                        names.iter().map(|n| format!("\"{}\"", json_escape(n))).collect();
-                    let current = state.model_name.lock().unwrap().clone();
-                    (
-                        "200 OK",
-                        JSON,
-                        format!(
-                            "{{\"models\":[{}],\"serving\":\"{}\"}}",
-                            list.join(","),
-                            json_escape(&current)
-                        ),
-                    )
-                }
-                Err(e) => ("500 Internal Server Error", JSON, error_json(&e.to_string())),
-            },
+        // Legacy unprefixed routes: answered by the default model.
+        // Stats stay read-only here too: an evicted default model is
+        // reported unavailable, not respawned by a monitoring poll.
+        ("GET", "/stats") => match state.manager.get(&state.default_model()) {
+            Some(me) => ("200 OK", JSON, model_stats_json(&me)),
             None => (
                 "503 Service Unavailable",
                 JSON,
-                error_json("no registry attached"),
+                error_json("default model is not loaded"),
             ),
+        },
+        ("GET", "/models") => match state.manager.registry().list() {
+            Ok(names) => {
+                let list: Vec<String> = names
+                    .iter()
+                    .map(|n| format!("\"{}\"", json_escape(n)))
+                    .collect();
+                (
+                    "200 OK",
+                    JSON,
+                    format!(
+                        "{{\"models\":[{}],\"serving\":\"{}\"}}",
+                        list.join(","),
+                        json_escape(&state.default_model())
+                    ),
+                )
+            }
+            Err(e) => ("500 Internal Server Error", JSON, error_json(&e.to_string())),
         },
         ("POST", "/reload") => {
             let name = query_param(&req.query, "model")
                 .map(str::to_string)
-                .unwrap_or_else(|| state.model_name.lock().unwrap().clone());
+                .unwrap_or_else(|| state.default_model());
             match state.reload(&name) {
                 Ok(desc) => (
                     "200 OK",
@@ -477,54 +706,14 @@ fn route(state: &ServeState, req: &HttpRequest) -> (&'static str, &'static str, 
                 Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
             }
         }
-        ("POST", "/predict") => match parse_vector(&req.body) {
-            Ok(x) => match state.engine.predict(&x) {
-                Ok(d) => ("200 OK", JSON, decision_json(&d)),
-                Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
-            },
-            Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
+        ("POST", "/predict") => match state.default_engine() {
+            Ok(me) => predict_response(&me, &req.body),
+            Err(e) => ("503 Service Unavailable", JSON, error_json(&e.to_string())),
         },
-        ("POST", "/predict-batch") => {
-            let mut rows = Vec::new();
-            for line in req.body.lines() {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                match parse_vector(line) {
-                    Ok(x) => rows.push(x),
-                    Err(e) => return ("400 Bad Request", JSON, error_json(&e.to_string())),
-                }
-            }
-            if rows.is_empty() {
-                return ("400 Bad Request", JSON, error_json("empty batch"));
-            }
-            // Submit everything, then collect: lets the engine batch.
-            let tickets: std::result::Result<Vec<_>, _> =
-                rows.iter().map(|x| state.engine.submit(x)).collect();
-            match tickets {
-                Ok(ts) => {
-                    let mut out = Vec::with_capacity(ts.len());
-                    for t in ts {
-                        match t.wait() {
-                            Ok(d) => out.push(decision_json(&d)),
-                            Err(e) => {
-                                return (
-                                    "500 Internal Server Error",
-                                    JSON,
-                                    error_json(&e.to_string()),
-                                )
-                            }
-                        }
-                    }
-                    (
-                        "200 OK",
-                        JSON,
-                        format!("{{\"decisions\":[{}]}}", out.join(",")),
-                    )
-                }
-                Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
-            }
-        }
+        ("POST", "/predict-batch") => match state.default_engine() {
+            Ok(me) => predict_batch_response(&me, &req.body),
+            Err(e) => ("503 Service Unavailable", JSON, error_json(&e.to_string())),
+        },
         ("GET", _) | ("POST", _) => ("404 Not Found", JSON, error_json("no such endpoint")),
         _ => (
             "405 Method Not Allowed",
@@ -621,44 +810,46 @@ mod tests {
     use super::*;
     use crate::data::matrix::Matrix;
     use crate::serve::engine::EngineConfig;
-    use crate::serve::registry::ModelArtifact;
+    use crate::serve::registry::{ModelArtifact, Registry};
     use crate::svm::kernel::KernelKind;
     use crate::svm::model::SvmModel;
 
-    fn tiny_model() -> SvmModel {
+    fn tiny_model(gamma: f64) -> SvmModel {
         SvmModel {
             sv: Matrix::from_vec(2, 2, vec![1.0, 0.0, -1.0, 0.0]).unwrap(),
             sv_coef: vec![1.0, -1.0],
             rho: 0.0,
-            kernel: KernelKind::Rbf { gamma: 0.5 },
+            kernel: KernelKind::Rbf { gamma },
             sv_indices: Vec::new(),
             sv_labels: vec![1, -1],
         }
     }
 
-    fn start_server() -> (Server, Arc<ServeState>) {
-        let engine = Engine::new(
-            &ModelArtifact::Svm(tiny_model()),
+    /// Server over a temp registry holding "tiny" (the default model) and
+    /// "tiny2" (a second model under a different gamma).
+    fn start_server(tag: &str) -> (Server, Arc<ServeState>) {
+        let dir = std::env::temp_dir().join(format!("mlsvm_server_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = Registry::open(&dir).unwrap();
+        reg.save("tiny", &ModelArtifact::Svm(tiny_model(0.5))).unwrap();
+        reg.save("tiny2", &ModelArtifact::Svm(tiny_model(2.0))).unwrap();
+        let manager = EngineManager::open(
+            reg,
             EngineConfig {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
                 workers: 1,
                 queue_cap: 64,
             },
-        )
-        .unwrap();
-        let state = Arc::new(ServeState {
-            engine,
-            registry: None,
-            model_name: Mutex::new("tiny".into()),
-        });
+        );
+        let state = Arc::new(ServeState::new(manager, "tiny"));
         let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
         (server, state)
     }
 
     #[test]
     fn predict_and_health_endpoints_answer() {
-        let (server, _state) = start_server();
+        let (server, _state) = start_server("basic");
         let addr = server.addr();
         let (code, body) = http_request(&addr, "GET", "/healthz", "").unwrap();
         assert_eq!(code, 200);
@@ -675,7 +866,7 @@ mod tests {
 
     #[test]
     fn batch_stats_and_errors() {
-        let (server, _state) = start_server();
+        let (server, _state) = start_server("stats");
         let addr = server.addr();
         let batch = "1.0 0.0\n-1.0 0.0\n0.5 0.5\n";
         let (code, body) = http_request(&addr, "POST", "/predict-batch", batch).unwrap();
@@ -692,16 +883,96 @@ mod tests {
         assert_eq!(code, 400, "dimension mismatch is a client error");
         let (code, _) = http_request(&addr, "GET", "/nope", "").unwrap();
         assert_eq!(code, 404);
-        // No registry attached: /models is unavailable, /reload fails.
-        let (code, _) = http_request(&addr, "GET", "/models", "").unwrap();
-        assert_eq!(code, 503);
+        // Legacy listing keeps its v1 shape; reloading a missing model
+        // is a client error and leaves the default serving.
+        let (code, body) = http_request(&addr, "GET", "/models", "").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("\"tiny\"") && body.contains("\"serving\":\"tiny\""), "{body}");
         let (code, _) = http_request(&addr, "POST", "/reload?model=x", "").unwrap();
         assert_eq!(code, 400);
+        let (code, _) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+        assert_eq!(code, 200);
+    }
+
+    #[test]
+    fn routed_endpoints_serve_two_models_with_their_own_stats() {
+        let (server, state) = start_server("routed");
+        let addr = server.addr();
+        // The same probe through both models: decisions must differ
+        // (different gammas) and each engine counts only its own traffic.
+        let (code, b1) =
+            http_request(&addr, "POST", "/v1/models/tiny/predict", "0.9, 0.1").unwrap();
+        assert_eq!(code, 200, "{b1}");
+        let (code, b2) =
+            http_request(&addr, "POST", "/v1/models/tiny2/predict", "0.9, 0.1").unwrap();
+        assert_eq!(code, 200, "{b2}");
+        assert!(b1.contains("\"label\":1"), "{b1}");
+        assert!(b2.contains("\"label\":1"), "{b2}");
+        assert_ne!(b1, b2, "different models must give different decision values");
+        let (code, body) =
+            http_request(&addr, "POST", "/v1/models/tiny2/predict-batch", "1 0\n-1 0\n").unwrap();
+        assert_eq!(code, 200, "{body}");
+        // Per-model stats: tiny served 1, tiny2 served 3.
+        let (code, s1) = http_request(&addr, "GET", "/v1/models/tiny/stats", "").unwrap();
+        assert_eq!(code, 200);
+        assert!(s1.contains("\"completed\":1"), "{s1}");
+        assert!(s1.contains("\"model\":\"tiny\""), "{s1}");
+        let (code, s2) = http_request(&addr, "GET", "/v1/models/tiny2/stats", "").unwrap();
+        assert_eq!(code, 200);
+        assert!(s2.contains("\"completed\":3"), "{s2}");
+        // Listing shows both as loaded, with the fleet aggregate.
+        let (code, listing) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+        assert_eq!(code, 200);
+        assert!(listing.contains("\"default\":\"tiny\""), "{listing}");
+        assert!(listing.contains("\"name\":\"tiny\""), "{listing}");
+        assert!(listing.contains("\"name\":\"tiny2\""), "{listing}");
+        assert!(listing.contains("\"aggregate\""), "{listing}");
+        assert_eq!(state.manager.loaded_names(), vec!["tiny", "tiny2"]);
+        // Unknown names 404 on routed endpoints.
+        let (code, _) = http_request(&addr, "POST", "/v1/models/ghost/predict", "1 2").unwrap();
+        assert_eq!(code, 404);
+        // Evict tiny2; it disappears from the loaded set but stays listed
+        // as a registry model.
+        let (code, _) = http_request(&addr, "POST", "/v1/models/tiny2/evict", "").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(state.manager.loaded_names(), vec!["tiny"]);
+        let (code, listing) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+        assert_eq!(code, 200);
+        assert!(listing.contains("\"name\":\"tiny2\",\"loaded\":false"), "{listing}");
+        let (code, _) = http_request(&addr, "POST", "/v1/models/tiny2/evict", "").unwrap();
+        assert_eq!(code, 404, "evicting an unloaded model is a 404");
+        // Read-only stats must not respawn the evicted engine.
+        let (code, _) = http_request(&addr, "GET", "/v1/models/tiny2/stats", "").unwrap();
+        assert_eq!(code, 404, "stats on an unloaded model is a 404, not a spawn");
+        assert_eq!(state.manager.loaded_names(), vec!["tiny"]);
+        // Routed reload respawns it without touching the default.
+        let (code, _) = http_request(&addr, "POST", "/v1/models/tiny2/reload", "").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(state.default_model(), "tiny");
+        assert_eq!(state.manager.loaded_names(), vec!["tiny", "tiny2"]);
+    }
+
+    #[test]
+    fn legacy_reload_switches_the_default_model() {
+        let (server, state) = start_server("legacy_reload");
+        let addr = server.addr();
+        let (code, _) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+        assert_eq!(code, 200);
+        let (code, body) = http_request(&addr, "POST", "/reload?model=tiny2", "").unwrap();
+        assert_eq!(code, 200, "{body}");
+        assert_eq!(state.default_model(), "tiny2");
+        let (code, body) = http_request(&addr, "GET", "/models", "").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("\"serving\":\"tiny2\""), "{body}");
+        // Legacy stats now report the new default.
+        let (code, body) = http_request(&addr, "GET", "/stats", "").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("\"model\":\"tiny2\""), "{body}");
     }
 
     #[test]
     fn keep_alive_serves_many_requests_on_one_connection() {
-        let (server, _state) = start_server();
+        let (server, _state) = start_server("keepalive");
         let addr = server.addr();
         let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).unwrap();
         stream.set_nodelay(true).unwrap();
@@ -721,7 +992,7 @@ mod tests {
 
     #[test]
     fn connection_close_is_honored() {
-        let (server, _state) = start_server();
+        let (server, _state) = start_server("connclose");
         let addr = server.addr();
         // The one-shot client sends `Connection: close`; after the
         // response the server must close (EOF on the next read).
@@ -749,7 +1020,7 @@ mod tests {
 
     #[test]
     fn http10_without_keepalive_closes() {
-        let (server, _state) = start_server();
+        let (server, _state) = start_server("http10");
         let addr = server.addr();
         let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).unwrap();
         stream
@@ -785,7 +1056,7 @@ mod tests {
 
     #[test]
     fn shutdown_is_idempotent() {
-        let (mut server, _state) = start_server();
+        let (mut server, _state) = start_server("shutdown");
         server.shutdown();
         server.shutdown();
     }

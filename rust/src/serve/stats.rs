@@ -9,6 +9,10 @@
 //!   [`crate::coordinator::Router`] that wraps it);
 //! * [`EngineStats`] — atomic counters plus a latency histogram, shared by
 //!   the worker threads of [`crate::serve::engine::Engine`].
+//!
+//! Multi-model serving adds [`aggregate`]: the per-model
+//! [`StatsSnapshot`]s of an engine fleet folded into one fleet-wide view
+//! for the `/v1/models` listing.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -281,6 +285,63 @@ impl StatsSnapshot {
     }
 }
 
+/// Fold per-model snapshots into one fleet-wide view.
+///
+/// Counters and throughput sum; uptime is the oldest engine's;
+/// utilization is recomputed from the summed counters. Latency
+/// percentiles cannot be merged exactly from snapshots, so `p50`/`p95`/
+/// `p99` are **completed-weighted averages** of the per-model values (the
+/// mean is exact under the same weighting) — good enough for the fleet
+/// monitoring view; per-model snapshots stay available for anything
+/// sharper.
+pub fn aggregate(snaps: &[StatsSnapshot]) -> StatsSnapshot {
+    let mut out = StatsSnapshot {
+        uptime_secs: 0.0,
+        requests: 0,
+        completed: 0,
+        batches: 0,
+        deadline_flushes: 0,
+        slots: 0,
+        backpressure_waits: 0,
+        reloads: 0,
+        utilization: 0.0,
+        throughput_rps: 0.0,
+        p50: 0.0,
+        p95: 0.0,
+        p99: 0.0,
+        mean: 0.0,
+    };
+    let mut weight = 0u64;
+    for s in snaps {
+        out.uptime_secs = out.uptime_secs.max(s.uptime_secs);
+        out.requests += s.requests;
+        out.completed += s.completed;
+        out.batches += s.batches;
+        out.deadline_flushes += s.deadline_flushes;
+        out.slots += s.slots;
+        out.backpressure_waits += s.backpressure_waits;
+        out.reloads += s.reloads;
+        out.throughput_rps += s.throughput_rps;
+        let w = s.completed as f64;
+        out.p50 += s.p50 * w;
+        out.p95 += s.p95 * w;
+        out.p99 += s.p99 * w;
+        out.mean += s.mean * w;
+        weight += s.completed;
+    }
+    if weight > 0 {
+        let w = weight as f64;
+        out.p50 /= w;
+        out.p95 /= w;
+        out.p99 /= w;
+        out.mean /= w;
+    }
+    if out.slots > 0 {
+        out.utilization = out.completed as f64 / out.slots as f64;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -342,6 +403,43 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.percentile(0.5), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_weights_latencies() {
+        let mk = |completed: u64, slots: u64, p99: f64, rps: f64| StatsSnapshot {
+            uptime_secs: completed as f64,
+            requests: completed,
+            completed,
+            batches: 1,
+            deadline_flushes: 0,
+            slots,
+            backpressure_waits: 2,
+            reloads: 1,
+            utilization: 0.0,
+            throughput_rps: rps,
+            p50: p99 / 2.0,
+            p95: p99,
+            p99,
+            mean: p99 / 2.0,
+        };
+        let a = mk(30, 40, 0.010, 100.0);
+        let b = mk(10, 40, 0.050, 50.0);
+        let agg = aggregate(&[a, b]);
+        assert_eq!(agg.completed, 40);
+        assert_eq!(agg.slots, 80);
+        assert_eq!(agg.batches, 2);
+        assert_eq!(agg.reloads, 2);
+        assert!((agg.utilization - 0.5).abs() < 1e-12);
+        assert!((agg.throughput_rps - 150.0).abs() < 1e-9);
+        assert!((agg.uptime_secs - 30.0).abs() < 1e-12, "oldest engine wins");
+        // Weighted: (30*0.010 + 10*0.050) / 40 = 0.020
+        assert!((agg.p99 - 0.020).abs() < 1e-12, "p99={}", agg.p99);
+        // Empty fleet is all zeros, no NaNs.
+        let z = aggregate(&[]);
+        assert_eq!(z.completed, 0);
+        assert_eq!(z.p99, 0.0);
+        assert_eq!(z.utilization, 0.0);
     }
 
     #[test]

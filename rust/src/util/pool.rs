@@ -64,6 +64,16 @@ thread_local! {
     static IN_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
 }
 
+/// Whether the current thread is a pool worker. Code that spawns its own
+/// scoped threads for coarse-grained concurrency (e.g.
+/// `Hierarchy::build_pair`) checks this to stay sequential inside a pool
+/// section: a freshly spawned thread starts with a clean thread-local,
+/// so it would escape the nested-parallelism guard and re-enable
+/// threads² fan-out.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|c| c.get())
+}
+
 /// Run `f(i)` for every `i` in `0..n`, potentially in parallel.
 ///
 /// `f` must be `Sync` (it is shared by reference across workers). Work is

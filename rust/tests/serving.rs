@@ -6,19 +6,20 @@
 use mlsvm::coordinator::jobs::OneVsRestTrainer;
 use mlsvm::data::matrix::Matrix;
 use mlsvm::data::synth::two_gaussians;
+use mlsvm::error::Error;
 use mlsvm::mlsvm::params::MlsvmParams;
 use mlsvm::mlsvm::trainer::MlsvmTrainer;
 use mlsvm::modelsel::search::UdSearchConfig;
 use mlsvm::serve::{
-    http_request, load_artifact, save_artifact, Decision, Engine, EngineConfig, ModelArtifact,
-    Registry, ServeState, Server,
+    http_request, load_artifact, save_artifact, save_artifact_v1, Decision, Engine, EngineConfig,
+    EngineManager, ModelArtifact, Registry, ServeState, Server,
 };
 use mlsvm::svm::kernel::KernelKind;
 use mlsvm::svm::model::SvmModel;
 use mlsvm::svm::smo::{train, SvmParams};
 use mlsvm::util::rng::Pcg64;
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn tmp_dir(tag: &str) -> PathBuf {
@@ -204,21 +205,16 @@ fn http_server_serves_registry_model_end_to_end() {
     let model2 = train(&ds.points, &ds.labels, &p2).unwrap();
     reg.save("m2", &ModelArtifact::Svm(model2)).unwrap();
 
-    let engine = Engine::new(
-        &reg.load("m1").unwrap(),
+    let manager = EngineManager::open(
+        Registry::open(&dir).unwrap(),
         EngineConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
             workers: 2,
             queue_cap: 128,
         },
-    )
-    .unwrap();
-    let state = Arc::new(ServeState {
-        engine,
-        registry: Some(Registry::open(&dir).unwrap()),
-        model_name: Mutex::new("m1".into()),
-    });
+    );
+    let state = Arc::new(ServeState::new(manager, "m1"));
     let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
     let addr = server.addr();
 
@@ -295,6 +291,219 @@ fn serve_cli_answers_http_from_a_registry_model() {
     assert_eq!(code, 200, "{resp}");
     let want = if model.decision(ds.points.row(3)) > 0.0 { 1 } else { -1 };
     assert!(resp.contains(&format!("\"label\":{want}")), "{resp}");
+
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+#[test]
+fn two_engines_serve_two_models_concurrently_through_one_server() {
+    // The tentpole acceptance scenario: two registry models, one HTTP
+    // server, concurrent clients on both routed endpoints, per-model
+    // stats that add up.
+    let (model_a, ds) = binary_fixture(71);
+    let p_b = SvmParams {
+        kernel: KernelKind::Rbf { gamma: 1.2 },
+        ..Default::default()
+    };
+    let model_b = train(&ds.points, &ds.labels, &p_b).unwrap();
+    let dir = tmp_dir("multi_model");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("alpha", &ModelArtifact::Svm(model_a.clone())).unwrap();
+    reg.save("beta", &ModelArtifact::Svm(model_b.clone())).unwrap();
+
+    let manager = EngineManager::open(
+        Registry::open(&dir).unwrap(),
+        EngineConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            queue_cap: 128,
+        },
+    );
+    let state = Arc::new(ServeState::new(manager, "alpha"));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+    let addr = server.addr();
+
+    let n_threads = 6;
+    let per_thread = 20;
+    std::thread::scope(|s| {
+        let ds = &ds;
+        let model_a = &model_a;
+        let model_b = &model_b;
+        for t in 0..n_threads {
+            s.spawn(move || {
+                for r in 0..per_thread {
+                    let i = (t * 41 + r * 13) % ds.len();
+                    let (name, model): (&str, &SvmModel) = if (t + r) % 2 == 0 {
+                        ("alpha", model_a)
+                    } else {
+                        ("beta", model_b)
+                    };
+                    let body: Vec<String> =
+                        ds.points.row(i).iter().map(|v| v.to_string()).collect();
+                    let target = format!("/v1/models/{name}/predict");
+                    let (code, resp) =
+                        http_request(&addr, "POST", &target, &body.join(",")).unwrap();
+                    assert_eq!(code, 200, "{target}: {resp}");
+                    let want = if model.decision(ds.points.row(i)) > 0.0 { 1 } else { -1 };
+                    assert!(
+                        resp.contains(&format!("\"label\":{want}")),
+                        "{target} row {i}: {resp}"
+                    );
+                }
+            });
+        }
+    });
+    // Per-model stats: both engines served, and the totals add up.
+    let alpha = state.manager.engine("alpha").unwrap().stats();
+    let beta = state.manager.engine("beta").unwrap().stats();
+    assert!(alpha.completed > 0 && beta.completed > 0);
+    assert_eq!(
+        alpha.completed + beta.completed,
+        (n_threads * per_thread) as u64
+    );
+    // The routed listing reports both models with stats.
+    let (code, listing) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(listing.contains("\"name\":\"alpha\"") && listing.contains("\"name\":\"beta\""));
+    assert!(listing.contains("\"aggregate\""), "{listing}");
+}
+
+#[test]
+fn v1_text_and_legacy_files_load_bit_exactly_and_migrate() {
+    // Registry compatibility on REAL trained models: a v1-text mlsvm file
+    // and a legacy line file must load through the sniffing reader with
+    // decisions bit-identical to the v2 binary path, and `migrate` must
+    // rewrite both without changing a single decision bit.
+    let mut rng = Pcg64::seed_from(13);
+    let ds = two_gaussians(400, 120, 5, 3.5, &mut rng);
+    let mlsvm_model = MlsvmTrainer::new(quick_params(13)).train(&ds, &mut rng).unwrap();
+    let dir = tmp_dir("v1_v2_compat");
+    let reg = Registry::open(&dir).unwrap();
+
+    // v1 text + legacy line files written directly into the registry dir.
+    save_artifact_v1(
+        reg.path_of("text-model"),
+        &ModelArtifact::Mlsvm(mlsvm_model.clone()),
+    )
+    .unwrap();
+    mlsvm_model.model.save(reg.path_of("line-model")).unwrap();
+    // v2 binary reference.
+    reg.save("bin-model", &ModelArtifact::Mlsvm(mlsvm_model.clone())).unwrap();
+
+    let want: Vec<f64> = (0..ds.len())
+        .map(|i| mlsvm_model.model.decision(ds.points.row(i)))
+        .collect();
+    for name in ["text-model", "line-model", "bin-model"] {
+        let artifact = reg.load(name).unwrap();
+        let m = match &artifact {
+            ModelArtifact::Svm(m) => m,
+            ModelArtifact::Mlsvm(m) => &m.model,
+            ModelArtifact::Multiclass(_) => panic!("unexpected kind"),
+        };
+        for (i, w) in want.iter().enumerate() {
+            assert!(
+                m.decision(ds.points.row(i)) == *w,
+                "{name} row {i}: decisions must be bit-for-bit"
+            );
+        }
+    }
+    // Migrate, then re-check every decision bit.
+    let reports = reg.migrate().unwrap();
+    assert_eq!(reports.len(), 2);
+    for name in ["text-model", "line-model", "bin-model"] {
+        let artifact = reg.load(name).unwrap();
+        let m = match &artifact {
+            ModelArtifact::Svm(m) => m,
+            ModelArtifact::Mlsvm(m) => &m.model,
+            ModelArtifact::Multiclass(_) => panic!("unexpected kind"),
+        };
+        for (i, w) in want.iter().enumerate() {
+            assert!(m.decision(ds.points.row(i)) == *w, "post-migrate {name} row {i}");
+        }
+    }
+}
+
+#[test]
+fn corrupted_binary_models_fail_with_serve_errors() {
+    let (model, _) = binary_fixture(67);
+    let dir = tmp_dir("corrupt");
+    let path = dir.join("m.model");
+    save_artifact(&path, &ModelArtifact::Svm(model)).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // Truncated file.
+    let tpath = dir.join("t.model");
+    std::fs::write(&tpath, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(matches!(load_artifact(&tpath).unwrap_err(), Error::Serve(_)));
+    // Corrupted section tag (first section starts right after the
+    // 16-byte header).
+    let mut bad = bytes.clone();
+    bad[16] ^= 0xff;
+    let bpath = dir.join("b.model");
+    std::fs::write(&bpath, &bad).unwrap();
+    assert!(matches!(load_artifact(&bpath).unwrap_err(), Error::Serve(_)));
+}
+
+#[test]
+fn serve_cli_hosts_multiple_models() {
+    use std::io::BufRead;
+    let (model, ds) = binary_fixture(59);
+    let p2 = SvmParams {
+        kernel: KernelKind::Rbf { gamma: 1.8 },
+        ..Default::default()
+    };
+    let model2 = train(&ds.points, &ds.labels, &p2).unwrap();
+    let dir = tmp_dir("cli_multi");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("first", &ModelArtifact::Svm(model.clone())).unwrap();
+    reg.save("second", &ModelArtifact::Svm(model2.clone())).unwrap();
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+        .args([
+            "serve",
+            "--registry",
+            dir.to_str().unwrap(),
+            "--models",
+            "first,second",
+            "--addr",
+            "127.0.0.1:0",
+            "--max-seconds",
+            "120",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn mlsvm serve");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut banner = String::new();
+    reader.read_line(&mut banner).unwrap();
+    let addr_str = banner
+        .split("http://")
+        .nth(1)
+        .unwrap_or_else(|| panic!("no address in banner '{banner}'"))
+        .trim();
+    let addr: std::net::SocketAddr = addr_str.parse().expect("server address");
+
+    // Both models answer on their routed endpoints; the first is also
+    // the default behind the legacy route.
+    let body: Vec<String> = ds.points.row(5).iter().map(|v| v.to_string()).collect();
+    let body = body.join(",");
+    let (code, r1) = http_request(&addr, "POST", "/v1/models/first/predict", &body).unwrap();
+    assert_eq!(code, 200, "{r1}");
+    let (code, r2) = http_request(&addr, "POST", "/v1/models/second/predict", &body).unwrap();
+    assert_eq!(code, 200, "{r2}");
+    let want1 = if model.decision(ds.points.row(5)) > 0.0 { 1 } else { -1 };
+    let want2 = if model2.decision(ds.points.row(5)) > 0.0 { 1 } else { -1 };
+    assert!(r1.contains(&format!("\"label\":{want1}")), "{r1}");
+    assert!(r2.contains(&format!("\"label\":{want2}")), "{r2}");
+    let (code, legacy) = http_request(&addr, "POST", "/predict", &body).unwrap();
+    assert_eq!(code, 200);
+    assert!(legacy.contains(&format!("\"label\":{want1}")), "{legacy}");
+    let (code, listing) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(listing.contains("\"default\":\"first\""), "{listing}");
 
     let _ = child.kill();
     let _ = child.wait();
