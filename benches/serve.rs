@@ -3,7 +3,9 @@
 //! ephemeral localhost port, and drives concurrent clients against it —
 //! measuring p50/p95/p99 latency, throughput, and batch utilization as
 //! the batch size sweeps, plus a **mixed multi-model workload** (clients
-//! alternating between two `/v1/models/{name}/predict` routes) and a
+//! alternating between two `/v1/models/{name}/predict` routes, with
+//! per-model latency percentiles), a **pipelined-vs-sequential**
+//! single-connection comparison (the HTTP/1.1 pipelining payoff), and a
 //! **v1-text-vs-v2-binary model load-time** measurement on a large
 //! synthetic SV set (the registry-v2 payoff), all emitted into
 //! `BENCH_serve.json`.
@@ -20,8 +22,9 @@
 use mlsvm::data::matrix::Matrix;
 use mlsvm::data::synth::two_gaussians;
 use mlsvm::serve::{
-    http_request, http_request_on, load_artifact, save_artifact, save_artifact_v1, EngineConfig,
-    EngineManager, ModelArtifact, Registry, ServeState, Server,
+    http_pipeline_on, http_request, http_request_on, load_artifact, save_artifact,
+    save_artifact_v1, EngineConfig, EngineManager, ModelArtifact, Registry, ServeState, Server,
+    MAX_PIPELINE_DEPTH,
 };
 use mlsvm::svm::kernel::KernelKind;
 use mlsvm::svm::model::SvmModel;
@@ -148,7 +151,8 @@ fn run_load(
 /// Mixed multi-model workload: every client alternates between the two
 /// routed predict endpoints on one connection, so both engines batch
 /// concurrently behind one server. Returns the combined numbers plus a
-/// JSON fragment with per-model stats.
+/// JSON fragment with per-model stats **and per-model latency
+/// percentiles** (client-side, keyed by which route each request hit).
 fn run_multi_model(
     registry_dir: &std::path::Path,
     queries: &[Vec<f32>],
@@ -165,10 +169,12 @@ fn run_multi_model(
     state.manager.engine("bench-wide").expect("warm bench-wide");
     let server = Server::start("127.0.0.1:0", Arc::clone(&state)).expect("server");
     let addr = server.addr();
+    let model_names = ["bench", "bench-wide"];
     let targets = ["/v1/models/bench/predict", "/v1/models/bench-wide/predict"];
 
     let t0 = Instant::now();
-    let mut latencies: Vec<f64> = std::thread::scope(|s| {
+    // (model index, latency) per request, so latencies split per model.
+    let tagged: Vec<(usize, f64)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
                 let targets = &targets;
@@ -182,12 +188,12 @@ fn run_multi_model(
                         let q = &queries[(c * 131 + r * 17) % queries.len()];
                         let body: Vec<String> = q.iter().map(|v| v.to_string()).collect();
                         let body = body.join(",");
-                        let target = targets[(c + r) % targets.len()];
+                        let ti = (c + r) % targets.len();
                         let t = Instant::now();
-                        let (code, resp) =
-                            http_request_on(&stream, "POST", target, &body).expect("request");
-                        assert_eq!(code, 200, "{target}: {resp}");
-                        lats.push(t.elapsed().as_secs_f64());
+                        let (code, resp) = http_request_on(&stream, "POST", targets[ti], &body)
+                            .expect("request");
+                        assert_eq!(code, 200, "{}: {resp}", targets[ti]);
+                        lats.push((ti, t.elapsed().as_secs_f64()));
                     }
                     lats
                 })
@@ -199,25 +205,36 @@ fn run_multi_model(
             .collect()
     });
     let seconds = t0.elapsed().as_secs_f64();
+    let mut latencies: Vec<f64> = tagged.iter().map(|(_, l)| *l).collect();
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let total = clients * requests_per_client;
     let rps = total as f64 / seconds.max(1e-9);
     let mut per_model = Vec::new();
-    for me in state.manager.loaded() {
+    for (mi, name) in model_names.iter().enumerate() {
+        // `get`, not `engine`: the stats read must not respawn anything.
+        let me = state.manager.get(name).expect("engine loaded");
         let st = me.stats();
+        let mut lats: Vec<f64> = tagged
+            .iter()
+            .filter(|(ti, _)| *ti == mi)
+            .map(|(_, l)| *l)
+            .collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (p50, p95, p99) = (
+            percentile_ms(&lats, 0.50),
+            percentile_ms(&lats, 0.95),
+            percentile_ms(&lats, 0.99),
+        );
         per_model.push(format!(
-            "{{\"model\": \"{}\", \"completed\": {}, \"batches\": {}, \"utilization\": {:.4}}}",
-            me.name(),
-            st.completed,
-            st.batches,
-            st.utilization
+            "{{\"model\": \"{name}\", \"completed\": {}, \"batches\": {}, \
+             \"utilization\": {:.4}, \"p50_ms\": {p50:.3}, \"p95_ms\": {p95:.3}, \
+             \"p99_ms\": {p99:.3}}}",
+            st.completed, st.batches, st.utilization
         ));
         println!(
-            "  multi-model   {:<12} completed={:<6} batches={:<5} utilization={:.3}",
-            me.name(),
-            st.completed,
-            st.batches,
-            st.utilization
+            "  multi-model   {name:<12} completed={:<6} batches={:<5} utilization={:.3} \
+             p50={p50:.3}ms p95={p95:.3}ms p99={p99:.3}ms",
+            st.completed, st.batches, st.utilization
         );
     }
     println!(
@@ -233,6 +250,83 @@ fn run_multi_model(
         percentile_ms(&latencies, 0.95),
         percentile_ms(&latencies, 0.99),
         per_model.join(", ")
+    )
+}
+
+/// Single-connection throughput: sequential keep-alive (one outstanding
+/// request) vs HTTP/1.1 pipelined bursts of `depth` requests written in
+/// one syscall and read back in order. Pipelining keeps the engine's
+/// batcher fed from ONE connection, so flushes trigger on size instead
+/// of paying the deadline wait per request — the single-connection
+/// throughput unlock.
+fn run_pipelining(
+    registry_dir: &std::path::Path,
+    queries: &[Vec<f32>],
+    total: usize,
+    depth: usize,
+) -> String {
+    let manager = EngineManager::open(
+        Registry::open(registry_dir).expect("registry"),
+        engine_cfg(16),
+    );
+    let state = Arc::new(ServeState::new(manager, "bench"));
+    state.manager.engine("bench").expect("warm engine");
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).expect("server");
+    let addr = server.addr();
+    let body_of = |r: usize| -> String {
+        let q = &queries[(r * 17) % queries.len()];
+        let toks: Vec<String> = q.iter().map(|v| v.to_string()).collect();
+        toks.join(",")
+    };
+    let connect = || {
+        let s = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).expect("connect");
+        s.set_nodelay(true).ok();
+        s.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        s
+    };
+
+    // Sequential keep-alive reference.
+    let stream = connect();
+    let t0 = Instant::now();
+    for r in 0..total {
+        let (code, resp) =
+            http_request_on(&stream, "POST", "/predict", &body_of(r)).expect("request");
+        assert_eq!(code, 200, "{resp}");
+    }
+    let seq_s = t0.elapsed().as_secs_f64();
+
+    // Pipelined bursts on a fresh connection.
+    let stream = connect();
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < total {
+        let burst = depth.min(total - done);
+        let bodies: Vec<String> = (done..done + burst).map(body_of).collect();
+        let reqs: Vec<(&str, &str, &str)> = bodies
+            .iter()
+            .map(|b| ("POST", "/predict", b.as_str()))
+            .collect();
+        for (code, resp) in http_pipeline_on(&stream, &reqs).expect("pipelined burst") {
+            assert_eq!(code, 200, "{resp}");
+        }
+        done += burst;
+    }
+    let pipe_s = t0.elapsed().as_secs_f64();
+
+    let seq_rps = total as f64 / seq_s.max(1e-9);
+    let pipe_rps = total as f64 / pipe_s.max(1e-9);
+    let speedup = pipe_rps / seq_rps.max(1e-9);
+    println!(
+        "  1 connection, {total} requests: sequential {seq_rps:.0} req/s | \
+         pipelined depth {depth}: {pipe_rps:.0} req/s | {speedup:.1}x"
+    );
+    if pipe_rps <= seq_rps {
+        eprintln!("WARNING: pipelining did not beat sequential keep-alive");
+    }
+    format!(
+        "{{\n    \"requests\": {total}, \"depth\": {depth}, \
+         \"sequential_rps\": {seq_rps:.1}, \"pipelined_rps\": {pipe_rps:.1}, \
+         \"speedup\": {speedup:.2}\n  }}"
     )
 }
 
@@ -443,6 +537,15 @@ fn main() {
     println!("\nmulti-model workload (clients alternate between 2 routed models):");
     let multi_json = run_multi_model(&dir, &queries, clients, requests);
 
+    // Pipelined vs sequential single-connection throughput.
+    println!("\npipelining (single connection, in-order responses):");
+    let pipeline_json = run_pipelining(
+        &dir,
+        &queries,
+        (requests * 2).max(200),
+        MAX_PIPELINE_DEPTH / 2,
+    );
+
     // Registry v2 payoff: load-time v1 text vs v2 binary on a big model.
     let io_json = measure_model_io(&dir, io_svs, 32);
 
@@ -471,7 +574,8 @@ fn main() {
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"threads\": {},\n  \"clients\": {clients},\n  \
          \"requests_per_client\": {requests},\n  \"configs\": [\n{}\n  ],\n  \"multi_model\": \
-         {multi_json},\n  \"model_io\": {io_json},\n  \"headline\": \
+         {multi_json},\n  \"pipelining\": {pipeline_json},\n  \"model_io\": {io_json},\n  \
+         \"headline\": \
          {{\"max_batch\": {}, \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
          \"p99_ms\": {:.3}, \"utilization\": {:.4}}}\n}}\n",
         mlsvm::util::pool::num_threads(),

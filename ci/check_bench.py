@@ -27,14 +27,20 @@ highest thread count falls below --min-speedup (0 disables; shared CI
 runners make wall-clock gates flaky, so the speedup is reported rather
 than gated by default).
 
-A third mode gates the serving bench's model-I/O measurement:
+A third mode gates the serving bench:
 
   check_bench.py --serve BENCH_serve.json [--min-load-speedup 5]
 
 fails (exit 1) when the v2 binary model load is not bit-exact against
 the v1 text load, or when its load-time speedup over v1 falls below the
 threshold (default 5; the bench itself typically shows well over 10x on
-a >=50k-SV model, but shared runners get a margin).
+a >=50k-SV model, but shared runners get a margin). It also sanity-
+checks the multi_model section (per-model completed counters must sum
+to the combined request total, and every per-model entry must carry
+p50/p95/p99 latencies) and the pipelining section (the pipelined client
+must beat sequential keep-alive on one connection — the feature's whole
+point; a wall-clock-robust gate because both run on the same box
+back-to-back).
 
 Usage:
   check_bench.py <baseline.json> <current.json>
@@ -120,6 +126,60 @@ def check_serve(path: str, min_load_speedup: float) -> int:
         failed = True
     else:
         print(f"v2 load speedup: {speedup:.1f}x (gate: >= {min_load_speedup}x) OK")
+
+    mm = data.get("multi_model")
+    if not isinstance(mm, dict):
+        print(f"{path} has no multi_model section (serve bench too old?)")
+        failed = True
+    else:
+        per = mm.get("per_model", [])
+        per_sum = sum(int(p.get("completed", 0)) for p in per)
+        combined = mm.get("requests")
+        if per_sum != combined:
+            print(
+                f"MULTI-MODEL MISMATCH: per-model completed sums to {per_sum}, "
+                f"combined requests {combined}"
+            )
+            failed = True
+        else:
+            print(f"multi-model counters: {len(per)} models sum to {combined} OK")
+        for p in per:
+            missing = [
+                k
+                for k in ("p50_ms", "p95_ms", "p99_ms")
+                if not isinstance(p.get(k), (int, float))
+            ]
+            if missing:
+                print(f"model {p.get('model')}: missing latency percentiles {missing}")
+                failed = True
+            else:
+                print(
+                    f"  {p.get('model')}: completed={p.get('completed')} "
+                    f"p50={p.get('p50_ms')}ms p95={p.get('p95_ms')}ms "
+                    f"p99={p.get('p99_ms')}ms"
+                )
+
+    pl = data.get("pipelining")
+    if not isinstance(pl, dict):
+        print(f"{path} has no pipelining section (serve bench too old?)")
+        failed = True
+    else:
+        seq = pl.get("sequential_rps")
+        pipe = pl.get("pipelined_rps")
+        if not isinstance(seq, (int, float)) or not isinstance(pipe, (int, float)):
+            print("pipelining section is missing rps numbers")
+            failed = True
+        elif pipe <= seq:
+            print(
+                f"PIPELINING REGRESSION: pipelined {pipe:.0f} req/s did not beat "
+                f"sequential keep-alive {seq:.0f} req/s on one connection"
+            )
+            failed = True
+        else:
+            print(
+                f"pipelining: {seq:.0f} -> {pipe:.0f} req/s "
+                f"({pl.get('speedup')}x at depth {pl.get('depth')}) OK"
+            )
     return 1 if failed else 0
 
 

@@ -37,22 +37,14 @@ pub fn from_neighbor_lists(n: usize, lists: &NeighborLists) -> Result<CsrGraph> 
     }
     let total = *offsets.last().unwrap();
     let mut edges = vec![(0u32, 0u32, 0f64); total];
-    {
-        // Disjoint per-node windows (the `pool::parallel_map` idiom).
-        struct SyncPtr(*mut (u32, u32, f64));
-        unsafe impl Sync for SyncPtr {}
-        let ptr = SyncPtr(edges.as_mut_ptr());
-        let ptr = &ptr;
-        pool::parallel_for(lists.len(), WEIGHT_CHUNK, |i| {
-            let l = &lists[i];
-            // SAFETY: windows [offsets[i], offsets[i+1]) partition
-            // 0..total; node i's window is written only by this task.
-            let out = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(offsets[i]), l.len()) };
-            for (o, nb) in out.iter_mut().zip(l) {
-                *o = (i as u32, nb.index, inverse_distance_weight(nb.sqdist));
-            }
-        });
-    }
+    // Node i's window [offsets[i], offsets[i+1]) is written only by its
+    // own task (`pool::parallel_fill_windows` owns the safety argument).
+    pool::parallel_fill_windows(&mut edges, &offsets, WEIGHT_CHUNK, |i, out| {
+        let l = &lists[i];
+        for (o, nb) in out.iter_mut().zip(l) {
+            *o = (i as u32, nb.index, inverse_distance_weight(nb.sqdist));
+        }
+    });
     CsrGraph::from_edges(n, &edges)
 }
 

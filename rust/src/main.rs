@@ -247,6 +247,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .opt("wait-ms", "deadline flush after this wait (ms)", Some("2"))
         .opt("workers", "per-engine worker threads (0 = auto)", Some("0"))
         .opt("queue-cap", "bounded queue capacity (backpressure)", Some("1024"))
+        .opt(
+            "max-engines",
+            "most engines resident; LRU-evict beyond this (0 = unbounded)",
+            Some("0"),
+        )
+        .opt(
+            "idle-evict-secs",
+            "evict engines that served nothing for this long (0 = never)",
+            Some("0"),
+        )
         .opt("max-seconds", "exit after this long (0 = run forever)", Some("0"))
         .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
         .parse_from(argv)?;
@@ -274,7 +284,12 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         },
         queue_cap: args.get_usize("queue-cap")?,
     };
-    let manager = mlsvm::serve::EngineManager::open(reg, cfg);
+    let idle_secs = args.get_u64("idle-evict-secs")?;
+    let mgr_cfg = mlsvm::serve::ManagerConfig {
+        max_engines: args.get_usize("max-engines")?,
+        idle_evict: (idle_secs > 0).then(|| std::time::Duration::from_secs(idle_secs)),
+    };
+    let manager = mlsvm::serve::EngineManager::open_with(reg, cfg, mgr_cfg);
     for name in &names {
         let me = manager.engine(name).map_err(|e| {
             Error::Usage(format!(
@@ -288,6 +303,24 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     }
     let default = names[0].clone();
     let state = std::sync::Arc::new(mlsvm::serve::ServeState::new(manager, default.clone()));
+    // Idle-engine reaper: a background sweep that evicts engines nothing
+    // has predicted through for the configured window (preloaded models
+    // included — they respawn lazily on the next predict).
+    if let Some(window) = mgr_cfg.idle_evict {
+        let st = std::sync::Arc::clone(&state);
+        let period = window
+            .min(std::time::Duration::from_secs(30))
+            .max(std::time::Duration::from_secs(1));
+        let _ = std::thread::Builder::new()
+            .name("serve-reaper".into())
+            .spawn(move || loop {
+                std::thread::sleep(period);
+                for name in st.manager.sweep_idle() {
+                    eprintln!("idle-evicted '{name}'");
+                }
+            })
+            .map_err(|e| Error::Serve(format!("spawning idle reaper: {e}")))?;
+    }
     let mut server =
         mlsvm::serve::Server::start(args.get("addr").unwrap(), std::sync::Arc::clone(&state))?;
     println!(

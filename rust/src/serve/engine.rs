@@ -670,6 +670,19 @@ impl Engine {
         self.shared.q.lock().unwrap().pending.len()
     }
 
+    /// Requests accepted but not yet answered (queued or mid-batch). The
+    /// manager's eviction paths use this: an engine with in-flight work
+    /// is never dropped out from under its waiters.
+    pub fn in_flight(&self) -> u64 {
+        use std::sync::atomic::Ordering::Relaxed;
+        let completed = self.shared.stats.completed.load(Relaxed);
+        self.shared
+            .stats
+            .requests
+            .load(Relaxed)
+            .saturating_sub(completed)
+    }
+
     fn begin_shutdown(&self) {
         let mut q = self.shared.q.lock().unwrap();
         q.open = false;
@@ -765,6 +778,10 @@ fn worker_loop(shared: &Shared) {
         let (ok, bad): (Vec<Request>, Vec<Request>) =
             batch.into_iter().partition(|r| r.x.len() == dim);
         for r in bad {
+            // An error reply still answers the request — count it, so
+            // `in_flight` drains to zero and eviction is not blocked
+            // forever by a rejected query.
+            shared.stats.completed.fetch_add(1, Relaxed);
             let _ = r.tx.send(Err(format!(
                 "query has {} features, model expects {dim} (model reloaded?)",
                 r.x.len()

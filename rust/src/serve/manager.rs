@@ -18,21 +18,56 @@
 //!   drains its queue and joins its workers on the last `Arc` drop;
 //! * **per-model stats** — every [`ManagedEngine`] exposes its own
 //!   [`StatsSnapshot`]; [`crate::serve::stats::aggregate`] folds them
-//!   into a fleet view for the HTTP listing.
+//!   into a fleet view for the HTTP listing;
+//! * **capacity management** ([`ManagerConfig`]) — an optional resident
+//!   cap with LRU eviction (the touch order advances on the predict
+//!   acquisition path, never on read-only stats lookups), and idle
+//!   reaping of engines that served nothing for a configured window
+//!   ([`EngineManager::sweep_idle`], clock-injectable for tests as
+//!   [`EngineManager::sweep_idle_at`]). Neither path ever drops an engine
+//!   with in-flight work: a busy engine finishes first and falls to a
+//!   later sweep. Eviction removes the engine from the routing map;
+//!   outstanding `Arc` holders keep answering until they release it.
 
 use crate::error::Result;
 use crate::serve::engine::{Engine, EngineConfig, ModelSlot};
 use crate::serve::registry::{ModelArtifact, Registry};
-use crate::serve::stats::StatsSnapshot;
+use crate::serve::stats::{FleetCapacity, StatsSnapshot};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Capacity/lifecycle policy of an [`EngineManager`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ManagerConfig {
+    /// Most engines kept resident (0 = unbounded). A spawn that exceeds
+    /// the cap evicts the least-recently-used engine without in-flight
+    /// work; if every other engine is busy, the fleet stays over cap
+    /// until one quiesces.
+    pub max_engines: usize,
+    /// Evict engines whose last predict-path use is older than this
+    /// (None = never). Swept by [`EngineManager::sweep_idle`] — callers
+    /// drive it from a reaper thread or opportunistically.
+    pub idle_evict: Option<Duration>,
+}
 
 /// One running engine under the manager: the engine plus its serving
-/// identity (name, human description of the loaded artifact).
+/// identity (name, human description of the loaded artifact) and its
+/// lifecycle stamps (LRU sequence + idle clock).
 pub struct ManagedEngine {
     name: String,
     engine: Engine,
     description: Mutex<String>,
+    /// Serializes concurrent reloads of this engine (see `reload_from`).
+    reload_lock: Mutex<()>,
+    /// Manager-wide monotonic sequence of the last predict-path
+    /// acquisition (the LRU order; 0 = stamped at spawn, before first
+    /// touch).
+    last_touch: AtomicU64,
+    /// Milliseconds since the manager's epoch of the last predict-path
+    /// acquisition (the idle-reap clock).
+    last_used_ms: AtomicU64,
 }
 
 impl ManagedEngine {
@@ -43,6 +78,9 @@ impl ManagedEngine {
             name: name.to_string(),
             engine,
             description: Mutex::new(artifact.describe()),
+            reload_lock: Mutex::new(()),
+            last_touch: AtomicU64::new(0),
+            last_used_ms: AtomicU64::new(0),
         })
     }
 
@@ -67,14 +105,17 @@ impl ManagedEngine {
     }
 
     fn reload_from(&self, artifact: &ModelArtifact) -> Result<()> {
-        // The description lock is held across the swap so concurrent
-        // reloads serialize and the stored description always matches the
-        // model actually installed (the invariant the pre-manager
-        // ServeState::reload kept with its name lock). The swap goes
-        // through the engine so it is counted in the reload stat.
-        let mut desc = self.description.lock().unwrap();
+        // Concurrent reloads serialize on their own lock, held across the
+        // swap so the stored description always matches the model
+        // actually installed (the invariant the pre-manager
+        // ServeState::reload kept with its name lock). The description
+        // lock itself is taken only for the final store, so readers
+        // (`describe`, the `/v1/models` listing) never wait out a
+        // multi-second scorer rebuild. The swap goes through the engine
+        // so it is counted in the reload stat.
+        let _serialize = self.reload_lock.lock().unwrap();
         self.engine.reload(artifact)?;
-        *desc = artifact.describe();
+        *self.description.lock().unwrap() = artifact.describe();
         Ok(())
     }
 }
@@ -83,25 +124,68 @@ impl ManagedEngine {
 pub struct EngineManager {
     registry: Registry,
     default_cfg: EngineConfig,
+    cfg: ManagerConfig,
     engines: Mutex<HashMap<String, Arc<ManagedEngine>>>,
     overrides: Mutex<HashMap<String, EngineConfig>>,
+    /// Zero point of the `last_used_ms` idle clocks.
+    epoch: Instant,
+    /// Source of the `last_touch` LRU sequence.
+    touch_seq: AtomicU64,
+    /// Engines evicted by the capacity cap.
+    capacity_evictions: AtomicU64,
+    /// Engines evicted by the idle sweep.
+    idle_reaped: AtomicU64,
 }
 
 impl EngineManager {
     /// New manager over `registry`; engines spawn with `default_cfg`
-    /// unless a per-model override is set.
+    /// unless a per-model override is set. Capacity is unbounded and idle
+    /// reaping off — see [`EngineManager::open_with`].
     pub fn open(registry: Registry, default_cfg: EngineConfig) -> EngineManager {
+        EngineManager::open_with(registry, default_cfg, ManagerConfig::default())
+    }
+
+    /// New manager with an explicit capacity/lifecycle policy.
+    pub fn open_with(
+        registry: Registry,
+        default_cfg: EngineConfig,
+        cfg: ManagerConfig,
+    ) -> EngineManager {
         EngineManager {
             registry,
             default_cfg,
+            cfg,
             engines: Mutex::new(HashMap::new()),
             overrides: Mutex::new(HashMap::new()),
+            epoch: Instant::now(),
+            touch_seq: AtomicU64::new(0),
+            capacity_evictions: AtomicU64::new(0),
+            idle_reaped: AtomicU64::new(0),
         }
     }
 
     /// The backing registry.
     pub fn registry(&self) -> &Registry {
         &self.registry
+    }
+
+    /// The capacity/lifecycle policy in force.
+    pub fn manager_config(&self) -> ManagerConfig {
+        self.cfg
+    }
+
+    /// Stamp `me` as just-used on the predict path: advances its LRU
+    /// position and resets its idle clock. Deliberately NOT called by the
+    /// read-only lookups ([`EngineManager::get`], [`EngineManager::loaded`]),
+    /// so monitoring polls cannot keep a cold model resident.
+    fn touch(&self, me: &ManagedEngine) {
+        let seq = self.touch_seq.fetch_add(1, Ordering::Relaxed) + 1;
+        me.last_touch.store(seq, Ordering::Relaxed);
+        me.last_used_ms.store(self.now_ms(), Ordering::Relaxed);
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
     }
 
     /// Engine config a spawn of `name` would use.
@@ -132,15 +216,49 @@ impl EngineManager {
     /// The engine serving `name`, spawning it from the registry on first
     /// use. The registry load runs outside the manager lock; if two
     /// threads race to spawn one name, the first insert wins and the
-    /// loser's engine is dropped (it has served nothing).
+    /// loser's engine is dropped (it has served nothing). This is the
+    /// predict-path acquisition: it advances the engine's LRU/idle
+    /// stamps, and a spawn that pushes the fleet over the capacity cap
+    /// evicts the least-recently-used idle engine.
     pub fn engine(&self, name: &str) -> Result<Arc<ManagedEngine>> {
-        if let Some(e) = self.engines.lock().unwrap().get(name) {
-            return Ok(Arc::clone(e));
+        let existing = {
+            let mut map = self.engines.lock().unwrap();
+            let found = map.get(name).map(Arc::clone);
+            // Self-heal a fleet left over cap by a spawn that could not
+            // evict (every other engine was busy then); a no-op len
+            // check when the fleet fits.
+            found.map(|e| {
+                let victims = self.enforce_capacity(&mut map, name);
+                (e, victims)
+            })
+        };
+        if let Some((e, victims)) = existing {
+            drop(victims);
+            self.touch(&e);
+            return Ok(e);
         }
         let artifact = self.registry.load(name)?;
         let spawned = Arc::new(ManagedEngine::spawn(name, &artifact, self.config_for(name))?);
-        let mut map = self.engines.lock().unwrap();
-        Ok(Arc::clone(map.entry(name.to_string()).or_insert(spawned)))
+        let (me, victims, loser) = {
+            let mut map = self.engines.lock().unwrap();
+            match map.get(name).map(Arc::clone) {
+                // A racing spawn of the same name got there first: keep
+                // its engine, and hand ours back to be torn down off-lock.
+                Some(winner) => (winner, Vec::new(), Some(spawned)),
+                None => {
+                    map.insert(name.to_string(), Arc::clone(&spawned));
+                    let victims = self.enforce_capacity(&mut map, name);
+                    (spawned, victims, None)
+                }
+            }
+        };
+        // Evicted engines and a racing-spawn loser drop outside the map
+        // lock: the last Arc drop joins the engine's workers, which must
+        // not stall other lookups.
+        drop(victims);
+        drop(loser);
+        self.touch(&me);
+        Ok(me)
     }
 
     /// Spawn (or replace) the engine for `name` directly from an
@@ -148,23 +266,122 @@ impl EngineManager {
     /// for serving a model that is not persisted yet.
     pub fn insert(&self, name: &str, artifact: &ModelArtifact) -> Result<Arc<ManagedEngine>> {
         let spawned = Arc::new(ManagedEngine::spawn(name, artifact, self.config_for(name))?);
-        self.engines
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), Arc::clone(&spawned));
+        let (displaced, victims) = {
+            let mut map = self.engines.lock().unwrap();
+            let displaced = map.insert(name.to_string(), Arc::clone(&spawned));
+            (displaced, self.enforce_capacity(&mut map, name))
+        };
+        // The replaced engine (if any) and eviction victims tear down
+        // outside the map lock, like every other removal path.
+        drop(displaced);
+        drop(victims);
+        self.touch(&spawned);
         Ok(spawned)
+    }
+
+    /// Evict least-recently-used engines until the fleet fits the cap,
+    /// skipping `keep` (the engine just acquired) and anything with
+    /// in-flight work. Returns the removed engines so the caller can drop
+    /// them outside the map lock. Called with the map lock held.
+    fn enforce_capacity(
+        &self,
+        map: &mut HashMap<String, Arc<ManagedEngine>>,
+        keep: &str,
+    ) -> Vec<Arc<ManagedEngine>> {
+        let mut victims = Vec::new();
+        if self.cfg.max_engines == 0 {
+            return victims;
+        }
+        while map.len() > self.cfg.max_engines {
+            // Lowest touch sequence = least recently used; names break
+            // exact ties deterministically.
+            let victim = map
+                .iter()
+                .filter(|(n, me)| n.as_str() != keep && me.engine.in_flight() == 0)
+                .min_by_key(|(n, me)| (me.last_touch.load(Ordering::Relaxed), n.to_string()))
+                .map(|(n, _)| n.clone());
+            match victim {
+                Some(n) => {
+                    if let Some(me) = map.remove(&n) {
+                        victims.push(me);
+                    }
+                    self.capacity_evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                // Everything else is busy: stay over cap until an engine
+                // quiesces (a later spawn or sweep retries).
+                None => break,
+            }
+        }
+        victims
+    }
+
+    /// Evict engines whose last predict-path use is older than the
+    /// configured idle window **as of `now`** — the injectable clock that
+    /// makes lifecycle tests deterministic (pass a far-future `Instant`
+    /// instead of sleeping). Engines with in-flight work are skipped:
+    /// they finish first, then fall to a later sweep. Returns the evicted
+    /// names in name order.
+    pub fn sweep_idle_at(&self, now: Instant) -> Vec<String> {
+        let Some(window) = self.cfg.idle_evict else {
+            return Vec::new();
+        };
+        let now_ms = now.saturating_duration_since(self.epoch).as_millis() as u64;
+        let window_ms = window.as_millis() as u64;
+        let mut evicted = Vec::new();
+        let mut victims = Vec::new();
+        {
+            let mut map = self.engines.lock().unwrap();
+            map.retain(|name, me| {
+                let idle = now_ms.saturating_sub(me.last_used_ms.load(Ordering::Relaxed));
+                if idle >= window_ms && me.engine.in_flight() == 0 {
+                    evicted.push(name.clone());
+                    victims.push(Arc::clone(me));
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        // Engine teardown (worker joins) happens outside the map lock.
+        drop(victims);
+        self.idle_reaped
+            .fetch_add(evicted.len() as u64, Ordering::Relaxed);
+        evicted.sort();
+        evicted
+    }
+
+    /// [`EngineManager::sweep_idle_at`] against the wall clock (what a
+    /// reaper thread or an opportunistic sweep calls).
+    pub fn sweep_idle(&self) -> Vec<String> {
+        self.sweep_idle_at(Instant::now())
+    }
+
+    /// Point-in-time capacity counters for the fleet view.
+    pub fn fleet_capacity(&self) -> FleetCapacity {
+        FleetCapacity {
+            max_engines: self.cfg.max_engines,
+            idle_evict_secs: self.cfg.idle_evict.map(|d| d.as_secs()),
+            loaded: self.engines.lock().unwrap().len(),
+            capacity_evictions: self.capacity_evictions.load(Ordering::Relaxed),
+            idle_reaped: self.idle_reaped.load(Ordering::Relaxed),
+        }
     }
 
     /// Reload `name` from the registry: swap the model on a running
     /// engine (through the shared slot — queued and later requests get
     /// the new model), or spawn it if it is not running. Returns the
-    /// artifact description.
+    /// artifact description. A reload counts as activity: it advances the
+    /// engine's LRU/idle stamps, so a freshly reloaded model is not the
+    /// next reap victim.
     pub fn reload(&self, name: &str) -> Result<String> {
         let artifact = self.registry.load(name)?;
         let desc = artifact.describe();
         let existing = self.engines.lock().unwrap().get(name).cloned();
         match existing {
-            Some(me) => me.reload_from(&artifact)?,
+            Some(me) => {
+                me.reload_from(&artifact)?;
+                self.touch(&me);
+            }
             None => {
                 let spawned =
                     Arc::new(ManagedEngine::spawn(name, &artifact, self.config_for(name))?);
@@ -172,21 +389,22 @@ impl EngineManager {
                 // were loading — possibly built from the pre-reload file.
                 // Swap the fresh artifact into it (outside the map lock)
                 // instead of silently losing the reload.
-                let racer = {
+                let (installed, racer, victims) = {
                     let mut map = self.engines.lock().unwrap();
-                    match map.entry(name.to_string()) {
-                        std::collections::hash_map::Entry::Occupied(e) => {
-                            Some(Arc::clone(e.get()))
-                        }
-                        std::collections::hash_map::Entry::Vacant(v) => {
-                            v.insert(spawned);
-                            None
+                    match map.get(name).map(Arc::clone) {
+                        Some(existing) => (existing, true, Vec::new()),
+                        None => {
+                            map.insert(name.to_string(), Arc::clone(&spawned));
+                            let victims = self.enforce_capacity(&mut map, name);
+                            (Arc::clone(&spawned), false, victims)
                         }
                     }
                 };
-                if let Some(racer) = racer {
-                    racer.reload_from(&artifact)?;
+                drop(victims);
+                if racer {
+                    installed.reload_from(&artifact)?;
                 }
+                self.touch(&installed);
             }
         }
         Ok(desc)
@@ -328,6 +546,267 @@ mod tests {
         let d = e.engine().predict(&[-0.9, 0.0]).unwrap();
         assert!(matches!(d, Decision::Binary { label: -1, .. }));
         assert_eq!(mgr.loaded_names(), vec!["ephemeral"]);
+    }
+
+    /// A config whose engine never flushes on its own (deadline an hour
+    /// out, batch of 4): a single submitted request stays in-flight until
+    /// the test fills the batch — the deterministic handle the lifecycle
+    /// tests use instead of sleeps.
+    fn parked_cfg() -> EngineConfig {
+        EngineConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(3600),
+            workers: 1,
+            queue_cap: 64,
+        }
+    }
+
+    fn save_axis_models(reg: &Registry, names: &[&str]) {
+        for (i, name) in names.iter().enumerate() {
+            reg.save(name, &ModelArtifact::Svm(axis_model(0.2 + 0.3 * i as f64)))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn lru_eviction_follows_predict_touch_order() {
+        let reg = tmp_registry("lru_order");
+        save_axis_models(&reg, &["a", "b", "c"]);
+        let mgr = EngineManager::open_with(
+            reg,
+            quick_cfg(),
+            ManagerConfig {
+                max_engines: 2,
+                idle_evict: None,
+            },
+        );
+        // Interleaved predicts: a, b, then a again — so b is the LRU.
+        mgr.engine("a").unwrap().engine().predict(&[0.9, 0.0]).unwrap();
+        mgr.engine("b").unwrap().engine().predict(&[0.9, 0.0]).unwrap();
+        mgr.engine("a").unwrap().engine().predict(&[0.9, 0.0]).unwrap();
+        // Spawning c exceeds the cap and must evict b, not a.
+        mgr.engine("c").unwrap().engine().predict(&[0.9, 0.0]).unwrap();
+        assert_eq!(mgr.loaded_names(), vec!["a", "c"]);
+        let cap = mgr.fleet_capacity();
+        assert_eq!(cap.capacity_evictions, 1);
+        assert_eq!(cap.loaded, 2);
+        assert_eq!(cap.max_engines, 2);
+        // b respawns on demand, evicting the now-LRU a.
+        mgr.engine("b").unwrap();
+        assert_eq!(mgr.loaded_names(), vec!["b", "c"]);
+    }
+
+    #[test]
+    fn capacity_eviction_skips_engines_with_inflight_work() {
+        let reg = tmp_registry("cap_inflight");
+        save_axis_models(&reg, &["a", "b", "c"]);
+        let mgr = EngineManager::open_with(
+            reg,
+            parked_cfg(),
+            ManagerConfig {
+                max_engines: 1,
+                idle_evict: None,
+            },
+        );
+        let a = mgr.engine("a").unwrap();
+        // One parked request: a is now in-flight and must not be evicted.
+        let parked = a.engine().submit(&[0.9, 0.0]).unwrap();
+        assert_eq!(a.engine().in_flight(), 1);
+        let b = mgr.engine("b").unwrap();
+        assert_eq!(
+            mgr.loaded_names(),
+            vec!["a", "b"],
+            "over cap is allowed while the LRU engine is busy"
+        );
+        // Fill a's batch so everything completes, then spawn c: now both
+        // a and b are idle and the cap evicts down to just c.
+        let rest: Vec<_> = (0..3)
+            .map(|_| a.engine().submit(&[0.9, 0.0]).unwrap())
+            .collect();
+        parked.wait_timeout(Duration::from_secs(10)).unwrap();
+        for t in rest {
+            t.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(a.engine().in_flight(), 0);
+        drop(b);
+        mgr.engine("c").unwrap();
+        assert_eq!(mgr.loaded_names(), vec!["c"]);
+        assert_eq!(mgr.fleet_capacity().capacity_evictions, 2);
+    }
+
+    #[test]
+    fn idle_sweep_reaps_only_engines_past_the_window() {
+        let reg = tmp_registry("idle_reap");
+        save_axis_models(&reg, &["old", "fresh"]);
+        let window = Duration::from_secs(300);
+        let mgr = EngineManager::open_with(
+            reg,
+            quick_cfg(),
+            ManagerConfig {
+                max_engines: 0,
+                idle_evict: Some(window),
+            },
+        );
+        mgr.engine("old").unwrap().engine().predict(&[0.9, 0.0]).unwrap();
+        let fresh = mgr.engine("fresh").unwrap();
+        fresh.engine().predict(&[0.9, 0.0]).unwrap();
+        // Both engines were just touched: a sweep "now" evicts nothing
+        // (idle gap ≈ 0 < window).
+        assert!(mgr.sweep_idle_at(Instant::now()).is_empty());
+        assert_eq!(mgr.loaded_names(), vec!["fresh", "old"]);
+        // Injected far-future clock: both idle gaps now exceed the
+        // window, so both reap — no sleeps, no wall-clock dependence.
+        let future = Instant::now() + window * 4;
+        let evicted = mgr.sweep_idle_at(future);
+        assert_eq!(evicted, vec!["fresh", "old"], "evicted in name order");
+        assert!(mgr.loaded().is_empty());
+        assert_eq!(mgr.fleet_capacity().idle_reaped, 2);
+        // Reaped engines respawn lazily on the next predict acquisition.
+        mgr.engine("old").unwrap();
+        assert_eq!(mgr.loaded_names(), vec!["old"]);
+    }
+
+    #[test]
+    fn idle_sweep_skips_inflight_engine_until_it_finishes() {
+        let reg = tmp_registry("idle_inflight");
+        save_axis_models(&reg, &["m"]);
+        let mgr = EngineManager::open_with(
+            reg,
+            parked_cfg(),
+            ManagerConfig {
+                max_engines: 0,
+                idle_evict: Some(Duration::from_secs(60)),
+            },
+        );
+        let m = mgr.engine("m").unwrap();
+        let parked = m.engine().submit(&[0.9, 0.0]).unwrap();
+        let future = Instant::now() + Duration::from_secs(7200);
+        // The engine is way past the idle window, but a request is in
+        // flight: the sweep must leave it alone.
+        assert!(mgr.sweep_idle_at(future).is_empty());
+        assert_eq!(mgr.loaded_names(), vec!["m"]);
+        // Let it finish (fill the batch), then the same sweep reaps it —
+        // finish first, then die.
+        let rest: Vec<_> = (0..3)
+            .map(|_| m.engine().submit(&[0.9, 0.0]).unwrap())
+            .collect();
+        parked.wait_timeout(Duration::from_secs(10)).unwrap();
+        for t in rest {
+            t.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(mgr.sweep_idle_at(future), vec!["m"]);
+        assert!(mgr.loaded().is_empty());
+        // The held Arc still answers until released.
+        assert!(m.engine().predict(&[0.9, 0.0]).is_ok());
+    }
+
+    #[test]
+    fn reload_during_reap_leaves_a_serving_engine() {
+        let reg = tmp_registry("reload_reap");
+        save_axis_models(&reg, &["m"]);
+        let window = Duration::from_secs(60);
+        let mgr = EngineManager::open_with(
+            reg,
+            quick_cfg(),
+            ManagerConfig {
+                max_engines: 0,
+                idle_evict: Some(window),
+            },
+        );
+        mgr.engine("m").unwrap();
+        // Sweep first, reload after: the reload respawns the engine.
+        let future = Instant::now() + window * 2;
+        assert_eq!(mgr.sweep_idle_at(future), vec!["m"]);
+        mgr.reload("m").unwrap();
+        assert_eq!(mgr.loaded_names(), vec!["m"]);
+        // Reload first, sweep after at the same wall instant: the reload
+        // touched the engine, so it is no longer idle and survives.
+        assert!(mgr.sweep_idle_at(Instant::now()).is_empty());
+        assert_eq!(mgr.loaded_names(), vec!["m"]);
+        // Concurrent storm: reloads racing sweeps must never error, and
+        // the registry model must still be servable afterwards.
+        std::thread::scope(|s| {
+            let mgr = &mgr;
+            s.spawn(move || {
+                for _ in 0..50 {
+                    mgr.reload("m").unwrap();
+                }
+            });
+            s.spawn(move || {
+                let far = Instant::now() + window * 10;
+                for _ in 0..50 {
+                    mgr.sweep_idle_at(far);
+                }
+            });
+        });
+        mgr.reload("m").unwrap();
+        assert_eq!(mgr.loaded_names(), vec!["m"]);
+        assert!(mgr
+            .engine("m")
+            .unwrap()
+            .engine()
+            .predict(&[0.9, 0.0])
+            .is_ok());
+    }
+
+    #[test]
+    fn capacity_cap_holds_under_concurrent_lazy_spawns() {
+        let reg = tmp_registry("cap_race");
+        let names = ["m0", "m1", "m2", "m3", "m4", "m5"];
+        save_axis_models(&reg, &names);
+        let mgr = EngineManager::open_with(
+            reg,
+            quick_cfg(),
+            ManagerConfig {
+                max_engines: 2,
+                idle_evict: None,
+            },
+        );
+        std::thread::scope(|s| {
+            let mgr = &mgr;
+            let names = &names;
+            for t in 0..8 {
+                s.spawn(move || {
+                    for r in 0..30 {
+                        let name = names[(t * 7 + r * 3) % names.len()];
+                        // The returned Arc keeps answering even if a
+                        // racing spawn evicts this engine immediately.
+                        let me = mgr.engine(name).unwrap();
+                        let d = me.engine().predict(&[0.9, 0.0]).unwrap();
+                        assert!(matches!(d, Decision::Binary { label: 1, .. }));
+                    }
+                });
+            }
+        });
+        // One settling acquisition: all requests are answered, so the
+        // self-healing enforcement can evict anything left over cap.
+        mgr.engine("m0").unwrap();
+        let loaded = mgr.loaded_names();
+        assert!(
+            loaded.len() <= 2,
+            "cap must hold once the dust settles: {loaded:?}"
+        );
+        assert!(mgr.fleet_capacity().capacity_evictions > 0);
+    }
+
+    #[test]
+    fn unbounded_manager_never_evicts() {
+        let reg = tmp_registry("unbounded");
+        save_axis_models(&reg, &["a", "b", "c", "d"]);
+        let mgr = EngineManager::open(reg, quick_cfg());
+        for n in ["a", "b", "c", "d"] {
+            mgr.engine(n).unwrap();
+        }
+        assert_eq!(mgr.loaded_names(), vec!["a", "b", "c", "d"]);
+        let cap = mgr.fleet_capacity();
+        assert_eq!(cap.max_engines, 0);
+        assert_eq!(cap.idle_evict_secs, None);
+        assert_eq!(cap.capacity_evictions, 0);
+        // Sweeping with no idle policy is a no-op.
+        assert!(mgr
+            .sweep_idle_at(Instant::now() + Duration::from_secs(1 << 20))
+            .is_empty());
+        assert_eq!(mgr.loaded_names().len(), 4);
     }
 
     #[test]

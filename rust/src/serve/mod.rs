@@ -20,11 +20,16 @@
 //!   wraps;
 //! * [`manager`] — multi-model serving: an [`EngineManager`] lazily
 //!   spawns one engine per registry name, with per-model flush policies,
-//!   hot reload/evict, and per-model stats snapshots;
+//!   hot reload/evict, per-model stats snapshots, and capacity
+//!   management ([`ManagerConfig`]: an LRU-evicting resident cap plus
+//!   idle-engine reaping, neither of which drops an engine with
+//!   in-flight work);
 //! * [`server`] — a hand-rolled HTTP/1.1-over-TCP front end routing
 //!   `/v1/models/{name}/predict|predict-batch|stats|reload|evict` plus a
 //!   `/v1/models` listing; the legacy unprefixed routes map to a default
-//!   model;
+//!   model. Connections keep-alive and **pipeline**: back-to-back
+//!   requests on one socket are parsed by a persistent buffered reader
+//!   and answered in order (depth/byte bounded);
 //! * [`stats`] — batching counters and log-spaced latency histograms,
 //!   snapshotted as JSON per model and aggregated fleet-wide.
 //!
@@ -43,10 +48,14 @@ pub mod stats;
 pub use engine::{
     BatchQueue, Decision, Engine, EngineConfig, FlushPolicy, FlushReason, ModelSlot, Ticket,
 };
-pub use manager::{EngineManager, ManagedEngine};
+pub use manager::{EngineManager, ManagedEngine, ManagerConfig};
 pub use registry::{
     detect_format, load_artifact, save_artifact, save_artifact_v1, MigrationReport, ModelArtifact,
     ModelFormat, Registry,
 };
-pub use server::{http_request, http_request_on, ServeState, Server};
-pub use stats::{aggregate, BatchStats, EngineStats, LatencyHistogram, StatsSnapshot};
+pub use server::{
+    http_pipeline_on, http_request, http_request_on, ServeState, Server, MAX_PIPELINE_DEPTH,
+};
+pub use stats::{
+    aggregate, BatchStats, EngineStats, FleetCapacity, LatencyHistogram, StatsSnapshot,
+};

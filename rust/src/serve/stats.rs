@@ -285,6 +285,39 @@ impl StatsSnapshot {
     }
 }
 
+/// Point-in-time capacity/lifecycle counters of an engine fleet (the
+/// [`crate::serve::manager::EngineManager`]'s side of the `/v1/models`
+/// view: how many engines may stay resident, how many are, and how many
+/// the capacity cap and the idle reaper have evicted so far).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetCapacity {
+    /// Most engines kept resident (0 = unbounded).
+    pub max_engines: usize,
+    /// Idle window after which an unused engine is reaped (None = never).
+    pub idle_evict_secs: Option<u64>,
+    /// Engines currently resident.
+    pub loaded: usize,
+    /// Engines evicted by the LRU capacity cap.
+    pub capacity_evictions: u64,
+    /// Engines evicted by the idle reaper.
+    pub idle_reaped: u64,
+}
+
+impl FleetCapacity {
+    /// Render as a JSON object (hand-rolled; the crate has no serde).
+    pub fn to_json(&self) -> String {
+        let idle = match self.idle_evict_secs {
+            Some(s) => s.to_string(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"max_engines\":{},\"idle_evict_secs\":{idle},\"loaded\":{},\
+             \"capacity_evictions\":{},\"idle_reaped\":{}}}",
+            self.max_engines, self.loaded, self.capacity_evictions, self.idle_reaped,
+        )
+    }
+}
+
 /// Fold per-model snapshots into one fleet-wide view.
 ///
 /// Counters and throughput sum; uptime is the oldest engine's;
@@ -440,6 +473,30 @@ mod tests {
         assert_eq!(z.completed, 0);
         assert_eq!(z.p99, 0.0);
         assert_eq!(z.utilization, 0.0);
+    }
+
+    #[test]
+    fn fleet_capacity_json_shapes() {
+        let c = FleetCapacity {
+            max_engines: 4,
+            idle_evict_secs: Some(300),
+            loaded: 2,
+            capacity_evictions: 7,
+            idle_reaped: 1,
+        };
+        let j = c.to_json();
+        assert!(j.contains("\"max_engines\":4"), "{j}");
+        assert!(j.contains("\"idle_evict_secs\":300"), "{j}");
+        assert!(j.contains("\"capacity_evictions\":7"), "{j}");
+        let unbounded = FleetCapacity {
+            idle_evict_secs: None,
+            ..c
+        };
+        assert!(
+            unbounded.to_json().contains("\"idle_evict_secs\":null"),
+            "{}",
+            unbounded.to_json()
+        );
     }
 
     #[test]

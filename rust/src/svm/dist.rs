@@ -49,26 +49,17 @@ impl DistanceCache {
         let n = points.rows();
         let norms = points.row_sqnorms();
         let mut d2 = vec![0.0f32; n * n];
-        {
-            // Disjoint per-row windows (the same idiom as
-            // `pool::parallel_map`): row i is written only by the worker
-            // that drew index i.
-            struct SyncPtr(*mut f32);
-            unsafe impl Sync for SyncPtr {}
-            let ptr = SyncPtr(d2.as_mut_ptr());
-            let ptr = &ptr;
-            pool::parallel_for(n, FILL_CHUNK, |i| {
-                let a = points.row(i);
-                let na = norms[i];
-                // SAFETY: rows partition 0..n*n; window i is in-bounds and
-                // touched by exactly one task.
-                let row = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * n), n) };
-                for (j, out) in row.iter_mut().enumerate() {
-                    let v = (na + norms[j] - 2.0 * dot(a, points.row(j)) as f64).max(0.0);
-                    *out = v as f32;
-                }
-            });
-        }
+        // Disjoint per-row windows: row i is written only by the task
+        // that drew index i (`pool::parallel_fill_chunks` owns the
+        // safety argument).
+        pool::parallel_fill_chunks(&mut d2, n, FILL_CHUNK, |i, row| {
+            let a = points.row(i);
+            let na = norms[i];
+            for (j, out) in row.iter_mut().enumerate() {
+                let v = (na + norms[j] - 2.0 * dot(a, points.row(j)) as f64).max(0.0);
+                *out = v as f32;
+            }
+        });
         DistanceCache { n, d2 }
     }
 

@@ -355,20 +355,12 @@ impl RowBackend for RustRowBackend<'_> {
             self.fill_rows_block(idxs, out);
             return;
         }
-        // Each block writes a disjoint window of `out`; disjoint
-        // raw-pointer windows are handed out per task (the same idiom as
-        // `util::pool::parallel_map`).
-        struct SyncPtr(*mut f32);
-        unsafe impl Sync for SyncPtr {}
-        let ptr = SyncPtr(out.as_mut_ptr());
-        let ptr = &ptr;
-        pool::parallel_for(nblocks, 1, |b| {
+        // Each block writes the disjoint `QUERY_BLOCK * n`-sized window
+        // of `out` its rows map to (`pool::parallel_fill_chunks` owns
+        // the safety argument).
+        pool::parallel_fill_chunks(out, QUERY_BLOCK * n, 1, |b, window| {
             let k0 = b * QUERY_BLOCK;
             let k1 = (k0 + QUERY_BLOCK).min(idxs.len());
-            // SAFETY: blocks partition 0..idxs.len(), so the windows
-            // [k0*n, k1*n) are pairwise disjoint and in-bounds.
-            let window =
-                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(k0 * n), (k1 - k0) * n) };
             self.fill_rows_block(&idxs[k0..k1], window);
         });
     }

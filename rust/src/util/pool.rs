@@ -121,21 +121,97 @@ where
     F: Fn(usize) -> T + Sync,
 {
     let mut out = vec![T::default(); n];
-    {
-        // Each index is written exactly once by exactly one worker, so the
-        // disjoint raw-pointer writes are safe.
-        struct SyncPtr<T>(*mut T);
-        unsafe impl<T: Send> Sync for SyncPtr<T> {}
-        let ptr = SyncPtr(out.as_mut_ptr());
-        // Reference the wrapper (not the raw field) so the closure capture
-        // is the Sync wrapper rather than the bare `*mut T`.
-        let ptr = &ptr;
-        parallel_for(n, chunk, |i| {
-            let v = f(i);
-            unsafe { ptr.0.add(i).write(v) };
-        });
-    }
+    parallel_fill_chunks(&mut out, 1, chunk, |i, w| w[0] = f(i));
     out
+}
+
+/// Fill `out` in parallel through consecutive `window_len`-sized chunks
+/// (the last may be short): `f(i, window_i)` gets exclusive access to
+/// chunk `i`, exactly the windows `out.chunks_mut(window_len)` would
+/// yield, dispatched over the pool with `sched_chunk` windows per
+/// scheduling unit. Every element is written by exactly one task, so the
+/// result is bit-identical to the serial loop at any thread count.
+pub fn parallel_fill_chunks<T, F>(out: &mut [T], window_len: usize, sched_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let window_len = window_len.max(1);
+    let total = out.len();
+    let n_windows = total.div_ceil(window_len);
+    fill_disjoint(
+        out,
+        n_windows,
+        sched_chunk,
+        move |i| (i * window_len, ((i + 1) * window_len).min(total)),
+        f,
+    );
+}
+
+/// Fill `out` in parallel through the explicit windows
+/// `out[offsets[i] .. offsets[i + 1]]` (a prefix-summed/CSR layout):
+/// `f(i, window_i)` gets exclusive access to window `i`. `offsets` must
+/// be non-decreasing with its last bound inside `out` (panics
+/// otherwise) — which is exactly what makes the windows disjoint.
+pub fn parallel_fill_windows<T, F>(out: &mut [T], offsets: &[usize], sched_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(
+        !offsets.is_empty(),
+        "parallel_fill_windows: offsets needs at least one bound"
+    );
+    assert!(
+        offsets.windows(2).all(|w| w[0] <= w[1]),
+        "parallel_fill_windows: offsets must be non-decreasing"
+    );
+    assert!(
+        *offsets.last().unwrap() <= out.len(),
+        "parallel_fill_windows: last offset {} exceeds output length {}",
+        offsets.last().unwrap(),
+        out.len()
+    );
+    fill_disjoint(
+        out,
+        offsets.len() - 1,
+        sched_chunk,
+        |i| (offsets[i], offsets[i + 1]),
+        f,
+    );
+}
+
+/// The one place the disjoint-window raw-pointer idiom lives: hand each
+/// pool task an exclusive `&mut [T]` window of `out`.
+///
+/// SAFETY ARGUMENT: `parallel_for` visits every index in `0..n_windows`
+/// exactly once, so each window is passed to `f` exactly once; the two
+/// public wrappers guarantee the windows are pairwise disjoint and
+/// in-bounds (arithmetic chunking is disjoint by construction; explicit
+/// offsets are validated non-decreasing and bounded before dispatch).
+/// Exclusive disjoint in-bounds windows of an exclusively borrowed slice
+/// are sound to write concurrently.
+fn fill_disjoint<T, B, F>(out: &mut [T], n_windows: usize, sched_chunk: usize, bounds: B, f: F)
+where
+    T: Send,
+    B: Fn(usize) -> (usize, usize) + Sync,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    struct SyncPtr<T>(*mut T);
+    unsafe impl<T: Send> Sync for SyncPtr<T> {}
+    let len = out.len();
+    let ptr = SyncPtr(out.as_mut_ptr());
+    // Reference the wrapper (not the raw field) so the closure capture
+    // is the Sync wrapper rather than the bare `*mut T`.
+    let ptr = &ptr;
+    parallel_for(n_windows, sched_chunk, |i| {
+        let (lo, hi) = bounds(i);
+        debug_assert!(lo <= hi && hi <= len, "window {i}: {lo}..{hi} of {len}");
+        // SAFETY: see the function doc — windows partition disjoint
+        // in-bounds ranges and window `i` is visited exactly once.
+        let window = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+        f(i, window);
+    });
 }
 
 /// Produce `0..n` values in parallel without the `Default + Clone` bound
@@ -205,6 +281,76 @@ mod tests {
         assert!(out.iter().enumerate().all(|(i, &v)| v == i + 1));
         set_num_threads(0);
         assert_eq!(num_threads(), default);
+    }
+
+    /// A window fill whose values depend on the window index, the offset
+    /// inside the window, and transcendental math — any aliasing,
+    /// skipped/doubled window, or cross-thread write corruption shows up
+    /// as a bit-level mismatch against the serial reference.
+    fn probe_fill(i: usize, w: &mut [f64]) {
+        for (k, v) in w.iter_mut().enumerate() {
+            *v = ((i as f64) + 1.7).sqrt() * ((k as f64) + 0.3).ln_1p() + (i * 31 + k) as f64;
+        }
+    }
+
+    #[test]
+    fn fill_helpers_match_serial_bit_for_bit_at_1_2_4_threads() {
+        let _guard = TEST_OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let n = 4099; // prime: exercises a short trailing chunk window
+        // Serial reference for the chunked layout (window_len 17).
+        let mut chunked_want = vec![0.0f64; n];
+        for (i, w) in chunked_want.chunks_mut(17).enumerate() {
+            probe_fill(i, w);
+        }
+        // Irregular windows (lengths 0..=13 cycling) for the offsets
+        // layout, including empty windows.
+        let mut offsets = vec![0usize];
+        let mut next = 0usize;
+        for i in 0.. {
+            if next >= n {
+                break;
+            }
+            next = (next + i % 14).min(n);
+            offsets.push(next);
+        }
+        let mut windowed_want = vec![0.0f64; n];
+        for i in 0..offsets.len() - 1 {
+            probe_fill(i, &mut windowed_want[offsets[i]..offsets[i + 1]]);
+        }
+        for threads in [1usize, 2, 4] {
+            set_num_threads(threads);
+            let mut got = vec![0.0f64; n];
+            parallel_fill_chunks(&mut got, 17, 3, probe_fill);
+            assert!(
+                got.iter()
+                    .zip(&chunked_want)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "chunked fill diverged from serial at {threads} threads"
+            );
+            let mut got = vec![0.0f64; n];
+            parallel_fill_windows(&mut got, &offsets, 5, probe_fill);
+            assert!(
+                got.iter()
+                    .zip(&windowed_want)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "windowed fill diverged from serial at {threads} threads"
+            );
+        }
+        set_num_threads(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn fill_windows_rejects_decreasing_offsets() {
+        let mut out = [0u8; 4];
+        parallel_fill_windows(&mut out, &[0, 3, 1], 1, |_, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn fill_windows_rejects_out_of_bounds_offsets() {
+        let mut out = [0u8; 4];
+        parallel_fill_windows(&mut out, &[0, 2, 9], 1, |_, _| {});
     }
 
     #[test]

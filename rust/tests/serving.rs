@@ -2,6 +2,14 @@
 //! real trained models, engine-vs-sequential decision parity under
 //! concurrency, the HTTP front end over localhost, and the `mlsvm serve`
 //! CLI binary answering requests from a registry model.
+//!
+//! The second half is the serving **conformance suite**: raw-TCP
+//! HTTP/1.1 pipelining semantics (in-order responses, arbitrary byte
+//! seams, depth shedding, half-close draining) and the engine-manager
+//! lifecycle contract (LRU capacity eviction, idle reaping with an
+//! injected clock, reload racing the reaper) — all deterministic: no
+//! sleeps as synchronization, clocks injected, completion awaited on
+//! tickets or response framing.
 
 use mlsvm::coordinator::jobs::OneVsRestTrainer;
 use mlsvm::data::matrix::Matrix;
@@ -11,16 +19,19 @@ use mlsvm::mlsvm::params::MlsvmParams;
 use mlsvm::mlsvm::trainer::MlsvmTrainer;
 use mlsvm::modelsel::search::UdSearchConfig;
 use mlsvm::serve::{
-    http_request, load_artifact, save_artifact, save_artifact_v1, Decision, Engine, EngineConfig,
-    EngineManager, ModelArtifact, Registry, ServeState, Server,
+    http_pipeline_on, http_request, load_artifact, save_artifact, save_artifact_v1, Decision,
+    Engine, EngineConfig, EngineManager, ManagerConfig, ModelArtifact, Registry, ServeState,
+    Server, MAX_PIPELINE_DEPTH,
 };
 use mlsvm::svm::kernel::KernelKind;
 use mlsvm::svm::model::SvmModel;
 use mlsvm::svm::smo::{train, SvmParams};
 use mlsvm::util::rng::Pcg64;
+use std::io::{BufRead, Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn tmp_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("mlsvm_serving_it_{tag}"));
@@ -251,7 +262,6 @@ fn http_server_serves_registry_model_end_to_end() {
 
 #[test]
 fn serve_cli_answers_http_from_a_registry_model() {
-    use std::io::BufRead;
     let (model, ds) = binary_fixture(53);
     let dir = tmp_dir("cli");
     let reg = Registry::open(&dir).unwrap();
@@ -447,7 +457,6 @@ fn corrupted_binary_models_fail_with_serve_errors() {
 
 #[test]
 fn serve_cli_hosts_multiple_models() {
-    use std::io::BufRead;
     let (model, ds) = binary_fixture(59);
     let p2 = SvmParams {
         kernel: KernelKind::Rbf { gamma: 1.8 },
@@ -526,4 +535,403 @@ fn legacy_train_output_loads_into_the_engine() {
     };
     let want = model.decision(ds.points.row(0));
     assert!((value - want).abs() <= 1e-6 * want.abs().max(1.0));
+}
+
+// ---------------------------------------------------------------------------
+// Serving conformance suite: HTTP/1.1 pipelining over raw TCP
+// ---------------------------------------------------------------------------
+
+/// A ±x-axis toy model: label follows the sign of the first feature, so
+/// response bodies identify which request they answer.
+fn axis_model(gamma: f64) -> SvmModel {
+    SvmModel {
+        sv: Matrix::from_vec(2, 2, vec![1.0, 0.0, -1.0, 0.0]).unwrap(),
+        sv_coef: vec![1.0, -1.0],
+        rho: 0.0,
+        kernel: KernelKind::Rbf { gamma },
+        sv_indices: Vec::new(),
+        sv_labels: vec![1, -1],
+    }
+}
+
+/// Server over a fresh registry holding "tiny" (default) and "tiny2",
+/// with a fast-flushing engine config.
+fn start_axis_server(tag: &str) -> (Server, Arc<ServeState>) {
+    start_axis_server_with(
+        tag,
+        ManagerConfig {
+            max_engines: 0,
+            idle_evict: None,
+        },
+    )
+}
+
+fn start_axis_server_with(tag: &str, mgr_cfg: ManagerConfig) -> (Server, Arc<ServeState>) {
+    let dir = tmp_dir(&format!("conformance_{tag}"));
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("tiny", &ModelArtifact::Svm(axis_model(0.5))).unwrap();
+    reg.save("tiny2", &ModelArtifact::Svm(axis_model(2.0))).unwrap();
+    let manager = EngineManager::open_with(
+        reg,
+        EngineConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            queue_cap: 256,
+        },
+        mgr_cfg,
+    );
+    let state = Arc::new(ServeState::new(manager, "tiny"));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+    (server, state)
+}
+
+fn connect(addr: &SocketAddr) -> TcpStream {
+    let stream = TcpStream::connect_timeout(addr, Duration::from_secs(5)).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    stream
+}
+
+/// One raw predict request; the sign of the first feature (+1/−1) keys
+/// the expected response label.
+fn raw_predict(sign: i8) -> Vec<u8> {
+    let body = if sign >= 0 { "0.9, 0.1" } else { "-0.9, 0.1" };
+    format!(
+        "POST /predict HTTP/1.1\r\nHost: raw\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Read one `Content-Length`-framed response off a persistent reader
+/// (pipelined responses arrive back-to-back, possibly coalesced into one
+/// segment, so the reader must survive across calls).
+fn read_one_response(reader: &mut std::io::BufReader<&TcpStream>) -> (u16, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    let code: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line '{}'", status_line.trim()));
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).expect("header line");
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body).expect("response body");
+    (code, String::from_utf8_lossy(&body).into_owned())
+}
+
+/// Expect EOF on the stream (the server closed its side).
+fn assert_eof(stream: &TcpStream) {
+    let mut buf = [0u8; 16];
+    let n = Read::read(&mut (&stream), &mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "server must have closed the connection");
+}
+
+#[test]
+fn conformance_pipelined_burst_in_one_write_answers_in_order() {
+    let (server, _state) = start_axis_server("burst_order");
+    let stream = connect(&server.addr());
+    // 12 requests with alternating expected labels, one write_all.
+    let n = 12;
+    let mut burst = Vec::new();
+    for i in 0..n {
+        burst.extend_from_slice(&raw_predict(if i % 3 == 0 { 1 } else { -1 }));
+    }
+    (&stream).write_all(&burst).unwrap();
+    (&stream).flush().unwrap();
+    let mut reader = std::io::BufReader::new(&stream);
+    for i in 0..n {
+        let (code, body) = read_one_response(&mut reader);
+        assert_eq!(code, 200, "response {i}: {body}");
+        let want = if i % 3 == 0 { 1 } else { -1 };
+        assert!(
+            body.contains(&format!("\"label\":{want}")),
+            "response {i} out of order: {body}"
+        );
+    }
+    // The connection survives the burst: a sequential request still works.
+    drop(reader);
+    (&stream).write_all(&raw_predict(1)).unwrap();
+    let mut reader = std::io::BufReader::new(&stream);
+    let (code, body) = read_one_response(&mut reader);
+    assert_eq!(code, 200);
+    assert!(body.contains("\"label\":1"), "{body}");
+}
+
+#[test]
+fn conformance_requests_split_at_arbitrary_byte_boundaries() {
+    let (server, _state) = start_axis_server("byte_seams");
+    // The same 3-request burst must parse identically no matter where
+    // the TCP segment seams fall, including inside the request line,
+    // header block, and body.
+    for chunk_len in [1usize, 3, 7, 19] {
+        let stream = connect(&server.addr());
+        let mut burst = Vec::new();
+        for i in 0..3 {
+            burst.extend_from_slice(&raw_predict(if i == 1 { -1 } else { 1 }));
+        }
+        for chunk in burst.chunks(chunk_len) {
+            (&stream).write_all(chunk).unwrap();
+            (&stream).flush().unwrap();
+            // Nudge the kernel to deliver the fragment on its own; the
+            // server must be correct for ANY delivery pattern, so this
+            // shapes the input rather than synchronizing anything.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut reader = std::io::BufReader::new(&stream);
+        for i in 0..3 {
+            let (code, body) = read_one_response(&mut reader);
+            assert_eq!(code, 200, "chunk_len {chunk_len} response {i}: {body}");
+            let want = if i == 1 { -1 } else { 1 };
+            assert!(
+                body.contains(&format!("\"label\":{want}")),
+                "chunk_len {chunk_len} response {i}: {body}"
+            );
+        }
+    }
+}
+
+#[test]
+fn conformance_body_split_across_segments_at_the_header_seam() {
+    let (server, _state) = start_axis_server("body_seam");
+    let stream = connect(&server.addr());
+    let body = "0.9, 0.1";
+    let head = format!(
+        "POST /predict HTTP/1.1\r\nHost: raw\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    // Head in one segment, half the body in the next, the rest plus a
+    // complete pipelined request in the third.
+    (&stream).write_all(head.as_bytes()).unwrap();
+    (&stream).flush().unwrap();
+    std::thread::sleep(Duration::from_millis(2));
+    (&stream).write_all(&body.as_bytes()[..4]).unwrap();
+    (&stream).flush().unwrap();
+    std::thread::sleep(Duration::from_millis(2));
+    let mut rest = body.as_bytes()[4..].to_vec();
+    rest.extend_from_slice(&raw_predict(-1));
+    (&stream).write_all(&rest).unwrap();
+    (&stream).flush().unwrap();
+    let mut reader = std::io::BufReader::new(&stream);
+    let (code, b1) = read_one_response(&mut reader);
+    assert_eq!(code, 200, "{b1}");
+    assert!(b1.contains("\"label\":1"), "{b1}");
+    let (code, b2) = read_one_response(&mut reader);
+    assert_eq!(code, 200, "{b2}");
+    assert!(b2.contains("\"label\":-1"), "{b2}");
+}
+
+#[test]
+fn conformance_oversized_pipeline_depth_sheds_503_and_closes() {
+    let (server, _state) = start_axis_server("depth_shed");
+    let stream = connect(&server.addr());
+    // Stuff well past the depth limit into one write: the server answers
+    // MAX_PIPELINE_DEPTH requests in order, 503s the next, and closes.
+    let n = MAX_PIPELINE_DEPTH + 8;
+    let mut burst = Vec::new();
+    for _ in 0..n {
+        burst.extend_from_slice(b"GET /healthz HTTP/1.1\r\nHost: raw\r\n\r\n");
+    }
+    (&stream).write_all(&burst).unwrap();
+    (&stream).flush().unwrap();
+    let mut reader = std::io::BufReader::new(&stream);
+    for i in 0..MAX_PIPELINE_DEPTH {
+        let (code, body) = read_one_response(&mut reader);
+        assert_eq!(code, 200, "response {i}: {body}");
+    }
+    let (code, body) = read_one_response(&mut reader);
+    assert_eq!(code, 503, "excess request must be shed: {body}");
+    assert!(body.contains("pipeline depth"), "{body}");
+    drop(reader);
+    assert_eof(&stream);
+    // The shed connection leaks nothing: the server keeps serving.
+    let (code, _) = http_request(&server.addr(), "GET", "/healthz", "").unwrap();
+    assert_eq!(code, 200);
+}
+
+#[test]
+fn conformance_half_close_mid_pipeline_drains_every_response() {
+    let (server, state) = start_axis_server("half_close");
+    for round in 0..3 {
+        let stream = connect(&server.addr());
+        let m = 5;
+        let mut burst = Vec::new();
+        for i in 0..m {
+            burst.extend_from_slice(&raw_predict(if (i + round) % 2 == 0 { 1 } else { -1 }));
+        }
+        (&stream).write_all(&burst).unwrap();
+        // Half-close: the client is done writing mid-pipeline. Every
+        // already-written request must still be answered, in order.
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut reader = std::io::BufReader::new(&stream);
+        for i in 0..m {
+            let (code, body) = read_one_response(&mut reader);
+            assert_eq!(code, 200, "round {round} response {i}: {body}");
+            let want = if (i + round) % 2 == 0 { 1 } else { -1 };
+            assert!(
+                body.contains(&format!("\"label\":{want}")),
+                "round {round} response {i}: {body}"
+            );
+        }
+        drop(reader);
+        assert_eof(&stream);
+    }
+    // No connection (or engine-side request) leaked across the rounds.
+    let tiny = state.manager.get("tiny").expect("engine running");
+    assert_eq!(tiny.engine().in_flight(), 0);
+    assert_eq!(tiny.engine().queued(), 0);
+    let (code, _) = http_request(&server.addr(), "GET", "/healthz", "").unwrap();
+    assert_eq!(code, 200);
+}
+
+#[test]
+fn conformance_pipelined_client_helper_round_trips_many_bursts() {
+    let (server, _state) = start_axis_server("helper_bursts");
+    let stream = connect(&server.addr());
+    // Several consecutive bursts through the public helper on one
+    // connection — each burst under the depth limit, statuses all 200,
+    // labels in request order.
+    for round in 0..4 {
+        let reqs: Vec<(&str, &str, &str)> = (0..MAX_PIPELINE_DEPTH / 2)
+            .map(|i| {
+                (
+                    "POST",
+                    "/predict",
+                    if (i + round) % 2 == 0 { "0.9, 0.1" } else { "-0.9, 0.1" },
+                )
+            })
+            .collect();
+        let responses = http_pipeline_on(&stream, &reqs).unwrap();
+        assert_eq!(responses.len(), reqs.len());
+        for (i, (code, body)) in responses.iter().enumerate() {
+            assert_eq!(*code, 200, "round {round} response {i}: {body}");
+            let want = if (i + round) % 2 == 0 { 1 } else { -1 };
+            assert!(
+                body.contains(&format!("\"label\":{want}")),
+                "round {round} response {i}: {body}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving conformance suite: engine-manager lifecycle over HTTP
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conformance_fleet_capacity_counters_surface_in_the_listing() {
+    let (server, state) = start_axis_server_with(
+        "fleet_stats",
+        ManagerConfig {
+            max_engines: 1,
+            idle_evict: Some(Duration::from_secs(600)),
+        },
+    );
+    let addr = server.addr();
+    // Predict through both models: the second spawn evicts the first
+    // (cap 1), which the listing must report.
+    let (code, _) = http_request(&addr, "POST", "/v1/models/tiny/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200);
+    let (code, _) = http_request(&addr, "POST", "/v1/models/tiny2/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(state.manager.loaded_names(), vec!["tiny2"]);
+    let (code, listing) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(listing.contains("\"capacity\":{"), "{listing}");
+    assert!(listing.contains("\"max_engines\":1"), "{listing}");
+    assert!(listing.contains("\"idle_evict_secs\":600"), "{listing}");
+    assert!(listing.contains("\"capacity_evictions\":1"), "{listing}");
+    // An injected-clock sweep reaps the survivor; the listing counts it.
+    let evicted = state
+        .manager
+        .sweep_idle_at(Instant::now() + Duration::from_secs(7200));
+    assert_eq!(evicted, vec!["tiny2"]);
+    let (code, listing) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(listing.contains("\"idle_reaped\":1"), "{listing}");
+    assert!(listing.contains("\"loaded\":0"), "{listing}");
+    // A predict respawns the engine transparently.
+    let (code, _) = http_request(&addr, "POST", "/v1/models/tiny/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200);
+}
+
+#[test]
+fn conformance_capacity_contention_over_http_stays_consistent() {
+    // Many client threads alternating between two models under a cap of
+    // one: every request must succeed (the returned engine Arc outlives
+    // its eviction) and the fleet must settle at the cap.
+    let (server, state) = start_axis_server_with(
+        "http_contention",
+        ManagerConfig {
+            max_engines: 1,
+            idle_evict: None,
+        },
+    );
+    let addr = server.addr();
+    std::thread::scope(|s| {
+        for t in 0..6 {
+            let addr = addr;
+            s.spawn(move || {
+                for r in 0..20 {
+                    let name = if (t + r) % 2 == 0 { "tiny" } else { "tiny2" };
+                    let target = format!("/v1/models/{name}/predict");
+                    let (code, body) = http_request(&addr, "POST", &target, "0.9, 0.1").unwrap();
+                    assert_eq!(code, 200, "{target}: {body}");
+                    assert!(body.contains("\"label\":1"), "{target}: {body}");
+                }
+            });
+        }
+    });
+    // One settling acquisition: everything is idle now, so the self-
+    // healing enforcement on the predict path brings the fleet to cap.
+    let (code, _) = http_request(&addr, "POST", "/v1/models/tiny/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200);
+    assert!(
+        state.manager.loaded_names().len() <= 1,
+        "cap must hold once the fleet quiesces: {:?}",
+        state.manager.loaded_names()
+    );
+    assert!(state.manager.fleet_capacity().capacity_evictions > 0);
+}
+
+#[test]
+fn conformance_reload_respawns_after_reap_and_touch_resets_idleness() {
+    let (server, state) = start_axis_server_with(
+        "reload_vs_reap",
+        ManagerConfig {
+            max_engines: 0,
+            idle_evict: Some(Duration::from_secs(120)),
+        },
+    );
+    let addr = server.addr();
+    let (code, _) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200);
+    // Reap with an injected clock, then reload over HTTP: the engine
+    // respawns and serves.
+    let far = Instant::now() + Duration::from_secs(86_400);
+    assert_eq!(state.manager.sweep_idle_at(far), vec!["tiny"]);
+    let (code, _) = http_request(&addr, "POST", "/v1/models/tiny/reload", "").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(state.manager.loaded_names(), vec!["tiny"]);
+    // The reload stamped the engine as active: a sweep at "now" (well
+    // inside the window) must keep it.
+    assert!(state.manager.sweep_idle_at(Instant::now()).is_empty());
+    let (code, _) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200);
 }
