@@ -47,6 +47,9 @@ struct LoadResult {
     utilization: f64,
     batches: u64,
     deadline_flushes: u64,
+    worker_panics: u64,
+    timeouts: u64,
+    injected_faults: u64,
 }
 
 fn percentile_ms(sorted: &[f64], p: f64) -> f64 {
@@ -145,6 +148,9 @@ fn run_load(
         utilization: st.utilization,
         batches: st.batches,
         deadline_flushes: st.deadline_flushes,
+        worker_panics: st.worker_panics,
+        timeouts: st.timeouts,
+        injected_faults: state.faults().injected().total(),
     }
 }
 
@@ -571,10 +577,21 @@ fn main() {
         .chain(std::iter::once(&trickle))
         .map(json_entry)
         .collect();
+    // Robustness invariant for CI: an unfaulted bench run must report
+    // all-zero fault counters — no injected faults (the wired plan is
+    // disarmed), no worker panics, no expired deadlines.
+    let all = || results.iter().chain(std::iter::once(&trickle));
+    let faults_json = format!(
+        "{{\"injected_total\": {}, \"worker_panics\": {}, \"timeouts\": {}}}",
+        all().map(|r| r.injected_faults).sum::<u64>(),
+        all().map(|r| r.worker_panics).sum::<u64>(),
+        all().map(|r| r.timeouts).sum::<u64>()
+    );
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"threads\": {},\n  \"clients\": {clients},\n  \
          \"requests_per_client\": {requests},\n  \"configs\": [\n{}\n  ],\n  \"multi_model\": \
          {multi_json},\n  \"pipelining\": {pipeline_json},\n  \"model_io\": {io_json},\n  \
+         \"faults\": {faults_json},\n  \
          \"headline\": \
          {{\"max_batch\": {}, \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
          \"p99_ms\": {:.3}, \"utilization\": {:.4}}}\n}}\n",

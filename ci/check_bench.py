@@ -40,7 +40,12 @@ to the combined request total, and every per-model entry must carry
 p50/p95/p99 latencies) and the pipelining section (the pipelined client
 must beat sequential keep-alive on one connection — the feature's whole
 point; a wall-clock-robust gate because both run on the same box
-back-to-back).
+back-to-back). Finally it gates the faults section: an UNFAULTED bench
+run must report all-zero fault counters (no injected faults from the
+disarmed plan, no worker panics, no expired request deadlines) — if any
+counter is nonzero, either the fault-injection harness armed itself or
+the serve stack panicked/timed out under plain load, both of which are
+bugs.
 
 Usage:
   check_bench.py <baseline.json> <current.json>
@@ -180,6 +185,22 @@ def check_serve(path: str, min_load_speedup: float) -> int:
                 f"pipelining: {seq:.0f} -> {pipe:.0f} req/s "
                 f"({pl.get('speedup')}x at depth {pl.get('depth')}) OK"
             )
+
+    faults = data.get("faults")
+    if not isinstance(faults, dict):
+        print(f"{path} has no faults section (serve bench too old?)")
+        failed = True
+    else:
+        nonzero = {
+            k: v
+            for k in ("injected_total", "worker_panics", "timeouts")
+            if (v := faults.get(k)) != 0
+        }
+        if nonzero:
+            print(f"FAULT COUNTERS NONZERO in unfaulted bench: {nonzero}")
+            failed = True
+        else:
+            print("fault counters: all zero in unfaulted run OK")
     return 1 if failed else 0
 
 

@@ -233,6 +233,31 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// Flipped by SIGTERM/SIGINT; `mlsvm serve` notices within its ~100ms
+/// poll and starts a graceful drain instead of dying mid-request.
+static SHUTDOWN_SIGNAL: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Route SIGTERM and SIGINT into [`SHUTDOWN_SIGNAL`] (raw libc `signal`:
+/// the crate is dependency-free, so no signal-hook).
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN_SIGNAL.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+        signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let args = Args::new("mlsvm serve", "serve registry models over HTTP")
         .opt("registry", "registry directory", Some("models"))
@@ -258,6 +283,21 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             Some("0"),
         )
         .opt("max-seconds", "exit after this long (0 = run forever)", Some("0"))
+        .opt(
+            "request-timeout-ms",
+            "per-request deadline; expired requests answer 503 (0 = none)",
+            Some("30000"),
+        )
+        .opt(
+            "drain-secs",
+            "on SIGTERM/SIGINT, wait this long for in-flight requests",
+            Some("10"),
+        )
+        .opt(
+            "fault-plan",
+            "arm deterministic fault injection (testing only)",
+            None,
+        )
         .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
         .parse_from(argv)?;
     apply_threads(&args)?;
@@ -289,7 +329,12 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         max_engines: args.get_usize("max-engines")?,
         idle_evict: (idle_secs > 0).then(|| std::time::Duration::from_secs(idle_secs)),
     };
-    let manager = mlsvm::serve::EngineManager::open_with(reg, cfg, mgr_cfg);
+    let mut manager = mlsvm::serve::EngineManager::open_with(reg, cfg, mgr_cfg);
+    if let Some(spec) = args.get("fault-plan") {
+        manager.set_faults(mlsvm::serve::FaultPlan::parse(spec)?);
+        eprintln!("fault plan armed: {spec}");
+    }
+    let manager = manager;
     for name in &names {
         let me = manager.engine(name).map_err(|e| {
             Error::Usage(format!(
@@ -303,6 +348,10 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     }
     let default = names[0].clone();
     let state = std::sync::Arc::new(mlsvm::serve::ServeState::new(manager, default.clone()));
+    let timeout_ms = args.get_u64("request-timeout-ms")?;
+    if timeout_ms > 0 {
+        state.set_request_timeout(Some(std::time::Duration::from_millis(timeout_ms)));
+    }
     // Idle-engine reaper: a background sweep that evicts engines nothing
     // has predicted through for the configured window (preloaded models
     // included — they respawn lazily on the next predict).
@@ -330,13 +379,32 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     );
     use std::io::Write as _;
     std::io::stdout().flush()?; // spawners poll stdout for the address
+    install_signal_handlers();
     let max_secs = args.get_u64("max-seconds")?;
-    if max_secs == 0 {
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
+    let drain_secs = args.get_u64("drain-secs")?.max(1);
+    let started = std::time::Instant::now();
+    // ~100ms poll: cheap enough to idle forever, fast enough that a
+    // SIGTERM starts draining promptly.
+    loop {
+        if SHUTDOWN_SIGNAL.load(std::sync::atomic::Ordering::SeqCst) {
+            eprintln!("signal received: draining (up to {drain_secs}s)");
+            state.begin_drain();
+            // Kick parked partial batches each poll round so in-flight
+            // pipelined requests complete now rather than at their
+            // batching deadlines; connections then close cleanly.
+            let clean = server.drain(std::time::Duration::from_secs(drain_secs), || {
+                state.manager.kick_all()
+            });
+            if !clean {
+                eprintln!("drain deadline passed with connections still active");
+            }
+            break;
         }
+        if max_secs > 0 && started.elapsed() >= std::time::Duration::from_secs(max_secs) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
     }
-    std::thread::sleep(std::time::Duration::from_secs(max_secs));
     server.shutdown();
     for me in state.manager.loaded() {
         println!("stats[{}]: {}", me.name(), me.stats().to_json());

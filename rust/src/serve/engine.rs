@@ -30,14 +30,31 @@
 use crate::coordinator::jobs::MulticlassModel;
 use crate::data::matrix::{dot, Matrix};
 use crate::error::{Error, Result};
+use crate::serve::faults::FaultPlan;
 use crate::serve::registry::ModelArtifact;
 use crate::serve::stats::{BatchStats, EngineStats, StatsSnapshot};
 use crate::svm::kernel::{KernelKind, KERNEL_TILE};
 use crate::svm::model::SvmModel;
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::time::{Duration, Instant};
+
+/// Re-enter limit for a worker whose loop itself panicked (outside the
+/// per-batch `catch_unwind`): after this many re-entries the worker
+/// stays down rather than spinning on a deterministic crash.
+const WORKER_RESPAWN_CAP: usize = 8;
+
+/// Acquire a mutex, recovering from poisoning. A poisoned lock here
+/// means some thread panicked while holding it; the queue state it
+/// protects is a plain `VecDeque` + flags that stay structurally valid
+/// at every await point, and the panic itself is surfaced through the
+/// ticket/stats path — so subsequent requests must keep working instead
+/// of cascading the abort.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 // ---------------------------------------------------------------------------
 // Flush policy (shared by BatchQueue and the threaded Engine)
@@ -421,16 +438,18 @@ impl ModelSlot {
     }
 
     /// The scorer currently installed (cheap: one `Arc` clone under a
-    /// read lock).
+    /// read lock). Poisoning is recovered: a swap never leaves the slot
+    /// half-written (the new `Arc` is built before the write lock), so
+    /// whatever is installed is always a complete scorer.
     pub fn get(&self) -> Arc<ArtifactScorer> {
-        Arc::clone(&self.scorer.read().unwrap())
+        Arc::clone(&self.scorer.read().unwrap_or_else(|e| e.into_inner()))
     }
 
     /// Install a new model. Fails (leaving the old model in place) if the
     /// artifact cannot be prepared for serving.
     pub fn swap(&self, artifact: &ModelArtifact) -> Result<()> {
         let scorer = ArtifactScorer::new(artifact)?;
-        *self.scorer.write().unwrap() = Arc::new(scorer);
+        *self.scorer.write().unwrap_or_else(|e| e.into_inner()) = Arc::new(scorer);
         Ok(())
     }
 }
@@ -467,6 +486,10 @@ struct Request {
     x: Vec<f32>,
     enqueued: Instant,
     tx: mpsc::Sender<std::result::Result<Decision, String>>,
+    /// Set by [`Ticket::wait_deadline`] when the server-side deadline
+    /// expires: the batcher skips the request instead of scoring work
+    /// nobody is waiting for.
+    cancelled: Arc<AtomicBool>,
 }
 
 struct QueueInner {
@@ -474,6 +497,11 @@ struct QueueInner {
     /// False once shutdown begins: submits are rejected, workers drain
     /// what is left and exit.
     open: bool,
+    /// One-shot flush request ([`Engine::kick`]): the next batch pops
+    /// immediately even if neither the size nor the deadline trigger is
+    /// due. The graceful-drain path uses this to complete parked partial
+    /// batches without closing the queue.
+    kick: bool,
 }
 
 struct Shared {
@@ -484,12 +512,15 @@ struct Shared {
     /// Signaled when a batch is drained (queue has space again).
     space: Condvar,
     slot: Arc<ModelSlot>,
-    stats: EngineStats,
+    stats: Arc<EngineStats>,
+    faults: Arc<FaultPlan>,
 }
 
 /// A pending prediction: wait on it to get the [`Decision`].
 pub struct Ticket {
     rx: mpsc::Receiver<std::result::Result<Decision, String>>,
+    cancelled: Arc<AtomicBool>,
+    stats: Arc<EngineStats>,
 }
 
 impl Ticket {
@@ -516,6 +547,28 @@ impl Ticket {
             }
         }
     }
+
+    /// Deadline-bounded wait for the serving path. `None` means the
+    /// deadline expired: the ticket is cancelled (the batcher will skip
+    /// the request and count it completed, so `in_flight` still drains)
+    /// and the expiry is counted in the engine's `timeouts` stat — the
+    /// caller owns the timeout response (503 + `Retry-After`). Results
+    /// and engine-side errors come back as `Some`.
+    pub fn wait_deadline(self, timeout: Duration) -> Option<Result<Decision>> {
+        use std::sync::atomic::Ordering;
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(d)) => Some(Ok(d)),
+            Ok(Err(msg)) => Some(Err(Error::Serve(msg))),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                self.cancelled.store(true, Ordering::SeqCst);
+                self.stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(Error::Serve("engine dropped the request".into())))
+            }
+        }
+    }
 }
 
 /// The concurrent dynamic-batching decision engine.
@@ -537,6 +590,16 @@ impl Engine {
     /// time — this is how the manager hot-reloads without reaching into
     /// the engine.
     pub fn with_slot(slot: Arc<ModelSlot>, cfg: EngineConfig) -> Result<Engine> {
+        Engine::with_slot_faults(slot, cfg, FaultPlan::disarmed())
+    }
+
+    /// [`Engine::with_slot`] with a fault plan wired into the workers
+    /// (the chaos-test/CLI `--fault-plan` path; a disarmed plan is free).
+    pub fn with_slot_faults(
+        slot: Arc<ModelSlot>,
+        cfg: EngineConfig,
+        faults: Arc<FaultPlan>,
+    ) -> Result<Engine> {
         let cfg = EngineConfig {
             max_batch: cfg.max_batch.max(1),
             workers: cfg.workers.max(1),
@@ -548,18 +611,40 @@ impl Engine {
             q: Mutex::new(QueueInner {
                 pending: VecDeque::new(),
                 open: true,
+                kick: false,
             }),
             work: Condvar::new(),
             space: Condvar::new(),
             slot,
-            stats: EngineStats::new(),
+            stats: Arc::new(EngineStats::new()),
+            faults,
         });
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let sh = Arc::clone(&shared);
             let handle = std::thread::Builder::new()
                 .name(format!("serve-engine-{w}"))
-                .spawn(move || worker_loop(&sh))
+                .spawn(move || {
+                    // Per-batch scoring panics are caught inside
+                    // `worker_loop`; this outer guard catches anything
+                    // else that unwinds (queue plumbing, allocation) and
+                    // re-enters the loop so one panic cannot permanently
+                    // shrink the worker pool. Bounded: a deterministic
+                    // crash-on-entry must not spin forever.
+                    for _ in 0..=WORKER_RESPAWN_CAP {
+                        let exit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            worker_loop(&sh)
+                        }));
+                        match exit {
+                            Ok(()) => break, // normal shutdown
+                            Err(_) => {
+                                sh.stats
+                                    .worker_panics
+                                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                    }
+                })
                 .map_err(|e| Error::Serve(format!("spawning engine worker: {e}")))?;
             workers.push(handle);
         }
@@ -600,12 +685,14 @@ impl Engine {
             )));
         }
         let (tx, rx) = mpsc::channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
         let req = Request {
             x: x.to_vec(),
             enqueued: Instant::now(),
             tx,
+            cancelled: Arc::clone(&cancelled),
         };
-        let mut q = self.shared.q.lock().unwrap();
+        let mut q = lock_recover(&self.shared.q);
         let mut counted_wait = false;
         while q.open && q.pending.len() >= self.shared.cfg.queue_cap {
             // Count submits that experienced backpressure, not condvar
@@ -618,7 +705,11 @@ impl Engine {
                     .backpressure_waits
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             }
-            q = self.shared.space.wait(q).unwrap();
+            q = self
+                .shared
+                .space
+                .wait(q)
+                .unwrap_or_else(|e| e.into_inner());
         }
         if !q.open {
             return Err(Error::Serve("engine is shut down".into()));
@@ -630,7 +721,11 @@ impl Engine {
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         drop(q);
         self.shared.work.notify_one();
-        Ok(Ticket { rx })
+        Ok(Ticket {
+            rx,
+            cancelled,
+            stats: Arc::clone(&self.shared.stats),
+        })
     }
 
     /// Submit one query and wait for its decision.
@@ -667,7 +762,21 @@ impl Engine {
 
     /// Requests currently queued (not yet evaluated).
     pub fn queued(&self) -> usize {
-        self.shared.q.lock().unwrap().pending.len()
+        lock_recover(&self.shared.q).pending.len()
+    }
+
+    /// Ask the workers to flush whatever is pending right now, without
+    /// closing the queue. The graceful-drain loop calls this repeatedly
+    /// so parked partial batches (waiting on `max_wait`) complete
+    /// promptly while new requests are still being accepted.
+    pub fn kick(&self) {
+        let mut q = lock_recover(&self.shared.q);
+        if q.pending.is_empty() {
+            return;
+        }
+        q.kick = true;
+        drop(q);
+        self.shared.work.notify_all();
     }
 
     /// Requests accepted but not yet answered (queued or mid-batch). The
@@ -684,7 +793,7 @@ impl Engine {
     }
 
     fn begin_shutdown(&self) {
-        let mut q = self.shared.q.lock().unwrap();
+        let mut q = lock_recover(&self.shared.q);
         q.open = false;
         drop(q);
         self.shared.work.notify_all();
@@ -715,9 +824,9 @@ enum TakeKind {
     Size,
     /// The deadline fired on a partial batch; padding is real.
     Deadline,
-    /// Shutdown drain: no deadline fired and nothing was waiting to fill
-    /// the batch, so it neither counts as a deadline flush nor as padded
-    /// slots.
+    /// Shutdown or [`Engine::kick`] drain: no deadline fired and nothing
+    /// was waiting to fill the batch, so it neither counts as a deadline
+    /// flush nor as padded slots.
     Drain,
 }
 
@@ -727,9 +836,10 @@ enum TakeKind {
 fn next_batch(shared: &Shared) -> Option<(Vec<Request>, TakeKind)> {
     let cfg = &shared.cfg;
     let policy = FlushPolicy::new(cfg.max_batch, cfg.max_wait);
-    let mut q = shared.q.lock().unwrap();
+    let mut q = lock_recover(&shared.q);
     let kind = loop {
         if q.pending.is_empty() {
+            q.kick = false;
             if !q.open {
                 return None;
             }
@@ -738,11 +848,12 @@ fn next_batch(shared: &Shared) -> Option<(Vec<Request>, TakeKind)> {
             let (nq, _) = shared
                 .work
                 .wait_timeout(q, Duration::from_millis(50))
-                .unwrap();
+                .unwrap_or_else(|e| e.into_inner());
             q = nq;
             continue;
         }
-        if !q.open {
+        if !q.open || q.kick {
+            q.kick = false;
             break TakeKind::Drain;
         }
         let oldest = q.pending.front().map(|r| r.enqueued);
@@ -754,7 +865,10 @@ fn next_batch(shared: &Shared) -> Option<(Vec<Request>, TakeKind)> {
                     .time_left(oldest)
                     .unwrap_or(Duration::from_millis(50))
                     .max(Duration::from_micros(50));
-                let (nq, _) = shared.work.wait_timeout(q, wait).unwrap();
+                let (nq, _) = shared
+                    .work
+                    .wait_timeout(q, wait)
+                    .unwrap_or_else(|e| e.into_inner());
                 q = nq;
             }
         }
@@ -766,17 +880,38 @@ fn next_batch(shared: &Shared) -> Option<(Vec<Request>, TakeKind)> {
     Some((batch, kind))
 }
 
+/// Best-effort text out of a panic payload (panics carry `&str` or
+/// `String` in practice).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
 fn worker_loop(shared: &Shared) {
     use std::sync::atomic::Ordering::Relaxed;
+    use std::sync::atomic::Ordering::SeqCst;
     while let Some((batch, kind)) = next_batch(shared) {
         let batch_len = batch.len() as u64;
         let scorer = shared.slot.get();
         let dim = scorer.dim();
+        // Cancelled requests (server-side deadline expired) are dropped
+        // before scoring: nobody is listening for the reply. Counting
+        // them completed here is what keeps `in_flight` draining.
+        let (live, dead): (Vec<Request>, Vec<Request>) = batch
+            .into_iter()
+            .partition(|r| !r.cancelled.load(SeqCst));
+        shared.stats.completed.fetch_add(dead.len() as u64, Relaxed);
+        drop(dead);
         // A reload between submit and evaluation can change the expected
         // dimensionality; answer mismatched requests with an error rather
         // than poisoning the batch.
         let (ok, bad): (Vec<Request>, Vec<Request>) =
-            batch.into_iter().partition(|r| r.x.len() == dim);
+            live.into_iter().partition(|r| r.x.len() == dim);
         for r in bad {
             // An error reply still answers the request — count it, so
             // `in_flight` drains to zero and eviction is not blocked
@@ -794,7 +929,17 @@ fn worker_loop(shared: &Shared) {
         for (r, req) in ok.iter().enumerate() {
             m.row_mut(r).copy_from_slice(&req.x);
         }
-        let decisions = scorer.decide_batch(&m);
+        // Panic isolation: a panic in scoring (a poisoned model, a bug
+        // in a kernel path, or an injected chaos fault) fails this
+        // batch's tickets with an error and leaves the worker serving
+        // the next batch — it must never abort the process or strand
+        // waiters.
+        let scored = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if shared.faults.worker_batch() {
+                panic!("injected fault: worker panic on batch");
+            }
+            scorer.decide_batch(&m)
+        }));
         shared.stats.batches.fetch_add(1, Relaxed);
         let slots = match kind {
             TakeKind::Size | TakeKind::Deadline => shared.cfg.max_batch as u64,
@@ -804,10 +949,22 @@ fn worker_loop(shared: &Shared) {
         if matches!(kind, TakeKind::Deadline) {
             shared.stats.deadline_flushes.fetch_add(1, Relaxed);
         }
-        for (req, d) in ok.into_iter().zip(decisions) {
-            shared.stats.latency.record_duration(req.enqueued.elapsed());
-            shared.stats.completed.fetch_add(1, Relaxed);
-            let _ = req.tx.send(Ok(d));
+        match scored {
+            Ok(decisions) => {
+                for (req, d) in ok.into_iter().zip(decisions) {
+                    shared.stats.latency.record_duration(req.enqueued.elapsed());
+                    shared.stats.completed.fetch_add(1, Relaxed);
+                    let _ = req.tx.send(Ok(d));
+                }
+            }
+            Err(payload) => {
+                shared.stats.worker_panics.fetch_add(1, Relaxed);
+                let msg = format!("scoring panicked: {}", panic_message(payload.as_ref()));
+                for req in ok {
+                    shared.stats.completed.fetch_add(1, Relaxed);
+                    let _ = req.tx.send(Err(msg.clone()));
+                }
+            }
         }
     }
 }
@@ -1078,6 +1235,122 @@ mod tests {
         assert_eq!(*a, s2.decide(ds.points.row(0)));
         assert_ne!(*a, *b, "reload must change the served model");
         assert_eq!(engine.stats().reloads, 1);
+    }
+
+    #[test]
+    fn worker_panic_fails_batch_but_engine_keeps_serving() {
+        let (model, ds) = fixture();
+        let slot = Arc::new(ModelSlot::new(&ModelArtifact::Svm(model.clone())).unwrap());
+        let faults = FaultPlan::disarmed();
+        faults.panic_on_batch(1);
+        let engine = Engine::with_slot_faults(
+            Arc::clone(&slot),
+            EngineConfig {
+                max_batch: 4,
+                max_wait: Duration::from_secs(3600), // size flushes only
+                workers: 1,
+                queue_cap: 64,
+            },
+            Arc::clone(&faults),
+        )
+        .unwrap();
+        // First batch: the armed fault panics scoring; every ticket of
+        // the batch errors instead of hanging, and the process survives.
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|i| engine.submit(ds.points.row(i)).unwrap())
+            .collect();
+        for t in tickets {
+            let err = t
+                .wait_timeout(Duration::from_secs(10))
+                .expect_err("faulted batch must error");
+            assert!(
+                err.to_string().contains("panicked"),
+                "error should name the panic: {err}"
+            );
+        }
+        // The engine keeps serving, bit-identical to a fresh scorer.
+        let scorer = BinaryScorer::new(model);
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|i| engine.submit(ds.points.row(i)).unwrap())
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let d = t.wait_timeout(Duration::from_secs(10)).unwrap();
+            let Decision::Binary { value, .. } = d else {
+                panic!("binary decision expected")
+            };
+            assert_eq!(value, scorer.decide(ds.points.row(i)), "row {i}");
+        }
+        let st = engine.stats();
+        assert_eq!(st.worker_panics, 1);
+        assert_eq!(st.completed, 12);
+        assert_eq!(engine.in_flight(), 0, "errors still count as answered");
+        assert_eq!(faults.injected().panics, 1);
+    }
+
+    #[test]
+    fn wait_deadline_cancels_parked_request() {
+        let (model, ds) = fixture();
+        let engine = Engine::new(
+            &ModelArtifact::Svm(model),
+            EngineConfig {
+                max_batch: 8,
+                max_wait: Duration::from_secs(3600), // parked: never flushes
+                workers: 1,
+                queue_cap: 64,
+            },
+        )
+        .unwrap();
+        let t = engine.submit(ds.points.row(0)).unwrap();
+        assert!(
+            t.wait_deadline(Duration::from_millis(20)).is_none(),
+            "parked batch cannot answer before the deadline"
+        );
+        assert_eq!(engine.stats().timeouts, 1);
+        // The cancelled request is skipped (not scored) on the next
+        // flush and still counts completed, so in_flight drains.
+        engine.kick();
+        while engine.in_flight() > 0 {
+            std::thread::yield_now();
+        }
+        let st = engine.stats();
+        assert_eq!(st.completed, 1);
+        assert_eq!(st.batches, 0, "a fully-cancelled batch is never scored");
+    }
+
+    #[test]
+    fn kick_flushes_parked_partial_batch_without_closing() {
+        let (model, ds) = fixture();
+        let engine = Engine::new(
+            &ModelArtifact::Svm(model.clone()),
+            EngineConfig {
+                max_batch: 8,
+                max_wait: Duration::from_secs(3600),
+                workers: 1,
+                queue_cap: 64,
+            },
+        )
+        .unwrap();
+        let tickets: Vec<Ticket> = (0..3)
+            .map(|i| engine.submit(ds.points.row(i)).unwrap())
+            .collect();
+        engine.kick();
+        let scorer = BinaryScorer::new(model);
+        for (i, t) in tickets.into_iter().enumerate() {
+            let d = t
+                .wait_timeout(Duration::from_secs(10))
+                .expect("kick must flush the parked batch");
+            let Decision::Binary { value, .. } = d else {
+                panic!("binary decision expected")
+            };
+            assert_eq!(value, scorer.decide(ds.points.row(i)), "row {i}");
+        }
+        let st = engine.stats();
+        assert_eq!(st.completed, 3);
+        assert_eq!(st.deadline_flushes, 0, "kick is a drain, not a deadline");
+        assert_eq!(st.slots, 3, "drain batches count only real slots");
+        // The queue stayed open: later submits still work (the dropped
+        // ticket is answered by the shutdown drain when `engine` drops).
+        assert!(engine.submit(ds.points.row(5)).is_ok());
     }
 
     #[test]

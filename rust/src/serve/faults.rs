@@ -1,0 +1,313 @@
+//! Deterministic fault injection for the serve stack.
+//!
+//! A [`FaultPlan`] is a set of *armed triggers* over monotone event
+//! counters: "panic scoring the Nth batch", "fail the Nth registry open
+//! (and the next k)", "hand the loader a truncated byte stream on the
+//! Nth open", "stall the Nth accepted connection for d ms". The module
+//! is compiled unconditionally — the hooks live on the production code
+//! paths so the chaos conformance suite exercises exactly the code that
+//! ships — but a default-constructed plan is fully disarmed and every
+//! hook is a single relaxed atomic load in that state.
+//!
+//! Determinism: triggers fire on event *ordinals*, never on clocks or
+//! randomness, so a chaos test at `MLSVM_THREADS=1` and `=4` injects
+//! the same fault at the same logical point. Every injected fault is
+//! also *counted* ([`FaultPlan::injected`]), which gives the bench/CI
+//! pipeline a cheap invariant: an unfaulted run must report all-zero
+//! injection counters ([`FaultCounters::total`]).
+//!
+//! Wiring (all optional, all default-disarmed):
+//! * [`crate::serve::engine::Engine::with_slot_faults`] — worker panics;
+//! * [`crate::serve::registry::Registry::set_faults`] — registry opens;
+//! * [`crate::serve::manager::EngineManager::set_faults`] — registry
+//!   opens and socket stalls (the HTTP server reads the manager's
+//!   plan);
+//! * `mlsvm serve --fault-plan <spec>` (hidden flag) — arms all three.
+
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Outcome of the registry-open hook.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadFault {
+    /// No fault: perform the real load.
+    None,
+    /// Fail the load with an injected I/O-style error.
+    Error,
+    /// Load the real bytes, then truncate them (corruption path).
+    Truncate,
+}
+
+/// Totals of faults actually injected so far (not merely armed).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Worker batch panics injected.
+    pub panics: u64,
+    /// Registry opens failed with an injected error.
+    pub load_errors: u64,
+    /// Registry opens handed truncated bytes.
+    pub load_truncations: u64,
+    /// Connections stalled.
+    pub stalls: u64,
+}
+
+impl FaultCounters {
+    /// Sum over every fault kind — zero means the plan never fired.
+    pub fn total(&self) -> u64 {
+        self.panics + self.load_errors + self.load_truncations + self.stalls
+    }
+
+    /// Render as a JSON object (hand-rolled; the crate has no serde).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"panics\":{},\"load_errors\":{},\"load_truncations\":{},\"stalls\":{}}}",
+            self.panics, self.load_errors, self.load_truncations, self.stalls
+        )
+    }
+}
+
+/// One armed trigger: fire on event ordinals `[first, first + count)`
+/// (1-based; `first == 0` means disarmed).
+#[derive(Debug, Default)]
+struct Trigger {
+    first: AtomicU64,
+    count: AtomicU64,
+    seen: AtomicU64,
+    fired: AtomicU64,
+}
+
+impl Trigger {
+    fn arm(&self, first: u64, count: u64) {
+        self.first.store(first, Ordering::SeqCst);
+        self.count.store(count, Ordering::SeqCst);
+    }
+
+    /// Count one event; true when the armed window covers its ordinal.
+    fn hit(&self) -> bool {
+        let first = self.first.load(Ordering::Relaxed);
+        if first == 0 {
+            return false;
+        }
+        let nth = self.seen.fetch_add(1, Ordering::SeqCst) + 1;
+        let fire = nth >= first && nth - first < self.count.load(Ordering::Relaxed);
+        if fire {
+            self.fired.fetch_add(1, Ordering::SeqCst);
+        }
+        fire
+    }
+
+    fn fired(&self) -> u64 {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+/// A deterministic, counter-driven fault plan (see module docs).
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    panic_batch: Trigger,
+    load_error: Trigger,
+    load_truncate: Trigger,
+    stall_conn: Trigger,
+    stall_ms: AtomicU64,
+}
+
+impl FaultPlan {
+    /// A fresh, fully disarmed plan.
+    pub fn disarmed() -> Arc<FaultPlan> {
+        Arc::new(FaultPlan::default())
+    }
+
+    /// Arm: panic while scoring the `nth` batch (1-based), once.
+    pub fn panic_on_batch(&self, nth: u64) {
+        self.panic_batch.arm(nth, 1);
+    }
+
+    /// Arm: fail registry opens `from_nth ..` for `count` opens.
+    pub fn fail_loads(&self, from_nth: u64, count: u64) {
+        self.load_error.arm(from_nth, count);
+    }
+
+    /// Arm: hand the loader truncated bytes on the `nth` open, once.
+    pub fn truncate_load(&self, nth: u64) {
+        self.load_truncate.arm(nth, 1);
+    }
+
+    /// Arm: stall the `nth` accepted connection for `ms` before reading.
+    pub fn stall_conn(&self, nth: u64, ms: u64) {
+        self.stall_ms.store(ms, Ordering::SeqCst);
+        self.stall_conn.arm(nth, 1);
+    }
+
+    /// Hook: a worker is about to score a batch. True = panic now (the
+    /// caller raises the panic so it unwinds through the real path).
+    pub fn worker_batch(&self) -> bool {
+        self.panic_batch.hit()
+    }
+
+    /// Hook: the registry is about to open an artifact.
+    pub fn registry_open(&self) -> LoadFault {
+        // Error takes precedence; both counters advance per open so a
+        // plan arming both stays ordinal-consistent.
+        let err = self.load_error.hit();
+        let trunc = self.load_truncate.hit();
+        if err {
+            LoadFault::Error
+        } else if trunc {
+            LoadFault::Truncate
+        } else {
+            LoadFault::None
+        }
+    }
+
+    /// Hook: a connection was accepted. Some(d) = stall for d first.
+    pub fn socket_accept(&self) -> Option<Duration> {
+        if self.stall_conn.hit() {
+            Some(Duration::from_millis(self.stall_ms.load(Ordering::SeqCst)))
+        } else {
+            None
+        }
+    }
+
+    /// True when any trigger is armed (used to hide the plan from
+    /// observability output in normal runs).
+    pub fn armed(&self) -> bool {
+        [
+            &self.panic_batch,
+            &self.load_error,
+            &self.load_truncate,
+            &self.stall_conn,
+        ]
+        .iter()
+        .any(|t| t.first.load(Ordering::SeqCst) != 0)
+    }
+
+    /// Totals of faults injected so far.
+    pub fn injected(&self) -> FaultCounters {
+        FaultCounters {
+            panics: self.panic_batch.fired(),
+            load_errors: self.load_error.fired(),
+            load_truncations: self.load_truncate.fired(),
+            stalls: self.stall_conn.fired(),
+        }
+    }
+
+    /// Parse a CLI spec: comma-separated `key=value` triggers.
+    ///
+    /// * `panic-batch=N` — panic scoring the Nth batch;
+    /// * `load-error=N` or `load-error=NxK` — fail opens N..N+K;
+    /// * `load-truncate=N` — truncated bytes on the Nth open;
+    /// * `stall-conn=N:MS` — stall the Nth connection MS milliseconds.
+    pub fn parse(spec: &str) -> Result<Arc<FaultPlan>> {
+        let plan = FaultPlan::default();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| Error::invalid(format!("fault-plan: '{part}' is not key=value")))?;
+            let bad = |what: &str| Error::invalid(format!("fault-plan {key}: bad {what} '{val}'"));
+            match key.trim() {
+                "panic-batch" => plan.panic_on_batch(parse_nth(val).ok_or_else(|| bad("N"))?),
+                "load-error" => {
+                    let (n, k) = match val.split_once('x') {
+                        Some((n, k)) => (
+                            parse_nth(n).ok_or_else(|| bad("N"))?,
+                            parse_nth(k).ok_or_else(|| bad("count"))?,
+                        ),
+                        None => (parse_nth(val).ok_or_else(|| bad("N"))?, 1),
+                    };
+                    plan.fail_loads(n, k);
+                }
+                "load-truncate" => plan.truncate_load(parse_nth(val).ok_or_else(|| bad("N"))?),
+                "stall-conn" => {
+                    let (n, ms) = val.split_once(':').ok_or_else(|| bad("N:MS"))?;
+                    plan.stall_conn(
+                        parse_nth(n).ok_or_else(|| bad("N"))?,
+                        ms.trim().parse().map_err(|_| bad("MS"))?,
+                    );
+                }
+                other => {
+                    return Err(Error::invalid(format!(
+                        "fault-plan: unknown trigger '{other}'"
+                    )))
+                }
+            }
+        }
+        Ok(Arc::new(plan))
+    }
+}
+
+fn parse_nth(s: &str) -> Option<u64> {
+    s.trim().parse().ok().filter(|&n| n >= 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_plan_never_fires() {
+        let p = FaultPlan::disarmed();
+        assert!(!p.armed());
+        for _ in 0..100 {
+            assert!(!p.worker_batch());
+            assert_eq!(p.registry_open(), LoadFault::None);
+            assert!(p.socket_accept().is_none());
+        }
+        assert_eq!(p.injected().total(), 0);
+    }
+
+    #[test]
+    fn triggers_fire_on_exact_ordinals() {
+        let p = FaultPlan::default();
+        p.panic_on_batch(3);
+        let fired: Vec<bool> = (0..5).map(|_| p.worker_batch()).collect();
+        assert_eq!(fired, vec![false, false, true, false, false]);
+        assert_eq!(p.injected().panics, 1);
+
+        p.fail_loads(2, 2);
+        let outs: Vec<LoadFault> = (0..5).map(|_| p.registry_open()).collect();
+        assert_eq!(
+            outs,
+            vec![
+                LoadFault::None,
+                LoadFault::Error,
+                LoadFault::Error,
+                LoadFault::None,
+                LoadFault::None
+            ]
+        );
+        assert_eq!(p.injected().load_errors, 2);
+    }
+
+    #[test]
+    fn truncate_and_stall_arm_independently() {
+        let p = FaultPlan::default();
+        p.truncate_load(1);
+        p.stall_conn(2, 50);
+        assert_eq!(p.registry_open(), LoadFault::Truncate);
+        assert_eq!(p.registry_open(), LoadFault::None);
+        assert!(p.socket_accept().is_none());
+        assert_eq!(p.socket_accept(), Some(Duration::from_millis(50)));
+        assert!(p.socket_accept().is_none());
+        let c = p.injected();
+        assert_eq!((c.load_truncations, c.stalls), (1, 1));
+        assert_eq!(c.total(), 2);
+        assert!(c.to_json().contains("\"stalls\":1"), "{}", c.to_json());
+    }
+
+    #[test]
+    fn parse_round_trips_every_trigger() {
+        let p = FaultPlan::parse("panic-batch=2,load-error=1x3,load-truncate=4,stall-conn=1:25")
+            .expect("parse");
+        assert!(p.armed());
+        assert!(!p.worker_batch());
+        assert!(p.worker_batch());
+        assert_eq!(p.registry_open(), LoadFault::Error);
+        assert_eq!(p.socket_accept(), Some(Duration::from_millis(25)));
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("panic-batch=0").is_err());
+        assert!(FaultPlan::parse("stall-conn=5").is_err());
+        assert!(!FaultPlan::parse("").expect("empty").armed());
+    }
+}

@@ -27,16 +27,40 @@
 //!   [`EngineManager::sweep_idle_at`]). Neither path ever drops an engine
 //!   with in-flight work: a busy engine finishes first and falls to a
 //!   later sweep. Eviction removes the engine from the routing map;
-//!   outstanding `Arc` holders keep answering until they release it.
+//!   outstanding `Arc` holders keep answering until they release it;
+//! * **per-model circuit breaker** — repeated registry load/reload
+//!   failures for one name open its circuit: further acquisitions
+//!   fast-fail for a cooldown instead of hammering a broken disk, then a
+//!   half-open probe retries and a success closes the circuit
+//!   ([`CircuitState`]; clock-injectable as [`EngineManager::engine_at`]
+//!   / [`EngineManager::reload_at`] / [`EngineManager::circuit_at`]).
+//!   A missing model is a client error, not a fault — it never trips
+//!   the breaker, so unknown names keep answering 404, not 503.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::serve::engine::{Engine, EngineConfig, ModelSlot};
+use crate::serve::faults::FaultPlan;
 use crate::serve::registry::{ModelArtifact, Registry};
 use crate::serve::stats::{FleetCapacity, StatsSnapshot};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Consecutive load failures that open a model's circuit.
+pub const BREAKER_THRESHOLD: u32 = 3;
+/// How long an open circuit fast-fails before allowing a half-open probe.
+pub const BREAKER_COOLDOWN: Duration = Duration::from_secs(30);
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// Everything these mutexes protect (routing/override/breaker maps, a
+/// description string) is updated atomically from the guard's point of
+/// view, so a poisoned lock means "a panic happened nearby", not "this
+/// data is torn" — recovery keeps one panicking request from converting
+/// every later request into an abort.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Capacity/lifecycle policy of an [`EngineManager`].
 #[derive(Clone, Copy, Debug, Default)]
@@ -50,6 +74,64 @@ pub struct ManagerConfig {
     /// (None = never). Swept by [`EngineManager::sweep_idle`] — callers
     /// drive it from a reaper thread or opportunistically.
     pub idle_evict: Option<Duration>,
+}
+
+/// Circuit-breaker state of one model's registry-load path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CircuitState {
+    /// Loads flow normally.
+    Closed,
+    /// Too many consecutive failures: acquisitions fast-fail until the
+    /// cooldown elapses.
+    Open,
+    /// Cooldown elapsed: the next acquisition probes the registry once;
+    /// success closes the circuit, failure re-opens it.
+    HalfOpen,
+}
+
+impl std::fmt::Display for CircuitState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CircuitState::Closed => write!(f, "closed"),
+            CircuitState::Open => write!(f, "open"),
+            CircuitState::HalfOpen => write!(f, "half-open"),
+        }
+    }
+}
+
+/// Point-in-time circuit-breaker view for one model (the `/v1/models`
+/// listing and `/healthz` surface this).
+#[derive(Clone, Debug)]
+pub struct CircuitView {
+    /// Current state.
+    pub state: CircuitState,
+    /// Consecutive load failures recorded (0 once the circuit closes).
+    pub consecutive_failures: u32,
+    /// Times the circuit opened (including re-opens after a failed
+    /// half-open probe).
+    pub trips: u64,
+    /// Milliseconds until an open circuit half-opens (0 unless open).
+    pub retry_in_ms: u64,
+}
+
+impl CircuitView {
+    /// Render as a JSON object (hand-rolled; the crate has no serde).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"state\":\"{}\",\"consecutive_failures\":{},\"trips\":{},\"retry_in_ms\":{}}}",
+            self.state, self.consecutive_failures, self.trips, self.retry_in_ms
+        )
+    }
+}
+
+/// Per-model breaker bookkeeping (entries exist only for names that
+/// have failed at least once since their last successful load).
+#[derive(Debug, Default)]
+struct Breaker {
+    consecutive_failures: u32,
+    /// Some(ms since manager epoch) while the circuit is open/half-open.
+    opened_at_ms: Option<u64>,
+    trips: u64,
 }
 
 /// One running engine under the manager: the engine plus its serving
@@ -71,9 +153,14 @@ pub struct ManagedEngine {
 }
 
 impl ManagedEngine {
-    fn spawn(name: &str, artifact: &ModelArtifact, cfg: EngineConfig) -> Result<ManagedEngine> {
+    fn spawn(
+        name: &str,
+        artifact: &ModelArtifact,
+        cfg: EngineConfig,
+        faults: Arc<FaultPlan>,
+    ) -> Result<ManagedEngine> {
         let slot = Arc::new(ModelSlot::new(artifact)?);
-        let engine = Engine::with_slot(Arc::clone(&slot), cfg)?;
+        let engine = Engine::with_slot_faults(Arc::clone(&slot), cfg, faults)?;
         Ok(ManagedEngine {
             name: name.to_string(),
             engine,
@@ -96,7 +183,7 @@ impl ManagedEngine {
 
     /// Human description of the loaded artifact.
     pub fn describe(&self) -> String {
-        self.description.lock().unwrap().clone()
+        lock_recover(&self.description).clone()
     }
 
     /// Point-in-time counters for this model.
@@ -113,9 +200,9 @@ impl ManagedEngine {
         // (`describe`, the `/v1/models` listing) never wait out a
         // multi-second scorer rebuild. The swap goes through the engine
         // so it is counted in the reload stat.
-        let _serialize = self.reload_lock.lock().unwrap();
+        let _serialize = lock_recover(&self.reload_lock);
         self.engine.reload(artifact)?;
-        *self.description.lock().unwrap() = artifact.describe();
+        *lock_recover(&self.description) = artifact.describe();
         Ok(())
     }
 }
@@ -135,6 +222,15 @@ pub struct EngineManager {
     capacity_evictions: AtomicU64,
     /// Engines evicted by the idle sweep.
     idle_reaped: AtomicU64,
+    /// Per-model circuit breakers over the registry-load path.
+    breakers: Mutex<HashMap<String, Breaker>>,
+    /// Consecutive failures that open a circuit (0 disables breaking).
+    breaker_threshold: u32,
+    /// Open-circuit cooldown before the half-open probe.
+    breaker_cooldown_ms: u64,
+    /// Fault-injection plan handed to every spawned engine (disarmed by
+    /// default; see [`crate::serve::faults`]).
+    faults: Arc<FaultPlan>,
 }
 
 impl EngineManager {
@@ -161,7 +257,34 @@ impl EngineManager {
             touch_seq: AtomicU64::new(0),
             capacity_evictions: AtomicU64::new(0),
             idle_reaped: AtomicU64::new(0),
+            breakers: Mutex::new(HashMap::new()),
+            breaker_threshold: BREAKER_THRESHOLD,
+            breaker_cooldown_ms: BREAKER_COOLDOWN.as_millis() as u64,
+            faults: FaultPlan::disarmed(),
         }
+    }
+
+    /// Arm a fault plan on this manager's load path and on every engine
+    /// it spawns from now on (chaos tests and the hidden `mlsvm serve
+    /// --fault-plan` flag; call before serving starts).
+    pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
+        self.registry.set_faults(Arc::clone(&faults));
+        self.faults = faults;
+    }
+
+    /// The fault-injection plan in force (disarmed unless
+    /// [`EngineManager::set_faults`] armed one).
+    pub fn faults(&self) -> Arc<FaultPlan> {
+        Arc::clone(&self.faults)
+    }
+
+    /// Override the circuit-breaker policy: `threshold` consecutive load
+    /// failures open a model's circuit for `cooldown` (threshold 0
+    /// disables breaking). Defaults: [`BREAKER_THRESHOLD`] /
+    /// [`BREAKER_COOLDOWN`].
+    pub fn set_breaker(&mut self, threshold: u32, cooldown: Duration) {
+        self.breaker_threshold = threshold;
+        self.breaker_cooldown_ms = cooldown.as_millis() as u64;
     }
 
     /// The backing registry.
@@ -188,11 +311,130 @@ impl EngineManager {
         self.epoch.elapsed().as_millis() as u64
     }
 
+    fn ms_at(&self, now: Instant) -> u64 {
+        now.saturating_duration_since(self.epoch).as_millis() as u64
+    }
+
+    /// Fast-fail when `name`'s circuit is open and still cooling down.
+    /// A half-open circuit passes: the caller's load is the probe.
+    fn breaker_gate(&self, name: &str, now_ms: u64) -> Result<()> {
+        if self.breaker_threshold == 0 {
+            return Ok(());
+        }
+        let map = lock_recover(&self.breakers);
+        let Some(b) = map.get(name) else {
+            return Ok(());
+        };
+        let Some(opened) = b.opened_at_ms else {
+            return Ok(());
+        };
+        let elapsed = now_ms.saturating_sub(opened);
+        if elapsed < self.breaker_cooldown_ms {
+            return Err(Error::Serve(format!(
+                "circuit open for model '{name}' after {} consecutive load failures; retry in {}ms",
+                b.consecutive_failures,
+                self.breaker_cooldown_ms - elapsed
+            )));
+        }
+        Ok(())
+    }
+
+    /// Load `name` from the registry through the circuit breaker: an
+    /// open circuit fast-fails without touching the disk, a success
+    /// closes the circuit, and a failure on an *existing* model counts
+    /// toward opening it (a missing model stays a plain client error).
+    fn checked_load(&self, name: &str, now: Instant) -> Result<ModelArtifact> {
+        let now_ms = self.ms_at(now);
+        self.breaker_gate(name, now_ms)?;
+        match self.registry.load(name) {
+            Ok(artifact) => {
+                lock_recover(&self.breakers).remove(name);
+                Ok(artifact)
+            }
+            Err(e) => {
+                if self.registry.path_of(name).exists() {
+                    let mut map = lock_recover(&self.breakers);
+                    let b = map.entry(name.to_string()).or_default();
+                    b.consecutive_failures += 1;
+                    if b.consecutive_failures >= self.breaker_threshold {
+                        b.trips += 1;
+                        b.opened_at_ms = Some(now_ms);
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Circuit-breaker view for `name` **as of `now`** (the injectable
+    /// clock; [`EngineManager::circuit`] uses the wall clock).
+    pub fn circuit_at(&self, name: &str, now: Instant) -> CircuitView {
+        let now_ms = self.ms_at(now);
+        let map = lock_recover(&self.breakers);
+        let Some(b) = map.get(name) else {
+            return CircuitView {
+                state: CircuitState::Closed,
+                consecutive_failures: 0,
+                trips: 0,
+                retry_in_ms: 0,
+            };
+        };
+        let (state, retry_in_ms) = match b.opened_at_ms {
+            None => (CircuitState::Closed, 0),
+            Some(opened) => {
+                let elapsed = now_ms.saturating_sub(opened);
+                if elapsed < self.breaker_cooldown_ms {
+                    (CircuitState::Open, self.breaker_cooldown_ms - elapsed)
+                } else {
+                    (CircuitState::HalfOpen, 0)
+                }
+            }
+        };
+        CircuitView {
+            state,
+            consecutive_failures: b.consecutive_failures,
+            trips: b.trips,
+            retry_in_ms,
+        }
+    }
+
+    /// Circuit-breaker view for `name` now.
+    pub fn circuit(&self, name: &str) -> CircuitView {
+        self.circuit_at(name, Instant::now())
+    }
+
+    /// Every model with breaker history (at least one failure since its
+    /// last good load), with its view **as of `now`**, in name order.
+    pub fn circuits_at(&self, now: Instant) -> Vec<(String, CircuitView)> {
+        let mut names: Vec<String> = lock_recover(&self.breakers).keys().cloned().collect();
+        names.sort();
+        names
+            .into_iter()
+            .map(|n| {
+                let view = self.circuit_at(&n, now);
+                (n, view)
+            })
+            .collect()
+    }
+
+    /// [`EngineManager::circuits_at`] against the wall clock.
+    pub fn circuits(&self) -> Vec<(String, CircuitView)> {
+        self.circuits_at(Instant::now())
+    }
+
+    /// Flush every running engine's parked partial batch: queued work is
+    /// scored now instead of waiting out a batching deadline. The
+    /// graceful-drain path calls this so in-flight requests complete
+    /// promptly once the listener stops feeding new work.
+    pub fn kick_all(&self) {
+        for me in self.loaded() {
+            me.engine().kick();
+        }
+    }
+
     /// Engine config a spawn of `name` would use.
     pub fn config_for(&self, name: &str) -> EngineConfig {
-        self.overrides
-            .lock()
-            .unwrap()
+        lock_recover(&self.overrides)
             .get(name)
             .copied()
             .unwrap_or(self.default_cfg)
@@ -202,7 +444,7 @@ impl EngineManager {
     /// one model name. Takes effect at the next spawn of that name;
     /// evict + touch applies it to an already-running model.
     pub fn set_model_config(&self, name: &str, cfg: EngineConfig) {
-        self.overrides.lock().unwrap().insert(name.to_string(), cfg);
+        lock_recover(&self.overrides).insert(name.to_string(), cfg);
     }
 
     /// The engine for `name` if (and only if) it is already running —
@@ -210,7 +452,7 @@ impl EngineManager {
     /// this so that monitoring a cold model name cannot pull it into
     /// memory.
     pub fn get(&self, name: &str) -> Option<Arc<ManagedEngine>> {
-        self.engines.lock().unwrap().get(name).cloned()
+        lock_recover(&self.engines).get(name).cloned()
     }
 
     /// The engine serving `name`, spawning it from the registry on first
@@ -221,8 +463,15 @@ impl EngineManager {
     /// stamps, and a spawn that pushes the fleet over the capacity cap
     /// evicts the least-recently-used idle engine.
     pub fn engine(&self, name: &str) -> Result<Arc<ManagedEngine>> {
+        self.engine_at(name, Instant::now())
+    }
+
+    /// [`EngineManager::engine`] with an injectable clock for the
+    /// circuit breaker (chaos tests pass synthetic instants instead of
+    /// sleeping out cooldowns).
+    pub fn engine_at(&self, name: &str, now: Instant) -> Result<Arc<ManagedEngine>> {
         let existing = {
-            let mut map = self.engines.lock().unwrap();
+            let mut map = lock_recover(&self.engines);
             let found = map.get(name).map(Arc::clone);
             // Self-heal a fleet left over cap by a spawn that could not
             // evict (every other engine was busy then); a no-op len
@@ -237,10 +486,15 @@ impl EngineManager {
             self.touch(&e);
             return Ok(e);
         }
-        let artifact = self.registry.load(name)?;
-        let spawned = Arc::new(ManagedEngine::spawn(name, &artifact, self.config_for(name))?);
+        let artifact = self.checked_load(name, now)?;
+        let spawned = Arc::new(ManagedEngine::spawn(
+            name,
+            &artifact,
+            self.config_for(name),
+            Arc::clone(&self.faults),
+        )?);
         let (me, victims, loser) = {
-            let mut map = self.engines.lock().unwrap();
+            let mut map = lock_recover(&self.engines);
             match map.get(name).map(Arc::clone) {
                 // A racing spawn of the same name got there first: keep
                 // its engine, and hand ours back to be torn down off-lock.
@@ -265,9 +519,14 @@ impl EngineManager {
     /// in-memory artifact, bypassing the registry — useful for tests and
     /// for serving a model that is not persisted yet.
     pub fn insert(&self, name: &str, artifact: &ModelArtifact) -> Result<Arc<ManagedEngine>> {
-        let spawned = Arc::new(ManagedEngine::spawn(name, artifact, self.config_for(name))?);
+        let spawned = Arc::new(ManagedEngine::spawn(
+            name,
+            artifact,
+            self.config_for(name),
+            Arc::clone(&self.faults),
+        )?);
         let (displaced, victims) = {
-            let mut map = self.engines.lock().unwrap();
+            let mut map = lock_recover(&self.engines);
             let displaced = map.insert(name.to_string(), Arc::clone(&spawned));
             (displaced, self.enforce_capacity(&mut map, name))
         };
@@ -330,7 +589,7 @@ impl EngineManager {
         let mut evicted = Vec::new();
         let mut victims = Vec::new();
         {
-            let mut map = self.engines.lock().unwrap();
+            let mut map = lock_recover(&self.engines);
             map.retain(|name, me| {
                 let idle = now_ms.saturating_sub(me.last_used_ms.load(Ordering::Relaxed));
                 if idle >= window_ms && me.engine.in_flight() == 0 {
@@ -361,7 +620,7 @@ impl EngineManager {
         FleetCapacity {
             max_engines: self.cfg.max_engines,
             idle_evict_secs: self.cfg.idle_evict.map(|d| d.as_secs()),
-            loaded: self.engines.lock().unwrap().len(),
+            loaded: lock_recover(&self.engines).len(),
             capacity_evictions: self.capacity_evictions.load(Ordering::Relaxed),
             idle_reaped: self.idle_reaped.load(Ordering::Relaxed),
         }
@@ -374,23 +633,33 @@ impl EngineManager {
     /// engine's LRU/idle stamps, so a freshly reloaded model is not the
     /// next reap victim.
     pub fn reload(&self, name: &str) -> Result<String> {
-        let artifact = self.registry.load(name)?;
+        self.reload_at(name, Instant::now())
+    }
+
+    /// [`EngineManager::reload`] with an injectable clock for the
+    /// circuit breaker.
+    pub fn reload_at(&self, name: &str, now: Instant) -> Result<String> {
+        let artifact = self.checked_load(name, now)?;
         let desc = artifact.describe();
-        let existing = self.engines.lock().unwrap().get(name).cloned();
+        let existing = lock_recover(&self.engines).get(name).cloned();
         match existing {
             Some(me) => {
                 me.reload_from(&artifact)?;
                 self.touch(&me);
             }
             None => {
-                let spawned =
-                    Arc::new(ManagedEngine::spawn(name, &artifact, self.config_for(name))?);
+                let spawned = Arc::new(ManagedEngine::spawn(
+                    name,
+                    &artifact,
+                    self.config_for(name),
+                    Arc::clone(&self.faults),
+                )?);
                 // A racing lazy spawn may have inserted an engine while we
                 // were loading — possibly built from the pre-reload file.
                 // Swap the fresh artifact into it (outside the map lock)
                 // instead of silently losing the reload.
                 let (installed, racer, victims) = {
-                    let mut map = self.engines.lock().unwrap();
+                    let mut map = lock_recover(&self.engines);
                     match map.get(name).map(Arc::clone) {
                         Some(existing) => (existing, true, Vec::new()),
                         None => {
@@ -414,13 +683,13 @@ impl EngineManager {
     /// until released; the engine drains and joins its workers on the
     /// last drop). Returns whether an engine was running.
     pub fn evict(&self, name: &str) -> bool {
-        self.engines.lock().unwrap().remove(name).is_some()
+        lock_recover(&self.engines).remove(name).is_some()
     }
 
     /// Every running engine, in name order.
     pub fn loaded(&self) -> Vec<Arc<ManagedEngine>> {
         let mut v: Vec<Arc<ManagedEngine>> =
-            self.engines.lock().unwrap().values().cloned().collect();
+            lock_recover(&self.engines).values().cloned().collect();
         v.sort_by(|a, b| a.name.cmp(&b.name));
         v
     }
@@ -433,7 +702,7 @@ impl EngineManager {
     /// Whether the name could be served: running already, or present in
     /// the registry.
     pub fn knows(&self, name: &str) -> bool {
-        if self.engines.lock().unwrap().contains_key(name) {
+        if lock_recover(&self.engines).contains_key(name) {
             return true;
         }
         self.registry.path_of(name).exists()
@@ -807,6 +1076,141 @@ mod tests {
             .sweep_idle_at(Instant::now() + Duration::from_secs(1 << 20))
             .is_empty());
         assert_eq!(mgr.loaded_names().len(), 4);
+    }
+
+    #[test]
+    fn circuit_opens_after_repeated_load_failures_and_recovers() {
+        let reg = tmp_registry("breaker");
+        save_axis_models(&reg, &["m"]);
+        let plan = FaultPlan::disarmed();
+        plan.fail_loads(1, 3);
+        let mut mgr = EngineManager::open(reg, quick_cfg());
+        mgr.set_faults(Arc::clone(&plan));
+        let t0 = Instant::now();
+        // Three consecutive injected load failures trip the breaker.
+        for i in 0..3 {
+            let err = mgr.engine_at("m", t0).unwrap_err().to_string();
+            assert!(err.contains("injected"), "failure {i}: {err}");
+        }
+        let c = mgr.circuit_at("m", t0);
+        assert_eq!(c.state, CircuitState::Open);
+        assert_eq!(c.consecutive_failures, 3);
+        assert_eq!(c.trips, 1);
+        assert!(c.retry_in_ms > 0);
+        assert!(c.to_json().contains("\"state\":\"open\""), "{}", c.to_json());
+        // While open: fast-fail without touching the registry.
+        let opens_before = plan.injected().load_errors;
+        let err = mgr.engine_at("m", t0).unwrap_err().to_string();
+        assert!(err.contains("circuit open"), "{err}");
+        assert!(err.contains("retry in"), "{err}");
+        assert_eq!(
+            plan.injected().load_errors,
+            opens_before,
+            "an open circuit must not hammer the registry"
+        );
+        // Cooldown elapsed: half-open; the probe load succeeds (the
+        // fault window is exhausted) and closes the circuit.
+        let later = t0 + BREAKER_COOLDOWN * 2;
+        assert_eq!(mgr.circuit_at("m", later).state, CircuitState::HalfOpen);
+        let me = mgr.engine_at("m", later).unwrap();
+        let closed = mgr.circuit_at("m", later);
+        assert_eq!(closed.state, CircuitState::Closed);
+        assert_eq!(closed.consecutive_failures, 0);
+        assert!(matches!(
+            me.engine().predict(&[0.9, 0.0]).unwrap(),
+            Decision::Binary { label: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn failed_half_open_probe_reopens_the_circuit() {
+        let reg = tmp_registry("breaker_probe");
+        save_axis_models(&reg, &["m"]);
+        let plan = FaultPlan::disarmed();
+        plan.fail_loads(1, 4);
+        let mut mgr = EngineManager::open(reg, quick_cfg());
+        mgr.set_faults(Arc::clone(&plan));
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            assert!(mgr.engine_at("m", t0).is_err());
+        }
+        assert_eq!(mgr.circuit_at("m", t0).state, CircuitState::Open);
+        // The half-open probe fails too (4th armed failure): the circuit
+        // re-opens with a fresh cooldown from the probe instant.
+        let probe_at = t0 + BREAKER_COOLDOWN * 2;
+        let err = mgr.engine_at("m", probe_at).unwrap_err().to_string();
+        assert!(err.contains("injected"), "{err}");
+        let c = mgr.circuit_at("m", probe_at);
+        assert_eq!(c.state, CircuitState::Open);
+        assert_eq!(c.trips, 2);
+        assert_eq!(c.consecutive_failures, 4);
+        // ... and the listing view reports it under its name.
+        let all = mgr.circuits_at(probe_at);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].0, "m");
+        assert_eq!(all[0].1.state, CircuitState::Open);
+        // Next cooldown's probe succeeds and the model serves again.
+        let recover_at = probe_at + BREAKER_COOLDOWN * 2;
+        mgr.engine_at("m", recover_at).unwrap();
+        assert_eq!(mgr.circuit_at("m", recover_at).state, CircuitState::Closed);
+        assert!(mgr.circuits_at(recover_at).is_empty());
+    }
+
+    #[test]
+    fn missing_models_never_trip_the_breaker() {
+        let reg = tmp_registry("breaker_404");
+        let mgr = EngineManager::open(reg, quick_cfg());
+        for _ in 0..10 {
+            assert!(mgr.engine("nope").is_err());
+        }
+        // Not-found is a client error: it must keep answering as one
+        // (404 at the HTTP layer), never convert into an open circuit.
+        assert_eq!(mgr.circuit("nope").state, CircuitState::Closed);
+        assert!(mgr.circuits().is_empty());
+    }
+
+    #[test]
+    fn corrupted_reload_keeps_the_old_model_serving() {
+        let reg = tmp_registry("corrupt_reload");
+        save_axis_models(&reg, &["m"]);
+        let plan = FaultPlan::disarmed();
+        let mut mgr = EngineManager::open(reg, quick_cfg());
+        mgr.set_faults(Arc::clone(&plan));
+        let me = mgr.engine("m").unwrap();
+        let Decision::Binary { value: before, .. } = me.engine().predict(&[0.9, 0.3]).unwrap()
+        else {
+            panic!("binary expected")
+        };
+        // The next three registry opens fail: one corruption (truncated
+        // bytes), then two injected read errors — enough to open the
+        // circuit. (Trigger ordinals start counting when armed, so the
+        // already-done spawn load is not ordinal 1.)
+        plan.truncate_load(1);
+        plan.fail_loads(2, 2);
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            assert!(mgr.reload_at("m", t0).is_err());
+        }
+        assert_eq!(mgr.circuit_at("m", t0).state, CircuitState::Open);
+        assert!(
+            mgr.reload_at("m", t0).unwrap_err().to_string().contains("circuit open"),
+            "open circuit fast-fails reloads too"
+        );
+        // Through it all the old slot kept serving, bit-identically.
+        let Decision::Binary { value: after, .. } = me.engine().predict(&[0.9, 0.3]).unwrap()
+        else {
+            panic!("binary expected")
+        };
+        assert_eq!(before.to_bits(), after.to_bits());
+        assert_eq!(me.stats().reloads, 0, "no failed reload ever swapped the slot");
+        // Registry healthy again after the cooldown: reload closes the
+        // circuit and swaps for real.
+        let later = t0 + BREAKER_COOLDOWN * 2;
+        mgr.reload_at("m", later).unwrap();
+        assert_eq!(mgr.circuit_at("m", later).state, CircuitState::Closed);
+        assert_eq!(me.stats().reloads, 1);
+        assert_eq!(plan.injected().load_truncations, 1);
+        assert_eq!(plan.injected().load_errors, 2);
     }
 
     #[test]

@@ -31,7 +31,11 @@
 //!   requests on one socket are parsed by a persistent buffered reader
 //!   and answered in order (depth/byte bounded);
 //! * [`stats`] — batching counters and log-spaced latency histograms,
-//!   snapshotted as JSON per model and aggregated fleet-wide.
+//!   snapshotted as JSON per model and aggregated fleet-wide;
+//! * [`faults`] — a deterministic fault-injection plan ([`FaultPlan`])
+//!   whose hooks live on the production paths (worker batches, registry
+//!   opens, accepted sockets) but stay disarmed unless a chaos test or
+//!   the hidden `--fault-plan` flag arms them.
 //!
 //! End to end: `mlsvm train --registry models --name m` → `mlsvm serve
 //! --registry models --models m,n` → routed HTTP predictions; `cargo
@@ -40,6 +44,7 @@
 
 pub mod binary;
 pub mod engine;
+pub mod faults;
 pub mod manager;
 pub mod registry;
 pub mod server;
@@ -48,7 +53,11 @@ pub mod stats;
 pub use engine::{
     BatchQueue, Decision, Engine, EngineConfig, FlushPolicy, FlushReason, ModelSlot, Ticket,
 };
-pub use manager::{EngineManager, ManagedEngine, ManagerConfig};
+pub use faults::{FaultCounters, FaultPlan, LoadFault};
+pub use manager::{
+    CircuitState, CircuitView, EngineManager, ManagedEngine, ManagerConfig, BREAKER_COOLDOWN,
+    BREAKER_THRESHOLD,
+};
 pub use registry::{
     detect_format, load_artifact, save_artifact, save_artifact_v1, MigrationReport, ModelArtifact,
     ModelFormat, Registry,

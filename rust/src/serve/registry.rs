@@ -36,10 +36,12 @@ use crate::coordinator::jobs::{ClassJob, MulticlassModel};
 use crate::error::{Error, Result};
 use crate::mlsvm::trainer::{LevelStat, MlsvmModel};
 use crate::serve::binary;
+use crate::serve::faults::{FaultPlan, LoadFault};
 use crate::svm::model::SvmModel;
 use crate::svm::smo::{SvmParams, TrainStats};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Magic token opening every versioned **text** model file.
 pub const MAGIC: &str = "mlsvm-model";
@@ -211,26 +213,73 @@ fn write_multiclass_body<W: Write>(w: &mut W, mc: &MulticlassModel) -> Result<()
     Ok(())
 }
 
-/// Write `artifact` to `path` in the current (v2 binary) format.
-pub fn save_artifact(path: impl AsRef<Path>, artifact: &ModelArtifact) -> Result<()> {
-    std::fs::write(path, binary::write_artifact(artifact))?;
+/// Write a model file crash-safely: the body goes to a uniquely-named
+/// dot-prefixed temp file **in the destination directory** (same
+/// filesystem, so the final step is a true rename), is flushed and
+/// fsynced, then renamed over `path`. A crash at any point leaves
+/// either the old artifact or the new one — never a torn file — and the
+/// only possible litter is a dot-prefixed `.tmp` that
+/// [`Registry::list`] ignores.
+fn write_atomic(
+    path: &Path,
+    write_body: impl FnOnce(&mut BufWriter<std::fs::File>) -> Result<()>,
+) -> Result<()> {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    let stem = path
+        .file_name()
+        .and_then(|s| s.to_str())
+        .ok_or_else(|| Error::invalid(format!("bad model path '{}'", path.display())))?;
+    let tmp = dir.join(format!(
+        ".{stem}.{}-{}.tmp",
+        std::process::id(),
+        SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    let written: Result<()> = (|| {
+        let f = std::fs::File::create(&tmp)?;
+        let mut w = BufWriter::new(f);
+        write_body(&mut w)?;
+        w.flush()?;
+        w.get_ref().sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = written {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
     Ok(())
+}
+
+/// Write `artifact` to `path` in the current (v2 binary) format,
+/// crash-safely (temp file + fsync + rename; an interrupted save leaves
+/// any previous artifact at `path` untouched).
+pub fn save_artifact(path: impl AsRef<Path>, artifact: &ModelArtifact) -> Result<()> {
+    write_atomic(path.as_ref(), |w| {
+        w.write_all(&binary::write_artifact(artifact))?;
+        Ok(())
+    })
 }
 
 /// Write `artifact` to `path` in the v1 text format (kept for the
 /// migration path and the v1-vs-v2 load benchmark; new code should use
-/// [`save_artifact`]).
+/// [`save_artifact`]). Crash-safe the same way `save_artifact` is.
 pub fn save_artifact_v1(path: impl AsRef<Path>, artifact: &ModelArtifact) -> Result<()> {
-    let f = std::fs::File::create(path)?;
-    let mut w = BufWriter::new(f);
-    writeln!(w, "{MAGIC} v{VERSION} {}", artifact.kind())?;
-    match artifact {
-        ModelArtifact::Svm(m) => m.write_text(&mut w)?,
-        ModelArtifact::Mlsvm(m) => write_mlsvm_body(&mut w, m)?,
-        ModelArtifact::Multiclass(mc) => write_multiclass_body(&mut w, mc)?,
-    }
-    w.flush()?;
-    Ok(())
+    write_atomic(path.as_ref(), |w| {
+        writeln!(w, "{MAGIC} v{VERSION} {}", artifact.kind())?;
+        match artifact {
+            ModelArtifact::Svm(m) => m.write_text(w)?,
+            ModelArtifact::Mlsvm(m) => write_mlsvm_body(w, m)?,
+            ModelArtifact::Multiclass(mc) => write_multiclass_body(w, mc)?,
+        }
+        Ok(())
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -375,11 +424,17 @@ fn read_multiclass_body<'b>(lines: &mut impl Iterator<Item = &'b str>) -> Result
 /// legacy single-`SvmModel` line files — the format is sniffed from the
 /// first bytes.
 pub fn load_artifact(path: impl AsRef<Path>) -> Result<ModelArtifact> {
-    let bytes = std::fs::read(&path)?;
-    if binary::is_binary(&bytes) {
-        return binary::read_artifact(&bytes);
+    parse_artifact(&std::fs::read(&path)?)
+}
+
+/// Parse an already-read model byte stream (the body of
+/// [`load_artifact`], split out so the fault-injection truncation path
+/// can corrupt the bytes between read and parse).
+fn parse_artifact(bytes: &[u8]) -> Result<ModelArtifact> {
+    if binary::is_binary(bytes) {
+        return binary::read_artifact(bytes);
     }
-    let text = String::from_utf8(bytes)
+    let text = std::str::from_utf8(bytes)
         .map_err(|_| Error::invalid("model file is neither v2 binary nor UTF-8 text"))?;
     let mut lines = text.lines();
     let Some(first) = lines.clone().next() else {
@@ -416,6 +471,9 @@ pub fn load_artifact(path: impl AsRef<Path>) -> Result<ModelArtifact> {
 /// serving layer loads, lists and hot-reloads from.
 pub struct Registry {
     dir: PathBuf,
+    /// Fault-injection plan for the load path (disarmed by default; see
+    /// [`crate::serve::faults`]).
+    faults: Arc<FaultPlan>,
 }
 
 fn validate_name(name: &str) -> Result<()> {
@@ -438,7 +496,16 @@ impl Registry {
     pub fn open(dir: impl AsRef<Path>) -> Result<Registry> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)?;
-        Ok(Registry { dir })
+        Ok(Registry {
+            dir,
+            faults: FaultPlan::disarmed(),
+        })
+    }
+
+    /// Arm a fault plan on this registry's load path (chaos tests and
+    /// the hidden `mlsvm serve --fault-plan` flag).
+    pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
+        self.faults = faults;
     }
 
     /// The backing directory.
@@ -451,25 +518,14 @@ impl Registry {
         self.dir.join(format!("{name}.{EXTENSION}"))
     }
 
-    /// Save under `name` (written to a uniquely-named temp file, then
-    /// renamed, so neither a concurrent `load`/reload nor a racing save
-    /// of the same name ever sees a half-written or interleaved model).
+    /// Save under `name`. [`save_artifact`] writes through a uniquely-
+    /// named temp file in the registry directory, fsyncs and renames, so
+    /// neither a concurrent `load`/reload, a racing save of the same
+    /// name, nor a crash mid-save ever exposes a half-written model.
     pub fn save(&self, name: &str, artifact: &ModelArtifact) -> Result<PathBuf> {
-        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
         validate_name(name)?;
         let path = self.path_of(name);
-        let unique = format!(
-            "{}-{}",
-            std::process::id(),
-            SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
-        );
-        let tmp = self.dir.join(format!(".{name}.{unique}.{EXTENSION}.tmp"));
-        let written = save_artifact(&tmp, artifact);
-        if let Err(e) = written {
-            let _ = std::fs::remove_file(&tmp);
-            return Err(e);
-        }
-        std::fs::rename(&tmp, &path)?;
+        save_artifact(&path, artifact)?;
         Ok(path)
     }
 
@@ -483,7 +539,19 @@ impl Registry {
                 self.dir.display()
             )));
         }
-        load_artifact(path)
+        match self.faults.registry_open() {
+            LoadFault::None => load_artifact(path),
+            LoadFault::Error => Err(Error::Serve(format!(
+                "injected fault: registry read error loading '{name}'"
+            ))),
+            LoadFault::Truncate => {
+                // Read the real bytes, then hand the parser only half of
+                // them — the deterministic stand-in for a torn read or a
+                // file corrupted by an interrupted external writer.
+                let bytes = std::fs::read(&path)?;
+                parse_artifact(&bytes[..bytes.len() / 2])
+            }
+        }
     }
 
     /// Sorted names of every model in the registry.
@@ -835,6 +903,73 @@ mod tests {
         assert!(reg.load("missing").is_err());
         assert!(reg.save("../evil", &ModelArtifact::Svm(tiny_svm(0.1))).is_err());
         assert!(reg.save("", &ModelArtifact::Svm(tiny_svm(0.1))).is_err());
+    }
+
+    #[test]
+    fn interrupted_save_leaves_old_artifact_intact() {
+        let dir = tmp_dir("torn");
+        let reg = Registry::open(dir.join("models")).unwrap();
+        reg.save("m", &ModelArtifact::Svm(tiny_svm(0.1))).unwrap();
+        let before = std::fs::read(reg.path_of("m")).unwrap();
+
+        // A successful save publishes atomically: no temp litter remains.
+        let leftovers = |reg: &Registry| -> Vec<String> {
+            std::fs::read_dir(reg.dir())
+                .unwrap()
+                .filter_map(|e| e.unwrap().file_name().into_string().ok())
+                .filter(|n| n.ends_with(".tmp"))
+                .collect()
+        };
+        assert!(leftovers(&reg).is_empty(), "{:?}", leftovers(&reg));
+
+        // A writer that dies mid-save leaves only its dot-prefixed temp
+        // behind — the published `m.model` is never half-written.
+        let litter = reg.dir().join(".m.model.crashed-writer.tmp");
+        std::fs::write(&litter, &before[..before.len() / 2]).unwrap();
+        assert_eq!(reg.list().unwrap(), vec!["m"], "temp litter is invisible");
+        assert!(matches!(reg.load("m").unwrap(), ModelArtifact::Svm(_)));
+        assert_eq!(
+            std::fs::read(reg.path_of("m")).unwrap(),
+            before,
+            "old artifact bytes survive an interrupted save"
+        );
+
+        // A save whose write fails (unreachable directory) must not
+        // disturb the existing artifact either.
+        assert!(save_artifact(
+            dir.join("models/no-such-subdir/m.model"),
+            &ModelArtifact::Svm(tiny_svm(0.2))
+        )
+        .is_err());
+        assert_eq!(std::fs::read(reg.path_of("m")).unwrap(), before);
+
+        // And the next real save replaces the artifact completely.
+        reg.save("m", &ModelArtifact::Mlsvm(tiny_mlsvm(0.3))).unwrap();
+        assert!(matches!(reg.load("m").unwrap(), ModelArtifact::Mlsvm(_)));
+        assert_eq!(leftovers(&reg).len(), 1, "only the planted litter remains");
+    }
+
+    #[test]
+    fn fault_plan_injects_load_errors_and_truncations() {
+        let dir = tmp_dir("load_faults");
+        let mut reg = Registry::open(dir.join("models")).unwrap();
+        reg.save("m", &ModelArtifact::Mlsvm(tiny_mlsvm(0.3))).unwrap();
+
+        let plan = FaultPlan::disarmed();
+        plan.fail_loads(1, 1);
+        plan.truncate_load(2);
+        reg.set_faults(Arc::clone(&plan));
+
+        let err = reg.load("m").unwrap_err().to_string();
+        assert!(err.contains("injected"), "{err}");
+        assert!(reg.load("m").is_err(), "truncated bytes must fail to parse");
+        assert!(
+            matches!(reg.load("m").unwrap(), ModelArtifact::Mlsvm(_)),
+            "plan exhausted: the real artifact loads untouched"
+        );
+        let c = plan.injected();
+        assert_eq!((c.load_errors, c.load_truncations), (1, 1));
+        assert_eq!(c.total(), 2);
     }
 
     #[test]

@@ -42,7 +42,20 @@
 //! | POST   | `/v1/models/{name}/reload`        | —                   | re-read from the registry |
 //! | POST   | `/v1/models/{name}/evict`         | —                   | drop the engine |
 //! | GET    | `/v1/models`                      | —                   | per-model stats + fleet aggregate |
-//! | GET    | `/healthz`                        | —                   | `ok` |
+//! | GET    | `/healthz`                        | —                   | `ok` / `draining` / `degraded` |
+//!
+//! **Fault tolerance**: every server-side ticket wait is bounded by the
+//! per-request deadline ([`ServeState::set_request_timeout`]); an expired
+//! request is answered `503` with a `Retry-After` header and its ticket
+//! is cancelled so the batcher skips the work. A model whose circuit
+//! breaker is open (repeated load failures — see
+//! [`crate::serve::manager`]) answers `503` without touching the
+//! registry. [`ServeState::begin_drain`] starts a graceful drain:
+//! `/healthz` flips to `draining`, the accept loop refuses new
+//! connections, and existing connections finish their in-flight
+//! pipelines/batches and then close cleanly (FIN, never RST);
+//! [`Server::drain`] waits — kicking parked partial batches — until the
+//! last connection finishes or a deadline passes.
 //!
 //! The legacy unprefixed routes (`/predict`, `/predict-batch`, `/stats`,
 //! `/models`, `/reload?model=`) are kept and map to the **default
@@ -61,10 +74,11 @@
 
 use crate::error::{Error, Result};
 use crate::serve::engine::{Decision, Ticket};
-use crate::serve::manager::{EngineManager, ManagedEngine};
+use crate::serve::faults::FaultPlan;
+use crate::serve::manager::{CircuitState, EngineManager, ManagedEngine};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -113,6 +127,14 @@ pub struct ServeState {
     pub manager: EngineManager,
     /// Model the legacy (unprefixed) routes are served by.
     pub default_model: Mutex<String>,
+    /// Set by [`ServeState::begin_drain`]: `/healthz` answers
+    /// `draining`, new connections are refused, existing connections
+    /// close after finishing what they have in flight.
+    draining: AtomicBool,
+    /// Per-request ticket deadline in milliseconds (0 = wait
+    /// indefinitely, the pre-deadline behavior embedders get by
+    /// default).
+    request_timeout_ms: AtomicU64,
 }
 
 impl ServeState {
@@ -121,20 +143,66 @@ impl ServeState {
         ServeState {
             manager,
             default_model: Mutex::new(default_model.into()),
+            draining: AtomicBool::new(false),
+            request_timeout_ms: AtomicU64::new(0),
         }
     }
 
     /// Name the legacy routes currently resolve to.
     pub fn default_model(&self) -> String {
-        self.default_model.lock().unwrap().clone()
+        // A thread that panicked holding this lock only ever observed the
+        // name; the data cannot be torn, so recover instead of poisoning
+        // the whole predict path.
+        self.default_model
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
     }
 
     /// Legacy reload: reload `name` from the registry (spawning its
     /// engine if needed) and make it the default served model.
     pub fn reload(&self, name: &str) -> Result<String> {
         let desc = self.manager.reload(name)?;
-        *self.default_model.lock().unwrap() = name.to_string();
+        *self
+            .default_model
+            .lock()
+            .unwrap_or_else(|e| e.into_inner()) = name.to_string();
         Ok(desc)
+    }
+
+    /// Bound every server-side ticket wait by `timeout` (`None` = wait
+    /// indefinitely). An expired request is answered `503` with a
+    /// `Retry-After` header and its ticket cancelled.
+    pub fn set_request_timeout(&self, timeout: Option<Duration>) {
+        let ms = timeout.map_or(0, |d| (d.as_millis() as u64).max(1));
+        self.request_timeout_ms.store(ms, Ordering::SeqCst);
+    }
+
+    /// The currently configured per-request deadline.
+    pub fn request_timeout(&self) -> Option<Duration> {
+        match self.request_timeout_ms.load(Ordering::SeqCst) {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        }
+    }
+
+    /// Start a graceful drain (SIGTERM path): flips `/healthz` to
+    /// `draining`, makes the accept loop refuse new connections, and
+    /// tells existing connections to close once their in-flight
+    /// pipeline is answered. Irreversible by design.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a graceful drain has begun.
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// The fault plan shared with the manager/registry (disarmed unless
+    /// a chaos test or the hidden `--fault-plan` flag armed it).
+    pub fn faults(&self) -> Arc<FaultPlan> {
+        self.manager.faults()
     }
 
     /// The engine behind the legacy routes.
@@ -148,6 +216,9 @@ impl ServeState {
 pub struct Server {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
+    /// Connections currently being handled (shared with the accept
+    /// loop's permits so [`Server::drain`] can watch it hit zero).
+    active: Arc<AtomicUsize>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -160,19 +231,27 @@ impl Server {
         let addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let sd = Arc::clone(&shutdown);
+        let active = Arc::new(AtomicUsize::new(0));
+        let active_in_loop = Arc::clone(&active);
         let accept_thread = std::thread::Builder::new()
             .name("serve-accept".into())
             .spawn(move || {
-                let active = Arc::new(AtomicUsize::new(0));
+                let active = active_in_loop;
                 for conn in listener.incoming() {
                     if sd.load(Ordering::Relaxed) {
                         break;
                     }
                     let Ok(stream) = conn else { continue };
+                    // Draining: refuse new connections outright so the
+                    // fleet of in-flight ones can quiesce.
+                    if state.draining() {
+                        refuse_connection(&stream, "server is draining");
+                        continue;
+                    }
                     // Shed load instead of spawning unboundedly: each
                     // connection is a thread plus an in-flight body.
                     if active.load(Ordering::Relaxed) >= MAX_CONNS {
-                        shed_connection(&stream);
+                        refuse_connection(&stream, "server at connection capacity");
                         continue;
                     }
                     active.fetch_add(1, Ordering::Relaxed);
@@ -199,6 +278,7 @@ impl Server {
         Ok(Server {
             addr,
             shutdown,
+            active,
             accept_thread: Some(accept_thread),
         })
     }
@@ -206,6 +286,32 @@ impl Server {
     /// The bound address (resolves port 0).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Connections currently being handled.
+    pub fn active_connections(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// Graceful-drain wait: poll until every in-flight connection has
+    /// finished, for at most `deadline`. `kick` runs each poll round —
+    /// pass `|| manager.kick_all()` so parked partial batches flush and
+    /// in-flight requests complete instead of waiting out their batching
+    /// deadlines. Call [`ServeState::begin_drain`] first (otherwise
+    /// kept-alive connections never close and this only returns early on
+    /// an idle server). Returns `true` when the fleet quiesced in time.
+    pub fn drain(&self, deadline: Duration, mut kick: impl FnMut()) -> bool {
+        let until = Instant::now() + deadline;
+        loop {
+            kick();
+            if self.active.load(Ordering::Relaxed) == 0 {
+                return true;
+            }
+            if Instant::now() >= until {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 
     /// Stop accepting connections and join the accept loop.
@@ -452,10 +558,23 @@ fn append_response(
     payload: &str,
     keep_alive: bool,
 ) {
+    append_response_extra(out, status, content_type, payload, keep_alive, "");
+}
+
+/// [`append_response`] with extra header lines (each `\r\n`-terminated,
+/// e.g. `"Retry-After: 1\r\n"`).
+fn append_response_extra(
+    out: &mut Vec<u8>,
+    status: &str,
+    content_type: &str,
+    payload: &str,
+    keep_alive: bool,
+    extra_headers: &str,
+) {
     let conn = if keep_alive { "keep-alive" } else { "close" };
     let _ = write!(
         out,
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n{payload}",
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{extra_headers}Connection: {conn}\r\n\r\n{payload}",
         payload.len()
     );
 }
@@ -496,24 +615,75 @@ enum Pending {
     Predict(Ticket, bool),
 }
 
+/// How one awaited predict ticket resolved.
+enum Waited {
+    Done(Decision),
+    /// The engine answered with an error (a panicked scoring batch, a
+    /// reload-race dimension change, shutdown) — an infrastructure
+    /// failure, answered 500. Client errors never reach the ticket:
+    /// they are rejected at submit.
+    Failed(String),
+    /// The per-request deadline expired; the ticket was cancelled (the
+    /// batcher skips the request) and counted in the engine's
+    /// `timeouts` stat. Answered 503 + `Retry-After`.
+    Expired,
+}
+
+/// Await a predict ticket under the server's request deadline (`None` =
+/// wait indefinitely, the legacy behavior).
+fn await_ticket(t: Ticket, timeout: Option<Duration>) -> Waited {
+    let outcome = match timeout {
+        Some(d) => match t.wait_deadline(d) {
+            Some(r) => r,
+            None => return Waited::Expired,
+        },
+        None => t.wait(),
+    };
+    match outcome {
+        Ok(d) => Waited::Done(d),
+        Err(e) => Waited::Failed(e.to_string()),
+    }
+}
+
+/// Body for a deadline-expired request.
+fn deadline_json() -> String {
+    error_json("request deadline exceeded")
+}
+
+/// `Retry-After` header line suggesting the client back off briefly.
+const RETRY_AFTER: &str = "Retry-After: 1\r\n";
+
 /// Materialize every pending response, in request order, into `out`,
 /// flushing incrementally whenever the coalescing buffer exceeds
 /// [`MAX_COALESCED`] (a burst of large responses is still written in
 /// order, just across several writes).
-fn resolve_pending(stream: &TcpStream, out: &mut Vec<u8>, pending: &mut Vec<Pending>) {
+fn resolve_pending(
+    stream: &TcpStream,
+    out: &mut Vec<u8>,
+    pending: &mut Vec<Pending>,
+    timeout: Option<Duration>,
+) {
     for p in pending.drain(..) {
         match p {
             Pending::Ready((status, content_type, payload), keep) => {
                 append_response(out, status, content_type, &payload, keep)
             }
-            Pending::Predict(t, keep) => match t.wait() {
-                Ok(d) => append_response(out, "200 OK", JSON, &decision_json(&d), keep),
-                Err(e) => append_response(
+            Pending::Predict(t, keep) => match await_ticket(t, timeout) {
+                Waited::Done(d) => append_response(out, "200 OK", JSON, &decision_json(&d), keep),
+                Waited::Failed(msg) => append_response(
                     out,
-                    "400 Bad Request",
+                    "500 Internal Server Error",
                     JSON,
-                    &error_json(&e.to_string()),
+                    &error_json(&msg),
                     keep,
+                ),
+                Waited::Expired => append_response_extra(
+                    out,
+                    "503 Service Unavailable",
+                    JSON,
+                    &deadline_json(),
+                    keep,
+                    RETRY_AFTER,
                 ),
             },
         }
@@ -577,6 +747,12 @@ fn route_pipelined(state: &ServeState, req: &HttpRequest, keep: bool) -> Pending
 }
 
 fn handle_connection(stream: TcpStream, state: &ServeState) {
+    // Chaos hook: a stalled connection (armed via `FaultPlan::stall_conn`
+    // only) exercises the keep-alive/drain timeouts deterministically.
+    if let Some(d) = state.faults().socket_accept() {
+        std::thread::sleep(d);
+    }
+    let timeout = state.request_timeout();
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
     let _ = stream.set_nodelay(true);
     let mut conn = ConnReader::new(&stream);
@@ -605,8 +781,16 @@ fn handle_connection(stream: TcpStream, state: &ServeState) {
             // About to block on the socket: the pipeline burst (if any)
             // is over; everything answered so far must be on the wire.
             burst = 0;
-            resolve_pending(&stream, &mut out, &mut pending);
+            resolve_pending(&stream, &mut out, &mut pending, timeout);
             flush_responses(&stream, &mut out);
+            if state.draining() {
+                // Graceful drain: everything received so far is
+                // answered; close (via the half-close drain below, so
+                // the client sees responses + FIN, never an RST)
+                // instead of idling on keep-alive.
+                dirty_close = true;
+                break;
+            }
         }
         match read_request(&mut conn) {
             Ok(req) => {
@@ -615,7 +799,7 @@ fn handle_connection(stream: TcpStream, state: &ServeState) {
                 if burst > MAX_PIPELINE_DEPTH {
                     // Oversized pipeline: answer everything owed, shed
                     // the excess request gracefully, and close.
-                    resolve_pending(&stream, &mut out, &mut pending);
+                    resolve_pending(&stream, &mut out, &mut pending, timeout);
                     append_response(
                         &mut out,
                         "503 Service Unavailable",
@@ -627,15 +811,15 @@ fn handle_connection(stream: TcpStream, state: &ServeState) {
                     dirty_close = true;
                     break;
                 }
-                let keep = req.keep_alive && served < MAX_REQUESTS_PER_CONN;
+                let keep = req.keep_alive && served < MAX_REQUESTS_PER_CONN && !state.draining();
                 pending.push(route_pipelined(state, &req, keep));
                 if !keep {
-                    resolve_pending(&stream, &mut out, &mut pending);
+                    resolve_pending(&stream, &mut out, &mut pending, timeout);
                     flush_responses(&stream, &mut out);
                     break;
                 }
                 if !conn.has_buffered_request() {
-                    resolve_pending(&stream, &mut out, &mut pending);
+                    resolve_pending(&stream, &mut out, &mut pending, timeout);
                     flush_responses(&stream, &mut out);
                 }
             }
@@ -645,7 +829,7 @@ fn handle_connection(stream: TcpStream, state: &ServeState) {
                 // and also closes — after a parse failure the stream
                 // position is unreliable, so resyncing is unsafe. Either
                 // way, responses already owed are answered first.
-                resolve_pending(&stream, &mut out, &mut pending);
+                resolve_pending(&stream, &mut out, &mut pending, timeout);
                 if msg != "empty request" {
                     append_response(
                         &mut out,
@@ -664,7 +848,7 @@ fn handle_connection(stream: TcpStream, state: &ServeState) {
     // Closing with unread received bytes (requests beyond the depth
     // limit, pipelined bytes after a Connection: close, a half-parsed
     // stream after a 400) would RST and destroy the responses still
-    // queued on the wire (see shed_connection); half-close and drain
+    // queued on the wire (see refuse_connection); half-close and drain
     // until EOF — deadline-bounded so a flooder cannot pin the thread —
     // then close cleanly. The common clean close (EOF / idle timeout,
     // nothing buffered) skips the drain and just closes.
@@ -687,18 +871,18 @@ fn error_json(msg: &str) -> String {
     format!("{{\"error\":\"{}\"}}", json_escape(msg))
 }
 
-/// Answer a connection 503 without handling it. Closing a socket with
-/// unread received bytes RSTs the queued response on Linux, so after
-/// writing we half-close and briefly drain what the client already sent
-/// (bounded: small sink, short timeout, so the accept loop self-throttles
-/// rather than stalls under a flood).
-fn shed_connection(stream: &TcpStream) {
+/// Answer a connection 503 without handling it (load shed, drain).
+/// Closing a socket with unread received bytes RSTs the queued response
+/// on Linux, so after writing we half-close and briefly drain what the
+/// client already sent (bounded: small sink, short timeout, so the
+/// accept loop self-throttles rather than stalls under a flood).
+fn refuse_connection(stream: &TcpStream, why: &str) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
     write_response(
         stream,
         "503 Service Unavailable",
         "application/json",
-        &error_json("server at connection capacity"),
+        &error_json(why),
         false,
     );
     let _ = stream.shutdown(std::net::Shutdown::Write);
@@ -806,7 +990,7 @@ fn model_stats_json(me: &ManagedEngine) -> String {
     j
 }
 
-fn predict_batch_response(me: &ManagedEngine, body: &str) -> Response {
+fn predict_batch_response(me: &ManagedEngine, body: &str, timeout: Option<Duration>) -> Response {
     let mut rows = Vec::new();
     for line in body.lines() {
         if line.trim().is_empty() {
@@ -827,11 +1011,16 @@ fn predict_batch_response(me: &ManagedEngine, body: &str) -> Response {
         Ok(ts) => {
             let mut out = Vec::with_capacity(ts.len());
             for t in ts {
-                match t.wait() {
-                    Ok(d) => out.push(decision_json(&d)),
-                    Err(e) => {
-                        return ("500 Internal Server Error", JSON, error_json(&e.to_string()))
+                match await_ticket(t, timeout) {
+                    Waited::Done(d) => out.push(decision_json(&d)),
+                    Waited::Failed(msg) => {
+                        return ("500 Internal Server Error", JSON, error_json(&msg))
                     }
+                    // The whole batch shares one response; if any row
+                    // misses the deadline the request is expired (the
+                    // remaining tickets are dropped unread — the engine
+                    // still drains and counts them).
+                    Waited::Expired => return ("503 Service Unavailable", JSON, deadline_json()),
                 }
             }
             ("200 OK", JSON, format!("{{\"decisions\":[{}]}}", out.join(",")))
@@ -879,21 +1068,61 @@ fn models_listing_json(state: &ServeState) -> Result<String> {
         }
     }
     let agg = crate::serve::stats::aggregate(&snaps);
+    // Models with load failures since their last good load: circuit
+    // breaker state, keyed by name (empty object when all is well).
+    let circuits: Vec<String> = state
+        .manager
+        .circuits()
+        .iter()
+        .map(|(n, c)| format!("\"{}\":{}", json_escape(n), c.to_json()))
+        .collect();
     Ok(format!(
-        "{{\"default\":\"{}\",\"models\":[{}],\"aggregate\":{},\"capacity\":{}}}",
+        "{{\"default\":\"{}\",\"models\":[{}],\"aggregate\":{},\"capacity\":{},\"circuits\":{{{}}}}}",
         json_escape(&state.default_model()),
         parts.join(","),
         agg.to_json(),
-        state.manager.fleet_capacity().to_json()
+        state.manager.fleet_capacity().to_json(),
+        circuits.join(",")
     ))
 }
 
-/// A model-load failure answered with the right status: 404 when the
-/// name exists nowhere, 500 when the model exists but could not be
-/// loaded (corrupt file, I/O error) — a monitor must be able to tell a
-/// typo'd name from a broken artifact.
+/// `/healthz`: byte-identical `ok\n` (200) when healthy — monitors and
+/// the PR 3 conformance tests depend on that exact body. Draining and a
+/// broken registry directory answer 503 (`draining` / `degraded`);
+/// open or probing circuit breakers are reported as extra lines after
+/// `ok` but keep the 200 (one failing model must not fail readiness for
+/// the rest of the fleet).
+fn health_response(state: &ServeState) -> Response {
+    const PLAIN: &str = "text/plain";
+    if state.draining() {
+        return ("503 Service Unavailable", PLAIN, "draining\n".to_string());
+    }
+    if let Err(e) = state.manager.registry().list() {
+        let body = format!("degraded\nregistry: {e}\n");
+        return ("503 Service Unavailable", PLAIN, body);
+    }
+    let mut body = String::from("ok\n");
+    for (name, c) in state.manager.circuits() {
+        if c.state != CircuitState::Closed {
+            body.push_str(&format!(
+                "circuit {name}: {} (retry in {}ms)\n",
+                c.state, c.retry_in_ms
+            ));
+        }
+    }
+    ("200 OK", PLAIN, body)
+}
+
+/// A model-load failure answered with the right status: 503 when the
+/// model's circuit breaker is open (repeated load failures — the error
+/// already says when to retry), 404 when the name exists nowhere, 500
+/// when the model exists but could not be loaded (corrupt file, I/O
+/// error) — a monitor must be able to tell a typo'd name from a broken
+/// artifact from a cooling-down one.
 fn load_failure(state: &ServeState, name: &str, e: &Error) -> Response {
-    if state.manager.knows(name) {
+    if state.manager.circuit(name).state == CircuitState::Open {
+        ("503 Service Unavailable", JSON, error_json(&e.to_string()))
+    } else if state.manager.knows(name) {
         ("500 Internal Server Error", JSON, error_json(&e.to_string()))
     } else {
         ("404 Not Found", JSON, error_json(&e.to_string()))
@@ -976,7 +1205,7 @@ fn route_v1_models(state: &ServeState, req: &HttpRequest, rest: &str) -> Respons
                 Ok(me) => me,
                 Err(e) => return load_failure(state, name, &e),
             };
-            predict_batch_response(&me, &req.body)
+            predict_batch_response(&me, &req.body, state.request_timeout())
         }
         ("GET", "predict") | ("GET", "predict-batch") => {
             ("405 Method Not Allowed", JSON, error_json("use POST"))
@@ -992,9 +1221,10 @@ fn route(state: &ServeState, req: &HttpRequest) -> Response {
     // routing/status logic exists exactly once either way.
     if let Some(outcome) = dispatch_predict(state, req) {
         return match outcome {
-            Ok(t) => match t.wait() {
-                Ok(d) => ("200 OK", JSON, decision_json(&d)),
-                Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
+            Ok(t) => match await_ticket(t, state.request_timeout()) {
+                Waited::Done(d) => ("200 OK", JSON, decision_json(&d)),
+                Waited::Failed(msg) => ("500 Internal Server Error", JSON, error_json(&msg)),
+                Waited::Expired => ("503 Service Unavailable", JSON, deadline_json()),
             },
             Err(resp) => resp,
         };
@@ -1007,7 +1237,7 @@ fn route(state: &ServeState, req: &HttpRequest) -> Response {
         }
     }
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => ("200 OK", "text/plain", "ok\n".to_string()),
+        ("GET", "/healthz") => health_response(state),
         // Legacy unprefixed routes: answered by the default model.
         // Stats stay read-only here too: an evicted default model is
         // reported unavailable, not respawned by a monitoring poll.
@@ -1056,7 +1286,7 @@ fn route(state: &ServeState, req: &HttpRequest) -> Response {
         }
         // Legacy POST /predict is handled by dispatch_predict above.
         ("POST", "/predict-batch") => match state.default_engine() {
-            Ok(me) => predict_batch_response(&me, &req.body),
+            Ok(me) => predict_batch_response(&me, &req.body, state.request_timeout()),
             Err(e) => ("503 Service Unavailable", JSON, error_json(&e.to_string())),
         },
         ("GET", _) | ("POST", _) => ("404 Not Found", JSON, error_json("no such endpoint")),
@@ -1517,5 +1747,137 @@ mod tests {
         let (mut server, _state) = start_server("shutdown");
         server.shutdown();
         server.shutdown();
+    }
+
+    /// Server whose engine parks partial batches (hour-long flush
+    /// deadline, oversized batch): nothing completes unless a deadline
+    /// expires or a test kicks the batcher — the deterministic stand-in
+    /// for "the engine is wedged".
+    fn start_parked_server(tag: &str) -> (Server, Arc<ServeState>) {
+        let dir = std::env::temp_dir().join(format!("mlsvm_server_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = Registry::open(&dir).unwrap();
+        reg.save("tiny", &ModelArtifact::Svm(tiny_model(0.5))).unwrap();
+        let manager = EngineManager::open(
+            reg,
+            EngineConfig {
+                max_batch: 64,
+                max_wait: Duration::from_secs(3600),
+                workers: 1,
+                queue_cap: 64,
+            },
+        );
+        let state = Arc::new(ServeState::new(manager, "tiny"));
+        let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+        (server, state)
+    }
+
+    /// Like [`http_request`] but returns the raw response head too, so
+    /// tests can assert on headers (`Retry-After`).
+    fn http_request_raw(
+        addr: &SocketAddr,
+        method: &str,
+        target: &str,
+        body: &str,
+    ) -> (u16, String, String) {
+        let stream = TcpStream::connect_timeout(addr, Duration::from_secs(5)).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        {
+            let mut w = &stream;
+            write!(
+                w,
+                "{method} {target} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                body.len()
+            )
+            .unwrap();
+            w.flush().unwrap();
+        }
+        let mut reader = BufReader::new(&stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line).unwrap();
+        let code: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .unwrap()
+            .parse()
+            .unwrap();
+        let mut head = String::new();
+        let mut content_len = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h).unwrap();
+            if h.trim_end().is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.trim_end().split_once(':') {
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_len = v.trim().parse().unwrap_or(0);
+                }
+            }
+            head.push_str(&h);
+        }
+        let mut body_buf = vec![0u8; content_len];
+        reader.read_exact(&mut body_buf).unwrap();
+        (code, head, String::from_utf8_lossy(&body_buf).into_owned())
+    }
+
+    #[test]
+    fn parked_predict_expires_with_503_and_retry_after() {
+        let (server, state) = start_parked_server("deadline");
+        state.set_request_timeout(Some(Duration::from_millis(50)));
+        let (code, head, body) = http_request_raw(&server.addr(), "POST", "/predict", "0.9 0.1");
+        assert_eq!(code, 503, "{body}");
+        assert!(head.contains("Retry-After:"), "{head}");
+        assert!(body.contains("request deadline exceeded"), "{body}");
+        // The expiry was counted and the ticket cancelled: once the
+        // batcher is kicked it skips the dead request and the engine
+        // drains to zero in-flight instead of scoring for nobody.
+        let me = state.manager.get("tiny").unwrap();
+        assert_eq!(me.stats().timeouts, 1);
+        me.engine().kick();
+        let until = Instant::now() + Duration::from_secs(5);
+        while me.engine().in_flight() != 0 && Instant::now() < until {
+            std::thread::yield_now();
+        }
+        assert_eq!(me.engine().in_flight(), 0);
+    }
+
+    #[test]
+    fn drain_refuses_new_connections_and_quiesces() {
+        let (server, state) = start_server("drain");
+        let addr = server.addr();
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let (code, body) = http_request_on(&stream, "GET", "/healthz", "").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "ok\n");
+        state.begin_drain();
+        // The established connection answers its in-flight request,
+        // reports draining, then closes cleanly (EOF, not a reset).
+        let (code, body) = http_request_on(&stream, "GET", "/healthz", "").unwrap();
+        assert_eq!(code, 503, "{body}");
+        assert_eq!(body, "draining\n");
+        let mut buf = [0u8; 16];
+        let n = Read::read(&mut (&stream), &mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "connection must close cleanly after drain");
+        // New connections are refused outright.
+        let (code, body) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!(code, 503, "{body}");
+        assert!(body.contains("draining"), "{body}");
+        // And the fleet quiesces.
+        assert!(server.drain(Duration::from_secs(5), || state.manager.kick_all()));
+        assert_eq!(server.active_connections(), 0);
+    }
+
+    #[test]
+    fn models_listing_includes_circuits() {
+        let (server, _state) = start_server("circuits_listing");
+        let (code, body) = http_request(&server.addr(), "GET", "/v1/models", "").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("\"circuits\":{}"), "{body}");
     }
 }

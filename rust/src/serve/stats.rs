@@ -28,6 +28,9 @@ pub struct BatchStats {
     pub deadline_flushes: u64,
     /// Total padded slots executed (utilization = requests / slots).
     pub slots: u64,
+    /// Batches whose scoring panicked (every entry answered with an
+    /// error instead of aborting the process).
+    pub panics: u64,
 }
 
 impl BatchStats {
@@ -166,6 +169,12 @@ pub struct EngineStats {
     pub backpressure_waits: AtomicU64,
     /// Model hot-reloads served.
     pub reloads: AtomicU64,
+    /// Scoring panics caught in a worker (the batch's tickets were
+    /// failed with an error; the worker respawned).
+    pub worker_panics: AtomicU64,
+    /// Requests whose server-side deadline expired before a decision
+    /// (answered 503, ticket cancelled so the batcher skips them).
+    pub timeouts: AtomicU64,
     /// End-to-end request latency (enqueue → result ready).
     pub latency: LatencyHistogram,
     started: Instant,
@@ -188,6 +197,8 @@ impl EngineStats {
             slots: AtomicU64::new(0),
             backpressure_waits: AtomicU64::new(0),
             reloads: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
             started: Instant::now(),
         }
@@ -208,6 +219,8 @@ impl EngineStats {
             slots,
             backpressure_waits: self.backpressure_waits.load(Ordering::Relaxed),
             reloads: self.reloads.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
             utilization: if slots == 0 {
                 0.0
             } else {
@@ -245,6 +258,10 @@ pub struct StatsSnapshot {
     pub backpressure_waits: u64,
     /// Model reloads.
     pub reloads: u64,
+    /// Scoring panics caught in workers.
+    pub worker_panics: u64,
+    /// Requests expired at the server-side deadline.
+    pub timeouts: u64,
     /// completed / slots.
     pub utilization: f64,
     /// completed / uptime.
@@ -265,6 +282,7 @@ impl StatsSnapshot {
         format!(
             "{{\"uptime_secs\":{:.3},\"requests\":{},\"completed\":{},\"batches\":{},\
              \"deadline_flushes\":{},\"slots\":{},\"backpressure_waits\":{},\"reloads\":{},\
+             \"worker_panics\":{},\"timeouts\":{},\
              \"utilization\":{:.4},\"throughput_rps\":{:.1},\
              \"latency_ms\":{{\"p50\":{:.4},\"p95\":{:.4},\"p99\":{:.4},\"mean\":{:.4}}}}}",
             self.uptime_secs,
@@ -275,6 +293,8 @@ impl StatsSnapshot {
             self.slots,
             self.backpressure_waits,
             self.reloads,
+            self.worker_panics,
+            self.timeouts,
             self.utilization,
             self.throughput_rps,
             self.p50 * 1e3,
@@ -337,6 +357,8 @@ pub fn aggregate(snaps: &[StatsSnapshot]) -> StatsSnapshot {
         slots: 0,
         backpressure_waits: 0,
         reloads: 0,
+        worker_panics: 0,
+        timeouts: 0,
         utilization: 0.0,
         throughput_rps: 0.0,
         p50: 0.0,
@@ -354,6 +376,8 @@ pub fn aggregate(snaps: &[StatsSnapshot]) -> StatsSnapshot {
         out.slots += s.slots;
         out.backpressure_waits += s.backpressure_waits;
         out.reloads += s.reloads;
+        out.worker_panics += s.worker_panics;
+        out.timeouts += s.timeouts;
         out.throughput_rps += s.throughput_rps;
         let w = s.completed as f64;
         out.p50 += s.p50 * w;
@@ -449,6 +473,8 @@ mod tests {
             slots,
             backpressure_waits: 2,
             reloads: 1,
+            worker_panics: 1,
+            timeouts: 3,
             utilization: 0.0,
             throughput_rps: rps,
             p50: p99 / 2.0,
@@ -463,6 +489,8 @@ mod tests {
         assert_eq!(agg.slots, 80);
         assert_eq!(agg.batches, 2);
         assert_eq!(agg.reloads, 2);
+        assert_eq!(agg.worker_panics, 2);
+        assert_eq!(agg.timeouts, 6);
         assert!((agg.utilization - 0.5).abs() < 1e-12);
         assert!((agg.throughput_rps - 150.0).abs() < 1e-9);
         assert!((agg.uptime_secs - 30.0).abs() < 1e-12, "oldest engine wins");
@@ -512,6 +540,8 @@ mod tests {
         assert!((snap.utilization - 10.0 / 16.0).abs() < 1e-12);
         let j = snap.to_json();
         assert!(j.contains("\"requests\":10"), "{j}");
+        assert!(j.contains("\"worker_panics\":0"), "{j}");
+        assert!(j.contains("\"timeouts\":0"), "{j}");
         assert!(j.contains("\"latency_ms\""), "{j}");
         assert!(j.starts_with('{') && j.ends_with('}'));
     }

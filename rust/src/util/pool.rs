@@ -225,14 +225,29 @@ where
 {
     let slots: Vec<std::sync::Mutex<Option<T>>> =
         (0..n).map(|_| std::sync::Mutex::new(None)).collect();
-    parallel_for(n, 1, |i| {
-        *slots[i].lock().unwrap() = Some(f(i));
-    });
+    // A panicking `f` unwinds out of the scope inside `parallel_for`
+    // with the worker's original payload. Catch it here so the partial
+    // slots drop first, then resume with the payload preserved: the
+    // caller sees the panic exactly as if `f` had panicked inline (and a
+    // caller that isolates it — the serve stack's catch_unwind layer —
+    // finds the pool fully usable afterwards, not aborted mid-collect).
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        parallel_for(n, 1, |i| {
+            *slots[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(f(i));
+        });
+    }));
+    if let Err(payload) = run {
+        drop(slots);
+        std::panic::resume_unwind(payload);
+    }
     slots
         .into_iter()
         .map(|s| {
+            // Poisoning is recovered (a worker that panicked *after*
+            // filling other slots must not invalidate them); an unfilled
+            // slot can only mean a scheduling bug, so that stays fatal.
             s.into_inner()
-                .expect("parallel_gen: worker panicked")
+                .unwrap_or_else(|e| e.into_inner())
                 .expect("parallel_gen: slot filled exactly once")
         })
         .collect()
@@ -351,6 +366,32 @@ mod tests {
     fn fill_windows_rejects_out_of_bounds_offsets() {
         let mut out = [0u8; 4];
         parallel_fill_windows(&mut out, &[0, 2, 9], 1, |_, _| {});
+    }
+
+    #[test]
+    fn parallel_gen_panic_resumes_payload_and_pool_survives() {
+        let _guard = TEST_OVERRIDE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        for threads in [1usize, 4] {
+            set_num_threads(threads);
+            let payload = std::panic::catch_unwind(|| {
+                parallel_gen(64, |i| {
+                    if i == 13 {
+                        panic!("boom at {i}");
+                    }
+                    i
+                })
+            })
+            .expect_err("worker panic must propagate to the caller");
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default();
+            assert!(msg.contains("boom at 13"), "payload preserved, got '{msg}'");
+            // The pool is immediately usable again after the caught panic.
+            let out = parallel_gen(10, |i| i * 2);
+            assert!(out.iter().enumerate().all(|(i, &v)| v == i * 2));
+        }
+        set_num_threads(0);
     }
 
     #[test]

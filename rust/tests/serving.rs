@@ -10,6 +10,14 @@
 //! injected clock, reload racing the reaper) — all deterministic: no
 //! sleeps as synchronization, clocks injected, completion awaited on
 //! tickets or response framing.
+//!
+//! The **chaos suite** at the end drives the same server with a
+//! deterministic [`FaultPlan`] armed: injected worker panics, corrupted
+//! registry reloads (circuit breaker), request deadlines against a
+//! parked batcher, graceful drain with pipelined requests in flight,
+//! and a SIGTERM against the real `mlsvm serve` binary. The fault
+//! ordinal is parameterized by `MLSVM_FAULT_NTH` (default 1) so CI can
+//! shift where the fault lands without touching the tests.
 
 use mlsvm::coordinator::jobs::OneVsRestTrainer;
 use mlsvm::data::matrix::Matrix;
@@ -20,8 +28,8 @@ use mlsvm::mlsvm::trainer::MlsvmTrainer;
 use mlsvm::modelsel::search::UdSearchConfig;
 use mlsvm::serve::{
     http_pipeline_on, http_request, load_artifact, save_artifact, save_artifact_v1, Decision,
-    Engine, EngineConfig, EngineManager, ManagerConfig, ModelArtifact, Registry, ServeState,
-    Server, MAX_PIPELINE_DEPTH,
+    Engine, EngineConfig, EngineManager, FaultPlan, ManagerConfig, ModelArtifact, Registry,
+    ServeState, Server, MAX_PIPELINE_DEPTH,
 };
 use mlsvm::svm::kernel::KernelKind;
 use mlsvm::svm::model::SvmModel;
@@ -934,4 +942,382 @@ fn conformance_reload_respawns_after_reap_and_touch_resets_idleness() {
     assert!(state.manager.sweep_idle_at(Instant::now()).is_empty());
     let (code, _) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
     assert_eq!(code, 200);
+}
+
+// ---------------------------------------------------------------------------
+// Chaos suite: the conformance server with a FaultPlan armed.
+// ---------------------------------------------------------------------------
+
+/// Which occurrence the armed fault fires on (1-based). CI runs the
+/// suite at several ordinals via `MLSVM_FAULT_NTH`; the tests must pass
+/// unchanged wherever the fault lands.
+fn fault_nth() -> u64 {
+    std::env::var("MLSVM_FAULT_NTH")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// `start_axis_server`, but `arm` gets to arm the fault plan before the
+/// manager (and through it the registry and HTTP server) sees it.
+fn start_axis_server_chaos(tag: &str, arm: impl FnOnce(&FaultPlan)) -> (Server, Arc<ServeState>) {
+    let dir = tmp_dir(&format!("chaos_{tag}"));
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("tiny", &ModelArtifact::Svm(axis_model(0.5))).unwrap();
+    reg.save("tiny2", &ModelArtifact::Svm(axis_model(2.0))).unwrap();
+    let mut manager = EngineManager::open_with(
+        reg,
+        EngineConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            queue_cap: 256,
+        },
+        ManagerConfig {
+            max_engines: 0,
+            idle_evict: None,
+        },
+    );
+    let plan = Arc::new(FaultPlan::default());
+    arm(&plan);
+    manager.set_faults(Arc::clone(&plan));
+    let state = Arc::new(ServeState::new(manager, "tiny"));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+    (server, state)
+}
+
+/// A server whose engine parks every request: oversized batch, hour-long
+/// flush deadline. Nothing resolves unless something kicks the batcher.
+fn start_parked_chaos_server(tag: &str) -> (Server, Arc<ServeState>) {
+    let dir = tmp_dir(&format!("chaos_{tag}"));
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("tiny", &ModelArtifact::Svm(axis_model(0.5))).unwrap();
+    let manager = EngineManager::open_with(
+        reg,
+        EngineConfig {
+            max_batch: 64,
+            max_wait: Duration::from_secs(3600),
+            workers: 1,
+            queue_cap: 256,
+        },
+        ManagerConfig {
+            max_engines: 0,
+            idle_evict: None,
+        },
+    );
+    let state = Arc::new(ServeState::new(manager, "tiny"));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+    (server, state)
+}
+
+/// A worker panic poisons exactly the faulted batch: its requests answer
+/// 500, every request before and after answers 200 with decisions
+/// bit-identical to an unfaulted server, and the panic is counted.
+#[test]
+fn chaos_worker_panic_fails_one_batch_and_recovery_is_bit_identical() {
+    // Reference decisions from an unfaulted server over the same model.
+    let (ref_server, _ref_state) = start_axis_server("chaos_panic_ref");
+    let (code, want_pos) =
+        http_request(&ref_server.addr(), "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200, "{want_pos}");
+    let (code, want_neg) =
+        http_request(&ref_server.addr(), "POST", "/predict", "-0.9, 0.1").unwrap();
+    assert_eq!(code, 200, "{want_neg}");
+
+    let nth = fault_nth();
+    let (server, state) = start_axis_server_chaos("panic", |p| p.panic_on_batch(nth));
+    let addr = server.addr();
+    // Sequential predicts are one batch each, so the Nth batch is the
+    // Nth request: everything before it must answer the reference
+    // decision, the faulted one answers 500, and the loop ends there.
+    let mut i: u64 = 0;
+    let mut failures = 0;
+    while state.faults().injected().panics == 0 {
+        i += 1;
+        assert!(i <= nth, "fault armed for batch {nth} never fired by request {i}");
+        let (code, body) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+        match code {
+            200 => assert_eq!(body, want_pos, "request {i} before the fault"),
+            500 => {
+                assert!(body.contains("scoring panicked"), "{body}");
+                failures += 1;
+            }
+            other => panic!("request {i}: unexpected status {other}: {body}"),
+        }
+    }
+    assert_eq!((i, failures), (nth, 1), "exactly the Nth request fails");
+    // The worker respawn leaves service bit-identical to the reference.
+    for round in 0..5 {
+        let (code, body) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+        assert_eq!(code, 200, "post-fault round {round}: {body}");
+        assert_eq!(body, want_pos);
+        let (code, body) = http_request(&addr, "POST", "/predict", "-0.9, 0.1").unwrap();
+        assert_eq!(code, 200, "post-fault round {round}: {body}");
+        assert_eq!(body, want_neg);
+    }
+    // Both the plan and the engine stats counted exactly one panic.
+    assert_eq!(state.faults().injected().panics, 1);
+    let snap = state.manager.get("tiny").unwrap().stats();
+    assert_eq!(snap.worker_panics, 1, "panic must surface in the stats snapshot");
+}
+
+/// A corrupted registry during reload: the old slot keeps serving
+/// bit-identically, failed reloads answer 500 until the breaker trips,
+/// then 503 without touching the registry; healthz and the listing both
+/// surface the open circuit while overall readiness stays 200.
+#[test]
+fn chaos_corrupted_reload_keeps_old_model_serving_and_opens_circuit() {
+    let (server, state) = start_axis_server_chaos("reload", |_| {});
+    let addr = server.addr();
+    let plan = state.faults();
+    let (code, before) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200, "{before}");
+    // Arm *after* the initial load: one truncated open, then errors.
+    plan.truncate_load(1);
+    plan.fail_loads(2, 16);
+    // Every reload up to the breaker threshold fails and never disturbs
+    // serving. The first two answer 500 (model exists, artifact
+    // unreadable); the third failure trips the breaker, so its own
+    // answer is already the open-circuit 503.
+    for round in 0..3 {
+        let (code, body) = http_request(&addr, "POST", "/v1/models/tiny/reload", "").unwrap();
+        let want = if round < 2 { 500 } else { 503 };
+        assert_eq!(code, want, "faulted reload {round}: {body}");
+        let (code, body) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+        assert_eq!(code, 200, "predict after faulted reload {round}: {body}");
+        assert_eq!(body, before, "old slot must keep serving bit-identically");
+    }
+    // Threshold reached: the circuit is open and fast-fails without a
+    // registry open (the injection counters stop moving).
+    let opens = plan.injected().load_errors + plan.injected().load_truncations;
+    assert_eq!(opens, 3);
+    let (code, body) = http_request(&addr, "POST", "/v1/models/tiny/reload", "").unwrap();
+    assert_eq!(code, 503, "open circuit fast-fails reloads: {body}");
+    assert!(body.contains("circuit open"), "{body}");
+    assert_eq!(
+        plan.injected().load_errors + plan.injected().load_truncations,
+        opens,
+        "an open circuit must not touch the registry"
+    );
+    // One broken model never fails fleet readiness; it is reported.
+    let (code, health) = http_request(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(code, 200, "{health}");
+    assert!(health.starts_with("ok\n"), "{health}");
+    assert!(health.contains("circuit tiny: open"), "{health}");
+    let (code, listing) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(listing.contains("\"circuits\":{\"tiny\":{\"state\":\"open\""), "{listing}");
+    // And the model itself still answers, bit-identically.
+    let (code, body) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(body, before);
+}
+
+/// A request parked in a never-flushing batcher expires at its deadline:
+/// 503 with a `Retry-After` header, the expiry is counted, and the
+/// engine drains the abandoned work once kicked.
+#[test]
+fn chaos_request_deadline_expires_parked_batch_with_retry_after() {
+    let (server, state) = start_parked_chaos_server("deadline");
+    state.set_request_timeout(Some(Duration::from_millis(50)));
+    let stream = connect(&server.addr());
+    (&stream).write_all(&raw_predict(1)).unwrap();
+    (&stream).flush().unwrap();
+    // Read the response head raw so the Retry-After header is visible.
+    let mut reader = std::io::BufReader::new(&stream);
+    let mut status = String::new();
+    reader.read_line(&mut status).unwrap();
+    assert!(status.contains("503"), "{status}");
+    let mut saw_retry_after = false;
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.eq_ignore_ascii_case("retry-after") {
+                saw_retry_after = true;
+            }
+            if k.eq_ignore_ascii_case("content-length") {
+                content_len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    assert!(saw_retry_after, "deadline 503 must carry Retry-After");
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body).unwrap();
+    assert!(
+        String::from_utf8_lossy(&body).contains("request deadline exceeded"),
+        "{}",
+        String::from_utf8_lossy(&body)
+    );
+    // Counted; and the abandoned ticket does not leak in-flight work.
+    let me = state.manager.get("tiny").unwrap();
+    assert_eq!(me.stats().timeouts, 1);
+    state.manager.kick_all();
+    let until = Instant::now() + Duration::from_secs(5);
+    while me.engine().in_flight() != 0 && Instant::now() < until {
+        std::thread::yield_now();
+    }
+    assert_eq!(me.engine().in_flight(), 0, "cancelled ticket must still drain");
+}
+
+/// Graceful drain with a pipelined burst parked in the batcher: every
+/// in-flight request is answered (drain's kicks flush the batch), the
+/// server half-closes cleanly (EOF, never a reset), and new connections
+/// are refused while draining.
+#[test]
+fn chaos_drain_completes_parked_pipelined_requests_without_resets() {
+    let (server, state) = start_parked_chaos_server("drain");
+    let stream = connect(&server.addr());
+    let n = 8;
+    let mut burst = Vec::new();
+    for i in 0..n {
+        burst.extend_from_slice(&raw_predict(if i % 2 == 0 { 1 } else { -1 }));
+    }
+    (&stream).write_all(&burst).unwrap();
+    (&stream).flush().unwrap();
+    // All eight must be in flight (parked) before the drain begins: the
+    // engine cannot flush on its own, so the count can only grow.
+    let until = Instant::now() + Duration::from_secs(10);
+    loop {
+        let parked = state.manager.get("tiny").map_or(0, |me| me.engine().in_flight());
+        if parked == n as u64 {
+            break;
+        }
+        assert!(Instant::now() < until, "burst never parked ({parked}/{n} in flight)");
+        std::thread::yield_now();
+    }
+    // The SIGTERM path, minus the signal: flip to draining, then wait —
+    // kicking parked batches — until the last connection finishes.
+    state.begin_drain();
+    let clean = server.drain(Duration::from_secs(30), || state.manager.kick_all());
+    assert!(clean, "drain must complete with parked pipelined work in flight");
+    // Every response arrived in order, then a clean EOF — no reset.
+    let mut reader = std::io::BufReader::new(&stream);
+    for i in 0..n {
+        let (code, body) = read_one_response(&mut reader);
+        assert_eq!(code, 200, "drained response {i}: {body}");
+        let want = if i % 2 == 0 { 1 } else { -1 };
+        assert!(body.contains(&format!("\"label\":{want}")), "response {i}: {body}");
+    }
+    drop(reader);
+    assert_eof(&stream);
+    assert_eq!(server.active_connections(), 0);
+    // While draining, new connections are refused up front.
+    let (code, body) = http_request(&server.addr(), "GET", "/healthz", "").unwrap();
+    assert_eq!(code, 503, "{body}");
+    assert!(body.contains("draining"), "{body}");
+}
+
+/// A stalled accept (slow-socket fault) delays exactly the faulted
+/// connection; it still answers correctly and the stall is counted.
+#[test]
+fn chaos_stalled_connection_still_answers() {
+    let nth = fault_nth();
+    let (server, state) = start_axis_server_chaos("stall", |p| p.stall_conn(nth, 300));
+    let addr = server.addr();
+    for i in 1..=nth {
+        let t0 = Instant::now();
+        let (code, body) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!(code, 200, "connection {i}: {body}");
+        assert_eq!(body, "ok\n", "connection {i}");
+        if i == nth {
+            assert!(
+                t0.elapsed() >= Duration::from_millis(300),
+                "connection {nth} must have been stalled"
+            );
+        }
+    }
+    assert_eq!(state.faults().injected().stalls, 1);
+}
+
+/// SIGTERM against the real `mlsvm serve` binary with a pipelined burst
+/// on the wire: every request is answered and the process exits 0 after
+/// draining — the end-to-end shape of a rolling restart.
+#[test]
+#[cfg(unix)]
+fn chaos_serve_cli_sigterm_drains_in_flight_pipeline_and_exits_zero() {
+    let (model, ds) = binary_fixture(83);
+    let dir = tmp_dir("chaos_cli_sigterm");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("m", &ModelArtifact::Svm(model.clone())).unwrap();
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+        .args([
+            "serve",
+            "--registry",
+            dir.to_str().unwrap(),
+            "--model",
+            "m",
+            "--addr",
+            "127.0.0.1:0",
+            "--max-seconds",
+            "120",
+            "--drain-secs",
+            "5",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn mlsvm serve");
+    let stdout = child.stdout.take().unwrap();
+    let mut banner_reader = std::io::BufReader::new(stdout);
+    let mut banner = String::new();
+    banner_reader.read_line(&mut banner).unwrap();
+    let addr_str = banner
+        .split("http://")
+        .nth(1)
+        .unwrap_or_else(|| panic!("no address in banner '{banner}'"))
+        .trim();
+    let addr: SocketAddr = addr_str.parse().expect("server address");
+
+    // One pipelined burst in a single write.
+    let body: Vec<String> = ds.points.row(3).iter().map(|v| v.to_string()).collect();
+    let body = body.join(",");
+    let n = 6;
+    let req = format!(
+        "POST /predict HTTP/1.1\r\nHost: drain\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let mut burst = Vec::new();
+    for _ in 0..n {
+        burst.extend_from_slice(req.as_bytes());
+    }
+    let stream = connect(&addr);
+    (&stream).write_all(&burst).unwrap();
+    (&stream).flush().unwrap();
+
+    // The first response proves the whole burst was read and submitted
+    // (responses resolve only after the read buffer empties), so every
+    // remaining request is genuinely in flight when the signal lands.
+    let want = if model.decision(ds.points.row(3)) > 0.0 { 1 } else { -1 };
+    let mut reader = std::io::BufReader::new(&stream);
+    let (code, first) = read_one_response(&mut reader);
+    assert_eq!(code, 200, "{first}");
+    assert!(first.contains(&format!("\"label\":{want}")), "{first}");
+
+    // Raw libc kill keeps the crate dependency-free.
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    let rc = unsafe { kill(child.id() as i32, 15) };
+    assert_eq!(rc, 0, "kill(SIGTERM) failed");
+
+    // Every in-flight response still arrives, correct and in order.
+    for i in 1..n {
+        let (code, resp) = read_one_response(&mut reader);
+        assert_eq!(code, 200, "response {i} during drain: {resp}");
+        assert!(resp.contains(&format!("\"label\":{want}")), "response {i}: {resp}");
+    }
+    drop(reader);
+    drop(stream);
+
+    // The server drains and exits cleanly (0), not by abort.
+    let status = child.wait().expect("wait on drained server");
+    assert!(status.success(), "expected clean exit after SIGTERM, got {status}");
 }
