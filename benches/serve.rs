@@ -5,10 +5,12 @@
 //! the batch size sweeps, plus a **mixed multi-model workload** (clients
 //! alternating between two `/v1/models/{name}/predict` routes, with
 //! per-model latency percentiles), a **pipelined-vs-sequential**
-//! single-connection comparison (the HTTP/1.1 pipelining payoff), and a
+//! single-connection comparison (the HTTP/1.1 pipelining payoff), a
 //! **v1-text-vs-v2-binary model load-time** measurement on a large
-//! synthetic SV set (the registry-v2 payoff), all emitted into
-//! `BENCH_serve.json`.
+//! synthetic SV set (the registry-v2 payoff), and a **fleet mode** — a
+//! consistent-hash router over three byte-budgeted backends against a
+//! capacity-constrained single process (the `mlsvm route` sharding
+//! payoff) — all emitted into `BENCH_serve.json`.
 //!
 //! ```bash
 //! cargo bench --bench serve            # writes BENCH_serve.json
@@ -23,8 +25,8 @@ use mlsvm::data::matrix::Matrix;
 use mlsvm::data::synth::two_gaussians;
 use mlsvm::serve::{
     http_pipeline_on, http_request, http_request_on, load_artifact, save_artifact,
-    save_artifact_v1, EngineConfig, EngineManager, ModelArtifact, Registry, ServeState, Server,
-    MAX_PIPELINE_DEPTH,
+    save_artifact_v1, EngineConfig, EngineManager, ManagerConfig, ModelArtifact, Registry, Router,
+    RouterConfig, ServeState, Server, MAX_PIPELINE_DEPTH,
 };
 use mlsvm::svm::kernel::KernelKind;
 use mlsvm::svm::model::SvmModel;
@@ -424,6 +426,152 @@ fn measure_model_io(dir: &std::path::Path, n_sv: usize, dim: usize) -> String {
     )
 }
 
+/// Fleet tier vs one capacity-constrained process. Every process — the
+/// single-process baseline and each of the three backends — gets the
+/// same resident-byte budget: one model fits, two do not. A strictly
+/// alternating closed-loop client then forces the single process to
+/// evict and respawn an engine on every request (the previous model is
+/// always idle when the next one loads), while the router's consistent
+/// hash gives each model a backend of its own that keeps it resident —
+/// the memory-aware sharding payoff the CI gate pins. A loaded run
+/// (the whole client herd through the router) is reported alongside
+/// for percentiles under concurrency.
+fn run_fleet(
+    registry_dir: &std::path::Path,
+    queries: &[Vec<f32>],
+    clients: usize,
+    requests_per_client: usize,
+) -> String {
+    let model_bytes = |name: &str| -> u64 {
+        let reg = Registry::open(registry_dir).expect("registry");
+        let ModelArtifact::Svm(m) = reg.load(name).expect("artifact") else {
+            panic!("bench registry holds SVM artifacts");
+        };
+        (m.sv.rows() as u64) * (m.sv.cols() as u64) * 4
+    };
+    // Budget fits the larger model alone; holding both always overflows.
+    let budget = model_bytes("bench").max(model_bytes("bench-wide")) + 64;
+    let budgeted = ManagerConfig {
+        max_resident_bytes: budget,
+        ..Default::default()
+    };
+    // max_batch 1 flushes every submit immediately: a single closed-loop
+    // client must not pay the deadline wait on either side of the
+    // comparison (it would drown the thrash-vs-hop difference in a
+    // constant).
+    let start = |mgr_cfg: ManagerConfig| {
+        let manager = EngineManager::open_with(
+            Registry::open(registry_dir).expect("registry"),
+            engine_cfg(1),
+            mgr_cfg,
+        );
+        let state = Arc::new(ServeState::new(manager, "bench"));
+        Server::start("127.0.0.1:0", Arc::clone(&state)).expect("server")
+    };
+    let backends: Vec<Server> = (0..3).map(|_| start(budgeted)).collect();
+    let router = Router::start(
+        "127.0.0.1:0",
+        RouterConfig {
+            backends: backends.iter().map(|s| s.addr().to_string()).collect(),
+            ..Default::default()
+        },
+    )
+    .expect("router");
+    let single = start(budgeted);
+    let targets = ["/v1/models/bench/predict", "/v1/models/bench-wide/predict"];
+
+    // Bit-exactness: routed answers byte-identical to the single process.
+    let mut bit_exact = true;
+    for r in 0..8 {
+        let q = &queries[(r * 29) % queries.len()];
+        let body: Vec<String> = q.iter().map(|v| v.to_string()).collect();
+        let body = body.join(",");
+        let target = targets[r % targets.len()];
+        let routed = http_request(&router.addr(), "POST", target, &body).expect("routed");
+        let direct = http_request(&single.addr(), "POST", target, &body).expect("direct");
+        assert_eq!(routed.0, 200, "{target}: {}", routed.1);
+        if routed != direct {
+            bit_exact = false;
+            eprintln!("FLEET PARITY MISMATCH on {target}: {routed:?} vs {direct:?}");
+        }
+    }
+
+    let drive = |addr: std::net::SocketAddr, nclients: usize, reqs: usize| {
+        let t0 = Instant::now();
+        let mut lats: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..nclients)
+                .map(|c| {
+                    let targets = &targets;
+                    s.spawn(move || {
+                        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5))
+                            .expect("connect");
+                        stream.set_nodelay(true).ok();
+                        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+                        let mut lats = Vec::with_capacity(reqs);
+                        for r in 0..reqs {
+                            let q = &queries[(c * 131 + r * 17) % queries.len()];
+                            let body: Vec<String> = q.iter().map(|v| v.to_string()).collect();
+                            let body = body.join(",");
+                            // Strict alternation: under the byte budget
+                            // the single process swaps engines on every
+                            // request of the one-client gated run.
+                            let ti = (c + r) % targets.len();
+                            let t = Instant::now();
+                            let (code, resp) = http_request_on(&stream, "POST", targets[ti], &body)
+                                .expect("request");
+                            assert_eq!(code, 200, "{}: {resp}", targets[ti]);
+                            lats.push(t.elapsed().as_secs_f64());
+                        }
+                        lats
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("client thread"))
+                .collect()
+        });
+        let seconds = t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            (nclients * reqs) as f64 / seconds.max(1e-9),
+            percentile_ms(&lats, 0.50),
+            percentile_ms(&lats, 0.95),
+            percentile_ms(&lats, 0.99),
+        )
+    };
+
+    // The gated pair: one strictly-alternating closed-loop client.
+    let gate_reqs = (requests_per_client * 2).max(100);
+    let (single_rps, s50, s95, s99) = drive(single.addr(), 1, gate_reqs);
+    let (router_rps, r50, r95, r99) = drive(router.addr(), 1, gate_reqs);
+    let speedup = router_rps / single_rps.max(1e-9);
+    // Context: the whole client herd through the router.
+    let (loaded_rps, l50, _, l99) = drive(router.addr(), clients, requests_per_client);
+    println!(
+        "  budget {budget} B/process | single (thrashing) {single_rps:.0} req/s p50={s50:.3}ms | \
+         router {router_rps:.0} req/s p50={r50:.3}ms | {speedup:.1}x, bit_exact={bit_exact}"
+    );
+    println!(
+        "  loaded: {clients} clients through the router: {loaded_rps:.0} req/s \
+         p50={l50:.3}ms p99={l99:.3}ms"
+    );
+    if router_rps <= single_rps {
+        eprintln!("WARNING: fleet did not beat the capacity-constrained single process");
+    }
+    format!(
+        "{{\n    \"backends\": 3, \"budget_bytes\": {budget}, \"bit_exact\": {bit_exact}, \
+         \"gate_requests\": {gate_reqs}, \
+         \"single\": {{\"rps\": {single_rps:.1}, \"p50_ms\": {s50:.3}, \"p95_ms\": {s95:.3}, \
+         \"p99_ms\": {s99:.3}}}, \
+         \"router\": {{\"rps\": {router_rps:.1}, \"p50_ms\": {r50:.3}, \"p95_ms\": {r95:.3}, \
+         \"p99_ms\": {r99:.3}}}, \
+         \"speedup\": {speedup:.2}, \
+         \"loaded\": {{\"clients\": {clients}, \"rps\": {loaded_rps:.1}, \"p50_ms\": {l50:.3}, \
+         \"p99_ms\": {l99:.3}}}\n  }}"
+    )
+}
+
 fn json_entry(r: &LoadResult) -> String {
     format!(
         "    {{\"max_batch\": {}, \"clients\": {}, \"requests\": {}, \"keepalive\": {}, \
@@ -552,6 +700,11 @@ fn main() {
         MAX_PIPELINE_DEPTH / 2,
     );
 
+    // Fleet tier: consistent-hash router over 3 byte-budgeted backends
+    // vs one byte-budgeted process (the `mlsvm route` sharding payoff).
+    println!("\nfleet routing (1 router + 3 backends, byte-budgeted processes):");
+    let fleet_json = run_fleet(&dir, &queries, clients, requests);
+
     // Registry v2 payoff: load-time v1 text vs v2 binary on a big model.
     let io_json = measure_model_io(&dir, io_svs, 32);
 
@@ -590,8 +743,8 @@ fn main() {
     let json = format!(
         "{{\n  \"bench\": \"serve\",\n  \"threads\": {},\n  \"clients\": {clients},\n  \
          \"requests_per_client\": {requests},\n  \"configs\": [\n{}\n  ],\n  \"multi_model\": \
-         {multi_json},\n  \"pipelining\": {pipeline_json},\n  \"model_io\": {io_json},\n  \
-         \"faults\": {faults_json},\n  \
+         {multi_json},\n  \"pipelining\": {pipeline_json},\n  \"fleet\": {fleet_json},\n  \
+         \"model_io\": {io_json},\n  \"faults\": {faults_json},\n  \
          \"headline\": \
          {{\"max_batch\": {}, \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
          \"p99_ms\": {:.3}, \"utilization\": {:.4}}}\n}}\n",

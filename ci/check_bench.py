@@ -40,7 +40,13 @@ to the combined request total, and every per-model entry must carry
 p50/p95/p99 latencies) and the pipelining section (the pipelined client
 must beat sequential keep-alive on one connection — the feature's whole
 point; a wall-clock-robust gate because both run on the same box
-back-to-back). Finally it gates the faults section: an UNFAULTED bench
+back-to-back). The fleet section is gated the same way: the
+consistent-hash router over byte-budgeted backends must beat the
+equally-budgeted single process (which thrashes engines on the
+alternating workload — the sharding payoff; same-box back-to-back, so
+wall-clock-robust), routed answers must be bit-exact against the single
+process, and router p50/p95/p99 must be present. Finally it gates the
+faults section: an UNFAULTED bench
 run must report all-zero fault counters (no injected faults from the
 disarmed plan, no worker panics, no expired request deadlines) — if any
 counter is nonzero, either the fault-injection harness armed itself or
@@ -185,6 +191,43 @@ def check_serve(path: str, min_load_speedup: float) -> int:
                 f"pipelining: {seq:.0f} -> {pipe:.0f} req/s "
                 f"({pl.get('speedup')}x at depth {pl.get('depth')}) OK"
             )
+
+    fleet = data.get("fleet")
+    if not isinstance(fleet, dict):
+        print(f"{path} has no fleet section (serve bench too old?)")
+        failed = True
+    else:
+        single = fleet.get("single") or {}
+        router = fleet.get("router") or {}
+        s_rps = single.get("rps")
+        r_rps = router.get("rps")
+        if fleet.get("bit_exact") is not True:
+            print("FLEET PARITY FAILED: routed answers differ from the single process")
+            failed = True
+        if not isinstance(s_rps, (int, float)) or not isinstance(r_rps, (int, float)):
+            print("fleet section is missing rps numbers")
+            failed = True
+        elif r_rps <= s_rps:
+            print(
+                f"FLEET REGRESSION: router {r_rps:.0f} req/s did not beat the "
+                f"byte-budgeted single process {s_rps:.0f} req/s"
+            )
+            failed = True
+        else:
+            missing = [
+                k
+                for k in ("p50_ms", "p95_ms", "p99_ms")
+                if not isinstance(router.get(k), (int, float))
+            ]
+            if missing:
+                print(f"fleet router is missing latency percentiles {missing}")
+                failed = True
+            else:
+                print(
+                    f"fleet: single {s_rps:.0f} -> router {r_rps:.0f} req/s "
+                    f"({fleet.get('speedup')}x over {fleet.get('backends')} backends, "
+                    f"router p99={router.get('p99_ms')}ms) OK"
+                )
 
     faults = data.get("faults")
     if not isinstance(faults, dict):

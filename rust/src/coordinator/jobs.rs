@@ -129,6 +129,9 @@ impl OneVsRestTrainer {
             let n_pos = labels.iter().filter(|&&l| l == 1).count();
             let sizes = (n_pos, labels.len() - n_pos);
             let t = Timer::start();
+            // `Matrix` is copy-on-write (`Arc`-backed buffer): this clone
+            // is O(1) and every concurrent class job shares one points
+            // buffer instead of multiplying peak RSS by the class count.
             let result = Dataset::new(points.clone(), labels).and_then(|ds| {
                 MlsvmTrainer::new(self.params.clone().with_seed(self.params.seed ^ c as u64))
                     .train(&ds, &mut rng)

@@ -5,13 +5,20 @@
 //! artifacts; accumulations that need precision use `f64` internally.
 
 use crate::error::{Error, Result};
+use std::sync::Arc;
 
 /// Dense row-major matrix of `f32`.
+///
+/// The buffer is behind an `Arc` with copy-on-write semantics: `clone`
+/// is O(1) and shares storage (what lets every one-vs-rest class job
+/// hold "its own" points matrix without multiplying peak RSS), while
+/// the mutating accessors transparently unshare first, so value
+/// semantics are preserved — a writer never alters another clone.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
     rows: usize,
     cols: usize,
-    data: Vec<f32>,
+    data: Arc<Vec<f32>>,
 }
 
 impl Matrix {
@@ -20,7 +27,7 @@ impl Matrix {
         Matrix {
             rows,
             cols,
-            data: vec![0.0; rows * cols],
+            data: Arc::new(vec![0.0; rows * cols]),
         }
     }
 
@@ -36,7 +43,11 @@ impl Matrix {
                 rows * cols
             )));
         }
-        Ok(Matrix { rows, cols, data })
+        Ok(Matrix {
+            rows,
+            cols,
+            data: Arc::new(data),
+        })
     }
 
     /// Build from row slices (all must share one length).
@@ -58,7 +69,7 @@ impl Matrix {
         Ok(Matrix {
             rows: rows.len(),
             cols,
-            data,
+            data: Arc::new(data),
         })
     }
 
@@ -81,11 +92,12 @@ impl Matrix {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Mutably borrow row `i`.
+    /// Mutably borrow row `i` (unshares the buffer if it is shared).
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         debug_assert!(i < self.rows);
-        &mut self.data[i * self.cols..(i + 1) * self.cols]
+        let cols = self.cols;
+        &mut Arc::make_mut(&mut self.data)[i * cols..(i + 1) * cols]
     }
 
     /// Element accessor.
@@ -94,10 +106,11 @@ impl Matrix {
         self.data[i * self.cols + j]
     }
 
-    /// Element setter.
+    /// Element setter (unshares the buffer if it is shared).
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f32) {
-        self.data[i * self.cols + j] = v;
+        let idx = i * self.cols + j;
+        Arc::make_mut(&mut self.data)[idx] = v;
     }
 
     /// Flat row-major buffer.
@@ -106,10 +119,10 @@ impl Matrix {
         &self.data
     }
 
-    /// Flat mutable buffer.
+    /// Flat mutable buffer (unshares the buffer if it is shared).
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f32] {
-        &mut self.data
+        Arc::make_mut(&mut self.data)
     }
 
     /// Gather the given rows into a new matrix (row order preserved).
@@ -133,7 +146,7 @@ impl Matrix {
                 self.cols
             )));
         }
-        self.data.extend_from_slice(row);
+        Arc::make_mut(&mut self.data).extend_from_slice(row);
         self.rows += 1;
         Ok(())
     }
@@ -186,8 +199,14 @@ impl Matrix {
         Ok(Matrix {
             rows: self.rows + other.rows,
             cols,
-            data,
+            data: Arc::new(data),
         })
+    }
+
+    /// Whether this matrix shares its buffer with another clone (the
+    /// copy-on-write fast path; diagnostic, used by tests).
+    pub fn is_shared(&self) -> bool {
+        Arc::strong_count(&self.data) > 1
     }
 }
 
@@ -335,6 +354,27 @@ mod tests {
         let c = a.mul_transpose(&b).unwrap();
         // a * I^T = a
         assert_eq!(c, a);
+    }
+
+    #[test]
+    fn clone_shares_storage_until_written() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let mut b = a.clone();
+        assert!(a.is_shared() && b.is_shared(), "clone must share the buffer");
+        assert_eq!(a, b);
+        b.set(0, 0, 9.0);
+        assert!(!a.is_shared(), "a write must unshare first");
+        assert_eq!(a.get(0, 0), 1.0, "the original clone is untouched");
+        assert_eq!(b.get(0, 0), 9.0);
+        assert_ne!(a, b);
+        // Mutation through every mutating accessor stays confined.
+        let c = b.clone();
+        b.row_mut(1)[0] = -1.0;
+        b.as_mut_slice()[3] = -2.0;
+        b.push_row(&[7.0, 8.0]).unwrap();
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.get(1, 0), 3.0);
+        assert_eq!(c.get(1, 1), 4.0);
     }
 
     #[test]

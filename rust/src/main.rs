@@ -10,6 +10,10 @@
 //!                  per-model concurrent batching engines
 //!                  (`--models a,b,c`; first name is the default model
 //!                  behind the legacy unprefixed routes);
+//! * `route`      — front a fleet of backend serve processes behind one
+//!                  address, consistent-hashing model names across them
+//!                  (`--spawn N` launches children; `--backends a,b`
+//!                  fronts already-running servers);
 //! * `registry`   — registry maintenance: `migrate` rewrites v1-text /
 //!                  legacy model files in the v2 binary format, `list`
 //!                  shows names, formats and descriptions;
@@ -72,6 +76,7 @@ fn run(cmd: &str, argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(argv),
         "predict" => cmd_predict(argv),
         "serve" => cmd_serve(argv),
+        "route" => cmd_route(argv),
         "registry" => cmd_registry(argv),
         "gen" => cmd_gen(argv),
         "info" => cmd_info(argv),
@@ -83,7 +88,7 @@ fn run(cmd: &str, argv: Vec<String>) -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "mlsvm — algebraic multigrid support vector machines\n\n\
-                 usage: mlsvm <train|predict|serve|registry|gen|info> [options]\n\
+                 usage: mlsvm <train|predict|serve|route|registry|gen|info> [options]\n\
                  try:   mlsvm train --help"
             );
             Ok(())
@@ -282,6 +287,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             "evict engines that served nothing for this long (0 = never)",
             Some("0"),
         )
+        .opt(
+            "max-resident-mb",
+            "resident SV-byte budget; LRU-evict beyond this (0 = unbounded)",
+            Some("0"),
+        )
+        .opt(
+            "auth-token",
+            "bearer token required on reload/evict endpoints",
+            None,
+        )
         .opt("max-seconds", "exit after this long (0 = run forever)", Some("0"))
         .opt(
             "request-timeout-ms",
@@ -299,6 +314,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             None,
         )
         .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
+        .flag("lazy", "skip preloading; engines spawn on first use")
         .parse_from(argv)?;
     apply_threads(&args)?;
     let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
@@ -328,6 +344,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let mgr_cfg = mlsvm::serve::ManagerConfig {
         max_engines: args.get_usize("max-engines")?,
         idle_evict: (idle_secs > 0).then(|| std::time::Duration::from_secs(idle_secs)),
+        max_resident_bytes: args.get_u64("max-resident-mb")? << 20,
     };
     let mut manager = mlsvm::serve::EngineManager::open_with(reg, cfg, mgr_cfg);
     if let Some(spec) = args.get("fault-plan") {
@@ -335,19 +352,24 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         eprintln!("fault plan armed: {spec}");
     }
     let manager = manager;
-    for name in &names {
-        let me = manager.engine(name).map_err(|e| {
-            Error::Usage(format!(
-                "cannot load model '{name}': {e}\n(available: {:?})",
-                manager.registry().list().unwrap_or_default()
-            ))
-        })?;
-        // Stderr: the banner line below must stay the first stdout line
-        // (spawners poll stdout for the address).
-        eprintln!("loaded '{name}' ({})", me.describe());
+    if !args.get_flag("lazy") {
+        for name in &names {
+            let me = manager.engine(name).map_err(|e| {
+                Error::Usage(format!(
+                    "cannot load model '{name}': {e}\n(available: {:?})",
+                    manager.registry().list().unwrap_or_default()
+                ))
+            })?;
+            // Stderr: the banner line below must stay the first stdout
+            // line (spawners poll stdout for the address).
+            eprintln!("loaded '{name}' ({})", me.describe());
+        }
     }
     let default = names[0].clone();
     let state = std::sync::Arc::new(mlsvm::serve::ServeState::new(manager, default.clone()));
+    if let Some(token) = args.get("auth-token") {
+        state.set_auth_token(Some(token.to_string()));
+    }
     let timeout_ms = args.get_u64("request-timeout-ms")?;
     if timeout_ms > 0 {
         state.set_request_timeout(Some(std::time::Duration::from_millis(timeout_ms)));
@@ -408,6 +430,170 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     server.shutdown();
     for me in state.manager.loaded() {
         println!("stats[{}]: {}", me.name(), me.stats().to_json());
+    }
+    Ok(())
+}
+
+/// One spawned backend: the child process plus its stdout reader (kept
+/// alive so the pipe stays open for the child's shutdown stats).
+type BackendChild = (std::process::Child, std::io::BufReader<std::process::ChildStdout>);
+
+/// Spawn one `mlsvm serve` child on an ephemeral port and parse the
+/// bound address out of its banner line.
+fn spawn_backend(registry: &str, auth: Option<&str>) -> Result<(BackendChild, String)> {
+    use std::io::BufRead as _;
+    let exe = std::env::current_exe()
+        .map_err(|e| Error::Serve(format!("locating own binary: {e}")))?;
+    let mut cmd = std::process::Command::new(exe);
+    cmd.args(["serve", "--registry", registry, "--addr", "127.0.0.1:0", "--lazy"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::inherit());
+    if let Some(token) = auth {
+        cmd.args(["--auth-token", token]);
+    }
+    let mut child = cmd
+        .spawn()
+        .map_err(|e| Error::Serve(format!("spawning backend: {e}")))?;
+    let stdout = child.stdout.take().expect("stdout piped");
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut banner = String::new();
+    let _ = reader.read_line(&mut banner);
+    match banner.split("http://").nth(1).map(str::trim) {
+        Some(addr) if !addr.is_empty() => Ok(((child, reader), addr.to_string())),
+        _ => {
+            let _ = child.kill();
+            let _ = child.wait();
+            Err(Error::Serve(format!("backend printed no address banner: {banner:?}")))
+        }
+    }
+}
+
+/// Ask a backend child to drain (SIGTERM on unix, so it exits through
+/// the same graceful path as a foreground serve; hard kill elsewhere).
+fn terminate_child(child: &mut std::process::Child) {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn kill(pid: i32, sig: i32) -> i32;
+        }
+        if unsafe { kill(child.id() as i32, 15) } == 0 {
+            return;
+        }
+    }
+    let _ = child.kill();
+}
+
+fn cmd_route(argv: Vec<String>) -> Result<()> {
+    let args = Args::new(
+        "mlsvm route",
+        "consistent-hash fleet router over backend serve processes",
+    )
+    .opt("addr", "router bind address", Some("127.0.0.1:7870"))
+    .opt("backends", "comma-separated backend host:port list to front", None)
+    .opt("spawn", "spawn this many `mlsvm serve` children as backends", Some("0"))
+    .opt("registry", "registry directory for spawned backends", Some("models"))
+    .opt(
+        "auth-token",
+        "bearer token guarding reload/evict; forwarded to backends",
+        None,
+    )
+    .opt("retry-budget", "extra proxy attempts after the first", Some("2"))
+    .opt(
+        "proxy-timeout-ms",
+        "per-read bound on any backend exchange",
+        Some("10000"),
+    )
+    .opt("health-interval-ms", "backend health-probe cadence", Some("500"))
+    .opt("max-seconds", "exit after this long (0 = run forever)", Some("0"))
+    .opt("drain-secs", "graceful drain window on shutdown", Some("10"))
+    .parse_from(argv)?;
+    let auth = args.get("auth-token").map(|s| s.to_string());
+    let spawn_n = args.get_usize("spawn")?;
+    let mut backends: Vec<String> = args
+        .get("backends")
+        .map(|s| {
+            s.split(',')
+                .map(|b| b.trim().to_string())
+                .filter(|b| !b.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    // Spawned children occupy ring slots after any --backends entries;
+    // their stdout readers stay alive so the pipe never breaks.
+    let spawn_base = backends.len();
+    let registry = args.get("registry").unwrap().to_string();
+    let mut children: Vec<Option<BackendChild>> = Vec::new();
+    for _ in 0..spawn_n {
+        let ((child, reader), addr) = spawn_backend(&registry, auth.as_deref())?;
+        eprintln!("spawned backend pid {} on {addr}", child.id());
+        children.push(Some((child, reader)));
+        backends.push(addr);
+    }
+    if backends.is_empty() {
+        return Err(Error::Usage(
+            "mlsvm route needs --backends and/or --spawn > 0".into(),
+        ));
+    }
+    let n = backends.len();
+    let cfg = mlsvm::serve::RouterConfig {
+        backends,
+        auth_token: auth.clone(),
+        retry_budget: args.get_usize("retry-budget")?,
+        proxy_timeout: std::time::Duration::from_millis(args.get_u64("proxy-timeout-ms")?.max(1)),
+        health_interval: std::time::Duration::from_millis(
+            args.get_u64("health-interval-ms")?.max(1),
+        ),
+    };
+    let mut router = mlsvm::serve::Router::start(args.get("addr").unwrap(), cfg)?;
+    println!("routing {n} backend(s), listening on http://{}", router.addr());
+    use std::io::Write as _;
+    std::io::stdout().flush()?; // spawners poll stdout for the address
+    install_signal_handlers();
+    let max_secs = args.get_u64("max-seconds")?;
+    let drain_secs = args.get_u64("drain-secs")?.max(1);
+    let started = std::time::Instant::now();
+    loop {
+        if SHUTDOWN_SIGNAL.load(std::sync::atomic::Ordering::SeqCst) {
+            eprintln!("signal received: draining (up to {drain_secs}s)");
+            router.begin_drain();
+            if !router.drain(std::time::Duration::from_secs(drain_secs)) {
+                eprintln!("drain deadline passed with connections still active");
+            }
+            break;
+        }
+        if max_secs > 0 && started.elapsed() >= std::time::Duration::from_secs(max_secs) {
+            break;
+        }
+        // Keep spawned backends alive: respawn any that died and repoint
+        // the ring slot at the replacement. Placement is index-keyed, so
+        // the slot's models stay put even though the port changed.
+        for (i, slot) in children.iter_mut().enumerate() {
+            let dead = match slot {
+                Some((child, _)) => matches!(child.try_wait(), Ok(Some(_)) | Err(_)),
+                None => true,
+            };
+            if !dead {
+                continue;
+            }
+            *slot = None;
+            match spawn_backend(&registry, auth.as_deref()) {
+                Ok(((child, reader), addr)) => {
+                    let pid = child.id();
+                    eprintln!("backend {} respawned as pid {pid} on {addr}", spawn_base + i);
+                    router.set_backend_addr(spawn_base + i, addr);
+                    *slot = Some((child, reader));
+                }
+                Err(e) => eprintln!("backend {} died; respawn failed: {e}", spawn_base + i),
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    router.shutdown();
+    for slot in children.iter_mut().flatten() {
+        terminate_child(&mut slot.0);
+    }
+    for mut entry in children.into_iter().flatten() {
+        let _ = entry.0.wait();
     }
     Ok(())
 }

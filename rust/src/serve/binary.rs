@@ -366,10 +366,31 @@ fn read_svm(rd: &mut Rd) -> Result<SvmModel> {
     if sv_sec.buf.len() < want {
         return Err(truncated("support vectors"));
     }
-    let mut data = Vec::with_capacity(cells);
-    for ch in sv_sec.buf[..want].chunks_exact(4) {
-        data.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
-    }
+    // The SV matrix dominates load time for big models. On little-endian
+    // targets the on-disk bytes already *are* the in-memory f32 layout,
+    // so the whole section moves in one bulk copy — straight out of the
+    // page cache when the caller memory-mapped the file. The per-element
+    // decode remains as the portable big-endian fallback.
+    let src = &sv_sec.buf[..want];
+    #[cfg(target_endian = "little")]
+    let data = {
+        let mut data = vec![0f32; cells];
+        // Safety: `data` owns exactly `want = cells * 4` writable bytes,
+        // `src` holds exactly `want` bytes, and every bit pattern is a
+        // valid f32.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), data.as_mut_ptr() as *mut u8, want);
+        }
+        data
+    };
+    #[cfg(not(target_endian = "little"))]
+    let data = {
+        let mut data = Vec::with_capacity(cells);
+        for ch in src.chunks_exact(4) {
+            data.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+        }
+        data
+    };
     let sv = Matrix::from_vec(nsv, dim, data)
         .map_err(|e| Error::Serve(format!("support-vector matrix: {e}")))?;
 

@@ -368,6 +368,20 @@ impl ArtifactScorer {
         }
     }
 
+    /// Resident memory the support-vector matrices pin, in bytes
+    /// (SV count × dim × 4 per class model) — the dominant term of a
+    /// loaded model's footprint, and the unit the manager's byte-budget
+    /// capacity policy counts.
+    pub fn resident_bytes(&self) -> u64 {
+        let sv_bytes = |b: &BinaryScorer| {
+            (b.model().sv.rows() as u64) * (b.model().sv.cols() as u64) * 4
+        };
+        match &self.kind {
+            ScorerKind::Binary(b) => sv_bytes(b),
+            ScorerKind::Multi(list) => list.iter().map(|(_, s)| sv_bytes(s)).sum(),
+        }
+    }
+
     /// Evaluate one query.
     pub fn decide(&self, x: &[f32]) -> Decision {
         match &self.kind {
@@ -659,6 +673,12 @@ impl Engine {
     /// "binary" or "multiclass" for the current model.
     pub fn model_kind(&self) -> &'static str {
         self.shared.slot.get().kind_name()
+    }
+
+    /// Bytes of support-vector data the current model pins resident
+    /// (see [`ArtifactScorer::resident_bytes`]).
+    pub fn resident_bytes(&self) -> u64 {
+        self.shared.slot.get().resident_bytes()
     }
 
     /// The shared model slot (swap models through it to hot-reload; the

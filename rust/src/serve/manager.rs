@@ -62,6 +62,12 @@ fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Total support-vector bytes pinned by every engine in `map` (the
+/// quantity [`ManagerConfig::max_resident_bytes`] bounds).
+fn resident_bytes_of(map: &HashMap<String, Arc<ManagedEngine>>) -> u64 {
+    map.values().map(|me| me.engine.resident_bytes()).sum()
+}
+
 /// Capacity/lifecycle policy of an [`EngineManager`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ManagerConfig {
@@ -70,6 +76,15 @@ pub struct ManagerConfig {
     /// work; if every other engine is busy, the fleet stays over cap
     /// until one quiesces.
     pub max_engines: usize,
+    /// Resident-byte budget across all loaded engines, counted as
+    /// support-vector bytes (SV count × dim × 4 per model; see
+    /// [`crate::serve::engine::Engine::resident_bytes`]). 0 = unbounded.
+    /// Enforced with the same LRU/skip-busy policy as `max_engines` —
+    /// the two caps compose: eviction runs while **either** is
+    /// exceeded. Unlike an engine-count cap, this makes admission
+    /// memory-aware: one 5M-SV model and fifty tiny ones are not the
+    /// same load.
+    pub max_resident_bytes: u64,
     /// Evict engines whose last predict-path use is older than this
     /// (None = never). Swept by [`EngineManager::sweep_idle`] — callers
     /// drive it from a reaper thread or opportunistically.
@@ -538,20 +553,31 @@ impl EngineManager {
         Ok(spawned)
     }
 
-    /// Evict least-recently-used engines until the fleet fits the cap,
-    /// skipping `keep` (the engine just acquired) and anything with
-    /// in-flight work. Returns the removed engines so the caller can drop
-    /// them outside the map lock. Called with the map lock held.
+    /// Whether the fleet currently exceeds the engine-count cap or the
+    /// resident-byte budget (0 disables either bound).
+    fn over_capacity(&self, map: &HashMap<String, Arc<ManagedEngine>>) -> bool {
+        if self.cfg.max_engines != 0 && map.len() > self.cfg.max_engines {
+            return true;
+        }
+        self.cfg.max_resident_bytes != 0
+            && resident_bytes_of(map) > self.cfg.max_resident_bytes
+    }
+
+    /// Evict least-recently-used engines until the fleet fits both the
+    /// engine-count cap and the resident-byte budget, skipping `keep`
+    /// (the engine just acquired) and anything with in-flight work.
+    /// Returns the removed engines so the caller can drop them outside
+    /// the map lock. Called with the map lock held.
     fn enforce_capacity(
         &self,
         map: &mut HashMap<String, Arc<ManagedEngine>>,
         keep: &str,
     ) -> Vec<Arc<ManagedEngine>> {
         let mut victims = Vec::new();
-        if self.cfg.max_engines == 0 {
+        if self.cfg.max_engines == 0 && self.cfg.max_resident_bytes == 0 {
             return victims;
         }
-        while map.len() > self.cfg.max_engines {
+        while self.over_capacity(map) {
             // Lowest touch sequence = least recently used; names break
             // exact ties deterministically.
             let victim = map
@@ -617,10 +643,16 @@ impl EngineManager {
 
     /// Point-in-time capacity counters for the fleet view.
     pub fn fleet_capacity(&self) -> FleetCapacity {
+        let (loaded, resident_bytes) = {
+            let map = lock_recover(&self.engines);
+            (map.len(), resident_bytes_of(&map))
+        };
         FleetCapacity {
             max_engines: self.cfg.max_engines,
+            max_resident_bytes: self.cfg.max_resident_bytes,
             idle_evict_secs: self.cfg.idle_evict.map(|d| d.as_secs()),
-            loaded: lock_recover(&self.engines).len(),
+            loaded,
+            resident_bytes,
             capacity_evictions: self.capacity_evictions.load(Ordering::Relaxed),
             idle_reaped: self.idle_reaped.load(Ordering::Relaxed),
         }
@@ -847,6 +879,7 @@ mod tests {
             ManagerConfig {
                 max_engines: 2,
                 idle_evict: None,
+                ..Default::default()
             },
         );
         // Interleaved predicts: a, b, then a again — so b is the LRU.
@@ -875,6 +908,7 @@ mod tests {
             ManagerConfig {
                 max_engines: 1,
                 idle_evict: None,
+                ..Default::default()
             },
         );
         let a = mgr.engine("a").unwrap();
@@ -904,6 +938,38 @@ mod tests {
     }
 
     #[test]
+    fn byte_budget_evicts_lru_when_resident_bytes_exceed_cap() {
+        let reg = tmp_registry("byte_budget");
+        save_axis_models(&reg, &["a", "b", "c"]);
+        let mgr = EngineManager::open_with(
+            reg,
+            quick_cfg(),
+            ManagerConfig {
+                max_engines: 0,
+                // Each axis model pins 2 SVs × 2 dims × 4 bytes = 16
+                // bytes, so two fit under this budget and three do not.
+                max_resident_bytes: 40,
+                idle_evict: None,
+            },
+        );
+        mgr.engine("a").unwrap().engine().predict(&[0.9, 0.0]).unwrap();
+        mgr.engine("b").unwrap().engine().predict(&[0.9, 0.0]).unwrap();
+        let cap = mgr.fleet_capacity();
+        assert_eq!(cap.resident_bytes, 32);
+        assert_eq!(cap.max_resident_bytes, 40);
+        assert_eq!(cap.capacity_evictions, 0);
+        // Loading a third model would pin 48 bytes: the LRU (a, never
+        // re-touched) must be evicted even though the engine COUNT is
+        // unbounded.
+        mgr.engine("c").unwrap();
+        assert_eq!(mgr.loaded_names(), vec!["b", "c"]);
+        let cap = mgr.fleet_capacity();
+        assert_eq!(cap.resident_bytes, 32);
+        assert_eq!(cap.capacity_evictions, 1);
+        assert!(cap.to_json().contains("\"resident_bytes\":32"), "{}", cap.to_json());
+    }
+
+    #[test]
     fn idle_sweep_reaps_only_engines_past_the_window() {
         let reg = tmp_registry("idle_reap");
         save_axis_models(&reg, &["old", "fresh"]);
@@ -914,6 +980,7 @@ mod tests {
             ManagerConfig {
                 max_engines: 0,
                 idle_evict: Some(window),
+                ..Default::default()
             },
         );
         mgr.engine("old").unwrap().engine().predict(&[0.9, 0.0]).unwrap();
@@ -945,6 +1012,7 @@ mod tests {
             ManagerConfig {
                 max_engines: 0,
                 idle_evict: Some(Duration::from_secs(60)),
+                ..Default::default()
             },
         );
         let m = mgr.engine("m").unwrap();
@@ -980,6 +1048,7 @@ mod tests {
             ManagerConfig {
                 max_engines: 0,
                 idle_evict: Some(window),
+                ..Default::default()
             },
         );
         mgr.engine("m").unwrap();
@@ -1029,6 +1098,7 @@ mod tests {
             ManagerConfig {
                 max_engines: 2,
                 idle_evict: None,
+                ..Default::default()
             },
         );
         std::thread::scope(|s| {

@@ -30,6 +30,13 @@
 //!   model. Connections keep-alive and **pipeline**: back-to-back
 //!   requests on one socket are parsed by a persistent buffered reader
 //!   and answered in order (depth/byte bounded);
+//! * [`route`] — the fleet router tier: `mlsvm route` fronts N backend
+//!   serve processes behind one address, consistent-hashing model names
+//!   across them (FNV-1a ring keyed by stable backend indices, so
+//!   placement survives restarts), health-checking `/healthz`, pooling
+//!   keep-alive backend connections, retrying evict/connect failures
+//!   against the next ring replica under a bounded budget, and fanning
+//!   out the fleet-wide routes (`/v1/models`, `/stats`, `/healthz`);
 //! * [`stats`] — batching counters and log-spaced latency histograms,
 //!   snapshotted as JSON per model and aggregated fleet-wide;
 //! * [`faults`] — a deterministic fault-injection plan ([`FaultPlan`])
@@ -47,6 +54,7 @@ pub mod engine;
 pub mod faults;
 pub mod manager;
 pub mod registry;
+pub mod route;
 pub mod server;
 pub mod stats;
 
@@ -62,8 +70,10 @@ pub use registry::{
     detect_format, load_artifact, save_artifact, save_artifact_v1, MigrationReport, ModelArtifact,
     ModelFormat, Registry,
 };
+pub use route::{Ring, Router, RouterConfig};
 pub use server::{
-    http_pipeline_on, http_request, http_request_on, ServeState, Server, MAX_PIPELINE_DEPTH,
+    http_pipeline_on, http_request, http_request_on, http_request_with_auth, ServeState, Server,
+    MAX_PIPELINE_DEPTH, STREAM_THRESHOLD,
 };
 pub use stats::{
     aggregate, BatchStats, EngineStats, FleetCapacity, LatencyHistogram, StatsSnapshot,

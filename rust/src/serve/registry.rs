@@ -24,7 +24,10 @@
 //!   registry existed.
 //!
 //! [`load_artifact`] sniffs the format (binary magic, then text header,
-//! then legacy) so every model file ever saved by this repo still loads.
+//! then legacy) so every model file ever saved by this repo still loads;
+//! on Unix it memory-maps the file read-only so the v2 parser copies the
+//! SV matrix out of the page cache directly, without a transient
+//! whole-file heap buffer.
 //! [`save_artifact`] writes v2; [`save_artifact_v1`] keeps the text
 //! writer alive for migration tests and the v1-vs-v2 load benchmark.
 //!
@@ -423,8 +426,120 @@ fn read_multiclass_body<'b>(lines: &mut impl Iterator<Item = &'b str>) -> Result
 /// Load any model file: v2 binary, v1 text (`mlsvm-model v1 ...`), or
 /// legacy single-`SvmModel` line files — the format is sniffed from the
 /// first bytes.
+///
+/// On Unix the file is memory-mapped read-only instead of copied into a
+/// heap buffer, so the dominant section of a large v2 artifact — the raw
+/// little-endian SV matrix — streams from the page cache straight into
+/// the model's own storage with one copy total and no transient
+/// whole-file allocation. Zero-length files and platforms (or
+/// pseudo-files) where `mmap` fails fall back to an ordinary read.
 pub fn load_artifact(path: impl AsRef<Path>) -> Result<ModelArtifact> {
-    parse_artifact(&std::fs::read(&path)?)
+    parse_artifact(&map_or_read(path.as_ref())?)
+}
+
+/// Raw-libc read-only file mapping (the crate is dependency-free, so no
+/// `memmap2`): `mmap(PROT_READ, MAP_PRIVATE)` on open, `munmap` on drop.
+#[cfg(unix)]
+mod mmap {
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// A read-only mapping of a whole file, unmapped on drop.
+    pub struct Mapping {
+        ptr: *mut core::ffi::c_void,
+        len: usize,
+    }
+
+    impl Mapping {
+        /// Map `len` bytes of `file` (None on any mmap failure — the
+        /// caller falls back to a buffered read). `len` must be > 0:
+        /// zero-length mappings are an `EINVAL` by spec.
+        pub fn map(file: &std::fs::File, len: usize) -> Option<Mapping> {
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            // MAP_FAILED is (void*)-1, not null.
+            if ptr as usize == usize::MAX {
+                None
+            } else {
+                Some(Mapping { ptr, len })
+            }
+        }
+    }
+
+    impl Drop for Mapping {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+
+    impl std::ops::Deref for Mapping {
+        type Target = [u8];
+        fn deref(&self) -> &[u8] {
+            // The mapping is private, read-only, and lives exactly as
+            // long as `self`; a concurrent writer cannot tear it because
+            // every registry publish goes through rename (`write_atomic`),
+            // which leaves the mapped inode untouched.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+}
+
+/// Bytes of a model file: memory-mapped where possible, owned otherwise.
+enum FileBytes {
+    #[cfg(unix)]
+    Mapped(mmap::Mapping),
+    Owned(Vec<u8>),
+}
+
+impl std::ops::Deref for FileBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            FileBytes::Mapped(m) => m,
+            FileBytes::Owned(v) => v,
+        }
+    }
+}
+
+fn map_or_read(path: &Path) -> Result<FileBytes> {
+    #[cfg(unix)]
+    {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        if len > 0 && len <= usize::MAX as u64 {
+            if let Some(m) = mmap::Mapping::map(&file, len as usize) {
+                return Ok(FileBytes::Mapped(m));
+            }
+        }
+        // Empty files (still a parse error, but a *graceful* one) and
+        // unmappable pseudo-files fall through to the owned read.
+    }
+    Ok(FileBytes::Owned(std::fs::read(path)?))
 }
 
 /// Parse an already-read model byte stream (the body of

@@ -1,0 +1,1167 @@
+//! Fleet router tier: one front address, N backend serve processes.
+//!
+//! A [`Router`] speaks the exact `/v1/models/{name}/…` API of
+//! [`crate::serve::server`], but instead of owning engines it
+//! **consistent-hashes model names across backends** and proxies each
+//! request to the backend that owns the model. Backends are plain
+//! `mlsvm serve` processes (spawned children of `mlsvm route --spawn N`,
+//! or any addresses handed to `--backends`); they need no router
+//! awareness.
+//!
+//! * **Placement** is a consistent-hash [`Ring`]: FNV-1a 64 over
+//!   [`VNODES`] virtual nodes per backend, keyed by the **stable backend
+//!   index** (`backend-{i}#{r}`), *not* by address. A backend that dies
+//!   and respawns on a new ephemeral port keeps its ring position, so
+//!   model placement survives restarts — the property the conformance
+//!   suite pins.
+//! * **Health**: a background thread probes every backend's `/healthz`
+//!   each interval (plus one synchronous round at startup, and passive
+//!   marking on connect/IO failure). Unhealthy backends are skipped by
+//!   the proxy until a probe brings them back.
+//! * **Failover & retries**: a request whose owner is down (or answers
+//!   `503`) walks the ring to the next distinct backend under a bounded
+//!   budget ([`RouterConfig::retry_budget`] extra attempts). Retries
+//!   only happen **before any response byte reaches the client** — a
+//!   mid-relay failure closes the connection instead of corrupting it.
+//!   Exhausting the budget answers a `503` with `Retry-After`, never a
+//!   hang: every backend read is bounded by
+//!   [`RouterConfig::proxy_timeout`].
+//! * **Pooling**: completed keep-alive backend exchanges park their
+//!   connection in a small per-backend pool, so steady-state proxying
+//!   pays no connect cost.
+//! * **Streaming**: response bodies relay in bounded copies
+//!   ([`COPY_BUF`] bytes at a time) for both `Content-Length` and
+//!   chunked framing — the router never materializes a whole
+//!   predict-batch answer.
+//! * **Fleet routes** fan out: `GET /v1/models` aggregates every
+//!   backend's listing (the `models` array is the union of names),
+//!   `GET /healthz` probes the fleet, `GET /stats` reports router
+//!   counters per backend. Legacy unscoped routes (`/predict`,
+//!   `/reload`, …) answer `400` — the router has no default model.
+//! * **Auth**: when [`RouterConfig::auth_token`] is set, mutating
+//!   endpoints (reload/evict) require `Authorization: Bearer` at the
+//!   router, and the token is forwarded on every proxied request so
+//!   token-guarded backends accept it.
+//! * **Drain** mirrors the backend server: [`Router::begin_drain`] flips
+//!   `/healthz`, refuses new connections, and lets in-flight proxied
+//!   pipelines finish before closing cleanly (FIN, never RST);
+//!   [`Router::drain`] waits for quiescence.
+
+use crate::error::{Error, Result};
+use crate::serve::server::{
+    append_response_extra, bearer_auth_failure, error_json, http_request_with_auth, json_escape,
+    read_request, refuse_connection, write_response, ConnReader, HttpRequest, Response, JSON,
+    RETRY_AFTER,
+};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Virtual nodes per backend on the hash ring. More vnodes smooth the
+/// key distribution; 64 keeps placement lookup cheap while spreading
+/// models to within a few percent of even.
+pub const VNODES: usize = 64;
+
+/// Response bodies relay to the client in copies of at most this many
+/// bytes — the router's whole-response memory bound.
+pub const COPY_BUF: usize = 16 * 1024;
+
+/// Most concurrent client connections the router handles; the excess is
+/// refused with a 503 (same shedding as the backend server).
+const MAX_CONNS: usize = 256;
+
+/// How long a kept-alive client connection may idle between requests.
+const KEEPALIVE_IDLE: Duration = Duration::from_secs(10);
+
+/// Requests served on one client connection before the router closes it.
+const MAX_REQUESTS_PER_CONN: usize = 10_000;
+
+/// Backend connect timeout (distinct from the read-side proxy timeout:
+/// a dead host must fail fast so the retry budget buys failover, not
+/// waiting).
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Kept backend connections per backend.
+const POOL_CAP: usize = 8;
+
+/// Largest backend `503` body absorbed for retry bookkeeping; bigger
+/// (never expected) drops the connection instead.
+const DISCARD_CAP: usize = 64 * 1024;
+
+/// FNV-1a 64-bit hash — the ring's stable, dependency-free hash.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Consistent-hash ring over `n` backend slots.
+///
+/// Ring points are hashes of `backend-{index}#{replica}` — the **index**
+/// is the identity, so two routers over the same backend count place
+/// every model identically, regardless of addresses or construction
+/// order, and a respawned backend (same index, new port) keeps its keys.
+pub struct Ring {
+    /// `(point, backend_index)`, sorted by point.
+    points: Vec<(u64, usize)>,
+    n: usize,
+}
+
+impl Ring {
+    /// Ring over backend indices `0..n`.
+    pub fn new(n: usize) -> Ring {
+        let mut points = Vec::with_capacity(n * VNODES);
+        for i in 0..n {
+            for r in 0..VNODES {
+                points.push((fnv1a(format!("backend-{i}#{r}").as_bytes()), i));
+            }
+        }
+        points.sort_unstable();
+        Ring { points, n }
+    }
+
+    /// Number of backend slots.
+    pub fn backends(&self) -> usize {
+        self.n
+    }
+
+    /// The backend that owns `key` (first point at or after the key's
+    /// hash, wrapping). Requires a non-empty ring.
+    pub fn primary(&self, key: &str) -> usize {
+        self.order(key)[0]
+    }
+
+    /// Every distinct backend in ring-walk order starting at `key`'s
+    /// point: `order[0]` is the owner, the rest is the failover order.
+    pub fn order(&self, key: &str) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.n);
+        if self.points.is_empty() {
+            return out;
+        }
+        let h = fnv1a(key.as_bytes());
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for k in 0..self.points.len() {
+            let (_, b) = self.points[(start + k) % self.points.len()];
+            if !out.contains(&b) {
+                out.push(b);
+                if out.len() == self.n {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One backend slot: a (mutable) address, a health flag, a small
+/// keep-alive connection pool, and counters.
+struct Backend {
+    addr: Mutex<String>,
+    /// Probed by the health thread and passively cleared on proxy
+    /// failure; unhealthy backends are skipped by candidate selection.
+    healthy: AtomicBool,
+    pool: Mutex<Vec<TcpStream>>,
+    proxied: AtomicU64,
+    errors: AtomicU64,
+}
+
+impl Backend {
+    fn new(addr: String) -> Backend {
+        Backend {
+            addr: Mutex::new(addr),
+            healthy: AtomicBool::new(false),
+            pool: Mutex::new(Vec::new()),
+            proxied: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        }
+    }
+
+    fn addr(&self) -> String {
+        self.addr.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    fn set_addr(&self, addr: String) {
+        *self.addr.lock().unwrap_or_else(|e| e.into_inner()) = addr;
+        self.clear_pool();
+        // Unproven until the next health round (or a successful proxy).
+        self.healthy.store(false, Ordering::Relaxed);
+    }
+
+    fn take_conn(&self) -> Option<TcpStream> {
+        self.pool.lock().unwrap_or_else(|e| e.into_inner()).pop()
+    }
+
+    fn put_conn(&self, stream: TcpStream) {
+        let mut pool = self.pool.lock().unwrap_or_else(|e| e.into_inner());
+        if pool.len() < POOL_CAP {
+            pool.push(stream);
+        }
+    }
+
+    fn clear_pool(&self) {
+        self.pool.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+
+    fn mark_down(&self) {
+        self.healthy.store(false, Ordering::Relaxed);
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        self.clear_pool();
+    }
+}
+
+/// Router configuration.
+pub struct RouterConfig {
+    /// Backend addresses (`host:port`), one per ring slot, in slot order.
+    pub backends: Vec<String>,
+    /// Bearer token: checked on mutating routes at the router and
+    /// forwarded on every proxied request.
+    pub auth_token: Option<String>,
+    /// Extra proxy attempts after the first (ring-walk failover budget).
+    pub retry_budget: usize,
+    /// Bound on every backend read during a proxy exchange — a stalled
+    /// backend costs this much, then fails over; it can never hang the
+    /// router.
+    pub proxy_timeout: Duration,
+    /// Background health-probe cadence.
+    pub health_interval: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            backends: Vec::new(),
+            auth_token: None,
+            retry_budget: 2,
+            proxy_timeout: Duration::from_secs(10),
+            health_interval: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Shared router state (accept loop, connection handlers, health thread).
+struct RouterState {
+    ring: Ring,
+    backends: Vec<Backend>,
+    auth_token: Option<String>,
+    retry_budget: usize,
+    proxy_timeout: Duration,
+    health_interval: Duration,
+    draining: AtomicBool,
+    shutdown: AtomicBool,
+    proxied: AtomicU64,
+    retries: AtomicU64,
+    fanouts: AtomicU64,
+}
+
+/// A running fleet router (shuts down on drop).
+pub struct Router {
+    addr: SocketAddr,
+    state: Arc<RouterState>,
+    active: Arc<AtomicUsize>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    health_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind `bind_addr` and start routing across `cfg.backends`. Runs
+    /// one synchronous health round before accepting (so the first
+    /// request already knows who is up) and then probes in the
+    /// background every `cfg.health_interval`.
+    pub fn start(bind_addr: &str, cfg: RouterConfig) -> Result<Router> {
+        if cfg.backends.is_empty() {
+            return Err(Error::Serve("router needs at least one backend".into()));
+        }
+        let state = Arc::new(RouterState {
+            ring: Ring::new(cfg.backends.len()),
+            backends: cfg.backends.into_iter().map(Backend::new).collect(),
+            auth_token: cfg.auth_token,
+            retry_budget: cfg.retry_budget,
+            proxy_timeout: cfg.proxy_timeout,
+            health_interval: cfg.health_interval,
+            draining: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            proxied: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            fanouts: AtomicU64::new(0),
+        });
+        check_round(&state);
+        let listener = TcpListener::bind(bind_addr)
+            .map_err(|e| Error::Serve(format!("bind {bind_addr}: {e}")))?;
+        let addr = listener.local_addr()?;
+        let active = Arc::new(AtomicUsize::new(0));
+        let active_in_loop = Arc::clone(&active);
+        let st = Arc::clone(&state);
+        let accept_thread = std::thread::Builder::new()
+            .name("route-accept".into())
+            .spawn(move || {
+                let active = active_in_loop;
+                for conn in listener.incoming() {
+                    if st.shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    if st.draining.load(Ordering::SeqCst) {
+                        refuse_connection(&stream, "router is draining");
+                        continue;
+                    }
+                    if active.load(Ordering::Relaxed) >= MAX_CONNS {
+                        refuse_connection(&stream, "router at connection capacity");
+                        continue;
+                    }
+                    active.fetch_add(1, Ordering::Relaxed);
+                    struct Permit(Arc<AtomicUsize>);
+                    impl Drop for Permit {
+                        fn drop(&mut self) {
+                            self.0.fetch_sub(1, Ordering::Relaxed);
+                        }
+                    }
+                    let permit = Permit(Arc::clone(&active));
+                    let st = Arc::clone(&st);
+                    let _ = std::thread::Builder::new()
+                        .name("route-conn".into())
+                        .spawn(move || {
+                            let _permit = permit;
+                            handle_router_connection(stream, &st);
+                        });
+                }
+            })
+            .map_err(|e| Error::Serve(format!("spawning router accept loop: {e}")))?;
+        let st = Arc::clone(&state);
+        let health_thread = std::thread::Builder::new()
+            .name("route-health".into())
+            .spawn(move || {
+                while !st.shutdown.load(Ordering::Relaxed) {
+                    // Sleep in short steps so shutdown is prompt even
+                    // with a long probe interval.
+                    let until = Instant::now() + st.health_interval;
+                    while Instant::now() < until {
+                        if st.shutdown.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    check_round(&st);
+                }
+            })
+            .map_err(|e| Error::Serve(format!("spawning health thread: {e}")))?;
+        Ok(Router {
+            addr,
+            state,
+            active,
+            accept_thread: Some(accept_thread),
+            health_thread: Some(health_thread),
+        })
+    }
+
+    /// The bound front address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Client connections currently being handled.
+    pub fn active_connections(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    /// The ring slot that owns `model` (placement introspection).
+    pub fn place(&self, model: &str) -> usize {
+        self.state.ring.primary(model)
+    }
+
+    /// Current backend addresses, in slot order.
+    pub fn backend_addrs(&self) -> Vec<String> {
+        self.state.backends.iter().map(|b| b.addr()).collect()
+    }
+
+    /// Whether slot `index`'s backend passed its last health probe.
+    pub fn backend_healthy(&self, index: usize) -> bool {
+        self.state.backends[index].healthy.load(Ordering::Relaxed)
+    }
+
+    /// Repoint slot `index` at a new address (a respawned backend on a
+    /// fresh port keeps its ring position). The slot is unhealthy until
+    /// the next probe proves the new address.
+    pub fn set_backend_addr(&self, index: usize, addr: impl Into<String>) {
+        self.state.backends[index].set_addr(addr.into());
+    }
+
+    /// Run one synchronous health round now; returns how many backends
+    /// are up.
+    pub fn check_health_now(&self) -> usize {
+        check_round(&self.state)
+    }
+
+    /// Start a graceful drain: `/healthz` flips to `draining`, new
+    /// connections are refused, existing connections close once their
+    /// in-flight pipeline is answered. Irreversible by design.
+    pub fn begin_drain(&self) {
+        self.state.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a drain has begun.
+    pub fn draining(&self) -> bool {
+        self.state.draining.load(Ordering::SeqCst)
+    }
+
+    /// Wait (up to `deadline`) for every in-flight client connection to
+    /// finish. Call [`Router::begin_drain`] first.
+    pub fn drain(&self, deadline: Duration) -> bool {
+        let until = Instant::now() + deadline;
+        loop {
+            if self.active.load(Ordering::Relaxed) == 0 {
+                return true;
+            }
+            if Instant::now() >= until {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Stop accepting and join the router threads.
+    pub fn shutdown(&mut self) {
+        if self.state.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.health_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One health round: probe every backend's `/healthz`, update the flags,
+/// drop pools of backends that went down. Returns the healthy count.
+fn check_round(state: &RouterState) -> usize {
+    let timeout = state.proxy_timeout.min(Duration::from_secs(1));
+    let mut up = 0usize;
+    for b in &state.backends {
+        let ok = probe_health(&b.addr(), timeout);
+        if ok {
+            up += 1;
+        } else {
+            b.clear_pool();
+        }
+        b.healthy.store(ok, Ordering::Relaxed);
+    }
+    up
+}
+
+/// `GET /healthz` against one backend under a tight timeout; healthy
+/// means a 200 status line (a draining backend answers 503 and is
+/// treated as down — it must stop receiving traffic).
+fn probe_health(addr: &str, timeout: Duration) -> bool {
+    let Ok(sa) = addr.parse::<SocketAddr>() else {
+        return false;
+    };
+    let Ok(stream) = TcpStream::connect_timeout(&sa, timeout) else {
+        return false;
+    };
+    stream.set_read_timeout(Some(timeout)).ok();
+    stream.set_nodelay(true).ok();
+    {
+        let mut w = &stream;
+        let req = "GET /healthz HTTP/1.1\r\nHost: router\r\nContent-Length: 0\r\nConnection: close\r\n\r\n";
+        if w.write_all(req.as_bytes()).and_then(|_| w.flush()).is_err() {
+            return false;
+        }
+    }
+    let mut buf = [0u8; 64];
+    let mut r = &stream;
+    match Read::read(&mut r, &mut buf) {
+        Ok(n) if n > 0 => String::from_utf8_lossy(&buf[..n]).contains(" 200 "),
+        _ => false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client connection handling
+// ---------------------------------------------------------------------------
+
+/// Where one request goes.
+enum Target {
+    /// Model-scoped: proxy to the ring owner (with failover).
+    Model(String),
+    /// Fan-out listing (`GET /v1/models`).
+    FleetModels,
+    /// Fan-out health (`GET /healthz`).
+    FleetHealth,
+    /// Router counters (`GET /stats`).
+    FleetStats,
+    /// A legacy unscoped route the router cannot serve (no default
+    /// model).
+    Bad(&'static str),
+    NotFound,
+}
+
+fn classify(req: &HttpRequest) -> Target {
+    let p = req.path.as_str();
+    if req.method == "GET" {
+        if p == "/healthz" {
+            return Target::FleetHealth;
+        }
+        if p == "/stats" {
+            return Target::FleetStats;
+        }
+        if p == "/v1/models" || p == "/v1/models/" {
+            return Target::FleetModels;
+        }
+    }
+    if let Some(rest) = p.strip_prefix("/v1/models/") {
+        let name = rest.split('/').next().unwrap_or("");
+        if !name.is_empty() {
+            return Target::Model(name.to_string());
+        }
+        return Target::NotFound;
+    }
+    if matches!(
+        p,
+        "/predict" | "/predict-batch" | "/reload" | "/models" | "/stats"
+    ) {
+        return Target::Bad(
+            "the router has no default model; use the routed /v1/models/{name}/... endpoints",
+        );
+    }
+    Target::NotFound
+}
+
+/// Whether the request mutates serving state (bearer-guarded when the
+/// router has a token).
+fn is_mutation(req: &HttpRequest) -> bool {
+    if req.method != "POST" {
+        return false;
+    }
+    match req.path.strip_prefix("/v1/models/") {
+        Some(rest) => matches!(rest.split_once('/'), Some((_, "reload")) | Some((_, "evict"))),
+        None => false,
+    }
+}
+
+fn handle_router_connection(stream: TcpStream, state: &RouterState) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_nodelay(true);
+    let mut conn = ConnReader::new(&stream);
+    let mut served = 0usize;
+    let mut dirty_close = false;
+    loop {
+        if served == 1 {
+            let _ = stream.set_read_timeout(Some(KEEPALIVE_IDLE));
+        }
+        if !conn.has_buffered() && state.draining.load(Ordering::SeqCst) {
+            // Everything received so far is answered; close instead of
+            // idling on keep-alive. Requests already buffered (an
+            // in-flight pipeline) are still served below — a drain
+            // finishes work, it never drops it.
+            dirty_close = true;
+            break;
+        }
+        let req = match read_request(&mut conn) {
+            Ok(req) => req,
+            Err(msg) => {
+                if msg != "empty request" {
+                    write_response(&stream, "400 Bad Request", JSON, &error_json(msg), false);
+                    dirty_close = true;
+                }
+                break;
+            }
+        };
+        served += 1;
+        // During a drain, requests already pipelined behind this one are
+        // still served; the connection closes with the last buffered one.
+        let draining = state.draining.load(Ordering::SeqCst);
+        let keep = req.keep_alive
+            && served < MAX_REQUESTS_PER_CONN
+            && (!draining || conn.has_buffered());
+        if !respond(state, &stream, &req, keep) {
+            break;
+        }
+    }
+    // Same RST-avoidance as the backend server: never close with unread
+    // client bytes without a half-close drain.
+    if dirty_close || conn.has_buffered() {
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+        let mut sink = [0u8; 4096];
+        let mut r = &stream;
+        let deadline = Instant::now() + Duration::from_millis(250);
+        while Instant::now() < deadline {
+            match Read::read(&mut r, &mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+    }
+}
+
+/// Answer one request; returns whether the client connection stays open.
+fn respond(state: &RouterState, client: &TcpStream, req: &HttpRequest, keep: bool) -> bool {
+    match classify(req) {
+        Target::Model(name) => {
+            if is_mutation(req) {
+                if let Some((status, ct, body)) =
+                    bearer_auth_failure(state.auth_token.as_deref(), req)
+                {
+                    write_response(client, status, ct, &body, keep);
+                    return keep;
+                }
+            }
+            proxy_model(state, client, req, &name, keep)
+        }
+        Target::FleetModels => finish(client, fleet_models(state), keep),
+        Target::FleetHealth => finish(client, fleet_health(state), keep),
+        Target::FleetStats => finish(client, fleet_stats(state), keep),
+        Target::Bad(msg) => finish(client, ("400 Bad Request", JSON, error_json(msg)), keep),
+        Target::NotFound => finish(
+            client,
+            ("404 Not Found", JSON, error_json("no such endpoint")),
+            keep,
+        ),
+    }
+}
+
+fn finish(client: &TcpStream, resp: Response, keep: bool) -> bool {
+    let (status, ct, body) = resp;
+    write_response(client, status, ct, &body, keep);
+    keep
+}
+
+// ---------------------------------------------------------------------------
+// The proxy path
+// ---------------------------------------------------------------------------
+
+/// A parsed backend response head, ready to relay.
+struct ProxyHead {
+    code: u16,
+    /// The raw status line (no terminator).
+    status_line: String,
+    /// Header lines to relay verbatim (no terminators; `Connection`
+    /// excluded — the router speaks for itself there).
+    headers: Vec<String>,
+    content_len: usize,
+    chunked: bool,
+    /// Whether the *backend* connection survives this exchange.
+    keep_alive: bool,
+}
+
+fn io_err(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+}
+
+fn read_proxy_head(reader: &mut BufReader<&TcpStream>) -> std::io::Result<ProxyHead> {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let code: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| io_err("bad backend status line"))?;
+    let mut head = ProxyHead {
+        code,
+        status_line: status_line.trim_end().to_string(),
+        headers: Vec::with_capacity(4),
+        content_len: 0,
+        chunked: false,
+        keep_alive: true,
+    };
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                head.content_len = v.trim().parse().map_err(|_| io_err("bad content-length"))?;
+            } else if k.eq_ignore_ascii_case("transfer-encoding") {
+                head.chunked = !v.trim().eq_ignore_ascii_case("identity");
+            } else if k.eq_ignore_ascii_case("connection") {
+                head.keep_alive = !v.trim().eq_ignore_ascii_case("close");
+                continue; // not relayed
+            }
+        }
+        head.headers.push(t.to_string());
+    }
+    Ok(head)
+}
+
+/// Serialize the client's request onto a backend connection, forwarding
+/// the router token (or, without one, the client's own `Authorization`).
+fn write_proxy_request(
+    stream: &TcpStream,
+    req: &HttpRequest,
+    token: Option<&str>,
+) -> std::io::Result<()> {
+    let target = if req.query.is_empty() {
+        req.path.clone()
+    } else {
+        format!("{}?{}", req.path, req.query)
+    };
+    let auth = match token {
+        Some(t) => format!("Authorization: Bearer {t}\r\n"),
+        None => req
+            .authorization
+            .as_ref()
+            .map(|v| format!("Authorization: {v}\r\n"))
+            .unwrap_or_default(),
+    };
+    let mut w = stream;
+    write!(
+        w,
+        "{} {target} HTTP/1.1\r\nHost: backend\r\nContent-Length: {}\r\n{auth}Connection: keep-alive\r\n\r\n{}",
+        req.method,
+        req.body.len(),
+        req.body
+    )?;
+    w.flush()
+}
+
+/// Copy exactly `n` body bytes backend → client in bounded pieces.
+fn copy_n(
+    reader: &mut BufReader<&TcpStream>,
+    client: &TcpStream,
+    mut n: usize,
+) -> std::io::Result<()> {
+    let mut buf = [0u8; COPY_BUF];
+    let mut w = client;
+    while n > 0 {
+        let take = n.min(COPY_BUF);
+        reader.read_exact(&mut buf[..take])?;
+        w.write_all(&buf[..take])?;
+        n -= take;
+    }
+    Ok(())
+}
+
+/// Relay a chunked body verbatim, chunk by chunk (sizes re-emitted as
+/// received), so a streaming predict-batch passes through without ever
+/// being buffered whole.
+fn relay_chunked(reader: &mut BufReader<&TcpStream>, client: &TcpStream) -> std::io::Result<()> {
+    loop {
+        let mut size_line = String::new();
+        if reader.read_line(&mut size_line)? == 0 {
+            return Err(io_err("eof inside chunked body"));
+        }
+        let size =
+            usize::from_str_radix(size_line.trim().split(';').next().unwrap_or("").trim(), 16)
+                .map_err(|_| io_err("bad chunk size"))?;
+        let mut w = client;
+        w.write_all(size_line.as_bytes())?;
+        if size == 0 {
+            let mut end = String::new();
+            reader.read_line(&mut end)?;
+            w.write_all(end.as_bytes())?;
+            w.flush()?;
+            return Ok(());
+        }
+        copy_n(reader, client, size)?;
+        let mut crlf = [0u8; 2];
+        reader.read_exact(&mut crlf)?;
+        w.write_all(&crlf)?;
+    }
+}
+
+/// Relay one backend response (head + body, either framing) to the
+/// client, with the router's own `Connection` header.
+fn relay_response(
+    reader: &mut BufReader<&TcpStream>,
+    client: &TcpStream,
+    head: &ProxyHead,
+    client_keep: bool,
+) -> std::io::Result<()> {
+    let mut out = Vec::with_capacity(256);
+    let _ = write!(out, "{}\r\n", head.status_line);
+    for h in &head.headers {
+        let _ = write!(out, "{h}\r\n");
+    }
+    let conn = if client_keep { "keep-alive" } else { "close" };
+    let _ = write!(out, "Connection: {conn}\r\n\r\n");
+    {
+        let mut w = client;
+        w.write_all(&out)?;
+    }
+    if head.chunked {
+        relay_chunked(reader, client)?;
+    } else {
+        copy_n(reader, client, head.content_len)?;
+    }
+    let mut w = client;
+    w.flush()
+}
+
+/// Absorb a small non-chunked body (a backend `503` being retried) so
+/// the connection can be reused; `None` means the connection must be
+/// dropped instead.
+fn read_small_body(reader: &mut BufReader<&TcpStream>, head: &ProxyHead) -> Option<Vec<u8>> {
+    if head.chunked || head.content_len > DISCARD_CAP {
+        return None;
+    }
+    let mut body = vec![0u8; head.content_len];
+    reader.read_exact(&mut body).ok()?;
+    Some(body)
+}
+
+/// Proxy one model-scoped request to the ring owner, failing over along
+/// the ring under the retry budget. Returns whether the client
+/// connection stays open.
+fn proxy_model(
+    state: &RouterState,
+    client: &TcpStream,
+    req: &HttpRequest,
+    name: &str,
+    keep: bool,
+) -> bool {
+    let order = state.ring.order(name);
+    let healthy: Vec<usize> = order
+        .iter()
+        .copied()
+        .filter(|&i| state.backends[i].healthy.load(Ordering::Relaxed))
+        .collect();
+    // When nobody is (known) healthy, try the full ring anyway: the
+    // health view may be stale and a refusal must come from evidence.
+    let candidates = if healthy.is_empty() { order } else { healthy };
+    let attempts = state.retry_budget + 1;
+    let mut last_refusal: Option<Vec<u8>> = None;
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            state.retries.fetch_add(1, Ordering::Relaxed);
+        }
+        let b = &state.backends[candidates[attempt % candidates.len()]];
+        let (stream, pooled) = match b.take_conn() {
+            Some(s) => (s, true),
+            None => match connect_backend(&b.addr(), state.proxy_timeout) {
+                Some(s) => (s, false),
+                None => {
+                    b.mark_down();
+                    continue;
+                }
+            },
+        };
+        if write_proxy_request(&stream, req, state.auth_token.as_deref()).is_err() {
+            // A stale pooled connection failing is no verdict on the
+            // backend; a fresh one failing is.
+            if pooled {
+                b.clear_pool();
+            } else {
+                b.mark_down();
+            }
+            continue;
+        }
+        let mut reader = BufReader::new(&stream);
+        let head = match read_proxy_head(&mut reader) {
+            Ok(h) => h,
+            Err(_) => {
+                if pooled {
+                    b.clear_pool();
+                } else {
+                    b.mark_down();
+                }
+                continue;
+            }
+        };
+        if head.code == 503 && attempt + 1 < attempts {
+            // The backend refused (capacity, open circuit, draining): a
+            // ring neighbor can lazily spawn the model, so spend a
+            // retry. Remember the refusal — it is the honest answer if
+            // every neighbor also refuses.
+            if let Some(body) = read_small_body(&mut reader, &head) {
+                if head.keep_alive {
+                    b.put_conn(stream);
+                }
+                last_refusal = Some(body);
+            }
+            continue;
+        }
+        match relay_response(&mut reader, client, &head, keep) {
+            Ok(()) => {
+                b.healthy.store(true, Ordering::Relaxed);
+                b.proxied.fetch_add(1, Ordering::Relaxed);
+                state.proxied.fetch_add(1, Ordering::Relaxed);
+                if head.keep_alive {
+                    b.put_conn(stream);
+                }
+                return keep;
+            }
+            // Mid-relay failure: the client may hold partial bytes, so
+            // a retry would corrupt the stream — close instead.
+            Err(_) => return false,
+        }
+    }
+    // Budget exhausted. Relay the last backend refusal when one was
+    // captured; otherwise every candidate was unreachable.
+    let body = match last_refusal {
+        Some(b) => String::from_utf8_lossy(&b).into_owned(),
+        None => error_json(&format!("no healthy backend for model '{name}'")),
+    };
+    let mut out = Vec::with_capacity(body.len() + 128);
+    append_response_extra(&mut out, "503 Service Unavailable", JSON, &body, keep, RETRY_AFTER);
+    let mut w = client;
+    let _ = w.write_all(&out);
+    let _ = w.flush();
+    keep
+}
+
+fn connect_backend(addr: &str, read_timeout: Duration) -> Option<TcpStream> {
+    let sa: SocketAddr = addr.parse().ok()?;
+    let stream = TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT).ok()?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(read_timeout)).ok();
+    Some(stream)
+}
+
+// ---------------------------------------------------------------------------
+// Fleet (fan-out) routes
+// ---------------------------------------------------------------------------
+
+/// Pull every `"name":"…"` out of a backend `/v1/models` document
+/// (registry names are validated identifiers, so no JSON escapes occur).
+fn scan_model_names(doc: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = doc;
+    while let Some(at) = rest.find("\"name\":\"") {
+        rest = &rest[at + 8..];
+        if let Some(end) = rest.find('"') {
+            let name = &rest[..end];
+            if !out.iter().any(|n| n == name) {
+                out.push(name.to_string());
+            }
+            rest = &rest[end..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// `GET /v1/models`: fan out to every backend and aggregate — `models`
+/// is the union of model names across the fleet, `per_backend` carries
+/// each backend's own listing verbatim.
+fn fleet_models(state: &RouterState) -> Response {
+    state.fanouts.fetch_add(1, Ordering::Relaxed);
+    let mut names: Vec<String> = Vec::new();
+    let mut per = Vec::with_capacity(state.backends.len());
+    for (i, b) in state.backends.iter().enumerate() {
+        let addr = b.addr();
+        let doc = addr
+            .parse::<SocketAddr>()
+            .ok()
+            .and_then(|sa| {
+                http_request_with_auth(&sa, "GET", "/v1/models", "", state.auth_token.as_deref())
+                    .ok()
+            })
+            .filter(|(code, _)| *code == 200);
+        match doc {
+            Some((_, body)) => {
+                for n in scan_model_names(&body) {
+                    if !names.contains(&n) {
+                        names.push(n);
+                    }
+                }
+                per.push(format!(
+                    "{{\"backend\":{i},\"addr\":\"{}\",\"reachable\":true,\"listing\":{body}}}",
+                    json_escape(&addr)
+                ));
+            }
+            None => per.push(format!(
+                "{{\"backend\":{i},\"addr\":\"{}\",\"reachable\":false}}",
+                json_escape(&addr)
+            )),
+        }
+    }
+    names.sort();
+    let quoted: Vec<String> = names
+        .iter()
+        .map(|n| format!("\"{}\"", json_escape(n)))
+        .collect();
+    (
+        "200 OK",
+        JSON,
+        format!(
+            "{{\"router\":true,\"backends\":{},\"models\":[{}],\"per_backend\":[{}]}}",
+            state.backends.len(),
+            quoted.join(","),
+            per.join(",")
+        ),
+    )
+}
+
+/// `GET /healthz`: probe the fleet now. `ok` (200) while at least one
+/// backend is up — a router with a live shard keeps serving what it can
+/// — `degraded` (503) when none are, `draining` (503) during a drain.
+/// Per-backend lines follow the verdict either way.
+fn fleet_health(state: &RouterState) -> Response {
+    const PLAIN: &str = "text/plain";
+    if state.draining.load(Ordering::SeqCst) {
+        return ("503 Service Unavailable", PLAIN, "draining\n".to_string());
+    }
+    let up = check_round(state);
+    let mut body = String::from(if up == 0 { "degraded\n" } else { "ok\n" });
+    for (i, b) in state.backends.iter().enumerate() {
+        let status = if b.healthy.load(Ordering::Relaxed) {
+            "up"
+        } else {
+            "down"
+        };
+        body.push_str(&format!("backend {i} {}: {status}\n", b.addr()));
+    }
+    if up == 0 {
+        ("503 Service Unavailable", PLAIN, body)
+    } else {
+        ("200 OK", PLAIN, body)
+    }
+}
+
+/// `GET /stats`: the router's own counters plus per-backend health and
+/// traffic.
+fn fleet_stats(state: &RouterState) -> Response {
+    let per: Vec<String> = state
+        .backends
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            format!(
+                "{{\"index\":{i},\"addr\":\"{}\",\"healthy\":{},\"proxied\":{},\"errors\":{}}}",
+                json_escape(&b.addr()),
+                b.healthy.load(Ordering::Relaxed),
+                b.proxied.load(Ordering::Relaxed),
+                b.errors.load(Ordering::Relaxed)
+            )
+        })
+        .collect();
+    (
+        "200 OK",
+        JSON,
+        format!(
+            "{{\"router\":{{\"proxied\":{},\"retries\":{},\"fanouts\":{}}},\"backends\":[{}]}}",
+            state.proxied.load(Ordering::Relaxed),
+            state.retries.load(Ordering::Relaxed),
+            state.fanouts.load(Ordering::Relaxed),
+            per.join(",")
+        ),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn ring_placement_is_stable_and_covers_backends() {
+        let a = Ring::new(4);
+        let b = Ring::new(4);
+        let mut hit = [0usize; 4];
+        for k in 0..200 {
+            let key = format!("model-{k}");
+            let owner = a.primary(&key);
+            assert_eq!(owner, b.primary(&key), "placement must be deterministic");
+            hit[owner] += 1;
+        }
+        for (i, n) in hit.iter().enumerate() {
+            assert!(*n > 0, "backend {i} owns no keys out of 200");
+        }
+    }
+
+    #[test]
+    fn ring_order_lists_every_backend_once() {
+        let ring = Ring::new(5);
+        for k in 0..20 {
+            let order = ring.order(&format!("m{k}"));
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(order.len(), 5, "{order:?}");
+            assert_eq!(sorted.len(), 5, "{order:?}");
+        }
+    }
+
+    #[test]
+    fn ring_growth_remaps_only_a_fraction_of_keys() {
+        let three = Ring::new(3);
+        let four = Ring::new(4);
+        let total = 300;
+        let moved = (0..total)
+            .filter(|k| {
+                let key = format!("model-{k}");
+                three.primary(&key) != four.primary(&key)
+            })
+            .count();
+        // Consistent hashing: adding a backend remaps roughly 1/4 of
+        // keys, not all of them. Allow slack, but far below a rehash.
+        assert!(moved < total / 2, "{moved}/{total} keys moved on 3->4");
+    }
+
+    #[test]
+    fn empty_ring_owns_nothing() {
+        let ring = Ring::new(0);
+        assert!(ring.order("m").is_empty());
+    }
+
+    fn req(method: &str, path: &str) -> HttpRequest {
+        HttpRequest {
+            method: method.to_string(),
+            path: path.to_string(),
+            query: String::new(),
+            body: String::new(),
+            keep_alive: true,
+            authorization: None,
+        }
+    }
+
+    #[test]
+    fn classify_splits_model_fleet_and_legacy_routes() {
+        assert!(matches!(
+            classify(&req("POST", "/v1/models/m/predict")),
+            Target::Model(n) if n == "m"
+        ));
+        assert!(matches!(
+            classify(&req("GET", "/v1/models/m/stats")),
+            Target::Model(n) if n == "m"
+        ));
+        assert!(matches!(
+            classify(&req("GET", "/v1/models")),
+            Target::FleetModels
+        ));
+        assert!(matches!(classify(&req("GET", "/healthz")), Target::FleetHealth));
+        assert!(matches!(classify(&req("GET", "/stats")), Target::FleetStats));
+        assert!(matches!(classify(&req("POST", "/predict")), Target::Bad(_)));
+        assert!(matches!(classify(&req("POST", "/reload")), Target::Bad(_)));
+        assert!(matches!(classify(&req("GET", "/nope")), Target::NotFound));
+    }
+
+    #[test]
+    fn mutation_detection_guards_reload_and_evict_only() {
+        assert!(is_mutation(&req("POST", "/v1/models/m/reload")));
+        assert!(is_mutation(&req("POST", "/v1/models/m/evict")));
+        assert!(!is_mutation(&req("POST", "/v1/models/m/predict")));
+        assert!(!is_mutation(&req("GET", "/v1/models/m/stats")));
+        assert!(!is_mutation(&req("GET", "/v1/models")));
+    }
+
+    #[test]
+    fn model_name_scan_finds_the_union_inputs() {
+        let doc = r#"{"models":[{"name":"a","loaded":true},{"name":"b","loaded":false},{"name":"a"}]}"#;
+        assert_eq!(scan_model_names(doc), vec!["a", "b"]);
+        assert!(scan_model_names("{}").is_empty());
+    }
+}

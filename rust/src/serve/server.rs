@@ -44,6 +44,20 @@
 //! | GET    | `/v1/models`                      | —                   | per-model stats + fleet aggregate |
 //! | GET    | `/healthz`                        | —                   | `ok` / `draining` / `degraded` |
 //!
+//! Mutating endpoints — the reload/evict actions and the legacy
+//! `/reload` — can be guarded by a bearer token
+//! ([`ServeState::set_auth_token`]): once armed, requests without a
+//! matching `Authorization: Bearer` header answer `401` and touch
+//! nothing. Reads and predicts stay open (the router tier health-checks
+//! and load-balances without credentials).
+//!
+//! Predict-batch answers larger than [`STREAM_THRESHOLD`] stream with
+//! `Transfer-Encoding: chunked` instead of materializing one giant
+//! `Content-Length` body: the decision array is framed into ~32 KiB
+//! chunks and flushed incrementally, bounding the per-connection
+//! response buffer no matter how many rows the batch carried. The
+//! bundled client ([`http_request`] and friends) decodes both framings.
+//!
 //! **Fault tolerance**: every server-side ticket wait is bounded by the
 //! per-request deadline ([`ServeState::set_request_timeout`]); an expired
 //! request is answered `503` with a `Retry-After` header and its ticket
@@ -107,6 +121,13 @@ pub const PIPELINE_BUF: usize = 64 * 1024;
 /// requests are waiting, up to this many bytes.
 const MAX_COALESCED: usize = 64 * 1024;
 
+/// Predict-batch responses whose decision array exceeds this many bytes
+/// stream with `Transfer-Encoding: chunked` (framed into pieces of about
+/// this size) instead of materializing one `Content-Length` body —
+/// bounding the response buffer for arbitrarily large batches. Smaller
+/// answers keep the legacy `Content-Length` framing.
+pub const STREAM_THRESHOLD: usize = 32 * 1024;
+
 /// Maximum concurrent connection threads; excess connections are
 /// answered 503 by the accept loop (load shedding).
 const MAX_CONNS: usize = 256;
@@ -135,6 +156,9 @@ pub struct ServeState {
     /// indefinitely, the pre-deadline behavior embedders get by
     /// default).
     request_timeout_ms: AtomicU64,
+    /// Bearer token guarding the mutating endpoints (reload/evict);
+    /// `None` (the default) leaves them open.
+    auth_token: Mutex<Option<String>>,
 }
 
 impl ServeState {
@@ -145,7 +169,23 @@ impl ServeState {
             default_model: Mutex::new(default_model.into()),
             draining: AtomicBool::new(false),
             request_timeout_ms: AtomicU64::new(0),
+            auth_token: Mutex::new(None),
         }
+    }
+
+    /// Require `Authorization: Bearer <token>` on the mutating endpoints
+    /// (routed reload/evict and the legacy `/reload`). `None` disarms
+    /// the guard. Reads and predicts are never guarded.
+    pub fn set_auth_token(&self, token: Option<String>) {
+        *self.auth_token.lock().unwrap_or_else(|e| e.into_inner()) = token;
+    }
+
+    /// The armed bearer token, if any.
+    pub fn auth_token(&self) -> Option<String> {
+        self.auth_token
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
     }
 
     /// Name the legacy routes currently resolve to.
@@ -337,15 +377,18 @@ impl Drop for Server {
 // Request handling
 // ---------------------------------------------------------------------------
 
-struct HttpRequest {
-    method: String,
-    path: String,
-    query: String,
-    body: String,
+pub(crate) struct HttpRequest {
+    pub(crate) method: String,
+    pub(crate) path: String,
+    pub(crate) query: String,
+    pub(crate) body: String,
     /// Whether the connection should stay open after this exchange
     /// (HTTP/1.1 default, overridden by a `Connection` header; HTTP/1.0
     /// defaults to close).
-    keep_alive: bool,
+    pub(crate) keep_alive: bool,
+    /// Verbatim `Authorization` header value, when the client sent one
+    /// (checked by [`bearer_auth_failure`] on mutating endpoints).
+    pub(crate) authorization: Option<String>,
 }
 
 /// Persistent per-connection buffered reader. Pipelined (back-to-back)
@@ -354,12 +397,12 @@ struct HttpRequest {
 /// a request head or body split across TCP segments — are reassembled by
 /// reading until the piece is complete. The buffer capacity
 /// ([`PIPELINE_BUF`]) bounds the pipelined bytes held per connection.
-struct ConnReader<'a> {
+pub(crate) struct ConnReader<'a> {
     inner: BufReader<&'a TcpStream>,
 }
 
 impl<'a> ConnReader<'a> {
-    fn new(stream: &'a TcpStream) -> ConnReader<'a> {
+    pub(crate) fn new(stream: &'a TcpStream) -> ConnReader<'a> {
         ConnReader {
             inner: BufReader::with_capacity(PIPELINE_BUF, stream),
         }
@@ -367,7 +410,7 @@ impl<'a> ConnReader<'a> {
 
     /// Whether bytes beyond the last parsed request are already buffered
     /// (i.e. the next request was pipelined).
-    fn has_buffered(&self) -> bool {
+    pub(crate) fn has_buffered(&self) -> bool {
         !self.inner.buffer().is_empty()
     }
 
@@ -377,7 +420,7 @@ impl<'a> ConnReader<'a> {
     /// request (missing head bytes *or* missing body bytes) must not hold
     /// earlier responses hostage while the server blocks reading its
     /// remainder from a client that may be waiting for those responses.
-    fn has_buffered_request(&self) -> bool {
+    pub(crate) fn has_buffered_request(&self) -> bool {
         let b = self.inner.buffer();
         let Some(head_end) = find_head_end(b) else {
             return false;
@@ -488,7 +531,9 @@ fn buffered_content_length(head: &[u8]) -> usize {
     0
 }
 
-fn read_request(conn: &mut ConnReader) -> std::result::Result<HttpRequest, &'static str> {
+pub(crate) fn read_request(
+    conn: &mut ConnReader,
+) -> std::result::Result<HttpRequest, &'static str> {
     let mut budget = MAX_HEAD;
     let mut line = String::new();
     match conn.read_line_capped(budget, &mut line, true)? {
@@ -506,6 +551,7 @@ fn read_request(conn: &mut ConnReader) -> std::result::Result<HttpRequest, &'sta
     let mut keep_alive = !version.eq_ignore_ascii_case("HTTP/1.0");
     let mut content_len = 0usize;
     let mut chunked = false;
+    let mut authorization = None;
     loop {
         let mut h = String::new();
         // EOF inside the headers is never a clean close — the request
@@ -521,6 +567,8 @@ fn read_request(conn: &mut ConnReader) -> std::result::Result<HttpRequest, &'sta
                 content_len = v.trim().parse().map_err(|_| "bad content-length")?;
             } else if k.eq_ignore_ascii_case("transfer-encoding") {
                 chunked = !v.trim().eq_ignore_ascii_case("identity");
+            } else if k.eq_ignore_ascii_case("authorization") {
+                authorization = Some(v.trim().to_string());
             } else if k.eq_ignore_ascii_case("connection") {
                 let v = v.trim();
                 if v.eq_ignore_ascii_case("close") {
@@ -547,11 +595,12 @@ fn read_request(conn: &mut ConnReader) -> std::result::Result<HttpRequest, &'sta
         query,
         body,
         keep_alive,
+        authorization,
     })
 }
 
 /// Append one serialized response to a coalescing buffer.
-fn append_response(
+pub(crate) fn append_response(
     out: &mut Vec<u8>,
     status: &str,
     content_type: &str,
@@ -563,7 +612,7 @@ fn append_response(
 
 /// [`append_response`] with extra header lines (each `\r\n`-terminated,
 /// e.g. `"Retry-After: 1\r\n"`).
-fn append_response_extra(
+pub(crate) fn append_response_extra(
     out: &mut Vec<u8>,
     status: &str,
     content_type: &str,
@@ -580,7 +629,7 @@ fn append_response_extra(
 }
 
 /// Write everything coalesced so far in one syscall.
-fn flush_responses(stream: &TcpStream, out: &mut Vec<u8>) {
+pub(crate) fn flush_responses(stream: &TcpStream, out: &mut Vec<u8>) {
     if out.is_empty() {
         return;
     }
@@ -590,7 +639,7 @@ fn flush_responses(stream: &TcpStream, out: &mut Vec<u8>) {
     out.clear();
 }
 
-fn write_response(
+pub(crate) fn write_response(
     stream: &TcpStream,
     status: &str,
     content_type: &str,
@@ -613,6 +662,18 @@ enum Pending {
     /// size-triggered flushes instead of paying the deadline wait per
     /// request.
     Predict(Ticket, bool),
+    /// A large predict-batch answer: `200 OK` JSON streamed with chunked
+    /// transfer encoding, one chunk per pre-framed piece (the pieces
+    /// concatenate to the full `{"decisions":[...]}` document).
+    Stream(Vec<String>, bool),
+}
+
+/// A routed answer that is either a plain response or a chunked stream.
+enum Reply {
+    Full(Response),
+    /// `200 OK` JSON whose body is streamed chunk-by-chunk; the pieces
+    /// concatenate to the full document.
+    Stream(Vec<String>),
 }
 
 /// How one awaited predict ticket resolved.
@@ -651,7 +712,36 @@ fn deadline_json() -> String {
 }
 
 /// `Retry-After` header line suggesting the client back off briefly.
-const RETRY_AFTER: &str = "Retry-After: 1\r\n";
+pub(crate) const RETRY_AFTER: &str = "Retry-After: 1\r\n";
+
+/// Head of a chunked-transfer response (no `Content-Length`; the body
+/// follows as chunks via [`append_chunk`] + [`append_chunk_end`]).
+pub(crate) fn append_chunked_head(
+    out: &mut Vec<u8>,
+    status: &str,
+    content_type: &str,
+    keep_alive: bool,
+) {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let _ = write!(
+        out,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: {conn}\r\n\r\n"
+    );
+}
+
+/// One chunk: hex size line, payload, CRLF. Empty pieces are skipped —
+/// a zero-size chunk would terminate the body early.
+pub(crate) fn append_chunk(out: &mut Vec<u8>, piece: &str) {
+    if piece.is_empty() {
+        return;
+    }
+    let _ = write!(out, "{:x}\r\n{piece}\r\n", piece.len());
+}
+
+/// The terminating zero-size chunk (no trailers).
+pub(crate) fn append_chunk_end(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"0\r\n\r\n");
+}
 
 /// Materialize every pending response, in request order, into `out`,
 /// flushing incrementally whenever the coalescing buffer exceeds
@@ -686,6 +776,16 @@ fn resolve_pending(
                     RETRY_AFTER,
                 ),
             },
+            Pending::Stream(pieces, keep) => {
+                append_chunked_head(out, "200 OK", JSON, keep);
+                for p in &pieces {
+                    append_chunk(out, p);
+                    if out.len() >= MAX_COALESCED {
+                        flush_responses(stream, out);
+                    }
+                }
+                append_chunk_end(out);
+            }
         }
         if out.len() >= MAX_COALESCED {
             flush_responses(stream, out);
@@ -742,7 +842,11 @@ fn route_pipelined(state: &ServeState, req: &HttpRequest, keep: bool) -> Pending
     match dispatch_predict(state, req) {
         Some(Ok(t)) => Pending::Predict(t, keep),
         Some(Err(resp)) => Pending::Ready(resp, keep),
-        None => Pending::Ready(route(state, req), keep),
+        None => match dispatch_predict_batch(state, req) {
+            Some(Reply::Full(resp)) => Pending::Ready(resp, keep),
+            Some(Reply::Stream(pieces)) => Pending::Stream(pieces, keep),
+            None => Pending::Ready(route(state, req), keep),
+        },
     }
 }
 
@@ -867,7 +971,7 @@ fn handle_connection(stream: TcpStream, state: &ServeState) {
     }
 }
 
-fn error_json(msg: &str) -> String {
+pub(crate) fn error_json(msg: &str) -> String {
     format!("{{\"error\":\"{}\"}}", json_escape(msg))
 }
 
@@ -876,7 +980,7 @@ fn error_json(msg: &str) -> String {
 /// on Linux, so after writing we half-close and briefly drain what the
 /// client already sent (bounded: small sink, short timeout, so the
 /// accept loop self-throttles rather than stalls under a flood).
-fn refuse_connection(stream: &TcpStream, why: &str) {
+pub(crate) fn refuse_connection(stream: &TcpStream, why: &str) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
     write_response(
         stream,
@@ -971,9 +1075,30 @@ fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
         .map(|(_, v)| v)
 }
 
-const JSON: &str = "application/json";
+pub(crate) const JSON: &str = "application/json";
 
-type Response = (&'static str, &'static str, String);
+pub(crate) type Response = (&'static str, &'static str, String);
+
+/// When the mutating endpoints are guarded (`token` is `Some`), the 401
+/// answered to a request without a matching `Authorization: Bearer`
+/// header; `None` when the request may proceed.
+pub(crate) fn bearer_auth_failure(token: Option<&str>, req: &HttpRequest) -> Option<Response> {
+    let token = token?;
+    let sent = req
+        .authorization
+        .as_deref()
+        .and_then(|v| v.strip_prefix("Bearer "))
+        .map(str::trim);
+    if sent == Some(token) {
+        None
+    } else {
+        Some((
+            "401 Unauthorized",
+            JSON,
+            error_json("missing or invalid bearer token"),
+        ))
+    }
+}
 
 /// One model's counters, spliced with its serving identity.
 fn model_stats_json(me: &ManagedEngine) -> String {
@@ -990,7 +1115,7 @@ fn model_stats_json(me: &ManagedEngine) -> String {
     j
 }
 
-fn predict_batch_response(me: &ManagedEngine, body: &str, timeout: Option<Duration>) -> Response {
+fn predict_batch_response(me: &ManagedEngine, body: &str, timeout: Option<Duration>) -> Reply {
     let mut rows = Vec::new();
     for line in body.lines() {
         if line.trim().is_empty() {
@@ -998,11 +1123,11 @@ fn predict_batch_response(me: &ManagedEngine, body: &str, timeout: Option<Durati
         }
         match parse_vector(line) {
             Ok(x) => rows.push(x),
-            Err(e) => return ("400 Bad Request", JSON, error_json(&e.to_string())),
+            Err(e) => return Reply::Full(("400 Bad Request", JSON, error_json(&e.to_string()))),
         }
     }
     if rows.is_empty() {
-        return ("400 Bad Request", JSON, error_json("empty batch"));
+        return Reply::Full(("400 Bad Request", JSON, error_json("empty batch")));
     }
     // Submit everything, then collect: lets the engine batch.
     let tickets: std::result::Result<Vec<_>, _> =
@@ -1010,23 +1135,90 @@ fn predict_batch_response(me: &ManagedEngine, body: &str, timeout: Option<Durati
     match tickets {
         Ok(ts) => {
             let mut out = Vec::with_capacity(ts.len());
+            let mut total = 0usize;
             for t in ts {
                 match await_ticket(t, timeout) {
-                    Waited::Done(d) => out.push(decision_json(&d)),
+                    Waited::Done(d) => {
+                        let j = decision_json(&d);
+                        total += j.len() + 1;
+                        out.push(j);
+                    }
                     Waited::Failed(msg) => {
-                        return ("500 Internal Server Error", JSON, error_json(&msg))
+                        return Reply::Full(("500 Internal Server Error", JSON, error_json(&msg)))
                     }
                     // The whole batch shares one response; if any row
                     // misses the deadline the request is expired (the
                     // remaining tickets are dropped unread — the engine
                     // still drains and counts them).
-                    Waited::Expired => return ("503 Service Unavailable", JSON, deadline_json()),
+                    Waited::Expired => {
+                        return Reply::Full(("503 Service Unavailable", JSON, deadline_json()))
+                    }
                 }
             }
-            ("200 OK", JSON, format!("{{\"decisions\":[{}]}}", out.join(",")))
+            if total <= STREAM_THRESHOLD {
+                return Reply::Full((
+                    "200 OK",
+                    JSON,
+                    format!("{{\"decisions\":[{}]}}", out.join(",")),
+                ));
+            }
+            // Big answer: pre-frame ~STREAM_THRESHOLD-sized pieces whose
+            // concatenation is the full document, streamed as chunks so
+            // the full body never materializes in one buffer.
+            let mut pieces = Vec::with_capacity(total / STREAM_THRESHOLD + 2);
+            let mut cur = String::with_capacity(STREAM_THRESHOLD + 256);
+            cur.push_str("{\"decisions\":[");
+            for (i, j) in out.iter().enumerate() {
+                if i > 0 {
+                    cur.push(',');
+                }
+                cur.push_str(j);
+                if cur.len() >= STREAM_THRESHOLD {
+                    pieces.push(std::mem::replace(
+                        &mut cur,
+                        String::with_capacity(STREAM_THRESHOLD + 256),
+                    ));
+                }
+            }
+            cur.push_str("]}");
+            pieces.push(cur);
+            Reply::Stream(pieces)
         }
-        Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
+        Err(e) => Reply::Full(("400 Bad Request", JSON, error_json(&e.to_string()))),
     }
+}
+
+/// Recognize the two predict-batch endpoints and compute their reply —
+/// the ONE place batch routing and status mapping live (mirrors
+/// [`dispatch_predict`]; the pipelined path streams large answers with
+/// chunked framing, the inline path concatenates them). `None` when the
+/// request is anything else.
+fn dispatch_predict_batch(state: &ServeState, req: &HttpRequest) -> Option<Reply> {
+    if req.method != "POST" {
+        return None;
+    }
+    let me = if req.path == "/predict-batch" {
+        match state.default_engine() {
+            Ok(me) => me,
+            Err(e) => {
+                return Some(Reply::Full((
+                    "503 Service Unavailable",
+                    JSON,
+                    error_json(&e.to_string()),
+                )))
+            }
+        }
+    } else {
+        let (name, action) = req.path.strip_prefix("/v1/models/")?.split_once('/')?;
+        if action != "predict-batch" || name.is_empty() {
+            return None;
+        }
+        match state.manager.engine(name) {
+            Ok(me) => me,
+            Err(e) => return Some(Reply::Full(load_failure(state, name, &e))),
+        }
+    };
+    Some(predict_batch_response(&me, &req.body, state.request_timeout()))
 }
 
 /// `/v1/models` listing: every registry and/or running model, per-model
@@ -1166,6 +1358,8 @@ fn route_v1_models(state: &ServeState, req: &HttpRequest, rest: &str) -> Respons
     if action == "evict" {
         return if req.method != "POST" {
             ("405 Method Not Allowed", JSON, error_json("use POST"))
+        } else if let Some(resp) = bearer_auth_failure(state.auth_token().as_deref(), req) {
+            resp
         } else if state.manager.evict(name) {
             (
                 "200 OK",
@@ -1179,6 +1373,8 @@ fn route_v1_models(state: &ServeState, req: &HttpRequest, rest: &str) -> Respons
     if action == "reload" {
         return if req.method != "POST" {
             ("405 Method Not Allowed", JSON, error_json("use POST"))
+        } else if let Some(resp) = bearer_auth_failure(state.auth_token().as_deref(), req) {
+            resp
         } else {
             match state.manager.reload(name) {
                 Ok(desc) => (
@@ -1196,17 +1392,11 @@ fn route_v1_models(state: &ServeState, req: &HttpRequest, rest: &str) -> Respons
     }
     // Only the predict actions may lazily spawn an engine; everything
     // else answers without loading anything (an unknown action or wrong
-    // method on a cold model name must not pull it into memory). Single
-    // predicts never reach here — `route` hands them to
-    // `dispatch_predict` before dispatching models routes.
+    // method on a cold model name must not pull it into memory). The
+    // predict actions never reach here — `route` hands them to
+    // `dispatch_predict`/`dispatch_predict_batch` before dispatching
+    // models routes.
     match (req.method.as_str(), action) {
-        ("POST", "predict-batch") => {
-            let me = match state.manager.engine(name) {
-                Ok(me) => me,
-                Err(e) => return load_failure(state, name, &e),
-            };
-            predict_batch_response(&me, &req.body, state.request_timeout())
-        }
         ("GET", "predict") | ("GET", "predict-batch") => {
             ("405 Method Not Allowed", JSON, error_json("use POST"))
         }
@@ -1227,6 +1417,15 @@ fn route(state: &ServeState, req: &HttpRequest) -> Response {
                 Waited::Expired => ("503 Service Unavailable", JSON, deadline_json()),
             },
             Err(resp) => resp,
+        };
+    }
+    // Predict-batch likewise lives in its dispatcher; the inline path
+    // concatenates a streamed reply back into one body (only the
+    // pipelined connection handler speaks chunked framing).
+    if let Some(reply) = dispatch_predict_batch(state, req) {
+        return match reply {
+            Reply::Full(resp) => resp,
+            Reply::Stream(pieces) => ("200 OK", JSON, pieces.concat()),
         };
     }
     if let Some(rest) = req.path.strip_prefix("/v1/models") {
@@ -1268,6 +1467,9 @@ fn route(state: &ServeState, req: &HttpRequest) -> Response {
             Err(e) => ("500 Internal Server Error", JSON, error_json(&e.to_string())),
         },
         ("POST", "/reload") => {
+            if let Some(resp) = bearer_auth_failure(state.auth_token().as_deref(), req) {
+                return resp;
+            }
             let name = query_param(&req.query, "model")
                 .map(str::to_string)
                 .unwrap_or_else(|| state.default_model());
@@ -1284,11 +1486,8 @@ fn route(state: &ServeState, req: &HttpRequest) -> Response {
                 Err(e) => ("400 Bad Request", JSON, error_json(&e.to_string())),
             }
         }
-        // Legacy POST /predict is handled by dispatch_predict above.
-        ("POST", "/predict-batch") => match state.default_engine() {
-            Ok(me) => predict_batch_response(&me, &req.body, state.request_timeout()),
-            Err(e) => ("503 Service Unavailable", JSON, error_json(&e.to_string())),
-        },
+        // Legacy POST /predict and /predict-batch are handled by the
+        // dispatchers above.
         ("GET", _) | ("POST", _) => ("404 Not Found", JSON, error_json("no such endpoint")),
         _ => (
             "405 Method Not Allowed",
@@ -1311,6 +1510,19 @@ pub fn http_request(
     target: &str,
     body: &str,
 ) -> Result<(u16, String)> {
+    http_request_with_auth(addr, method, target, body, None)
+}
+
+/// [`http_request`] carrying an `Authorization: Bearer` header when
+/// `bearer` is `Some` (for servers guarding mutating endpoints via
+/// [`ServeState::set_auth_token`]).
+pub fn http_request_with_auth(
+    addr: &SocketAddr,
+    method: &str,
+    target: &str,
+    body: &str,
+    bearer: Option<&str>,
+) -> Result<(u16, String)> {
     let stream = TcpStream::connect_timeout(addr, Duration::from_secs(5))
         .map_err(|e| Error::Serve(format!("connect {addr}: {e}")))?;
     stream.set_nodelay(true).ok();
@@ -1318,10 +1530,14 @@ pub fn http_request(
         .set_read_timeout(Some(Duration::from_secs(30)))
         .ok();
     {
+        let auth = match bearer {
+            Some(t) => format!("Authorization: Bearer {t}\r\n"),
+            None => String::new(),
+        };
         let mut w = &stream;
         write!(
             w,
-            "{method} {target} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            "{method} {target} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n{auth}Connection: close\r\n\r\n{body}",
             body.len()
         )?;
         w.flush()?;
@@ -1382,15 +1598,17 @@ pub fn http_pipeline_on(
         .collect()
 }
 
-/// Read one `Content-Length`-framed response off `stream`.
+/// Read one response off `stream` (either framing — see
+/// [`read_response_buffered`]).
 fn read_response(stream: &TcpStream) -> Result<(u16, String)> {
     let mut reader = BufReader::new(stream);
     read_response_buffered(&mut reader)
 }
 
-/// Read one `Content-Length`-framed response off an established reader
-/// (pipelined responses arrive back-to-back, so the reader must persist
-/// across calls).
+/// Read one response off an established reader (pipelined responses
+/// arrive back-to-back, so the reader must persist across calls).
+/// Decodes both framings the server emits: `Content-Length` bodies and
+/// `Transfer-Encoding: chunked` streams (large predict-batch answers).
 fn read_response_buffered(reader: &mut BufReader<&TcpStream>) -> Result<(u16, String)> {
     let mut status_line = String::new();
     reader.read_line(&mut status_line)?;
@@ -1400,6 +1618,7 @@ fn read_response_buffered(reader: &mut BufReader<&TcpStream>) -> Result<(u16, St
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| Error::Serve(format!("bad status line '{}'", status_line.trim())))?;
     let mut content_len = 0usize;
+    let mut chunked = false;
     loop {
         let mut h = String::new();
         reader.read_line(&mut h)?;
@@ -1410,8 +1629,34 @@ fn read_response_buffered(reader: &mut BufReader<&TcpStream>) -> Result<(u16, St
         if let Some((k, v)) = t.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
                 content_len = v.trim().parse().unwrap_or(0);
+            } else if k.eq_ignore_ascii_case("transfer-encoding") {
+                chunked = !v.trim().eq_ignore_ascii_case("identity");
             }
         }
+    }
+    if chunked {
+        let mut body = Vec::new();
+        loop {
+            let mut size_line = String::new();
+            reader.read_line(&mut size_line)?;
+            let size = usize::from_str_radix(
+                size_line.trim().split(';').next().unwrap_or("").trim(),
+                16,
+            )
+            .map_err(|_| Error::Serve(format!("bad chunk size '{}'", size_line.trim())))?;
+            if size == 0 {
+                // Trailing CRLF after the last-chunk marker (no trailers).
+                let mut end = String::new();
+                reader.read_line(&mut end)?;
+                break;
+            }
+            let at = body.len();
+            body.resize(at + size, 0);
+            reader.read_exact(&mut body[at..])?;
+            let mut crlf = [0u8; 2];
+            reader.read_exact(&mut crlf)?;
+        }
+        return Ok((code, String::from_utf8_lossy(&body).into_owned()));
     }
     let mut body = vec![0u8; content_len];
     reader.read_exact(&mut body)?;
@@ -1879,5 +2124,91 @@ mod tests {
         let (code, body) = http_request(&server.addr(), "GET", "/v1/models", "").unwrap();
         assert_eq!(code, 200);
         assert!(body.contains("\"circuits\":{}"), "{body}");
+    }
+
+    #[test]
+    fn auth_token_guards_mutating_endpoints() {
+        let (server, state) = start_server("auth");
+        let addr = server.addr();
+        state.set_auth_token(Some("sesame".to_string()));
+        // Reads and predicts stay open.
+        let (code, _) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+        assert_eq!(code, 200);
+        let (code, _) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+        assert_eq!(code, 200);
+        // Mutations without (or with a wrong) token: 401, nothing happens.
+        let (code, body) = http_request(&addr, "POST", "/v1/models/tiny2/reload", "").unwrap();
+        assert_eq!(code, 401, "{body}");
+        assert!(body.contains("bearer"), "{body}");
+        assert_eq!(state.manager.loaded_names(), vec!["tiny"]);
+        let (code, _) = http_request(&addr, "POST", "/v1/models/tiny/evict", "").unwrap();
+        assert_eq!(code, 401);
+        assert_eq!(state.manager.loaded_names(), vec!["tiny"]);
+        let (code, _) = http_request(&addr, "POST", "/reload?model=tiny2", "").unwrap();
+        assert_eq!(code, 401);
+        assert_eq!(state.default_model(), "tiny");
+        let (code, _) =
+            http_request_with_auth(&addr, "POST", "/v1/models/tiny2/reload", "", Some("wrong"))
+                .unwrap();
+        assert_eq!(code, 401);
+        // The right token unlocks every guarded endpoint.
+        let (code, body) =
+            http_request_with_auth(&addr, "POST", "/v1/models/tiny2/reload", "", Some("sesame"))
+                .unwrap();
+        assert_eq!(code, 200, "{body}");
+        assert_eq!(state.manager.loaded_names(), vec!["tiny", "tiny2"]);
+        let (code, _) =
+            http_request_with_auth(&addr, "POST", "/v1/models/tiny2/evict", "", Some("sesame"))
+                .unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(state.manager.loaded_names(), vec!["tiny"]);
+        // Disarming reopens the endpoints.
+        state.set_auth_token(None);
+        let (code, _) = http_request(&addr, "POST", "/v1/models/tiny2/reload", "").unwrap();
+        assert_eq!(code, 200);
+    }
+
+    #[test]
+    fn large_predict_batch_streams_chunked_and_decodes() {
+        let (server, _state) = start_server("chunked");
+        let addr = server.addr();
+        let n = 1200;
+        let mut batch = String::new();
+        for i in 0..n {
+            batch.push_str(if i % 2 == 0 { "0.9 0.1\n" } else { "-0.9 0.1\n" });
+        }
+        // The bundled client decodes the chunked framing transparently.
+        let (code, body) = http_request(&addr, "POST", "/predict-batch", &batch).unwrap();
+        assert_eq!(code, 200);
+        assert!(body.starts_with("{\"decisions\":["), "{}", &body[..64.min(body.len())]);
+        assert!(body.ends_with("]}"), "bad tail");
+        assert_eq!(body.matches("\"kind\":\"binary\"").count(), n, "row count");
+        // Raw read: the response must actually be chunked (no
+        // Content-Length), i.e. the server never materialized one body.
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        {
+            let mut w = &stream;
+            write!(
+                w,
+                "POST /predict-batch HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{batch}",
+                batch.len()
+            )
+            .unwrap();
+            w.flush().unwrap();
+        }
+        let mut raw = String::new();
+        let mut r = &stream;
+        Read::read_to_string(&mut r, &mut raw).unwrap();
+        let head_end = raw.find("\r\n\r\n").unwrap();
+        let head = &raw[..head_end];
+        assert!(head.contains("Transfer-Encoding: chunked"), "{head}");
+        assert!(!head.contains("Content-Length"), "{head}");
+        // A small batch keeps the legacy Content-Length framing.
+        let (code, body) = http_request(&addr, "POST", "/predict-batch", "1 0\n-1 0\n").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body.matches("\"kind\":\"binary\"").count(), 2, "{body}");
     }
 }

@@ -313,11 +313,16 @@ impl StatsSnapshot {
 pub struct FleetCapacity {
     /// Most engines kept resident (0 = unbounded).
     pub max_engines: usize,
+    /// Resident-byte budget across all loaded engines, in support-vector
+    /// bytes (0 = unbounded).
+    pub max_resident_bytes: u64,
     /// Idle window after which an unused engine is reaped (None = never).
     pub idle_evict_secs: Option<u64>,
     /// Engines currently resident.
     pub loaded: usize,
-    /// Engines evicted by the LRU capacity cap.
+    /// Support-vector bytes currently pinned by the loaded engines.
+    pub resident_bytes: u64,
+    /// Engines evicted by the LRU capacity cap (count or byte bound).
     pub capacity_evictions: u64,
     /// Engines evicted by the idle reaper.
     pub idle_reaped: u64,
@@ -331,9 +336,15 @@ impl FleetCapacity {
             None => "null".to_string(),
         };
         format!(
-            "{{\"max_engines\":{},\"idle_evict_secs\":{idle},\"loaded\":{},\
+            "{{\"max_engines\":{},\"max_resident_bytes\":{},\"idle_evict_secs\":{idle},\
+             \"loaded\":{},\"resident_bytes\":{},\
              \"capacity_evictions\":{},\"idle_reaped\":{}}}",
-            self.max_engines, self.loaded, self.capacity_evictions, self.idle_reaped,
+            self.max_engines,
+            self.max_resident_bytes,
+            self.loaded,
+            self.resident_bytes,
+            self.capacity_evictions,
+            self.idle_reaped,
         )
     }
 }
@@ -507,13 +518,17 @@ mod tests {
     fn fleet_capacity_json_shapes() {
         let c = FleetCapacity {
             max_engines: 4,
+            max_resident_bytes: 1 << 20,
             idle_evict_secs: Some(300),
             loaded: 2,
+            resident_bytes: 4096,
             capacity_evictions: 7,
             idle_reaped: 1,
         };
         let j = c.to_json();
         assert!(j.contains("\"max_engines\":4"), "{j}");
+        assert!(j.contains("\"max_resident_bytes\":1048576"), "{j}");
+        assert!(j.contains("\"resident_bytes\":4096"), "{j}");
         assert!(j.contains("\"idle_evict_secs\":300"), "{j}");
         assert!(j.contains("\"capacity_evictions\":7"), "{j}");
         let unbounded = FleetCapacity {

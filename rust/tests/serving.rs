@@ -11,6 +11,14 @@
 //! sleeps as synchronization, clocks injected, completion awaited on
 //! tickets or response framing.
 //!
+//! The **router conformance suite** (`router_*`) pins the fleet tier:
+//! consistent-hash placement stability across router instances and
+//! respawns, proxy bit-exactness against a single-process server,
+//! chunked-stream relaying, backend-down failover with bounded 503s,
+//! fleet fan-out aggregation, graceful router drain, and the
+//! `mlsvm route --spawn` CLI end to end (kill one backend → failover →
+//! respawn → recovery).
+//!
 //! The **chaos suite** at the end drives the same server with a
 //! deterministic [`FaultPlan`] armed: injected worker panics, corrupted
 //! registry reloads (circuit breaker), request deadlines against a
@@ -27,9 +35,9 @@ use mlsvm::mlsvm::params::MlsvmParams;
 use mlsvm::mlsvm::trainer::MlsvmTrainer;
 use mlsvm::modelsel::search::UdSearchConfig;
 use mlsvm::serve::{
-    http_pipeline_on, http_request, load_artifact, save_artifact, save_artifact_v1, Decision,
-    Engine, EngineConfig, EngineManager, FaultPlan, ManagerConfig, ModelArtifact, Registry,
-    ServeState, Server, MAX_PIPELINE_DEPTH,
+    http_pipeline_on, http_request, http_request_with_auth, load_artifact, save_artifact,
+    save_artifact_v1, Decision, Engine, EngineConfig, EngineManager, FaultPlan, ManagerConfig,
+    ModelArtifact, Registry, Ring, Router, RouterConfig, ServeState, Server, MAX_PIPELINE_DEPTH,
 };
 use mlsvm::svm::kernel::KernelKind;
 use mlsvm::svm::model::SvmModel;
@@ -570,6 +578,7 @@ fn start_axis_server(tag: &str) -> (Server, Arc<ServeState>) {
         ManagerConfig {
             max_engines: 0,
             idle_evict: None,
+            ..Default::default()
         },
     )
 }
@@ -849,6 +858,7 @@ fn conformance_fleet_capacity_counters_surface_in_the_listing() {
         ManagerConfig {
             max_engines: 1,
             idle_evict: Some(Duration::from_secs(600)),
+            ..Default::default()
         },
     );
     let addr = server.addr();
@@ -889,6 +899,7 @@ fn conformance_capacity_contention_over_http_stays_consistent() {
         ManagerConfig {
             max_engines: 1,
             idle_evict: None,
+            ..Default::default()
         },
     );
     let addr = server.addr();
@@ -925,6 +936,7 @@ fn conformance_reload_respawns_after_reap_and_touch_resets_idleness() {
         ManagerConfig {
             max_engines: 0,
             idle_evict: Some(Duration::from_secs(120)),
+            ..Default::default()
         },
     );
     let addr = server.addr();
@@ -977,6 +989,7 @@ fn start_axis_server_chaos(tag: &str, arm: impl FnOnce(&FaultPlan)) -> (Server, 
         ManagerConfig {
             max_engines: 0,
             idle_evict: None,
+            ..Default::default()
         },
     );
     let plan = Arc::new(FaultPlan::default());
@@ -1004,6 +1017,7 @@ fn start_parked_chaos_server(tag: &str) -> (Server, Arc<ServeState>) {
         ManagerConfig {
             max_engines: 0,
             idle_evict: None,
+            ..Default::default()
         },
     );
     let state = Arc::new(ServeState::new(manager, "tiny"));
@@ -1320,4 +1334,414 @@ fn chaos_serve_cli_sigterm_drains_in_flight_pipeline_and_exits_zero() {
     // The server drains and exits cleanly (0), not by abort.
     let status = child.wait().expect("wait on drained server");
     assert!(status.success(), "expected clean exit after SIGTERM, got {status}");
+}
+
+// ---------------------------------------------------------------------------
+// Router conformance suite: the fleet tier in front of backend servers.
+// ---------------------------------------------------------------------------
+
+/// A backend server over its own registry holding `names` (every one the
+/// ±x-axis model), lazily loadable.
+fn start_named_backend(tag: &str, names: &[&str]) -> (Server, Arc<ServeState>) {
+    let dir = tmp_dir(&format!("router_{tag}"));
+    let reg = Registry::open(&dir).unwrap();
+    for name in names {
+        reg.save(name, &ModelArtifact::Svm(axis_model(0.5))).unwrap();
+    }
+    let manager = EngineManager::open_with(
+        reg,
+        EngineConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 1,
+            queue_cap: 256,
+        },
+        ManagerConfig::default(),
+    );
+    let state = Arc::new(ServeState::new(manager, names[0]));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+    (server, state)
+}
+
+/// Router over `addrs` with a long probe interval: tests drive health
+/// state through the initial synchronous round and passive marking, so
+/// nothing depends on probe timing.
+fn start_router_over(addrs: Vec<String>, auth: Option<&str>) -> Router {
+    Router::start(
+        "127.0.0.1:0",
+        RouterConfig {
+            backends: addrs,
+            auth_token: auth.map(|s| s.to_string()),
+            retry_budget: 2,
+            proxy_timeout: Duration::from_secs(5),
+            health_interval: Duration::from_secs(60),
+        },
+    )
+    .unwrap()
+}
+
+/// Placement is a pure function of the backend count: two routers over
+/// the same fleet agree with each other and with the bare [`Ring`], and
+/// repointing a slot at a new address (a respawned backend) moves no
+/// models.
+#[test]
+fn router_placement_is_stable_across_instances_and_respawns() {
+    let (s1, _st1) = start_axis_server("router_place_a");
+    let (s2, _st2) = start_axis_server("router_place_b");
+    let addrs = vec![s1.addr().to_string(), s2.addr().to_string()];
+    let r1 = start_router_over(addrs.clone(), None);
+    let r2 = start_router_over(addrs, None);
+    let ring = Ring::new(2);
+    for k in 0..50 {
+        let name = format!("model-{k}");
+        assert_eq!(r1.place(&name), r2.place(&name), "{name}");
+        assert_eq!(r1.place(&name), ring.primary(&name), "{name}");
+    }
+    let owner = r1.place("tiny");
+    r1.set_backend_addr(owner, "127.0.0.1:1");
+    assert_eq!(r1.place("tiny"), owner, "a respawned port must not move the model");
+}
+
+/// The routed API is transparent: single requests and a pipelined burst
+/// through the router answer bit-identically to a single-process server
+/// over the same models.
+#[test]
+fn router_proxies_bit_identically_to_a_single_process_server() {
+    let (s1, _a) = start_axis_server("router_bitexact_a");
+    let (s2, _b) = start_axis_server("router_bitexact_b");
+    let (single, _c) = start_axis_server("router_bitexact_single");
+    let router = start_router_over(vec![s1.addr().to_string(), s2.addr().to_string()], None);
+    for (name, body) in [("tiny", "0.9,0.1"), ("tiny", "-0.9,0.1"), ("tiny2", "0.4,-0.2")] {
+        let target = format!("/v1/models/{name}/predict");
+        let (rc, routed) = http_request(&router.addr(), "POST", &target, body).unwrap();
+        let (sc, direct) = http_request(&single.addr(), "POST", &target, body).unwrap();
+        assert_eq!(rc, 200, "{routed}");
+        assert_eq!((rc, routed), (sc, direct), "router vs single for {name} {body}");
+    }
+    // One keep-alive connection, three pipelined requests: in order.
+    let stream = connect(&router.addr());
+    let reqs: Vec<(&str, &str, &str)> = vec![
+        ("POST", "/v1/models/tiny/predict", "0.9,0.1"),
+        ("POST", "/v1/models/tiny/predict", "-0.9,0.1"),
+        ("POST", "/v1/models/tiny2/predict", "0.9,0.1"),
+    ];
+    let answers = http_pipeline_on(&stream, &reqs).unwrap();
+    assert!(answers.iter().all(|(c, _)| *c == 200), "{answers:?}");
+    assert!(answers[0].1.contains("\"label\":1"), "{}", answers[0].1);
+    assert!(answers[1].1.contains("\"label\":-1"), "{}", answers[1].1);
+    assert!(answers[2].1.contains("\"label\":1"), "{}", answers[2].1);
+}
+
+/// A predict-batch big enough to stream leaves the backend chunked and
+/// relays through the router chunk by chunk — the decoded body is
+/// bit-identical to a direct single-process answer.
+#[test]
+fn router_relays_chunked_predict_batch_streams_bit_identically() {
+    let (s1, _a) = start_axis_server("router_stream_a");
+    let (s2, _b) = start_axis_server("router_stream_b");
+    let (single, _c) = start_axis_server("router_stream_single");
+    let router = start_router_over(vec![s1.addr().to_string(), s2.addr().to_string()], None);
+    let n = 900;
+    let lines: Vec<&str> = (0..n)
+        .map(|i| if i % 2 == 0 { "0.9,0.1" } else { "-0.9,0.1" })
+        .collect();
+    let body = lines.join("\n");
+    let target = "/v1/models/tiny/predict-batch";
+    let (rc, routed) = http_request(&router.addr(), "POST", target, &body).unwrap();
+    let (sc, direct) = http_request(&single.addr(), "POST", target, &body).unwrap();
+    assert_eq!((rc, sc), (200, 200), "{routed}");
+    assert!(
+        routed.len() > mlsvm::serve::STREAM_THRESHOLD,
+        "{} bytes: the fixture must be big enough to stream",
+        routed.len()
+    );
+    assert_eq!(routed.matches("\"label\":").count(), n);
+    assert_eq!(routed, direct, "router must relay the stream bit-identically");
+}
+
+/// Killing the owner fails over to the ring neighbor (which lazily
+/// serves the model from its own registry); killing every backend turns
+/// requests into prompt, bounded 503s — never a hang.
+#[test]
+fn router_failover_survives_dead_owner_and_bounds_refusal_when_all_down() {
+    let (mut s1, _a) = start_axis_server("router_failover_a");
+    let (mut s2, _b) = start_axis_server("router_failover_b");
+    let router = start_router_over(vec![s1.addr().to_string(), s2.addr().to_string()], None);
+    let owner = router.place("tiny");
+    if owner == 0 {
+        s1.shutdown();
+    } else {
+        s2.shutdown();
+    }
+    let (code, body) =
+        http_request(&router.addr(), "POST", "/v1/models/tiny/predict", "0.9,0.1").unwrap();
+    assert_eq!(code, 200, "failover must hide a dead owner: {body}");
+    assert!(body.contains("\"label\":1"), "{body}");
+    if owner == 0 {
+        s2.shutdown();
+    } else {
+        s1.shutdown();
+    }
+    let t0 = Instant::now();
+    let (code, body) =
+        http_request(&router.addr(), "POST", "/v1/models/tiny/predict", "0.9,0.1").unwrap();
+    assert_eq!(code, 503, "{body}");
+    assert!(body.contains("no healthy backend"), "{body}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "the retry budget must bound an all-down refusal, took {:?}",
+        t0.elapsed()
+    );
+}
+
+/// A backend that accepts connections and then never answers: the proxy
+/// timeout turns the stalled shard into a bounded 503, and the router
+/// itself stays responsive.
+#[test]
+fn router_backend_stall_yields_bounded_503_not_a_hang() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let stall_addr = listener.local_addr().unwrap().to_string();
+    let parked = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let parked_in_thread = Arc::clone(&parked);
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            match conn {
+                Ok(s) => parked_in_thread.lock().unwrap().push(s),
+                Err(_) => break,
+            }
+        }
+    });
+    let router = Router::start(
+        "127.0.0.1:0",
+        RouterConfig {
+            backends: vec![stall_addr],
+            retry_budget: 1,
+            proxy_timeout: Duration::from_millis(250),
+            health_interval: Duration::from_secs(60),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let t0 = Instant::now();
+    let (code, body) =
+        http_request(&router.addr(), "POST", "/v1/models/m/predict", "1,0").unwrap();
+    assert_eq!(code, 503, "{body}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "a stalled backend must time out promptly, took {:?}",
+        t0.elapsed()
+    );
+    let (code, stats) = http_request(&router.addr(), "GET", "/stats", "").unwrap();
+    assert_eq!(code, 200, "{stats}");
+    assert!(stats.contains("\"errors\":"), "{stats}");
+}
+
+/// `GET /v1/models` on the router is the union of every backend's
+/// listing; `/healthz` and `/stats` fan out, too.
+#[test]
+fn router_fleet_models_lists_the_union_across_backends() {
+    let (sa, _a) = start_named_backend("fleet_union_a", &["alpha", "shared"]);
+    let (sb, _b) = start_named_backend("fleet_union_b", &["beta", "gamma", "shared"]);
+    let router = start_router_over(vec![sa.addr().to_string(), sb.addr().to_string()], None);
+    let (code, body) = http_request(&router.addr(), "GET", "/v1/models", "").unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(
+        body.contains("\"models\":[\"alpha\",\"beta\",\"gamma\",\"shared\"]"),
+        "{body}"
+    );
+    assert!(body.contains("\"reachable\":true"), "{body}");
+    let (code, health) = http_request(&router.addr(), "GET", "/healthz", "").unwrap();
+    assert_eq!(code, 200, "{health}");
+    assert!(health.starts_with("ok"), "{health}");
+    let (code, stats) = http_request(&router.addr(), "GET", "/stats", "").unwrap();
+    assert_eq!(code, 200, "{stats}");
+    assert!(stats.contains("\"router\":"), "{stats}");
+    // Legacy unscoped routes have no default model at the router.
+    let (code, msg) = http_request(&router.addr(), "POST", "/predict", "0.9,0.1").unwrap();
+    assert_eq!(code, 400, "{msg}");
+}
+
+/// With a token armed, mutations are refused at the router without it
+/// and forwarded with it, so token-guarded backends accept the proxied
+/// reload; reads never need the token.
+#[test]
+fn router_auth_guards_mutations_and_forwards_the_token_to_backends() {
+    let (s1, st1) = start_axis_server("router_auth_a");
+    let (s2, st2) = start_axis_server("router_auth_b");
+    st1.set_auth_token(Some("sesame".to_string()));
+    st2.set_auth_token(Some("sesame".to_string()));
+    let router =
+        start_router_over(vec![s1.addr().to_string(), s2.addr().to_string()], Some("sesame"));
+    let (code, body) =
+        http_request(&router.addr(), "POST", "/v1/models/tiny/predict", "0.9,0.1").unwrap();
+    assert_eq!(code, 200, "reads must not need the token: {body}");
+    let (code, body) =
+        http_request(&router.addr(), "POST", "/v1/models/tiny/reload", "").unwrap();
+    assert_eq!(code, 401, "{body}");
+    let (code, body) = http_request_with_auth(
+        &router.addr(),
+        "POST",
+        "/v1/models/tiny/reload",
+        "",
+        Some("sesame"),
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+}
+
+/// Graceful router drain: requests already pipelined keep their answers
+/// (in order, correct), new connections are refused, and the connection
+/// ends in a clean EOF — never a reset.
+#[test]
+fn router_drain_completes_in_flight_pipelines_with_zero_resets() {
+    let (s1, _a) = start_axis_server("router_drain_a");
+    let (s2, _b) = start_axis_server("router_drain_b");
+    let router = start_router_over(vec![s1.addr().to_string(), s2.addr().to_string()], None);
+    let n = 8;
+    let mut burst = Vec::new();
+    for i in 0..n {
+        let body = if i % 2 == 0 { "0.9,0.1" } else { "-0.9,0.1" };
+        let conn = if i == n - 1 { "Connection: close\r\n" } else { "" };
+        burst.extend_from_slice(
+            format!(
+                "POST /v1/models/tiny/predict HTTP/1.1\r\nHost: d\r\nContent-Length: {}\r\n{conn}\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        );
+    }
+    let stream = connect(&router.addr());
+    (&stream).write_all(&burst).unwrap();
+    (&stream).flush().unwrap();
+    let mut reader = std::io::BufReader::new(&stream);
+    let (code, first) = read_one_response(&mut reader);
+    assert_eq!(code, 200, "{first}");
+    router.begin_drain();
+    // New connections are refused while draining…
+    let refused = connect(&router.addr());
+    let mut refused_reader = std::io::BufReader::new(&refused);
+    let (code, msg) = read_one_response(&mut refused_reader);
+    assert_eq!(code, 503, "{msg}");
+    // …but every request already on the wire still answers, in order.
+    for i in 1..n {
+        let (code, resp) = read_one_response(&mut reader);
+        assert_eq!(code, 200, "response {i} during drain: {resp}");
+        let want = if i % 2 == 0 { 1 } else { -1 };
+        assert!(resp.contains(&format!("\"label\":{want}")), "response {i}: {resp}");
+    }
+    assert_eof(&stream);
+    assert!(router.drain(Duration::from_secs(5)), "drain must reach quiescence");
+}
+
+/// End-to-end fleet through the real binary: `mlsvm route --spawn 2`
+/// owns its backends. Killing one keeps the fleet answering (bounded
+/// 503s at worst, failover 200s in practice), the router respawns the
+/// backend onto the same ring slot, `/healthz` converges back to a
+/// fully-up fleet, and routed predictions match a single-process server
+/// bit for bit.
+#[test]
+#[cfg(unix)]
+fn router_cli_spawn_survives_backend_kill_and_recovers() {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    let dir = tmp_dir("router_cli");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("m", &ModelArtifact::Svm(axis_model(0.5))).unwrap();
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+        .args([
+            "route",
+            "--registry",
+            dir.to_str().unwrap(),
+            "--spawn",
+            "2",
+            "--addr",
+            "127.0.0.1:0",
+            "--health-interval-ms",
+            "100",
+            "--proxy-timeout-ms",
+            "2000",
+            "--max-seconds",
+            "120",
+            "--drain-secs",
+            "5",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn mlsvm route");
+    // The router logs each spawned backend's pid to stderr before its
+    // stdout banner; collect both pids so one can be killed.
+    let mut stderr_reader = std::io::BufReader::new(child.stderr.take().unwrap());
+    let mut pids = Vec::new();
+    while pids.len() < 2 {
+        let mut line = String::new();
+        if stderr_reader.read_line(&mut line).unwrap() == 0 {
+            panic!("router exited before spawning backends");
+        }
+        if let Some(rest) = line.trim().strip_prefix("spawned backend pid ") {
+            pids.push(rest.split_whitespace().next().unwrap().parse::<i32>().unwrap());
+        }
+    }
+    let mut banner_reader = std::io::BufReader::new(child.stdout.take().unwrap());
+    let mut banner = String::new();
+    banner_reader.read_line(&mut banner).unwrap();
+    let addr: SocketAddr = banner
+        .split("http://")
+        .nth(1)
+        .unwrap_or_else(|| panic!("no address in banner '{banner}'"))
+        .trim()
+        .parse()
+        .expect("router address");
+
+    // Routed predictions match a single-process server bit for bit.
+    let (single, _st) = start_named_backend("cli_single", &["m"]);
+    for body in ["0.9,0.1", "-0.9,0.1"] {
+        let (rc, routed) = http_request(&addr, "POST", "/v1/models/m/predict", body).unwrap();
+        let (sc, direct) =
+            http_request(&single.addr(), "POST", "/v1/models/m/predict", body).unwrap();
+        assert_eq!(rc, 200, "{routed}");
+        assert_eq!((rc, routed), (sc, direct), "router vs single for {body}");
+    }
+
+    // SIGKILL one backend: every request stays bounded, only 200/503
+    // appear, and a 200 arrives promptly (failover or respawn).
+    assert_eq!(unsafe { kill(pids[0], 9) }, 0, "SIGKILL backend");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut saw_ok_after_kill = false;
+    while Instant::now() < deadline {
+        let t0 = Instant::now();
+        let (code, body) = http_request(&addr, "POST", "/v1/models/m/predict", "0.9,0.1").unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "request must stay bounded after a backend kill"
+        );
+        assert!(code == 200 || code == 503, "unexpected status {code}: {body}");
+        if code == 200 {
+            saw_ok_after_kill = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(saw_ok_after_kill, "no 200 within 30s of killing a backend");
+
+    // The router respawns the dead backend onto its old slot; /healthz
+    // converges to a fully-up fleet.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (code, body) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        if code == 200 && !body.contains("down") {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "fleet never recovered after respawn: {code} {body}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    assert_eq!(unsafe { kill(child.id() as i32, 15) }, 0, "SIGTERM router");
+    let status = child.wait().expect("wait on drained router");
+    assert!(status.success(), "expected clean router exit after SIGTERM, got {status}");
 }
