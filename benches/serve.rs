@@ -10,7 +10,10 @@
 //! synthetic SV set (the registry-v2 payoff), and a **fleet mode** — a
 //! consistent-hash router over three byte-budgeted backends against a
 //! capacity-constrained single process (the `mlsvm route` sharding
-//! payoff) — all emitted into `BENCH_serve.json`.
+//! payoff), and a **lifecycle mode** — canary shadow-scoring overhead
+//! (p50/p95 with the shadow comparison on vs off, zero disagreements and
+//! zero rollbacks required of an unfaulted run) — all emitted into
+//! `BENCH_serve.json`.
 //!
 //! ```bash
 //! cargo bench --bench serve            # writes BENCH_serve.json
@@ -572,6 +575,92 @@ fn run_fleet(
     )
 }
 
+/// Canary shadow-scoring overhead: the same single-connection closed
+/// loop with no canary riding (baseline) and with a 100%-fraction canary
+/// of the identical artifact staged (every request scored on both slots,
+/// the guardrails evaluated each time). The promotion window is set
+/// beyond the run length so the canary rides for the whole measurement.
+/// An unfaulted run must end with zero disagreements and zero rollbacks
+/// — the `check_bench.py --serve` lifecycle gate pins that.
+fn run_lifecycle(registry_dir: &std::path::Path, queries: &[Vec<f32>], total: usize) -> String {
+    let manager = EngineManager::open(
+        Registry::open(registry_dir).expect("registry"),
+        engine_cfg(8),
+    );
+    let state = Arc::new(ServeState::new(manager, "bench"));
+    state.manager.engine("bench").expect("warm engine");
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).expect("server");
+    let addr = server.addr();
+
+    let drive = |label: &str| -> (f64, f64, f64) {
+        let stream = TcpStream::connect_timeout(&addr, Duration::from_secs(5)).expect("connect");
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        let mut lats = Vec::with_capacity(total);
+        let t0 = Instant::now();
+        for r in 0..total {
+            let q = &queries[(r * 17) % queries.len()];
+            let body: Vec<String> = q.iter().map(|v| v.to_string()).collect();
+            let body = body.join(",");
+            let t = Instant::now();
+            let (code, resp) =
+                http_request_on(&stream, "POST", "/predict", &body).expect("request");
+            assert_eq!(code, 200, "{label}: {resp}");
+            lats.push(t.elapsed().as_secs_f64());
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            total as f64 / seconds.max(1e-9),
+            percentile_ms(&lats, 0.50),
+            percentile_ms(&lats, 0.95),
+        )
+    };
+
+    let (base_rps, base_p50, base_p95) = drive("baseline");
+    // Stage the registry's current (identical) artifact as a canary on
+    // every request; min_samples past the run length keeps it riding.
+    let (code, resp) = http_request(
+        &addr,
+        "POST",
+        &format!("/v1/models/bench/reload?canary=100&min_samples={}", total * 10),
+        "",
+    )
+    .expect("stage canary");
+    assert_eq!(code, 200, "{resp}");
+    assert!(resp.contains("\"canary\":true"), "{resp}");
+    let (shadow_rps, shadow_p50, shadow_p95) = drive("shadow");
+
+    let lc = state.manager.get("bench").expect("bench engine").lifecycle();
+    let view = lc.canary.as_ref().expect("canary must still be riding");
+    let s = view.stats;
+    let overhead_p50 = shadow_p50 / base_p50.max(1e-9);
+    println!(
+        "  baseline {base_rps:.0} req/s p50={base_p50:.3}ms p95={base_p95:.3}ms | \
+         shadow-on {shadow_rps:.0} req/s p50={shadow_p50:.3}ms p95={shadow_p95:.3}ms | \
+         {overhead_p50:.2}x p50, {} comparisons, {} disagreements, {} rollbacks",
+        s.comparisons, s.disagreements, lc.rollbacks
+    );
+    if s.disagreements > 0 || lc.rollbacks > 0 {
+        eprintln!(
+            "WARNING: identical-artifact canary disagreed or rolled back \
+             ({} disagreements, {} rollbacks)",
+            s.disagreements, lc.rollbacks
+        );
+    }
+    format!(
+        "{{\n    \"requests\": {total}, \
+         \"baseline\": {{\"rps\": {base_rps:.1}, \"p50_ms\": {base_p50:.3}, \
+         \"p95_ms\": {base_p95:.3}}}, \
+         \"shadow\": {{\"rps\": {shadow_rps:.1}, \"p50_ms\": {shadow_p50:.3}, \
+         \"p95_ms\": {shadow_p95:.3}}}, \
+         \"overhead_p50\": {overhead_p50:.3}, \
+         \"comparisons\": {}, \"disagreements\": {}, \"canary_errors\": {}, \
+         \"rollbacks\": {}, \"promotions\": {}\n  }}",
+        s.comparisons, s.disagreements, s.canary_errors, lc.rollbacks, lc.promotions
+    )
+}
+
 fn json_entry(r: &LoadResult) -> String {
     format!(
         "    {{\"max_batch\": {}, \"clients\": {}, \"requests\": {}, \"keepalive\": {}, \
@@ -705,6 +794,11 @@ fn main() {
     println!("\nfleet routing (1 router + 3 backends, byte-budgeted processes):");
     let fleet_json = run_fleet(&dir, &queries, clients, requests);
 
+    // Canary shadow-scoring overhead (lifecycle tier): p50/p95 with the
+    // shadow comparison on vs off, plus the unfaulted-run invariants.
+    println!("\nlifecycle (100%-fraction canary of the identical artifact):");
+    let lifecycle_json = run_lifecycle(&dir, &queries, (requests * 2).max(200));
+
     // Registry v2 payoff: load-time v1 text vs v2 binary on a big model.
     let io_json = measure_model_io(&dir, io_svs, 32);
 
@@ -744,6 +838,7 @@ fn main() {
         "{{\n  \"bench\": \"serve\",\n  \"threads\": {},\n  \"clients\": {clients},\n  \
          \"requests_per_client\": {requests},\n  \"configs\": [\n{}\n  ],\n  \"multi_model\": \
          {multi_json},\n  \"pipelining\": {pipeline_json},\n  \"fleet\": {fleet_json},\n  \
+         \"lifecycle\": {lifecycle_json},\n  \
          \"model_io\": {io_json},\n  \"faults\": {faults_json},\n  \
          \"headline\": \
          {{\"max_batch\": {}, \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \

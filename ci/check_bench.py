@@ -45,8 +45,12 @@ consistent-hash router over byte-budgeted backends must beat the
 equally-budgeted single process (which thrashes engines on the
 alternating workload — the sharding payoff; same-box back-to-back, so
 wall-clock-robust), routed answers must be bit-exact against the single
-process, and router p50/p95/p99 must be present. Finally it gates the
-faults section: an UNFAULTED bench
+process, and router p50/p95/p99 must be present. The lifecycle section
+is gated too: the identical-artifact canary must have recorded shadow
+comparisons with zero disagreements, zero canary errors, and zero
+rollbacks (an unfaulted run where the guardrails fired is a bug), and
+both the baseline and shadow-on latency percentiles must be present.
+Finally it gates the faults section: an UNFAULTED bench
 run must report all-zero fault counters (no injected faults from the
 disarmed plan, no worker panics, no expired request deadlines) — if any
 counter is nonzero, either the fault-injection harness armed itself or
@@ -227,6 +231,48 @@ def check_serve(path: str, min_load_speedup: float) -> int:
                     f"fleet: single {s_rps:.0f} -> router {r_rps:.0f} req/s "
                     f"({fleet.get('speedup')}x over {fleet.get('backends')} backends, "
                     f"router p99={router.get('p99_ms')}ms) OK"
+                )
+
+    lc = data.get("lifecycle")
+    if not isinstance(lc, dict):
+        print(f"{path} has no lifecycle section (serve bench too old?)")
+        failed = True
+    else:
+        missing = [
+            k
+            for k in ("overhead_p50", "comparisons")
+            if not isinstance(lc.get(k), (int, float))
+        ]
+        base = lc.get("baseline") or {}
+        shadow = lc.get("shadow") or {}
+        missing += [
+            f"{sec}.{k}"
+            for sec, d in (("baseline", base), ("shadow", shadow))
+            for k in ("p50_ms", "p95_ms")
+            if not isinstance(d.get(k), (int, float))
+        ]
+        if missing:
+            print(f"lifecycle section is missing {missing}")
+            failed = True
+        elif lc.get("comparisons", 0) <= 0:
+            print("LIFECYCLE GATE: canary recorded no shadow comparisons")
+            failed = True
+        else:
+            # The hard invariant: an identical-artifact canary in an
+            # unfaulted run must never disagree or roll back.
+            bad = {
+                k: v
+                for k in ("disagreements", "canary_errors", "rollbacks")
+                if (v := lc.get(k)) != 0
+            }
+            if bad:
+                print(f"LIFECYCLE GATE: nonzero in unfaulted canary run: {bad}")
+                failed = True
+            else:
+                print(
+                    f"lifecycle: {lc.get('comparisons')} shadow comparisons, "
+                    f"p50 {base.get('p50_ms')} -> {shadow.get('p50_ms')}ms "
+                    f"({lc.get('overhead_p50')}x), zero disagreements/rollbacks OK"
                 )
 
     faults = data.get("faults")

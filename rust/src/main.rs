@@ -5,6 +5,12 @@
 //!
 //! * `train`      — train MLWSVM on a LibSVM/CSV file, save the model
 //!                  (optionally into a serving registry);
+//! * `retrain`    — warm retrain a deployed registry model on base +
+//!                  appended data: parameters inherit from the deployed
+//!                  model (UD skipped), every uncoarsening level writes a
+//!                  crash-safe checkpoint, `--resume` continues a killed
+//!                  run bit-identically, and the result publishes as a
+//!                  new registry version;
 //! * `predict`    — load a model, predict a file, report metrics;
 //! * `serve`      — serve one or more registry models over HTTP through
 //!                  per-model concurrent batching engines
@@ -13,10 +19,14 @@
 //! * `route`      — front a fleet of backend serve processes behind one
 //!                  address, consistent-hashing model names across them
 //!                  (`--spawn N` launches children; `--backends a,b`
-//!                  fronts already-running servers);
+//!                  fronts already-running servers; `--backends-file F`
+//!                  re-reads F on SIGHUP);
 //! * `registry`   — registry maintenance: `migrate` rewrites v1-text /
 //!                  legacy model files in the v2 binary format, `list`
-//!                  shows names, formats and descriptions;
+//!                  shows names, formats and descriptions (`--describe`
+//!                  adds save timestamps and version history), `history`
+//!                  lists a model's archived versions, `rollback`
+//!                  restores the newest archived version;
 //! * `bench`      — regenerate a paper table (`table1|table2|table3`)
 //!                  (thin wrapper; `cargo bench --bench tableN` runs the
 //!                  same harness);
@@ -74,6 +84,7 @@ fn load_any(path: &str) -> Result<Dataset> {
 fn run(cmd: &str, argv: Vec<String>) -> Result<()> {
     match cmd {
         "train" => cmd_train(argv),
+        "retrain" => cmd_retrain(argv),
         "predict" => cmd_predict(argv),
         "serve" => cmd_serve(argv),
         "route" => cmd_route(argv),
@@ -88,7 +99,7 @@ fn run(cmd: &str, argv: Vec<String>) -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "mlsvm — algebraic multigrid support vector machines\n\n\
-                 usage: mlsvm <train|predict|serve|route|registry|gen|info> [options]\n\
+                 usage: mlsvm <train|retrain|predict|serve|route|registry|gen|info> [options]\n\
                  try:   mlsvm train --help"
             );
             Ok(())
@@ -162,6 +173,163 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         eprintln!("registry: {} -> {}", artifact.describe(), path.display());
     }
     Ok(())
+}
+
+fn cmd_retrain(argv: Vec<String>) -> Result<()> {
+    let args = Args::new(
+        "mlsvm retrain",
+        "warm retrain a deployed registry model on base + appended data",
+    )
+    .opt("registry", "registry directory holding the deployed model", Some("models"))
+    .opt("name", "registry model name to retrain and republish", Some("default"))
+    .opt("data", "base training file (.libsvm/.svm or .csv)", None)
+    .opt("append", "comma-separated appended data files to ingest", None)
+    .opt("test-frac", "held-out fraction for evaluation", Some("0.2"))
+    .opt("caliber", "AMG interpolation order R", Some("2"))
+    .opt("coarsest", "per-class coarsest level size", Some("250"))
+    .opt("knn", "k of the k-NN graph", Some("10"))
+    .opt("seed", "random seed", Some("0"))
+    .opt(
+        "checkpoint",
+        "checkpoint file (default: <registry>/.<name>.retrain.ckpt)",
+        None,
+    )
+    .opt("fault-plan", "arm deterministic fault injection (testing only)", None)
+    .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
+    .flag("resume", "resume from a matching checkpoint instead of starting over")
+    .flag("no-volumes", "ignore AMG volumes as instance weights")
+    .flag("quiet", "suppress per-level log")
+    .parse_from(argv)?;
+    apply_threads(&args)?;
+    let name = args.get("name").unwrap().to_string();
+    let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
+    // The deployed model is the warm-start prior: its (C⁺, C⁻, γ) are
+    // inherited at every level, so no UD model selection reruns.
+    let deployed = match reg.load(&name)? {
+        mlsvm::serve::ModelArtifact::Mlsvm(m) => m,
+        other => {
+            return Err(Error::Usage(format!(
+                "retrain needs a full mlsvm artifact; '{name}' is {}",
+                other.describe()
+            )))
+        }
+    };
+    let data_path = args
+        .get("data")
+        .ok_or_else(|| Error::Usage("--data is required".into()))?
+        .to_string();
+    let mut ds = load_any(&data_path)?;
+    let mut appended = 0usize;
+    if let Some(list) = args.get("append") {
+        for path in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let extra = load_any(path)?;
+            appended += extra.len();
+            ds = ds.concat(&extra).map_err(|e| {
+                Error::Usage(format!("cannot ingest appended file '{path}': {e}"))
+            })?;
+        }
+    }
+    let seed = args.get_u64("seed")?;
+    let mut rng = Pcg64::seed_from(seed);
+    let mut params = MlsvmParams::default().with_seed(seed);
+    params.hierarchy.caliber = args.get_usize("caliber")?;
+    params.hierarchy.coarsest_size = args.get_usize("coarsest")?;
+    params.hierarchy.knn_k = args.get_usize("knn")?;
+    params.use_volumes = !args.get_flag("no-volumes");
+    let test_frac = args.get_f64("test-frac")?;
+    let (mut train, mut test) = mlsvm::data::split::train_test_split(&ds, test_frac, &mut rng);
+    mlsvm::data::scale::Scaler::fit_transform(&mut train, Some(&mut test));
+    ds.labels.clear(); // free
+
+    let faults = match args.get("fault-plan") {
+        Some(spec) => {
+            eprintln!("fault plan armed: {spec}");
+            mlsvm::serve::FaultPlan::parse(spec)?
+        }
+        None => mlsvm::serve::FaultPlan::disarmed(),
+    };
+    let ckpt_path = match args.get("checkpoint") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => reg.dir().join(format!(".{name}.retrain.ckpt")),
+    };
+    let checkpointer = mlsvm::mlsvm::Checkpointer::new(&ckpt_path, faults);
+    let mut driver = mlsvm::mlsvm::TrainDriver {
+        inherit: Some(deployed.params),
+        checkpoint: Some(checkpointer),
+        resume: args.get_flag("resume"),
+        ..Default::default()
+    };
+    let t = Timer::start();
+    let model = MlsvmTrainer::new(params).train_driven(&train, &mut rng, &mut driver)?;
+    let secs = t.secs();
+    if driver.resumed_steps > 0 {
+        eprintln!(
+            "resumed from checkpoint: {} completed step(s) restored from {}",
+            driver.resumed_steps,
+            ckpt_path.display()
+        );
+    } else if args.get_flag("resume") {
+        eprintln!(
+            "resume requested but training started over ({})",
+            driver.resume_note.as_deref().unwrap_or("no reason recorded")
+        );
+    }
+    if !args.get_flag("quiet") {
+        eprint!(
+            "{}",
+            mlsvm::coordinator::report::level_stats_table(&model.level_stats).render()
+        );
+    }
+    if !test.is_empty() {
+        let m = mlsvm::metrics::evaluate(&model.model, &test);
+        println!(
+            "retrain {}s (+{appended} appended) | test {} (n={}, r_imb={:.2})",
+            fmt_secs(secs),
+            m.report(),
+            test.len(),
+            test.imbalance()
+        );
+    } else {
+        println!("retrain {}s (+{appended} appended)", fmt_secs(secs));
+    }
+    let artifact = mlsvm::serve::ModelArtifact::Mlsvm(model);
+    let path = reg.save(&name, &artifact)?;
+    let archived = reg.history(&name)?.len();
+    eprintln!(
+        "registry: {} -> {} ({archived} archived version(s) kept)",
+        artifact.describe(),
+        path.display()
+    );
+    // Only a published retrain discards the checkpoint; a failed save
+    // above leaves it for a later --resume.
+    mlsvm::mlsvm::Checkpointer::new(&ckpt_path, mlsvm::serve::FaultPlan::disarmed()).discard()?;
+    Ok(())
+}
+
+/// Render a filesystem timestamp as UTC (`YYYY-MM-DD HH:MM:SSZ`);
+/// dependency-free civil-from-days conversion.
+fn fmt_utc(t: Option<std::time::SystemTime>) -> String {
+    let Some(t) = t else { return "unknown".into() };
+    let Ok(d) = t.duration_since(std::time::UNIX_EPOCH) else {
+        return "pre-epoch".into();
+    };
+    let secs = d.as_secs();
+    let (days, rem) = (secs / 86_400, secs % 86_400);
+    let z = days as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097) as u64;
+    let yoe = (doe - doe / 1_460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let day = doy - (153 * mp + 2) / 5 + 1;
+    let month = if mp < 10 { mp + 3 } else { mp - 9 };
+    let year = yoe as i64 + era * 400 + i64::from(month <= 2);
+    format!(
+        "{year:04}-{month:02}-{day:02} {:02}:{:02}:{:02}Z",
+        rem / 3_600,
+        (rem % 3_600) / 60,
+        rem % 60
+    )
 }
 
 fn cmd_predict(argv: Vec<String>) -> Result<()> {
@@ -242,6 +410,10 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
 /// poll and starts a graceful drain instead of dying mid-request.
 static SHUTDOWN_SIGNAL: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
 
+/// Flipped by SIGHUP; `mlsvm route --backends-file` re-reads the file on
+/// its next poll round.
+static RELOAD_SIGNAL: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
 /// Route SIGTERM and SIGINT into [`SHUTDOWN_SIGNAL`] (raw libc `signal`:
 /// the crate is dependency-free, so no signal-hook).
 #[cfg(unix)]
@@ -262,6 +434,42 @@ fn install_signal_handlers() {
 
 #[cfg(not(unix))]
 fn install_signal_handlers() {}
+
+/// Route SIGHUP into [`RELOAD_SIGNAL`] (router-only: re-read the
+/// backends file; everything else keeps the default SIGHUP behavior).
+#[cfg(unix)]
+fn install_reload_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    extern "C" fn on_reload(_sig: i32) {
+        RELOAD_SIGNAL.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    const SIGHUP: i32 = 1;
+    unsafe {
+        signal(SIGHUP, on_reload as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_reload_handler() {}
+
+/// Parse a backends file: one `host:port` per line, blank lines and
+/// `#` comments ignored.
+fn read_backends_file(path: &str) -> Result<Vec<String>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Serve(format!("reading backends file '{path}': {e}")))?;
+    let list: Vec<String> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(String::from)
+        .collect();
+    if list.is_empty() {
+        return Err(Error::Serve(format!("backends file '{path}' lists no backends")));
+    }
+    Ok(list)
+}
 
 fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let args = Args::new("mlsvm serve", "serve registry models over HTTP")
@@ -490,6 +698,11 @@ fn cmd_route(argv: Vec<String>) -> Result<()> {
     )
     .opt("addr", "router bind address", Some("127.0.0.1:7870"))
     .opt("backends", "comma-separated backend host:port list to front", None)
+    .opt(
+        "backends-file",
+        "file with one backend host:port per line; re-read on SIGHUP",
+        None,
+    )
     .opt("spawn", "spawn this many `mlsvm serve` children as backends", Some("0"))
     .opt("registry", "registry directory for spawned backends", Some("models"))
     .opt(
@@ -509,6 +722,7 @@ fn cmd_route(argv: Vec<String>) -> Result<()> {
     .parse_from(argv)?;
     let auth = args.get("auth-token").map(|s| s.to_string());
     let spawn_n = args.get_usize("spawn")?;
+    let backends_file = args.get("backends-file").map(|s| s.to_string());
     let mut backends: Vec<String> = args
         .get("backends")
         .map(|s| {
@@ -518,6 +732,17 @@ fn cmd_route(argv: Vec<String>) -> Result<()> {
                 .collect()
         })
         .unwrap_or_default();
+    if let Some(path) = &backends_file {
+        // The file is the live source of truth for the ring (SIGHUP
+        // re-reads it); mixing in flag- or spawn-provided slots would
+        // make the re-read semantics ambiguous.
+        if !backends.is_empty() || spawn_n > 0 {
+            return Err(Error::Usage(
+                "--backends-file cannot be combined with --backends or --spawn".into(),
+            ));
+        }
+        backends = read_backends_file(path)?;
+    }
     // Spawned children occupy ring slots after any --backends entries;
     // their stdout readers stay alive so the pipe never breaks.
     let spawn_base = backends.len();
@@ -549,6 +774,9 @@ fn cmd_route(argv: Vec<String>) -> Result<()> {
     use std::io::Write as _;
     std::io::stdout().flush()?; // spawners poll stdout for the address
     install_signal_handlers();
+    if backends_file.is_some() {
+        install_reload_handler();
+    }
     let max_secs = args.get_u64("max-seconds")?;
     let drain_secs = args.get_u64("drain-secs")?.max(1);
     let started = std::time::Instant::now();
@@ -563,6 +791,22 @@ fn cmd_route(argv: Vec<String>) -> Result<()> {
         }
         if max_secs > 0 && started.elapsed() >= std::time::Duration::from_secs(max_secs) {
             break;
+        }
+        // SIGHUP: re-read the backends file and reshape the ring in
+        // place. Removed backends drain (in-flight exchanges hold their
+        // own handles); added/repointed slots start unhealthy and enter
+        // rotation after the next health pass.
+        if RELOAD_SIGNAL.swap(false, std::sync::atomic::Ordering::SeqCst) {
+            if let Some(path) = &backends_file {
+                match read_backends_file(path).and_then(|list| router.update_backends(&list)) {
+                    Ok(r) if r.changed() => eprintln!(
+                        "backends file re-read: {} added, {} removed, {} repointed",
+                        r.added, r.removed, r.repointed
+                    ),
+                    Ok(_) => eprintln!("backends file re-read: no changes"),
+                    Err(e) => eprintln!("backends file re-read failed (ring unchanged): {e}"),
+                }
+            }
         }
         // Keep spawned backends alive: respawn any that died and repoint
         // the ring slot at the replacement. Placement is index-keyed, so
@@ -647,7 +891,10 @@ fn cmd_registry(mut argv: Vec<String>) -> Result<()> {
         "list" => {
             let args = Args::new("mlsvm registry list", "list registry models with formats")
                 .opt("registry", "registry directory", Some("models"))
-                .flag("describe", "also load each model and print its description (slow)")
+                .flag(
+                    "describe",
+                    "also load each model: description, save timestamp, version history (slow)",
+                )
                 .parse_from(argv)?;
             let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
             // Metadata only by default: fully decoding every model makes a
@@ -656,13 +903,26 @@ fn cmd_registry(mut argv: Vec<String>) -> Result<()> {
             for name in reg.list()? {
                 let path = reg.path_of(&name);
                 let fmt = mlsvm::serve::detect_format(&path)?;
-                let bytes = std::fs::metadata(&path)?.len();
+                let meta = std::fs::metadata(&path)?;
+                let bytes = meta.len();
                 if describe {
+                    let saved = fmt_utc(meta.modified().ok());
                     match reg.load(&name) {
-                        Ok(artifact) => {
-                            println!("{name} [{fmt}, {bytes} bytes]: {}", artifact.describe())
-                        }
-                        Err(e) => println!("{name} [{fmt}, {bytes} bytes]: UNREADABLE ({e})"),
+                        Ok(artifact) => println!(
+                            "{name} [{fmt}, {bytes} bytes, saved {saved}]: {}",
+                            artifact.describe()
+                        ),
+                        Err(e) => println!(
+                            "{name} [{fmt}, {bytes} bytes, saved {saved}]: UNREADABLE ({e})"
+                        ),
+                    }
+                    for v in reg.history(&name)? {
+                        println!(
+                            "  archived v{} [{} bytes, saved {}]",
+                            v.version,
+                            v.bytes,
+                            fmt_utc(v.modified)
+                        );
                     }
                 } else {
                     println!("{name} [{fmt}, {bytes} bytes]");
@@ -670,8 +930,47 @@ fn cmd_registry(mut argv: Vec<String>) -> Result<()> {
             }
             Ok(())
         }
+        "history" => {
+            let args = Args::new(
+                "mlsvm registry history",
+                "list a model's archived versions, oldest first",
+            )
+            .opt("registry", "registry directory", Some("models"))
+            .opt("name", "registry model name", Some("default"))
+            .parse_from(argv)?;
+            let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
+            let name = args.get("name").unwrap();
+            let history = reg.history(name)?;
+            if history.is_empty() {
+                println!("{name}: no archived versions (never overwritten)");
+                return Ok(());
+            }
+            for v in history {
+                println!(
+                    "{name} v{}: {} bytes, saved {}",
+                    v.version,
+                    v.bytes,
+                    fmt_utc(v.modified)
+                );
+            }
+            Ok(())
+        }
+        "rollback" => {
+            let args = Args::new(
+                "mlsvm registry rollback",
+                "restore a model's newest archived version (the displaced current is archived)",
+            )
+            .opt("registry", "registry directory", Some("models"))
+            .opt("name", "registry model name", Some("default"))
+            .parse_from(argv)?;
+            let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
+            let name = args.get("name").unwrap();
+            let version = reg.rollback(name)?;
+            println!("{name}: rolled back to version {version}");
+            Ok(())
+        }
         _ => Err(Error::Usage(
-            "usage: mlsvm registry <migrate|list> [--registry DIR]".into(),
+            "usage: mlsvm registry <migrate|list|history|rollback> [--registry DIR]".into(),
         )),
     }
 }

@@ -1,0 +1,518 @@
+//! Crash-safe retrain checkpoints.
+//!
+//! `mlsvm retrain` trains level by level; a kill mid-run loses everything
+//! unless the completed levels survive on disk. After the coarsest level
+//! and after every refinement step the trainer writes one checkpoint file
+//! holding the *entire* loop state:
+//!
+//! * the partial [`MlsvmModel`] (model, params, per-level stats so far,
+//!   depths), serialized through the v2 binary artifact codec so every
+//!   float round-trips bit-exactly;
+//! * both [`ActiveSet`]s and the UD search center;
+//! * the raw PCG state, so a resumed run draws the same random stream the
+//!   killed run would have;
+//! * a fingerprint of the training data + run configuration, so a stale
+//!   checkpoint from a different dataset or parameterization is refused;
+//! * a trailing FNV-1a checksum over everything above, so a torn file is
+//!   detected rather than resumed from.
+//!
+//! Writes go through [`write_atomic`] (temp + fsync + rename): a crash
+//! between checkpoints leaves the previous one intact. The only way to
+//! get a bad file is a torn write *committed* by a broken filesystem —
+//! the `checkpoint-torn` fault arm simulates exactly that, and
+//! [`Checkpointer::load`] answers [`CheckpointLoad::Invalid`], which
+//! callers treat as "no checkpoint": the retrain restarts cleanly instead
+//! of crashing or resuming from garbage.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::mlsvm::trainer::{LevelStat, MlsvmModel};
+use crate::mlsvm::uncoarsen::ActiveSet;
+use crate::serve::binary::{read_artifact, write_artifact};
+use crate::serve::faults::FaultPlan;
+use crate::serve::registry::{write_atomic, ModelArtifact};
+use crate::svm::model::SvmModel;
+use crate::svm::smo::SvmParams;
+
+/// Magic bytes opening every checkpoint file.
+const MAGIC: &[u8; 8] = b"MLSVMCKP";
+/// Checkpoint format version.
+const CKP_VERSION: u32 = 1;
+
+/// Everything the multilevel training loop needs to resume after a kill.
+#[derive(Clone, Debug)]
+pub struct TrainCheckpoint {
+    /// Fingerprint of the (dataset, configuration) pair this belongs to.
+    pub fingerprint: u64,
+    /// Raw PCG `(state, inc)` at the moment the checkpoint was taken.
+    pub rng: (u128, u128),
+    /// UD search center in log₂ coordinates (inherited by finer levels).
+    pub center: (f64, f64),
+    /// Minority-class active set after the last completed step.
+    pub active_pos: ActiveSet,
+    /// Majority-class active set after the last completed step.
+    pub active_neg: ActiveSet,
+    /// The partial model: finest model so far, current params, stats of
+    /// every completed step (coarsest first), hierarchy depths.
+    pub partial: MlsvmModel,
+}
+
+impl TrainCheckpoint {
+    /// Completed training steps (coarsest level counts as one).
+    pub fn completed_steps(&self) -> usize {
+        self.partial.level_stats.len()
+    }
+}
+
+/// Borrowed view of the training loop state, for writing a checkpoint
+/// without cloning into a [`TrainCheckpoint`] first.
+pub struct CheckpointView<'a> {
+    /// See [`TrainCheckpoint::fingerprint`].
+    pub fingerprint: u64,
+    /// See [`TrainCheckpoint::rng`].
+    pub rng: (u128, u128),
+    /// See [`TrainCheckpoint::center`].
+    pub center: (f64, f64),
+    /// See [`TrainCheckpoint::active_pos`].
+    pub active_pos: &'a ActiveSet,
+    /// See [`TrainCheckpoint::active_neg`].
+    pub active_neg: &'a ActiveSet,
+    /// Finest model so far.
+    pub model: &'a SvmModel,
+    /// Current training parameters.
+    pub params: &'a SvmParams,
+    /// Stats of every completed step, coarsest first.
+    pub level_stats: &'a [LevelStat],
+    /// Hierarchy depths (minority, majority).
+    pub depths: (usize, usize),
+}
+
+/// What [`Checkpointer::load`] found on disk.
+#[derive(Debug)]
+pub enum CheckpointLoad {
+    /// No checkpoint file exists.
+    Missing,
+    /// A file exists but is torn/corrupt (bad magic, short read, checksum
+    /// mismatch, undecodable artifact). Resume must restart from scratch.
+    Invalid(String),
+    /// A valid checkpoint for a *different* dataset or configuration.
+    Stale {
+        /// Fingerprint recorded in the file.
+        found: u64,
+    },
+    /// A valid checkpoint matching the requested fingerprint.
+    Ready(Box<TrainCheckpoint>),
+}
+
+/// Writes and reads [`TrainCheckpoint`]s at a fixed path.
+pub struct Checkpointer {
+    path: PathBuf,
+    faults: Arc<FaultPlan>,
+}
+
+impl Checkpointer {
+    /// Checkpoint at `path`; `faults` arms the `checkpoint-torn` hook.
+    pub fn new(path: impl Into<PathBuf>, faults: Arc<FaultPlan>) -> Checkpointer {
+        Checkpointer { path: path.into(), faults }
+    }
+
+    /// The checkpoint file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Write a checkpoint atomically (temp + fsync + rename). If the
+    /// `checkpoint-torn` fault fires, only a prefix of the payload is
+    /// committed — simulating a filesystem that tore the write — and the
+    /// resulting file fails [`Checkpointer::load`]'s checksum.
+    pub fn save(&self, view: &CheckpointView<'_>) -> Result<()> {
+        let full = encode(view);
+        let committed = if self.faults.checkpoint_write() {
+            full.len() / 2
+        } else {
+            full.len()
+        };
+        write_atomic(&self.path, |w| {
+            use std::io::Write as _;
+            w.write_all(&full[..committed]).map_err(Error::from)
+        })
+    }
+
+    /// Read the checkpoint back, classifying what was found. Only
+    /// [`CheckpointLoad::Ready`] is resumable; every other answer means
+    /// "train from scratch" (with the reason available for logging).
+    pub fn load(&self, fingerprint: u64) -> CheckpointLoad {
+        let bytes = match std::fs::read(&self.path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return CheckpointLoad::Missing,
+            Err(e) => return CheckpointLoad::Invalid(format!("unreadable: {e}")),
+        };
+        match decode(&bytes) {
+            Err(e) => CheckpointLoad::Invalid(e.to_string()),
+            Ok(ckpt) if ckpt.fingerprint != fingerprint => {
+                CheckpointLoad::Stale { found: ckpt.fingerprint }
+            }
+            Ok(ckpt) => CheckpointLoad::Ready(Box::new(ckpt)),
+        }
+    }
+
+    /// Delete the checkpoint file (after a successful publish). Missing
+    /// is fine; any other I/O failure surfaces.
+    pub fn discard(&self) -> Result<()> {
+        match std::fs::remove_file(&self.path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+/// Fingerprint a (dataset, configuration) pair: FNV-1a over the shape,
+/// every label, the raw f32 bits of every point, the raw f64 bits of
+/// every volume, and the caller's configuration tag. Bit-exact inputs —
+/// the same data always fingerprints identically; any float perturbation
+/// or config change refuses the old checkpoint.
+pub fn fingerprint(ds: &Dataset, tag: &str) -> u64 {
+    let mut h = Fnv::new();
+    h.u64(ds.len() as u64);
+    h.u64(ds.dim() as u64);
+    for &l in &ds.labels {
+        h.bytes(&[l as u8]);
+    }
+    for v in ds.points.as_slice() {
+        h.bytes(&v.to_bits().to_le_bytes());
+    }
+    for v in &ds.volumes {
+        h.bytes(&v.to_bits().to_le_bytes());
+    }
+    h.bytes(tag.as_bytes());
+    h.finish()
+}
+
+/// Incremental FNV-1a (the one-shot variant lives in
+/// [`crate::serve::route::fnv1a`]; checkpoints hash megabytes, so this
+/// one folds in place instead of materializing a buffer).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+// ---- wire format ----
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u128(out: &mut Vec<u8>, v: u128) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_active(out: &mut Vec<u8>, a: &ActiveSet) {
+    put_u64(out, a.level as u64);
+    put_u64(out, a.nodes.len() as u64);
+    for &n in &a.nodes {
+        put_u32(out, n);
+    }
+}
+
+fn encode(view: &CheckpointView<'_>) -> Vec<u8> {
+    let partial = MlsvmModel {
+        model: view.model.clone(),
+        params: *view.params,
+        level_stats: view.level_stats.to_vec(),
+        depths: view.depths,
+    };
+    let artifact = write_artifact(&ModelArtifact::Mlsvm(partial));
+    let mut out = Vec::with_capacity(artifact.len() + 256);
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, CKP_VERSION);
+    put_u64(&mut out, view.fingerprint);
+    put_u128(&mut out, view.rng.0);
+    put_u128(&mut out, view.rng.1);
+    put_f64(&mut out, view.center.0);
+    put_f64(&mut out, view.center.1);
+    put_active(&mut out, view.active_pos);
+    put_active(&mut out, view.active_neg);
+    put_u64(&mut out, artifact.len() as u64);
+    out.extend_from_slice(&artifact);
+    // Trailing checksum over everything above: a torn prefix cannot pass.
+    let mut h = Fnv::new();
+    h.bytes(&out);
+    let sum = h.finish();
+    put_u64(&mut out, sum);
+    out
+}
+
+/// Bounds-checked little-endian cursor.
+struct Rd<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.at < n {
+            return Err(Error::invalid("checkpoint truncated"));
+        }
+        let s = &self.b[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn active(&mut self) -> Result<ActiveSet> {
+        let level = self.u64()? as usize;
+        let n = self.u64()? as usize;
+        if n > self.b.len() / 4 {
+            return Err(Error::invalid("checkpoint active-set count implausible"));
+        }
+        let mut nodes = Vec::with_capacity(n);
+        for _ in 0..n {
+            nodes.push(self.u32()?);
+        }
+        Ok(ActiveSet { level, nodes })
+    }
+}
+
+fn decode(bytes: &[u8]) -> Result<TrainCheckpoint> {
+    // Checksum first: any tear (including one that lands on a section
+    // boundary) is caught here, before structure is even looked at.
+    if bytes.len() < MAGIC.len() + 8 {
+        return Err(Error::invalid("checkpoint too short"));
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    let mut h = Fnv::new();
+    h.bytes(body);
+    if h.finish() != stored {
+        return Err(Error::invalid("checkpoint checksum mismatch (torn write?)"));
+    }
+    let mut rd = Rd { b: body, at: 0 };
+    if rd.take(MAGIC.len())? != MAGIC {
+        return Err(Error::invalid("not a checkpoint file (bad magic)"));
+    }
+    let version = rd.u32()?;
+    if version != CKP_VERSION {
+        return Err(Error::invalid(format!("unsupported checkpoint version {version}")));
+    }
+    let fingerprint = rd.u64()?;
+    let rng = (rd.u128()?, rd.u128()?);
+    let center = (rd.f64()?, rd.f64()?);
+    let active_pos = rd.active()?;
+    let active_neg = rd.active()?;
+    let alen = rd.u64()? as usize;
+    let artifact = rd.take(alen)?;
+    let partial = match read_artifact(artifact)? {
+        ModelArtifact::Mlsvm(m) => m,
+        other => {
+            return Err(Error::invalid(format!(
+                "checkpoint embeds a {} artifact, expected mlsvm",
+                other.describe()
+            )))
+        }
+    };
+    Ok(TrainCheckpoint { fingerprint, rng, center, active_pos, active_neg, partial })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::smo::{KernelKind, TrainStats};
+    use crate::util::rng::Pcg64;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "mlsvm-ckpt-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_view<'a>(
+        model: &'a SvmModel,
+        params: &'a SvmParams,
+        stats: &'a [LevelStat],
+        pos: &'a ActiveSet,
+        neg: &'a ActiveSet,
+    ) -> CheckpointView<'a> {
+        CheckpointView {
+            fingerprint: 0xfeed_beef,
+            rng: (123456789012345678901234567890u128, 42u128),
+            center: (1.5, -2.25),
+            active_pos: pos,
+            active_neg: neg,
+            model,
+            params,
+            level_stats: stats,
+            depths: (3, 4),
+        }
+    }
+
+    fn sample_parts() -> (SvmModel, SvmParams, Vec<LevelStat>, ActiveSet, ActiveSet) {
+        let model = SvmModel {
+            sv: crate::data::matrix::Matrix::from_rows(&[&[1.0, 0.5], &[-1.0, 0.25]]).unwrap(),
+            sv_coef: vec![0.75, -0.75],
+            rho: 0.125,
+            kernel: KernelKind::Rbf { gamma: 0.5 },
+            sv_indices: vec![0, 1],
+            sv_labels: vec![1, -1],
+        };
+        let params = SvmParams {
+            kernel: KernelKind::Rbf { gamma: 0.5 },
+            ..SvmParams::default()
+        };
+        let stats = vec![LevelStat {
+            levels: (2, 3),
+            train_size: 10,
+            n_sv: 2,
+            ud_used: true,
+            seconds: 0.5,
+            ud_seconds: 0.25,
+            cv_gmean: Some(0.9),
+            solver: TrainStats::default(),
+        }];
+        let pos = ActiveSet { level: 2, nodes: vec![0, 3, 7] };
+        let neg = ActiveSet { level: 3, nodes: vec![1, 2] };
+        (model, params, stats, pos, neg)
+    }
+
+    #[test]
+    fn round_trips_every_field_bit_exactly() {
+        let dir = tmp_dir("roundtrip");
+        let ck = Checkpointer::new(dir.join("r.ckpt"), FaultPlan::disarmed());
+        let (model, params, stats, pos, neg) = sample_parts();
+        let view = sample_view(&model, &params, &stats, &pos, &neg);
+        ck.save(&view).unwrap();
+        let got = match ck.load(0xfeed_beef) {
+            CheckpointLoad::Ready(c) => c,
+            other => panic!("expected Ready, got {other:?}"),
+        };
+        assert_eq!(got.rng, view.rng);
+        assert_eq!(got.center.0.to_bits(), view.center.0.to_bits());
+        assert_eq!(got.center.1.to_bits(), view.center.1.to_bits());
+        assert_eq!(got.active_pos.level, 2);
+        assert_eq!(got.active_pos.nodes, vec![0, 3, 7]);
+        assert_eq!(got.active_neg.nodes, vec![1, 2]);
+        assert_eq!(got.partial.depths, (3, 4));
+        assert_eq!(got.partial.model.rho.to_bits(), model.rho.to_bits());
+        assert_eq!(got.partial.model.sv_coef[0].to_bits(), 0.75f64.to_bits());
+        assert_eq!(got.completed_steps(), 1);
+        assert_eq!(got.partial.level_stats[0].cv_gmean, Some(0.9));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_and_missing_are_distinguished() {
+        let dir = tmp_dir("stale");
+        let ck = Checkpointer::new(dir.join("s.ckpt"), FaultPlan::disarmed());
+        assert!(matches!(ck.load(1), CheckpointLoad::Missing));
+        let (model, params, stats, pos, neg) = sample_parts();
+        ck.save(&sample_view(&model, &params, &stats, &pos, &neg)).unwrap();
+        match ck.load(999) {
+            CheckpointLoad::Stale { found } => assert_eq!(found, 0xfeed_beef),
+            other => panic!("expected Stale, got {other:?}"),
+        }
+        ck.discard().unwrap();
+        ck.discard().unwrap(); // idempotent
+        assert!(matches!(ck.load(0xfeed_beef), CheckpointLoad::Missing));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_write_fault_yields_invalid_not_garbage() {
+        let dir = tmp_dir("torn");
+        let faults = FaultPlan::disarmed();
+        faults.tear_checkpoint(1);
+        let ck = Checkpointer::new(dir.join("t.ckpt"), Arc::clone(&faults));
+        let (model, params, stats, pos, neg) = sample_parts();
+        ck.save(&sample_view(&model, &params, &stats, &pos, &neg)).unwrap();
+        assert!(
+            matches!(ck.load(0xfeed_beef), CheckpointLoad::Invalid(_)),
+            "torn checkpoint must be detected"
+        );
+        assert_eq!(faults.injected().checkpoint_tears, 1);
+        // The second save is unfaulted and repairs the file in place.
+        ck.save(&sample_view(&model, &params, &stats, &pos, &neg)).unwrap();
+        assert!(matches!(ck.load(0xfeed_beef), CheckpointLoad::Ready(_)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn every_truncation_of_a_valid_file_is_rejected() {
+        let dir = tmp_dir("trunc");
+        let path = dir.join("c.ckpt");
+        let ck = Checkpointer::new(&path, FaultPlan::disarmed());
+        let (model, params, stats, pos, neg) = sample_parts();
+        ck.save(&sample_view(&model, &params, &stats, &pos, &neg)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Sweep a range of torn lengths, including section boundaries.
+        for cut in (0..full.len()).step_by(7).chain([full.len() - 1]) {
+            assert!(
+                decode(&full[..cut]).is_err(),
+                "truncation at {cut}/{} bytes must not decode",
+                full.len()
+            );
+        }
+        assert!(decode(&full).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_tracks_data_and_tag() {
+        let mut rng = Pcg64::seed_from(3);
+        let ds = crate::data::synth::two_gaussians(60, 30, 3, 3.0, &mut rng);
+        let a = fingerprint(&ds, "cfg-a");
+        assert_eq!(a, fingerprint(&ds, "cfg-a"), "fingerprint must be stable");
+        assert_ne!(a, fingerprint(&ds, "cfg-b"), "tag must matter");
+        let mut ds2 = ds.clone();
+        ds2.labels[0] = -ds2.labels[0];
+        assert_ne!(a, fingerprint(&ds2, "cfg-a"), "labels must matter");
+    }
+}

@@ -6,12 +6,16 @@
 //! * [`uncoarsen`] — Algorithm 3 helpers: support-vector aggregate
 //!   expansion (I⁻¹), training-set reconstruction, parameter inheritance;
 //! * [`trainer`] — the driver: per-class AMG hierarchies, coarsest
-//!   learning, level-by-level refinement to the finest model.
+//!   learning, level-by-level refinement to the finest model;
+//! * [`checkpoint`] — crash-safe per-level retrain checkpoints
+//!   (bit-exact state snapshot, atomic writes, torn-file detection).
 
+pub mod checkpoint;
 pub mod coarsest;
 pub mod params;
 pub mod trainer;
 pub mod uncoarsen;
 
+pub use checkpoint::{CheckpointLoad, Checkpointer, TrainCheckpoint};
 pub use params::MlsvmParams;
-pub use trainer::{MlsvmModel, MlsvmTrainer};
+pub use trainer::{MlsvmModel, MlsvmTrainer, TrainDriver};

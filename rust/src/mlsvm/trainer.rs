@@ -19,6 +19,7 @@
 use crate::amg::hierarchy::Hierarchy;
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
+use crate::mlsvm::checkpoint::{self, CheckpointLoad, Checkpointer, CheckpointView};
 use crate::mlsvm::coarsest::{train_coarsest, volume_weights};
 use crate::mlsvm::params::MlsvmParams;
 use crate::mlsvm::uncoarsen::{
@@ -80,6 +81,38 @@ impl MlsvmModel {
     }
 }
 
+/// Optional behaviors layered on [`MlsvmTrainer::train`] — the retrain
+/// path. Default is plain training (no inheritance, no checkpointing),
+/// which is exactly what [`MlsvmTrainer::train`] uses.
+#[derive(Default)]
+pub struct TrainDriver {
+    /// Skip UD model selection at every level (coarsest included) and
+    /// train with these parameters throughout. This is how `mlsvm
+    /// retrain` warm-starts from a deployed model: the deployed
+    /// [`SvmParams`] are the model-selection prior, and refinement
+    /// levels still warm-start their SMO through
+    /// [`warm_start_alpha`] as usual.
+    pub inherit: Option<SvmParams>,
+    /// Write a crash-safe checkpoint after the coarsest level and after
+    /// every refinement step.
+    pub checkpoint: Option<Checkpointer>,
+    /// Try to resume from `checkpoint` before training. A missing,
+    /// torn, or mismatched checkpoint falls back to a full train (see
+    /// `resume_note`).
+    pub resume: bool,
+    /// Stop after this many total training steps (coarsest counts as
+    /// one) and return the partial model. With `checkpoint` set this
+    /// simulates an interruption: the checkpoint on disk resumes a later
+    /// run exactly where this one stopped. `None` = train to the finest
+    /// level.
+    pub max_steps: Option<usize>,
+    /// Out: training steps restored by a successful resume (coarsest
+    /// counts as one; 0 = trained from scratch).
+    pub resumed_steps: usize,
+    /// Out: why a requested resume fell back to a full train, if it did.
+    pub resume_note: Option<String>,
+}
+
 /// The multilevel trainer.
 pub struct MlsvmTrainer {
     /// Framework parameters.
@@ -94,6 +127,26 @@ impl MlsvmTrainer {
 
     /// Train a multilevel (W)SVM on the given training set.
     pub fn train(&self, train: &Dataset, rng: &mut Pcg64) -> Result<MlsvmModel> {
+        self.train_driven(train, rng, &mut TrainDriver::default())
+    }
+
+    /// [`MlsvmTrainer::train`] with the [`TrainDriver`] hooks: parameter
+    /// inheritance and crash-safe per-level checkpointing with resume.
+    ///
+    /// Determinism contract: given the same data, parameters and seed, a
+    /// run resumed from any checkpoint produces the same model —
+    /// bit-identical support vectors, coefficients, rho and params — as
+    /// the run that was never interrupted, at any thread count. The
+    /// checkpoint snapshots the raw RNG state and every float by its
+    /// bits, and completed-level stats are restored verbatim (only their
+    /// wall-clock `seconds` fields reflect the run they were measured
+    /// in).
+    pub fn train_driven(
+        &self,
+        train: &Dataset,
+        rng: &mut Pcg64,
+        driver: &mut TrainDriver,
+    ) -> Result<MlsvmModel> {
         let p = &self.params;
         if train.n_pos() == 0 || train.n_neg() == 0 {
             return Err(Error::Degenerate(
@@ -133,26 +186,128 @@ impl MlsvmTrainer {
         // C⁺/C⁻ coupling ratio fixed at the finest-level class sizes and
         // inherited by every level (see ud_search_with_ratio).
         let global_ratio = dneg.len().max(1) as f64 / dpos.len().max(1) as f64;
-        let t0 = Timer::start();
-        let ds0 = build_level_dataset(&hpos, &hneg, &active_pos, &active_neg)?;
-        let coarsest = train_coarsest(&ds0, p.use_volumes, &p.ud, Some(global_ratio), rng)?;
-        let mut model = coarsest.model;
-        let mut params = coarsest.outcome.params;
-        let mut center = coarsest.outcome.center;
-        stats.push(LevelStat {
-            levels: (active_pos.level, active_neg.level),
-            train_size: ds0.len(),
-            n_sv: model.n_sv(),
-            ud_used: true,
-            seconds: t0.secs(),
-            ud_seconds: coarsest.ud_seconds,
-            cv_gmean: Some(coarsest.outcome.gmean),
-            solver: coarsest.stats,
-        });
+
+        // Checkpoint identity: the exact data bits plus everything that
+        // steers the run. A checkpoint from different data, different
+        // framework knobs, or a different inherited prior is refused.
+        let fp = driver
+            .checkpoint
+            .as_ref()
+            .map(|_| checkpoint::fingerprint(train, &format!("{p:?}|inherit={:?}", driver.inherit)));
+        let mut restored: Option<checkpoint::TrainCheckpoint> = None;
+        if driver.resume {
+            if let (Some(ck), Some(fp)) = (driver.checkpoint.as_ref(), fp) {
+                match ck.load(fp) {
+                    CheckpointLoad::Ready(c) if c.partial.depths == (dp, dn) => restored = Some(*c),
+                    CheckpointLoad::Ready(c) => {
+                        driver.resume_note = Some(format!(
+                            "checkpoint depths {:?} do not match this run's {:?}",
+                            c.partial.depths,
+                            (dp, dn)
+                        ))
+                    }
+                    CheckpointLoad::Missing => {
+                        driver.resume_note = Some("no checkpoint file".into())
+                    }
+                    CheckpointLoad::Invalid(why) => {
+                        driver.resume_note = Some(format!("checkpoint unusable ({why})"))
+                    }
+                    CheckpointLoad::Stale { found } => {
+                        driver.resume_note = Some(format!(
+                            "checkpoint fingerprint {found:#018x} is for different data or config"
+                        ))
+                    }
+                }
+            }
+        }
+
+        let (mut model, mut params, mut center);
+        match restored {
+            Some(c) => {
+                // Resume: restore the loop state after the last completed
+                // step, including the RNG stream position, and skip
+                // straight to the next refinement step.
+                driver.resumed_steps = c.completed_steps();
+                *rng = Pcg64::from_raw_state(c.rng.0, c.rng.1);
+                active_pos = c.active_pos;
+                active_neg = c.active_neg;
+                center = c.center;
+                model = c.partial.model;
+                params = c.partial.params;
+                stats = c.partial.level_stats;
+            }
+            None => {
+                let t0 = Timer::start();
+                let ds0 = build_level_dataset(&hpos, &hneg, &active_pos, &active_neg)?;
+                let (solver, ud_seconds, cv_gmean, ud_used);
+                match &driver.inherit {
+                    Some(inherited) => {
+                        // Retrain path: the deployed model already chose
+                        // (C⁺, C⁻, γ); train the coarsest level directly
+                        // with them instead of re-running UD.
+                        params = *inherited;
+                        center = (0.0, 0.0);
+                        let weights = volume_weights(&ds0, p.use_volumes);
+                        let (m, st) = train_weighted_warm(
+                            &ds0.points,
+                            &ds0.labels,
+                            &params,
+                            weights.as_deref(),
+                            None,
+                        )?;
+                        model = m;
+                        solver = st;
+                        ud_seconds = 0.0;
+                        cv_gmean = None;
+                        ud_used = false;
+                    }
+                    None => {
+                        let coarsest =
+                            train_coarsest(&ds0, p.use_volumes, &p.ud, Some(global_ratio), rng)?;
+                        model = coarsest.model;
+                        params = coarsest.outcome.params;
+                        center = coarsest.outcome.center;
+                        solver = coarsest.stats;
+                        ud_seconds = coarsest.ud_seconds;
+                        cv_gmean = Some(coarsest.outcome.gmean);
+                        ud_used = true;
+                    }
+                }
+                stats.push(LevelStat {
+                    levels: (active_pos.level, active_neg.level),
+                    train_size: ds0.len(),
+                    n_sv: model.n_sv(),
+                    ud_used,
+                    seconds: t0.secs(),
+                    ud_seconds,
+                    cv_gmean,
+                    solver,
+                });
+                if let (Some(ck), Some(fp)) = (driver.checkpoint.as_ref(), fp) {
+                    ck.save(&CheckpointView {
+                        fingerprint: fp,
+                        rng: rng.raw_state(),
+                        center,
+                        active_pos: &active_pos,
+                        active_neg: &active_neg,
+                        model: &model,
+                        params: &params,
+                        level_stats: &stats,
+                        depths: (dp, dn),
+                    })?;
+                }
+            }
+        }
 
         // ---- Uncoarsening (Algorithm 3) ----
         let steps = dp.max(dn).saturating_sub(1);
-        for _step in 0..steps {
+        // stats holds the coarsest entry plus one per completed
+        // refinement step; a fresh run starts at 0, a resume mid-loop.
+        let step_cap = driver.max_steps.unwrap_or(usize::MAX).max(1);
+        for _step in (stats.len() - 1)..steps {
+            if stats.len() >= step_cap {
+                break;
+            }
             let t = Timer::start();
             let (sv_pos, sv_neg) = svs_to_class_nodes(&model, &active_pos, &active_neg);
             let prev_pos = active_pos.clone();
@@ -166,7 +321,8 @@ impl MlsvmTrainer {
                     active_pos.level, active_neg.level
                 )));
             }
-            let use_ud = ds.len() < p.qdt && ds.len() >= p.min_ud_size;
+            let use_ud =
+                driver.inherit.is_none() && ds.len() < p.qdt && ds.len() >= p.min_ud_size;
             let t_ud = Timer::start();
             let cv_gmean = if use_ud {
                 // Lines 8–9: UD around the inherited parameters.
@@ -215,6 +371,19 @@ impl MlsvmTrainer {
                 cv_gmean,
                 solver,
             });
+            if let (Some(ck), Some(fp)) = (driver.checkpoint.as_ref(), fp) {
+                ck.save(&CheckpointView {
+                    fingerprint: fp,
+                    rng: rng.raw_state(),
+                    center,
+                    active_pos: &active_pos,
+                    active_neg: &active_neg,
+                    model: &model,
+                    params: &params,
+                    level_stats: &stats,
+                    depths: (dp, dn),
+                })?;
+            }
         }
 
         Ok(MlsvmModel {
@@ -327,6 +496,91 @@ mod tests {
         assert!(warm.level_stats.iter().all(|s| {
             s.solver.cache_hits + s.solver.cache_misses > 0
         }));
+    }
+
+    /// Canonical decision-relevant bytes of a model: the finest
+    /// [`SvmModel`] through the v2 binary codec (every float by its
+    /// bits; no wall-clock level stats).
+    fn svm_bits(m: &MlsvmModel) -> Vec<u8> {
+        crate::serve::binary::write_artifact(&crate::serve::registry::ModelArtifact::Svm(
+            m.model.clone(),
+        ))
+    }
+
+    #[test]
+    fn inherited_params_skip_ud_at_every_level() {
+        let mut rng = Pcg64::seed_from(90);
+        let ds = two_gaussians(700, 150, 5, 4.0, &mut rng);
+        let (tr, te) = crate::data::split::train_test_split(&ds, 0.25, &mut rng);
+        let mut rng_a = Pcg64::seed_from(11);
+        let base = MlsvmTrainer::new(quick_params(7)).train(&tr, &mut rng_a).unwrap();
+        let mut rng_b = Pcg64::seed_from(11);
+        let mut driver = TrainDriver { inherit: Some(base.params), ..Default::default() };
+        let re = MlsvmTrainer::new(quick_params(7))
+            .train_driven(&tr, &mut rng_b, &mut driver)
+            .unwrap();
+        assert!(re.level_stats.iter().all(|s| !s.ud_used), "UD must not run when inheriting");
+        assert_eq!(re.modelsel_seconds(), 0.0);
+        let m = evaluate(&re.model, &te);
+        assert!(m.gmean() > 0.85, "inherited-params gmean={}", m.gmean());
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical_to_uninterrupted() {
+        let dir = std::env::temp_dir().join(format!(
+            "mlsvm-trainer-ckpt-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resume.ckpt");
+        let mut rng = Pcg64::seed_from(91);
+        let ds = two_gaussians(1500, 400, 5, 5.0, &mut rng);
+        // Reference: uninterrupted, never checkpointed.
+        let mut rng_ref = Pcg64::seed_from(12);
+        let reference = MlsvmTrainer::new(quick_params(8)).train(&ds, &mut rng_ref).unwrap();
+        assert!(
+            reference.level_stats.len() >= 3,
+            "need >= 3 steps to interrupt mid-loop, got {}",
+            reference.level_stats.len()
+        );
+        // "Interrupted": stop after 2 steps with the checkpoint on disk.
+        let faults = crate::serve::faults::FaultPlan::disarmed();
+        let mut rng_a = Pcg64::seed_from(12);
+        let mut d1 = TrainDriver {
+            checkpoint: Some(Checkpointer::new(&path, std::sync::Arc::clone(&faults))),
+            max_steps: Some(2),
+            ..Default::default()
+        };
+        let partial = MlsvmTrainer::new(quick_params(8))
+            .train_driven(&ds, &mut rng_a, &mut d1)
+            .unwrap();
+        assert_eq!(partial.level_stats.len(), 2);
+        // Resume with a deliberately wrong seed: the checkpoint's RNG
+        // state must take over for the remaining steps to match.
+        let mut rng_b = Pcg64::seed_from(999_999);
+        let mut d2 = TrainDriver {
+            checkpoint: Some(Checkpointer::new(&path, faults)),
+            resume: true,
+            ..Default::default()
+        };
+        let resumed = MlsvmTrainer::new(quick_params(8))
+            .train_driven(&ds, &mut rng_b, &mut d2)
+            .unwrap();
+        assert_eq!(d2.resumed_steps, 2, "resume fell back: {:?}", d2.resume_note);
+        assert!(d2.resume_note.is_none());
+        assert_eq!(resumed.level_stats.len(), reference.level_stats.len());
+        assert_eq!(
+            svm_bits(&resumed),
+            svm_bits(&reference),
+            "resumed model must be bit-identical to the uninterrupted run"
+        );
+        assert_eq!(resumed.params.c_pos.to_bits(), reference.params.c_pos.to_bits());
+        assert_eq!(resumed.params.c_neg.to_bits(), reference.params.c_neg.to_bits());
+        // Completed-step stats were restored verbatim from the checkpoint.
+        assert_eq!(resumed.level_stats[0].seconds, partial.level_stats[0].seconds);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

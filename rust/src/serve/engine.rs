@@ -463,8 +463,15 @@ impl ModelSlot {
     /// artifact cannot be prepared for serving.
     pub fn swap(&self, artifact: &ModelArtifact) -> Result<()> {
         let scorer = ArtifactScorer::new(artifact)?;
-        *self.scorer.write().unwrap_or_else(|e| e.into_inner()) = Arc::new(scorer);
+        self.install(Arc::new(scorer));
         Ok(())
+    }
+
+    /// Install an already-prepared scorer — the canary-promotion path:
+    /// the scorer was built when the canary deploy started, so promoting
+    /// it must not pay a second prepare (and cannot fail).
+    pub fn install(&self, scorer: Arc<ArtifactScorer>) {
+        *self.scorer.write().unwrap_or_else(|e| e.into_inner()) = scorer;
     }
 }
 
@@ -773,6 +780,16 @@ impl Engine {
             .reloads
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Swap in an already-prepared scorer (the canary-promotion path —
+    /// same slot semantics as [`Engine::reload`], counted as a reload).
+    pub fn install(&self, scorer: Arc<ArtifactScorer>) {
+        self.shared.slot.install(scorer);
+        self.shared
+            .stats
+            .reloads
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
 
     /// Point-in-time counters.

@@ -51,19 +51,38 @@ pub struct FaultCounters {
     pub load_truncations: u64,
     /// Connections stalled.
     pub stalls: u64,
+    /// Canary shadow comparisons forced to disagree.
+    pub canary_disagreements: u64,
+    /// Canary slot scorings forced to panic.
+    pub canary_panics: u64,
+    /// Retrain checkpoint writes torn mid-file.
+    pub checkpoint_tears: u64,
 }
 
 impl FaultCounters {
     /// Sum over every fault kind — zero means the plan never fired.
     pub fn total(&self) -> u64 {
-        self.panics + self.load_errors + self.load_truncations + self.stalls
+        self.panics
+            + self.load_errors
+            + self.load_truncations
+            + self.stalls
+            + self.canary_disagreements
+            + self.canary_panics
+            + self.checkpoint_tears
     }
 
     /// Render as a JSON object (hand-rolled; the crate has no serde).
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"panics\":{},\"load_errors\":{},\"load_truncations\":{},\"stalls\":{}}}",
-            self.panics, self.load_errors, self.load_truncations, self.stalls
+            "{{\"panics\":{},\"load_errors\":{},\"load_truncations\":{},\"stalls\":{},\
+             \"canary_disagreements\":{},\"canary_panics\":{},\"checkpoint_tears\":{}}}",
+            self.panics,
+            self.load_errors,
+            self.load_truncations,
+            self.stalls,
+            self.canary_disagreements,
+            self.canary_panics,
+            self.checkpoint_tears
         )
     }
 }
@@ -111,6 +130,9 @@ pub struct FaultPlan {
     load_truncate: Trigger,
     stall_conn: Trigger,
     stall_ms: AtomicU64,
+    canary_disagree: Trigger,
+    canary_panic: Trigger,
+    checkpoint_torn: Trigger,
 }
 
 impl FaultPlan {
@@ -138,6 +160,24 @@ impl FaultPlan {
     pub fn stall_conn(&self, nth: u64, ms: u64) {
         self.stall_ms.store(ms, Ordering::SeqCst);
         self.stall_conn.arm(nth, 1);
+    }
+
+    /// Arm: flip the canary's answer on shadow comparisons
+    /// `from_nth ..` for `count` comparisons (forced disagreement).
+    pub fn disagree_canary(&self, from_nth: u64, count: u64) {
+        self.canary_disagree.arm(from_nth, count);
+    }
+
+    /// Arm: panic inside the canary slot on the `nth` canary scoring,
+    /// once.
+    pub fn panic_canary(&self, nth: u64) {
+        self.canary_panic.arm(nth, 1);
+    }
+
+    /// Arm: tear the `nth` retrain checkpoint write (truncate the temp
+    /// file before the rename), once.
+    pub fn tear_checkpoint(&self, nth: u64) {
+        self.checkpoint_torn.arm(nth, 1);
     }
 
     /// Hook: a worker is about to score a batch. True = panic now (the
@@ -170,6 +210,24 @@ impl FaultPlan {
         }
     }
 
+    /// Hook: a canary shadow comparison is about to be recorded. True =
+    /// flip the canary's decision so the comparison disagrees.
+    pub fn canary_compare(&self) -> bool {
+        self.canary_disagree.hit()
+    }
+
+    /// Hook: the canary slot is about to score. True = panic now (the
+    /// caller raises the panic inside its `catch_unwind`).
+    pub fn canary_score(&self) -> bool {
+        self.canary_panic.hit()
+    }
+
+    /// Hook: a retrain checkpoint is about to be committed. True = tear
+    /// this write (the writer truncates the payload before renaming).
+    pub fn checkpoint_write(&self) -> bool {
+        self.checkpoint_torn.hit()
+    }
+
     /// True when any trigger is armed (used to hide the plan from
     /// observability output in normal runs).
     pub fn armed(&self) -> bool {
@@ -178,6 +236,9 @@ impl FaultPlan {
             &self.load_error,
             &self.load_truncate,
             &self.stall_conn,
+            &self.canary_disagree,
+            &self.canary_panic,
+            &self.checkpoint_torn,
         ]
         .iter()
         .any(|t| t.first.load(Ordering::SeqCst) != 0)
@@ -190,6 +251,9 @@ impl FaultPlan {
             load_errors: self.load_error.fired(),
             load_truncations: self.load_truncate.fired(),
             stalls: self.stall_conn.fired(),
+            canary_disagreements: self.canary_disagree.fired(),
+            canary_panics: self.canary_panic.fired(),
+            checkpoint_tears: self.checkpoint_torn.fired(),
         }
     }
 
@@ -198,7 +262,11 @@ impl FaultPlan {
     /// * `panic-batch=N` — panic scoring the Nth batch;
     /// * `load-error=N` or `load-error=NxK` — fail opens N..N+K;
     /// * `load-truncate=N` — truncated bytes on the Nth open;
-    /// * `stall-conn=N:MS` — stall the Nth connection MS milliseconds.
+    /// * `stall-conn=N:MS` — stall the Nth connection MS milliseconds;
+    /// * `canary-disagree=N` or `canary-disagree=NxK` — flip canary
+    ///   comparisons N..N+K;
+    /// * `canary-panic=N` — panic the Nth canary scoring;
+    /// * `checkpoint-torn=N` — tear the Nth checkpoint write.
     pub fn parse(spec: &str) -> Result<Arc<FaultPlan>> {
         let plan = FaultPlan::default();
         for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
@@ -219,6 +287,18 @@ impl FaultPlan {
                     plan.fail_loads(n, k);
                 }
                 "load-truncate" => plan.truncate_load(parse_nth(val).ok_or_else(|| bad("N"))?),
+                "canary-disagree" => {
+                    let (n, k) = match val.split_once('x') {
+                        Some((n, k)) => (
+                            parse_nth(n).ok_or_else(|| bad("N"))?,
+                            parse_nth(k).ok_or_else(|| bad("count"))?,
+                        ),
+                        None => (parse_nth(val).ok_or_else(|| bad("N"))?, 1),
+                    };
+                    plan.disagree_canary(n, k);
+                }
+                "canary-panic" => plan.panic_canary(parse_nth(val).ok_or_else(|| bad("N"))?),
+                "checkpoint-torn" => plan.tear_checkpoint(parse_nth(val).ok_or_else(|| bad("N"))?),
                 "stall-conn" => {
                     let (n, ms) = val.split_once(':').ok_or_else(|| bad("N:MS"))?;
                     plan.stall_conn(
@@ -309,5 +389,40 @@ mod tests {
         assert!(FaultPlan::parse("panic-batch=0").is_err());
         assert!(FaultPlan::parse("stall-conn=5").is_err());
         assert!(!FaultPlan::parse("").expect("empty").armed());
+    }
+
+    #[test]
+    fn lifecycle_triggers_fire_on_exact_ordinals() {
+        let p = FaultPlan::parse("canary-disagree=2x2,canary-panic=1,checkpoint-torn=3")
+            .expect("parse");
+        assert!(p.armed());
+        let flips: Vec<bool> = (0..5).map(|_| p.canary_compare()).collect();
+        assert_eq!(flips, vec![false, true, true, false, false]);
+        assert!(p.canary_score());
+        assert!(!p.canary_score());
+        let tears: Vec<bool> = (0..4).map(|_| p.checkpoint_write()).collect();
+        assert_eq!(tears, vec![false, false, true, false]);
+        let c = p.injected();
+        assert_eq!(
+            (c.canary_disagreements, c.canary_panics, c.checkpoint_tears),
+            (2, 1, 1)
+        );
+        assert_eq!(c.total(), 4);
+        assert!(
+            c.to_json().contains("\"canary_panics\":1"),
+            "{}",
+            c.to_json()
+        );
+    }
+
+    #[test]
+    fn disarmed_lifecycle_hooks_never_fire() {
+        let p = FaultPlan::disarmed();
+        for _ in 0..20 {
+            assert!(!p.canary_compare());
+            assert!(!p.canary_score());
+            assert!(!p.checkpoint_write());
+        }
+        assert_eq!(p.injected().total(), 0);
     }
 }

@@ -35,14 +35,25 @@
 //!   ([`CircuitState`]; clock-injectable as [`EngineManager::engine_at`]
 //!   / [`EngineManager::reload_at`] / [`EngineManager::circuit_at`]).
 //!   A missing model is a client error, not a fault — it never trips
-//!   the breaker, so unknown names keep answering 404, not 503.
+//!   the breaker, so unknown names keep answering 404, not 503;
+//! * **canary deploys** — [`ManagedEngine::start_canary`] prepares a
+//!   candidate scorer beside the incumbent slot; a deterministic
+//!   hash-based fraction of predicts ([`routes_to_canary`]) is answered
+//!   by the candidate while every routed request is shadow-scored on
+//!   both slots ([`crate::serve::stats::CanaryStats`]). The guardrail
+//!   policy ([`CanaryPolicy`]) auto-promotes on sustained agreement and
+//!   rolls back — recording the reason — on an agreement, latency, or
+//!   error breach. The incumbent slot is never touched until promotion,
+//!   so a failed canary leaves it serving bit-identical answers.
 
 use crate::error::{Error, Result};
-use crate::serve::engine::{Engine, EngineConfig, ModelSlot};
+use crate::serve::engine::{ArtifactScorer, Decision, Engine, EngineConfig, ModelSlot};
 use crate::serve::faults::FaultPlan;
 use crate::serve::registry::{ModelArtifact, Registry};
-use crate::serve::stats::{FleetCapacity, StatsSnapshot};
+use crate::serve::route::fnv1a;
+use crate::serve::stats::{CanarySnapshot, CanaryStats, FleetCapacity, StatsSnapshot};
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
@@ -51,6 +62,226 @@ use std::time::{Duration, Instant};
 pub const BREAKER_THRESHOLD: u32 = 3;
 /// How long an open circuit fast-fails before allowing a half-open probe.
 pub const BREAKER_COOLDOWN: Duration = Duration::from_secs(30);
+
+/// Default shadow comparisons required before a canary auto-promotes.
+pub const CANARY_MIN_SAMPLES: u64 = 50;
+/// Default agreement ratio at which a canary auto-promotes.
+pub const CANARY_PROMOTE_AGREEMENT: f64 = 0.99;
+/// Default agreement ratio below which a canary rolls back.
+pub const CANARY_AGREEMENT_FLOOR: f64 = 0.90;
+/// Default canary/incumbent shadow-latency ratio that rolls back.
+pub const CANARY_MAX_LATENCY_RATIO: f64 = 100.0;
+/// Default comparisons before the latency guardrail applies (single
+/// shadow scorings are too noisy to roll back on).
+pub const CANARY_LATENCY_MIN_SAMPLES: u64 = 32;
+/// Default canary scoring failures (caught panics) that roll back.
+pub const CANARY_MAX_ERRORS: u64 = 3;
+
+/// Guardrail policy of one canary deploy — the promote/rollback control
+/// loop evaluated after every shadow comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct CanaryPolicy {
+    /// Fraction of predicts answered by the canary slot (0.0–1.0),
+    /// selected by [`routes_to_canary`]. 0.0 disables routing entirely
+    /// (and with it shadow scoring: the window never fills).
+    pub fraction: f64,
+    /// Shadow comparisons required before automatic promotion.
+    pub min_samples: u64,
+    /// Agreement ratio at or above which the canary auto-promotes once
+    /// `min_samples` comparisons exist.
+    pub promote_agreement: f64,
+    /// Agreement ratio below which the canary rolls back — enforced from
+    /// the very first comparison (a canary that starts wrong is retired
+    /// before it serves a second answer).
+    pub agreement_floor: f64,
+    /// Canary/incumbent shadow-score latency ratio above which the
+    /// canary rolls back (0.0 disables; evaluated once
+    /// `latency_min_samples` comparisons exist).
+    pub max_latency_ratio: f64,
+    /// Comparisons before the latency guardrail applies.
+    pub latency_min_samples: u64,
+    /// Canary-side scoring failures (caught panics) that roll back
+    /// (0 disables).
+    pub max_canary_errors: u64,
+}
+
+impl Default for CanaryPolicy {
+    fn default() -> CanaryPolicy {
+        CanaryPolicy {
+            fraction: 0.1,
+            min_samples: CANARY_MIN_SAMPLES,
+            promote_agreement: CANARY_PROMOTE_AGREEMENT,
+            agreement_floor: CANARY_AGREEMENT_FLOOR,
+            max_latency_ratio: CANARY_MAX_LATENCY_RATIO,
+            latency_min_samples: CANARY_LATENCY_MIN_SAMPLES,
+            max_canary_errors: CANARY_MAX_ERRORS,
+        }
+    }
+}
+
+impl CanaryPolicy {
+    /// The guardrail breach `s` constitutes, if any. Pure over the
+    /// snapshot, so the rules are unit-testable without timing games.
+    pub fn breach(&self, s: &CanarySnapshot) -> Option<String> {
+        if self.max_canary_errors > 0 && s.canary_errors >= self.max_canary_errors {
+            return Some(format!(
+                "canary error burst: {} scoring failures (max {})",
+                s.canary_errors, self.max_canary_errors
+            ));
+        }
+        if s.comparisons > 0 && s.agreement < self.agreement_floor {
+            return Some(format!(
+                "agreement {:.4} below floor {:.4} after {} comparisons",
+                s.agreement, self.agreement_floor, s.comparisons
+            ));
+        }
+        if self.max_latency_ratio > 0.0
+            && s.comparisons >= self.latency_min_samples.max(1)
+            && s.latency_ratio > self.max_latency_ratio
+        {
+            return Some(format!(
+                "canary latency {:.2}x incumbent exceeds {:.2}x",
+                s.latency_ratio, self.max_latency_ratio
+            ));
+        }
+        None
+    }
+
+    /// Whether `s` has earned automatic promotion.
+    pub fn promotable(&self, s: &CanarySnapshot) -> bool {
+        s.comparisons >= self.min_samples && s.agreement >= self.promote_agreement
+    }
+}
+
+/// Deterministic canary routing: FNV-1a over the query's little-endian
+/// feature bytes selects a stable slice of the keyspace, so the same
+/// vector always lands on the same slot (replays stay bit-identical)
+/// and the routed share converges to `fraction` across distinct
+/// queries.
+pub fn routes_to_canary(x: &[f32], fraction: f64) -> bool {
+    if !(fraction > 0.0) {
+        return false;
+    }
+    if fraction >= 1.0 {
+        return true;
+    }
+    let mut bytes = Vec::with_capacity(x.len() * 4);
+    for v in x {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    (fnv1a(&bytes) % 10_000) < (fraction * 10_000.0).round() as u64
+}
+
+/// Decision agreement for canary comparison: the served label/class,
+/// not the raw margin — two healthy models legitimately differ in
+/// margins; the canary question is "would the caller see a different
+/// answer".
+pub fn decisions_agree(a: &Decision, b: &Decision) -> bool {
+    match (a, b) {
+        (Decision::Binary { label: la, .. }, Decision::Binary { label: lb, .. }) => la == lb,
+        (
+            Decision::Multiclass { class: ca, .. },
+            Decision::Multiclass { class: cb, .. },
+        ) => ca == cb,
+        _ => false,
+    }
+}
+
+/// Minimal JSON string escaping for hand-rolled serialization.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Point-in-time view of an active canary deploy (surfaced by the
+/// `/v1/models` listing and `/healthz`).
+#[derive(Clone, Debug)]
+pub struct CanaryView {
+    /// Description of the candidate artifact in the canary slot.
+    pub description: String,
+    /// Guardrail policy in force.
+    pub policy: CanaryPolicy,
+    /// Agreement/latency/error window so far.
+    pub stats: CanarySnapshot,
+    /// Incumbent 5xx-class errors (worker panics + timeouts) since the
+    /// canary started — the baseline the canary error count is compared
+    /// against.
+    pub incumbent_errors_delta: u64,
+}
+
+impl CanaryView {
+    /// Render as a JSON object (hand-rolled; the crate has no serde).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"description\":\"{}\",\"fraction\":{:.4},\"min_samples\":{},\
+             \"promote_agreement\":{:.4},\"agreement_floor\":{:.4},\
+             \"max_latency_ratio\":{:.2},\"max_canary_errors\":{},\
+             \"incumbent_errors_delta\":{},\"window\":{}}}",
+            json_escape(&self.description),
+            self.policy.fraction,
+            self.policy.min_samples,
+            self.policy.promote_agreement,
+            self.policy.agreement_floor,
+            self.policy.max_latency_ratio,
+            self.policy.max_canary_errors,
+            self.incumbent_errors_delta,
+            self.stats.to_json(),
+        )
+    }
+}
+
+/// Promotion/rollback history of one managed model. Outlives any single
+/// canary: the counters and the last rollback reason stay visible after
+/// the canary state itself retires.
+#[derive(Clone, Debug)]
+pub struct LifecycleView {
+    /// Canaries promoted into the incumbent slot.
+    pub promotions: u64,
+    /// Canaries rolled back (manual or guardrail breach).
+    pub rollbacks: u64,
+    /// Reason recorded by the most recent rollback.
+    pub last_rollback: Option<String>,
+    /// The active canary, if any.
+    pub canary: Option<CanaryView>,
+}
+
+impl LifecycleView {
+    /// Render as a JSON object (hand-rolled; the crate has no serde).
+    pub fn to_json(&self) -> String {
+        let reason = match &self.last_rollback {
+            Some(r) => format!("\"{}\"", json_escape(r)),
+            None => "null".to_string(),
+        };
+        let canary = match &self.canary {
+            Some(c) => c.to_json(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"promotions\":{},\"rollbacks\":{},\"last_rollback\":{reason},\"canary\":{canary}}}",
+            self.promotions, self.rollbacks
+        )
+    }
+}
+
+/// One in-flight canary deploy riding beside an incumbent engine.
+struct CanaryState {
+    scorer: Arc<ArtifactScorer>,
+    description: String,
+    policy: CanaryPolicy,
+    stats: Arc<CanaryStats>,
+    /// Incumbent worker_panics + timeouts when the canary started (the
+    /// 5xx-delta baseline).
+    incumbent_errors_at_start: u64,
+}
 
 /// Lock a mutex, recovering the guard if a previous holder panicked.
 /// Everything these mutexes protect (routing/override/breaker maps, a
@@ -165,6 +396,16 @@ pub struct ManagedEngine {
     /// Milliseconds since the manager's epoch of the last predict-path
     /// acquisition (the idle-reap clock).
     last_used_ms: AtomicU64,
+    /// Active canary deploy, if any (a second scorer beside the slot).
+    canary: Mutex<Option<CanaryState>>,
+    /// Canaries promoted into the incumbent slot.
+    promotions: AtomicU64,
+    /// Canaries rolled back (manual or guardrail breach).
+    rollbacks: AtomicU64,
+    /// Reason recorded by the most recent rollback.
+    last_rollback: Mutex<Option<String>>,
+    /// Fault plan shared with the engine (the canary hooks fire here).
+    faults: Arc<FaultPlan>,
 }
 
 impl ManagedEngine {
@@ -175,7 +416,7 @@ impl ManagedEngine {
         faults: Arc<FaultPlan>,
     ) -> Result<ManagedEngine> {
         let slot = Arc::new(ModelSlot::new(artifact)?);
-        let engine = Engine::with_slot_faults(Arc::clone(&slot), cfg, faults)?;
+        let engine = Engine::with_slot_faults(Arc::clone(&slot), cfg, Arc::clone(&faults))?;
         Ok(ManagedEngine {
             name: name.to_string(),
             engine,
@@ -183,6 +424,11 @@ impl ManagedEngine {
             reload_lock: Mutex::new(()),
             last_touch: AtomicU64::new(0),
             last_used_ms: AtomicU64::new(0),
+            canary: Mutex::new(None),
+            promotions: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            last_rollback: Mutex::new(None),
+            faults,
         })
     }
 
@@ -219,6 +465,165 @@ impl ManagedEngine {
         self.engine.reload(artifact)?;
         *lock_recover(&self.description) = artifact.describe();
         Ok(())
+    }
+
+    /// Point-in-time promotion/rollback history plus the active canary.
+    pub fn lifecycle(&self) -> LifecycleView {
+        LifecycleView {
+            promotions: self.promotions.load(Ordering::Relaxed),
+            rollbacks: self.rollbacks.load(Ordering::Relaxed),
+            last_rollback: lock_recover(&self.last_rollback).clone(),
+            canary: self.canary_view(),
+        }
+    }
+
+    /// The active canary deploy's view, if one is riding.
+    pub fn canary_view(&self) -> Option<CanaryView> {
+        let g = lock_recover(&self.canary);
+        g.as_ref().map(|c| {
+            let s = self.engine.stats();
+            CanaryView {
+                description: c.description.clone(),
+                policy: c.policy,
+                stats: c.stats.snapshot(),
+                incumbent_errors_delta: (s.worker_panics + s.timeouts)
+                    .saturating_sub(c.incumbent_errors_at_start),
+            }
+        })
+    }
+
+    /// Start (or restart, resetting the window) a canary deploy:
+    /// `artifact` is prepared into a second scorer beside the incumbent
+    /// slot. The incumbent keeps answering every request that does not
+    /// hash into the canary fraction, and nothing about its slot changes
+    /// until promotion.
+    pub fn start_canary(&self, artifact: &ModelArtifact, policy: CanaryPolicy) -> Result<String> {
+        let scorer = Arc::new(ArtifactScorer::new(artifact)?);
+        if scorer.dim() != self.engine.dim() {
+            return Err(Error::invalid(format!(
+                "canary model expects {} features, incumbent serves {}",
+                scorer.dim(),
+                self.engine.dim()
+            )));
+        }
+        let description = artifact.describe();
+        let s = self.engine.stats();
+        *lock_recover(&self.canary) = Some(CanaryState {
+            scorer,
+            description: description.clone(),
+            policy,
+            stats: Arc::new(CanaryStats::new()),
+            incumbent_errors_at_start: s.worker_panics + s.timeouts,
+        });
+        Ok(description)
+    }
+
+    /// Promote the active canary: its already-prepared scorer is
+    /// installed into the incumbent slot atomically (counted as a
+    /// reload) and the canary state retires. Errors when no canary is
+    /// active — a racing auto-promote or rollback may have retired it.
+    pub fn promote_canary(&self) -> Result<String> {
+        let Some(c) = lock_recover(&self.canary).take() else {
+            return Err(Error::Serve(format!(
+                "no canary active for model '{}'",
+                self.name
+            )));
+        };
+        // Same serialization as reload_from: the stored description must
+        // always match the scorer actually installed.
+        let _serialize = lock_recover(&self.reload_lock);
+        self.engine.install(Arc::clone(&c.scorer));
+        *lock_recover(&self.description) = c.description.clone();
+        self.promotions.fetch_add(1, Ordering::Relaxed);
+        Ok(c.description)
+    }
+
+    /// Roll back the active canary, recording `reason`. The incumbent
+    /// was never touched; this just retires the candidate. Errors when
+    /// no canary is active.
+    pub fn rollback_canary(&self, reason: &str) -> Result<String> {
+        self.abort_canary(reason)
+            .ok_or_else(|| Error::Serve(format!("no canary active for model '{}'", self.name)))
+    }
+
+    /// Rollback that tolerates a racing retire (the guardrail path: two
+    /// threads may breach simultaneously; only the first counts).
+    fn abort_canary(&self, reason: &str) -> Option<String> {
+        let taken = lock_recover(&self.canary).take();
+        taken.map(|c| {
+            self.rollbacks.fetch_add(1, Ordering::Relaxed);
+            *lock_recover(&self.last_rollback) = Some(reason.to_string());
+            c.description
+        })
+    }
+
+    /// Canary interception for one parsed query. `Some(decision)` when
+    /// an active canary answered `x` (the vector hashed into the canary
+    /// fraction and the candidate scored it — possibly promoting
+    /// itself); `None` when no canary is active, the vector routes to
+    /// the incumbent, the dimension does not match (the engine path
+    /// produces the proper client error), or the canary failed or rolled
+    /// back on this very request (the incumbent answers, untouched — a
+    /// breach retires the canary *before* its answer is served).
+    pub fn canary_intercept(&self, x: &[f32]) -> Option<Decision> {
+        let (scorer, stats, policy) = {
+            let g = lock_recover(&self.canary);
+            let c = g.as_ref()?;
+            (Arc::clone(&c.scorer), Arc::clone(&c.stats), c.policy)
+        };
+        if x.len() != scorer.dim() || !routes_to_canary(x, policy.fraction) {
+            return None;
+        }
+        // Shadow-score both slots on the direct scorer path, timed
+        // apples to apples (the engine path would fold batching waits
+        // into the incumbent's number).
+        let t0 = Instant::now();
+        let incumbent = self.engine.slot().get().decide(x);
+        let incumbent_ns = t0.elapsed().as_nanos() as u64;
+        let faults = Arc::clone(&self.faults);
+        let t1 = Instant::now();
+        let candidate = catch_unwind(AssertUnwindSafe(|| {
+            if faults.canary_score() {
+                panic!("injected fault: canary scorer panic");
+            }
+            scorer.decide(x)
+        }));
+        let canary_ns = t1.elapsed().as_nanos() as u64;
+        stats.comparisons.fetch_add(1, Ordering::Relaxed);
+        stats.incumbent_ns.fetch_add(incumbent_ns, Ordering::Relaxed);
+        stats.canary_ns.fetch_add(canary_ns, Ordering::Relaxed);
+        let candidate = match candidate {
+            Ok(d) => {
+                let agreed = decisions_agree(&incumbent, &d) && !faults.canary_compare();
+                if agreed {
+                    stats.agreements.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    stats.disagreements.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(d)
+            }
+            Err(_) => {
+                stats.canary_errors.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        };
+        // Control loop: any breach retires the canary before its answer
+        // is ever served; sustained agreement promotes it.
+        let snap = stats.snapshot();
+        if let Some(reason) = policy.breach(&snap) {
+            self.abort_canary(&reason);
+            return None;
+        }
+        if policy.promotable(&snap) {
+            // A racing thread may have promoted or rolled back already;
+            // the candidate's answer stands either way — it came from
+            // the scorer being installed.
+            let _ = self.promote_canary();
+        }
+        if candidate.is_some() {
+            stats.routed.fetch_add(1, Ordering::Relaxed);
+        }
+        candidate
     }
 }
 
@@ -709,6 +1114,33 @@ impl EngineManager {
             }
         }
         Ok(desc)
+    }
+
+    /// Canary reload: load `name` fresh from the registry (through the
+    /// circuit breaker) into a canary slot beside the running incumbent.
+    /// When the model is not running there is no incumbent to guard, so
+    /// this degrades to a plain [`EngineManager::reload`] spawn. Returns
+    /// the candidate description and whether a canary actually started.
+    pub fn reload_canary(&self, name: &str, policy: CanaryPolicy) -> Result<(String, bool)> {
+        self.reload_canary_at(name, policy, Instant::now())
+    }
+
+    /// [`EngineManager::reload_canary`] with an injectable clock for the
+    /// circuit breaker.
+    pub fn reload_canary_at(
+        &self,
+        name: &str,
+        policy: CanaryPolicy,
+        now: Instant,
+    ) -> Result<(String, bool)> {
+        let existing = lock_recover(&self.engines).get(name).cloned();
+        let Some(me) = existing else {
+            return Ok((self.reload_at(name, now)?, false));
+        };
+        let artifact = self.checked_load(name, now)?;
+        let desc = me.start_canary(&artifact, policy)?;
+        self.touch(&me);
+        Ok((desc, true))
     }
 
     /// Drop the engine for `name` (outstanding `Arc`s keep answering
@@ -1281,6 +1713,262 @@ mod tests {
         assert_eq!(me.stats().reloads, 1);
         assert_eq!(plan.injected().load_truncations, 1);
         assert_eq!(plan.injected().load_errors, 2);
+    }
+
+    /// Like `axis_model`, but with the decision sign flipped: disagrees
+    /// with `axis_model` on the served label for every query.
+    fn flipped_axis_model(gamma: f64) -> SvmModel {
+        SvmModel {
+            sv_coef: vec![-1.0, 1.0],
+            sv_labels: vec![-1, 1],
+            ..axis_model(gamma)
+        }
+    }
+
+    /// A tight test policy: everything routes to the canary, promotion
+    /// after 3 clean comparisons.
+    fn test_policy() -> CanaryPolicy {
+        CanaryPolicy {
+            fraction: 1.0,
+            min_samples: 3,
+            ..CanaryPolicy::default()
+        }
+    }
+
+    #[test]
+    fn canary_policy_breach_and_promotion_rules() {
+        let p = CanaryPolicy::default();
+        let mut s = CanarySnapshot {
+            comparisons: 0,
+            agreements: 0,
+            disagreements: 0,
+            canary_errors: 0,
+            routed: 0,
+            agreement: 1.0,
+            incumbent_mean_ms: 1.0,
+            canary_mean_ms: 1.0,
+            latency_ratio: 1.0,
+        };
+        assert!(p.breach(&s).is_none(), "empty window is healthy");
+        assert!(!p.promotable(&s), "empty window cannot promote");
+        // Agreement floor trips from the very first comparison.
+        s.comparisons = 1;
+        s.agreement = 0.0;
+        let r = p.breach(&s).expect("floor breach");
+        assert!(r.contains("agreement"), "{r}");
+        // Error burst trips regardless of agreement.
+        s.agreement = 1.0;
+        s.canary_errors = CANARY_MAX_ERRORS;
+        let r = p.breach(&s).expect("error breach");
+        assert!(r.contains("error burst"), "{r}");
+        // Latency ratio needs its own sample minimum.
+        s.canary_errors = 0;
+        s.latency_ratio = CANARY_MAX_LATENCY_RATIO * 2.0;
+        assert!(p.breach(&s).is_none(), "too few samples for latency");
+        s.comparisons = CANARY_LATENCY_MIN_SAMPLES;
+        let r = p.breach(&s).expect("latency breach");
+        assert!(r.contains("latency"), "{r}");
+        // Promotion: enough samples and high agreement.
+        s.latency_ratio = 1.0;
+        s.comparisons = CANARY_MIN_SAMPLES;
+        s.agreement = 1.0;
+        assert!(p.promotable(&s));
+        s.agreement = 0.95;
+        assert!(!p.promotable(&s), "0.95 < promote threshold");
+    }
+
+    #[test]
+    fn canary_routing_is_deterministic_and_respects_fraction_bounds() {
+        let x = [0.9f32, 0.3];
+        assert!(!routes_to_canary(&x, 0.0));
+        assert!(!routes_to_canary(&x, -1.0));
+        assert!(routes_to_canary(&x, 1.0));
+        assert!(routes_to_canary(&x, 2.0));
+        // Mid fractions follow the FNV-1a hash of the feature bytes.
+        let mut bytes = Vec::new();
+        for v in &x {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let slot = fnv1a(&bytes) % 10_000;
+        for pct in [1u64, 25, 50, 75, 99] {
+            let f = pct as f64 / 100.0;
+            assert_eq!(routes_to_canary(&x, f), slot < pct * 100, "pct={pct}");
+        }
+        // Same vector, same verdict, every time.
+        assert_eq!(routes_to_canary(&x, 0.5), routes_to_canary(&x, 0.5));
+    }
+
+    #[test]
+    fn canary_agreement_promotes_after_min_samples() {
+        let reg = tmp_registry("canary_promote");
+        save_axis_models(&reg, &["m"]);
+        let mgr = EngineManager::open(reg, quick_cfg());
+        let me = mgr.engine("m").unwrap();
+        let Decision::Binary { value: before, .. } = me.engine().predict(&[0.9, 0.3]).unwrap()
+        else {
+            panic!("binary expected")
+        };
+        // Same-content candidate: every comparison agrees.
+        let desc = me
+            .start_canary(&ModelArtifact::Svm(axis_model(0.2)), test_policy())
+            .unwrap();
+        assert!(me.canary_view().is_some());
+        for i in 0..3 {
+            let d = me.canary_intercept(&[0.9, 0.3]);
+            assert!(d.is_some(), "comparison {i} must answer from the canary");
+        }
+        // Third comparison hit min_samples with agreement 1.0: promoted.
+        let lc = me.lifecycle();
+        assert_eq!(lc.promotions, 1);
+        assert_eq!(lc.rollbacks, 0);
+        assert!(lc.canary.is_none(), "canary retired on promotion");
+        assert_eq!(me.describe(), desc);
+        assert_eq!(me.stats().reloads, 1, "promotion counts as a reload");
+        // The promoted scorer serves bit-identically to its shadow runs
+        // (same artifact content here, so also identical to before).
+        let Decision::Binary { value: after, .. } = me.engine().predict(&[0.9, 0.3]).unwrap()
+        else {
+            panic!("binary expected")
+        };
+        assert_eq!(before.to_bits(), after.to_bits());
+        // No canary left: interception declines.
+        assert!(me.canary_intercept(&[0.9, 0.3]).is_none());
+        assert!(me.promote_canary().is_err());
+    }
+
+    #[test]
+    fn disagreeing_canary_rolls_back_before_serving_and_incumbent_is_untouched() {
+        let reg = tmp_registry("canary_disagree");
+        save_axis_models(&reg, &["m"]);
+        let mgr = EngineManager::open(reg, quick_cfg());
+        let me = mgr.engine("m").unwrap();
+        let Decision::Binary { value: before, .. } = me.engine().predict(&[0.9, 0.3]).unwrap()
+        else {
+            panic!("binary expected")
+        };
+        // A candidate that flips every label: first comparison disagrees,
+        // agreement 0.0 < floor, rollback — and the flipped answer is
+        // never served.
+        me.start_canary(&ModelArtifact::Svm(flipped_axis_model(0.2)), test_policy())
+            .unwrap();
+        assert!(
+            me.canary_intercept(&[0.9, 0.3]).is_none(),
+            "breaching comparison must fall back to the incumbent"
+        );
+        let lc = me.lifecycle();
+        assert_eq!(lc.rollbacks, 1);
+        assert_eq!(lc.promotions, 0);
+        assert!(lc.canary.is_none());
+        let reason = lc.last_rollback.expect("reason recorded");
+        assert!(reason.contains("agreement"), "{reason}");
+        assert!(reason.contains("below floor"), "{reason}");
+        // The incumbent slot never changed: bit-identical decisions.
+        let Decision::Binary { value: after, .. } = me.engine().predict(&[0.9, 0.3]).unwrap()
+        else {
+            panic!("binary expected")
+        };
+        assert_eq!(before.to_bits(), after.to_bits());
+        assert_eq!(me.stats().reloads, 0);
+        assert!(lc.to_json().contains("\"rollbacks\":1"), "{}", lc.to_json());
+        assert!(lc.to_json().contains("below floor"), "{}", lc.to_json());
+    }
+
+    #[test]
+    fn injected_disagreement_and_panic_faults_drive_rollbacks() {
+        let reg = tmp_registry("canary_faults");
+        save_axis_models(&reg, &["m"]);
+        let plan = FaultPlan::disarmed();
+        let mut mgr = EngineManager::open(reg, quick_cfg());
+        mgr.set_faults(Arc::clone(&plan));
+        let me = mgr.engine("m").unwrap();
+        // Forced disagreement on the first comparison, even though the
+        // candidate is byte-for-byte the same model.
+        plan.disagree_canary(1, 1);
+        me.start_canary(&ModelArtifact::Svm(axis_model(0.2)), test_policy())
+            .unwrap();
+        assert!(me.canary_intercept(&[0.9, 0.3]).is_none());
+        assert_eq!(me.lifecycle().rollbacks, 1);
+        assert_eq!(plan.injected().canary_disagreements, 1);
+        // Forced canary panic with a one-strike error budget.
+        plan.panic_canary(1);
+        let strict = CanaryPolicy {
+            max_canary_errors: 1,
+            ..test_policy()
+        };
+        me.start_canary(&ModelArtifact::Svm(axis_model(0.2)), strict)
+            .unwrap();
+        assert!(me.canary_intercept(&[0.9, 0.3]).is_none());
+        let lc = me.lifecycle();
+        assert_eq!(lc.rollbacks, 2);
+        let reason = lc.last_rollback.expect("reason recorded");
+        assert!(reason.contains("error burst"), "{reason}");
+        assert_eq!(plan.injected().canary_panics, 1);
+        // Incumbent still serves.
+        assert!(me.engine().predict(&[0.9, 0.3]).is_ok());
+    }
+
+    #[test]
+    fn manual_promote_and_rollback_and_dim_guard() {
+        let reg = tmp_registry("canary_manual");
+        save_axis_models(&reg, &["m"]);
+        let mgr = EngineManager::open(reg, quick_cfg());
+        let me = mgr.engine("m").unwrap();
+        // Manual rollback retires the candidate and records the reason.
+        me.start_canary(&ModelArtifact::Svm(axis_model(2.0)), test_policy())
+            .unwrap();
+        me.rollback_canary("manual rollback").unwrap();
+        assert!(me.rollback_canary("again").is_err(), "no canary left");
+        assert_eq!(
+            me.lifecycle().last_rollback.as_deref(),
+            Some("manual rollback")
+        );
+        // Manual promote installs the candidate scorer.
+        let Decision::Binary { value: before, .. } = me.engine().predict(&[0.9, 0.3]).unwrap()
+        else {
+            panic!("binary expected")
+        };
+        me.start_canary(&ModelArtifact::Svm(axis_model(2.0)), test_policy())
+            .unwrap();
+        me.promote_canary().unwrap();
+        let Decision::Binary { value: after, .. } = me.engine().predict(&[0.9, 0.3]).unwrap()
+        else {
+            panic!("binary expected")
+        };
+        assert_ne!(before, after, "promotion must change decisions");
+        assert_eq!(me.lifecycle().promotions, 1);
+        // A candidate with the wrong dimensionality is refused up front.
+        let wide = SvmModel {
+            sv: Matrix::from_vec(2, 3, vec![1.0, 0.0, 0.0, -1.0, 0.0, 0.0]).unwrap(),
+            ..axis_model(0.5)
+        };
+        let err = me
+            .start_canary(&ModelArtifact::Svm(wide), test_policy())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("features"), "{err}");
+        assert!(me.canary_view().is_none());
+    }
+
+    #[test]
+    fn reload_canary_guards_running_engines_and_spawns_cold_ones() {
+        let reg = tmp_registry("reload_canary");
+        save_axis_models(&reg, &["m"]);
+        let mgr = EngineManager::open(reg, quick_cfg());
+        // Cold model: no incumbent to guard, degrade to a plain spawn.
+        let (_, canaried) = mgr.reload_canary("m", test_policy()).unwrap();
+        assert!(!canaried);
+        assert_eq!(mgr.loaded_names(), vec!["m"]);
+        // Running model: publish a new version, canary it.
+        mgr.registry()
+            .save("m", &ModelArtifact::Svm(axis_model(2.0)))
+            .unwrap();
+        let (_, canaried) = mgr.reload_canary("m", test_policy()).unwrap();
+        assert!(canaried);
+        let me = mgr.get("m").unwrap();
+        assert!(me.canary_view().is_some());
+        assert_eq!(me.stats().reloads, 0, "canary start is not a slot swap");
+        // Missing models stay client errors.
+        assert!(mgr.reload_canary("ghost", test_policy()).is_err());
     }
 
     #[test]

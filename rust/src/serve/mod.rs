@@ -59,22 +59,26 @@ pub mod server;
 pub mod stats;
 
 pub use engine::{
-    BatchQueue, Decision, Engine, EngineConfig, FlushPolicy, FlushReason, ModelSlot, Ticket,
+    ArtifactScorer, BatchQueue, Decision, Engine, EngineConfig, FlushPolicy, FlushReason,
+    ModelSlot, Ticket,
 };
 pub use faults::{FaultCounters, FaultPlan, LoadFault};
 pub use manager::{
-    CircuitState, CircuitView, EngineManager, ManagedEngine, ManagerConfig, BREAKER_COOLDOWN,
-    BREAKER_THRESHOLD,
+    decisions_agree, routes_to_canary, CanaryPolicy, CanaryView, CircuitState, CircuitView,
+    EngineManager, LifecycleView, ManagedEngine, ManagerConfig, BREAKER_COOLDOWN,
+    BREAKER_THRESHOLD, CANARY_AGREEMENT_FLOOR, CANARY_MAX_ERRORS, CANARY_MIN_SAMPLES,
+    CANARY_PROMOTE_AGREEMENT,
 };
 pub use registry::{
-    detect_format, load_artifact, save_artifact, save_artifact_v1, MigrationReport, ModelArtifact,
-    ModelFormat, Registry,
+    detect_format, load_artifact, save_artifact, save_artifact_v1, write_atomic, MigrationReport,
+    ModelArtifact, ModelFormat, Registry, VersionEntry, DEFAULT_KEEP_VERSIONS,
 };
-pub use route::{Ring, Router, RouterConfig};
+pub use route::{failover_backoff, BackendsUpdate, Ring, Router, RouterConfig};
 pub use server::{
     http_pipeline_on, http_request, http_request_on, http_request_with_auth, ServeState, Server,
     MAX_PIPELINE_DEPTH, STREAM_THRESHOLD,
 };
 pub use stats::{
-    aggregate, BatchStats, EngineStats, FleetCapacity, LatencyHistogram, StatsSnapshot,
+    aggregate, BatchStats, CanarySnapshot, CanaryStats, EngineStats, FleetCapacity,
+    LatencyHistogram, StatsSnapshot,
 };

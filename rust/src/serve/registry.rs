@@ -34,6 +34,14 @@
 //! [`Registry`] is a directory of named `<name>.model` files with
 //! save / load / list / migrate operations — the unit the serving layer
 //! loads and hot-reloads from.
+//!
+//! **Versioning:** overwriting a name archives the displaced artifact as
+//! a dot-prefixed version file (`.{name}.{n}.model`, invisible to
+//! [`Registry::list`] like every other dot-file in the directory), so
+//! the previous model stays reachable for [`Registry::rollback`].
+//! [`Registry::history`] lists the archived versions oldest-first; the
+//! registry keeps the last [`DEFAULT_KEEP_VERSIONS`] per name (tunable
+//! via [`Registry::set_keep_versions`]) and prunes older ones on save.
 
 use crate::coordinator::jobs::{ClassJob, MulticlassModel};
 use crate::error::{Error, Result};
@@ -53,6 +61,8 @@ pub const MAGIC: &str = "mlsvm-model";
 pub const VERSION: u32 = 1;
 /// Registry file extension.
 pub const EXTENSION: &str = "model";
+/// How many archived versions a save keeps per model name by default.
+pub const DEFAULT_KEEP_VERSIONS: usize = 3;
 
 /// On-disk format of a model file, as sniffed by [`detect_format`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -223,7 +233,7 @@ fn write_multiclass_body<W: Write>(w: &mut W, mc: &MulticlassModel) -> Result<()
 /// either the old artifact or the new one — never a torn file — and the
 /// only possible litter is a dot-prefixed `.tmp` that
 /// [`Registry::list`] ignores.
-fn write_atomic(
+pub fn write_atomic(
     path: &Path,
     write_body: impl FnOnce(&mut BufWriter<std::fs::File>) -> Result<()>,
 ) -> Result<()> {
@@ -589,6 +599,9 @@ pub struct Registry {
     /// Fault-injection plan for the load path (disarmed by default; see
     /// [`crate::serve::faults`]).
     faults: Arc<FaultPlan>,
+    /// Archived versions kept per model name (older ones are pruned on
+    /// save/rollback).
+    keep_versions: usize,
 }
 
 fn validate_name(name: &str) -> Result<()> {
@@ -614,7 +627,13 @@ impl Registry {
         Ok(Registry {
             dir,
             faults: FaultPlan::disarmed(),
+            keep_versions: DEFAULT_KEEP_VERSIONS,
         })
+    }
+
+    /// Change how many archived versions each save keeps per name.
+    pub fn set_keep_versions(&mut self, n: usize) {
+        self.keep_versions = n;
     }
 
     /// Arm a fault plan on this registry's load path (chaos tests and
@@ -637,11 +656,126 @@ impl Registry {
     /// named temp file in the registry directory, fsyncs and renames, so
     /// neither a concurrent `load`/reload, a racing save of the same
     /// name, nor a crash mid-save ever exposes a half-written model.
+    ///
+    /// Overwriting an existing name first archives the displaced
+    /// artifact as the next dot-prefixed version file (see
+    /// [`Registry::history`]), so the previous model stays reachable for
+    /// [`Registry::rollback`]; versions beyond the keep limit are pruned
+    /// afterwards. The current artifact is *copied* into the archive
+    /// slot before the new one renames over it, so a crash at any point
+    /// leaves `name` serving either the old or the new model — never
+    /// neither.
     pub fn save(&self, name: &str, artifact: &ModelArtifact) -> Result<PathBuf> {
         validate_name(name)?;
         let path = self.path_of(name);
+        if path.exists() {
+            self.archive_current(name, &path)?;
+        }
         save_artifact(&path, artifact)?;
+        self.prune_versions(name)?;
         Ok(path)
+    }
+
+    /// Archive file a version of `name` maps to.
+    fn version_path(&self, name: &str, version: u64) -> PathBuf {
+        self.dir.join(format!(".{name}.{version}.{EXTENSION}"))
+    }
+
+    /// Copy the bytes at `current` into the next archive slot for
+    /// `name`, crash-safely (temp + fsync + rename; `current` itself is
+    /// untouched). Returns the archived version number.
+    fn archive_current(&self, name: &str, current: &Path) -> Result<u64> {
+        let next = self.history(name)?.last().map_or(0, |v| v.version) + 1;
+        let bytes = std::fs::read(current)?;
+        write_atomic(&self.version_path(name, next), |w| {
+            w.write_all(&bytes)?;
+            Ok(())
+        })?;
+        Ok(next)
+    }
+
+    /// Delete archived versions of `name` beyond the keep limit
+    /// (oldest first).
+    fn prune_versions(&self, name: &str) -> Result<()> {
+        let vs = self.history(name)?;
+        if vs.len() > self.keep_versions {
+            for v in &vs[..vs.len() - self.keep_versions] {
+                let _ = std::fs::remove_file(&v.path);
+            }
+        }
+        Ok(())
+    }
+
+    /// Archived versions of `name`, oldest first (empty when the name
+    /// was never overwritten). The *current* artifact is not an entry —
+    /// it lives at [`Registry::path_of`].
+    pub fn history(&self, name: &str) -> Result<Vec<VersionEntry>> {
+        validate_name(name)?;
+        let prefix = format!(".{name}.");
+        let suffix = format!(".{EXTENSION}");
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let fname = entry.file_name();
+            let Some(fname) = fname.to_str() else {
+                continue;
+            };
+            let Some(mid) = fname
+                .strip_prefix(&prefix)
+                .and_then(|rest| rest.strip_suffix(&suffix))
+            else {
+                continue;
+            };
+            if mid.is_empty() || !mid.bytes().all(|b| b.is_ascii_digit()) {
+                continue;
+            }
+            let Ok(version) = mid.parse::<u64>() else {
+                continue;
+            };
+            let meta = entry.metadata()?;
+            out.push(VersionEntry {
+                version,
+                bytes: meta.len(),
+                modified: meta.modified().ok(),
+                path: entry.path(),
+            });
+        }
+        out.sort_by_key(|v| v.version);
+        Ok(out)
+    }
+
+    /// Load one archived version of `name` (see [`Registry::history`]).
+    pub fn load_version(&self, name: &str, version: u64) -> Result<ModelArtifact> {
+        validate_name(name)?;
+        let path = self.version_path(name, version);
+        if !path.exists() {
+            return Err(Error::invalid(format!(
+                "model '{name}' has no archived version {version} in {}",
+                self.dir.display()
+            )));
+        }
+        load_artifact(path)
+    }
+
+    /// Roll `name` back to its newest archived version: the displaced
+    /// current artifact is archived first (so a rollback is itself
+    /// reversible and the bad model stays inspectable), then the
+    /// archived file renames into place atomically. Returns the restored
+    /// version number.
+    pub fn rollback(&self, name: &str) -> Result<u64> {
+        validate_name(name)?;
+        let Some(prev) = self.history(name)?.pop() else {
+            return Err(Error::invalid(format!(
+                "model '{name}' has no archived version to roll back to"
+            )));
+        };
+        let current = self.path_of(name);
+        if current.exists() {
+            self.archive_current(name, &current)?;
+        }
+        std::fs::rename(&prev.path, &current)?;
+        self.prune_versions(name)?;
+        Ok(prev.version)
     }
 
     /// Load the named model (versioned or legacy format).
@@ -718,6 +852,20 @@ impl Registry {
         }
         Ok(out)
     }
+}
+
+/// One archived model version (see [`Registry::history`]).
+#[derive(Clone, Debug)]
+pub struct VersionEntry {
+    /// Monotone version number (higher = newer).
+    pub version: u64,
+    /// Archived file size in bytes.
+    pub bytes: u64,
+    /// When the archive file was written (filesystem mtime), when the
+    /// platform reports one.
+    pub modified: Option<std::time::SystemTime>,
+    /// The archive file itself (dot-prefixed, invisible to `list`).
+    pub path: PathBuf,
 }
 
 /// One non-v2 model visited by [`Registry::migrate`].
@@ -1085,6 +1233,90 @@ mod tests {
         let c = plan.injected();
         assert_eq!((c.load_errors, c.load_truncations), (1, 1));
         assert_eq!(c.total(), 2);
+    }
+
+    #[test]
+    fn overwriting_archives_and_rollback_restores_bit_exactly() {
+        let dir = tmp_dir("versions");
+        let reg = Registry::open(dir.join("models")).unwrap();
+        let (a, b) = (tiny_svm(0.1), tiny_svm(0.9));
+        reg.save("m", &ModelArtifact::Svm(a.clone())).unwrap();
+        assert!(reg.history("m").unwrap().is_empty(), "first save: no archive");
+        let a_bytes = std::fs::read(reg.path_of("m")).unwrap();
+
+        reg.save("m", &ModelArtifact::Svm(b.clone())).unwrap();
+        let hist = reg.history("m").unwrap();
+        assert_eq!(hist.len(), 1);
+        assert_eq!(hist[0].version, 1);
+        assert_eq!(hist[0].bytes, a_bytes.len() as u64);
+        // Archives are dot-files: invisible to list(), reachable by version.
+        assert_eq!(reg.list().unwrap(), vec!["m"]);
+        let ModelArtifact::Svm(archived) = reg.load_version("m", 1).unwrap() else {
+            panic!("kind preserved");
+        };
+        for x in probes() {
+            assert_eq!(archived.decision(&x), a.decision(&x));
+        }
+        assert!(reg.load_version("m", 9).is_err());
+
+        // Rollback: the displaced current is archived, v1 restores.
+        assert_eq!(reg.rollback("m").unwrap(), 1);
+        assert_eq!(
+            std::fs::read(reg.path_of("m")).unwrap(),
+            a_bytes,
+            "rollback restores the archived bytes exactly"
+        );
+        let hist = reg.history("m").unwrap();
+        assert_eq!(
+            hist.iter().map(|v| v.version).collect::<Vec<_>>(),
+            vec![2],
+            "the rolled-back-from model stays reachable"
+        );
+        let ModelArtifact::Svm(bad) = reg.load_version("m", 2).unwrap() else {
+            panic!("kind preserved");
+        };
+        for x in probes() {
+            assert_eq!(bad.decision(&x), b.decision(&x));
+        }
+        // Rolling back again flips to the other model (the bad artifact
+        // was archived, so a rollback is itself reversible).
+        assert_eq!(reg.rollback("m").unwrap(), 2);
+        let ModelArtifact::Svm(now) = reg.load("m").unwrap() else {
+            panic!("kind preserved");
+        };
+        for x in probes() {
+            assert_eq!(now.decision(&x), b.decision(&x));
+        }
+        // A name that was never overwritten has nothing to restore.
+        reg.save("fresh", &ModelArtifact::Svm(tiny_svm(0.5))).unwrap();
+        assert!(reg.rollback("fresh").is_err());
+    }
+
+    #[test]
+    fn version_pruning_keeps_last_n() {
+        let dir = tmp_dir("version_prune");
+        let mut reg = Registry::open(dir.join("models")).unwrap();
+        reg.set_keep_versions(2);
+        for g in [1, 2, 3, 4, 5] {
+            reg.save("m", &ModelArtifact::Svm(tiny_svm(g as f64 * 0.1)))
+                .unwrap();
+        }
+        let hist = reg.history("m").unwrap();
+        assert_eq!(
+            hist.iter().map(|v| v.version).collect::<Vec<_>>(),
+            vec![3, 4],
+            "only the newest 2 archives survive"
+        );
+        assert!(hist.iter().all(|v| v.modified.is_some()));
+        // Dotted model names never collide with version files.
+        reg.save("m.2", &ModelArtifact::Svm(tiny_svm(0.7))).unwrap();
+        reg.save("m.2", &ModelArtifact::Svm(tiny_svm(0.8))).unwrap();
+        assert_eq!(reg.history("m.2").unwrap().len(), 1);
+        assert_eq!(
+            reg.history("m").unwrap().len(),
+            2,
+            "archives of 'm.2' are not versions of 'm'"
+        );
     }
 
     #[test]

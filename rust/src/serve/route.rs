@@ -20,12 +20,16 @@
 //!   the proxy until a probe brings them back.
 //! * **Failover & retries**: a request whose owner is down (or answers
 //!   `503`) walks the ring to the next distinct backend under a bounded
-//!   budget ([`RouterConfig::retry_budget`] extra attempts). Retries
-//!   only happen **before any response byte reaches the client** — a
-//!   mid-relay failure closes the connection instead of corrupting it.
-//!   Exhausting the budget answers a `503` with `Retry-After`, never a
-//!   hang: every backend read is bounded by
-//!   [`RouterConfig::proxy_timeout`].
+//!   budget ([`RouterConfig::retry_budget`] extra attempts), sleeping a
+//!   **deterministic exponential backoff with bounded jitter** between
+//!   attempts ([`failover_backoff`]: base doubles per attempt, jitter is
+//!   FNV-1a over the request key so identical requests back off
+//!   identically while different models spread out; total slept time is
+//!   reported as `backoff_ms` in `/stats`). Retries only happen
+//!   **before any response byte reaches the client** — a mid-relay
+//!   failure closes the connection instead of corrupting it. Exhausting
+//!   the budget answers a `503` with `Retry-After`, never a hang: every
+//!   backend read is bounded by [`RouterConfig::proxy_timeout`].
 //! * **Pooling**: completed keep-alive backend exchanges park their
 //!   connection in a small per-backend pool, so steady-state proxying
 //!   pays no connect cost.
@@ -39,9 +43,17 @@
 //!   counters per backend. Legacy unscoped routes (`/predict`,
 //!   `/reload`, …) answer `400` — the router has no default model.
 //! * **Auth**: when [`RouterConfig::auth_token`] is set, mutating
-//!   endpoints (reload/evict) require `Authorization: Bearer` at the
-//!   router, and the token is forwarded on every proxied request so
-//!   token-guarded backends accept it.
+//!   endpoints (reload/evict/promote/rollback) require `Authorization:
+//!   Bearer` at the router, and the token is forwarded on every proxied
+//!   request so token-guarded backends accept it.
+//! * **Live backend reconfiguration**: [`Router::update_backends`]
+//!   replaces the backend set in place (the `mlsvm route
+//!   --backends-file` SIGHUP path). Slots are matched by index:
+//!   unchanged addresses keep their health, pool, counters and ring
+//!   position; changed ones repoint (unhealthy until a probe proves the
+//!   new address); removed slots stop receiving traffic and drop their
+//!   pooled connections; added slots enter rotation only after a health
+//!   pass marks them up.
 //! * **Drain** mirrors the backend server: [`Router::begin_drain`] flips
 //!   `/healthz`, refuses new connections, and lets in-flight proxied
 //!   pipelines finish before closing cleanly (FIN, never RST);
@@ -56,7 +68,7 @@ use crate::serve::server::{
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Virtual nodes per backend on the hash ring. More vnodes smooth the
@@ -89,6 +101,26 @@ const POOL_CAP: usize = 8;
 /// Largest backend `503` body absorbed for retry bookkeeping; bigger
 /// (never expected) drops the connection instead.
 const DISCARD_CAP: usize = 64 * 1024;
+
+/// Base delay of the exponential failover backoff (first retry).
+const BACKOFF_BASE: Duration = Duration::from_millis(5);
+
+/// Cap on any single failover backoff (step + jitter never exceeds it).
+const BACKOFF_CAP: Duration = Duration::from_millis(100);
+
+/// The deterministic backoff slept before failover attempt `attempt`
+/// (1-based): [`BACKOFF_BASE`] doubled per attempt, plus a bounded
+/// jitter (at most 50% of the step) derived from FNV-1a over the
+/// request key and attempt number — the same request backs off
+/// identically every time (testable, reproducible), while retries for
+/// different models spread off the same instant. Clamped to
+/// [`BACKOFF_CAP`].
+pub fn failover_backoff(key: &str, attempt: usize) -> Duration {
+    let base = BACKOFF_BASE.as_millis() as u64;
+    let step = base << attempt.saturating_sub(1).min(4);
+    let jitter = fnv1a(format!("{key}#retry{attempt}").as_bytes()) % (step / 2 + 1);
+    Duration::from_millis((step + jitter).min(BACKOFF_CAP.as_millis() as u64))
+}
 
 /// FNV-1a 64-bit hash — the ring's stable, dependency-free hash.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
@@ -243,10 +275,16 @@ impl Default for RouterConfig {
     }
 }
 
+/// The ring and its backend slots — one coherent unit, swapped together
+/// when the backend set is reconfigured ([`Router::update_backends`]).
+struct Placement {
+    ring: Ring,
+    backends: Vec<Arc<Backend>>,
+}
+
 /// Shared router state (accept loop, connection handlers, health thread).
 struct RouterState {
-    ring: Ring,
-    backends: Vec<Backend>,
+    placement: RwLock<Placement>,
     auth_token: Option<String>,
     retry_budget: usize,
     proxy_timeout: Duration,
@@ -255,7 +293,41 @@ struct RouterState {
     shutdown: AtomicBool,
     proxied: AtomicU64,
     retries: AtomicU64,
+    /// Total milliseconds slept in failover backoffs (reported in
+    /// `/stats`; zero on an unfaulted fleet).
+    backoff_ms: AtomicU64,
     fanouts: AtomicU64,
+}
+
+impl RouterState {
+    /// Snapshot the backend slots (cheap Arc clones). Handlers work off
+    /// the snapshot so a concurrent reconfiguration never invalidates
+    /// their indices mid-request.
+    fn backends(&self) -> Vec<Arc<Backend>> {
+        self.placement
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .backends
+            .clone()
+    }
+}
+
+/// What one [`Router::update_backends`] call changed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BackendsUpdate {
+    /// New slots appended (unhealthy until a health pass).
+    pub added: usize,
+    /// Trailing slots removed (traffic to them stops immediately).
+    pub removed: usize,
+    /// Existing slots whose address changed (unhealthy until probed).
+    pub repointed: usize,
+}
+
+impl BackendsUpdate {
+    /// Whether the call changed anything at all.
+    pub fn changed(&self) -> bool {
+        *self != BackendsUpdate::default()
+    }
 }
 
 /// A running fleet router (shuts down on drop).
@@ -277,8 +349,14 @@ impl Router {
             return Err(Error::Serve("router needs at least one backend".into()));
         }
         let state = Arc::new(RouterState {
-            ring: Ring::new(cfg.backends.len()),
-            backends: cfg.backends.into_iter().map(Backend::new).collect(),
+            placement: RwLock::new(Placement {
+                ring: Ring::new(cfg.backends.len()),
+                backends: cfg
+                    .backends
+                    .into_iter()
+                    .map(|a| Arc::new(Backend::new(a)))
+                    .collect(),
+            }),
             auth_token: cfg.auth_token,
             retry_budget: cfg.retry_budget,
             proxy_timeout: cfg.proxy_timeout,
@@ -287,6 +365,7 @@ impl Router {
             shutdown: AtomicBool::new(false),
             proxied: AtomicU64::new(0),
             retries: AtomicU64::new(0),
+            backoff_ms: AtomicU64::new(0),
             fanouts: AtomicU64::new(0),
         });
         check_round(&state);
@@ -370,24 +449,75 @@ impl Router {
 
     /// The ring slot that owns `model` (placement introspection).
     pub fn place(&self, model: &str) -> usize {
-        self.state.ring.primary(model)
+        self.state
+            .placement
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .ring
+            .primary(model)
     }
 
     /// Current backend addresses, in slot order.
     pub fn backend_addrs(&self) -> Vec<String> {
-        self.state.backends.iter().map(|b| b.addr()).collect()
+        self.state.backends().iter().map(|b| b.addr()).collect()
     }
 
     /// Whether slot `index`'s backend passed its last health probe.
     pub fn backend_healthy(&self, index: usize) -> bool {
-        self.state.backends[index].healthy.load(Ordering::Relaxed)
+        self.state.backends()[index].healthy.load(Ordering::Relaxed)
     }
 
     /// Repoint slot `index` at a new address (a respawned backend on a
     /// fresh port keeps its ring position). The slot is unhealthy until
     /// the next probe proves the new address.
     pub fn set_backend_addr(&self, index: usize, addr: impl Into<String>) {
-        self.state.backends[index].set_addr(addr.into());
+        self.state.backends()[index].set_addr(addr.into());
+    }
+
+    /// Replace the backend set in place (the `--backends-file` SIGHUP
+    /// path). Slots match by index: an unchanged address keeps its
+    /// backend — health, pooled connections, counters and ring position
+    /// intact — so a file re-read that changed nothing is free. A
+    /// changed address repoints the slot, unhealthy until the next
+    /// health pass proves it. Trailing slots beyond the new list are
+    /// removed: the router stops routing to them at once and drops
+    /// their pooled connections (in-flight exchanges finish off the
+    /// snapshot they hold — removal never corrupts a response).
+    /// Appended addresses become new slots that start unhealthy and
+    /// enter rotation only after a health pass marks them up. The ring
+    /// is rebuilt only when the slot count changes (consistent hashing
+    /// keeps most placements). Errors on an empty list, leaving the
+    /// running set untouched.
+    pub fn update_backends(&self, addrs: &[String]) -> Result<BackendsUpdate> {
+        if addrs.is_empty() {
+            return Err(Error::Serve("router needs at least one backend".into()));
+        }
+        let mut g = self
+            .state
+            .placement
+            .write()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut update = BackendsUpdate::default();
+        let old_n = g.backends.len();
+        for (i, addr) in addrs.iter().enumerate() {
+            if i < old_n {
+                if g.backends[i].addr() != *addr {
+                    g.backends[i].set_addr(addr.clone());
+                    update.repointed += 1;
+                }
+            } else {
+                g.backends.push(Arc::new(Backend::new(addr.clone())));
+                update.added += 1;
+            }
+        }
+        if addrs.len() < old_n {
+            update.removed = old_n - addrs.len();
+            g.backends.truncate(addrs.len());
+        }
+        if g.backends.len() != old_n {
+            g.ring = Ring::new(g.backends.len());
+        }
+        Ok(update)
     }
 
     /// Run one synchronous health round now; returns how many backends
@@ -449,7 +579,7 @@ impl Drop for Router {
 fn check_round(state: &RouterState) -> usize {
     let timeout = state.proxy_timeout.min(Duration::from_secs(1));
     let mut up = 0usize;
-    for b in &state.backends {
+    for b in &state.backends() {
         let ok = probe_health(&b.addr(), timeout);
         if ok {
             up += 1;
@@ -546,7 +676,10 @@ fn is_mutation(req: &HttpRequest) -> bool {
         return false;
     }
     match req.path.strip_prefix("/v1/models/") {
-        Some(rest) => matches!(rest.split_once('/'), Some((_, "reload")) | Some((_, "evict"))),
+        Some(rest) => matches!(
+            rest.split_once('/'),
+            Some((_, "reload")) | Some((_, "evict")) | Some((_, "promote")) | Some((_, "rollback"))
+        ),
         None => false,
     }
 }
@@ -825,11 +958,17 @@ fn proxy_model(
     name: &str,
     keep: bool,
 ) -> bool {
-    let order = state.ring.order(name);
+    // Work off one placement snapshot for the whole request: a
+    // concurrent backend reconfiguration swaps the set under us, but
+    // this request's candidate indices stay valid against its snapshot.
+    let (order, backends) = {
+        let g = state.placement.read().unwrap_or_else(|e| e.into_inner());
+        (g.ring.order(name), g.backends.clone())
+    };
     let healthy: Vec<usize> = order
         .iter()
         .copied()
-        .filter(|&i| state.backends[i].healthy.load(Ordering::Relaxed))
+        .filter(|&i| backends[i].healthy.load(Ordering::Relaxed))
         .collect();
     // When nobody is (known) healthy, try the full ring anyway: the
     // health view may be stale and a refusal must come from evidence.
@@ -839,8 +978,14 @@ fn proxy_model(
     for attempt in 0..attempts {
         if attempt > 0 {
             state.retries.fetch_add(1, Ordering::Relaxed);
+            // Back off before walking to the next candidate: a blip
+            // (backend restarting, capacity shed) often clears within
+            // milliseconds, and hammering the ring amplifies it.
+            let wait = failover_backoff(name, attempt);
+            state.backoff_ms.fetch_add(wait.as_millis() as u64, Ordering::Relaxed);
+            std::thread::sleep(wait);
         }
-        let b = &state.backends[candidates[attempt % candidates.len()]];
+        let b = &backends[candidates[attempt % candidates.len()]];
         let (stream, pooled) = match b.take_conn() {
             Some(s) => (s, true),
             None => match connect_backend(&b.addr(), state.proxy_timeout) {
@@ -952,9 +1097,10 @@ fn scan_model_names(doc: &str) -> Vec<String> {
 /// each backend's own listing verbatim.
 fn fleet_models(state: &RouterState) -> Response {
     state.fanouts.fetch_add(1, Ordering::Relaxed);
+    let backends = state.backends();
     let mut names: Vec<String> = Vec::new();
-    let mut per = Vec::with_capacity(state.backends.len());
-    for (i, b) in state.backends.iter().enumerate() {
+    let mut per = Vec::with_capacity(backends.len());
+    for (i, b) in backends.iter().enumerate() {
         let addr = b.addr();
         let doc = addr
             .parse::<SocketAddr>()
@@ -992,7 +1138,7 @@ fn fleet_models(state: &RouterState) -> Response {
         JSON,
         format!(
             "{{\"router\":true,\"backends\":{},\"models\":[{}],\"per_backend\":[{}]}}",
-            state.backends.len(),
+            backends.len(),
             quoted.join(","),
             per.join(",")
         ),
@@ -1010,7 +1156,7 @@ fn fleet_health(state: &RouterState) -> Response {
     }
     let up = check_round(state);
     let mut body = String::from(if up == 0 { "degraded\n" } else { "ok\n" });
-    for (i, b) in state.backends.iter().enumerate() {
+    for (i, b) in state.backends().iter().enumerate() {
         let status = if b.healthy.load(Ordering::Relaxed) {
             "up"
         } else {
@@ -1029,7 +1175,7 @@ fn fleet_health(state: &RouterState) -> Response {
 /// traffic.
 fn fleet_stats(state: &RouterState) -> Response {
     let per: Vec<String> = state
-        .backends
+        .backends()
         .iter()
         .enumerate()
         .map(|(i, b)| {
@@ -1046,9 +1192,10 @@ fn fleet_stats(state: &RouterState) -> Response {
         "200 OK",
         JSON,
         format!(
-            "{{\"router\":{{\"proxied\":{},\"retries\":{},\"fanouts\":{}}},\"backends\":[{}]}}",
+            "{{\"router\":{{\"proxied\":{},\"retries\":{},\"backoff_ms\":{},\"fanouts\":{}}},\"backends\":[{}]}}",
             state.proxied.load(Ordering::Relaxed),
             state.retries.load(Ordering::Relaxed),
+            state.backoff_ms.load(Ordering::Relaxed),
             state.fanouts.load(Ordering::Relaxed),
             per.join(",")
         ),
@@ -1150,12 +1297,91 @@ mod tests {
     }
 
     #[test]
-    fn mutation_detection_guards_reload_and_evict_only() {
+    fn mutation_detection_guards_lifecycle_actions_only() {
         assert!(is_mutation(&req("POST", "/v1/models/m/reload")));
         assert!(is_mutation(&req("POST", "/v1/models/m/evict")));
+        assert!(is_mutation(&req("POST", "/v1/models/m/promote")));
+        assert!(is_mutation(&req("POST", "/v1/models/m/rollback")));
         assert!(!is_mutation(&req("POST", "/v1/models/m/predict")));
         assert!(!is_mutation(&req("GET", "/v1/models/m/stats")));
         assert!(!is_mutation(&req("GET", "/v1/models")));
+    }
+
+    #[test]
+    fn failover_backoff_is_deterministic_bounded_and_grows() {
+        let base = BACKOFF_BASE.as_millis() as u64;
+        let cap = BACKOFF_CAP;
+        for attempt in 1..=6usize {
+            let d = failover_backoff("modelA", attempt);
+            assert_eq!(
+                d,
+                failover_backoff("modelA", attempt),
+                "same key+attempt must back off identically"
+            );
+            let step = base << attempt.saturating_sub(1).min(4);
+            assert!(d >= Duration::from_millis(step).min(cap), "{attempt}: {d:?}");
+            assert!(d <= Duration::from_millis(step + step / 2).min(cap), "{attempt}: {d:?}");
+            assert!(d <= cap);
+        }
+        // While the step still doubles (attempts 1–5), successive
+        // attempts never shrink: min(step·2) ≥ max(step·1.5).
+        let mut prev = Duration::ZERO;
+        for attempt in 1..=5usize {
+            let d = failover_backoff("modelB", attempt);
+            assert!(d >= prev, "attempt {attempt}: {d:?} < {prev:?}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn update_backends_matches_slots_and_rebuilds_the_ring() {
+        // Dead addresses: probes fail fast, nothing listens there.
+        let cfg = RouterConfig {
+            backends: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+            ..RouterConfig::default()
+        };
+        let router = Router::start("127.0.0.1:0", cfg).unwrap();
+        assert_eq!(router.backend_addrs().len(), 2);
+
+        // No change: free, nothing reported.
+        let same: Vec<String> = vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()];
+        let u = router.update_backends(&same).unwrap();
+        assert!(!u.changed(), "{u:?}");
+
+        // Append one: added, unhealthy until a probe proves it.
+        let grown: Vec<String> = vec![
+            "127.0.0.1:1".into(),
+            "127.0.0.1:2".into(),
+            "127.0.0.1:3".into(),
+        ];
+        let u = router.update_backends(&grown).unwrap();
+        assert_eq!((u.added, u.removed, u.repointed), (1, 0, 0));
+        assert_eq!(router.backend_addrs().len(), 3);
+        assert!(!router.backend_healthy(2));
+
+        // Repoint slot 1; ring size unchanged so placement of the other
+        // slots survives bit-identically.
+        let place_before: Vec<usize> = (0..50).map(|k| router.place(&format!("m{k}"))).collect();
+        let repointed: Vec<String> = vec![
+            "127.0.0.1:1".into(),
+            "127.0.0.1:9".into(),
+            "127.0.0.1:3".into(),
+        ];
+        let u = router.update_backends(&repointed).unwrap();
+        assert_eq!((u.added, u.removed, u.repointed), (0, 0, 1));
+        let place_after: Vec<usize> = (0..50).map(|k| router.place(&format!("m{k}"))).collect();
+        assert_eq!(place_before, place_after);
+
+        // Shrink back to one: two removed, traffic to them stops.
+        let shrunk: Vec<String> = vec!["127.0.0.1:1".into()];
+        let u = router.update_backends(&shrunk).unwrap();
+        assert_eq!((u.added, u.removed, u.repointed), (0, 2, 0));
+        assert_eq!(router.backend_addrs(), vec!["127.0.0.1:1".to_string()]);
+        assert_eq!(router.place("anything"), 0);
+
+        // An empty list is refused and changes nothing.
+        assert!(router.update_backends(&[]).is_err());
+        assert_eq!(router.backend_addrs().len(), 1);
     }
 
     #[test]

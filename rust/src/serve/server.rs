@@ -39,13 +39,15 @@
 //! | POST   | `/v1/models/{name}/predict`       | one feature vector  | decision JSON |
 //! | POST   | `/v1/models/{name}/predict-batch` | one vector per line | JSON array |
 //! | GET    | `/v1/models/{name}/stats`         | —                   | that model's counters |
-//! | POST   | `/v1/models/{name}/reload`        | —                   | re-read from the registry |
+//! | POST   | `/v1/models/{name}/reload`        | —                   | re-read from the registry (`?canary=<pct>` stages it as a canary instead) |
+//! | POST   | `/v1/models/{name}/promote`       | —                   | promote the active canary into the serving slot |
+//! | POST   | `/v1/models/{name}/rollback`      | —                   | retire the active canary, else registry version rollback |
 //! | POST   | `/v1/models/{name}/evict`         | —                   | drop the engine |
-//! | GET    | `/v1/models`                      | —                   | per-model stats + fleet aggregate |
+//! | GET    | `/v1/models`                      | —                   | per-model stats + lifecycle + fleet aggregate |
 //! | GET    | `/healthz`                        | —                   | `ok` / `draining` / `degraded` |
 //!
-//! Mutating endpoints — the reload/evict actions and the legacy
-//! `/reload` — can be guarded by a bearer token
+//! Mutating endpoints — the reload/evict/promote/rollback actions and
+//! the legacy `/reload` — can be guarded by a bearer token
 //! ([`ServeState::set_auth_token`]): once armed, requests without a
 //! matching `Authorization: Bearer` header answer `401` and touch
 //! nothing. Reads and predicts stay open (the router tier health-checks
@@ -89,7 +91,7 @@
 use crate::error::{Error, Result};
 use crate::serve::engine::{Decision, Ticket};
 use crate::serve::faults::FaultPlan;
-use crate::serve::manager::{CircuitState, EngineManager, ManagedEngine};
+use crate::serve::manager::{CanaryPolicy, CircuitState, EngineManager, ManagedEngine};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -797,9 +799,12 @@ fn resolve_pending(
 /// the ONE place single-predict routing and status mapping live (both
 /// the pipelined and the would-be inline path go through here; the
 /// inline arms were removed from [`route`]). `None` when the request is
-/// anything else. `Some(Err(response))` carries the error the inline
-/// path historically produced: legacy engine failure → 503, routed load
-/// failure → 404/500, bad vector or rejected submit → 400.
+/// anything else. `Some(Err(response))` carries an already-materialized
+/// response: the error the inline path historically produced (legacy
+/// engine failure → 503, routed load failure → 404/500, bad vector or
+/// rejected submit → 400) — or a `200` answered directly by an active
+/// canary deploy (the vector hashed into the canary fraction and the
+/// candidate scored it; see [`ManagedEngine::canary_intercept`]).
 fn dispatch_predict(
     state: &ServeState,
     req: &HttpRequest,
@@ -828,8 +833,18 @@ fn dispatch_predict(
             Err(e) => return Some(Err(load_failure(state, name, &e))),
         }
     };
-    let submitted = parse_vector(&req.body).and_then(|x| me.engine().submit(&x));
-    Some(match submitted {
+    let x = match parse_vector(&req.body) {
+        Ok(x) => x,
+        Err(e) => return Some(Err(("400 Bad Request", JSON, error_json(&e.to_string())))),
+    };
+    // An active canary may answer this vector directly; the guardrail
+    // runs *before* the answer is chosen, so a breaching canary rolls
+    // back and the incumbent answers instead. Everything that does not
+    // route to a canary takes the unchanged submit-then-await path.
+    if let Some(d) = me.canary_intercept(&x) {
+        return Some(Err(("200 OK", JSON, decision_json(&d))));
+    }
+    Some(match me.engine().submit(&x) {
         Ok(t) => Ok(t),
         Err(e) => Err(("400 Bad Request", JSON, error_json(&e.to_string()))),
     })
@@ -1129,63 +1144,77 @@ fn predict_batch_response(me: &ManagedEngine, body: &str, timeout: Option<Durati
     if rows.is_empty() {
         return Reply::Full(("400 Bad Request", JSON, error_json("empty batch")));
     }
-    // Submit everything, then collect: lets the engine batch.
-    let tickets: std::result::Result<Vec<_>, _> =
-        rows.iter().map(|x| me.engine().submit(x)).collect();
-    match tickets {
-        Ok(ts) => {
-            let mut out = Vec::with_capacity(ts.len());
-            let mut total = 0usize;
-            for t in ts {
-                match await_ticket(t, timeout) {
-                    Waited::Done(d) => {
-                        let j = decision_json(&d);
-                        total += j.len() + 1;
-                        out.push(j);
-                    }
-                    Waited::Failed(msg) => {
-                        return Reply::Full(("500 Internal Server Error", JSON, error_json(&msg)))
-                    }
-                    // The whole batch shares one response; if any row
-                    // misses the deadline the request is expired (the
-                    // remaining tickets are dropped unread — the engine
-                    // still drains and counts them).
-                    Waited::Expired => {
-                        return Reply::Full(("503 Service Unavailable", JSON, deadline_json()))
-                    }
-                }
-            }
-            if total <= STREAM_THRESHOLD {
-                return Reply::Full((
-                    "200 OK",
-                    JSON,
-                    format!("{{\"decisions\":[{}]}}", out.join(",")),
-                ));
-            }
-            // Big answer: pre-frame ~STREAM_THRESHOLD-sized pieces whose
-            // concatenation is the full document, streamed as chunks so
-            // the full body never materializes in one buffer.
-            let mut pieces = Vec::with_capacity(total / STREAM_THRESHOLD + 2);
-            let mut cur = String::with_capacity(STREAM_THRESHOLD + 256);
-            cur.push_str("{\"decisions\":[");
-            for (i, j) in out.iter().enumerate() {
-                if i > 0 {
-                    cur.push(',');
-                }
-                cur.push_str(j);
-                if cur.len() >= STREAM_THRESHOLD {
-                    pieces.push(std::mem::replace(
-                        &mut cur,
-                        String::with_capacity(STREAM_THRESHOLD + 256),
-                    ));
-                }
-            }
-            cur.push_str("]}");
-            pieces.push(cur);
-            Reply::Stream(pieces)
-        }
-        Err(e) => Reply::Full(("400 Bad Request", JSON, error_json(&e.to_string()))),
+    // Submit everything, then collect: lets the engine batch. Rows that
+    // hash into an active canary's fraction are answered inline by the
+    // candidate slot (shadow comparison included) and hold their place
+    // in the decision order; the rest batch through the incumbent engine
+    // exactly as before.
+    enum Row {
+        Canary(Decision),
+        Ticket(Ticket),
     }
+    let mut items = Vec::with_capacity(rows.len());
+    for x in &rows {
+        if let Some(d) = me.canary_intercept(x) {
+            items.push(Row::Canary(d));
+            continue;
+        }
+        match me.engine().submit(x) {
+            Ok(t) => items.push(Row::Ticket(t)),
+            Err(e) => return Reply::Full(("400 Bad Request", JSON, error_json(&e.to_string()))),
+        }
+    }
+    let mut out = Vec::with_capacity(items.len());
+    let mut total = 0usize;
+    for item in items {
+        let d = match item {
+            Row::Canary(d) => d,
+            Row::Ticket(t) => match await_ticket(t, timeout) {
+                Waited::Done(d) => d,
+                Waited::Failed(msg) => {
+                    return Reply::Full(("500 Internal Server Error", JSON, error_json(&msg)))
+                }
+                // The whole batch shares one response; if any row
+                // misses the deadline the request is expired (the
+                // remaining tickets are dropped unread — the engine
+                // still drains and counts them).
+                Waited::Expired => {
+                    return Reply::Full(("503 Service Unavailable", JSON, deadline_json()))
+                }
+            },
+        };
+        let j = decision_json(&d);
+        total += j.len() + 1;
+        out.push(j);
+    }
+    if total <= STREAM_THRESHOLD {
+        return Reply::Full((
+            "200 OK",
+            JSON,
+            format!("{{\"decisions\":[{}]}}", out.join(",")),
+        ));
+    }
+    // Big answer: pre-frame ~STREAM_THRESHOLD-sized pieces whose
+    // concatenation is the full document, streamed as chunks so
+    // the full body never materializes in one buffer.
+    let mut pieces = Vec::with_capacity(total / STREAM_THRESHOLD + 2);
+    let mut cur = String::with_capacity(STREAM_THRESHOLD + 256);
+    cur.push_str("{\"decisions\":[");
+    for (i, j) in out.iter().enumerate() {
+        if i > 0 {
+            cur.push(',');
+        }
+        cur.push_str(j);
+        if cur.len() >= STREAM_THRESHOLD {
+            pieces.push(std::mem::replace(
+                &mut cur,
+                String::with_capacity(STREAM_THRESHOLD + 256),
+            ));
+        }
+    }
+    cur.push_str("]}");
+    pieces.push(cur);
+    Reply::Stream(pieces)
 }
 
 /// Recognize the two predict-batch endpoints and compute their reply —
@@ -1244,12 +1273,13 @@ fn models_listing_json(state: &ServeState) -> Result<String> {
                 snaps.push(snap);
                 parts.push(format!(
                     "{{\"name\":\"{}\",\"loaded\":true,\"kind\":\"{}\",\"dim\":{},\
-                     \"queued\":{},\"description\":\"{}\",\"stats\":{}}}",
+                     \"queued\":{},\"description\":\"{}\",\"lifecycle\":{},\"stats\":{}}}",
                     json_escape(name),
                     me.engine().model_kind(),
                     me.engine().dim(),
                     me.engine().queued(),
                     json_escape(&me.describe()),
+                    me.lifecycle().to_json(),
                     snap.to_json()
                 ));
             }
@@ -1283,7 +1313,9 @@ fn models_listing_json(state: &ServeState) -> Result<String> {
 /// broken registry directory answer 503 (`draining` / `degraded`);
 /// open or probing circuit breakers are reported as extra lines after
 /// `ok` but keep the 200 (one failing model must not fail readiness for
-/// the rest of the fleet).
+/// the rest of the fleet). Model-lifecycle events report the same way:
+/// an active canary deploy and the most recent rollback (with its
+/// recorded reason) each add a line without failing readiness.
 fn health_response(state: &ServeState) -> Response {
     const PLAIN: &str = "text/plain";
     if state.draining() {
@@ -1299,6 +1331,26 @@ fn health_response(state: &ServeState) -> Response {
             body.push_str(&format!(
                 "circuit {name}: {} (retry in {}ms)\n",
                 c.state, c.retry_in_ms
+            ));
+        }
+    }
+    for me in state.manager.loaded() {
+        let lc = me.lifecycle();
+        if let Some(c) = &lc.canary {
+            body.push_str(&format!(
+                "canary {}: fraction {:.2}, agreement {:.4} over {} comparisons\n",
+                me.name(),
+                c.policy.fraction,
+                c.stats.agreement,
+                c.stats.comparisons
+            ));
+        }
+        if let Some(reason) = &lc.last_rollback {
+            body.push_str(&format!(
+                "rollback {}: {} ({} total)\n",
+                me.name(),
+                reason,
+                lc.rollbacks
             ));
         }
     }
@@ -1319,6 +1371,89 @@ fn load_failure(state: &ServeState, name: &str, e: &Error) -> Response {
     } else {
         ("404 Not Found", JSON, error_json(&e.to_string()))
     }
+}
+
+/// An optional numeric query knob: `Ok(None)` when absent, `Err(400)`
+/// when present but unparsable.
+fn parse_knob<T: std::str::FromStr>(
+    query: &str,
+    key: &str,
+) -> std::result::Result<Option<T>, Response> {
+    match query_param(query, key) {
+        None => Ok(None),
+        Some(v) => v.parse::<T>().map(Some).map_err(|_| {
+            (
+                "400 Bad Request",
+                JSON,
+                error_json(&format!("bad value for {key}")),
+            )
+        }),
+    }
+}
+
+/// `POST /v1/models/{name}/reload?canary=<pct>`: stage the registry's
+/// current artifact as a canary beside the running incumbent instead of
+/// swapping it in. `pct` (0–100) is the deterministic fraction of
+/// predicts routed to — and shadow-compared on — the candidate slot;
+/// optional query knobs override the promotion window (`min_samples`,
+/// `promote_agreement`) and the rollback guardrails (`agreement_floor`,
+/// `max_latency_ratio`, `max_canary_errors`). A model with no running
+/// engine has no incumbent to protect: it plain-loads (`"canary":false`
+/// in the answer).
+fn reload_canary_response(state: &ServeState, name: &str, query: &str, pct: &str) -> Response {
+    match reload_canary_inner(state, name, query, pct) {
+        Ok(r) | Err(r) => r,
+    }
+}
+
+fn reload_canary_inner(
+    state: &ServeState,
+    name: &str,
+    query: &str,
+    pct: &str,
+) -> std::result::Result<Response, Response> {
+    let fraction = match pct.parse::<f64>() {
+        Ok(p) if (0.0..=100.0).contains(&p) => p / 100.0,
+        _ => {
+            return Ok((
+                "400 Bad Request",
+                JSON,
+                error_json("canary must be a percentage in 0..=100"),
+            ))
+        }
+    };
+    let mut policy = CanaryPolicy {
+        fraction,
+        ..CanaryPolicy::default()
+    };
+    if let Some(v) = parse_knob::<u64>(query, "min_samples")? {
+        policy.min_samples = v;
+    }
+    if let Some(v) = parse_knob::<f64>(query, "promote_agreement")? {
+        policy.promote_agreement = v;
+    }
+    if let Some(v) = parse_knob::<f64>(query, "agreement_floor")? {
+        policy.agreement_floor = v;
+    }
+    if let Some(v) = parse_knob::<f64>(query, "max_latency_ratio")? {
+        policy.max_latency_ratio = v;
+    }
+    if let Some(v) = parse_knob::<u64>(query, "max_canary_errors")? {
+        policy.max_canary_errors = v;
+    }
+    Ok(match state.manager.reload_canary(name, policy) {
+        Ok((desc, canary)) => (
+            "200 OK",
+            JSON,
+            format!(
+                "{{\"reloaded\":\"{}\",\"model\":\"{}\",\"canary\":{canary},\"fraction\":{:.4}}}",
+                json_escape(name),
+                json_escape(&desc),
+                policy.fraction
+            ),
+        ),
+        Err(e) => load_failure(state, name, &e),
+    })
 }
 
 /// Routed endpoints under `/v1/models`. `rest` is the path after the
@@ -1371,23 +1506,100 @@ fn route_v1_models(state: &ServeState, req: &HttpRequest, rest: &str) -> Respons
         };
     }
     if action == "reload" {
-        return if req.method != "POST" {
-            ("405 Method Not Allowed", JSON, error_json("use POST"))
-        } else if let Some(resp) = bearer_auth_failure(state.auth_token().as_deref(), req) {
-            resp
-        } else {
-            match state.manager.reload(name) {
-                Ok(desc) => (
+        if req.method != "POST" {
+            return ("405 Method Not Allowed", JSON, error_json("use POST"));
+        }
+        if let Some(resp) = bearer_auth_failure(state.auth_token().as_deref(), req) {
+            return resp;
+        }
+        // `?canary=<pct>` stages the registry artifact beside the running
+        // incumbent instead of swapping it in.
+        if let Some(pct) = query_param(&req.query, "canary") {
+            return reload_canary_response(state, name, &req.query, pct);
+        }
+        return match state.manager.reload(name) {
+            Ok(desc) => (
+                "200 OK",
+                JSON,
+                format!(
+                    "{{\"reloaded\":\"{}\",\"model\":\"{}\"}}",
+                    json_escape(name),
+                    json_escape(&desc)
+                ),
+            ),
+            Err(e) => load_failure(state, name, &e),
+        };
+    }
+    // Promote acts on the already-running engine only (a cold name has
+    // nothing staged); rollback prefers retiring an active canary and
+    // otherwise falls back to the registry's version history.
+    if action == "promote" {
+        if req.method != "POST" {
+            return ("405 Method Not Allowed", JSON, error_json("use POST"));
+        }
+        if let Some(resp) = bearer_auth_failure(state.auth_token().as_deref(), req) {
+            return resp;
+        }
+        let Some(me) = state.manager.get(name) else {
+            return ("404 Not Found", JSON, error_json("model is not loaded"));
+        };
+        return match me.promote_canary() {
+            Ok(desc) => (
+                "200 OK",
+                JSON,
+                format!(
+                    "{{\"promoted\":\"{}\",\"model\":\"{}\"}}",
+                    json_escape(name),
+                    json_escape(&desc)
+                ),
+            ),
+            // No canary riding (it may have auto-promoted or rolled back
+            // already): nothing to promote, state unchanged.
+            Err(e) => ("409 Conflict", JSON, error_json(&e.to_string())),
+        };
+    }
+    if action == "rollback" {
+        if req.method != "POST" {
+            return ("405 Method Not Allowed", JSON, error_json("use POST"));
+        }
+        if let Some(resp) = bearer_auth_failure(state.auth_token().as_deref(), req) {
+            return resp;
+        }
+        if let Some(me) = state.manager.get(name) {
+            if let Ok(desc) = me.rollback_canary("manual rollback") {
+                // The incumbent was never touched; retiring the
+                // candidate is the whole rollback.
+                return (
                     "200 OK",
                     JSON,
                     format!(
-                        "{{\"reloaded\":\"{}\",\"model\":\"{}\"}}",
+                        "{{\"rolled_back\":\"{}\",\"canary\":\"{}\"}}",
                         json_escape(name),
                         json_escape(&desc)
                     ),
-                ),
-                Err(e) => load_failure(state, name, &e),
+                );
             }
+        }
+        // No canary: roll the registry back one archived version, and
+        // reload a running engine onto it (a cold model just loads the
+        // rolled-back artifact whenever it is next asked for).
+        return match state.manager.registry().rollback(name) {
+            Ok(version) => {
+                if state.manager.get(name).is_some() {
+                    if let Err(e) = state.manager.reload(name) {
+                        return load_failure(state, name, &e);
+                    }
+                }
+                (
+                    "200 OK",
+                    JSON,
+                    format!(
+                        "{{\"rolled_back\":\"{}\",\"version\":{version}}}",
+                        json_escape(name)
+                    ),
+                )
+            }
+            Err(e) => ("409 Conflict", JSON, error_json(&e.to_string())),
         };
     }
     // Only the predict actions may lazily spawn an engine; everything

@@ -305,6 +305,117 @@ impl StatsSnapshot {
     }
 }
 
+/// Shared (atomic) counters of one canary deploy: decision agreement
+/// between the incumbent and canary slots, per-slot shadow-scoring
+/// latency, and the canary-side error delta (the 5xx answers the canary
+/// would have served had it been the incumbent). Every canary starts a
+/// fresh window — the struct is built per deploy, never reset in place.
+#[derive(Debug, Default)]
+pub struct CanaryStats {
+    /// Shadow comparisons scored on both slots.
+    pub comparisons: AtomicU64,
+    /// Comparisons where both slots agreed on the decision.
+    pub agreements: AtomicU64,
+    /// Comparisons where the slots disagreed.
+    pub disagreements: AtomicU64,
+    /// Canary-side scoring failures (caught panics); the incumbent's
+    /// answer was served instead.
+    pub canary_errors: AtomicU64,
+    /// Requests whose answer came from the canary slot.
+    pub routed: AtomicU64,
+    /// Summed incumbent shadow-score time (ns).
+    pub incumbent_ns: AtomicU64,
+    /// Summed canary shadow-score time (ns).
+    pub canary_ns: AtomicU64,
+}
+
+impl CanaryStats {
+    /// Fresh (all-zero) canary window.
+    pub fn new() -> CanaryStats {
+        CanaryStats::default()
+    }
+
+    /// Point-in-time copy plus derived ratios.
+    pub fn snapshot(&self) -> CanarySnapshot {
+        let comparisons = self.comparisons.load(Ordering::Relaxed);
+        let agreements = self.agreements.load(Ordering::Relaxed);
+        let incumbent_ns = self.incumbent_ns.load(Ordering::Relaxed);
+        let canary_ns = self.canary_ns.load(Ordering::Relaxed);
+        let mean_ms = |ns: u64| {
+            if comparisons == 0 {
+                0.0
+            } else {
+                ns as f64 / 1e6 / comparisons as f64
+            }
+        };
+        CanarySnapshot {
+            comparisons,
+            agreements,
+            disagreements: self.disagreements.load(Ordering::Relaxed),
+            canary_errors: self.canary_errors.load(Ordering::Relaxed),
+            routed: self.routed.load(Ordering::Relaxed),
+            // No evidence yet = perfect agreement: guardrail floors must
+            // not trip (and promotion gates must not pass) on an empty
+            // window — the min-sample policy handles the rest.
+            agreement: if comparisons == 0 {
+                1.0
+            } else {
+                agreements as f64 / comparisons as f64
+            },
+            incumbent_mean_ms: mean_ms(incumbent_ns),
+            canary_mean_ms: mean_ms(canary_ns),
+            latency_ratio: if incumbent_ns == 0 {
+                0.0
+            } else {
+                canary_ns as f64 / incumbent_ns as f64
+            },
+        }
+    }
+}
+
+/// Plain-data view of [`CanaryStats`] (latencies in milliseconds).
+#[derive(Clone, Copy, Debug)]
+pub struct CanarySnapshot {
+    /// Shadow comparisons scored on both slots.
+    pub comparisons: u64,
+    /// Comparisons where both slots agreed.
+    pub agreements: u64,
+    /// Comparisons where the slots disagreed.
+    pub disagreements: u64,
+    /// Canary-side scoring failures (caught panics).
+    pub canary_errors: u64,
+    /// Requests answered by the canary slot.
+    pub routed: u64,
+    /// agreements / comparisons (1.0 while no comparisons exist).
+    pub agreement: f64,
+    /// Mean incumbent shadow-score time (ms).
+    pub incumbent_mean_ms: f64,
+    /// Mean canary shadow-score time (ms).
+    pub canary_mean_ms: f64,
+    /// canary_ns / incumbent_ns (0.0 while no samples exist).
+    pub latency_ratio: f64,
+}
+
+impl CanarySnapshot {
+    /// Render as a JSON object (hand-rolled; the crate has no serde).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"comparisons\":{},\"agreements\":{},\"disagreements\":{},\
+             \"canary_errors\":{},\"routed\":{},\"agreement\":{:.4},\
+             \"latency_ms\":{{\"incumbent_mean\":{:.4},\"canary_mean\":{:.4},\"ratio\":{:.3}}}}}",
+            self.comparisons,
+            self.agreements,
+            self.disagreements,
+            self.canary_errors,
+            self.routed,
+            self.agreement,
+            self.incumbent_mean_ms,
+            self.canary_mean_ms,
+            self.latency_ratio,
+        )
+    }
+}
+
 /// Point-in-time capacity/lifecycle counters of an engine fleet (the
 /// [`crate::serve::manager::EngineManager`]'s side of the `/v1/models`
 /// view: how many engines may stay resident, how many are, and how many
@@ -512,6 +623,34 @@ mod tests {
         assert_eq!(z.completed, 0);
         assert_eq!(z.p99, 0.0);
         assert_eq!(z.utilization, 0.0);
+    }
+
+    #[test]
+    fn canary_stats_ratios_and_json() {
+        let c = CanaryStats::new();
+        // Empty window: perfect agreement, no latency evidence.
+        let empty = c.snapshot();
+        assert_eq!(empty.agreement, 1.0);
+        assert_eq!(empty.latency_ratio, 0.0);
+        assert_eq!(empty.incumbent_mean_ms, 0.0);
+        c.comparisons.fetch_add(8, Ordering::Relaxed);
+        c.agreements.fetch_add(6, Ordering::Relaxed);
+        c.disagreements.fetch_add(2, Ordering::Relaxed);
+        c.canary_errors.fetch_add(1, Ordering::Relaxed);
+        c.routed.fetch_add(3, Ordering::Relaxed);
+        c.incumbent_ns.fetch_add(8_000_000, Ordering::Relaxed); // 1ms mean
+        c.canary_ns.fetch_add(16_000_000, Ordering::Relaxed); // 2ms mean
+        let s = c.snapshot();
+        assert!((s.agreement - 0.75).abs() < 1e-12);
+        assert!((s.incumbent_mean_ms - 1.0).abs() < 1e-9);
+        assert!((s.canary_mean_ms - 2.0).abs() < 1e-9);
+        assert!((s.latency_ratio - 2.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert!(j.contains("\"comparisons\":8"), "{j}");
+        assert!(j.contains("\"disagreements\":2"), "{j}");
+        assert!(j.contains("\"canary_errors\":1"), "{j}");
+        assert!(j.contains("\"agreement\":0.7500"), "{j}");
+        assert!(j.contains("\"ratio\":2.000"), "{j}");
     }
 
     #[test]

@@ -26,6 +26,17 @@
 //! and a SIGTERM against the real `mlsvm serve` binary. The fault
 //! ordinal is parameterized by `MLSVM_FAULT_NTH` (default 1) so CI can
 //! shift where the fault lands without touching the tests.
+//!
+//! The **model lifecycle suite** (`canary_*`, `retrain_*`, plus the
+//! registry/router CLI round-trips) pins the retrain→canary→promote
+//! loop: shadow-scored canaries that auto-promote on agreement and
+//! roll back on injected disagreements or panic bursts *before* a
+//! wrong byte is served (every response asserted bit-identical to an
+//! unfaulted server), authenticated manual promote/rollback, garbage
+//! and fault-torn checkpoints detected on `--resume`, a mid-retrain
+//! SIGTERM whose resumed run publishes bit-identically to an
+//! uninterrupted one at `MLSVM_THREADS=1` and `4`, and the router's
+//! SIGHUP-reloaded `--backends-file`.
 
 use mlsvm::coordinator::jobs::OneVsRestTrainer;
 use mlsvm::data::matrix::Matrix;
@@ -1744,4 +1755,588 @@ fn router_cli_spawn_survives_backend_kill_and_recovers() {
     assert_eq!(unsafe { kill(child.id() as i32, 15) }, 0, "SIGTERM router");
     let status = child.wait().expect("wait on drained router");
     assert!(status.success(), "expected clean router exit after SIGTERM, got {status}");
+}
+
+// ---------------------------------------------------------------------------
+// Model lifecycle suite: canary deploys, promote/rollback, warm retrain.
+// ---------------------------------------------------------------------------
+
+/// Decision-relevant bytes of an artifact: the canonical encoding of the
+/// finest [`SvmModel`] alone. Whole-artifact bytes include wall-clock
+/// per-level timings, which legitimately differ across runs; two retrains
+/// are "bit-identical" when these bytes match.
+fn decision_bytes(artifact: &ModelArtifact) -> Vec<u8> {
+    match artifact {
+        ModelArtifact::Mlsvm(m) => {
+            mlsvm::serve::binary::write_artifact(&ModelArtifact::Svm(m.model.clone()))
+        }
+        other => mlsvm::serve::binary::write_artifact(other),
+    }
+}
+
+/// With every request routed to the canary (fraction 100%) and the
+/// candidate agreeing with the incumbent on every probe, the comparison
+/// window fills and the canary auto-promotes into the serving slot.
+#[test]
+fn canary_agreeing_candidate_auto_promotes_after_min_samples() {
+    let (server, state) = start_axis_server("canary_autopromote");
+    let addr = server.addr();
+    // Warm the default engine so the canary has an incumbent to shadow.
+    let (code, _) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200);
+    // Republish "tiny" under a different gamma: decision values differ,
+    // labels on the ±x probes agree, so the two slots always concur.
+    state
+        .manager
+        .registry()
+        .save("tiny", &ModelArtifact::Svm(axis_model(2.0)))
+        .unwrap();
+    let (code, body) = http_request(
+        &addr,
+        "POST",
+        "/v1/models/tiny/reload?canary=100&min_samples=4&promote_agreement=0.9",
+        "",
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"canary\":true"), "{body}");
+    // The riding canary is visible in the fleet listing.
+    let (_, listing) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+    assert!(listing.contains("\"fraction\":1.0000"), "{listing}");
+    // Four agreeing shadow comparisons fill the window; the fourth trips
+    // the auto-promote. Labels stay right the whole way.
+    for i in 0..4 {
+        let (probe, want) = if i % 2 == 0 {
+            ("0.9, 0.1", "\"label\":1")
+        } else {
+            ("-0.9, 0.1", "\"label\":-1")
+        };
+        let (code, resp) = http_request(&addr, "POST", "/predict", probe).unwrap();
+        assert_eq!(code, 200, "probe {i}: {resp}");
+        assert!(resp.contains(want), "probe {i}: {resp}");
+    }
+    let lc = state.manager.get("tiny").expect("engine running").lifecycle();
+    assert_eq!((lc.promotions, lc.rollbacks), (1, 0), "{lc:?}");
+    assert!(lc.canary.is_none(), "canary must retire on promotion");
+    let (_, listing) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+    assert!(listing.contains("\"promotions\":1"), "{listing}");
+    assert!(listing.contains("\"canary\":null"), "{listing}");
+    // A clean promotion leaves /healthz quiet.
+    let (code, hz) = http_request(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(code, 200, "{hz}");
+    assert!(!hz.contains("rollback"), "{hz}");
+}
+
+/// An injected disagreement trips the agreement floor on the very
+/// comparison where it lands, and the guardrail runs *before* the answer
+/// is chosen: the canary rolls back, the incumbent serves that request
+/// and every other one, and all responses are bit-identical to an
+/// unfaulted server. The rollback reason is visible everywhere.
+#[test]
+fn canary_chaos_disagreement_rolls_back_before_serving_a_wrong_answer() {
+    let (reference, _r) = start_axis_server("canary_disagree_ref");
+    let (code, want_pos) =
+        http_request(&reference.addr(), "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200, "{want_pos}");
+    let (code, want_neg) =
+        http_request(&reference.addr(), "POST", "/predict", "-0.9, 0.1").unwrap();
+    assert_eq!(code, 200, "{want_neg}");
+
+    let (server, state) = start_axis_server_chaos("canary_disagree", |p| {
+        p.disagree_canary(fault_nth(), 1_000_000)
+    });
+    let addr = server.addr();
+    let (code, resp) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!((code, resp.as_str()), (200, want_pos.as_str()));
+    state
+        .manager
+        .registry()
+        .save("tiny", &ModelArtifact::Svm(axis_model(2.0)))
+        .unwrap();
+    // Huge min_samples: promotion can never race the fault — the floor
+    // guardrail is what must fire.
+    let (code, body) = http_request(
+        &addr,
+        "POST",
+        "/v1/models/tiny/reload?canary=100&min_samples=1000000&agreement_floor=0.99",
+        "",
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"canary\":true"), "{body}");
+    // Probe past the fault ordinal: every answer — before, at, and after
+    // the injected disagreement — is the incumbent's, bit for bit.
+    for i in 0..(fault_nth() + 3) {
+        let (probe, want) = if i % 2 == 0 {
+            ("0.9, 0.1", &want_pos)
+        } else {
+            ("-0.9, 0.1", &want_neg)
+        };
+        let (code, resp) = http_request(&addr, "POST", "/predict", probe).unwrap();
+        assert_eq!(code, 200, "probe {i}: {resp}");
+        assert_eq!(&resp, want, "probe {i} must be bit-identical to the unfaulted server");
+    }
+    assert!(state.faults().injected().canary_disagreements >= 1);
+    let lc = state.manager.get("tiny").unwrap().lifecycle();
+    assert!(lc.canary.is_none(), "breached canary must retire");
+    assert_eq!(lc.promotions, 0, "{lc:?}");
+    assert!(lc.rollbacks >= 1, "{lc:?}");
+    let reason = lc.last_rollback.as_deref().unwrap_or_default();
+    assert!(reason.contains("below floor"), "unexpected reason '{reason}'");
+    // The recorded reason reports through /healthz and the fleet listing.
+    let (_, hz) = http_request(&addr, "GET", "/healthz", "").unwrap();
+    assert!(hz.contains("below floor"), "{hz}");
+    let (_, listing) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+    assert!(listing.contains("below floor"), "{listing}");
+}
+
+/// A panicking canary scorer never takes the server down: the panic is
+/// caught, counted against the error budget, and the burst guardrail
+/// rolls the canary back while the incumbent keeps answering
+/// bit-identically.
+#[test]
+fn canary_chaos_panic_burst_rolls_back_and_incumbent_keeps_serving() {
+    let (reference, _r) = start_axis_server("canary_panic_ref");
+    let (code, want_pos) =
+        http_request(&reference.addr(), "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200, "{want_pos}");
+    let (code, want_neg) =
+        http_request(&reference.addr(), "POST", "/predict", "-0.9, 0.1").unwrap();
+    assert_eq!(code, 200, "{want_neg}");
+
+    let (server, state) =
+        start_axis_server_chaos("canary_panic", |p| p.panic_canary(fault_nth()));
+    let addr = server.addr();
+    let (code, _) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200);
+    state
+        .manager
+        .registry()
+        .save("tiny", &ModelArtifact::Svm(axis_model(2.0)))
+        .unwrap();
+    let (code, body) = http_request(
+        &addr,
+        "POST",
+        "/v1/models/tiny/reload?canary=100&min_samples=1000000&max_canary_errors=1",
+        "",
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"canary\":true"), "{body}");
+    for i in 0..(fault_nth() + 3) {
+        let (probe, want) = if i % 2 == 0 {
+            ("0.9, 0.1", &want_pos)
+        } else {
+            ("-0.9, 0.1", &want_neg)
+        };
+        let (code, resp) = http_request(&addr, "POST", "/predict", probe).unwrap();
+        assert_eq!(code, 200, "probe {i}: {resp}");
+        assert_eq!(&resp, want, "probe {i} must be bit-identical to the unfaulted server");
+    }
+    assert_eq!(state.faults().injected().canary_panics, 1);
+    let lc = state.manager.get("tiny").unwrap().lifecycle();
+    assert!(lc.canary.is_none(), "breached canary must retire");
+    assert!(lc.rollbacks >= 1, "{lc:?}");
+    let reason = lc.last_rollback.as_deref().unwrap_or_default();
+    assert!(reason.contains("error burst"), "unexpected reason '{reason}'");
+}
+
+/// Manual promote/rollback are authenticated mutations: no token bounces
+/// with 401, promote with nothing staged is 409, and the manual rollback
+/// reason is recorded in the lifecycle history.
+#[test]
+fn canary_manual_promote_and_rollback_are_authenticated() {
+    let (server, state) = start_axis_server("canary_manual");
+    let addr = server.addr();
+    state.set_auth_token(Some("sekrit".to_string()));
+    // Predict stays unauthenticated; it warms the incumbent.
+    let (code, _) = http_request(&addr, "POST", "/predict", "0.9, 0.1").unwrap();
+    assert_eq!(code, 200);
+    // Mutations without the bearer token bounce.
+    let (code, body) = http_request(&addr, "POST", "/v1/models/tiny/promote", "").unwrap();
+    assert_eq!(code, 401, "{body}");
+    let (code, body) = http_request(&addr, "POST", "/v1/models/tiny/rollback", "").unwrap();
+    assert_eq!(code, 401, "{body}");
+    // Authenticated promote with nothing staged: 409, state unchanged.
+    let (code, body) =
+        http_request_with_auth(&addr, "POST", "/v1/models/tiny/promote", "", Some("sekrit"))
+            .unwrap();
+    assert_eq!(code, 409, "{body}");
+    // Stage a canary (the staging reload is a mutation too) and retire it
+    // manually: the recorded reason says a human did it.
+    state
+        .manager
+        .registry()
+        .save("tiny", &ModelArtifact::Svm(axis_model(2.0)))
+        .unwrap();
+    let (code, body) = http_request_with_auth(
+        &addr,
+        "POST",
+        "/v1/models/tiny/reload?canary=50",
+        "",
+        Some("sekrit"),
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"canary\":true"), "{body}");
+    let (code, body) =
+        http_request_with_auth(&addr, "POST", "/v1/models/tiny/rollback", "", Some("sekrit"))
+            .unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"rolled_back\""), "{body}");
+    let lc = state.manager.get("tiny").unwrap().lifecycle();
+    assert_eq!(lc.last_rollback.as_deref(), Some("manual rollback"));
+    assert_eq!((lc.promotions, lc.rollbacks), (0, 1), "{lc:?}");
+    // Stage again and promote manually; the candidate then serves.
+    let (code, body) = http_request_with_auth(
+        &addr,
+        "POST",
+        "/v1/models/tiny/reload?canary=50",
+        "",
+        Some("sekrit"),
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let (code, body) =
+        http_request_with_auth(&addr, "POST", "/v1/models/tiny/promote", "", Some("sekrit"))
+            .unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"promoted\""), "{body}");
+    let lc = state.manager.get("tiny").unwrap().lifecycle();
+    assert_eq!((lc.promotions, lc.rollbacks), (1, 1), "{lc:?}");
+    assert!(lc.canary.is_none());
+    let (code, resp) = http_request(&addr, "POST", "/predict", "-0.9, 0.1").unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert!(resp.contains("\"label\":-1"), "{resp}");
+}
+
+/// A deployed full-mlsvm artifact whose (C⁺, C⁻, γ) the retrain
+/// inherits. Hand-built: retrain reads only its params, and the stub
+/// keeps these tests from paying for a full base training run.
+fn deployed_stub() -> ModelArtifact {
+    ModelArtifact::Mlsvm(mlsvm::mlsvm::trainer::MlsvmModel {
+        model: axis_model(0.5),
+        params: SvmParams::default(),
+        level_stats: Vec::new(),
+        depths: (1, 1),
+    })
+}
+
+/// Write base + appended libsvm files into `dir` and return their paths.
+/// f32 `Display` round-trips exactly, so the files reload bit-identically
+/// in every process that reads them.
+fn retrain_data(dir: &std::path::Path, n: usize, seed: u64) -> (PathBuf, PathBuf) {
+    let mut rng = Pcg64::seed_from(seed);
+    let base = two_gaussians(n, n / 4, 6, 3.0, &mut rng);
+    let extra = two_gaussians(n / 8, n / 32, 6, 3.0, &mut rng);
+    let base_path = dir.join("base.svm");
+    let extra_path = dir.join("extra.svm");
+    mlsvm::data::libsvm::save(&base, &base_path).unwrap();
+    mlsvm::data::libsvm::save(&extra, &extra_path).unwrap();
+    (base_path, extra_path)
+}
+
+/// Common `mlsvm retrain` argument tail (everything but the registry and
+/// checkpoint, which differ per run).
+fn retrain_args(base: &std::path::Path, extra: &std::path::Path) -> Vec<String> {
+    vec![
+        "--name".into(),
+        "m".into(),
+        "--data".into(),
+        base.to_str().unwrap().into(),
+        "--append".into(),
+        extra.to_str().unwrap().into(),
+        "--coarsest".into(),
+        "50".into(),
+        "--seed".into(),
+        "7".into(),
+        "--quiet".into(),
+    ]
+}
+
+/// Unusable checkpoints are robustness events, not errors: a garbage file
+/// under `--resume` logs the reason and starts over, and a torn-write
+/// fault during checkpointing never corrupts the published artifact.
+#[test]
+fn retrain_cli_survives_garbage_and_torn_checkpoints() {
+    let dir = tmp_dir("retrain_torn");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("m", &deployed_stub()).unwrap();
+    let (base, extra) = retrain_data(&dir, 480, 5);
+    let ckpt = dir.join("ckpt.bin");
+    std::fs::write(&ckpt, b"MLSVMCKP this is not a checkpoint").unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+        .arg("retrain")
+        .args(["--registry", dir.to_str().unwrap()])
+        .args(["--checkpoint", ckpt.to_str().unwrap()])
+        .arg("--resume")
+        .args(retrain_args(&base, &extra))
+        .env("MLSVM_THREADS", "1")
+        .output()
+        .expect("run mlsvm retrain");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        out.status.success(),
+        "stdout: {}\nstderr: {stderr}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    assert!(
+        stderr.contains("resume requested but training started over"),
+        "{stderr}"
+    );
+    assert!(stderr.contains("checkpoint unusable"), "{stderr}");
+    // Published: the displaced stub is archived, the retrain is current,
+    // and the checkpoint was discarded after the save.
+    assert_eq!(reg.history("m").unwrap().len(), 1);
+    assert!(matches!(reg.load("m").unwrap(), ModelArtifact::Mlsvm(_)));
+    assert!(!ckpt.exists(), "published retrain must discard its checkpoint");
+    // A torn checkpoint *write* mid-run is equally harmless: later saves
+    // rewrite the file whole and the publish still happens.
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+        .arg("retrain")
+        .args(["--registry", dir.to_str().unwrap()])
+        .args(["--checkpoint", ckpt.to_str().unwrap()])
+        .args(["--fault-plan", "checkpoint-torn=1"])
+        .args(retrain_args(&base, &extra))
+        .env("MLSVM_THREADS", "1")
+        .output()
+        .expect("run mlsvm retrain with torn-checkpoint fault");
+    assert!(
+        out.status.success(),
+        "stdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(reg.history("m").unwrap().len(), 2);
+}
+
+/// SIGTERM mid-retrain leaves a checkpoint that `--resume` picks up, and
+/// the resumed run publishes a model bit-identical (decision bytes) to an
+/// uninterrupted reference — at one worker thread and at four.
+#[test]
+#[cfg(unix)]
+fn retrain_sigterm_checkpoint_resumes_bit_identically_across_thread_counts() {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    let data_dir = tmp_dir("retrain_kill_data");
+    let (base, extra) = retrain_data(&data_dir, 2800, 5);
+
+    // Reference: one clean uninterrupted retrain in its own registry.
+    let ref_dir = tmp_dir("retrain_kill_ref");
+    let ref_reg = Registry::open(&ref_dir).unwrap();
+    ref_reg.save("m", &deployed_stub()).unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+        .arg("retrain")
+        .args(["--registry", ref_dir.to_str().unwrap()])
+        .args(retrain_args(&base, &extra))
+        .env("MLSVM_THREADS", "1")
+        .output()
+        .expect("run reference retrain");
+    assert!(
+        out.status.success(),
+        "reference retrain failed\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let ref_bits = decision_bytes(&ref_reg.load("m").unwrap());
+
+    for threads in ["1", "4"] {
+        let dir = tmp_dir(&format!("retrain_kill_t{threads}"));
+        let reg = Registry::open(&dir).unwrap();
+        reg.save("m", &deployed_stub()).unwrap();
+        let ckpt = dir.join("ckpt.bin");
+        let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+            .arg("retrain")
+            .args(["--registry", dir.to_str().unwrap()])
+            .args(["--checkpoint", ckpt.to_str().unwrap()])
+            .args(retrain_args(&base, &extra))
+            .env("MLSVM_THREADS", threads)
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn mlsvm retrain");
+        // The first checkpoint lands right after the coarsest solve; kill
+        // the process as soon as it exists, well inside refinement.
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while !ckpt.exists() {
+            assert!(
+                Instant::now() < deadline,
+                "threads={threads}: no checkpoint within 120s"
+            );
+            if let Some(status) = child.try_wait().unwrap() {
+                panic!(
+                    "threads={threads}: retrain finished before it could be \
+                     interrupted ({status}); the fixture must be bigger"
+                );
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(unsafe { kill(child.id() as i32, 15) }, 0, "SIGTERM retrain");
+        let status = child.wait().unwrap();
+        assert!(
+            !status.success(),
+            "threads={threads}: the interrupted run must not have completed"
+        );
+        assert!(ckpt.exists(), "threads={threads}: checkpoint must survive the kill");
+        // Resume finishes the job and publishes bit-identically to the
+        // uninterrupted reference.
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+            .arg("retrain")
+            .args(["--registry", dir.to_str().unwrap()])
+            .args(["--checkpoint", ckpt.to_str().unwrap()])
+            .arg("--resume")
+            .args(retrain_args(&base, &extra))
+            .env("MLSVM_THREADS", threads)
+            .output()
+            .expect("run resumed retrain");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            out.status.success(),
+            "threads={threads}: resume failed\nstdout: {}\nstderr: {stderr}",
+            String::from_utf8_lossy(&out.stdout)
+        );
+        assert!(stderr.contains("resumed from checkpoint"), "{stderr}");
+        let bits = decision_bytes(&reg.load("m").unwrap());
+        assert_eq!(
+            bits, ref_bits,
+            "threads={threads}: resumed retrain must be bit-identical to the reference"
+        );
+        assert!(
+            !ckpt.exists(),
+            "threads={threads}: published retrain must discard its checkpoint"
+        );
+    }
+}
+
+/// `mlsvm route --backends-file F` re-reads the file on SIGHUP: added
+/// backends enter rotation after a health pass, removed ones drain out,
+/// and the fleet listing tracks the ring through both transitions.
+#[test]
+#[cfg(unix)]
+fn router_cli_sighup_rereads_backends_file() {
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    let (alpha, _sa) = start_named_backend("sighup_alpha", &["alpha"]);
+    let (beta, _sb) = start_named_backend("sighup_beta", &["beta"]);
+    let dir = tmp_dir("router_sighup");
+    let file = dir.join("backends.txt");
+    std::fs::write(&file, format!("# fleet\n{}\n", alpha.addr())).unwrap();
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+        .args([
+            "route",
+            "--backends-file",
+            file.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+            "--health-interval-ms",
+            "50",
+            "--proxy-timeout-ms",
+            "2000",
+            "--max-seconds",
+            "120",
+            "--drain-secs",
+            "5",
+        ])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn mlsvm route");
+    let mut banner_reader = std::io::BufReader::new(child.stdout.take().unwrap());
+    let mut banner = String::new();
+    banner_reader.read_line(&mut banner).unwrap();
+    let addr: SocketAddr = banner
+        .split("http://")
+        .nth(1)
+        .unwrap_or_else(|| panic!("no address in banner '{banner}'"))
+        .trim()
+        .parse()
+        .expect("router address");
+
+    let listing = |deadline_msg: &str, pred: &dyn Fn(&str) -> bool| -> String {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let (code, body) = http_request(&addr, "GET", "/v1/models", "").unwrap();
+            if code == 200 && pred(&body) {
+                return body;
+            }
+            assert!(Instant::now() < deadline, "{deadline_msg}: {code} {body}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    };
+
+    // Only alpha is in the ring to start with.
+    let body = listing("alpha never appeared", &|b: &str| b.contains("\"alpha\""));
+    assert!(!body.contains("\"beta\""), "{body}");
+
+    // Grow the file and SIGHUP: beta enters after the next health pass.
+    std::fs::write(&file, format!("{}\n{}\n", alpha.addr(), beta.addr())).unwrap();
+    assert_eq!(unsafe { kill(child.id() as i32, 1) }, 0, "SIGHUP router");
+    listing("beta never entered after SIGHUP", &|b: &str| {
+        b.contains("\"alpha\"") && b.contains("\"beta\"")
+    });
+    // The retry/backoff counters ride along in /stats.
+    let (code, stats) = http_request(&addr, "GET", "/stats", "").unwrap();
+    assert_eq!(code, 200, "{stats}");
+    assert!(stats.contains("\"backoff_ms\""), "{stats}");
+
+    // Shrink to beta only: alpha drains out of the ring.
+    std::fs::write(&file, format!("{}\n", beta.addr())).unwrap();
+    assert_eq!(unsafe { kill(child.id() as i32, 1) }, 0, "SIGHUP router");
+    listing("alpha never left after SIGHUP", &|b: &str| {
+        b.contains("\"beta\"") && !b.contains("\"alpha\"")
+    });
+
+    assert_eq!(unsafe { kill(child.id() as i32, 15) }, 0, "SIGTERM router");
+    let status = child.wait().expect("wait on drained router");
+    assert!(status.success(), "expected clean router exit, got {status}");
+}
+
+/// The registry CLI round-trips the version history: `list --describe`
+/// shows save timestamps and archived versions, `history` lists them,
+/// and `rollback` restores the archived artifact while keeping the
+/// displaced current reachable as a new archive.
+#[test]
+fn registry_cli_describe_history_and_rollback_round_trip() {
+    let dir = tmp_dir("registry_cli_lifecycle");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("m", &ModelArtifact::Svm(axis_model(0.5))).unwrap();
+    let v1_bits = decision_bytes(&ModelArtifact::Svm(axis_model(0.5)));
+    // Overwriting archives the displaced artifact as version 1.
+    reg.save("m", &ModelArtifact::Svm(axis_model(2.0))).unwrap();
+
+    let run = |args: &[&str]| {
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_mlsvm"))
+            .args(args)
+            .output()
+            .expect("run mlsvm registry");
+        assert!(
+            out.status.success(),
+            "{args:?} failed\nstdout: {}\nstderr: {}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+
+    let stdout = run(&["registry", "list", "--registry", dir.to_str().unwrap(), "--describe"]);
+    assert!(stdout.contains("saved "), "{stdout}");
+    assert!(stdout.contains("archived v1 ["), "{stdout}");
+
+    let stdout = run(&["registry", "history", "--registry", dir.to_str().unwrap(), "--name", "m"]);
+    assert!(stdout.contains("m v1:"), "{stdout}");
+
+    let stdout =
+        run(&["registry", "rollback", "--registry", dir.to_str().unwrap(), "--name", "m"]);
+    assert!(stdout.contains("m: rolled back to version 1"), "{stdout}");
+
+    // The rolled-back current is bit-identical to the original save, and
+    // the displaced gamma-2 model is still reachable as an archive.
+    assert_eq!(decision_bytes(&reg.load("m").unwrap()), v1_bits);
+    let history = reg.history("m").unwrap();
+    assert_eq!(history.len(), 1, "{history:?}");
+    let stdout = run(&["registry", "history", "--registry", dir.to_str().unwrap(), "--name", "m"]);
+    assert!(stdout.contains("m v2:"), "{stdout}");
 }
