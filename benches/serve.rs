@@ -12,8 +12,10 @@
 //! capacity-constrained single process (the `mlsvm route` sharding
 //! payoff), and a **lifecycle mode** — canary shadow-scoring overhead
 //! (p50/p95 with the shadow comparison on vs off, zero disagreements and
-//! zero rollbacks required of an unfaulted run) — all emitted into
-//! `BENCH_serve.json`.
+//! zero rollbacks required of an unfaulted run), and a **scoring-backend
+//! microbench** — per-row vs blocked-layout vs i8-quantized batch
+//! scoring, with the dispatched SIMD backend and layout build cost — all
+//! emitted into `BENCH_serve.json`.
 //!
 //! ```bash
 //! cargo bench --bench serve            # writes BENCH_serve.json
@@ -92,8 +94,10 @@ fn run_load(
     );
     let state = Arc::new(ServeState::new(manager, "bench"));
     // Warm the engine before the timer: lazy spawn (model load + worker
-    // threads) must not land in the measured latency distribution.
-    state.manager.engine("bench").expect("warm engine");
+    // threads + the blocked scoring layout built at load) and the first
+    // flush must not land in the measured latency distribution.
+    let warm = state.manager.engine("bench").expect("warm engine");
+    warm.engine().predict(&queries[0]).expect("warm predict");
     let server = Server::start("127.0.0.1:0", Arc::clone(&state)).expect("server");
     let addr = server.addr();
 
@@ -426,6 +430,112 @@ fn measure_model_io(dir: &std::path::Path, n_sv: usize, dim: usize) -> String {
          \"speedup\": {speedup:.2}, \"bit_exact\": {bit_exact}\n  }}",
         v1_mb / v1_s.max(1e-12),
         v2_mb / v2_s.max(1e-12),
+    )
+}
+
+/// Scoring-backend microbench on the trained "bench" model: the per-row
+/// scorer loop (the serving shape before the blocked layout), the
+/// blocked batch scorer (tile-outer/query-inner over the contiguous SV
+/// panel), and the opt-in i8-quantized scorer, all over the same query
+/// batch. Asserts the blocked path is bit-identical to the per-row
+/// path, reports which SIMD backend dispatched plus the layout build
+/// cost, and measures quantization's speedup and decision agreement.
+/// Returns the `scoring` JSON fragment.
+fn run_scoring(registry_dir: &std::path::Path, queries: &[Vec<f32>]) -> String {
+    use mlsvm::serve::{ArtifactScorer, Decision, ScoreMode, QUANT_AGREEMENT_FLOOR};
+    let reg = Registry::open(registry_dir).expect("registry");
+    let artifact = reg.load("bench").expect("artifact");
+    let scorer = ArtifactScorer::with_mode(&artifact, ScoreMode::F32).expect("scorer");
+    let quant = ArtifactScorer::with_mode(&artifact, ScoreMode::QuantizedI8).expect("quant scorer");
+
+    let n = queries.len();
+    let dim = queries[0].len();
+    let mut xs = Matrix::zeros(n, dim);
+    for (i, q) in queries.iter().enumerate() {
+        xs.row_mut(i).copy_from_slice(q);
+    }
+
+    let value_of = |d: &Decision| -> f64 {
+        let Decision::Binary { value, .. } = d else {
+            panic!("bench model is binary");
+        };
+        *value
+    };
+
+    // Best-of-5 wall time per path, with one untimed warm pass first so
+    // paging the SV panel in never lands in a measured rep.
+    let reps = 5;
+    let mut base_vals = vec![0.0f64; n];
+    for (i, q) in queries.iter().enumerate() {
+        base_vals[i] = value_of(&scorer.decide(q));
+    }
+    let mut base_s = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        for (i, q) in queries.iter().enumerate() {
+            base_vals[i] = value_of(&scorer.decide(q));
+        }
+        base_s = base_s.min(t.elapsed().as_secs_f64());
+    }
+    let mut blocked = scorer.decide_batch(&xs);
+    let mut blocked_s = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        blocked = scorer.decide_batch(&xs);
+        blocked_s = blocked_s.min(t.elapsed().as_secs_f64());
+    }
+    let mut quanted = quant.decide_batch(&xs);
+    let mut quant_s = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        quanted = quant.decide_batch(&xs);
+        quant_s = quant_s.min(t.elapsed().as_secs_f64());
+    }
+
+    // The default path's contract: blocked batch values stay
+    // bit-identical to the per-row scorer serving shipped before.
+    let bit_identical = blocked
+        .iter()
+        .enumerate()
+        .all(|(i, d)| value_of(d).to_bits() == base_vals[i].to_bits());
+    if !bit_identical {
+        eprintln!("WARNING: blocked scorer is not bit-identical to the per-row scorer");
+    }
+    let agree = quanted
+        .iter()
+        .enumerate()
+        .filter(|&(i, d)| (value_of(d) > 0.0) == (base_vals[i] > 0.0))
+        .count();
+    let agreement = agree as f64 / n.max(1) as f64;
+    if agreement < QUANT_AGREEMENT_FLOOR {
+        eprintln!(
+            "WARNING: quantized agreement {agreement:.4} below floor {QUANT_AGREEMENT_FLOOR}"
+        );
+    }
+
+    let backend = mlsvm::data::simd::backend_name();
+    let base_rps = n as f64 / base_s.max(1e-9);
+    let blocked_rps = n as f64 / blocked_s.max(1e-9);
+    let quant_rps = n as f64 / quant_s.max(1e-9);
+    let blocked_speedup = blocked_rps / base_rps.max(1e-9);
+    let quant_speedup = quant_rps / base_rps.max(1e-9);
+    let layout_ms = scorer.layout_build_ms();
+    let quant_layout_ms = quant.layout_build_ms();
+    println!(
+        "  backend={backend} | per-row {base_rps:.0} q/s | blocked {blocked_rps:.0} q/s \
+         ({blocked_speedup:.2}x, bit_identical={bit_identical}) | i8 {quant_rps:.0} q/s \
+         ({quant_speedup:.2}x, agreement={agreement:.4})"
+    );
+    if blocked_rps < base_rps {
+        eprintln!("WARNING: blocked scorer did not beat the per-row baseline");
+    }
+    format!(
+        "{{\n    \"backend\": \"{backend}\", \"queries\": {n}, \"dim\": {dim}, \
+         \"layout_build_ms\": {layout_ms:.3}, \"quant_layout_build_ms\": {quant_layout_ms:.3}, \
+         \"baseline_rps\": {base_rps:.1}, \"blocked_rps\": {blocked_rps:.1}, \
+         \"blocked_speedup\": {blocked_speedup:.2}, \"bit_identical\": {bit_identical}, \
+         \"quantized_rps\": {quant_rps:.1}, \"quantized_speedup\": {quant_speedup:.2}, \
+         \"quant_agreement\": {agreement:.4}, \"agreement_floor\": {QUANT_AGREEMENT_FLOOR}\n  }}"
     )
 }
 
@@ -799,6 +909,11 @@ fn main() {
     println!("\nlifecycle (100%-fraction canary of the identical artifact):");
     let lifecycle_json = run_lifecycle(&dir, &queries, (requests * 2).max(200));
 
+    // Scoring backends: per-row vs blocked vs i8-quantized, plus which
+    // SIMD backend dispatched and the layout build cost.
+    println!("\nscoring backends (per-row vs blocked vs i8-quantized batch):");
+    let scoring_json = run_scoring(&dir, &queries);
+
     // Registry v2 payoff: load-time v1 text vs v2 binary on a big model.
     let io_json = measure_model_io(&dir, io_svs, 32);
 
@@ -838,7 +953,7 @@ fn main() {
         "{{\n  \"bench\": \"serve\",\n  \"threads\": {},\n  \"clients\": {clients},\n  \
          \"requests_per_client\": {requests},\n  \"configs\": [\n{}\n  ],\n  \"multi_model\": \
          {multi_json},\n  \"pipelining\": {pipeline_json},\n  \"fleet\": {fleet_json},\n  \
-         \"lifecycle\": {lifecycle_json},\n  \
+         \"lifecycle\": {lifecycle_json},\n  \"scoring\": {scoring_json},\n  \
          \"model_io\": {io_json},\n  \"faults\": {faults_json},\n  \
          \"headline\": \
          {{\"max_batch\": {}, \"rps\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \

@@ -50,7 +50,12 @@ is gated too: the identical-artifact canary must have recorded shadow
 comparisons with zero disagreements, zero canary errors, and zero
 rollbacks (an unfaulted run where the guardrails fired is a bug), and
 both the baseline and shadow-on latency percentiles must be present.
-Finally it gates the faults section: an UNFAULTED bench
+The scoring section is gated as well: the dispatched SIMD backend name
+must be present, the blocked-layout batch scorer must be bit-identical
+to the per-row scorer and at least match its throughput (same box,
+back-to-back, so wall-clock-robust), layout-build milliseconds must be
+reported, and the i8-quantized scorer's decision agreement must meet
+the floor the bench recorded. Finally it gates the faults section: an UNFAULTED bench
 run must report all-zero fault counters (no injected faults from the
 disarmed plan, no worker panics, no expired request deadlines) — if any
 counter is nonzero, either the fault-injection harness armed itself or
@@ -274,6 +279,55 @@ def check_serve(path: str, min_load_speedup: float) -> int:
                     f"p50 {base.get('p50_ms')} -> {shadow.get('p50_ms')}ms "
                     f"({lc.get('overhead_p50')}x), zero disagreements/rollbacks OK"
                 )
+
+    sc = data.get("scoring")
+    if not isinstance(sc, dict):
+        print(f"{path} has no scoring section (serve bench too old?)")
+        failed = True
+    else:
+        sc_failed = False
+        backend = sc.get("backend")
+        if not isinstance(backend, str) or not backend:
+            print("SCORING GATE: missing SIMD backend name")
+            sc_failed = True
+        if sc.get("bit_identical") is not True:
+            print("SCORING PARITY FAILED: blocked batch values differ from per-row")
+            sc_failed = True
+        if not isinstance(sc.get("layout_build_ms"), (int, float)):
+            print("SCORING GATE: missing layout_build_ms")
+            sc_failed = True
+        base_rps = sc.get("baseline_rps")
+        blocked_rps = sc.get("blocked_rps")
+        if not isinstance(base_rps, (int, float)) or not isinstance(
+            blocked_rps, (int, float)
+        ):
+            print("scoring section is missing rps numbers")
+            sc_failed = True
+        elif blocked_rps < base_rps:
+            print(
+                f"SCORING REGRESSION: blocked layout {blocked_rps:.0f} q/s fell "
+                f"below the per-row scorer {base_rps:.0f} q/s"
+            )
+            sc_failed = True
+        agreement = sc.get("quant_agreement")
+        floor = sc.get("agreement_floor")
+        if not isinstance(agreement, (int, float)) or not isinstance(
+            floor, (int, float)
+        ):
+            print("scoring section is missing quantized agreement numbers")
+            sc_failed = True
+        elif agreement < floor:
+            print(f"QUANTIZED AGREEMENT: {agreement} fell below the floor {floor}")
+            sc_failed = True
+        if sc_failed:
+            failed = True
+        else:
+            print(
+                f"scoring: backend={backend} per-row {base_rps:.0f} -> blocked "
+                f"{blocked_rps:.0f} q/s ({sc.get('blocked_speedup')}x, bit-identical), "
+                f"i8 {sc.get('quantized_rps')} q/s agreement {agreement} "
+                f"(layout build {sc.get('layout_build_ms')}ms) OK"
+            )
 
     faults = data.get("faults")
     if not isinstance(faults, dict):

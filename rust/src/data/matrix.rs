@@ -210,33 +210,18 @@ impl Matrix {
     }
 }
 
-/// Dot product with f32 accumulation in 8 independent lanes — the shape
-/// LLVM's autovectorizer lifts to packed SIMD (one AVX/NEON FMA lane per
-/// accumulator) without intrinsics. The fixed-size sub-slices hoist the
-/// bounds checks out of the inner loop. Association order differs from
-/// [`dot_scalar`], so results may differ by f32 rounding (bounded by the
-/// usual n·ε·Σ|aᵢbᵢ|); everything downstream of kernel evaluation
+/// Dot product with f32 accumulation in 8 independent lanes, dispatched
+/// at runtime to the best SIMD backend ([`crate::data::simd`]:
+/// CPUID-detected AVX2 on x86-64, NEON on aarch64, overridable via
+/// `MLSVM_SIMD`). Every backend reproduces the portable 8-lane unrolled
+/// accumulation **bit for bit** — the dispatch choice is unobservable in
+/// results. Association order differs from [`dot_scalar`], so results
+/// may differ from it by f32 rounding (bounded by the usual
+/// n·ε·Σ|aᵢbᵢ|); everything downstream of kernel evaluation
 /// (`fill_rows_batch`, the serve engine's scorers) inherits this path.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    const LANES: usize = 8;
-    let n = a.len();
-    let chunks = n / LANES;
-    let mut acc = [0.0f32; LANES];
-    for c in 0..chunks {
-        let av: &[f32; LANES] = a[c * LANES..(c + 1) * LANES].try_into().unwrap();
-        let bv: &[f32; LANES] = b[c * LANES..(c + 1) * LANES].try_into().unwrap();
-        for l in 0..LANES {
-            acc[l] += av[l] * bv[l];
-        }
-    }
-    // Pairwise reduction keeps the lane sums balanced.
-    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
-    for i in chunks * LANES..n {
-        s += a[i] * b[i];
-    }
-    s
+    crate::data::simd::dot(a, b)
 }
 
 /// Order-literal scalar dot product: the reference the SIMD-friendly

@@ -10,6 +10,7 @@ pub mod dataset;
 pub mod libsvm;
 pub mod matrix;
 pub mod scale;
+pub mod simd;
 pub mod split;
 pub mod svd;
 pub mod synth;

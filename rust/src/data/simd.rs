@@ -1,0 +1,479 @@
+//! Runtime-dispatched SIMD micro-kernels behind the [`crate::data::matrix::dot`]
+//! seam.
+//!
+//! Every backend reproduces the **portable 8-lane unrolled accumulation
+//! bit for bit**: one f32 multiply and one f32 add per element per lane
+//! (never a fused multiply-add — FMA's single rounding would diverge),
+//! followed by the same fixed pairwise lane reduction and the same
+//! scalar tail. The dispatch choice is therefore unobservable in
+//! results — `MLSVM_SIMD=scalar` and `MLSVM_SIMD=auto` serve identical
+//! bytes — and the backends win on *throughput only*: wider registers,
+//! and (in [`dot_rows`]) a 4-row block that holds the query chunk in
+//! registers while breaking the single-accumulator dependency chain.
+//!
+//! Selection happens once per process ([`backend`]):
+//!
+//! 1. `MLSVM_SIMD=scalar` forces the portable path;
+//! 2. `MLSVM_SIMD=avx2` / `MLSVM_SIMD=neon` force that backend when the
+//!    CPU supports it (silently falling back to the portable path
+//!    otherwise, so a pinned config stays portable across hosts);
+//! 3. `MLSVM_SIMD=auto` (or unset, or any unknown value) picks the best
+//!    the CPU offers: AVX2 (detected together with FMA on x86-64), NEON
+//!    on aarch64, else the portable path.
+//!
+//! The resolved name is surfaced in `/stats` (`simd_backend`) and in
+//! `BENCH_serve.json`'s `scoring` section so benches record which
+//! backend actually ran.
+
+use std::sync::OnceLock;
+
+/// Lane width of the portable unrolled kernel (f32 lanes in one AVX2
+/// register; two NEON registers).
+pub const LANES: usize = 8;
+
+/// A dispatchable dot-product backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// The portable 8-lane unrolled reference path.
+    Scalar,
+    /// x86-64 AVX2 (detected alongside FMA; FMA itself is deliberately
+    /// unused — see the module docs).
+    Avx2,
+    /// aarch64 NEON (two 4-lane registers emulate the 8-lane pattern).
+    Neon,
+}
+
+impl SimdBackend {
+    /// Stable lower-case name (`/stats`, benches, `MLSVM_SIMD` values).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+fn best_available() -> SimdBackend {
+    if avx2_available() {
+        SimdBackend::Avx2
+    } else if neon_available() {
+        SimdBackend::Neon
+    } else {
+        SimdBackend::Scalar
+    }
+}
+
+fn detect() -> SimdBackend {
+    match std::env::var("MLSVM_SIMD").as_deref() {
+        Ok("scalar") => SimdBackend::Scalar,
+        Ok("avx2") => {
+            if avx2_available() {
+                SimdBackend::Avx2
+            } else {
+                SimdBackend::Scalar
+            }
+        }
+        Ok("neon") => {
+            if neon_available() {
+                SimdBackend::Neon
+            } else {
+                SimdBackend::Scalar
+            }
+        }
+        _ => best_available(),
+    }
+}
+
+/// The backend this process dispatches to, resolved once from
+/// `MLSVM_SIMD` and CPU feature detection (see the module docs).
+pub fn backend() -> SimdBackend {
+    static BACKEND: OnceLock<SimdBackend> = OnceLock::new();
+    *BACKEND.get_or_init(detect)
+}
+
+/// Stable name of the active backend (`"scalar"`, `"avx2"`, `"neon"`).
+pub fn backend_name() -> &'static str {
+    backend().name()
+}
+
+/// Every backend this host can actually run (always includes `Scalar`) —
+/// the property-test surface for [`dot_on`]/[`dot_rows_on`].
+pub fn available_backends() -> Vec<SimdBackend> {
+    let mut v = vec![SimdBackend::Scalar];
+    if avx2_available() {
+        v.push(SimdBackend::Avx2);
+    }
+    if neon_available() {
+        v.push(SimdBackend::Neon);
+    }
+    v
+}
+
+/// The fixed pairwise lane reduction shared by every backend. Pairwise
+/// keeps the lane sums balanced — and keeping it *identical* everywhere
+/// is what makes the backends interchangeable bit for bit.
+#[inline(always)]
+fn reduce(acc: &[f32; LANES]) -> f32 {
+    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+}
+
+/// The portable 8-lane unrolled dot — the reference every SIMD backend
+/// must match bit for bit.
+#[inline]
+pub fn dot_portable(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let av: &[f32; LANES] = a[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        let bv: &[f32; LANES] = b[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        for l in 0..LANES {
+            acc[l] += av[l] * bv[l];
+        }
+    }
+    let mut s = reduce(&acc);
+    for i in chunks * LANES..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Dispatched dot product: bit-identical to [`dot_portable`] on every
+/// backend.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    match backend() {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 => unsafe { dot_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => unsafe { dot_neon(a, b) },
+        _ => dot_portable(a, b),
+    }
+}
+
+/// Dot through a *specific* backend — the property-test surface. Panics
+/// if `bk` is not in [`available_backends`] on this host.
+pub fn dot_on(bk: SimdBackend, a: &[f32], b: &[f32]) -> f32 {
+    match bk {
+        SimdBackend::Scalar => dot_portable(a, b),
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 if avx2_available() => unsafe { dot_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon if neon_available() => unsafe { dot_neon(a, b) },
+        other => panic!("backend {other:?} is not available on this host"),
+    }
+}
+
+/// Batched micro-kernel behind kernel-row fills and the blocked batch
+/// scorer: `out[r] = dot(query, rows[r*dim .. (r+1)*dim])` for every row
+/// of the row-major panel `rows`. Each entry is bit-identical to the
+/// dispatched [`dot`]; the SIMD backends process four rows per step,
+/// sharing the loaded query chunk and running four independent
+/// accumulator chains.
+pub fn dot_rows(query: &[f32], rows: &[f32], dim: usize, out: &mut [f32]) {
+    if dim == 0 {
+        out.fill(0.0);
+        return;
+    }
+    debug_assert_eq!(query.len(), dim);
+    debug_assert_eq!(rows.len(), out.len() * dim);
+    match backend() {
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 => unsafe { dot_rows_avx2(query, rows, dim, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon => unsafe { dot_rows_neon(query, rows, dim, out) },
+        _ => dot_rows_portable(query, rows, dim, out),
+    }
+}
+
+/// Portable reference for [`dot_rows`].
+pub fn dot_rows_portable(query: &[f32], rows: &[f32], dim: usize, out: &mut [f32]) {
+    if dim == 0 {
+        out.fill(0.0);
+        return;
+    }
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot_portable(query, &rows[r * dim..(r + 1) * dim]);
+    }
+}
+
+/// [`dot_rows`] through a specific backend — the property-test surface.
+/// Panics if `bk` is not in [`available_backends`] on this host.
+pub fn dot_rows_on(bk: SimdBackend, query: &[f32], rows: &[f32], dim: usize, out: &mut [f32]) {
+    if dim == 0 {
+        out.fill(0.0);
+        return;
+    }
+    match bk {
+        SimdBackend::Scalar => dot_rows_portable(query, rows, dim, out),
+        #[cfg(target_arch = "x86_64")]
+        SimdBackend::Avx2 if avx2_available() => unsafe { dot_rows_avx2(query, rows, dim, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdBackend::Neon if neon_available() => unsafe { dot_rows_neon(query, rows, dim, out) },
+        other => panic!("backend {other:?} is not available on this host"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 (x86-64)
+// ---------------------------------------------------------------------------
+
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 (`avx2_available()`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    // Separate multiply and add (never _mm256_fmadd_ps): each lane
+    // performs exactly the portable path's operations, in its order.
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let av = _mm256_loadu_ps(a.as_ptr().add(c * LANES));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(c * LANES));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut s = reduce(&lanes);
+    for i in chunks * LANES..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 (`avx2_available()`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_rows_avx2(query: &[f32], rows: &[f32], dim: usize, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let chunks = dim / LANES;
+    let mut lanes = [0.0f32; LANES];
+    let mut r = 0usize;
+    while r + 4 <= n {
+        let p0 = rows.as_ptr().add(r * dim);
+        let p1 = rows.as_ptr().add((r + 1) * dim);
+        let p2 = rows.as_ptr().add((r + 2) * dim);
+        let p3 = rows.as_ptr().add((r + 3) * dim);
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let q = _mm256_loadu_ps(query.as_ptr().add(c * LANES));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(q, _mm256_loadu_ps(p0.add(c * LANES))));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(q, _mm256_loadu_ps(p1.add(c * LANES))));
+            a2 = _mm256_add_ps(a2, _mm256_mul_ps(q, _mm256_loadu_ps(p2.add(c * LANES))));
+            a3 = _mm256_add_ps(a3, _mm256_mul_ps(q, _mm256_loadu_ps(p3.add(c * LANES))));
+        }
+        _mm256_storeu_ps(lanes.as_mut_ptr(), a0);
+        let mut s0 = reduce(&lanes);
+        _mm256_storeu_ps(lanes.as_mut_ptr(), a1);
+        let mut s1 = reduce(&lanes);
+        _mm256_storeu_ps(lanes.as_mut_ptr(), a2);
+        let mut s2 = reduce(&lanes);
+        _mm256_storeu_ps(lanes.as_mut_ptr(), a3);
+        let mut s3 = reduce(&lanes);
+        for i in chunks * LANES..dim {
+            let q = query[i];
+            s0 += q * *p0.add(i);
+            s1 += q * *p1.add(i);
+            s2 += q * *p2.add(i);
+            s3 += q * *p3.add(i);
+        }
+        out[r] = s0;
+        out[r + 1] = s1;
+        out[r + 2] = s2;
+        out[r + 3] = s3;
+        r += 4;
+    }
+    while r < n {
+        out[r] = dot_avx2(query, &rows[r * dim..(r + 1) * dim]);
+        r += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64)
+// ---------------------------------------------------------------------------
+
+/// # Safety
+/// Caller must ensure the CPU supports NEON (`neon_available()`).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / LANES;
+    // Two 4-lane registers emulate the 8-lane portable accumulators;
+    // separate multiply and add (never vfmaq_f32) keeps every lane
+    // bit-identical to the portable path.
+    let mut lo = vdupq_n_f32(0.0);
+    let mut hi = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let pa = a.as_ptr().add(c * LANES);
+        let pb = b.as_ptr().add(c * LANES);
+        lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(pa), vld1q_f32(pb)));
+        hi = vaddq_f32(hi, vmulq_f32(vld1q_f32(pa.add(4)), vld1q_f32(pb.add(4))));
+    }
+    let mut lanes = [0.0f32; LANES];
+    vst1q_f32(lanes.as_mut_ptr(), lo);
+    vst1q_f32(lanes.as_mut_ptr().add(4), hi);
+    let mut s = reduce(&lanes);
+    for i in chunks * LANES..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// # Safety
+/// Caller must ensure the CPU supports NEON (`neon_available()`).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_rows_neon(query: &[f32], rows: &[f32], dim: usize, out: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = out.len();
+    let chunks = dim / LANES;
+    let mut lanes = [0.0f32; LANES];
+    let mut r = 0usize;
+    while r + 2 <= n {
+        let p0 = rows.as_ptr().add(r * dim);
+        let p1 = rows.as_ptr().add((r + 1) * dim);
+        let mut lo0 = vdupq_n_f32(0.0);
+        let mut hi0 = vdupq_n_f32(0.0);
+        let mut lo1 = vdupq_n_f32(0.0);
+        let mut hi1 = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let pq = query.as_ptr().add(c * LANES);
+            let qlo = vld1q_f32(pq);
+            let qhi = vld1q_f32(pq.add(4));
+            lo0 = vaddq_f32(lo0, vmulq_f32(qlo, vld1q_f32(p0.add(c * LANES))));
+            hi0 = vaddq_f32(hi0, vmulq_f32(qhi, vld1q_f32(p0.add(c * LANES + 4))));
+            lo1 = vaddq_f32(lo1, vmulq_f32(qlo, vld1q_f32(p1.add(c * LANES))));
+            hi1 = vaddq_f32(hi1, vmulq_f32(qhi, vld1q_f32(p1.add(c * LANES + 4))));
+        }
+        vst1q_f32(lanes.as_mut_ptr(), lo0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), hi0);
+        let mut s0 = reduce(&lanes);
+        vst1q_f32(lanes.as_mut_ptr(), lo1);
+        vst1q_f32(lanes.as_mut_ptr().add(4), hi1);
+        let mut s1 = reduce(&lanes);
+        for i in chunks * LANES..dim {
+            let q = query[i];
+            s0 += q * *p0.add(i);
+            s1 += q * *p1.add(i);
+        }
+        out[r] = s0;
+        out[r + 1] = s1;
+        r += 2;
+    }
+    while r < n {
+        out[r] = dot_neon(query, &rows[r * dim..(r + 1) * dim]);
+        r += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng};
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::seed_from(seed);
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn backend_resolves_and_names_are_stable() {
+        let bk = backend();
+        assert!(available_backends().contains(&bk));
+        assert!(matches!(backend_name(), "scalar" | "avx2" | "neon"));
+        assert_eq!(SimdBackend::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn every_available_backend_matches_portable_bit_for_bit() {
+        for &n in &[0usize, 1, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 257] {
+            let (a, b) = vecs(n, 7 + n as u64);
+            let want = dot_portable(&a, &b);
+            for bk in available_backends() {
+                let got = dot_on(bk, &a, &b);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "dot n={n} backend={bk:?}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_rows_matches_per_row_dot_bit_for_bit() {
+        for &dim in &[1usize, 3, 7, 8, 9, 16, 17, 40] {
+            for &rows in &[0usize, 1, 2, 3, 4, 5, 7, 9] {
+                let (panel, _) = vecs(rows * dim, 100 + (dim * rows) as u64);
+                let (q, _) = vecs(dim, 200 + dim as u64);
+                let mut out = vec![0.0f32; rows];
+                for bk in available_backends() {
+                    dot_rows_on(bk, &q, &panel, dim, &mut out);
+                    for r in 0..rows {
+                        let want = dot_portable(&q, &panel[r * dim..(r + 1) * dim]);
+                        assert_eq!(
+                            out[r].to_bits(),
+                            want.to_bits(),
+                            "dot_rows dim={dim} rows={rows} r={r} backend={bk:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_dot_matches_portable() {
+        let (a, b) = vecs(129, 42);
+        assert_eq!(dot(&a, &b).to_bits(), dot_portable(&a, &b).to_bits());
+        let mut out = vec![0.0f32; 3];
+        dot_rows(&a[..39], &b[..117], 39, &mut out);
+        for r in 0..3 {
+            let want = dot_portable(&a[..39], &b[r * 39..(r + 1) * 39]);
+            assert_eq!(out[r].to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_dim_rows_fill_zero() {
+        let mut out = vec![1.0f32; 4];
+        dot_rows(&[], &[], 0, &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+}

@@ -522,9 +522,26 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
             None,
         )
         .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
+        .opt(
+            "quantize",
+            "opt-in quantized scoring mode ('i8'; default f32 is bit-exact)",
+            None,
+        )
         .flag("lazy", "skip preloading; engines spawn on first use")
         .parse_from(argv)?;
     apply_threads(&args)?;
+    match args.get("quantize") {
+        None => {}
+        Some("i8") => {
+            mlsvm::serve::set_score_mode(mlsvm::serve::ScoreMode::QuantizedI8);
+            eprintln!("quantized scoring armed: i8 panels, i32 accumulation");
+        }
+        Some(other) => {
+            return Err(Error::Usage(format!(
+                "--quantize {other}: only 'i8' is supported"
+            )));
+        }
+    }
     let reg = mlsvm::serve::Registry::open(args.get("registry").unwrap())?;
     let names: Vec<String> = match args.get("models") {
         Some(list) => list

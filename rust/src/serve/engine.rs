@@ -29,14 +29,16 @@
 
 use crate::coordinator::jobs::MulticlassModel;
 use crate::data::matrix::{dot, Matrix};
+use crate::data::simd;
 use crate::error::{Error, Result};
+use crate::runtime::{PjrtDecision, Runtime};
 use crate::serve::faults::FaultPlan;
 use crate::serve::registry::ModelArtifact;
 use crate::serve::stats::{BatchStats, EngineStats, StatsSnapshot};
 use crate::svm::kernel::{KernelKind, KERNEL_TILE};
 use crate::svm::model::SvmModel;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::time::{Duration, Instant};
@@ -54,6 +56,58 @@ const WORKER_RESPAWN_CAP: usize = 8;
 /// of cascading the abort.
 fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Scoring mode (f32 default, opt-in i8 quantized)
+// ---------------------------------------------------------------------------
+
+/// Numeric mode of the batch scorer. The default [`ScoreMode::F32`] path
+/// is bit-identical to the classic per-query tiled scorer; the opt-in
+/// [`ScoreMode::QuantizedI8`] path trades dot-product precision for
+/// throughput (i8 panels, i32 accumulation) and is surfaced with a
+/// measured decision-agreement in `BENCH_serve.json`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreMode {
+    /// Full-precision f32 dot products (the determinism-contract path).
+    F32 = 0,
+    /// i8 support-vector panels with per-row scales and i32 accumulation.
+    QuantizedI8 = 1,
+}
+
+impl ScoreMode {
+    /// Stable short name for stats/bench JSON ("f32" / "i8").
+    pub fn name(self) -> &'static str {
+        match self {
+            ScoreMode::F32 => "f32",
+            ScoreMode::QuantizedI8 => "i8",
+        }
+    }
+}
+
+/// Minimum fraction of queries on which quantized decisions must agree
+/// with the f32 scorer (same predicted label). Shared by the property
+/// test, the serve bench, and `ci/check_bench.py --serve`.
+pub const QUANT_AGREEMENT_FLOOR: f64 = 0.95;
+
+/// Process-wide scoring mode, set once by `mlsvm serve --quantize i8`
+/// before any model loads. [`ArtifactScorer::new`] reads it so the whole
+/// serving stack (manager, canaries, reloads) inherits the flag without
+/// threading it through every constructor.
+static SCORE_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-wide scoring mode (CLI startup path).
+pub fn set_score_mode(mode: ScoreMode) {
+    SCORE_MODE.store(mode as u8, Ordering::Relaxed);
+}
+
+/// The process-wide scoring mode in force.
+pub fn score_mode() -> ScoreMode {
+    if SCORE_MODE.load(Ordering::Relaxed) == ScoreMode::QuantizedI8 as u8 {
+        ScoreMode::QuantizedI8
+    } else {
+        ScoreMode::F32
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -247,13 +301,96 @@ pub enum Decision {
 pub struct BinaryScorer {
     model: SvmModel,
     sv_norms: Vec<f64>,
+    layout: ScorerLayout,
+}
+
+/// Blocked support-vector layout, built once at model load. The
+/// row-major SV matrix already stores each [`KERNEL_TILE`] tile of rows
+/// as one contiguous panel, so the f32 layout is the panel schedule the
+/// blocked batch scorer streams; in [`ScoreMode::QuantizedI8`] it
+/// additionally holds the i8 panel with per-row scales. `build_ms` is
+/// reported in `BENCH_serve.json` so model-load regressions show up.
+pub struct ScorerLayout {
+    quant: Option<QuantPanel>,
+    build_ms: f64,
+}
+
+/// Quantized support vectors: i8 rows (same row-major shape as the f32
+/// SV matrix) plus one f32 dequantization scale per row (max|row|/127).
+struct QuantPanel {
+    rows: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QuantPanel {
+    fn build(sv: &Matrix) -> QuantPanel {
+        let (n, d) = (sv.rows(), sv.cols());
+        let mut rows = vec![0i8; n * d];
+        let mut scales = vec![0.0f32; n];
+        for j in 0..n {
+            let r = sv.row(j);
+            let maxabs = r.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if maxabs == 0.0 {
+                continue; // all-zero row quantizes to zeros with scale 0
+            }
+            let scale = maxabs / 127.0;
+            scales[j] = scale;
+            for (q, &v) in rows[j * d..(j + 1) * d].iter_mut().zip(r) {
+                *q = (v / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantPanel { rows, scales }
+    }
+}
+
+/// Quantize one query against its own max-abs scale; returns the scale
+/// (0.0 for an all-zero query, whose quantized form is all zeros).
+fn quantize_query(x: &[f32], out: &mut [i8]) -> f32 {
+    let maxabs = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if maxabs == 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
+    let scale = maxabs / 127.0;
+    for (q, &v) in out.iter_mut().zip(x) {
+        *q = (v / scale).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// i8·i8 dot with i32 accumulation (products are ≤ 127², so dimensions
+/// far beyond any SVM feature count fit without overflow).
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as i32 * y as i32;
+    }
+    acc
 }
 
 impl BinaryScorer {
-    /// Wrap a model (precomputes ‖sv‖²).
+    /// Wrap a model in the default f32 mode (precomputes ‖sv‖²).
     pub fn new(model: SvmModel) -> BinaryScorer {
+        BinaryScorer::with_mode(model, ScoreMode::F32)
+    }
+
+    /// Wrap a model, building the blocked scoring layout for `mode`.
+    pub fn with_mode(model: SvmModel, mode: ScoreMode) -> BinaryScorer {
+        let t = Instant::now();
         let sv_norms = model.sv.row_sqnorms();
-        BinaryScorer { model, sv_norms }
+        let quant = match mode {
+            ScoreMode::F32 => None,
+            ScoreMode::QuantizedI8 => Some(QuantPanel::build(&model.sv)),
+        };
+        let layout = ScorerLayout {
+            quant,
+            build_ms: t.elapsed().as_secs_f64() * 1e3,
+        };
+        BinaryScorer {
+            model,
+            sv_norms,
+            layout,
+        }
     }
 
     /// Feature dimensionality the model expects.
@@ -266,9 +403,28 @@ impl BinaryScorer {
         &self.model
     }
 
+    /// The numeric mode this scorer was built for.
+    pub fn mode(&self) -> ScoreMode {
+        if self.layout.quant.is_some() {
+            ScoreMode::QuantizedI8
+        } else {
+            ScoreMode::F32
+        }
+    }
+
+    /// Milliseconds spent building the scoring layout (norms + panels).
+    pub fn layout_build_ms(&self) -> f64 {
+        self.layout.build_ms
+    }
+
     /// Decision value for one query (tiled batched-kernel path; agrees
-    /// with [`SvmModel::decision`] up to f32-dot rounding).
+    /// with [`SvmModel::decision`] up to f32-dot rounding). In quantized
+    /// mode this routes through the i8 panel so single-query and batch
+    /// answers stay self-consistent.
     pub fn decide(&self, x: &[f32]) -> f64 {
+        if self.layout.quant.is_some() {
+            return self.decide_quant(x);
+        }
         let m = &self.model;
         let nsv = m.n_sv();
         let mut s = -m.rho;
@@ -309,6 +465,166 @@ impl BinaryScorer {
         }
         s
     }
+
+    /// Blocked batch scoring: tiles outer, queries inner, so each
+    /// [`KERNEL_TILE`] panel of SV rows is streamed once per flush and
+    /// stays cache-resident while every query in the batch scores
+    /// against it. Per query the accumulation order (ascending `j`
+    /// across ascending tiles) is exactly [`BinaryScorer::decide`]'s,
+    /// so f32-mode results are bit-identical to the per-query scorer.
+    pub fn decide_many(&self, xs: &Matrix, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), xs.rows());
+        if self.layout.quant.is_some() {
+            self.decide_many_quant(xs, out);
+        } else {
+            self.decide_many_f32(xs, out);
+        }
+    }
+
+    fn decide_many_f32(&self, xs: &Matrix, out: &mut [f64]) {
+        let m = &self.model;
+        let nsv = m.n_sv();
+        let d = m.sv.cols();
+        let sv = m.sv.as_slice();
+        out.fill(-m.rho);
+        let qnorms: Vec<f64> = match m.kernel {
+            KernelKind::Rbf { .. } => (0..xs.rows())
+                .map(|q| xs.row(q).iter().map(|&v| (v as f64) * (v as f64)).sum())
+                .collect(),
+            _ => Vec::new(),
+        };
+        let mut dots = [0.0f32; KERNEL_TILE];
+        let mut t0 = 0usize;
+        while t0 < nsv {
+            let t1 = (t0 + KERNEL_TILE).min(nsv);
+            let panel = &sv[t0 * d..t1 * d];
+            for q in 0..xs.rows() {
+                let x = xs.row(q);
+                simd::dot_rows(x, panel, d, &mut dots[..t1 - t0]);
+                let mut s = out[q];
+                match m.kernel {
+                    KernelKind::Rbf { gamma } => {
+                        let nq = qnorms[q];
+                        for j in t0..t1 {
+                            let d2 =
+                                (nq + self.sv_norms[j] - 2.0 * dots[j - t0] as f64).max(0.0);
+                            s += m.sv_coef[j] * (-gamma * d2).exp();
+                        }
+                    }
+                    KernelKind::Linear => {
+                        for j in t0..t1 {
+                            s += m.sv_coef[j] * dots[j - t0] as f64;
+                        }
+                    }
+                    KernelKind::Poly {
+                        gamma,
+                        coef0,
+                        degree,
+                    } => {
+                        for j in t0..t1 {
+                            s += m.sv_coef[j]
+                                * (gamma * dots[j - t0] as f64 + coef0).powi(degree as i32);
+                        }
+                    }
+                }
+                out[q] = s;
+            }
+            t0 = t1;
+        }
+    }
+
+    fn decide_quant(&self, x: &[f32]) -> f64 {
+        let m = &self.model;
+        let nsv = m.n_sv();
+        let mut qx = vec![0i8; x.len()];
+        let qscale = quantize_query(x, &mut qx);
+        // The query norm stays exact (from the f32 query): quantization
+        // only approximates the dot products.
+        let nq: f64 = match m.kernel {
+            KernelKind::Rbf { .. } => x.iter().map(|&v| (v as f64) * (v as f64)).sum(),
+            _ => 0.0,
+        };
+        let mut s = -m.rho;
+        let mut t0 = 0usize;
+        while t0 < nsv {
+            let t1 = (t0 + KERNEL_TILE).min(nsv);
+            self.quant_tile(&qx, qscale, nq, t0, t1, &mut s);
+            t0 = t1;
+        }
+        s
+    }
+
+    fn decide_many_quant(&self, xs: &Matrix, out: &mut [f64]) {
+        let m = &self.model;
+        let nsv = m.n_sv();
+        let d = m.sv.cols();
+        let n = xs.rows();
+        // Quantize every query once up front (amortized over all tiles).
+        let mut qxs = vec![0i8; n * d];
+        let mut qscales = vec![0.0f32; n];
+        for q in 0..n {
+            qscales[q] = quantize_query(xs.row(q), &mut qxs[q * d..(q + 1) * d]);
+        }
+        let qnorms: Vec<f64> = match m.kernel {
+            KernelKind::Rbf { .. } => (0..n)
+                .map(|q| xs.row(q).iter().map(|&v| (v as f64) * (v as f64)).sum())
+                .collect(),
+            _ => vec![0.0; n],
+        };
+        out.fill(-m.rho);
+        let mut t0 = 0usize;
+        while t0 < nsv {
+            let t1 = (t0 + KERNEL_TILE).min(nsv);
+            for q in 0..n {
+                self.quant_tile(
+                    &qxs[q * d..(q + 1) * d],
+                    qscales[q],
+                    qnorms[q],
+                    t0,
+                    t1,
+                    &mut out[q],
+                );
+            }
+            t0 = t1;
+        }
+    }
+
+    /// Accumulate one (query, SV-tile) block of the quantized decision
+    /// sum. Shared by the single-query and batch paths so both produce
+    /// identical values for the same query.
+    fn quant_tile(&self, qx: &[i8], qscale: f32, nq: f64, t0: usize, t1: usize, s: &mut f64) {
+        let qp = self.layout.quant.as_ref().expect("quantized layout");
+        let m = &self.model;
+        let d = m.sv.cols();
+        match m.kernel {
+            KernelKind::Rbf { gamma } => {
+                for j in t0..t1 {
+                    let dq =
+                        dot_i8(qx, &qp.rows[j * d..(j + 1) * d]) as f32 * qp.scales[j] * qscale;
+                    let d2 = (nq + self.sv_norms[j] - 2.0 * dq as f64).max(0.0);
+                    *s += m.sv_coef[j] * (-gamma * d2).exp();
+                }
+            }
+            KernelKind::Linear => {
+                for j in t0..t1 {
+                    let dq =
+                        dot_i8(qx, &qp.rows[j * d..(j + 1) * d]) as f32 * qp.scales[j] * qscale;
+                    *s += m.sv_coef[j] * dq as f64;
+                }
+            }
+            KernelKind::Poly {
+                gamma,
+                coef0,
+                degree,
+            } => {
+                for j in t0..t1 {
+                    let dq =
+                        dot_i8(qx, &qp.rows[j * d..(j + 1) * d]) as f32 * qp.scales[j] * qscale;
+                    *s += m.sv_coef[j] * (gamma * dq as f64 + coef0).powi(degree as i32);
+                }
+            }
+        }
+    }
 }
 
 enum ScorerKind {
@@ -317,21 +633,73 @@ enum ScorerKind {
     Multi(Vec<(u8, BinaryScorer)>),
 }
 
+/// Device-side scorer state: the PJRT runtime plus the compiled decision
+/// executable for the loaded model. Mutex-guarded because runtime
+/// execution needs `&mut` (buffer transfers are stateful).
+struct DeviceState {
+    rt: Runtime,
+    dec: PjrtDecision,
+}
+
+/// Try to bring up the PJRT device path for a binary model. Present only
+/// when a compiled decision artifact is loadable — real `pjrt` builds
+/// with `$MLSVM_ARTIFACTS`/`./artifacts` populated; the stub runtime
+/// always declines, which keeps default builds on the bit-exact rust
+/// tiles.
+fn attach_device(model: &SvmModel) -> Option<Mutex<DeviceState>> {
+    let rt = Runtime::new(Runtime::default_dir()).ok()?;
+    let dec = PjrtDecision::new(&rt, model).ok()?;
+    Some(Mutex::new(DeviceState { rt, dec }))
+}
+
+/// Wrap a binary decision value with its sign label (ties → −1).
+fn binary_decision(value: f64) -> Decision {
+    Decision::Binary {
+        value,
+        label: if value > 0.0 { 1 } else { -1 },
+    }
+}
+
+/// Argmax with first-best-wins ties, matching `MulticlassModel::predict`.
+fn multiclass_decision(scores: Vec<(u8, f64)>) -> Decision {
+    let mut best: Option<(u8, f64)> = None;
+    for &(c, d) in &scores {
+        if best.map(|(_, bd)| d > bd).unwrap_or(true) {
+            best = Some((c, d));
+        }
+    }
+    Decision::Multiclass {
+        class: best.map(|(c, _)| c),
+        scores,
+    }
+}
+
 /// Prepared evaluator for any [`ModelArtifact`] kind.
 pub struct ArtifactScorer {
     kind: ScorerKind,
     dim: usize,
+    device: Option<Mutex<DeviceState>>,
+    device_batches: AtomicU64,
 }
 
 impl ArtifactScorer {
     /// Prepare an artifact for serving (clones the finest models out of
-    /// it; multilevel metadata stays behind).
+    /// it; multilevel metadata stays behind). Scores in the process-wide
+    /// [`score_mode`].
     pub fn new(artifact: &ModelArtifact) -> Result<ArtifactScorer> {
+        ArtifactScorer::with_mode(artifact, score_mode())
+    }
+
+    /// Prepare an artifact for serving in an explicit [`ScoreMode`]
+    /// (benches compare modes side by side within one process).
+    pub fn with_mode(artifact: &ModelArtifact, mode: ScoreMode) -> Result<ArtifactScorer> {
         let kind = match artifact {
-            ModelArtifact::Svm(m) => ScorerKind::Binary(BinaryScorer::new(m.clone())),
-            ModelArtifact::Mlsvm(m) => ScorerKind::Binary(BinaryScorer::new(m.model.clone())),
+            ModelArtifact::Svm(m) => ScorerKind::Binary(BinaryScorer::with_mode(m.clone(), mode)),
+            ModelArtifact::Mlsvm(m) => {
+                ScorerKind::Binary(BinaryScorer::with_mode(m.model.clone(), mode))
+            }
             ModelArtifact::Multiclass(mc) => {
-                let scorers = multiclass_scorers(mc);
+                let scorers = multiclass_scorers(mc, mode);
                 if scorers.is_empty() {
                     return Err(Error::Serve(
                         "multiclass artifact has no trained class models".into(),
@@ -352,7 +720,18 @@ impl ArtifactScorer {
                 d
             }
         };
-        Ok(ArtifactScorer { kind, dim })
+        // The device decision path is f32-only and binary-only; quantized
+        // and multiclass scoring always run the rust tiles.
+        let device = match (&kind, mode) {
+            (ScorerKind::Binary(b), ScoreMode::F32) => attach_device(b.model()),
+            _ => None,
+        };
+        Ok(ArtifactScorer {
+            kind,
+            dim,
+            device,
+            device_batches: AtomicU64::new(0),
+        })
     }
 
     /// Feature dimensionality queries must have.
@@ -382,48 +761,110 @@ impl ArtifactScorer {
         }
     }
 
+    /// Numeric mode the scorer was built for.
+    pub fn mode(&self) -> ScoreMode {
+        match &self.kind {
+            ScorerKind::Binary(b) => b.mode(),
+            ScorerKind::Multi(list) => list[0].1.mode(),
+        }
+    }
+
+    /// Stable short name of the numeric mode ("f32" / "i8").
+    pub fn mode_name(&self) -> &'static str {
+        self.mode().name()
+    }
+
+    /// Total milliseconds spent building scoring layouts (summed over
+    /// class models for multiclass artifacts).
+    pub fn layout_build_ms(&self) -> f64 {
+        match &self.kind {
+            ScorerKind::Binary(b) => b.layout_build_ms(),
+            ScorerKind::Multi(list) => list.iter().map(|(_, s)| s.layout_build_ms()).sum(),
+        }
+    }
+
+    /// Whether the PJRT device decision path is attached.
+    pub fn device_active(&self) -> bool {
+        self.device.is_some()
+    }
+
+    /// Batches answered by the device path so far.
+    pub fn device_batches(&self) -> u64 {
+        self.device_batches.load(Ordering::Relaxed)
+    }
+
     /// Evaluate one query.
     pub fn decide(&self, x: &[f32]) -> Decision {
         match &self.kind {
-            ScorerKind::Binary(b) => {
-                let value = b.decide(x);
-                Decision::Binary {
-                    value,
-                    label: if value > 0.0 { 1 } else { -1 },
-                }
-            }
+            ScorerKind::Binary(b) => binary_decision(b.decide(x)),
             ScorerKind::Multi(list) => {
                 let scores: Vec<(u8, f64)> =
                     list.iter().map(|(c, s)| (*c, s.decide(x))).collect();
-                // Argmax with first-best-wins ties, matching
-                // MulticlassModel::predict.
-                let mut best: Option<(u8, f64)> = None;
-                for &(c, d) in &scores {
-                    if best.map(|(_, bd)| d > bd).unwrap_or(true) {
-                        best = Some((c, d));
-                    }
-                }
-                Decision::Multiclass {
-                    class: best.map(|(c, _)| c),
-                    scores,
-                }
+                multiclass_decision(scores)
             }
         }
     }
 
-    /// Evaluate every row of a query matrix.
+    /// Evaluate every row of a query matrix — the engine-flush path.
+    /// Binary models go through the device batch executable when one is
+    /// attached, else the blocked rust tiles; multiclass runs the
+    /// blocked tiles once per class and argmaxes per row. Values and
+    /// ordering are identical to calling [`ArtifactScorer::decide`] per
+    /// row (bit-identical in f32 mode without a device).
     pub fn decide_batch(&self, xs: &Matrix) -> Vec<Decision> {
-        (0..xs.rows()).map(|i| self.decide(xs.row(i))).collect()
+        if let Some(vals) = self.device_batch(xs) {
+            return vals.into_iter().map(binary_decision).collect();
+        }
+        match &self.kind {
+            ScorerKind::Binary(b) => {
+                let mut vals = vec![0.0f64; xs.rows()];
+                b.decide_many(xs, &mut vals);
+                vals.into_iter().map(binary_decision).collect()
+            }
+            ScorerKind::Multi(list) => {
+                let n = xs.rows();
+                let mut per_class: Vec<(u8, Vec<f64>)> = Vec::with_capacity(list.len());
+                for (c, s) in list {
+                    let mut vals = vec![0.0f64; n];
+                    s.decide_many(xs, &mut vals);
+                    per_class.push((*c, vals));
+                }
+                (0..n)
+                    .map(|q| {
+                        let scores: Vec<(u8, f64)> =
+                            per_class.iter().map(|(c, v)| (*c, v[q])).collect();
+                        multiclass_decision(scores)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Run the whole batch on the device when the PJRT path is attached.
+    /// Any device failure returns `None` and the caller falls back to
+    /// the rust tiles — a broken artifact degrades throughput, never
+    /// availability.
+    fn device_batch(&self, xs: &Matrix) -> Option<Vec<f64>> {
+        let dev = self.device.as_ref()?;
+        let mut g = lock_recover(dev);
+        let st = &mut *g;
+        match st.dec.decision_batch(&mut st.rt, xs) {
+            Ok(vals) => {
+                self.device_batches.fetch_add(1, Ordering::Relaxed);
+                Some(vals)
+            }
+            Err(_) => None,
+        }
     }
 }
 
-fn multiclass_scorers(mc: &MulticlassModel) -> Vec<(u8, BinaryScorer)> {
+fn multiclass_scorers(mc: &MulticlassModel, mode: ScoreMode) -> Vec<(u8, BinaryScorer)> {
     mc.jobs
         .iter()
         .filter_map(|j| {
             j.model
                 .as_ref()
-                .map(|m| (j.class_id, BinaryScorer::new(m.model.clone())))
+                .map(|m| (j.class_id, BinaryScorer::with_mode(m.model.clone(), mode)))
         })
         .collect()
 }

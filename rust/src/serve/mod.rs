@@ -59,8 +59,8 @@ pub mod server;
 pub mod stats;
 
 pub use engine::{
-    ArtifactScorer, BatchQueue, Decision, Engine, EngineConfig, FlushPolicy, FlushReason,
-    ModelSlot, Ticket,
+    score_mode, set_score_mode, ArtifactScorer, BatchQueue, Decision, Engine, EngineConfig,
+    FlushPolicy, FlushReason, ModelSlot, ScoreMode, ScorerLayout, Ticket, QUANT_AGREEMENT_FLOOR,
 };
 pub use faults::{FaultCounters, FaultPlan, LoadFault};
 pub use manager::{

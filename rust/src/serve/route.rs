@@ -98,6 +98,11 @@ const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
 /// Kept backend connections per backend.
 const POOL_CAP: usize = 8;
 
+/// Most same-model pipelined requests multiplexed onto one backend
+/// connection in a single burst (in-flight depth of the proxied
+/// pipeline).
+const MUX_DEPTH_CAP: usize = 16;
+
 /// Largest backend `503` body absorbed for retry bookkeeping; bigger
 /// (never expected) drops the connection instead.
 const DISCARD_CAP: usize = 64 * 1024;
@@ -297,6 +302,12 @@ struct RouterState {
     /// `/stats`; zero on an unfaulted fleet).
     backoff_ms: AtomicU64,
     fanouts: AtomicU64,
+    /// Multiplexed proxy bursts completed (≥2 same-model pipelined
+    /// requests carried in flight on one backend connection).
+    mux_batches: AtomicU64,
+    /// Requests relayed through multiplexed bursts (depth =
+    /// `mux_requests / mux_batches`).
+    mux_requests: AtomicU64,
 }
 
 impl RouterState {
@@ -367,6 +378,8 @@ impl Router {
             retries: AtomicU64::new(0),
             backoff_ms: AtomicU64::new(0),
             fanouts: AtomicU64::new(0),
+            mux_batches: AtomicU64::new(0),
+            mux_requests: AtomicU64::new(0),
         });
         check_round(&state);
         let listener = TcpListener::bind(bind_addr)
@@ -690,11 +703,14 @@ fn handle_router_connection(stream: TcpStream, state: &RouterState) {
     let mut conn = ConnReader::new(&stream);
     let mut served = 0usize;
     let mut dirty_close = false;
+    // A parsed-ahead request that did not join the previous multiplexed
+    // burst (different model, mutation, fleet route); served next.
+    let mut carry: Option<HttpRequest> = None;
     loop {
         if served == 1 {
             let _ = stream.set_read_timeout(Some(KEEPALIVE_IDLE));
         }
-        if !conn.has_buffered() && state.draining.load(Ordering::SeqCst) {
+        if carry.is_none() && !conn.has_buffered() && state.draining.load(Ordering::SeqCst) {
             // Everything received so far is answered; close instead of
             // idling on keep-alive. Requests already buffered (an
             // in-flight pipeline) are still served below — a drain
@@ -702,15 +718,18 @@ fn handle_router_connection(stream: TcpStream, state: &RouterState) {
             dirty_close = true;
             break;
         }
-        let req = match read_request(&mut conn) {
-            Ok(req) => req,
-            Err(msg) => {
-                if msg != "empty request" {
-                    write_response(&stream, "400 Bad Request", JSON, &error_json(msg), false);
-                    dirty_close = true;
+        let req = match carry.take() {
+            Some(r) => r,
+            None => match read_request(&mut conn) {
+                Ok(req) => req,
+                Err(msg) => {
+                    if msg != "empty request" {
+                        write_response(&stream, "400 Bad Request", JSON, &error_json(msg), false);
+                        dirty_close = true;
+                    }
+                    break;
                 }
-                break;
-            }
+            },
         };
         served += 1;
         // During a drain, requests already pipelined behind this one are
@@ -719,6 +738,71 @@ fn handle_router_connection(stream: TcpStream, state: &RouterState) {
         let keep = req.keep_alive
             && served < MAX_REQUESTS_PER_CONN
             && (!draining || conn.has_buffered());
+        // Multiplex: consecutive same-model non-mutation requests already
+        // fully pipelined behind this one ride one backend connection as
+        // a single in-flight burst instead of strictly alternating
+        // write/read per request.
+        if keep && conn.has_buffered_request() {
+            if let Target::Model(name) = classify(&req) {
+                if !is_mutation(&req) {
+                    let mut burst = vec![req];
+                    let mut bad_next: Option<&'static str> = None;
+                    while burst.len() < MUX_DEPTH_CAP && conn.has_buffered_request() {
+                        match read_request(&mut conn) {
+                            Ok(next) => {
+                                let same = !is_mutation(&next)
+                                    && next.keep_alive
+                                    && matches!(
+                                        classify(&next),
+                                        Target::Model(ref m) if *m == name
+                                    );
+                                if same {
+                                    burst.push(next);
+                                } else {
+                                    carry = Some(next);
+                                    break;
+                                }
+                            }
+                            Err(msg) => {
+                                bad_next = Some(msg);
+                                break;
+                            }
+                        }
+                    }
+                    served += burst.len() - 1;
+                    let keep_last = if bad_next.is_some() {
+                        true // the 400 answer below still follows
+                    } else {
+                        served < MAX_REQUESTS_PER_CONN
+                            && (!state.draining.load(Ordering::SeqCst)
+                                || carry.is_some()
+                                || conn.has_buffered())
+                    };
+                    let open = if burst.len() == 1 {
+                        respond(state, &stream, &burst[0], keep_last)
+                    } else {
+                        proxy_model_burst(state, &stream, &burst, &name, keep_last)
+                    };
+                    if let Some(msg) = bad_next {
+                        if open {
+                            write_response(
+                                &stream,
+                                "400 Bad Request",
+                                JSON,
+                                &error_json(msg),
+                                false,
+                            );
+                        }
+                        dirty_close = true;
+                        break;
+                    }
+                    if !open {
+                        break;
+                    }
+                    continue;
+                }
+            }
+        }
         if !respond(state, &stream, &req, keep) {
             break;
         }
@@ -1060,6 +1144,127 @@ fn proxy_model(
     keep
 }
 
+/// Serve a burst request-by-request through [`proxy_model`] (the path
+/// that owns retry/failover semantics). All but the last response are
+/// keep-alive (more of the pipeline follows).
+fn proxy_sequential(
+    state: &RouterState,
+    client: &TcpStream,
+    reqs: &[HttpRequest],
+    name: &str,
+    keep_last: bool,
+) -> bool {
+    let mut open = true;
+    for (k, r) in reqs.iter().enumerate() {
+        open = proxy_model(state, client, r, name, k + 1 < reqs.len() || keep_last);
+        if !open {
+            break;
+        }
+    }
+    open
+}
+
+/// Proxy a burst of same-model pipelined requests multiplexed over ONE
+/// backend connection: every request is written back-to-back (the pooled
+/// connection carries the whole burst in flight), then the responses are
+/// relayed in order. Any failure before the first response byte reaches
+/// the client falls back to the sequential per-request path, which owns
+/// retry/failover; a mid-relay failure closes the client connection
+/// exactly like the single-request path. Returns whether the client
+/// connection stays open.
+fn proxy_model_burst(
+    state: &RouterState,
+    client: &TcpStream,
+    burst: &[HttpRequest],
+    name: &str,
+    keep_last: bool,
+) -> bool {
+    let n = burst.len();
+    let (order, backends) = {
+        let g = state.placement.read().unwrap_or_else(|e| e.into_inner());
+        (g.ring.order(name), g.backends.clone())
+    };
+    let healthy: Vec<usize> = order
+        .iter()
+        .copied()
+        .filter(|&i| backends[i].healthy.load(Ordering::Relaxed))
+        .collect();
+    let candidates = if healthy.is_empty() { order } else { healthy };
+    let b = &backends[candidates[0]];
+    let (stream, pooled) = match b.take_conn() {
+        Some(s) => (s, true),
+        None => match connect_backend(&b.addr(), state.proxy_timeout) {
+            Some(s) => (s, false),
+            None => {
+                b.mark_down();
+                return proxy_sequential(state, client, burst, name, keep_last);
+            }
+        },
+    };
+    for r in burst {
+        if write_proxy_request(&stream, r, state.auth_token.as_deref()).is_err() {
+            if pooled {
+                b.clear_pool();
+            } else {
+                b.mark_down();
+            }
+            return proxy_sequential(state, client, burst, name, keep_last);
+        }
+    }
+    let mut reader = BufReader::new(&stream);
+    let mut backend_alive = true;
+    for k in 0..n {
+        let head = match read_proxy_head(&mut reader) {
+            Ok(h) => h,
+            Err(_) => {
+                if k == 0 {
+                    // No client bytes written yet: drop this connection
+                    // and redo the whole burst with failover.
+                    if pooled {
+                        b.clear_pool();
+                    } else {
+                        b.mark_down();
+                    }
+                    return proxy_sequential(state, client, burst, name, keep_last);
+                }
+                // Mid-burst: delivered responses stand; the unanswered
+                // tail re-proxies on a fresh connection.
+                return proxy_sequential(state, client, &burst[k..], name, keep_last);
+            }
+        };
+        if head.code == 503 && k == 0 {
+            // The owner refused the burst head (draining, capacity):
+            // drop the connection — its queued refusals with it — and
+            // let the per-request path walk the ring with its retry
+            // budget.
+            return proxy_sequential(state, client, burst, name, keep_last);
+        }
+        match relay_response(&mut reader, client, &head, k + 1 < n || keep_last) {
+            Ok(()) => {
+                b.healthy.store(true, Ordering::Relaxed);
+                b.proxied.fetch_add(1, Ordering::Relaxed);
+                state.proxied.fetch_add(1, Ordering::Relaxed);
+                state.mux_requests.fetch_add(1, Ordering::Relaxed);
+            }
+            // The client may hold partial bytes: close, never retry.
+            Err(_) => return false,
+        }
+        if !head.keep_alive {
+            backend_alive = false;
+            if k + 1 < n {
+                // Backend hung up mid-pipeline (per-connection request
+                // cap); the unanswered tail re-proxies fresh.
+                return proxy_sequential(state, client, &burst[k + 1..], name, keep_last);
+            }
+        }
+    }
+    state.mux_batches.fetch_add(1, Ordering::Relaxed);
+    if backend_alive {
+        b.put_conn(stream);
+    }
+    keep_last
+}
+
 fn connect_backend(addr: &str, read_timeout: Duration) -> Option<TcpStream> {
     let sa: SocketAddr = addr.parse().ok()?;
     let stream = TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT).ok()?;
@@ -1192,11 +1397,14 @@ fn fleet_stats(state: &RouterState) -> Response {
         "200 OK",
         JSON,
         format!(
-            "{{\"router\":{{\"proxied\":{},\"retries\":{},\"backoff_ms\":{},\"fanouts\":{}}},\"backends\":[{}]}}",
+            "{{\"router\":{{\"proxied\":{},\"retries\":{},\"backoff_ms\":{},\"fanouts\":{},\
+             \"mux_batches\":{},\"mux_requests\":{}}},\"backends\":[{}]}}",
             state.proxied.load(Ordering::Relaxed),
             state.retries.load(Ordering::Relaxed),
             state.backoff_ms.load(Ordering::Relaxed),
             state.fanouts.load(Ordering::Relaxed),
+            state.mux_batches.load(Ordering::Relaxed),
+            state.mux_requests.load(Ordering::Relaxed),
             per.join(",")
         ),
     )

@@ -1115,15 +1115,23 @@ pub(crate) fn bearer_auth_failure(token: Option<&str>, req: &HttpRequest) -> Opt
     }
 }
 
-/// One model's counters, spliced with its serving identity.
+/// One model's counters, spliced with its serving identity and the
+/// scoring backend in force (so benches and operators can tell which
+/// SIMD path, numeric mode, and device state produced the numbers).
 fn model_stats_json(me: &ManagedEngine) -> String {
+    let scorer = me.engine().slot().get();
     let mut j = me.stats().to_json();
     let extra = format!(
-        ",\"model\":\"{}\",\"model_kind\":\"{}\",\"dim\":{},\"queued\":{}}}",
+        ",\"model\":\"{}\",\"model_kind\":\"{}\",\"dim\":{},\"queued\":{},\
+         \"simd_backend\":\"{}\",\"score_mode\":\"{}\",\"device\":{},\"device_batches\":{}}}",
         json_escape(me.name()),
         me.engine().model_kind(),
         me.engine().dim(),
-        me.engine().queued()
+        me.engine().queued(),
+        crate::data::simd::backend_name(),
+        scorer.mode_name(),
+        scorer.device_active(),
+        scorer.device_batches()
     );
     j.truncate(j.len() - 1);
     j.push_str(&extra);

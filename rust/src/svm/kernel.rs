@@ -11,6 +11,7 @@
 //! [`crate::runtime::rbf`] (L1/L2 of the three-layer stack).
 
 use crate::data::matrix::{dot, sqdist, Matrix};
+use crate::data::simd;
 use crate::svm::dist::DistanceCache;
 use crate::util::pool;
 
@@ -254,13 +255,23 @@ impl<'a> RustRowBackend<'a> {
     /// Blocked micro-kernel over a small set of requested rows: streams
     /// the point matrix tile by tile, reusing each tile across every row
     /// in the block, with precomputed norms and a separate
-    /// transcendental pass per tile.
+    /// transcendental pass per tile. The geometry pass runs through the
+    /// dispatched [`simd::dot_rows`] micro-kernel over the contiguous
+    /// tile panel — bit-identical to a per-point [`dot`] loop on every
+    /// SIMD backend.
     fn fill_rows_block(&self, idxs: &[usize], out: &mut [f32]) {
         let n = self.points.rows();
+        let d = self.points.cols();
+        let pts = self.points.as_slice();
         debug_assert_eq!(out.len(), idxs.len() * n);
+        let mut dots = [0.0f32; KERNEL_TILE];
         let mut t0 = 0usize;
         while t0 < n {
             let t1 = (t0 + KERNEL_TILE).min(n);
+            // Rows t0..t1 are one contiguous row-major panel of the
+            // point matrix: the multi-row dot kernel streams it once per
+            // requested row while the panel stays cache-resident.
+            let panel = &pts[t0 * d..t1 * d];
             for (k, &i) in idxs.iter().enumerate() {
                 let a = self.points.row(i);
                 let orow = &mut out[k * n..(k + 1) * n];
@@ -274,10 +285,10 @@ impl<'a> RustRowBackend<'a> {
                             orow[t0..t1].copy_from_slice(&c.row(i)[t0..t1]);
                         } else {
                             let na = self.norms[i];
+                            simd::dot_rows(a, panel, d, &mut dots[..t1 - t0]);
                             for j in t0..t1 {
-                                let d2 = (na + self.norms[j]
-                                    - 2.0 * dot(a, self.points.row(j)) as f64)
-                                    .max(0.0);
+                                let d2 =
+                                    (na + self.norms[j] - 2.0 * dots[j - t0] as f64).max(0.0);
                                 orow[j] = d2 as f32;
                             }
                         }
@@ -287,18 +298,14 @@ impl<'a> RustRowBackend<'a> {
                         }
                     }
                     KernelKind::Linear => {
-                        for j in t0..t1 {
-                            orow[j] = dot(a, self.points.row(j));
-                        }
+                        simd::dot_rows(a, panel, d, &mut orow[t0..t1]);
                     }
                     KernelKind::Poly {
                         gamma,
                         coef0,
                         degree,
                     } => {
-                        for j in t0..t1 {
-                            orow[j] = dot(a, self.points.row(j));
-                        }
+                        simd::dot_rows(a, panel, d, &mut orow[t0..t1]);
                         // pass 2: hoisted powi over the tile
                         for v in &mut orow[t0..t1] {
                             *v = (gamma * *v as f64 + coef0).powi(degree as i32) as f32;

@@ -7,7 +7,11 @@
 //!   problems with random (C⁺, C⁻, γ);
 //! * coordinator/router: every submitted request gets exactly one result,
 //!   equal to the direct decision value — for random request streams;
-//! * k-NN: rp-forest lists are valid (sorted, self-free, within k).
+//! * k-NN: rp-forest lists are valid (sorted, self-free, within k);
+//! * SIMD: every runtime-dispatchable dot/dot_rows backend is
+//!   bit-identical to the portable reference at lane/tile boundaries,
+//!   and the i8-quantized scorer agrees with f32 decisions on a trained
+//!   model.
 
 use mlsvm::amg::coarsen::{coarsen_level, CoarsenParams};
 use mlsvm::amg::interp::InterpParams;
@@ -637,4 +641,153 @@ fn parallel_search_and_training_are_thread_count_invariant() {
         m.model.sv_coef.iter().map(|c| c.to_bits()).collect()
     };
     assert_eq!(coef_bits(&m1), coef_bits(&m4), "final model α diverged");
+}
+
+#[test]
+fn simd_dot_kernels_bit_match_scalar_at_lane_boundaries() {
+    use mlsvm::data::simd::{
+        available_backends, dot_on, dot_portable, dot_rows_on, dot_rows_portable,
+    };
+
+    // Empty, one element, lane−1/lane/lane+1 (LANES = 8), odd widths,
+    // and the kernel-tile boundary — the shapes where a tail or unroll
+    // bug would hide.
+    let dims: Vec<usize> = vec![0, 1, 2, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100, 255, 256, 257];
+    // Row counts straddling the 4-row (AVX2) and 2-row (NEON) unrolls.
+    let row_counts = [0usize, 1, 2, 3, 4, 5, 7, 9];
+    let mut rng = Pcg64::seed_from(0x51D);
+    for bk in available_backends() {
+        for &d in &dims {
+            let a: Vec<f32> = (0..d).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let b: Vec<f32> = (0..d).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let want = dot_portable(&a, &b);
+            let got = dot_on(bk, &a, &b);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "{} dot dim={d}: {got} vs {want}",
+                bk.name()
+            );
+            for &nr in &row_counts {
+                let rows: Vec<f32> = (0..nr * d).map(|_| rng.normal() as f32).collect();
+                let mut want_out = vec![0.0f32; nr];
+                let mut got_out = vec![0.0f32; nr];
+                dot_rows_portable(&a, &rows, d, &mut want_out);
+                dot_rows_on(bk, &a, &rows, d, &mut got_out);
+                for j in 0..nr {
+                    assert_eq!(
+                        got_out[j].to_bits(),
+                        want_out[j].to_bits(),
+                        "{} dot_rows dim={d} rows={nr} j={j}",
+                        bk.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fill_rows_batch_bit_matches_portable_reference_at_tile_boundaries() {
+    let mut rng = Pcg64::seed_from(0x7A11);
+    for &n in &[KERNEL_TILE - 1, KERNEL_TILE, KERNEL_TILE + 1] {
+        let d = 5usize;
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                m.set(i, j, (rng.normal() * 0.5) as f32);
+            }
+        }
+        let idxs = [0usize, n / 2, n - 1];
+
+        // RBF: the dispatched batch fill must reproduce the portable
+        // norm-identity arithmetic bit for bit (d² stored through f32,
+        // then the hoisted exp pass), whatever backend CPUID picked.
+        let gamma = 0.3;
+        let backend = RustRowBackend::new(&m, KernelKind::Rbf { gamma });
+        let mut out = vec![0.0f32; idxs.len() * n];
+        backend.fill_rows_batch(&idxs, &mut out);
+        let norms = m.row_sqnorms();
+        for (k, &i) in idxs.iter().enumerate() {
+            let a = m.row(i);
+            for j in 0..n {
+                let dp = mlsvm::data::simd::dot_portable(a, m.row(j));
+                let d2 = (norms[i] + norms[j] - 2.0 * dp as f64).max(0.0) as f32;
+                let want = (-gamma * d2 as f64).exp() as f32;
+                assert_eq!(
+                    out[k * n + j].to_bits(),
+                    want.to_bits(),
+                    "rbf K[{i}][{j}] n={n}: {} vs {want}",
+                    out[k * n + j]
+                );
+            }
+        }
+
+        // Linear: raw dot panel, same contract.
+        let lin = RustRowBackend::new(&m, KernelKind::Linear);
+        let mut lout = vec![0.0f32; idxs.len() * n];
+        lin.fill_rows_batch(&idxs, &mut lout);
+        for (k, &i) in idxs.iter().enumerate() {
+            for j in 0..n {
+                let want = mlsvm::data::simd::dot_portable(m.row(i), m.row(j));
+                assert_eq!(
+                    lout[k * n + j].to_bits(),
+                    want.to_bits(),
+                    "linear K[{i}][{j}] n={n}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_scorer_agrees_with_f32_on_trained_model() {
+    use mlsvm::serve::{ArtifactScorer, Decision, ModelArtifact, ScoreMode, QUANT_AGREEMENT_FLOOR};
+
+    let mut rng = Pcg64::seed_from(0xA8);
+    let ds = mlsvm::data::synth::two_gaussians(200, 150, 8, 2.5, &mut rng);
+    let model = smo::train(
+        &ds.points,
+        &ds.labels,
+        &smo::SvmParams {
+            kernel: KernelKind::Rbf { gamma: 0.15 },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let artifact = ModelArtifact::Svm(model);
+    let exact = ArtifactScorer::with_mode(&artifact, ScoreMode::F32).unwrap();
+    let quant = ArtifactScorer::with_mode(&artifact, ScoreMode::QuantizedI8).unwrap();
+    let lab = |d: Decision| -> i8 {
+        let Decision::Binary { label, .. } = d else {
+            panic!("binary model");
+        };
+        label
+    };
+    let n = ds.points.rows();
+    let mut agree = 0usize;
+    for i in 0..n {
+        let x = ds.points.row(i);
+        if lab(exact.decide(x)) == lab(quant.decide(x)) {
+            agree += 1;
+        }
+    }
+    let agreement = agree as f64 / n as f64;
+    assert!(
+        agreement >= QUANT_AGREEMENT_FLOOR,
+        "i8 agreement {agreement:.4} fell below the floor {QUANT_AGREEMENT_FLOOR} ({agree}/{n})"
+    );
+
+    // The quantized batch and single-query paths share one tile helper
+    // and must agree with each other bitwise.
+    let batch = quant.decide_batch(&ds.points);
+    for (i, d) in batch.iter().enumerate() {
+        let Decision::Binary { value, .. } = d else {
+            panic!("binary model");
+        };
+        let Decision::Binary { value: single, .. } = quant.decide(ds.points.row(i)) else {
+            panic!("binary model");
+        };
+        assert_eq!(value.to_bits(), single.to_bits(), "row {i}");
+    }
 }

@@ -2340,3 +2340,142 @@ fn registry_cli_describe_history_and_rollback_round_trip() {
     let stdout = run(&["registry", "history", "--registry", dir.to_str().unwrap(), "--name", "m"]);
     assert!(stdout.contains("m v2:"), "{stdout}");
 }
+
+// ---------------------------------------------------------------------------
+// Scoring-backend conformance: served-byte bit-identity and router
+// multiplexing.
+// ---------------------------------------------------------------------------
+
+/// The serving determinism contract pinned end to end: every byte served
+/// by the default (auto-SIMD, non-quantized) path must equal what the
+/// per-row scorer produced before the blocked layout landed. The
+/// reference below freezes that arithmetic — norm-identity tiles, the
+/// portable 8-lane dot, ascending-j accumulation — independently of the
+/// production scorer, so a future kernel change that shifts even one ULP
+/// of a served decision fails here.
+#[test]
+fn conformance_default_path_serves_bytes_identical_to_reference_scorer() {
+    use mlsvm::svm::kernel::KERNEL_TILE;
+
+    let mut rng = Pcg64::seed_from(0x5C0);
+    let ds = two_gaussians(140, 90, 6, 3.0, &mut rng);
+    let model = train(
+        &ds.points,
+        &ds.labels,
+        &SvmParams {
+            kernel: KernelKind::Rbf { gamma: 0.2 },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let reference = |m: &SvmModel, x: &[f32]| -> String {
+        let KernelKind::Rbf { gamma } = m.kernel else {
+            panic!("rbf fixture");
+        };
+        let norms = m.sv.row_sqnorms();
+        let nq: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let nsv = m.n_sv();
+        let mut s = -m.rho;
+        let mut d2 = vec![0.0f64; KERNEL_TILE];
+        let mut t0 = 0usize;
+        while t0 < nsv {
+            let t1 = (t0 + KERNEL_TILE).min(nsv);
+            for j in t0..t1 {
+                let dp = mlsvm::data::simd::dot_portable(m.sv.row(j), x);
+                d2[j - t0] = (nq + norms[j] - 2.0 * dp as f64).max(0.0);
+            }
+            for j in t0..t1 {
+                s += m.sv_coef[j] * (-gamma * d2[j - t0]).exp();
+            }
+            t0 = t1;
+        }
+        let label = if s > 0.0 { 1 } else { -1 };
+        format!("{{\"kind\":\"binary\",\"decision\":{s},\"label\":{label}}}")
+    };
+
+    let dir = tmp_dir("conformance_scorer_bytes");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("conf", &ModelArtifact::Svm(model.clone())).unwrap();
+    let manager = EngineManager::open(
+        reg,
+        EngineConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            queue_cap: 256,
+        },
+    );
+    let state = Arc::new(ServeState::new(manager, "conf"));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+    let addr = server.addr();
+
+    // f32 Display round-trips exactly, so the probe the server parses is
+    // bit-identical to the row the reference scores.
+    let probes: Vec<Vec<f32>> = (0..8).map(|i| ds.points.row(i * 17).to_vec()).collect();
+    let bodies: Vec<String> = probes
+        .iter()
+        .map(|x| x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(","))
+        .collect();
+    for (x, body) in probes.iter().zip(&bodies) {
+        let (code, resp) = http_request(&addr, "POST", "/predict", body).unwrap();
+        assert_eq!(code, 200, "{resp}");
+        assert_eq!(resp, reference(&model, x), "served bytes diverged for {body}");
+    }
+
+    // A pipelined burst coalesces queries into one flush through the
+    // blocked batch layout — the served bytes must not change.
+    let stream = connect(&addr);
+    let reqs: Vec<(&str, &str, &str)> =
+        bodies.iter().map(|b| ("POST", "/predict", b.as_str())).collect();
+    let answers = http_pipeline_on(&stream, &reqs).unwrap();
+    for (i, (code, resp)) in answers.iter().enumerate() {
+        assert_eq!(*code, 200, "{resp}");
+        assert_eq!(resp, &reference(&model, &probes[i]), "pipelined response {i}");
+    }
+}
+
+/// Same-model keep-alive pipelines through the router ride one pooled
+/// backend connection as a multiplexed burst: answers come back in
+/// order with the right labels, and the router's `/stats` counters
+/// record the batch and its depth.
+#[test]
+fn conformance_router_multiplexes_pipelined_same_model_bursts() {
+    let (s1, _a) = start_axis_server("router_mux_a");
+    let (s2, _b) = start_axis_server("router_mux_b");
+    let router = start_router_over(vec![s1.addr().to_string(), s2.addr().to_string()], None);
+
+    // One write carries the whole same-model burst, so everything after
+    // the first request is already buffered when the router looks.
+    let n = 10usize;
+    let reqs: Vec<(&str, &str, &str)> = (0..n)
+        .map(|i| {
+            let body = if i % 2 == 0 { "0.9,0.1" } else { "-0.9,0.1" };
+            ("POST", "/v1/models/tiny/predict", body)
+        })
+        .collect();
+    let stream = connect(&router.addr());
+    let answers = http_pipeline_on(&stream, &reqs).unwrap();
+    assert_eq!(answers.len(), n);
+    for (i, (code, resp)) in answers.iter().enumerate() {
+        assert_eq!(*code, 200, "response {i}: {resp}");
+        let want = if i % 2 == 0 { 1 } else { -1 };
+        assert!(resp.contains(&format!("\"label\":{want}")), "response {i}: {resp}");
+    }
+    drop(stream);
+
+    let (code, stats) = http_request(&router.addr(), "GET", "/stats", "").unwrap();
+    assert_eq!(code, 200, "{stats}");
+    let field = |key: &str| -> u64 {
+        let pat = format!("\"{key}\":");
+        let at = stats.find(&pat).unwrap_or_else(|| panic!("{key} missing in {stats}"));
+        stats[at + pat.len()..]
+            .chars()
+            .take_while(|c| c.is_ascii_digit())
+            .collect::<String>()
+            .parse()
+            .unwrap()
+    };
+    assert!(field("mux_batches") >= 1, "no multiplexed batch recorded: {stats}");
+    assert!(field("mux_requests") >= 2, "mux depth never exceeded one: {stats}");
+}
