@@ -4,7 +4,9 @@
 //! reporting total train wall-clock, the model-selection (UD) share, the
 //! 4-vs-1-thread speedup, and — the determinism gate — whether the
 //! selected `(C⁺, C⁻, γ)` and the reported G-means are **bit-identical**
-//! across thread counts for the fixed seed. Writes `BENCH_train.json`
+//! across thread counts for the fixed seed. Each set additionally runs
+//! once with the adaptive controller (patience 1) and reports skipped
+//! levels plus the gmean cost vs the full run. Writes `BENCH_train.json`
 //! (checked in CI by `ci/check_bench.py --train`).
 //!
 //! ```bash
@@ -19,7 +21,7 @@ mod common;
 use common::{split_and_scale, HarnessOpts};
 use mlsvm::data::dataset::Dataset;
 use mlsvm::data::synth::uci::table1_specs;
-use mlsvm::mlsvm::{MlsvmParams, MlsvmTrainer};
+use mlsvm::mlsvm::{MlsvmParams, MlsvmTrainer, TrainDriver};
 use mlsvm::util::pool;
 use mlsvm::util::rng::Pcg64;
 use mlsvm::util::timer::Timer;
@@ -61,6 +63,32 @@ fn train_once(train: &Dataset, test: &Dataset, seed: u64, threads: usize) -> Run
             .collect(),
         test_gmean: mlsvm::metrics::evaluate(&model.model, test).gmean(),
     }
+}
+
+/// One adaptive (early-stopping) run at a fixed thread count. Patience 1
+/// with a small epsilon is the aggressive end of the controller: the run
+/// stops at the first level that fails to clearly improve validated
+/// gmean, which is where the skipped-level savings show up on the easy
+/// synthetic sets. Returns (wall-clock seconds, test gmean, outcome).
+fn train_adaptive(
+    train: &Dataset,
+    test: &Dataset,
+    seed: u64,
+    threads: usize,
+) -> (f64, f64, mlsvm::mlsvm::AdaptiveOutcome) {
+    pool::set_num_threads(threads);
+    let mut rng = Pcg64::seed_from(seed);
+    let mut params = MlsvmParams::default().with_seed(seed).with_adaptive(1);
+    params.adapt_epsilon = 0.005;
+    let mut driver = TrainDriver::default();
+    let t = Timer::start();
+    let model = MlsvmTrainer::new(params)
+        .train_driven(train, &mut rng, &mut driver)
+        .expect("adaptive mlsvm train");
+    let seconds = t.secs();
+    let gmean = mlsvm::metrics::evaluate(&model.model, test).gmean();
+    let outcome = driver.adaptive.expect("adaptive outcome populated");
+    (seconds, gmean, outcome)
 }
 
 /// Bit-level equality of everything model selection decided.
@@ -167,7 +195,7 @@ fn main() {
             total_tmax += b;
         }
         println!(
-            "{:<14} speedup {}t vs {}t: {} | selection bit-identical: {}\n",
+            "{:<14} speedup {}t vs {}t: {} | selection bit-identical: {}",
             spec.name,
             max_threads,
             min_threads,
@@ -179,6 +207,44 @@ fn main() {
                 Some(false) => "NO",
                 None => "n/a (single thread count)",
             }
+        );
+
+        // Adaptive controller vs the full run at the same seed and thread
+        // count. CI (`check_bench.py --train`) gates the quality cost —
+        // adaptive gmean within 0.01 of full — and that at least one set
+        // actually skips a level.
+        let full = runs
+            .iter()
+            .find(|r| r.threads == max_threads)
+            .expect("max-threads run present");
+        let (a_secs, a_gmean, a_out) =
+            train_adaptive(&train, &test, seed ^ 0x7a11, max_threads);
+        pool::set_num_threads(0);
+        println!(
+            "{:<14} adaptive: trained {}/{} level(s) ({} skipped{}), \
+             gmean {:.3} vs full {:.3}, {:.2}s vs {:.2}s\n",
+            spec.name,
+            a_out.levels_trained,
+            a_out.levels_trained + a_out.levels_skipped,
+            a_out.levels_skipped,
+            if a_out.stopped_early { ", early stop" } else { "" },
+            a_gmean,
+            full.test_gmean,
+            a_secs,
+            full.seconds
+        );
+        let adaptive_json = format!(
+            "{{\"seconds\": {:.4}, \"gmean\": {}, \"full_seconds\": {:.4}, \
+             \"full_gmean\": {}, \"levels_trained\": {}, \"levels_skipped\": {}, \
+             \"stopped_early\": {}, \"recoveries\": {}}}",
+            a_secs,
+            json_num(a_gmean),
+            full.seconds,
+            json_num(full.test_gmean),
+            a_out.levels_trained,
+            a_out.levels_skipped,
+            a_out.stopped_early,
+            a_out.recoveries
         );
 
         let run_entries: Vec<String> = runs
@@ -202,7 +268,8 @@ fn main() {
         set_jsons.push(format!(
             "    {{\"name\": \"{}\", \"n_train\": {}, \"deterministic\": {det_json}, \
              \"speedup\": {}, \"c_pos\": {}, \"c_neg\": {}, \"gamma\": {}, \
-             \"test_gmean\": {},\n      \"runs\": [\n{}\n      ]}}",
+             \"test_gmean\": {},\n      \"adaptive\": {adaptive_json},\n      \
+             \"runs\": [\n{}\n      ]}}",
             spec.name,
             train.len(),
             speedup.map(json_num).unwrap_or_else(|| "null".to_string()),

@@ -25,7 +25,11 @@ across thread counts (the hard determinism gate of the parallel
 training pipeline), and optionally when the end-to-end speedup at the
 highest thread count falls below --min-speedup (0 disables; shared CI
 runners make wall-clock gates flaky, so the speedup is reported rather
-than gated by default).
+than gated by default). It also gates the adaptive-refinement section:
+every set must carry an "adaptive" object with integer levels_skipped,
+the adaptive run's test gmean must stay within 0.01 of the full run's,
+and at least one set must actually have skipped a level (otherwise the
+early-stop controller never fired and the bench proves nothing).
 
 A third mode gates the serving bench:
 
@@ -76,10 +80,17 @@ KEYS = ["batch_rows_per_s", "tiled_rows_per_s", "scalar_rows_per_s"]
 DECAY = 0.05
 
 
+# The adaptive run publishes the best *validated* level, so its test
+# gmean may differ slightly from the full run's final level; this is the
+# accepted quality cost of skipping levels.
+ADAPTIVE_GMEAN_TOL = 0.01
+
+
 def check_train(path: str, min_speedup: float) -> int:
     with open(path) as f:
         data = json.load(f)
     failed = False
+    any_skipped = False
     for entry in data.get("sets", []):
         det = entry.get("deterministic")
         if det is True:
@@ -98,6 +109,48 @@ def check_train(path: str, min_speedup: float) -> int:
             f"{entry.get('name')}: speedup {sp_txt} "
             f"(C+={entry.get('c_pos')} gamma={entry.get('gamma')}) {verdict}"
         )
+        ad = entry.get("adaptive")
+        if not isinstance(ad, dict):
+            print(f"  {entry.get('name')}: missing adaptive section")
+            failed = True
+            continue
+        skipped = ad.get("levels_skipped")
+        trained = ad.get("levels_trained")
+        a_gmean = ad.get("gmean")
+        f_gmean = ad.get("full_gmean")
+        if not isinstance(skipped, int) or not isinstance(trained, int):
+            print(
+                f"  {entry.get('name')}: adaptive levels_trained/levels_skipped "
+                f"must be integers, got {trained!r}/{skipped!r}"
+            )
+            failed = True
+            continue
+        if skipped >= 1:
+            any_skipped = True
+        if not isinstance(a_gmean, (int, float)) or not isinstance(
+            f_gmean, (int, float)
+        ):
+            print(f"  {entry.get('name')}: adaptive section is missing gmeans")
+            failed = True
+        elif a_gmean < f_gmean - ADAPTIVE_GMEAN_TOL:
+            print(
+                f"  ADAPTIVE QUALITY: {entry.get('name')} adaptive gmean "
+                f"{a_gmean:.4f} fell more than {ADAPTIVE_GMEAN_TOL} below the "
+                f"full run's {f_gmean:.4f}"
+            )
+            failed = True
+        else:
+            print(
+                f"  adaptive: trained {trained}, skipped {skipped}, "
+                f"gmean {a_gmean:.4f} vs full {f_gmean:.4f} "
+                f"({ad.get('seconds')}s vs {ad.get('full_seconds')}s) OK"
+            )
+    if not any_skipped:
+        print(
+            "ADAPTIVE GATE: no set skipped a level — the early-stop "
+            "controller never fired"
+        )
+        failed = True
     speedup = data.get("speedup")
     threads = data.get("max_threads")
     if isinstance(speedup, (int, float)):

@@ -73,6 +73,41 @@ fn apply_threads(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Apply the shared `--adapt-*` flags to the framework params.
+fn apply_adaptive(args: &Args, params: &mut MlsvmParams) -> Result<()> {
+    params.adapt_patience = args.get_usize("adapt-patience")?;
+    params.adapt_epsilon = args.get_f64("adapt-epsilon")?;
+    params.adapt_drop_tol = args.get_f64("adapt-drop-tol")?;
+    params.adapt_ensemble = args.get_usize("adapt-ensemble")?;
+    params.adapt_val_frac = args.get_f64("adapt-val-frac")?;
+    Ok(())
+}
+
+/// Report the adaptive controller's outcome and, when a registry is at
+/// hand, publish its voting ensemble as `<name>.ens`.
+fn report_adaptive(
+    driver: &mlsvm::mlsvm::TrainDriver,
+    reg: Option<(&mlsvm::serve::Registry, &str)>,
+) -> Result<()> {
+    let Some(out) = &driver.adaptive else { return Ok(()) };
+    eprintln!(
+        "adaptive: {} level(s) trained, {} skipped{}, best step {} (val gmean {:.4}), {} recovery re-solve(s)",
+        out.levels_trained,
+        out.levels_skipped,
+        if out.stopped_early { " (early stop)" } else { "" },
+        out.best_step,
+        out.best_gmean,
+        out.recoveries
+    );
+    if let (Some(e), Some((reg, name))) = (&out.ensemble, reg) {
+        let ens_name = format!("{name}.ens");
+        let artifact = mlsvm::serve::ModelArtifact::Ensemble(e.clone());
+        let path = reg.save(&ens_name, &artifact)?;
+        eprintln!("registry: {} -> {}", artifact.describe(), path.display());
+    }
+    Ok(())
+}
+
 fn load_any(path: &str) -> Result<Dataset> {
     if path.ends_with(".csv") {
         mlsvm::data::csv::load(path, mlsvm::data::csv::CsvOptions::default())
@@ -121,6 +156,11 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         .opt("knn", "k of the k-NN graph", Some("10"))
         .opt("seed", "random seed", Some("0"))
         .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
+        .opt("adapt-patience", "adaptive early stop: stalled levels tolerated (0 = off)", Some("0"))
+        .opt("adapt-epsilon", "validated-gmean improvement that resets patience", Some("0.001"))
+        .opt("adapt-drop-tol", "gmean drop that triggers the wide re-solve", Some("0.02"))
+        .opt("adapt-ensemble", "keep top-k level models as a voting ensemble (0 = off)", Some("0"))
+        .opt("adapt-val-frac", "per-class validation holdout fraction", Some("0.2"))
         .flag("no-volumes", "ignore AMG volumes as instance weights")
         .flag("quiet", "suppress per-level log")
         .parse_from(argv)?;
@@ -139,6 +179,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     params.hierarchy.knn_k = args.get_usize("knn")?;
     params.qdt = args.get_usize("qdt")?;
     params.use_volumes = !args.get_flag("no-volumes");
+    apply_adaptive(&args, &mut params)?;
 
     let test_frac = args.get_f64("test-frac")?;
     let (mut train, mut test) = mlsvm::data::split::train_test_split(&ds, test_frac, &mut rng);
@@ -146,7 +187,8 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     ds.labels.clear(); // free
 
     let t = Timer::start();
-    let model = MlsvmTrainer::new(params).train(&train, &mut rng)?;
+    let mut driver = mlsvm::mlsvm::TrainDriver::default();
+    let model = MlsvmTrainer::new(params).train_driven(&train, &mut rng, &mut driver)?;
     let secs = t.secs();
     if !args.get_flag("quiet") {
         eprint!(
@@ -171,6 +213,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
         let artifact = mlsvm::serve::ModelArtifact::Mlsvm(model);
         let path = reg.save(&name, &artifact)?;
         eprintln!("registry: {} -> {}", artifact.describe(), path.display());
+        report_adaptive(&driver, Some((&reg, &name)))?;
+    } else {
+        report_adaptive(&driver, None)?;
     }
     Ok(())
 }
@@ -196,6 +241,11 @@ fn cmd_retrain(argv: Vec<String>) -> Result<()> {
     )
     .opt("fault-plan", "arm deterministic fault injection (testing only)", None)
     .opt("threads", "pool worker threads (0 = MLSVM_THREADS/auto)", Some("0"))
+    .opt("adapt-patience", "adaptive early stop: stalled levels tolerated (0 = off)", Some("0"))
+    .opt("adapt-epsilon", "validated-gmean improvement that resets patience", Some("0.001"))
+    .opt("adapt-drop-tol", "gmean drop that triggers the wide re-solve", Some("0.02"))
+    .opt("adapt-ensemble", "keep top-k level models as a voting ensemble (0 = off)", Some("0"))
+    .opt("adapt-val-frac", "per-class validation holdout fraction", Some("0.2"))
     .flag("resume", "resume from a matching checkpoint instead of starting over")
     .flag("no-volumes", "ignore AMG volumes as instance weights")
     .flag("quiet", "suppress per-level log")
@@ -236,6 +286,7 @@ fn cmd_retrain(argv: Vec<String>) -> Result<()> {
     params.hierarchy.coarsest_size = args.get_usize("coarsest")?;
     params.hierarchy.knn_k = args.get_usize("knn")?;
     params.use_volumes = !args.get_flag("no-volumes");
+    apply_adaptive(&args, &mut params)?;
     let test_frac = args.get_f64("test-frac")?;
     let (mut train, mut test) = mlsvm::data::split::train_test_split(&ds, test_frac, &mut rng);
     mlsvm::data::scale::Scaler::fit_transform(&mut train, Some(&mut test));
@@ -252,11 +303,13 @@ fn cmd_retrain(argv: Vec<String>) -> Result<()> {
         Some(p) => std::path::PathBuf::from(p),
         None => reg.dir().join(format!(".{name}.retrain.ckpt")),
     };
-    let checkpointer = mlsvm::mlsvm::Checkpointer::new(&ckpt_path, faults);
+    let checkpointer =
+        mlsvm::mlsvm::Checkpointer::new(&ckpt_path, std::sync::Arc::clone(&faults));
     let mut driver = mlsvm::mlsvm::TrainDriver {
         inherit: Some(deployed.params),
         checkpoint: Some(checkpointer),
         resume: args.get_flag("resume"),
+        faults: Some(faults),
         ..Default::default()
     };
     let t = Timer::start();
@@ -300,6 +353,7 @@ fn cmd_retrain(argv: Vec<String>) -> Result<()> {
         artifact.describe(),
         path.display()
     );
+    report_adaptive(&driver, Some((&reg, &name)))?;
     // Only a published retrain discards the checkpoint; a failed save
     // above leaves it for a later --resume.
     mlsvm::mlsvm::Checkpointer::new(&ckpt_path, mlsvm::serve::FaultPlan::disarmed()).discard()?;
@@ -345,9 +399,12 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
         .get("data")
         .ok_or_else(|| Error::Usage("--data is required".into()))?;
     let artifact = mlsvm::serve::load_artifact(args.get("model").unwrap())?;
+    // Ensembles vote across members, so they have no single binary model
+    // to hand to the PJRT router; the plain and engine paths serve them.
     let model = match &artifact {
-        mlsvm::serve::ModelArtifact::Svm(m) => m,
-        mlsvm::serve::ModelArtifact::Mlsvm(m) => &m.model,
+        mlsvm::serve::ModelArtifact::Svm(m) => Some(m),
+        mlsvm::serve::ModelArtifact::Mlsvm(m) => Some(&m.model),
+        mlsvm::serve::ModelArtifact::Ensemble(_) => None,
         mlsvm::serve::ModelArtifact::Multiclass(_) => {
             return Err(Error::Usage(
                 "multiclass models are served with `mlsvm serve`, not `predict`".into(),
@@ -357,6 +414,11 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
     let ds = load_any(data_path)?;
     let t = Timer::start();
     let preds: Vec<i8> = if args.get_flag("pjrt") {
+        let Some(model) = model else {
+            return Err(Error::Usage(
+                "ensemble artifacts vote on CPU; drop --pjrt or use --engine".into(),
+            ));
+        };
         let mut rt = mlsvm::runtime::Runtime::new(mlsvm::runtime::Runtime::default_dir())?;
         let mut router = mlsvm::coordinator::Router::new_pjrt(
             &rt,
@@ -391,8 +453,10 @@ fn cmd_predict(argv: Vec<String>) -> Result<()> {
                 mlsvm::serve::Decision::Multiclass { .. } => -1,
             })
             .collect()
+    } else if let mlsvm::serve::ModelArtifact::Ensemble(e) = &artifact {
+        e.predict_batch(&ds.points)
     } else {
-        model.predict_batch(&ds.points)
+        model.expect("non-ensemble artifacts expose a binary model").predict_batch(&ds.points)
     };
     let secs = t.secs();
     let m = mlsvm::metrics::Metrics::from_labels(&ds.labels, &preds);

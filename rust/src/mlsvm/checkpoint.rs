@@ -11,6 +11,10 @@
 //! * both [`ActiveSet`]s and the UD search center;
 //! * the raw PCG state, so a resumed run draws the same random stream the
 //!   killed run would have;
+//! * the adaptive controller state when adaptive refinement is on
+//!   ([`AdaptiveCkpt`]: best level so far, patience clock, validation
+//!   history, ensemble candidates), so a resumed adaptive run makes the
+//!   same stop/recovery decisions and publishes bit-identically;
 //! * a fingerprint of the training data + run configuration, so a stale
 //!   checkpoint from a different dataset or parameterization is refused;
 //! * a trailing FNV-1a checksum over everything above, so a torn file is
@@ -29,6 +33,7 @@ use std::sync::Arc;
 
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
+use crate::mlsvm::ensemble::EnsembleMember;
 use crate::mlsvm::trainer::{LevelStat, MlsvmModel};
 use crate::mlsvm::uncoarsen::ActiveSet;
 use crate::serve::binary::{read_artifact, write_artifact};
@@ -39,8 +44,10 @@ use crate::svm::smo::SvmParams;
 
 /// Magic bytes opening every checkpoint file.
 const MAGIC: &[u8; 8] = b"MLSVMCKP";
-/// Checkpoint format version.
-const CKP_VERSION: u32 = 1;
+/// Checkpoint format version. v2 appended the adaptive-controller block;
+/// v1 files (pre-adaptive) are refused as `Invalid`, which callers treat
+/// as "no checkpoint" — a clean restart, never a wrong resume.
+const CKP_VERSION: u32 = 2;
 
 /// Everything the multilevel training loop needs to resume after a kill.
 #[derive(Clone, Debug)]
@@ -58,6 +65,34 @@ pub struct TrainCheckpoint {
     /// The partial model: finest model so far, current params, stats of
     /// every completed step (coarsest first), hierarchy depths.
     pub partial: MlsvmModel,
+    /// Adaptive controller state, present iff the run trains adaptively.
+    pub adaptive: Option<AdaptiveCkpt>,
+}
+
+/// The adaptive controller's resumable state: everything the early-stop,
+/// recovery, and ensemble policies have learned so far. Riding the
+/// checkpoint keeps `--resume` bit-identical through adaptive runs — the
+/// resumed run sees the same best level, the same patience clock, and
+/// the same ensemble roster the killed run had.
+#[derive(Clone, Debug)]
+pub struct AdaptiveCkpt {
+    /// Model of the best validated level so far (what an early stop
+    /// publishes).
+    pub best_model: SvmModel,
+    /// Its training parameters.
+    pub best_params: SvmParams,
+    /// Index into `level_stats` of the best level (0 = coarsest).
+    pub best_step: usize,
+    /// Its validated gmean.
+    pub best_gmean: f64,
+    /// Consecutive levels without an epsilon improvement.
+    pub stall: usize,
+    /// Bad-level recovery re-solves performed so far.
+    pub recoveries: usize,
+    /// Validated gmean of every accepted level, coarsest first.
+    pub val_history: Vec<f64>,
+    /// Top-k ensemble candidates (empty when the ensemble is off).
+    pub candidates: Vec<EnsembleMember>,
 }
 
 impl TrainCheckpoint {
@@ -88,6 +123,8 @@ pub struct CheckpointView<'a> {
     pub level_stats: &'a [LevelStat],
     /// Hierarchy depths (minority, majority).
     pub depths: (usize, usize),
+    /// Adaptive controller state (None on non-adaptive runs).
+    pub adaptive: Option<&'a AdaptiveCkpt>,
 }
 
 /// What [`Checkpointer::load`] found on disk.
@@ -168,6 +205,23 @@ impl Checkpointer {
             Err(e) => Err(e.into()),
         }
     }
+
+    /// Move the checkpoint aside as `<path>.stale` instead of deleting
+    /// it: a valid checkpoint that doesn't match this run (e.g. hierarchy
+    /// depths changed under the same fingerprint) must stop shadowing
+    /// future resumes, but is kept on disk for post-mortems. Returns the
+    /// quarantine path, or `None` when no file existed. The rename
+    /// clobbers any previous quarantined file at the destination.
+    pub fn quarantine(&self) -> Result<Option<PathBuf>> {
+        let mut os = self.path.clone().into_os_string();
+        os.push(".stale");
+        let dst = PathBuf::from(os);
+        match std::fs::rename(&self.path, &dst) {
+            Ok(()) => Ok(Some(dst)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
 }
 
 /// Fingerprint a (dataset, configuration) pair: FNV-1a over the shape,
@@ -244,6 +298,23 @@ fn put_active(out: &mut Vec<u8>, a: &ActiveSet) {
     }
 }
 
+fn put_svm_artifact(out: &mut Vec<u8>, m: &SvmModel) {
+    let bytes = write_artifact(&ModelArtifact::Svm(m.clone()));
+    put_u64(out, bytes.len() as u64);
+    out.extend_from_slice(&bytes);
+}
+
+/// Scalar [`SvmParams`] fields; the kernel is restored from the model
+/// the params accompany (same convention as the mlsvm artifact codec).
+fn put_params(out: &mut Vec<u8>, p: &SvmParams) {
+    put_f64(out, p.c_pos);
+    put_f64(out, p.c_neg);
+    put_f64(out, p.eps);
+    put_u64(out, p.max_iter as u64);
+    put_u64(out, p.cache_bytes as u64);
+    out.push(p.shrinking as u8);
+}
+
 fn encode(view: &CheckpointView<'_>) -> Vec<u8> {
     let partial = MlsvmModel {
         model: view.model.clone(),
@@ -264,6 +335,32 @@ fn encode(view: &CheckpointView<'_>) -> Vec<u8> {
     put_active(&mut out, view.active_neg);
     put_u64(&mut out, artifact.len() as u64);
     out.extend_from_slice(&artifact);
+    // Adaptive-controller block (v2): a presence flag, then the scalar
+    // state, the validation history, the best level's model + params, and
+    // the ensemble candidates — models as nested v2 Svm artifacts so
+    // every float rides the same bit-exact codec as the partial model.
+    match view.adaptive {
+        None => out.push(0),
+        Some(a) => {
+            out.push(1);
+            put_f64(&mut out, a.best_gmean);
+            put_u64(&mut out, a.best_step as u64);
+            put_u64(&mut out, a.stall as u64);
+            put_u64(&mut out, a.recoveries as u64);
+            put_u64(&mut out, a.val_history.len() as u64);
+            for &g in &a.val_history {
+                put_f64(&mut out, g);
+            }
+            put_svm_artifact(&mut out, &a.best_model);
+            put_params(&mut out, &a.best_params);
+            put_u64(&mut out, a.candidates.len() as u64);
+            for c in &a.candidates {
+                put_f64(&mut out, c.val_gmean);
+                put_u64(&mut out, c.step as u64);
+                put_svm_artifact(&mut out, &c.model);
+            }
+        }
+    }
     // Trailing checksum over everything above: a torn prefix cannot pass.
     let mut h = Fnv::new();
     h.bytes(&out);
@@ -286,6 +383,10 @@ impl<'a> Rd<'a> {
         let s = &self.b[self.at..self.at + n];
         self.at += n;
         Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
     }
 
     fn u32(&mut self) -> Result<u32> {
@@ -315,6 +416,31 @@ impl<'a> Rd<'a> {
             nodes.push(self.u32()?);
         }
         Ok(ActiveSet { level, nodes })
+    }
+
+    fn svm_artifact(&mut self) -> Result<SvmModel> {
+        let len = self.u64()? as usize;
+        let bytes = self.take(len)?;
+        match read_artifact(bytes)? {
+            ModelArtifact::Svm(m) => Ok(m),
+            other => Err(Error::invalid(format!(
+                "checkpoint embeds a {} artifact, expected svm",
+                other.describe()
+            ))),
+        }
+    }
+
+    /// Scalar params; the kernel comes from `model` (see `put_params`).
+    fn params(&mut self, model: &SvmModel) -> Result<SvmParams> {
+        Ok(SvmParams {
+            c_pos: self.f64()?,
+            c_neg: self.f64()?,
+            eps: self.f64()?,
+            max_iter: self.u64()? as usize,
+            cache_bytes: self.u64()? as usize,
+            shrinking: self.u8()? != 0,
+            kernel: model.kernel,
+        })
     }
 }
 
@@ -355,7 +481,48 @@ fn decode(bytes: &[u8]) -> Result<TrainCheckpoint> {
             )))
         }
     };
-    Ok(TrainCheckpoint { fingerprint, rng, center, active_pos, active_neg, partial })
+    let adaptive = match rd.u8()? {
+        0 => None,
+        1 => {
+            let best_gmean = rd.f64()?;
+            let best_step = rd.u64()? as usize;
+            let stall = rd.u64()? as usize;
+            let recoveries = rd.u64()? as usize;
+            let n = rd.u64()? as usize;
+            if n > rd.b.len() / 8 {
+                return Err(Error::invalid("checkpoint val-history count implausible"));
+            }
+            let mut val_history = Vec::with_capacity(n);
+            for _ in 0..n {
+                val_history.push(rd.f64()?);
+            }
+            let best_model = rd.svm_artifact()?;
+            let best_params = rd.params(&best_model)?;
+            let k = rd.u64()? as usize;
+            if k > rd.b.len() / 8 {
+                return Err(Error::invalid("checkpoint candidate count implausible"));
+            }
+            let mut candidates = Vec::with_capacity(k);
+            for _ in 0..k {
+                let val_gmean = rd.f64()?;
+                let step = rd.u64()? as usize;
+                let model = rd.svm_artifact()?;
+                candidates.push(EnsembleMember { model, val_gmean, step });
+            }
+            Some(AdaptiveCkpt {
+                best_model,
+                best_params,
+                best_step,
+                best_gmean,
+                stall,
+                recoveries,
+                val_history,
+                candidates,
+            })
+        }
+        v => return Err(Error::invalid(format!("bad checkpoint adaptive flag {v}"))),
+    };
+    Ok(TrainCheckpoint { fingerprint, rng, center, active_pos, active_neg, partial, adaptive })
 }
 
 #[cfg(test)]
@@ -392,6 +559,7 @@ mod tests {
             params,
             level_stats: stats,
             depths: (3, 4),
+            adaptive: None,
         }
     }
 
@@ -445,6 +613,67 @@ mod tests {
         assert_eq!(got.partial.model.sv_coef[0].to_bits(), 0.75f64.to_bits());
         assert_eq!(got.completed_steps(), 1);
         assert_eq!(got.partial.level_stats[0].cv_gmean, Some(0.9));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn adaptive_state_rides_the_checkpoint_bit_exactly() {
+        let dir = tmp_dir("adaptive");
+        let ck = Checkpointer::new(dir.join("a.ckpt"), FaultPlan::disarmed());
+        let (model, params, stats, pos, neg) = sample_parts();
+        let adaptive = AdaptiveCkpt {
+            best_model: model.clone(),
+            best_params: SvmParams { c_pos: 7.5, ..params },
+            best_step: 2,
+            best_gmean: 0.9375,
+            stall: 1,
+            recoveries: 3,
+            val_history: vec![0.5, 0.9375, -0.0f64],
+            candidates: vec![EnsembleMember {
+                model: model.clone(),
+                val_gmean: 0.9375,
+                step: 2,
+            }],
+        };
+        let mut view = sample_view(&model, &params, &stats, &pos, &neg);
+        view.adaptive = Some(&adaptive);
+        ck.save(&view).unwrap();
+        let got = match ck.load(0xfeed_beef) {
+            CheckpointLoad::Ready(c) => c,
+            other => panic!("expected Ready, got {other:?}"),
+        };
+        let a = got.adaptive.expect("adaptive block must survive");
+        assert_eq!(a.best_step, 2);
+        assert_eq!(a.best_gmean.to_bits(), 0.9375f64.to_bits());
+        assert_eq!((a.stall, a.recoveries), (1, 3));
+        assert_eq!(a.val_history.len(), 3);
+        assert_eq!(a.val_history[2].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(a.best_params.c_pos, 7.5);
+        assert_eq!(a.best_params.kernel, model.kernel);
+        assert_eq!(a.best_model.rho.to_bits(), model.rho.to_bits());
+        assert_eq!(a.candidates.len(), 1);
+        assert_eq!(a.candidates[0].step, 2);
+        assert_eq!(
+            a.candidates[0].model.sv_coef[0].to_bits(),
+            model.sv_coef[0].to_bits()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantine_moves_the_file_aside() {
+        let dir = tmp_dir("quarantine");
+        let ck = Checkpointer::new(dir.join("q.ckpt"), FaultPlan::disarmed());
+        assert_eq!(ck.quarantine().unwrap(), None, "no file is a no-op");
+        let (model, params, stats, pos, neg) = sample_parts();
+        ck.save(&sample_view(&model, &params, &stats, &pos, &neg)).unwrap();
+        let dst = ck.quarantine().unwrap().expect("file existed");
+        assert!(dst.to_string_lossy().ends_with(".stale"));
+        assert!(dst.exists(), "quarantined file must be kept");
+        assert!(
+            matches!(ck.load(0xfeed_beef), CheckpointLoad::Missing),
+            "quarantined checkpoint must stop shadowing resumes"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,176 @@
+//! Best-levels voting ensemble for adaptive multilevel refinement.
+//!
+//! AML-SVM (arXiv:2011.02592) observes that during uncoarsening the best
+//! validated model is often *not* the finest one, and that keeping the
+//! top-k per-level models and majority-voting their decisions can beat
+//! any single level. `EnsembleModel` is that artifact: a small ordered
+//! set of per-level binary SVMs plus the validation gmean each earned.
+//!
+//! Voting rule (shared with the serve-side scorer so model-side and
+//! engine-side answers are bit-identical): each member casts ±1 from the
+//! sign of its decision value (ties → −1, matching
+//! [`SvmModel::predict_label`]); the ensemble's decision *value* is the
+//! net vote count as f64 and its label is the sign of that net count
+//! (net 0 → −1, the majority class). Everything is a deterministic
+//! function of the member decision values, so the ensemble inherits the
+//! thread-count invariance of the members.
+
+use crate::data::matrix::Matrix;
+use crate::svm::model::SvmModel;
+
+/// One member of a best-levels ensemble: the per-level model plus the
+/// evidence that earned it a seat.
+#[derive(Clone, Debug)]
+pub struct EnsembleMember {
+    /// The trained binary model for this level.
+    pub model: SvmModel,
+    /// Validated gmean that ranked this member.
+    pub val_gmean: f64,
+    /// Refinement step the member came from (0 = coarsest solve).
+    pub step: usize,
+}
+
+/// A top-k best-levels voting ensemble, ordered best-first by
+/// `(val_gmean desc, step asc)`.
+#[derive(Clone, Debug, Default)]
+pub struct EnsembleModel {
+    /// Members, best-first. Never empty for a published artifact.
+    pub members: Vec<EnsembleMember>,
+}
+
+/// Combine per-member decision values into the ensemble decision.
+///
+/// Returns `(value, label)` where `value` is the net ±1 vote count as
+/// f64 and `label` is its sign (net 0 → −1).
+pub fn vote(values: &[f64]) -> (f64, i8) {
+    let mut net: i64 = 0;
+    for &v in values {
+        net += if v > 0.0 { 1 } else { -1 };
+    }
+    let value = net as f64;
+    let label = if value > 0.0 { 1 } else { -1 };
+    (value, label)
+}
+
+impl EnsembleModel {
+    /// Number of voting members.
+    pub fn n_members(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Feature dimensionality (all members agree; enforced on insert and
+    /// by the codec/scorer).
+    pub fn dim(&self) -> usize {
+        self.members.first().map_or(0, |m| m.model.sv.cols())
+    }
+
+    /// Insert a candidate and prune back to the `k` best members.
+    ///
+    /// Ranking is `(val_gmean desc, step asc)`; the sort is stable and
+    /// gmeans are finite (they come from confusion counts), so pruning is
+    /// deterministic.
+    pub fn add_candidate(&mut self, member: EnsembleMember, k: usize) {
+        self.members.push(member);
+        self.members.sort_by(|a, b| {
+            b.val_gmean
+                .partial_cmp(&a.val_gmean)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.step.cmp(&b.step))
+        });
+        self.members.truncate(k.max(1));
+    }
+
+    /// Ensemble decision value for one point: the net vote count.
+    pub fn decision(&self, x: &[f32]) -> f64 {
+        let values: Vec<f64> = self.members.iter().map(|m| m.model.decision(x)).collect();
+        vote(&values).0
+    }
+
+    /// Ensemble label for one point.
+    pub fn predict_label(&self, x: &[f32]) -> i8 {
+        let values: Vec<f64> = self.members.iter().map(|m| m.model.decision(x)).collect();
+        vote(&values).1
+    }
+
+    /// Batch labels: per-member batch decisions, then a per-row vote.
+    pub fn predict_batch(&self, xs: &Matrix) -> Vec<i8> {
+        let per_member: Vec<Vec<f64>> = self
+            .members
+            .iter()
+            .map(|m| m.model.decision_batch(xs))
+            .collect();
+        let mut out = Vec::with_capacity(xs.rows());
+        let mut row = vec![0.0; self.members.len()];
+        for i in 0..xs.rows() {
+            for (j, vals) in per_member.iter().enumerate() {
+                row[j] = vals[i];
+            }
+            out.push(vote(&row).1);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::kernel::KernelKind;
+
+    fn stub_model(sign: f64, dim: usize) -> SvmModel {
+        // A linear model whose decision is `sign` everywhere: no SVs,
+        // rho = -sign.
+        SvmModel {
+            sv: Matrix::from_vec(0, dim, Vec::new()).unwrap(),
+            sv_coef: Vec::new(),
+            rho: -sign,
+            kernel: KernelKind::Linear,
+            sv_indices: Vec::new(),
+            sv_labels: Vec::new(),
+        }
+    }
+
+    fn member(sign: f64, gmean: f64, step: usize) -> EnsembleMember {
+        EnsembleMember {
+            model: stub_model(sign, 3),
+            val_gmean: gmean,
+            step,
+        }
+    }
+
+    #[test]
+    fn vote_majority_and_tie_rules() {
+        assert_eq!(vote(&[1.0, 1.0, -1.0]), (1.0, 1));
+        assert_eq!(vote(&[-2.0, -0.5, 1.0]), (-1.0, -1));
+        // Ties (net 0) go to the majority class, like a lone model's
+        // decision value of exactly 0.
+        assert_eq!(vote(&[1.0, -1.0]), (0.0, -1));
+        // A decision value of exactly 0 votes −1.
+        assert_eq!(vote(&[0.0]), (-1.0, -1));
+    }
+
+    #[test]
+    fn add_candidate_keeps_top_k_by_gmean_then_step() {
+        let mut e = EnsembleModel::default();
+        e.add_candidate(member(1.0, 0.80, 2), 2);
+        e.add_candidate(member(1.0, 0.90, 3), 2);
+        e.add_candidate(member(1.0, 0.90, 1), 2);
+        assert_eq!(e.n_members(), 2);
+        // 0.90 twice; the earlier step ranks first.
+        assert_eq!(e.members[0].step, 1);
+        assert_eq!(e.members[1].step, 3);
+        assert!(e.members.iter().all(|m| m.val_gmean == 0.90));
+    }
+
+    #[test]
+    fn predict_matches_vote_of_members() {
+        let mut e = EnsembleModel::default();
+        e.add_candidate(member(1.0, 0.9, 0), 3);
+        e.add_candidate(member(-1.0, 0.8, 1), 3);
+        e.add_candidate(member(1.0, 0.7, 2), 3);
+        let x = [0.0f32, 0.0, 0.0];
+        assert_eq!(e.decision(&x), 1.0);
+        assert_eq!(e.predict_label(&x), 1);
+        let xs = Matrix::from_vec(2, 3, vec![0.0; 6]).unwrap();
+        assert_eq!(e.predict_batch(&xs), vec![1, 1]);
+    }
+}

@@ -6,16 +6,21 @@
 //! * [`uncoarsen`] — Algorithm 3 helpers: support-vector aggregate
 //!   expansion (I⁻¹), training-set reconstruction, parameter inheritance;
 //! * [`trainer`] — the driver: per-class AMG hierarchies, coarsest
-//!   learning, level-by-level refinement to the finest model;
+//!   learning, level-by-level refinement to the finest model, plus the
+//!   adaptive (AML-SVM) per-level validation controller;
+//! * [`ensemble`] — best-levels voting ensemble built by the adaptive
+//!   controller and served as its own artifact kind;
 //! * [`checkpoint`] — crash-safe per-level retrain checkpoints
 //!   (bit-exact state snapshot, atomic writes, torn-file detection).
 
 pub mod checkpoint;
 pub mod coarsest;
+pub mod ensemble;
 pub mod params;
 pub mod trainer;
 pub mod uncoarsen;
 
 pub use checkpoint::{CheckpointLoad, Checkpointer, TrainCheckpoint};
+pub use ensemble::{EnsembleMember, EnsembleModel};
 pub use params::MlsvmParams;
-pub use trainer::{MlsvmModel, MlsvmTrainer, TrainDriver};
+pub use trainer::{AdaptiveOutcome, MlsvmModel, MlsvmTrainer, TrainDriver};

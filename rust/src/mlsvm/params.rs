@@ -37,6 +37,31 @@ pub struct MlsvmParams {
     pub warm_start: bool,
     /// RNG seed for splits/search (hierarchy has its own in `hierarchy`).
     pub seed: u64,
+    /// Adaptive refinement (AML-SVM, arXiv:2011.02592): stop uncoarsening
+    /// after this many consecutive levels whose validated gmean fails to
+    /// improve by [`MlsvmParams::adapt_epsilon`]. 0 disables the whole
+    /// adaptive controller (validation split, early stop, recovery,
+    /// ensemble) and trains every level exactly as before.
+    pub adapt_patience: usize,
+    /// Minimum validated-gmean improvement over the best level seen so
+    /// far for a level to count as progress (resets the patience clock).
+    pub adapt_epsilon: f64,
+    /// Bad-level recovery: a level whose validated gmean drops more than
+    /// this below the previous accepted level re-solves once with
+    /// `grow_hops + 1` wider support; the better of the two solves (by
+    /// validated gmean) is accepted.
+    pub adapt_drop_tol: f64,
+    /// Keep the top-k per-level models (by validated gmean) as a voting
+    /// [`crate::mlsvm::ensemble::EnsembleModel`]. 0 disables the
+    /// ensemble; it also requires `adapt_patience > 0`.
+    pub adapt_ensemble: usize,
+    /// Fraction of each class held out (deterministically, from
+    /// [`MlsvmParams::seed`]) as the adaptive validation split. The split
+    /// is only used for *monitoring* — held-out rows still train, and it
+    /// draws from its own RNG stream, so each level's solve sees exactly
+    /// the inputs a non-adaptive run would (only the stop decision,
+    /// bad-level recovery and the published model differ).
+    pub adapt_val_frac: f64,
 }
 
 impl Default for MlsvmParams {
@@ -54,6 +79,11 @@ impl Default for MlsvmParams {
             keep_small_class_full: 300,
             warm_start: true,
             seed: 0,
+            adapt_patience: 0,
+            adapt_epsilon: 1e-3,
+            adapt_drop_tol: 0.02,
+            adapt_ensemble: 0,
+            adapt_val_frac: 0.2,
         }
     }
 }
@@ -69,6 +99,12 @@ impl MlsvmParams {
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self.hierarchy.seed = seed ^ 0xa5a5_5a5a;
+        self
+    }
+
+    /// Convenience: enable the adaptive controller with a patience.
+    pub fn with_adaptive(mut self, patience: usize) -> Self {
+        self.adapt_patience = patience;
         self
     }
 }
@@ -88,8 +124,21 @@ mod tests {
 
     #[test]
     fn builders_apply() {
-        let p = MlsvmParams::default().with_caliber(6).with_seed(9);
+        let p = MlsvmParams::default()
+            .with_caliber(6)
+            .with_seed(9)
+            .with_adaptive(2);
         assert_eq!(p.hierarchy.caliber, 6);
         assert_eq!(p.seed, 9);
+        assert_eq!(p.adapt_patience, 2);
+    }
+
+    #[test]
+    fn adaptive_control_is_off_by_default() {
+        let p = MlsvmParams::default();
+        assert_eq!(p.adapt_patience, 0);
+        assert_eq!(p.adapt_ensemble, 0);
+        assert!(p.adapt_val_frac > 0.0 && p.adapt_val_frac < 0.5);
+        assert!(p.adapt_epsilon > 0.0 && p.adapt_drop_tol > p.adapt_epsilon);
     }
 }

@@ -19,17 +19,21 @@
 use crate::amg::hierarchy::Hierarchy;
 use crate::data::dataset::Dataset;
 use crate::error::{Error, Result};
-use crate::mlsvm::checkpoint::{self, CheckpointLoad, Checkpointer, CheckpointView};
+use crate::metrics::evaluate;
+use crate::mlsvm::checkpoint::{self, AdaptiveCkpt, CheckpointLoad, Checkpointer, CheckpointView};
 use crate::mlsvm::coarsest::{train_coarsest, volume_weights};
+use crate::mlsvm::ensemble::{EnsembleMember, EnsembleModel};
 use crate::mlsvm::params::MlsvmParams;
 use crate::mlsvm::uncoarsen::{
     advance_active, build_level_dataset, svs_to_class_nodes, warm_start_alpha, ActiveSet,
 };
 use crate::modelsel::search::ud_search_with_ratio;
+use crate::serve::faults::FaultPlan;
 use crate::svm::model::SvmModel;
 use crate::svm::smo::{train_weighted_warm, SvmParams, TrainStats};
-use crate::util::rng::Pcg64;
+use crate::util::rng::{Pcg64, Rng};
 use crate::util::timer::Timer;
+use std::sync::Arc;
 
 /// Statistics recorded at each trained level (coarsest first).
 #[derive(Clone, Debug)]
@@ -81,6 +85,32 @@ impl MlsvmModel {
     }
 }
 
+/// What the adaptive uncoarsening controller did during a run (see
+/// [`MlsvmParams::adapt_patience`]); reported through
+/// [`TrainDriver::adaptive`] when the controller is enabled.
+#[derive(Clone, Debug)]
+pub struct AdaptiveOutcome {
+    /// True when patience ran out and refinement stopped before the
+    /// finest level.
+    pub stopped_early: bool,
+    /// Levels actually trained (coarsest counts as one).
+    pub levels_trained: usize,
+    /// Levels the early stop skipped (0 when the run reached the finest
+    /// level).
+    pub levels_skipped: usize,
+    /// Index into `level_stats` of the published best level.
+    pub best_step: usize,
+    /// Validated gmean of the published best level.
+    pub best_gmean: f64,
+    /// Validated gmean of every accepted level, coarsest first.
+    pub val_gmeans: Vec<f64>,
+    /// Bad-level recovery re-solves performed.
+    pub recoveries: usize,
+    /// Top-k per-level voting ensemble (present iff
+    /// [`MlsvmParams::adapt_ensemble`] > 0).
+    pub ensemble: Option<EnsembleModel>,
+}
+
 /// Optional behaviors layered on [`MlsvmTrainer::train`] — the retrain
 /// path. Default is plain training (no inheritance, no checkpointing),
 /// which is exactly what [`MlsvmTrainer::train`] uses.
@@ -100,17 +130,70 @@ pub struct TrainDriver {
     /// torn, or mismatched checkpoint falls back to a full train (see
     /// `resume_note`).
     pub resume: bool,
-    /// Stop after this many total training steps (coarsest counts as
-    /// one) and return the partial model. With `checkpoint` set this
-    /// simulates an interruption: the checkpoint on disk resumes a later
-    /// run exactly where this one stopped. `None` = train to the finest
-    /// level.
+    /// Stop after this many refinement steps and return the partial
+    /// model. The coarsest solve is not a refinement step: `Some(0)`
+    /// trains the coarsest level only, `Some(n)` performs exactly `n`
+    /// refinement steps (hierarchy depth permitting). With `checkpoint`
+    /// set this simulates an interruption: the checkpoint on disk
+    /// resumes a later run exactly where this one stopped. `None` =
+    /// train to the finest level.
     pub max_steps: Option<usize>,
+    /// Deterministic fault injection for the adaptive controller (the
+    /// `adapt-bad=N` trigger degrades the Nth adaptive level
+    /// evaluation to gmean 0). `None` disarms every hook.
+    pub faults: Option<Arc<FaultPlan>>,
     /// Out: training steps restored by a successful resume (coarsest
     /// counts as one; 0 = trained from scratch).
     pub resumed_steps: usize,
     /// Out: why a requested resume fell back to a full train, if it did.
     pub resume_note: Option<String>,
+    /// Out: what the adaptive controller did (`None` when
+    /// [`MlsvmParams::adapt_patience`] is 0).
+    pub adaptive: Option<AdaptiveOutcome>,
+}
+
+/// Deterministic stratified validation subset for the adaptive
+/// controller. Drawn from a dedicated RNG stream (never the training
+/// RNG), so every level's solve sees exactly the inputs a non-adaptive
+/// run would — held-out rows still train; the split only monitors.
+fn validation_split(train: &Dataset, frac: f64, seed: u64) -> Dataset {
+    let mut vrng = Pcg64::seed_from(seed ^ 0x56a1_1d5e);
+    let mut idx = Vec::new();
+    for class in [train.positives(), train.negatives()] {
+        let mut c = class;
+        vrng.shuffle(&mut c);
+        let n = (((c.len() as f64) * frac).round() as usize).clamp(1, c.len());
+        idx.extend_from_slice(&c[..n]);
+    }
+    train.select(&idx)
+}
+
+/// Validated gmean of `model`, degraded to 0 when the `adapt-bad` fault
+/// trigger fires (each call consumes one trigger ordinal).
+fn adaptive_eval(model: &SvmModel, val: &Dataset, faults: &Option<Arc<FaultPlan>>) -> f64 {
+    let g = evaluate(model, val).gmean();
+    if faults.as_ref().map_or(false, |f| f.adapt_eval()) {
+        0.0
+    } else {
+        g
+    }
+}
+
+/// Add a per-level candidate to the controller's ensemble roster and
+/// prune it to the top `k` (by validated gmean, then earlier step).
+fn push_candidate(c: &mut AdaptiveCkpt, model: &SvmModel, g: f64, step: usize, k: usize) {
+    let mut e = EnsembleModel {
+        members: std::mem::take(&mut c.candidates),
+    };
+    e.add_candidate(
+        EnsembleMember {
+            model: model.clone(),
+            val_gmean: g,
+            step,
+        },
+        k,
+    );
+    c.candidates = e.members;
 }
 
 /// The multilevel trainer.
@@ -148,12 +231,21 @@ impl MlsvmTrainer {
         driver: &mut TrainDriver,
     ) -> Result<MlsvmModel> {
         let p = &self.params;
+        driver.adaptive = None;
         if train.n_pos() == 0 || train.n_neg() == 0 {
             return Err(Error::Degenerate(
                 "mlsvm: training set must contain both classes".into(),
             ));
         }
         let (dpos, _, dneg, _) = train.split_classes();
+        // Adaptive controller (AML-SVM): deterministic held-out split for
+        // per-level validation. Uses its own RNG stream, so every level's
+        // solve sees exactly the inputs a non-adaptive run would.
+        let val_ds = if p.adapt_patience > 0 {
+            Some(validation_split(train, p.adapt_val_frac, p.seed))
+        } else {
+            None
+        };
 
         // ---- Coarsening phase (per class, concurrent) ----
         // The two hierarchies share nothing (separate kNN graphs, seeds,
@@ -200,11 +292,21 @@ impl MlsvmTrainer {
                 match ck.load(fp) {
                     CheckpointLoad::Ready(c) if c.partial.depths == (dp, dn) => restored = Some(*c),
                     CheckpointLoad::Ready(c) => {
-                        driver.resume_note = Some(format!(
+                        // A matching fingerprint with mismatched depths is
+                        // a stale file from an older hierarchy build; it
+                        // can never resume, so move it aside instead of
+                        // leaving it to shadow every future resume.
+                        let note = format!(
                             "checkpoint depths {:?} do not match this run's {:?}",
                             c.partial.depths,
                             (dp, dn)
-                        ))
+                        );
+                        driver.resume_note = Some(match ck.quarantine() {
+                            Ok(Some(q)) => {
+                                format!("{note}; stale file quarantined to {}", q.display())
+                            }
+                            _ => note,
+                        });
                     }
                     CheckpointLoad::Missing => {
                         driver.resume_note = Some("no checkpoint file".into())
@@ -222,6 +324,10 @@ impl MlsvmTrainer {
         }
 
         let (mut model, mut params, mut center);
+        // Adaptive controller state (Some iff adapt_patience > 0): rides
+        // every checkpoint so `--resume` restores the best level, the
+        // patience clock and the ensemble roster bit-exactly.
+        let mut ctrl: Option<AdaptiveCkpt> = None;
         match restored {
             Some(c) => {
                 // Resume: restore the loop state after the last completed
@@ -235,6 +341,7 @@ impl MlsvmTrainer {
                 model = c.partial.model;
                 params = c.partial.params;
                 stats = c.partial.level_stats;
+                ctrl = c.adaptive;
             }
             None => {
                 let t0 = Timer::start();
@@ -273,6 +380,30 @@ impl MlsvmTrainer {
                         ud_used = true;
                     }
                 }
+                let mut cv_gmean = cv_gmean;
+                if let Some(val) = &val_ds {
+                    // Seed the controller with the coarsest solve: it is
+                    // step 0's model, the initial best, and (with the
+                    // ensemble on) the first voting candidate.
+                    let g = adaptive_eval(&model, val, &driver.faults);
+                    if cv_gmean.is_none() {
+                        cv_gmean = Some(g);
+                    }
+                    let mut c = AdaptiveCkpt {
+                        best_model: model.clone(),
+                        best_params: params,
+                        best_step: 0,
+                        best_gmean: g,
+                        stall: 0,
+                        recoveries: 0,
+                        val_history: vec![g],
+                        candidates: Vec::new(),
+                    };
+                    if p.adapt_ensemble > 0 {
+                        push_candidate(&mut c, &model, g, 0, p.adapt_ensemble);
+                    }
+                    ctrl = Some(c);
+                }
                 stats.push(LevelStat {
                     levels: (active_pos.level, active_neg.level),
                     train_size: ds0.len(),
@@ -294,6 +425,7 @@ impl MlsvmTrainer {
                         params: &params,
                         level_stats: &stats,
                         depths: (dp, dn),
+                        adaptive: ctrl.as_ref(),
                     })?;
                 }
             }
@@ -303,9 +435,19 @@ impl MlsvmTrainer {
         let steps = dp.max(dn).saturating_sub(1);
         // stats holds the coarsest entry plus one per completed
         // refinement step; a fresh run starts at 0, a resume mid-loop.
-        let step_cap = driver.max_steps.unwrap_or(usize::MAX).max(1);
+        // max_steps caps *refinement* steps: the coarsest solve is not
+        // counted, so Some(0) trains the coarsest level only and Some(n)
+        // performs exactly n refinement steps.
+        let step_cap = driver.max_steps.unwrap_or(usize::MAX);
+        let mut stopped_early = false;
         for _step in (stats.len() - 1)..steps {
-            if stats.len() >= step_cap {
+            if let Some(c) = &ctrl {
+                if c.stall >= p.adapt_patience {
+                    stopped_early = true;
+                    break;
+                }
+            }
+            if stats.len() - 1 >= step_cap {
                 break;
             }
             let t = Timer::start();
@@ -314,7 +456,7 @@ impl MlsvmTrainer {
             let prev_neg = active_neg.clone();
             active_pos = advance_active(&hpos, &active_pos, &sv_pos, keep_pos_full, p.grow_hops);
             active_neg = advance_active(&hneg, &active_neg, &sv_neg, keep_neg_full, p.grow_hops);
-            let ds = build_level_dataset(&hpos, &hneg, &active_pos, &active_neg)?;
+            let mut ds = build_level_dataset(&hpos, &hneg, &active_pos, &active_neg)?;
             if ds.n_pos() == 0 || ds.n_neg() == 0 {
                 return Err(Error::Degenerate(format!(
                     "mlsvm: class vanished at level pair ({}, {})",
@@ -324,7 +466,7 @@ impl MlsvmTrainer {
             let use_ud =
                 driver.inherit.is_none() && ds.len() < p.qdt && ds.len() >= p.min_ud_size;
             let t_ud = Timer::start();
-            let cv_gmean = if use_ud {
+            let mut cv_gmean = if use_ud {
                 // Lines 8–9: UD around the inherited parameters.
                 let out = ud_search_with_ratio(
                     &ds,
@@ -353,13 +495,76 @@ impl MlsvmTrainer {
             } else {
                 None
             };
-            let (new_model, solver) = train_weighted_warm(
+            let (mut new_model, mut solver) = train_weighted_warm(
                 &ds.points,
                 &ds.labels,
                 &params,
                 weights.as_deref(),
                 alpha0.as_deref(),
             )?;
+            if let (Some(val), Some(c)) = (&val_ds, ctrl.as_mut()) {
+                let mut g = adaptive_eval(&new_model, val, &driver.faults);
+                let prev_g = c.val_history.last().copied().unwrap_or(0.0);
+                if g + p.adapt_drop_tol < prev_g {
+                    // Bad-level recovery: this level lost more validated
+                    // gmean than the tolerance allows, so re-solve once
+                    // from the same parent SVs with one extra neighbor
+                    // ring of support and accept the better of the two
+                    // solves. `model` still holds the parent here, so the
+                    // wide solve warm-starts exactly like the narrow one.
+                    c.recoveries += 1;
+                    let wide_pos =
+                        advance_active(&hpos, &prev_pos, &sv_pos, keep_pos_full, p.grow_hops + 1);
+                    let wide_neg =
+                        advance_active(&hneg, &prev_neg, &sv_neg, keep_neg_full, p.grow_hops + 1);
+                    let wide_ds = build_level_dataset(&hpos, &hneg, &wide_pos, &wide_neg)?;
+                    if wide_ds.n_pos() > 0 && wide_ds.n_neg() > 0 {
+                        let wide_weights = volume_weights(&wide_ds, p.use_volumes);
+                        let wide_alpha0 = if p.warm_start {
+                            Some(warm_start_alpha(
+                                &model, &hpos, &hneg, &prev_pos, &prev_neg, &wide_pos, &wide_neg,
+                            ))
+                        } else {
+                            None
+                        };
+                        let (wide_model, wide_solver) = train_weighted_warm(
+                            &wide_ds.points,
+                            &wide_ds.labels,
+                            &params,
+                            wide_weights.as_deref(),
+                            wide_alpha0.as_deref(),
+                        )?;
+                        let wide_g = evaluate(&wide_model, val).gmean();
+                        if wide_g > g {
+                            new_model = wide_model;
+                            solver = wide_solver;
+                            g = wide_g;
+                            active_pos = wide_pos;
+                            active_neg = wide_neg;
+                            ds = wide_ds;
+                        }
+                    }
+                }
+                c.val_history.push(g);
+                if cv_gmean.is_none() {
+                    cv_gmean = Some(g);
+                }
+                let improved = g > c.best_gmean + p.adapt_epsilon;
+                if g > c.best_gmean {
+                    c.best_model = new_model.clone();
+                    c.best_params = params;
+                    c.best_step = stats.len();
+                    c.best_gmean = g;
+                }
+                if improved {
+                    c.stall = 0;
+                } else {
+                    c.stall += 1;
+                }
+                if p.adapt_ensemble > 0 {
+                    push_candidate(c, &new_model, g, stats.len(), p.adapt_ensemble);
+                }
+            }
             model = new_model;
             stats.push(LevelStat {
                 levels: (active_pos.level, active_neg.level),
@@ -382,8 +587,33 @@ impl MlsvmTrainer {
                     params: &params,
                     level_stats: &stats,
                     depths: (dp, dn),
+                    adaptive: ctrl.as_ref(),
                 })?;
             }
+        }
+
+        // Adaptive publish: the model that leaves the trainer is the best
+        // validated level, not necessarily the last one trained.
+        if let Some(c) = ctrl {
+            let ensemble = if p.adapt_ensemble > 0 && !c.candidates.is_empty() {
+                Some(EnsembleModel {
+                    members: c.candidates,
+                })
+            } else {
+                None
+            };
+            driver.adaptive = Some(AdaptiveOutcome {
+                stopped_early,
+                levels_trained: stats.len(),
+                levels_skipped: (steps + 1).saturating_sub(stats.len()),
+                best_step: c.best_step,
+                best_gmean: c.best_gmean,
+                val_gmeans: c.val_history,
+                recoveries: c.recoveries,
+                ensemble,
+            });
+            model = c.best_model;
+            params = c.best_params;
         }
 
         Ok(MlsvmModel {
@@ -545,12 +775,13 @@ mod tests {
             "need >= 3 steps to interrupt mid-loop, got {}",
             reference.level_stats.len()
         );
-        // "Interrupted": stop after 2 steps with the checkpoint on disk.
+        // "Interrupted": stop after the coarsest solve plus one
+        // refinement step with the checkpoint on disk.
         let faults = crate::serve::faults::FaultPlan::disarmed();
         let mut rng_a = Pcg64::seed_from(12);
         let mut d1 = TrainDriver {
             checkpoint: Some(Checkpointer::new(&path, std::sync::Arc::clone(&faults))),
-            max_steps: Some(2),
+            max_steps: Some(1),
             ..Default::default()
         };
         let partial = MlsvmTrainer::new(quick_params(8))
@@ -580,6 +811,238 @@ mod tests {
         assert_eq!(resumed.params.c_neg.to_bits(), reference.params.c_neg.to_bits());
         // Completed-step stats were restored verbatim from the checkpoint.
         assert_eq!(resumed.level_stats[0].seconds, partial.level_stats[0].seconds);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn max_steps_counts_refinement_steps_not_the_coarsest_solve() {
+        let mut rng = Pcg64::seed_from(93);
+        let ds = two_gaussians(1500, 400, 5, 5.0, &mut rng);
+        let mut rng0 = Pcg64::seed_from(12);
+        let mut d0 = TrainDriver { max_steps: Some(0), ..Default::default() };
+        let m0 = MlsvmTrainer::new(quick_params(8))
+            .train_driven(&ds, &mut rng0, &mut d0)
+            .unwrap();
+        assert_eq!(m0.level_stats.len(), 1, "Some(0) must stop after the coarsest solve");
+        let mut rng1 = Pcg64::seed_from(12);
+        let mut d1 = TrainDriver { max_steps: Some(1), ..Default::default() };
+        let m1 = MlsvmTrainer::new(quick_params(8))
+            .train_driven(&ds, &mut rng1, &mut d1)
+            .unwrap();
+        assert_eq!(m1.level_stats.len(), 2, "Some(1) must perform exactly one refinement step");
+    }
+
+    #[test]
+    fn stale_depth_checkpoint_is_quarantined_before_retrain() {
+        let dir = std::env::temp_dir().join(format!(
+            "mlsvm-trainer-stale-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stale.ckpt");
+        let mut rng = Pcg64::seed_from(95);
+        let ds = two_gaussians(700, 150, 5, 4.0, &mut rng);
+        let p = quick_params(13);
+        let faults = crate::serve::faults::FaultPlan::disarmed();
+        // Write a real coarsest-level checkpoint...
+        let mut rng_a = Pcg64::seed_from(14);
+        let mut d0 = TrainDriver {
+            checkpoint: Some(Checkpointer::new(&path, std::sync::Arc::clone(&faults))),
+            max_steps: Some(0),
+            ..Default::default()
+        };
+        let only_coarsest = MlsvmTrainer::new(p.clone())
+            .train_driven(&ds, &mut rng_a, &mut d0)
+            .unwrap();
+        assert_eq!(only_coarsest.level_stats.len(), 1);
+        // ...then doctor its depths so it can never resume this run.
+        let ck = Checkpointer::new(&path, std::sync::Arc::clone(&faults));
+        let fp = checkpoint::fingerprint(&ds, &format!("{p:?}|inherit={:?}", None::<SvmParams>));
+        let c = match ck.load(fp) {
+            CheckpointLoad::Ready(c) => c,
+            other => panic!("expected a resumable checkpoint, got {other:?}"),
+        };
+        ck.save(&CheckpointView {
+            fingerprint: fp,
+            rng: c.rng,
+            center: c.center,
+            active_pos: &c.active_pos,
+            active_neg: &c.active_neg,
+            model: &c.partial.model,
+            params: &c.partial.params,
+            level_stats: &c.partial.level_stats,
+            depths: (99, 98),
+            adaptive: None,
+        })
+        .unwrap();
+        // Resume falls back to a full train and parks the stale file
+        // aside instead of leaving it to shadow every future resume.
+        let mut rng_b = Pcg64::seed_from(14);
+        let mut d1 = TrainDriver {
+            checkpoint: Some(Checkpointer::new(&path, faults)),
+            resume: true,
+            ..Default::default()
+        };
+        let full = MlsvmTrainer::new(p.clone())
+            .train_driven(&ds, &mut rng_b, &mut d1)
+            .unwrap();
+        assert_eq!(d1.resumed_steps, 0);
+        let note = d1.resume_note.unwrap();
+        assert!(note.contains("depths"), "{note}");
+        assert!(note.contains("quarantined"), "{note}");
+        let stale = {
+            let mut os = path.clone().into_os_string();
+            os.push(".stale");
+            std::path::PathBuf::from(os)
+        };
+        assert!(stale.exists(), "stale checkpoint should be parked next to the original");
+        // The fallback run is bit-identical to one that never saw the file.
+        let mut rng_c = Pcg64::seed_from(14);
+        let reference = MlsvmTrainer::new(p).train(&ds, &mut rng_c).unwrap();
+        assert_eq!(svm_bits(&full), svm_bits(&reference));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Adaptive knobs that force the early stop on easy data: no level
+    /// can improve validated gmean by a full point, so the patience
+    /// clock (1) runs out right after the first refinement step.
+    fn adaptive_params(seed: u64) -> MlsvmParams {
+        let mut p = quick_params(seed).with_adaptive(1);
+        p.adapt_epsilon = 1.0;
+        p.adapt_ensemble = 2;
+        p
+    }
+
+    fn run_adaptive(threads: usize, ds: &Dataset, p: &MlsvmParams) -> (MlsvmModel, AdaptiveOutcome) {
+        crate::util::pool::set_num_threads(threads);
+        let mut rng = Pcg64::seed_from(12);
+        let mut d = TrainDriver::default();
+        let m = MlsvmTrainer::new(p.clone()).train_driven(ds, &mut rng, &mut d).unwrap();
+        crate::util::pool::set_num_threads(0);
+        (m, d.adaptive.expect("adaptive outcome must be reported"))
+    }
+
+    fn ensemble_bits(o: &AdaptiveOutcome) -> Vec<u8> {
+        crate::serve::binary::write_artifact(&crate::serve::registry::ModelArtifact::Ensemble(
+            o.ensemble.clone().expect("ensemble requested"),
+        ))
+    }
+
+    #[test]
+    fn adaptive_early_stop_fires_and_is_bit_identical_across_threads() {
+        let mut rng = Pcg64::seed_from(91);
+        let ds = two_gaussians(1500, 400, 5, 5.0, &mut rng);
+        let p = adaptive_params(8);
+        let mut rng_ref = Pcg64::seed_from(12);
+        let reference = MlsvmTrainer::new(quick_params(8)).train(&ds, &mut rng_ref).unwrap();
+        assert!(reference.level_stats.len() >= 3, "need skippable levels");
+        let (m1, o1) = run_adaptive(1, &ds, &p);
+        assert!(o1.stopped_early);
+        assert!(o1.levels_skipped >= 1);
+        assert_eq!(m1.level_stats.len(), 2, "patience 1 stops after one stalled step");
+        assert_eq!(o1.val_gmeans.len(), 2);
+        assert!(
+            m1.level_stats.iter().all(|s| s.cv_gmean.is_some()),
+            "adaptive runs must populate cv_gmean on every level"
+        );
+        // The published model is the best validated level.
+        let best = o1.val_gmeans.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(o1.best_gmean.to_bits(), best.to_bits());
+        let e = o1.ensemble.as_ref().expect("ensemble requested");
+        assert_eq!(e.n_members(), 2);
+        assert!(e.members[0].val_gmean >= e.members[1].val_gmean);
+        // Thread invariance: same stop decision, model bytes, history
+        // bits and ensemble bytes at 1 and 4 threads.
+        let (m4, o4) = run_adaptive(4, &ds, &p);
+        assert_eq!(svm_bits(&m1), svm_bits(&m4));
+        assert_eq!(m1.level_stats.len(), m4.level_stats.len());
+        assert_eq!(o1.stopped_early, o4.stopped_early);
+        assert_eq!(o1.best_step, o4.best_step);
+        let bits = |v: &[f64]| v.iter().map(|g| g.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&o1.val_gmeans), bits(&o4.val_gmeans));
+        assert_eq!(ensemble_bits(&o1), ensemble_bits(&o4));
+    }
+
+    #[test]
+    fn injected_bad_level_triggers_recovery_resolve() {
+        let mut rng = Pcg64::seed_from(92);
+        let ds = two_gaussians(1500, 400, 5, 5.0, &mut rng);
+        let mut p = quick_params(8).with_adaptive(4);
+        p.adapt_epsilon = 1e-3;
+        // Degrade the 2nd adaptive evaluation (= the first refinement
+        // step) to gmean 0: far below the coarsest baseline, so the
+        // wide re-solve must fire and rescue the level.
+        let faults = crate::serve::faults::FaultPlan::parse("adapt-bad=2").unwrap();
+        let mut rng_t = Pcg64::seed_from(12);
+        let mut d = TrainDriver {
+            faults: Some(std::sync::Arc::clone(&faults)),
+            ..Default::default()
+        };
+        let m = MlsvmTrainer::new(p).train_driven(&ds, &mut rng_t, &mut d).unwrap();
+        assert!(m.level_stats.len() >= 2);
+        let out = d.adaptive.unwrap();
+        assert_eq!(faults.injected().adapt_bad_levels, 1, "trigger must fire exactly once");
+        assert!(out.recoveries >= 1, "a degraded level must trigger the wide re-solve");
+        assert!(
+            out.val_gmeans[1] > 0.0,
+            "the wide solve's gmean, not the injected 0, must be accepted"
+        );
+    }
+
+    #[test]
+    fn adaptive_resume_publishes_bit_identically() {
+        let dir = std::env::temp_dir().join(format!(
+            "mlsvm-trainer-adapt-ckpt-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("adapt.ckpt");
+        let mut rng = Pcg64::seed_from(94);
+        let ds = two_gaussians(1500, 400, 5, 5.0, &mut rng);
+        let mut p = quick_params(8).with_adaptive(2);
+        p.adapt_ensemble = 2;
+        // Reference: uninterrupted adaptive run.
+        let mut rng_ref = Pcg64::seed_from(12);
+        let mut d_ref = TrainDriver::default();
+        let reference = MlsvmTrainer::new(p.clone())
+            .train_driven(&ds, &mut rng_ref, &mut d_ref)
+            .unwrap();
+        let o_ref = d_ref.adaptive.unwrap();
+        // Interrupted after one refinement step, then resumed with a
+        // deliberately wrong seed: the checkpoint's controller state and
+        // RNG stream must take over.
+        let faults = crate::serve::faults::FaultPlan::disarmed();
+        let mut rng_a = Pcg64::seed_from(12);
+        let mut d1 = TrainDriver {
+            checkpoint: Some(Checkpointer::new(&path, std::sync::Arc::clone(&faults))),
+            max_steps: Some(1),
+            ..Default::default()
+        };
+        MlsvmTrainer::new(p.clone()).train_driven(&ds, &mut rng_a, &mut d1).unwrap();
+        let mut rng_b = Pcg64::seed_from(999_999);
+        let mut d2 = TrainDriver {
+            checkpoint: Some(Checkpointer::new(&path, faults)),
+            resume: true,
+            ..Default::default()
+        };
+        let resumed = MlsvmTrainer::new(p).train_driven(&ds, &mut rng_b, &mut d2).unwrap();
+        assert_eq!(d2.resumed_steps, 2, "resume fell back: {:?}", d2.resume_note);
+        let o_res = d2.adaptive.unwrap();
+        assert_eq!(
+            svm_bits(&resumed),
+            svm_bits(&reference),
+            "published adaptive model must be bit-identical through a resume"
+        );
+        assert_eq!(o_res.stopped_early, o_ref.stopped_early);
+        assert_eq!(o_res.best_step, o_ref.best_step);
+        assert_eq!(o_res.best_gmean.to_bits(), o_ref.best_gmean.to_bits());
+        let bits = |v: &[f64]| v.iter().map(|g| g.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&o_res.val_gmeans), bits(&o_ref.val_gmeans));
+        assert_eq!(ensemble_bits(&o_res), ensemble_bits(&o_ref));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

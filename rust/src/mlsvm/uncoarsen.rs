@@ -71,11 +71,17 @@ pub fn svs_to_class_nodes(
 ///
 /// Each support vector's α (recovered as `sv_coef · y`, which is ≥ 0) is
 /// split equally among its fine-level children that survived into the new
-/// active set; non-SV fine nodes start at 0. Mass is conserved per parent,
-/// so the seed stays close to equality-feasible; the solver clips to the
-/// new box constraints and repairs the residual. `prev_*`/`next_*` are the
-/// active sets the model was trained on and the ones produced by
-/// [`advance_active`] (node lists sorted ascending in both).
+/// active set; non-SV fine nodes start at 0. When *none* of an SV's
+/// children survived (the next active set shrank past them), its mass
+/// would otherwise vanish and skew the dual balance Σα⁺ = Σα⁻ the solver
+/// repairs from; instead the orphaned mass is redistributed over that
+/// class's surviving children, proportionally to what each already
+/// received. Mass is therefore conserved per class (exactly: each class
+/// slice is rescaled by placed+orphaned over placed) whenever the class
+/// placed any mass at all; the solver clips to the new box constraints
+/// and repairs the residual. `prev_*`/`next_*` are the active sets the
+/// model was trained on and the ones produced by [`advance_active`]
+/// (node lists sorted ascending in both).
 pub fn warm_start_alpha(
     model: &SvmModel,
     hpos: &Hierarchy,
@@ -89,15 +95,20 @@ pub fn warm_start_alpha(
     let n_pos_next = next_pos.nodes.len();
     let mut alpha = vec![0.0f64; n_pos_next + next_neg.nodes.len()];
     let (pos_part, neg_part) = alpha.split_at_mut(n_pos_next);
+    let (mut pos_total, mut pos_placed) = (0.0f64, 0.0f64);
+    let (mut neg_total, mut neg_placed) = (0.0f64, 0.0f64);
     for (k, &stacked) in model.sv_indices.iter().enumerate() {
         let a = model.sv_coef[k] * model.sv_labels[k] as f64;
         if a <= 0.0 {
             continue;
         }
         if stacked < n_pos_prev {
-            spread_alpha(hpos, prev_pos, next_pos, prev_pos.nodes[stacked], a, pos_part);
+            pos_total += a;
+            pos_placed +=
+                spread_alpha(hpos, prev_pos, next_pos, prev_pos.nodes[stacked], a, pos_part);
         } else {
-            spread_alpha(
+            neg_total += a;
+            neg_placed += spread_alpha(
                 hneg,
                 prev_neg,
                 next_neg,
@@ -107,11 +118,28 @@ pub fn warm_start_alpha(
             );
         }
     }
+    redistribute_orphans(pos_part, pos_total, pos_placed);
+    redistribute_orphans(neg_part, neg_total, neg_placed);
     alpha
 }
 
+/// Rescale one class's seed so orphaned mass (SVs whose children all
+/// vanished from the next active set) lands proportionally on the
+/// children that did survive. No-op when nothing was orphaned or nothing
+/// was placed (a class with zero surviving children has nowhere to put
+/// mass; the solver re-derives it from scratch).
+fn redistribute_orphans(part: &mut [f64], total: f64, placed: f64) {
+    if placed > 0.0 && placed < total {
+        let scale = total / placed;
+        for v in part.iter_mut() {
+            *v *= scale;
+        }
+    }
+}
+
 /// Distribute one coarse node's α over its children present in the next
-/// active set (equal shares; nothing if no child survived).
+/// active set (equal shares). Returns the mass actually placed: `a`, or
+/// 0 when no child survived (the caller redistributes such orphans).
 fn spread_alpha(
     h: &Hierarchy,
     prev: &ActiveSet,
@@ -119,7 +147,7 @@ fn spread_alpha(
     node: u32,
     a: f64,
     out: &mut [f64],
-) {
+) -> f64 {
     let same_level = next.level == prev.level;
     let singleton = [node];
     let expanded;
@@ -134,12 +162,13 @@ fn spread_alpha(
         .filter_map(|c| next.nodes.binary_search(c).ok())
         .collect();
     if slots.is_empty() {
-        return;
+        return 0.0;
     }
     let share = a / slots.len() as f64;
     for s in slots {
         out[s] += share;
     }
+    a
 }
 
 /// Advance one class's active set to the next finer level (Algorithm 3
@@ -326,6 +355,63 @@ mod tests {
         );
         // and the seed is nonzero exactly where children of SVs live
         assert!(total_child > 0.0);
+    }
+
+    #[test]
+    fn warm_start_alpha_conserves_mass_when_children_are_dropped() {
+        let hp = hier(300, 8);
+        let hn = hier(300, 9);
+        if hp.depth() < 2 || hn.depth() < 2 {
+            return;
+        }
+        let lp = hp.depth() - 1;
+        let ln = hn.depth() - 1;
+        let prev_pos = full_active(&hp, lp);
+        let prev_neg = full_active(&hn, ln);
+        let ds = build_level_dataset(&hp, &hn, &prev_pos, &prev_neg).unwrap();
+        let params = crate::svm::smo::SvmParams::default();
+        let model = crate::svm::smo::train(&ds.points, &ds.labels, &params).unwrap();
+        let (sv_pos, sv_neg) = svs_to_class_nodes(&model, &prev_pos, &prev_neg);
+        // Shrink the next active sets: drop the children of the *last*
+        // SV of each class by advancing from a truncated SV list. Any
+        // SV whose aggregate only covers dropped nodes is orphaned.
+        assert!(sv_pos.len() >= 2 && sv_neg.len() >= 2, "need SVs to drop");
+        let next_pos = advance_active(&hp, &prev_pos, &sv_pos[..sv_pos.len() - 1], false, 0);
+        let next_neg = advance_active(&hn, &prev_neg, &sv_neg[..sv_neg.len() - 1], false, 0);
+        let a0 = warm_start_alpha(
+            &model, &hp, &hn, &prev_pos, &prev_neg, &next_pos, &next_neg,
+        );
+        assert_eq!(a0.len(), next_pos.nodes.len() + next_neg.nodes.len());
+        assert!(a0.iter().all(|&a| a >= 0.0 && a.is_finite()));
+        // Mass conservation must now hold *per class* even though some
+        // SV children vanished: orphaned mass lands on the survivors.
+        let n_pos_prev = prev_pos.nodes.len();
+        let per_class_parent = |want_pos: bool| -> f64 {
+            model
+                .sv_indices
+                .iter()
+                .enumerate()
+                .filter(|&(_, &i)| (i < n_pos_prev) == want_pos)
+                .map(|(k, _)| model.sv_coef[k] * model.sv_labels[k] as f64)
+                .filter(|&a| a > 0.0)
+                .sum()
+        };
+        let parent_pos = per_class_parent(true);
+        let parent_neg = per_class_parent(false);
+        let child_pos: f64 = a0[..next_pos.nodes.len()].iter().sum();
+        let child_neg: f64 = a0[next_pos.nodes.len()..].iter().sum();
+        // The class conserves exactly when it placed any mass at all
+        // (surviving SV children exist — guaranteed here because only
+        // one SV per class was dropped).
+        assert!(child_pos > 0.0 && child_neg > 0.0, "survivors must seed");
+        assert!(
+            (parent_pos - child_pos).abs() < 1e-9 * parent_pos.max(1.0),
+            "pos α mass {parent_pos} -> {child_pos}"
+        );
+        assert!(
+            (parent_neg - child_neg).abs() < 1e-9 * parent_neg.max(1.0),
+            "neg α mass {parent_neg} -> {child_neg}"
+        );
     }
 
     #[test]

@@ -27,12 +27,13 @@
 //! transparently by [`crate::serve::registry::load_artifact`], which
 //! sniffs [`BIN_MAGIC`] before falling back to the text readers.
 //!
-//! Kind codes: 1 = `svm`, 2 = `mlsvm`, 3 = `multiclass` — the same
-//! artifact taxonomy as [`ModelArtifact`].
+//! Kind codes: 1 = `svm`, 2 = `mlsvm`, 3 = `multiclass`, 4 = `ensemble`
+//! — the same artifact taxonomy as [`ModelArtifact`].
 
 use crate::coordinator::jobs::{ClassJob, MulticlassModel};
 use crate::data::matrix::Matrix;
 use crate::error::{Error, Result};
+use crate::mlsvm::ensemble::{EnsembleMember, EnsembleModel};
 use crate::mlsvm::trainer::{LevelStat, MlsvmModel};
 use crate::serve::registry::ModelArtifact;
 use crate::svm::kernel::KernelKind;
@@ -57,6 +58,7 @@ const SEC_DEPTHS: u32 = 0x11;
 const SEC_LEVELS: u32 = 0x12;
 const SEC_CLASSES: u32 = 0x20;
 const SEC_CLASS: u32 = 0x21;
+const SEC_ENSEMBLE: u32 = 0x30;
 
 /// Whether `bytes` start with the v2 binary magic (any version).
 pub fn is_binary(bytes: &[u8]) -> bool {
@@ -209,6 +211,23 @@ fn write_multiclass(out: &mut Vec<u8>, mc: &MulticlassModel) {
     }
 }
 
+fn write_ensemble(out: &mut Vec<u8>, e: &EnsembleModel) {
+    // Roster first (count + per-member ranking metadata, in roster
+    // order), then one full SVM section group per member in the same
+    // order — mirroring how multiclass interleaves SEC_CLASS headers
+    // with embedded models.
+    let mut p = Vec::with_capacity(8 + 16 * e.members.len());
+    put_u64(&mut p, e.members.len() as u64);
+    for m in &e.members {
+        put_f64(&mut p, m.val_gmean);
+        put_u64(&mut p, m.step as u64);
+    }
+    put_section(out, SEC_ENSEMBLE, &p);
+    for m in &e.members {
+        write_svm(out, &m.model);
+    }
+}
+
 /// Encode `artifact` as a v2 binary model file.
 pub fn write_artifact(artifact: &ModelArtifact) -> Vec<u8> {
     let mut out = Vec::new();
@@ -218,12 +237,14 @@ pub fn write_artifact(artifact: &ModelArtifact) -> Vec<u8> {
         ModelArtifact::Svm(_) => 1u32,
         ModelArtifact::Mlsvm(_) => 2,
         ModelArtifact::Multiclass(_) => 3,
+        ModelArtifact::Ensemble(_) => 4,
     };
     put_u32(&mut out, kind);
     match artifact {
         ModelArtifact::Svm(m) => write_svm(&mut out, m),
         ModelArtifact::Mlsvm(m) => write_mlsvm(&mut out, m),
         ModelArtifact::Multiclass(mc) => write_multiclass(&mut out, mc),
+        ModelArtifact::Ensemble(e) => write_ensemble(&mut out, e),
     }
     out
 }
@@ -502,6 +523,36 @@ fn read_multiclass(rd: &mut Rd) -> Result<MulticlassModel> {
     Ok(MulticlassModel { jobs })
 }
 
+fn read_ensemble(rd: &mut Rd) -> Result<EnsembleModel> {
+    let mut r = rd.section(SEC_ENSEMBLE, "ensemble roster")?;
+    let n = r.count("ensemble member count")?;
+    if n == 0 {
+        return Err(Error::Serve("ensemble artifact has no members".into()));
+    }
+    let mut roster = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let val_gmean = r.f64("member gmean")?;
+        let step = r.count("member step")?;
+        roster.push((val_gmean, step));
+    }
+    let mut members = Vec::with_capacity(roster.len());
+    for (val_gmean, step) in roster {
+        let model = read_svm(rd)?;
+        members.push(EnsembleMember {
+            model,
+            val_gmean,
+            step,
+        });
+    }
+    let dim = members[0].model.sv.cols();
+    if members.iter().any(|m| m.model.sv.cols() != dim) {
+        return Err(Error::Serve(
+            "ensemble artifact mixes feature dimensionalities".into(),
+        ));
+    }
+    Ok(EnsembleModel { members })
+}
+
 /// Decode a v2 binary model file. Corruption and truncation come back as
 /// [`Error::Serve`]; unknown versions are rejected with a message naming
 /// both versions.
@@ -521,6 +572,7 @@ pub fn read_artifact(bytes: &[u8]) -> Result<ModelArtifact> {
         1 => read_svm(&mut rd).map(ModelArtifact::Svm),
         2 => read_mlsvm(&mut rd).map(ModelArtifact::Mlsvm),
         3 => read_multiclass(&mut rd).map(ModelArtifact::Multiclass),
+        4 => read_ensemble(&mut rd).map(ModelArtifact::Ensemble),
         other => Err(Error::Serve(format!("unknown model kind code {other}"))),
     }
 }
@@ -661,6 +713,56 @@ mod tests {
         assert_eq!(back.jobs[2].sizes, (1, 2));
         let x = vec![0.1f32, 0.2];
         assert_eq!(mc.predict(&x), back.predict(&x));
+    }
+
+    #[test]
+    fn ensemble_round_trips_bit_exactly() {
+        let mut second = tricky_svm();
+        second.rho = -second.rho;
+        second.sv_coef[0] = f64::MIN_POSITIVE;
+        let e = EnsembleModel {
+            members: vec![
+                EnsembleMember {
+                    model: tricky_svm(),
+                    val_gmean: 0.937,
+                    step: 2,
+                },
+                EnsembleMember {
+                    model: second,
+                    val_gmean: 0.911,
+                    step: 0,
+                },
+            ],
+        };
+        let bytes = write_artifact(&ModelArtifact::Ensemble(e.clone()));
+        assert!(is_binary(&bytes));
+        let ModelArtifact::Ensemble(back) = read_artifact(&bytes).unwrap() else {
+            panic!("kind must round-trip");
+        };
+        assert_eq!(back.n_members(), 2);
+        for (a, b) in e.members.iter().zip(&back.members) {
+            assert_eq!(a.val_gmean.to_bits(), b.val_gmean.to_bits());
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.model.rho.to_bits(), b.model.rho.to_bits());
+            for (x, y) in a.model.sv_coef.iter().zip(&b.model.sv_coef) {
+                assert_eq!(x.to_bits(), y.to_bits(), "f64 bits must survive");
+            }
+            for (x, y) in a.model.sv.as_slice().iter().zip(b.model.sv.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "f32 bits must survive");
+            }
+        }
+        // A second encode of the decoded artifact is byte-identical.
+        assert_eq!(bytes, write_artifact(&ModelArtifact::Ensemble(back.clone())));
+        let x = vec![0.3f32, -1.25];
+        assert_eq!(e.decision(&x), back.decision(&x));
+        assert_eq!(e.predict_label(&x), back.predict_label(&x));
+    }
+
+    #[test]
+    fn empty_ensemble_is_rejected_on_read() {
+        let bytes = write_artifact(&ModelArtifact::Ensemble(EnsembleModel::default()));
+        let err = read_artifact(&bytes).unwrap_err();
+        assert!(matches!(err, Error::Serve(_)), "{err}");
     }
 
     #[test]

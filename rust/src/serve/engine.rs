@@ -31,6 +31,7 @@ use crate::coordinator::jobs::MulticlassModel;
 use crate::data::matrix::{dot, Matrix};
 use crate::data::simd;
 use crate::error::{Error, Result};
+use crate::mlsvm::ensemble;
 use crate::runtime::{PjrtDecision, Runtime};
 use crate::serve::faults::FaultPlan;
 use crate::serve::registry::ModelArtifact;
@@ -631,6 +632,10 @@ enum ScorerKind {
     Binary(BinaryScorer),
     /// (class id, scorer) per class that has a trained model.
     Multi(Vec<(u8, BinaryScorer)>),
+    /// One scorer per voting member of a best-levels ensemble, in roster
+    /// order. Decisions combine via [`ensemble::vote`], so the served
+    /// answer is bit-identical to `EnsembleModel::predict_label`.
+    Voting(Vec<BinaryScorer>),
 }
 
 /// Device-side scorer state: the PJRT runtime plus the compiled decision
@@ -707,6 +712,17 @@ impl ArtifactScorer {
                 }
                 ScorerKind::Multi(scorers)
             }
+            ModelArtifact::Ensemble(e) => {
+                if e.members.is_empty() {
+                    return Err(Error::Serve("ensemble artifact has no members".into()));
+                }
+                ScorerKind::Voting(
+                    e.members
+                        .iter()
+                        .map(|m| BinaryScorer::with_mode(m.model.clone(), mode))
+                        .collect(),
+                )
+            }
         };
         let dim = match &kind {
             ScorerKind::Binary(b) => b.dim(),
@@ -715,6 +731,15 @@ impl ArtifactScorer {
                 if list.iter().any(|(_, s)| s.dim() != d) {
                     return Err(Error::Serve(
                         "multiclass artifact mixes feature dimensionalities".into(),
+                    ));
+                }
+                d
+            }
+            ScorerKind::Voting(list) => {
+                let d = list[0].dim();
+                if list.iter().any(|s| s.dim() != d) {
+                    return Err(Error::Serve(
+                        "ensemble artifact mixes feature dimensionalities".into(),
                     ));
                 }
                 d
@@ -739,11 +764,12 @@ impl ArtifactScorer {
         self.dim
     }
 
-    /// "binary" or "multiclass".
+    /// "binary", "multiclass" or "ensemble".
     pub fn kind_name(&self) -> &'static str {
         match self.kind {
             ScorerKind::Binary(_) => "binary",
             ScorerKind::Multi(_) => "multiclass",
+            ScorerKind::Voting(_) => "ensemble",
         }
     }
 
@@ -758,6 +784,7 @@ impl ArtifactScorer {
         match &self.kind {
             ScorerKind::Binary(b) => sv_bytes(b),
             ScorerKind::Multi(list) => list.iter().map(|(_, s)| sv_bytes(s)).sum(),
+            ScorerKind::Voting(list) => list.iter().map(sv_bytes).sum(),
         }
     }
 
@@ -766,6 +793,7 @@ impl ArtifactScorer {
         match &self.kind {
             ScorerKind::Binary(b) => b.mode(),
             ScorerKind::Multi(list) => list[0].1.mode(),
+            ScorerKind::Voting(list) => list[0].mode(),
         }
     }
 
@@ -780,6 +808,7 @@ impl ArtifactScorer {
         match &self.kind {
             ScorerKind::Binary(b) => b.layout_build_ms(),
             ScorerKind::Multi(list) => list.iter().map(|(_, s)| s.layout_build_ms()).sum(),
+            ScorerKind::Voting(list) => list.iter().map(|s| s.layout_build_ms()).sum(),
         }
     }
 
@@ -801,6 +830,11 @@ impl ArtifactScorer {
                 let scores: Vec<(u8, f64)> =
                     list.iter().map(|(c, s)| (*c, s.decide(x))).collect();
                 multiclass_decision(scores)
+            }
+            ScorerKind::Voting(list) => {
+                let vals: Vec<f64> = list.iter().map(|s| s.decide(x)).collect();
+                let (value, label) = ensemble::vote(&vals);
+                Decision::Binary { value, label }
             }
         }
     }
@@ -834,6 +868,25 @@ impl ArtifactScorer {
                         let scores: Vec<(u8, f64)> =
                             per_class.iter().map(|(c, v)| (*c, v[q])).collect();
                         multiclass_decision(scores)
+                    })
+                    .collect()
+            }
+            ScorerKind::Voting(list) => {
+                let n = xs.rows();
+                let mut per_member: Vec<Vec<f64>> = Vec::with_capacity(list.len());
+                for s in list {
+                    let mut vals = vec![0.0f64; n];
+                    s.decide_many(xs, &mut vals);
+                    per_member.push(vals);
+                }
+                let mut row = vec![0.0f64; list.len()];
+                (0..n)
+                    .map(|q| {
+                        for (j, vals) in per_member.iter().enumerate() {
+                            row[j] = vals[q];
+                        }
+                        let (value, label) = ensemble::vote(&row);
+                        Decision::Binary { value, label }
                     })
                     .collect()
             }

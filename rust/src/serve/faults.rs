@@ -57,6 +57,8 @@ pub struct FaultCounters {
     pub canary_panics: u64,
     /// Retrain checkpoint writes torn mid-file.
     pub checkpoint_tears: u64,
+    /// Adaptive per-level evaluations forced to report gmean 0.
+    pub adapt_bad_levels: u64,
 }
 
 impl FaultCounters {
@@ -69,20 +71,23 @@ impl FaultCounters {
             + self.canary_disagreements
             + self.canary_panics
             + self.checkpoint_tears
+            + self.adapt_bad_levels
     }
 
     /// Render as a JSON object (hand-rolled; the crate has no serde).
     pub fn to_json(&self) -> String {
         format!(
             "{{\"panics\":{},\"load_errors\":{},\"load_truncations\":{},\"stalls\":{},\
-             \"canary_disagreements\":{},\"canary_panics\":{},\"checkpoint_tears\":{}}}",
+             \"canary_disagreements\":{},\"canary_panics\":{},\"checkpoint_tears\":{},\
+             \"adapt_bad_levels\":{}}}",
             self.panics,
             self.load_errors,
             self.load_truncations,
             self.stalls,
             self.canary_disagreements,
             self.canary_panics,
-            self.checkpoint_tears
+            self.checkpoint_tears,
+            self.adapt_bad_levels
         )
     }
 }
@@ -133,6 +138,7 @@ pub struct FaultPlan {
     canary_disagree: Trigger,
     canary_panic: Trigger,
     checkpoint_torn: Trigger,
+    adapt_bad: Trigger,
 }
 
 impl FaultPlan {
@@ -178,6 +184,14 @@ impl FaultPlan {
     /// file before the rename), once.
     pub fn tear_checkpoint(&self, nth: u64) {
         self.checkpoint_torn.arm(nth, 1);
+    }
+
+    /// Arm: degrade the `nth` adaptive per-level validation evaluation
+    /// (the trainer reports gmean 0 for it, forcing the bad-level
+    /// recovery path), once. Ordinals count every adaptive evaluation,
+    /// starting with the coarsest solve.
+    pub fn bad_adapt_level(&self, nth: u64) {
+        self.adapt_bad.arm(nth, 1);
     }
 
     /// Hook: a worker is about to score a batch. True = panic now (the
@@ -228,6 +242,12 @@ impl FaultPlan {
         self.checkpoint_torn.hit()
     }
 
+    /// Hook: the adaptive controller is about to record a per-level
+    /// validation gmean. True = report 0 instead (an injected bad level).
+    pub fn adapt_eval(&self) -> bool {
+        self.adapt_bad.hit()
+    }
+
     /// True when any trigger is armed (used to hide the plan from
     /// observability output in normal runs).
     pub fn armed(&self) -> bool {
@@ -239,6 +259,7 @@ impl FaultPlan {
             &self.canary_disagree,
             &self.canary_panic,
             &self.checkpoint_torn,
+            &self.adapt_bad,
         ]
         .iter()
         .any(|t| t.first.load(Ordering::SeqCst) != 0)
@@ -254,6 +275,7 @@ impl FaultPlan {
             canary_disagreements: self.canary_disagree.fired(),
             canary_panics: self.canary_panic.fired(),
             checkpoint_tears: self.checkpoint_torn.fired(),
+            adapt_bad_levels: self.adapt_bad.fired(),
         }
     }
 
@@ -266,7 +288,8 @@ impl FaultPlan {
     /// * `canary-disagree=N` or `canary-disagree=NxK` — flip canary
     ///   comparisons N..N+K;
     /// * `canary-panic=N` — panic the Nth canary scoring;
-    /// * `checkpoint-torn=N` — tear the Nth checkpoint write.
+    /// * `checkpoint-torn=N` — tear the Nth checkpoint write;
+    /// * `adapt-bad=N` — degrade the Nth adaptive level evaluation.
     pub fn parse(spec: &str) -> Result<Arc<FaultPlan>> {
         let plan = FaultPlan::default();
         for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
@@ -299,6 +322,7 @@ impl FaultPlan {
                 }
                 "canary-panic" => plan.panic_canary(parse_nth(val).ok_or_else(|| bad("N"))?),
                 "checkpoint-torn" => plan.tear_checkpoint(parse_nth(val).ok_or_else(|| bad("N"))?),
+                "adapt-bad" => plan.bad_adapt_level(parse_nth(val).ok_or_else(|| bad("N"))?),
                 "stall-conn" => {
                     let (n, ms) = val.split_once(':').ok_or_else(|| bad("N:MS"))?;
                     plan.stall_conn(
@@ -393,7 +417,7 @@ mod tests {
 
     #[test]
     fn lifecycle_triggers_fire_on_exact_ordinals() {
-        let p = FaultPlan::parse("canary-disagree=2x2,canary-panic=1,checkpoint-torn=3")
+        let p = FaultPlan::parse("canary-disagree=2x2,canary-panic=1,checkpoint-torn=3,adapt-bad=2")
             .expect("parse");
         assert!(p.armed());
         let flips: Vec<bool> = (0..5).map(|_| p.canary_compare()).collect();
@@ -402,12 +426,15 @@ mod tests {
         assert!(!p.canary_score());
         let tears: Vec<bool> = (0..4).map(|_| p.checkpoint_write()).collect();
         assert_eq!(tears, vec![false, false, true, false]);
+        let bad: Vec<bool> = (0..3).map(|_| p.adapt_eval()).collect();
+        assert_eq!(bad, vec![false, true, false]);
         let c = p.injected();
         assert_eq!(
             (c.canary_disagreements, c.canary_panics, c.checkpoint_tears),
             (2, 1, 1)
         );
-        assert_eq!(c.total(), 4);
+        assert_eq!(c.adapt_bad_levels, 1);
+        assert_eq!(c.total(), 5);
         assert!(
             c.to_json().contains("\"canary_panics\":1"),
             "{}",
@@ -422,6 +449,7 @@ mod tests {
             assert!(!p.canary_compare());
             assert!(!p.canary_score());
             assert!(!p.checkpoint_write());
+            assert!(!p.adapt_eval());
         }
         assert_eq!(p.injected().total(), 0);
     }

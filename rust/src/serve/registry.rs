@@ -10,7 +10,9 @@
 //! * a full [`MlsvmModel`] — finest model + final [`SvmParams`] + the
 //!   per-level metadata (`kind = mlsvm`),
 //! * a one-vs-rest [`MulticlassModel`] with per-class sections, including
-//!   failed class jobs (`kind = multiclass`).
+//!   failed class jobs (`kind = multiclass`),
+//! * a best-levels voting [`EnsembleModel`] from adaptive refinement
+//!   (`kind = ensemble`, v2 binary only).
 //!
 //! Three on-disk formats coexist:
 //!
@@ -45,6 +47,7 @@
 
 use crate::coordinator::jobs::{ClassJob, MulticlassModel};
 use crate::error::{Error, Result};
+use crate::mlsvm::ensemble::EnsembleModel;
 use crate::mlsvm::trainer::{LevelStat, MlsvmModel};
 use crate::serve::binary;
 use crate::serve::faults::{FaultPlan, LoadFault};
@@ -117,6 +120,8 @@ pub enum ModelArtifact {
     Mlsvm(MlsvmModel),
     /// A one-vs-rest ensemble.
     Multiclass(MulticlassModel),
+    /// A best-levels voting ensemble from adaptive refinement.
+    Ensemble(EnsembleModel),
 }
 
 impl ModelArtifact {
@@ -126,6 +131,7 @@ impl ModelArtifact {
             ModelArtifact::Svm(_) => "svm",
             ModelArtifact::Mlsvm(_) => "mlsvm",
             ModelArtifact::Multiclass(_) => "multiclass",
+            ModelArtifact::Ensemble(_) => "ensemble",
         }
     }
 
@@ -145,6 +151,11 @@ impl ModelArtifact {
                 let ok = mc.jobs.iter().filter(|j| j.model.is_some()).count();
                 format!("multiclass: {}/{} trained class models", ok, mc.jobs.len())
             }
+            ModelArtifact::Ensemble(e) => format!(
+                "ensemble: {} voting members, dim {}",
+                e.n_members(),
+                e.dim()
+            ),
         }
     }
 }
@@ -290,6 +301,11 @@ pub fn save_artifact_v1(path: impl AsRef<Path>, artifact: &ModelArtifact) -> Res
             ModelArtifact::Svm(m) => m.write_text(w)?,
             ModelArtifact::Mlsvm(m) => write_mlsvm_body(w, m)?,
             ModelArtifact::Multiclass(mc) => write_multiclass_body(w, mc)?,
+            ModelArtifact::Ensemble(_) => {
+                return Err(Error::Serve(
+                    "ensemble artifacts have no v1 text format; use save_artifact".into(),
+                ))
+            }
         }
         Ok(())
     })

@@ -44,6 +44,7 @@ use mlsvm::data::synth::two_gaussians;
 use mlsvm::error::Error;
 use mlsvm::mlsvm::params::MlsvmParams;
 use mlsvm::mlsvm::trainer::MlsvmTrainer;
+use mlsvm::mlsvm::{EnsembleMember, EnsembleModel};
 use mlsvm::modelsel::search::UdSearchConfig;
 use mlsvm::serve::{
     http_pipeline_on, http_request, http_request_with_auth, load_artifact, save_artifact,
@@ -2478,4 +2479,91 @@ fn conformance_router_multiplexes_pipelined_same_model_bursts() {
     };
     assert!(field("mux_batches") >= 1, "no multiplexed batch recorded: {stats}");
     assert!(field("mux_requests") >= 2, "mux depth never exceeded one: {stats}");
+}
+
+// ---- Ensemble artifact suite ----------------------------------------
+//
+// The adaptive trainer publishes its top-k per-level models as a voting
+// ensemble (kind 4 in the v2 binary codec). These tests pin the artifact
+// through the registry byte-for-byte and through the HTTP engine with
+// majority-vote parity against the in-process model.
+
+/// Three RBF members over the same two-gaussian data, with distinct
+/// gammas so their decision boundaries (and votes) genuinely differ.
+fn ensemble_fixture(seed: u64) -> (EnsembleModel, mlsvm::data::dataset::Dataset) {
+    let mut rng = Pcg64::seed_from(seed);
+    let ds = two_gaussians(150, 100, 6, 3.0, &mut rng);
+    let mut members = Vec::new();
+    for (i, gamma) in [0.05, 0.15, 0.6].into_iter().enumerate() {
+        let p = SvmParams {
+            kernel: KernelKind::Rbf { gamma },
+            ..Default::default()
+        };
+        let m = train(&ds.points, &ds.labels, &p).unwrap();
+        members.push(EnsembleMember {
+            model: m,
+            val_gmean: 0.9 - 0.1 * i as f64,
+            step: i,
+        });
+    }
+    (EnsembleModel { members }, ds)
+}
+
+#[test]
+fn ensemble_artifact_round_trips_bit_exactly_through_registry() {
+    let (ens, ds) = ensemble_fixture(61);
+    let dir = tmp_dir("ensemble_bits");
+    let reg = Registry::open(&dir).unwrap();
+    let artifact = ModelArtifact::Ensemble(ens.clone());
+    assert!(artifact.describe().contains("ensemble"), "{}", artifact.describe());
+    reg.save("ens", &artifact).unwrap();
+    let back = reg.load("ens").unwrap();
+    assert_eq!(
+        mlsvm::serve::binary::write_artifact(&artifact),
+        mlsvm::serve::binary::write_artifact(&back),
+        "ensemble must round-trip bit-exactly"
+    );
+    let ModelArtifact::Ensemble(back) = back else {
+        panic!("kind must round-trip");
+    };
+    assert_eq!(back.n_members(), ens.n_members());
+    for i in 0..ds.len() {
+        assert_eq!(
+            back.predict_label(ds.points.row(i)),
+            ens.predict_label(ds.points.row(i)),
+            "row {i}"
+        );
+    }
+}
+
+#[test]
+fn ensemble_serves_majority_votes_over_http() {
+    let (ens, ds) = ensemble_fixture(62);
+    let dir = tmp_dir("ensemble_http");
+    let reg = Registry::open(&dir).unwrap();
+    reg.save("vote", &ModelArtifact::Ensemble(ens.clone())).unwrap();
+    let manager = EngineManager::open(
+        Registry::open(&dir).unwrap(),
+        EngineConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            queue_cap: 128,
+        },
+    );
+    let state = Arc::new(ServeState::new(manager, "vote"));
+    let server = Server::start("127.0.0.1:0", Arc::clone(&state)).unwrap();
+    let addr = server.addr();
+    // f32 Display round-trips exactly, so the served label must equal
+    // the in-process majority vote on every probe.
+    for i in (0..ds.len()).step_by(23) {
+        let body: Vec<String> = ds.points.row(i).iter().map(|v| v.to_string()).collect();
+        let (code, resp) = http_request(&addr, "POST", "/predict", &body.join(",")).unwrap();
+        assert_eq!(code, 200, "{resp}");
+        let want = ens.predict_label(ds.points.row(i));
+        assert!(resp.contains(&format!("\"label\":{want}")), "row {i}: {resp}");
+    }
+    let me = state.manager.engine("vote").unwrap();
+    assert!(me.describe().contains("ensemble"), "{}", me.describe());
+    assert!(me.stats().completed > 0);
 }
